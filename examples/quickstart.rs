@@ -1,0 +1,50 @@
+//! Quickstart: load the artifact store, start the engine, sample with the
+//! BNS-routed solver, and compare against baselines + ground truth.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+use bns_serve::util::stats::batch_psnr;
+
+fn main() -> anyhow::Result<()> {
+    let dir = bns_serve::default_artifacts_dir();
+    let store = Arc::new(ArtifactStore::load(&dir)?);
+    let rt = Arc::new(Runtime::cpu()?);
+    println!("platform: {}", rt.platform());
+    println!("models:   {:?}", store.models.keys().collect::<Vec<_>>());
+
+    let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+
+    // 8 samples of the class-conditional image model, classes 0..7.
+    let model = "img_fm_ot";
+    let labels: Vec<i32> = (0..8).collect();
+    let seed = 7;
+
+    // Ground truth (adaptive RK45, the paper's reference sampler)
+    let gt = engine.sample_blocking(model, labels.clone(), 0.0, SolverSpec::GroundTruth, seed)?;
+    println!("\nGT via {}: NFE = {}", gt.solver_used, gt.nfe);
+
+    // BNS at NFE 8 (auto-routing picks the distilled artifact)
+    for (label, spec) in [
+        ("auto (BNS)", SolverSpec::Auto { nfe: 8 }),
+        ("midpoint", SolverSpec::Baseline { name: "midpoint".into(), nfe: 8 }),
+        ("euler", SolverSpec::Baseline { name: "euler".into(), nfe: 8 }),
+    ] {
+        let out = engine.sample_blocking(model, labels.clone(), 0.0, spec, seed)?;
+        println!(
+            "{:<12} nfe={:<3} psnr={:>6.2} dB  (solver: {}, exec {} us)",
+            label,
+            out.nfe,
+            batch_psnr(&out.samples, &gt.samples, out.dim),
+            out.solver_used,
+            out.exec_us,
+        );
+    }
+
+    println!("\nmetrics: {}", engine.metrics.snapshot_json().to_string());
+    engine.shutdown();
+    Ok(())
+}

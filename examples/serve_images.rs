@@ -1,0 +1,127 @@
+//! End-to-end serving driver (the E2E validation run of EXPERIMENTS.md):
+//! starts the engine *and* the TCP front-end, drives a mixed workload of
+//! concurrent clients over the real socket protocol, verifies sample
+//! fidelity against ground truth, and reports latency/throughput.
+//!
+//!     cargo run --release --example serve_images
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Instant;
+
+use bns_serve::coordinator::{server, Engine, EngineConfig};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::{batch_psnr, Summary};
+
+const ADDR: &str = "127.0.0.1:17878";
+const CLIENTS: usize = 6;
+const REQS_PER_CLIENT: usize = 8;
+
+fn rpc(stream: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &Json) -> anyhow::Result<Json> {
+    stream.write_all(req.to_string().as_bytes())?;
+    stream.write_all(b"\n")?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = bns_serve::default_artifacts_dir();
+    let store = Arc::new(ArtifactStore::load(&dir)?);
+    let rt = Arc::new(Runtime::cpu()?);
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+
+    // server in a background thread
+    {
+        let engine = engine.clone();
+        let store = store.clone();
+        std::thread::spawn(move || {
+            let _ = server::serve(ADDR, engine, store);
+        });
+    }
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    // one reference client computes GT once for fidelity checking
+    let mut s = TcpStream::connect(ADDR)?;
+    let mut r = BufReader::new(s.try_clone()?);
+    let gt = rpc(&mut s, &mut r, &Json::obj(vec![
+        ("op", Json::Str("sample".into())),
+        ("model", Json::Str("img_fm_ot".into())),
+        ("labels", Json::Arr((0..4).map(|i| Json::Num(i as f64)).collect())),
+        ("solver", Json::Str("gt".into())),
+        ("seed", Json::Num(11.0)),
+    ]))?;
+    anyhow::ensure!(gt.get("ok").as_bool() == Some(true), "GT failed: {}", gt.to_string());
+    let gt_samples = gt.get("samples").as_f32_vec().unwrap();
+    let dim = gt.get("dim").as_usize().unwrap();
+    println!("GT over TCP: nfe={}", gt.get("nfe").as_f64().unwrap());
+
+    // fidelity check: BNS nfe=8 over the wire, same seed
+    let bns = rpc(&mut s, &mut r, &Json::obj(vec![
+        ("op", Json::Str("sample".into())),
+        ("model", Json::Str("img_fm_ot".into())),
+        ("labels", Json::Arr((0..4).map(|i| Json::Num(i as f64)).collect())),
+        ("solver", Json::Str("auto".into())),
+        ("nfe", Json::Num(8.0)),
+        ("seed", Json::Num(11.0)),
+    ]))?;
+    let bns_samples = bns.get("samples").as_f32_vec().unwrap();
+    println!(
+        "BNS over TCP: solver={} psnr={:.2} dB",
+        bns.get("solver_used").as_str().unwrap_or("?"),
+        batch_psnr(&bns_samples, &gt_samples, dim)
+    );
+
+    // concurrent mixed workload
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        handles.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut s = TcpStream::connect(ADDR)?;
+            let mut r = BufReader::new(s.try_clone()?);
+            let mut lat = Vec::new();
+            for i in 0..REQS_PER_CLIENT {
+                let nfe = [8.0, 12.0, 16.0][(c + i) % 3];
+                let t = Instant::now();
+                let resp = rpc(&mut s, &mut r, &Json::obj(vec![
+                    ("op", Json::Str("sample".into())),
+                    ("model", Json::Str("img_fm_ot".into())),
+                    (
+                        "labels",
+                        Json::Arr((0..4).map(|k| Json::Num(((c + k + i) % 10) as f64)).collect()),
+                    ),
+                    ("solver", Json::Str("auto".into())),
+                    ("nfe", Json::Num(nfe)),
+                    ("seed", Json::Num((c * 100 + i) as f64)),
+                ]))?;
+                anyhow::ensure!(resp.get("ok").as_bool() == Some(true), "req failed");
+                lat.push(t.elapsed().as_secs_f64() * 1000.0);
+            }
+            Ok(lat)
+        }));
+    }
+    let mut lat = Summary::new();
+    let mut all = Vec::new();
+    for h in handles {
+        for v in h.join().unwrap()? {
+            lat.add(v);
+            all.push(v);
+        }
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let wall = t0.elapsed().as_secs_f64();
+    let total = (CLIENTS * REQS_PER_CLIENT) as f64;
+    println!("\n=== E2E serving run ===");
+    println!("requests: {total:.0} over {wall:.2}s -> {:.1} req/s ({:.1} samples/s)", total / wall, total * 4.0 / wall);
+    println!(
+        "client-observed latency: mean {:.1} ms, p50 {:.1} ms, p95 {:.1} ms, max {:.1} ms",
+        lat.mean,
+        all[all.len() / 2],
+        all[(all.len() as f64 * 0.95) as usize],
+        lat.max
+    );
+    println!("server metrics: {}", engine.metrics.snapshot_json().to_string());
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! Solver zoo (qualitative Figs. 1/5/7-10 analogue): run the SAME noise
+//! through every solver family and dump per-solver 8x8 RGB sample grids
+//! as PPM images plus a PSNR table, so the fidelity difference is
+//! visible, not just numeric.
+//!
+//!     cargo run --release --example solver_zoo
+//! writes results/zoo_<solver>.ppm
+
+use bns_serve::bench_util::{Bench, Table};
+use bns_serve::coordinator::router::distilled;
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::stats::batch_psnr;
+
+const MODEL: &str = "img_fm_ot";
+const N: usize = 10; // one sample per class
+const NFE: usize = 8;
+
+/// Write a horizontal strip of n 8x8 RGB images (values in [-1, 1]).
+fn write_ppm(path: &str, rows: &[f32], n: usize) -> anyhow::Result<()> {
+    let (side, ch) = (8usize, 3usize);
+    let scale = 4usize; // upscale for visibility
+    let (w, h) = (n * side * scale + (n - 1) * 2, side * scale);
+    let mut img = vec![0u8; w * h * 3];
+    for i in 0..n {
+        let sample = &rows[i * side * side * ch..(i + 1) * side * side * ch];
+        for y in 0..side * scale {
+            for x in 0..side * scale {
+                let (sy, sx) = (y / scale, x / scale);
+                let px = i * (side * scale + 2) + x;
+                if px >= w {
+                    continue;
+                }
+                for c in 0..3 {
+                    let v = sample[(sy * side + sx) * ch + c];
+                    let b = (((v + 1.0) * 0.5).clamp(0.0, 1.0) * 255.0) as u8;
+                    img[(y * w + px) * 3 + c] = b;
+                }
+            }
+        }
+    }
+    let mut out = format!("P6\n{w} {h}\n255\n").into_bytes();
+    out.extend_from_slice(&img);
+    std::fs::create_dir_all("results")?;
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let info = b.store.model(MODEL)?.clone();
+    let mut rng = bns_serve::util::rng::Pcg32::seeded(4242);
+    let x0 = rng.normal_vec(N * info.dim);
+    let labels: Vec<i32> = (0..N as i32).collect();
+    let field = b.field(&info, labels.clone(), 0.0)?;
+
+    let (gt, gt_nfe) = b.ground_truth(&field, &x0)?;
+    write_ppm("results/zoo_gt_rk45.ppm", &gt, N)?;
+    println!("GT (rk45, NFE={gt_nfe}) -> results/zoo_gt_rk45.ppm");
+
+    let mut zoo: Vec<(String, Box<dyn Solver>)> = vec![
+        ("bns".into(), Box::new(distilled(&b.store, MODEL, 0.0, "bns", NFE)?)),
+        ("midpoint".into(), baseline("midpoint", NFE, info.scheduler)?),
+        ("euler".into(), baseline("euler", NFE, info.scheduler)?),
+        ("dpmpp2m".into(), baseline("dpmpp2m", NFE, info.scheduler)?),
+        ("ab2".into(), baseline("ab2", NFE, info.scheduler)?),
+        ("rk4".into(), baseline("rk4", NFE, info.scheduler)?),
+        ("heun".into(), baseline("heun", NFE, info.scheduler)?),
+    ];
+    if let Ok(bst) = distilled(&b.store, MODEL, 0.0, "bst", NFE) {
+        zoo.insert(1, ("bst".into(), Box::new(bst)));
+    }
+
+    let mut table = Table::new(&["solver", "NFE", "PSNR(dB)", "image"]);
+    for (name, solver) in &zoo {
+        let out = solver.sample(&field, &x0)?;
+        let path = format!("results/zoo_{name}.ppm");
+        write_ppm(&path, &out, N)?;
+        table.row(vec![
+            name.clone(),
+            NFE.to_string(),
+            format!("{:.2}", batch_psnr(&out, &gt, info.dim)),
+            path,
+        ]);
+    }
+    println!("\n=== same noise, NFE = {NFE}, vs GT ===");
+    table.print();
+    Ok(())
+}

@@ -1,0 +1,74 @@
+"""AOT lowering: jax model -> HLO *text* artifacts for the rust runtime.
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the crate's xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each model is lowered once per batch bucket with the signature
+
+    (x [B, D] f32, t [] f32, w [] f32, labels [B] i32) -> (u_w [B, D] f32,)
+
+where u_w is the CFG-composed velocity field (model.guided_velocity);
+w = 0 recovers conditional-unguided sampling. The L1 Pallas kernels are
+lowered *into* the same HLO (interpret=True), so the rust hot path runs
+the exact kernel code validated against ref.py.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH_BUCKETS = (1, 8, 64)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is load-bearing: the default printer
+    # elides big literals as `constant({...})`, which silently corrupts
+    # the baked-in model weights on the rust side.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(cfg: model.ModelConfig, params: dict, batch: int, *, use_pallas=True) -> str:
+    """Lower the guided velocity field at a fixed batch size to HLO text.
+
+    Weights are baked in as constants (closure capture), so the artifact
+    is self-contained: the rust side feeds only (x, t, w, labels).
+    """
+
+    def fn(x, t, w, labels):
+        return (model.guided_velocity(cfg, params, x, t, labels, w, use_pallas=use_pallas),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((batch, cfg.data_dim), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+    )
+    return to_hlo_text(lowered)
+
+
+def export_model(cfg, params, out_dir, *, buckets=BATCH_BUCKETS, use_pallas=True, log=print):
+    """Write one HLO artifact per batch bucket; returns manifest entries."""
+    entries = []
+    for b in buckets:
+        path = f"models/{cfg.name}_b{b}.hlo.txt"
+        full = os.path.join(out_dir, path)
+        os.makedirs(os.path.dirname(full), exist_ok=True)
+        if not os.path.exists(full):
+            text = lower_model(cfg, params, b, use_pallas=use_pallas)
+            with open(full, "w") as f:
+                f.write(text)
+            log(f"  [aot] {path} ({len(text)/1e6:.1f} MB)")
+        entries.append({"batch": b, "path": path})
+    return entries

@@ -1,0 +1,466 @@
+"""BNS optimization (Section 3.2, Algorithm 2) and the BST ablation.
+
+Pipeline (all build-time):
+
+  1. `make_pairs`    — sample x0 ~ p0, integrate eq. 1 with adaptive RK45
+                       to get GT pairs (x0, x(1))  [520 train / 1024 val,
+                       as in App. D.1].
+  2. `train_bns`     — parameterize theta = [T_n, (a_i, b_i)] (eq. 12),
+                       minimize the PSNR loss (eq. 13) with Adam,
+                       optionally over a sigma0-preconditioned field
+                       (eq. 14); report best-validation iterate.
+  3. `train_bst`     — the Scale-Time ablation (Fig. 11): same optimizer,
+                       same loss, but theta restricted to per-node
+                       (t, ṫ, s, ṡ) driving an Euler step on the
+                       ST-transformed field (eq. 7) — the BST family of
+                       Shaul et al. 2023.
+  4. `fold_transform`— export: any solver trained on a transformed field
+                       is folded back to plain NS coefficients over the
+                       *original* field via the eq. 48-51 expansion +
+                       Prop 3.1 reduction, so the rust engine only ever
+                       needs the NS update rule.
+
+PSNR convention used everywhere (python + rust): data lives in [-1, 1],
+PSNR = 10 log10(4 / mse) with mse averaged per-sample over dimensions.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ns, ode, schedulers
+from .train_model import adam_init, adam_update, clip_global_norm
+
+PEAK_SQ = 4.0  # (max - min)^2 for data in [-1, 1]
+
+
+def _sanitize_grads(grads):
+    """High-CFG fields can overflow single leaves of the unrolled-solver
+    gradient (w amplifies a 20-step chain); replace non-finite entries
+    before global-norm clipping so one bad minibatch doesn't poison Adam.
+    """
+    return {
+        k: jnp.nan_to_num(g, nan=0.0, posinf=1e3, neginf=-1e3) for k, g in grads.items()
+    }
+
+
+def psnr(pred, ref):
+    mse = jnp.mean((pred - ref) ** 2, axis=-1)
+    return jnp.mean(10.0 * jnp.log10(PEAK_SQ / jnp.maximum(mse, 1e-20)))
+
+
+# ---------------------------------------------------------------------------
+# GT pair generation (the paper's 520-pair training set)
+# ---------------------------------------------------------------------------
+
+
+def make_pairs(field_np, dim, n_pairs, seed, num_classes=None, sigma_src=1.0, rtol=1e-5):
+    """Generate (x0, labels, x1) with adaptive RK45 (Shampine 1986).
+
+    `field_np(t, x, labels)` is a numpy-callable guided velocity field.
+    Returns dict of arrays + the RK45 NFE (for Table 3 forwards
+    accounting).
+    """
+    rng = np.random.default_rng(seed)
+    x0 = (sigma_src * rng.standard_normal((n_pairs, dim))).astype(np.float32)
+    labels = (
+        rng.integers(0, num_classes, size=n_pairs).astype(np.int32)
+        if num_classes
+        else np.zeros(n_pairs, np.int32)
+    )
+    x1, nfe = ode.rk45(lambda t, x: field_np(t, x, labels), x0, rtol=rtol, atol=rtol)
+    return {"x0": x0, "labels": labels, "x1": x1, "gt_nfe": nfe}
+
+
+# ---------------------------------------------------------------------------
+# Preconditioning (eq. 14) and ST-transformed fields (eq. 7)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Precondition:
+    """sigma0 scheduler change: sigma̅ = sigma0 sigma, alpha̅ = alpha."""
+
+    scheduler: str
+    sigma0: float
+
+    def t_of_r(self, r):
+        """snr^{-1}(snr(r)/sigma0), in closed form where the generic
+        ratio is unstable at the data endpoint (snr(1) = inf)."""
+        r = jnp.asarray(r, jnp.float32)
+        if self.scheduler == "fm_ot":
+            return r / (r + self.sigma0 * (1.0 - r))
+        if self.scheduler == "cosine":
+            # atan2 form is exact and stable at r = 1 (tan blows up there).
+            return (2.0 / jnp.pi) * jnp.arctan2(
+                jnp.sin(0.5 * jnp.pi * r), self.sigma0 * jnp.cos(0.5 * jnp.pi * r)
+            )
+        sched = schedulers.SCHEDULERS[self.scheduler]
+        return sched.snr_inv(sched.snr(r) / self.sigma0)
+
+    def s_of_r(self, r):
+        """sigma̅_r / sigma_{t_r} (eq. 8), in endpoint-stable form."""
+        r = jnp.asarray(r, jnp.float32)
+        if self.scheduler == "fm_ot":
+            return r + self.sigma0 * (1.0 - r)
+        if self.scheduler == "cosine":
+            return jnp.hypot(
+                jnp.sin(0.5 * jnp.pi * r), self.sigma0 * jnp.cos(0.5 * jnp.pi * r)
+            )
+        # Generic: alpha̅ = alpha gives the alpha-ratio expression, which is
+        # regular wherever alpha_{t_r} is bounded away from 0; fall back to
+        # the sigma-ratio near the noise endpoint.
+        sched = schedulers.SCHEDULERS[self.scheduler]
+        t = self.t_of_r(r)
+        a_t, s_t = sched.alpha(t), sched.sigma(t)
+        return jnp.where(
+            a_t > s_t,
+            sched.alpha(r) / jnp.maximum(a_t, 1e-20),
+            self.sigma0 * sched.sigma(r) / jnp.maximum(s_t, 1e-20),
+        )
+
+    def ds_of_r(self, r):
+        return jax.grad(lambda q: jnp.sum(self.s_of_r(q)))(jnp.asarray(r, jnp.float32))
+
+    def dt_of_r(self, r):
+        return jax.grad(lambda q: jnp.sum(self.t_of_r(q)))(jnp.asarray(r, jnp.float32))
+
+    def transform(self, u):
+        """eq. 7 over the original field u(t, x) -> u̅(r, x)."""
+
+        def u_bar(r, x):
+            s, ds = self.s_of_r(r), self.ds_of_r(r)
+            t, dt = self.t_of_r(r), self.dt_of_r(r)
+            return (ds / s) * x + dt * s * u(t, x / s)
+
+        return u_bar
+
+    def node_values(self, r):
+        """(t, dt, s, ds) at the nodes r — for export folding."""
+        r = jnp.asarray(r, jnp.float32)
+        t = jax.vmap(self.t_of_r)(r)
+        dt = jax.vmap(self.dt_of_r)(r)
+        s = jax.vmap(self.s_of_r)(r)
+        ds = jax.vmap(self.ds_of_r)(r)
+        return (np.asarray(t, np.float64), np.asarray(dt, np.float64),
+                np.asarray(s, np.float64), np.asarray(ds, np.float64))
+
+
+def fold_transform(solver: ns.NSSolver, t_nodes, dt_nodes, s_nodes, ds_nodes) -> ns.NSSolver:
+    """Fold an NS solver over a transformed field back onto the original.
+
+    Implements the expansion of the Thm 3.2 proof (eqs. 48-51): with
+    x̄_j = s_j x_j and ū_j = (ṡ_j/s_j) x̄_j + ṫ_j s_j u_j, the update
+    x̄_{i+1} = a_i x̄_0 + sum_j b_ij ū_j becomes a naive (c, d) NS rule
+    over the original (x_j, u_j), which `reduce_cd_to_ab` (Prop 3.1)
+    reduces to the exported (a, b).
+
+    Node arrays are indexed by the *transformed* discretization r_0..r_n;
+    t_nodes gives the original-field times.
+    """
+    n = solver.nfe
+    c_rows, d_rows = [], []
+    for i in range(n):
+        c = np.zeros(i + 1)
+        d = np.zeros(i + 1)
+        c[0] += solver.a[i] * s_nodes[0] / s_nodes[i + 1]
+        for j in range(i + 1):
+            c[j] += solver.b[i, j] * ds_nodes[j] / s_nodes[i + 1]
+            d[j] = solver.b[i, j] * dt_nodes[j] * s_nodes[j] / s_nodes[i + 1]
+        c_rows.append(c)
+        d_rows.append(d)
+    a, b = ns.reduce_cd_to_ab(c_rows, d_rows)
+    return ns.NSSolver(np.asarray(t_nodes, np.float64), a, b)
+
+
+# ---------------------------------------------------------------------------
+# theta parameterization and differentiable Algorithm 1
+# ---------------------------------------------------------------------------
+
+
+def theta_from_solver(solver: ns.NSSolver) -> dict:
+    """Invert the parameterization so optimization starts at `solver`."""
+    dt = np.diff(solver.times)
+    assert (dt > 0).all(), "NS times must be strictly increasing"
+    n = solver.nfe
+    btri = np.zeros((n, n), np.float32)
+    btri[: n, : n] = solver.b
+    return {
+        "t_logits": jnp.asarray(np.log(dt), jnp.float32),
+        "a": jnp.asarray(solver.a, jnp.float32),
+        "b": jnp.asarray(btri, jnp.float32),
+    }
+
+
+def theta_to_coeffs(theta):
+    """(times [n+1], a [n], b [n,n] masked lower-tri) from raw theta."""
+    inc = jax.nn.softmax(theta["t_logits"])
+    times = jnp.concatenate([jnp.zeros(1), jnp.cumsum(inc)])
+    times = times / times[-1]  # exact 1.0 endpoint
+    n = theta["a"].shape[0]
+    mask = jnp.tril(jnp.ones((n, n), jnp.float32))
+    return times, theta["a"], theta["b"] * mask
+
+
+def solver_from_theta(theta) -> ns.NSSolver:
+    times, a, b = theta_to_coeffs(theta)
+    return ns.NSSolver(
+        np.asarray(times, np.float64), np.asarray(a, np.float64), np.asarray(b, np.float64)
+    )
+
+
+def sample_ns_jax(u, times, a, b, x0):
+    """Differentiable Algorithm 1 (unrolled; n is static)."""
+    n = a.shape[0]
+    x, hist = x0, []
+    for i in range(n):
+        hist.append(u(times[i], x))
+        acc = a[i] * x0
+        for j in range(i + 1):
+            acc = acc + b[i, j] * hist[j]
+        x = acc
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2: BNS training
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainResult:
+    solver: ns.NSSolver  # folded to the ORIGINAL field
+    val_psnr: float
+    init_val_psnr: float
+    iters_run: int
+    forwards: int  # model forward passes consumed (Table 3 accounting)
+    history: list  # (iter, train_loss, val_psnr)
+
+
+def train_bns(
+    field,
+    pairs_train,
+    pairs_val,
+    nfe,
+    *,
+    init="midpoint",
+    precond: Precondition | None = None,
+    iters=3000,
+    batch=40,
+    lr=1e-3,
+    seed=0,
+    val_every=100,
+    log=print,
+) -> TrainResult:
+    """Algorithm 2. `field(t, x, labels)` is the original (possibly CFG)
+    velocity field as a jax function over batched x; the per-pair labels
+    from `pairs_*` are threaded through each evaluation.
+    """
+    rng = np.random.default_rng(seed)
+
+    # --- initial solver in the (possibly transformed) r-space ----------
+    if init == "euler":
+        init_solver = ns.euler_ns(ns.uniform_times(nfe))
+    elif init == "midpoint":
+        if nfe % 2 == 0:
+            init_solver = ns.midpoint_ns(nfe)
+        else:
+            init_solver = ns.euler_ns(ns.uniform_times(nfe))
+    elif isinstance(init, ns.NSSolver):
+        init_solver = init
+    else:
+        raise ValueError(f"unknown init {init!r}")
+
+    s0_scale = float(precond.s_of_r(0.0)) if precond is not None else 1.0
+    s1_scale = float(precond.s_of_r(1.0)) if precond is not None else 1.0
+
+    def bound_field(labels):
+        u_l = lambda t, x: field(t, x, labels)
+        return precond.transform(u_l) if precond is not None else u_l
+
+    theta = theta_from_solver(init_solver)
+    opt = adam_init(theta)
+
+    def loss_fn(theta, x0, x1, labels):
+        times, a, b = theta_to_coeffs(theta)
+        xn = sample_ns_jax(bound_field(labels), times, a, b, s0_scale * x0) / s1_scale
+        mse = jnp.mean((xn - x1) ** 2, axis=-1)
+        return jnp.mean(jnp.log(jnp.maximum(mse, 1e-20)))
+
+    @jax.jit
+    def val_psnr_fn(theta, x0, x1, labels):
+        times, a, b = theta_to_coeffs(theta)
+        xn = sample_ns_jax(bound_field(labels), times, a, b, s0_scale * x0) / s1_scale
+        return psnr(xn, x1)
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+    update = jax.jit(lambda p, o, g, lr: adam_update(p, clip_global_norm(_sanitize_grads(g)), o, lr))
+
+    x0_tr = jnp.asarray(pairs_train["x0"])
+    x1_tr = jnp.asarray(pairs_train["x1"])
+    la_tr = jnp.asarray(pairs_train["labels"])
+    x0_va = jnp.asarray(pairs_val["x0"])
+    x1_va = jnp.asarray(pairs_val["x1"])
+    la_va = jnp.asarray(pairs_val["labels"])
+
+    init_val = float(val_psnr_fn(theta, x0_va, x1_va, la_va))
+    best = (init_val, jax.tree_util.tree_map(lambda x: x, theta), 0)
+    history = []
+    t_start = time.time()
+    n_train = x0_tr.shape[0]
+    lr_scale = 1.0
+    for it in range(iters):
+        idx = rng.integers(0, n_train, size=batch)
+        cur_lr = lr_scale * lr * (1.0 - 0.95 * it / iters)  # polynomial decay
+        loss, grads = loss_grad(theta, x0_tr[idx], x1_tr[idx], la_tr[idx])
+        if not np.isfinite(float(loss)):
+            # High-guidance fields occasionally blow a step up; restore the
+            # best-so-far iterate and continue cooler.
+            theta = jax.tree_util.tree_map(lambda x: x, best[1])
+            opt = adam_init(theta)
+            lr_scale *= 0.3
+            if lr_scale < 1e-3:
+                break
+            continue
+        theta, opt = update(theta, opt, grads, cur_lr)
+        if (it + 1) % val_every == 0 or it == iters - 1:
+            vp = float(val_psnr_fn(theta, x0_va, x1_va, la_va))
+            if not np.isfinite(vp):
+                continue
+            history.append((it + 1, float(loss), vp))
+            if vp > best[0]:
+                best = (vp, jax.tree_util.tree_map(lambda x: x, theta), it + 1)
+    log(
+        f"    nfe={nfe} init_psnr={init_val:.2f} best_psnr={best[0]:.2f} "
+        f"@it{best[2]} ({time.time()-t_start:.0f}s)"
+    )
+
+    solver = solver_from_theta(best[1])
+    if precond is not None:
+        solver = fold_transform(solver, *precond.node_values(solver.times))
+    # forwards: nfe evals per sample per iteration (fwd+bwd counted as in
+    # App. D.4: one forward per model evaluation with batch 1).
+    forwards = iters * batch * nfe
+    return TrainResult(solver, best[0], init_val, iters, forwards, history)
+
+
+# ---------------------------------------------------------------------------
+# BST ablation (Fig. 11): Scale-Time family under the same optimizer
+# ---------------------------------------------------------------------------
+
+
+def train_bst(
+    field,
+    pairs_train,
+    pairs_val,
+    nfe,
+    *,
+    precond: Precondition | None = None,
+    iters=3000,
+    batch=40,
+    lr=5e-4,
+    seed=0,
+    val_every=100,
+    log=print,
+) -> TrainResult:
+    """Bespoke Scale-Time (Shaul et al. 2023) with Euler base solver.
+
+    theta_ST = per-node (t, ṫ, s, ṡ): 4(n+1) - constraints parameters vs
+    the NS family's n(n+5)/2 + 1 — the expressiveness gap of Thm 3.2. The
+    update is the eq. 49 expansion of Euler on the transformed field:
+        x_{i+1} = [(s_i + h ṡ_i)/s_{i+1}] x_i + [h ṫ_i s_i / s_{i+1}] u_i.
+    If `precond` is given, theta is initialized at that transform's node
+    values (the paper's "Euler + preconditioning" initial solver).
+    """
+    rng = np.random.default_rng(seed)
+    r_nodes = np.linspace(0.0, 1.0, nfe + 1)
+    if precond is not None:
+        t0, dt0, s0v, ds0 = precond.node_values(r_nodes)
+    else:
+        t0, dt0 = r_nodes.copy(), np.ones(nfe + 1)
+        s0v, ds0 = np.ones(nfe + 1), np.zeros(nfe + 1)
+
+    theta = {
+        "t_logits": jnp.asarray(np.log(np.maximum(np.diff(t0), 1e-6)), jnp.float32),
+        "dt_raw": jnp.asarray(np.log(np.expm1(np.maximum(dt0, 1e-6))), jnp.float32),
+        "s_log": jnp.asarray(np.log(np.maximum(s0v, 1e-6)), jnp.float32),
+        "ds": jnp.asarray(ds0, jnp.float32),
+    }
+    opt = adam_init(theta)
+
+    def theta_to_nodes(theta):
+        inc = jax.nn.softmax(theta["t_logits"])
+        t = jnp.concatenate([jnp.zeros(1), jnp.cumsum(inc)])
+        t = t / t[-1]
+        dt = jax.nn.softplus(theta["dt_raw"])  # ṫ > 0 (monotone time map)
+        s = jnp.exp(theta["s_log"])  # s > 0
+        return t, dt, s, theta["ds"]
+
+    def sample_bst(theta, x0, labels):
+        t, dt, s, ds = theta_to_nodes(theta)
+        h = 1.0 / nfe  # uniform r-grid; time warping is carried by (t, ṫ)
+        x = x0
+        for i in range(nfe):
+            u_i = field(t[i], x, labels)
+            cx = (s[i] + h * ds[i]) / s[i + 1]
+            cu = h * dt[i] * s[i] / s[i + 1]
+            x = cx * x + cu * u_i
+        # NOTE on frames: we step x directly in the original frame by
+        # folding s into the per-step coefficients (eq. 49): x̄_0 = s_0 x_0
+        # and x_{i+1} = x̄_{i+1}/s_{i+1} are implicit, so no final unscale.
+        return x
+
+    def loss_fn(theta, x0, x1, labels):
+        xn = sample_bst(theta, x0, labels)
+        mse = jnp.mean((xn - x1) ** 2, axis=-1)
+        return jnp.mean(jnp.log(jnp.maximum(mse, 1e-20)))
+
+    @jax.jit
+    def val_psnr_fn(theta, x0, x1, labels):
+        return psnr(sample_bst(theta, x0, labels), x1)
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+    update = jax.jit(lambda p, o, g, lr: adam_update(p, clip_global_norm(_sanitize_grads(g)), o, lr))
+
+    x0_tr, x1_tr = jnp.asarray(pairs_train["x0"]), jnp.asarray(pairs_train["x1"])
+    la_tr = jnp.asarray(pairs_train["labels"])
+    x0_va, x1_va = jnp.asarray(pairs_val["x0"]), jnp.asarray(pairs_val["x1"])
+    la_va = jnp.asarray(pairs_val["labels"])
+
+    best = (-np.inf, theta, 0)
+    init_val = float(val_psnr_fn(theta, x0_va, x1_va, la_va))
+    history = []
+    t_start = time.time()
+    for it in range(iters):
+        idx = rng.integers(0, x0_tr.shape[0], size=batch)
+        cur_lr = lr * (1.0 - 0.95 * it / iters)
+        loss, grads = loss_grad(theta, x0_tr[idx], x1_tr[idx], la_tr[idx])
+        theta, opt = update(theta, opt, grads, cur_lr)
+        if (it + 1) % val_every == 0 or it == iters - 1:
+            vp = float(val_psnr_fn(theta, x0_va, x1_va, la_va))
+            history.append((it + 1, float(loss), vp))
+            if vp > best[0]:
+                best = (vp, jax.tree_util.tree_map(lambda x: x, theta), it + 1)
+    log(
+        f"    [bst] nfe={nfe} init_psnr={init_val:.2f} best_psnr={best[0]:.2f} "
+        f"@it{best[2]} ({time.time()-t_start:.0f}s)"
+    )
+
+    # Export as NS coefficients over the original field (ST ⊂ NS).
+    t, dt, s, ds = (np.asarray(v, np.float64) for v in theta_to_nodes(best[1]))
+    h = 1.0 / nfe
+    tr = ns.AffineTrace()
+    x = tr.x0()
+    for i in range(nfe):
+        u_i = tr.eval_u(x, t[i])
+        x = ((s[i] + h * ds[i]) / s[i + 1]) * x + (h * dt[i] * s[i] / s[i + 1]) * u_i
+    solver = tr.finish(x, 1.0)
+    # guard against non-monotone learned times (rare; clamp by sorting)
+    if not (np.diff(solver.times) > 0).all():
+        solver.times = np.maximum.accumulate(solver.times + 1e-9 * np.arange(len(solver.times)))
+    return TrainResult(solver, best[0], init_val, iters, batch * iters * nfe, history)

@@ -1,0 +1,111 @@
+"""Synthetic datasets standing in for the paper's gated assets.
+
+DESIGN.md §3 documents the substitutions:
+
+* images:  ImageNet-64/128 -> a 10-class procedural 8x8 RGB pattern
+  dataset ("synth-images"). Classes are parametric texture families with
+  continuous nuisance parameters, so the class-conditional generative
+  task is non-trivial (multimodal per class) while trainable in seconds.
+* audio:   Audiobox speech infilling -> 1-D length-128 waveforms drawn
+  from 4 signal families ("datasets" in the sense of Fig. 6/12):
+  harmonic stacks, AM tones, linear chirps, filtered noise bands.
+
+Both are generated from a seeded PRNG; the rust side regenerates the same
+evaluation sets via the shared PCG stream exported in the artifacts
+manifest, so FD-synth statistics are computed over identical references.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+IMG_SIDE = 8
+IMG_CHANNELS = 3
+IMG_DIM = IMG_SIDE * IMG_SIDE * IMG_CHANNELS  # 192
+NUM_CLASSES = 10
+
+AUDIO_LEN = 128
+AUDIO_FAMILIES = ("harmonic", "am", "chirp", "noiseband")
+
+
+def _grid():
+    ys, xs = np.mgrid[0:IMG_SIDE, 0:IMG_SIDE].astype(np.float32)
+    return xs / (IMG_SIDE - 1), ys / (IMG_SIDE - 1)
+
+
+def make_images(rng: np.random.Generator, n: int, labels=None):
+    """Sample `n` images; returns (x [n, IMG_DIM] in [-1,1], labels [n])."""
+    xs, ys = _grid()
+    if labels is None:
+        labels = rng.integers(0, NUM_CLASSES, size=n)
+    out = np.zeros((n, IMG_SIDE, IMG_SIDE, IMG_CHANNELS), np.float32)
+    for i, c in enumerate(labels):
+        # Continuous nuisances: phase, frequency jitter, base color.
+        ph = rng.uniform(0, 2 * np.pi, size=2)
+        fq = rng.uniform(0.8, 1.6)
+        col = rng.uniform(0.3, 1.0, size=IMG_CHANNELS).astype(np.float32)
+        cx, cy = rng.uniform(0.2, 0.8, size=2)
+        c = int(c)
+        if c == 0:  # horizontal stripes
+            base = np.sin(2 * np.pi * fq * 2 * ys + ph[0])
+        elif c == 1:  # vertical stripes
+            base = np.sin(2 * np.pi * fq * 2 * xs + ph[0])
+        elif c == 2:  # diagonal stripes
+            base = np.sin(2 * np.pi * fq * 1.5 * (xs + ys) + ph[0])
+        elif c == 3:  # checkerboard
+            base = np.sin(2 * np.pi * fq * 2 * xs + ph[0]) * np.sin(
+                2 * np.pi * fq * 2 * ys + ph[1]
+            )
+        elif c == 4:  # gaussian blob
+            base = 2 * np.exp(-(((xs - cx) ** 2 + (ys - cy) ** 2) / 0.05) * fq) - 1
+        elif c == 5:  # ring
+            r = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+            base = 2 * np.exp(-(((r - 0.3) ** 2) / 0.01) * fq) - 1
+        elif c == 6:  # radial waves
+            r = np.sqrt((xs - cx) ** 2 + (ys - cy) ** 2)
+            base = np.sin(2 * np.pi * fq * 3 * r + ph[0])
+        elif c == 7:  # corner gradient
+            base = 2 * (fq * (xs * np.cos(ph[0]) + ys * np.sin(ph[0]))) % 2 - 1
+        elif c == 8:  # cross
+            base = 2 * np.maximum(
+                np.exp(-((xs - cx) ** 2) / 0.01), np.exp(-((ys - cy) ** 2) / 0.01)
+            ) - 1
+        else:  # blob pair (multimodal within image)
+            b1 = np.exp(-(((xs - cx) ** 2 + (ys - cy) ** 2) / 0.02))
+            b2 = np.exp(-(((xs - (1 - cx)) ** 2 + (ys - (1 - cy)) ** 2) / 0.02))
+            base = 2 * np.maximum(b1, b2) - 1
+        out[i] = base[..., None] * col[None, None, :]
+    return out.reshape(n, IMG_DIM).clip(-1, 1), labels.astype(np.int32)
+
+
+def make_audio(rng: np.random.Generator, n: int, labels=None):
+    """Sample `n` waveforms; returns (x [n, AUDIO_LEN] in [-1,1], labels)."""
+    t = np.arange(AUDIO_LEN, dtype=np.float32) / AUDIO_LEN
+    if labels is None:
+        labels = rng.integers(0, len(AUDIO_FAMILIES), size=n)
+    out = np.zeros((n, AUDIO_LEN), np.float32)
+    for i, c in enumerate(labels):
+        f0 = rng.uniform(2.0, 8.0)
+        ph = rng.uniform(0, 2 * np.pi)
+        c = int(c)
+        if c == 0:  # harmonic stack (speech-formant-like)
+            sig = sum(
+                rng.uniform(0.2, 1.0) * np.sin(2 * np.pi * f0 * (k + 1) * t + ph * k)
+                for k in range(3)
+            )
+        elif c == 1:  # AM tone
+            sig = np.sin(2 * np.pi * 4 * f0 * t + ph) * (
+                0.5 + 0.5 * np.sin(2 * np.pi * f0 * 0.5 * t)
+            )
+        elif c == 2:  # linear chirp
+            sig = np.sin(2 * np.pi * (f0 * t + 0.5 * rng.uniform(4, 16) * t**2) + ph)
+        else:  # filtered noise band
+            white = rng.normal(size=AUDIO_LEN).astype(np.float32)
+            spec = np.fft.rfft(white)
+            freqs = np.arange(spec.shape[0], dtype=np.float32)
+            center = rng.uniform(8, 40)
+            spec *= np.exp(-((freqs - center) ** 2) / (2 * 6.0**2))
+            sig = np.fft.irfft(spec, n=AUDIO_LEN).astype(np.float32)
+            sig /= max(1e-6, np.abs(sig).max())
+        out[i] = sig / max(1e-6, np.abs(sig).max())
+    return out.clip(-1, 1), labels.astype(np.int32)

@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: time-modulated fused residual MLP block.
+
+This is the model's compute hot-spot: every velocity-field evaluation runs
+`depth` of these blocks, and every solver step is one such evaluation, so
+NFE x depth blocks dominate end-to-end sampling cost.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): on a GPU this chain
+(modulate -> matmul -> SiLU -> matmul -> add) would be fused with a
+persistent-threadblock kernel keeping `h` in shared memory. The TPU
+translation keeps the whole chain in VMEM for a tile of the batch:
+
+  * grid over batch tiles of `bt` rows; each grid step owns the full
+    [D, H] / [H, D] weight panels (they are small enough to be resident:
+    D,H <= 512 => 2*D*H*4B <= 2 MiB << 16 MiB VMEM),
+  * the two matmuls are MXU work ([bt,D]x[D,H] then [bt,H]x[H,D]); with
+    bt = 8 and D,H multiples of 128 these map onto (8x128)(128x128)
+    systolic passes,
+  * SiLU + modulation + skip are VPU elementwise ops fused between the
+    MXU passes — zero extra HBM traffic for `h`.
+
+VMEM footprint per grid step (f32): bt*(2D + H) + D*H + H*D + H + D
+floats; for bt=8, D=H=256 that is ~0.53 MiB, i.e. <4% of VMEM, leaving
+room for double-buffering the activation tiles.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against `ref.fused_resblock` and
+real-TPU performance is *estimated* (EXPERIMENTS.md §Perf), never measured
+from interpret timings.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _resblock_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, sc_ref, sh_ref, o_ref):
+    x = x_ref[...]
+    h = x * (1.0 + sc_ref[...]) + sh_ref[...]
+    h = jnp.dot(h, w1_ref[...]) + b1_ref[...]
+    h = h * jnp.reciprocal(1.0 + jnp.exp(-h))  # silu, VPU op between MXU passes
+    o_ref[...] = x + jnp.dot(h, w2_ref[...]) + b2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def fused_resblock(x, w1, b1, w2, b2, scale, shift, *, batch_tile=8):
+    """Pallas version of `ref.fused_resblock` (see there for semantics).
+
+    Tiles the batch dimension; weight panels are replicated to every grid
+    step (index_map pins them to block (0, 0)).
+    """
+    bsz, d = x.shape
+    h = w1.shape[1]
+    bt = min(batch_tile, bsz)
+    if bsz % bt != 0:  # pad to a whole number of tiles, slice after
+        pad = (-bsz) % bt
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        scp = jnp.pad(scale, ((0, pad), (0, 0)))
+        shp = jnp.pad(shift, ((0, pad), (0, 0)))
+        out = fused_resblock(xp, w1, b1, w2, b2, scp, shp, batch_tile=bt)
+        return out[:bsz]
+
+    grid = (bsz // bt,)
+    row_spec = pl.BlockSpec((bt, d), lambda i: (i, 0))
+    return pl.pallas_call(
+        _resblock_kernel,
+        grid=grid,
+        in_specs=[
+            row_spec,                                   # x tile
+            pl.BlockSpec((d, h), lambda i: (0, 0)),     # w1 (resident)
+            pl.BlockSpec((h,), lambda i: (0,)),         # b1
+            pl.BlockSpec((h, d), lambda i: (0, 0)),     # w2 (resident)
+            pl.BlockSpec((d,), lambda i: (0,)),         # b2
+            row_spec,                                   # scale tile
+            row_spec,                                   # shift tile
+        ],
+        out_specs=row_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, d), x.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2, scale, shift)

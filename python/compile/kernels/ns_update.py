@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: the NS solver combine step (eq. 11).
+
+x_{i+1} = a * x0 + sum_k b_k * u_k over the velocity history U_i.
+
+This is the solver-side hot op: at step i it touches (i+2) full-size
+tensors. A naive implementation issues i+1 separate AXPYs, reading x
+partials from HBM each time; the kernel instead streams each history row
+through VMEM once and keeps the accumulator resident.
+
+TPU mapping: grid = (K, B/bt) with the accumulator tile [bt, D] living in
+the output VMEM block across the K-loop (revisiting grid dimension);
+per-step VMEM = 2*bt*D floats (history tile + accumulator) — for bt=8,
+D=4096 that is 256 KiB, far below VMEM, so the HBM->VMEM streams can be
+double-buffered. All work is VPU multiply-adds; there is no MXU use, the
+kernel is bandwidth-bound with arithmetic intensity ~= 1 FLOP / 4 bytes,
+so the roofline target is HBM bandwidth, which a single linear stream of
+the history buffer achieves by construction.
+
+interpret=True as everywhere (see fused_resblock.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ns_update_kernel(x0_ref, u_ref, a_ref, b_ref, o_ref):
+    k = pl.program_id(0)
+    # Initialize the accumulator with a*x0 on the first history row; the
+    # output block index is constant in k so it persists across the loop.
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = a_ref[0] * x0_ref[...]
+
+    o_ref[...] += b_ref[0] * u_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("batch_tile",))
+def ns_update(x0, hist_u, a, b, *, batch_tile=8):
+    """Pallas version of `ref.ns_update` (see there for semantics).
+
+    Args:
+      x0:     [B, D].
+      hist_u: [K, B, D].
+      a:      scalar (rank-0 or [1]).
+      b:      [K].
+    """
+    kk, bsz, d = hist_u.shape
+    bt = min(batch_tile, bsz)
+    if bsz % bt != 0:
+        pad = (-bsz) % bt
+        out = ns_update(
+            jnp.pad(x0, ((0, pad), (0, 0))),
+            jnp.pad(hist_u, ((0, 0), (0, pad), (0, 0))),
+            a,
+            b,
+            batch_tile=bt,
+        )
+        return out[:bsz]
+
+    a = jnp.reshape(a, (1,)).astype(x0.dtype)
+    b = jnp.asarray(b, x0.dtype)
+    grid = (kk, bsz // bt)
+    return pl.pallas_call(
+        _ns_update_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda k, i: (i, 0)),      # x0 tile
+            pl.BlockSpec((1, bt, d), lambda k, i: (k, i, 0)),  # history row k
+            pl.BlockSpec((1,), lambda k, i: (0,)),           # a
+            pl.BlockSpec((1,), lambda k, i: (k,)),           # b_k
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda k, i: (i, 0)),  # accumulator
+        out_shape=jax.ShapeDtypeStruct((bsz, d), x0.dtype),
+        interpret=True,
+    )(x0, hist_u, a, b)

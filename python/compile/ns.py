@@ -1,0 +1,374 @@
+"""Non-Stationary solvers (Section 3.1) and the solver taxonomy (§3.3).
+
+Three pieces live here:
+
+1. `NSSolver` — the concrete n-step NS solver of eq. 11/12:
+   theta = [T_n, (a_0, b_0), ..., (a_{n-1}, b_{n-1})], with Algorithm 1
+   (`sample`) implemented over any velocity field.
+
+2. `AffineTrace` — a tiny symbolic-state algebra: a solver state is kept
+   as an affine expression `a * x0 + sum_j b_j u_j` with *numeric*
+   coefficients. Running any baseline solver on AffineTrace states
+   yields its exact NS coefficients — this is the constructive content
+   of Proposition 3.1 and Theorem 3.2, and it is how BNS optimization is
+   initialized from Euler/Midpoint (§3.2 "Initialization").
+
+3. Coefficient generators for every family of Figure 3:
+   Euler, Midpoint, RK4, Adams-Bashforth(2) (generic); DDIM
+   (exponential-Euler on eps), DPM-Solver++ 1S/2M (exponential on x̂);
+   EDM-style discretization; plus `reduce_cd_to_ab`, the explicit
+   recursion (eq. 32) of the Prop 3.1 proof, used by tests.
+
+The rust mirror is rust/src/solver/{ns,taxonomy}.rs; JSON emitted by
+`NSSolver.to_json_dict` is the interchange format.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import schedulers
+
+
+@dataclasses.dataclass
+class NSSolver:
+    """theta of eq. 12. `b` is stored dense lower-triangular [n, n]."""
+
+    times: np.ndarray  # [n+1], times[0] = 0, times[n] = 1
+    a: np.ndarray  # [n]
+    b: np.ndarray  # [n, n], b[i, j] = 0 for j > i
+
+    @property
+    def nfe(self) -> int:
+        return len(self.a)
+
+    def num_params(self) -> int:
+        """Dimension of the NS family at this step count: n(n+5)/2 + 1.
+
+        (n-1 interior times + n coefficients a + n(n+1)/2 coefficients b.)
+        """
+        n = self.nfe
+        return n * (n + 5) // 2 + 1 - 2  # -2: t_0 = 0 and t_n = 1 are fixed
+
+    def sample(self, u, x0):
+        """Algorithm 1: Non-Stationary sampling.
+
+        Args:
+          u:  callable (t, x) -> velocity, where x carries the batch.
+          x0: [..., D] initial noise.
+        Returns: x_n, the approximation to x(1).
+        """
+        x = x0
+        hist = []
+        for i in range(self.nfe):
+            hist.append(u(self.times[i], x))
+            x = self.a[i] * x0 + sum(self.b[i, j] * hist[j] for j in range(i + 1))
+        return x
+
+    def sample_with_history(self, u, x0):
+        """Algorithm 1 keeping every iterate (for diagnostics/plots)."""
+        x, xs, hist = x0, [x0], []
+        for i in range(self.nfe):
+            hist.append(u(self.times[i], x))
+            x = self.a[i] * x0 + sum(self.b[i, j] * hist[j] for j in range(i + 1))
+            xs.append(x)
+        return x, xs
+
+    def to_json_dict(self, **extra):
+        d = {
+            "times": [float(t) for t in self.times],
+            "a": [float(v) for v in self.a],
+            "b": [[float(self.b[i, j]) for j in range(i + 1)] for i in range(self.nfe)],
+        }
+        d.update(extra)
+        return d
+
+    @staticmethod
+    def from_json_dict(d) -> "NSSolver":
+        n = len(d["a"])
+        b = np.zeros((n, n), np.float64)
+        for i, row in enumerate(d["b"]):
+            b[i, : len(row)] = row
+        return NSSolver(np.asarray(d["times"], np.float64), np.asarray(d["a"], np.float64), b)
+
+
+# ---------------------------------------------------------------------------
+# Affine tracing: states as  a * x0 + sum_j b_j u_j  with numeric coeffs
+# ---------------------------------------------------------------------------
+
+
+class AffineTrace:
+    """Symbolic solver execution over the affine state algebra.
+
+    Call `eval_u(state, t)` wherever a concrete solver would evaluate the
+    velocity field; each call appends one NS step. Works for any method
+    whose update is a linear combination of previous states and
+    velocities — i.e. exactly the NS family (Prop 3.1).
+    """
+
+    def __init__(self):
+        self.times: list[float] = []
+        self.rows_a: list[float] = []
+        self.rows_b: list[np.ndarray] = []
+        self._k = 0  # number of velocity evals so far
+
+    def x0(self) -> "Aff":
+        return Aff(1.0, np.zeros(0))
+
+    def eval_u(self, state: "Aff", t: float) -> "Aff":
+        """Record evaluation u_k := u(t, state); returns the symbol u_k.
+
+        The *state being evaluated* becomes trajectory point x_k of the NS
+        solver, so its (a, b) row is recorded (except for x_0 itself).
+        """
+        k = self._k
+        if k == 0:
+            assert state.a == 1.0 and len(state.b) == 0, "first eval must be at x0"
+        else:
+            self.rows_a.append(state.a)
+            self.rows_b.append(np.pad(state.b, (0, k - len(state.b))))
+        self.times.append(float(t))
+        sym = Aff(0.0, np.zeros(k + 1))
+        sym.b[k] = 1.0
+        self._k += 1
+        return sym
+
+    def finish(self, final: "Aff", t_final: float = 1.0) -> NSSolver:
+        self.rows_a.append(final.a)
+        self.rows_b.append(np.pad(final.b, (0, self._k - len(final.b))))
+        self.times.append(float(t_final))
+        n = self._k
+        b = np.zeros((n, n), np.float64)
+        for i, row in enumerate(self.rows_b):
+            b[i, : len(row)] = row[: i + 1]
+        return NSSolver(np.asarray(self.times, np.float64), np.asarray(self.rows_a, np.float64), b)
+
+
+class Aff:
+    """a * x0 + b . (u_0 ... u_{k-1}) with numeric coefficients."""
+
+    __slots__ = ("a", "b")
+
+    def __init__(self, a: float, b: np.ndarray):
+        self.a = float(a)
+        self.b = np.asarray(b, np.float64)
+
+    def _lift(self, other: "Aff"):
+        k = max(len(self.b), len(other.b))
+        return np.pad(self.b, (0, k - len(self.b))), np.pad(other.b, (0, k - len(other.b)))
+
+    def __add__(self, other: "Aff") -> "Aff":
+        sb, ob = self._lift(other)
+        return Aff(self.a + other.a, sb + ob)
+
+    def __sub__(self, other: "Aff") -> "Aff":
+        sb, ob = self._lift(other)
+        return Aff(self.a - other.a, sb - ob)
+
+    def __mul__(self, c: float) -> "Aff":
+        return Aff(self.a * c, self.b * c)
+
+    __rmul__ = __mul__
+
+
+# ---------------------------------------------------------------------------
+# Proposition 3.1: explicit (c, d) -> (a, b) reduction (eq. 32)
+# ---------------------------------------------------------------------------
+
+
+def reduce_cd_to_ab(c_rows, d_rows):
+    """The induction of Appendix A, eq. 32, as executable code.
+
+    Args:
+      c_rows, d_rows: lists where row i has length i+1 — the naive NS
+        update rule x_{i+1} = X_i c_i + U_i d_i of eq. 10.
+    Returns: (a [n], b [n,n] lower-tri) of the reduced rule eq. 11.
+    """
+    n = len(c_rows)
+    a = np.zeros(n)
+    b = np.zeros((n, n))
+    for k in range(n):
+        ck, dk = np.asarray(c_rows[k], float), np.asarray(d_rows[k], float)
+        # a_k = c_k0 + sum_{j=0}^{k-1} c_{k,j+1} a_j   (eq. 32; the paper
+        # writes (c_k)_j a_j — the index shift follows its derivation where
+        # x_{j+1} = a_j x0 + ..., i.e. coefficient (c_k)_{j+1} pairs with a_j.)
+        a[k] = ck[0] + sum(ck[j + 1] * a[j] for j in range(k))
+        for j in range(k):
+            b[k, j] = sum(ck[l + 1] * b[l, j] for l in range(j, k)) + dk[j]
+        b[k, k] = dk[k]
+    return a, b
+
+
+# ---------------------------------------------------------------------------
+# Baseline solver coefficient generators (the families of Figure 3)
+# ---------------------------------------------------------------------------
+
+
+def uniform_times(n: int) -> np.ndarray:
+    return np.linspace(0.0, 1.0, n + 1)
+
+
+def euler_ns(times) -> NSSolver:
+    """Euler (RK1): x_{i+1} = x_i + h_i u_i, as NS coefficients."""
+    times = np.asarray(times, np.float64)
+    tr = AffineTrace()
+    x = tr.x0()
+    for i in range(len(times) - 1):
+        u = tr.eval_u(x, times[i])
+        x = x + (times[i + 1] - times[i]) * u
+    return tr.finish(x, times[-1])
+
+
+def midpoint_ns(nfe: int, times=None) -> NSSolver:
+    """RK-Midpoint with nfe velocity evaluations (nfe must be even).
+
+    The NS time discretization interleaves macro points and midpoints, as
+    in the paper's BNS initialization.
+    """
+    assert nfe % 2 == 0, "midpoint needs an even NFE"
+    m = nfe // 2
+    s = np.linspace(0.0, 1.0, m + 1) if times is None else np.asarray(times, np.float64)
+    tr = AffineTrace()
+    x = tr.x0()
+    for k in range(m):
+        h = s[k + 1] - s[k]
+        u1 = tr.eval_u(x, s[k])
+        xi = x + (0.5 * h) * u1
+        u2 = tr.eval_u(xi, s[k] + 0.5 * h)
+        x = x + h * u2
+    return tr.finish(x, s[-1])
+
+
+def rk4_ns(nfe: int) -> NSSolver:
+    """Classic RK4 (nfe divisible by 4), via affine tracing.
+
+    Note the NS discretization visits t_k, t_k + h/2 twice, t_k + h; NS
+    times must be *monotone increasing*, so we nudge the repeated node by
+    +1e-9 (the update coefficients are unaffected).
+    """
+    assert nfe % 4 == 0, "rk4 needs NFE divisible by 4"
+    m = nfe // 4
+    s = np.linspace(0.0, 1.0, m + 1)
+    tr = AffineTrace()
+    x = tr.x0()
+    for k in range(m):
+        h = s[k + 1] - s[k]
+        k1 = tr.eval_u(x, s[k])
+        k2 = tr.eval_u(x + (0.5 * h) * k1, s[k] + 0.5 * h)
+        # nudges keep the NS time grid strictly monotone; coefficients are
+        # unaffected (the RK tableau uses the exact node internally and the
+        # nudge is far below solver error).
+        k3 = tr.eval_u(x + (0.5 * h) * k2, s[k] + 0.5 * h + 1e-6 * h)
+        k4 = tr.eval_u(x + h * k3, s[k] + h * (1.0 - 1e-6))
+        x = x + (h / 6.0) * (k1 + 2.0 * k2 + 2.0 * k3 + k4)
+    return tr.finish(x, 1.0)
+
+
+def ab2_ns(times) -> NSSolver:
+    """2-step Adams-Bashforth (Euler bootstrap), as NS coefficients."""
+    times = np.asarray(times, np.float64)
+    tr = AffineTrace()
+    x = tr.x0()
+    prev_u = None
+    for i in range(len(times) - 1):
+        h = times[i + 1] - times[i]
+        u = tr.eval_u(x, times[i])
+        if prev_u is None:
+            x = x + h * u
+        else:
+            hp = times[i] - times[i - 1]
+            w1 = h * (1 + h / (2 * hp))
+            w0 = -h * h / (2 * hp)
+            x = x + w1 * u + w0 * prev_u
+        prev_u = u
+    return tr.finish(x, times[-1])
+
+
+def _xhat_from_u(sched: schedulers.Scheduler, t: float, x: Aff, u: Aff) -> Aff:
+    """Invert eq. 5 for the x-prediction: x̂ = (u - beta x) / gamma."""
+    beta, gamma = sched.uv_coeffs(jnp.float32(t), "x")
+    return (u - float(beta) * x) * (1.0 / float(gamma))
+
+
+def _eps_from_u(sched: schedulers.Scheduler, t: float, x: Aff, u: Aff) -> Aff:
+    """Invert eq. 5 for the eps-prediction: eps = (u - beta x) / gamma."""
+    beta, gamma = sched.uv_coeffs(jnp.float32(t), "eps")
+    return (u - float(beta) * x) * (1.0 / float(gamma))
+
+
+def ddim_ns(sched: schedulers.Scheduler, times) -> NSSolver:
+    """DDIM = exponential Euler on the eps-prediction (§3.3.2, eq. 22).
+
+    x_{i+1} = (alpha_{i+1}/alpha_i) x_i + (sigma_{i+1} - alpha_{i+1}
+    sigma_i / alpha_i) eps_i. Singular at alpha = 0, so for schedulers
+    with alpha_0 = 0 (FM-OT, cosine) pass times with t_0 > 0.
+    """
+    times = np.asarray(times, np.float64)
+    al = np.asarray(sched.alpha(jnp.asarray(times, jnp.float32)), np.float64)
+    si = np.asarray(sched.sigma(jnp.asarray(times, jnp.float32)), np.float64)
+    if al[0] <= 0:
+        raise ValueError("DDIM needs alpha(t_0) > 0; shift t_0 or use dpmpp")
+    tr = AffineTrace()
+    x = tr.x0()
+    for i in range(len(times) - 1):
+        u = tr.eval_u(x, times[i])
+        eps = _eps_from_u(sched, times[i], x, u)
+        x = (al[i + 1] / al[i]) * x + (si[i + 1] - al[i + 1] * si[i] / al[i]) * eps
+    return tr.finish(x, times[-1])
+
+
+def dpmpp_ns(sched: schedulers.Scheduler, times, order: int = 2) -> NSSolver:
+    """DPM-Solver++ (1S for order=1, 2M for order=2) as NS coefficients.
+
+    Exponential integrator on the x-prediction (eq. 22 with psi = sigma,
+    eta = 1), multistep form:
+        h_i  = lambda_{i+1} - lambda_i          (lambda = log snr)
+        D_i  = (1 + 1/(2 r_i)) x̂_i - 1/(2 r_i) x̂_{i-1},  r_i = h_{i-1}/h_i
+        x_{i+1} = (sigma_{i+1}/sigma_i) x_i + alpha_{i+1} (1 - e^{-h_i}) D_i
+    The final step (sigma_{n} = 0 allowed) degrades gracefully to x̂.
+    """
+    times = np.asarray(times, np.float64)
+    tf = jnp.asarray(times, jnp.float32)
+    al = np.asarray(sched.alpha(tf), np.float64)
+    si = np.asarray(sched.sigma(tf), np.float64)
+    lam = np.log(np.maximum(al, 1e-30)) - np.log(np.maximum(si, 1e-30))
+    tr = AffineTrace()
+    x = tr.x0()
+    n = len(times) - 1
+    prev_xhat, prev_h = None, None
+    for i in range(n):
+        u = tr.eval_u(x, times[i])
+        xhat = _xhat_from_u(sched, times[i], x, u)
+        h = lam[i + 1] - lam[i]
+        # lower_order_final (as in the reference DPM-Solver++ and the rust
+        # mirror): the final lambda jump is unbounded when sigma(1) = 0 and
+        # second-order extrapolation across it diverges.
+        if order >= 2 and prev_xhat is not None and i + 1 < n:
+            r = prev_h / h
+            d = (1 + 1 / (2 * r)) * xhat - (1 / (2 * r)) * prev_xhat
+        else:
+            d = xhat
+        x = (si[i + 1] / si[i]) * x + (al[i + 1] * (1 - np.exp(-h))) * d
+        prev_xhat, prev_h = xhat, h
+    return tr.finish(x, times[-1])
+
+
+def edm_times(n: int, sched: schedulers.Scheduler, rho: float = 7.0) -> np.ndarray:
+    """EDM's rho-schedule time discretization mapped back to model time.
+
+    EDM picks sigma-levels sigma_j = (smax^{1/rho} + j/(n-1) (smin^{1/rho}
+    - smax^{1/rho}))^rho on the VE path and integrates over them; via the
+    snr correspondence these map to original times t_j = snr^{-1}(1 /
+    sigma_j). We return the induced monotone time grid for use with any
+    solver (the paper's "EDM incorporates a particular time
+    discretization" note).
+    """
+    smin, smax = 2e-3, float(schedulers.EDM_SIGMA_MAX)
+    j = np.arange(n + 1) / n
+    sig = (smax ** (1 / rho) + j * (smin ** (1 / rho) - smax ** (1 / rho))) ** rho
+    t = np.asarray(sched.snr_inv(jnp.asarray(1.0 / sig, jnp.float32)), np.float64)
+    t[0], t[-1] = 0.0, 1.0
+    return np.maximum.accumulate(t)

@@ -1,0 +1,64 @@
+"""Adaptive RK45 (Dormand-Prince) solver used to generate ground truth.
+
+The paper's GT samples are "high accuracy approximate solutions of eq. 1"
+computed with adaptive RK45 (Shampine, 1986). This is the build-path
+implementation used for (x0, x(1)) training-pair generation and for
+validation references; the request-path mirror lives in
+rust/src/solver/rk45.rs with identical Butcher tableau and step control,
+and the two are cross-checked by integration tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+# Dormand-Prince 5(4) tableau.
+DOPRI_C = np.array([0.0, 1 / 5, 3 / 10, 4 / 5, 8 / 9, 1.0, 1.0])
+DOPRI_A = [
+    [],
+    [1 / 5],
+    [3 / 40, 9 / 40],
+    [44 / 45, -56 / 15, 32 / 9],
+    [19372 / 6561, -25360 / 2187, 64448 / 6561, -212 / 729],
+    [9017 / 3168, -355 / 33, 46732 / 5247, 49 / 176, -5103 / 18656],
+    [35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84],
+]
+DOPRI_B5 = np.array([35 / 384, 0.0, 500 / 1113, 125 / 192, -2187 / 6784, 11 / 84, 0.0])
+DOPRI_B4 = np.array(
+    [5179 / 57600, 0.0, 7571 / 16695, 393 / 640, -92097 / 339200, 187 / 2100, 1 / 40]
+)
+
+
+def rk45(u, x0, t0=0.0, t1=1.0, rtol=1e-5, atol=1e-5, h0=0.05, max_nfe=10_000):
+    """Integrate dx/dt = u(t, x) from t0 to t1 adaptively.
+
+    Args:
+      u:  callable (t: float, x: array) -> array; the velocity field.
+      x0: initial state, any shape (batch leading dims fine).
+    Returns:
+      (x1, nfe): final state and the number of velocity evaluations.
+    """
+    x = np.asarray(x0, np.float64)
+    t, h, nfe = float(t0), float(h0), 0
+    k1 = np.asarray(u(t, x), np.float64)
+    nfe += 1
+    while t < t1 - 1e-12:
+        h = min(h, t1 - t)
+        ks = [k1]
+        for i in range(1, 7):
+            xi = x + h * sum(a * k for a, k in zip(DOPRI_A[i], ks))
+            ks.append(np.asarray(u(t + DOPRI_C[i] * h, xi), np.float64))
+            nfe += 1
+        x5 = x + h * sum(b * k for b, k in zip(DOPRI_B5, ks))
+        x4 = x + h * sum(b * k for b, k in zip(DOPRI_B4, ks))
+        scale = atol + rtol * np.maximum(np.abs(x), np.abs(x5))
+        err = float(np.sqrt(np.mean(((x5 - x4) / scale) ** 2)))
+        if err <= 1.0:  # accept
+            t += h
+            x = x5
+            k1 = ks[-1]  # FSAL: k7 of the accepted step is k1 of the next
+        factor = 0.9 * (max(err, 1e-10)) ** (-0.2)
+        h *= min(5.0, max(0.2, factor))
+        if nfe > max_nfe:
+            raise RuntimeError(f"rk45 exceeded max_nfe={max_nfe} (err={err:.3g})")
+    return x.astype(np.float32), nfe

@@ -1,0 +1,115 @@
+"""Progressive Distillation baseline (Salimans & Ho 2022) for Table 3.
+
+The paper compares BNS against PD on FID / training forwards / training
+set size / parameter count. PD is *model* distillation: starting from the
+pretrained teacher, each phase trains a student (initialized at the
+teacher) so one student Euler step matches two teacher Euler steps; the
+student then becomes the next phase's teacher and the step count halves.
+
+We implement the velocity-parametrization variant natural for FM-OT: for
+x_t on the path and a student grid time t with step h, the target is the
+average teacher velocity over [t, t + h]:
+
+    x''      = two teacher Euler half-steps from (t, x_t)
+    v_target = (x'' - x_t) / h
+
+Forwards accounting follows App. D.4: every model evaluation with batch 1
+counts as one forward; an update with batch B costs B * (2 teacher + 1
+student) forwards (the student backward pass is not counted, as in the
+paper).
+
+Output: distilled student weights at NFE 4 / 8 / 16 (+ metadata), which
+aot.py exports as HLO artifacts so the rust bench regenerates Table 3.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, schedulers
+from .train_model import P_UNCOND, adam_init, adam_update
+
+
+@dataclasses.dataclass
+class PDResult:
+    students: dict  # nfe -> params
+    forwards: dict  # nfe -> cumulative training forwards to reach it
+    updates: dict  # nfe -> cumulative parameter updates
+
+
+def distill(
+    cfg: model.ModelConfig,
+    teacher_params: dict,
+    *,
+    start_steps=32,
+    target_steps=(16, 8, 4),
+    updates_per_phase=800,
+    batch=64,
+    lr=3e-4,
+    seed=0,
+    log=print,
+) -> PDResult:
+    """Run PD phases start_steps -> ... -> min(target_steps)."""
+    assert cfg.parametrization == "velocity", "PD implemented for velocity models"
+    rng = np.random.default_rng(seed)
+    sched = schedulers.SCHEDULERS[cfg.scheduler]
+    make = data.make_audio if cfg.name.startswith("audio") else data.make_images
+
+    def vel(params, x, t, labels):
+        return model.velocity(cfg, params, x, t, labels, use_pallas=False)
+
+    def loss_fn(student, teacher, x_t, t, h, labels):
+        # two teacher half-steps
+        u1 = vel(teacher, x_t, t, labels)
+        x_mid = x_t + 0.5 * h * u1
+        u2 = vel(teacher, x_mid, t + 0.5 * h, labels)
+        x_end = x_mid + 0.5 * h * u2
+        v_target = (x_end - x_t) / h
+        v_pred = vel(student, x_t, t, labels)
+        return jnp.mean((v_pred - jax.lax.stop_gradient(v_target)) ** 2)
+
+    loss_grad = jax.jit(jax.value_and_grad(loss_fn))
+    update = jax.jit(lambda p, o, g, lr: adam_update(p, g, o, lr))
+
+    teacher = teacher_params
+    students, forwards_at, updates_at = {}, {}, {}
+    total_forwards, total_updates = 0, 0
+    steps = start_steps
+    while steps > min(target_steps):
+        steps //= 2
+        student = jax.tree_util.tree_map(lambda x: x, teacher)
+        opt = adam_init(student)
+        t_start = time.time()
+        for it in range(updates_per_phase):
+            x1, labels = make(rng, batch)
+            drop = rng.random(batch) < P_UNCOND
+            labels = np.where(drop, cfg.null_class, labels).astype(np.int32)
+            x0 = rng.standard_normal((batch, cfg.data_dim)).astype(np.float32)
+            # x_t on the student grid
+            k = rng.integers(0, steps)
+            t = np.float32(k / steps)
+            h = np.float32(1.0 / steps)
+            a, s = float(sched.alpha(t)), float(sched.sigma(t))
+            x_t = s * x0 + a * x1
+            loss, grads = loss_grad(
+                student, teacher, jnp.asarray(x_t), t, h, jnp.asarray(labels)
+            )
+            student, opt = update(student, opt, grads, lr)
+            total_forwards += batch * 3  # 2 teacher + 1 student (App. D.4)
+            total_updates += 1
+        log(
+            f"    [pd] phase ->{steps} steps, loss {float(loss):.5f} "
+            f"({time.time()-t_start:.0f}s, {total_forwards/1e6:.2f}m forwards)"
+        )
+        teacher = student
+        if steps in target_steps:
+            students[steps] = student
+            forwards_at[steps] = total_forwards
+            updates_at[steps] = total_updates
+    return PDResult(students, forwards_at, updates_at)

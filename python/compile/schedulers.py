@@ -1,0 +1,241 @@
+"""Gaussian-path schedulers and Scale-Time (ST) transformations.
+
+Implements the scheduler zoo of the BNS paper (Shaul et al., ICML 2024):
+
+* FM-OT      (conditional optimal transport):  alpha_t = t,        sigma_t = 1 - t
+* FM/v-CS    (cosine):                         alpha_t = sin(pi/2 t), sigma_t = cos(pi/2 t)
+* VP         (variance preserving, eq. 60):    alpha_t = xi_{1-t},  sigma_t = sqrt(1 - xi^2)
+* VE / EDM   (variance exploding, eq. 16):     alpha_t = 1,         sigma_t = sigma_max (1 - t)
+
+Conventions follow the paper: t = 0 is source/noise, t = 1 is data
+(eq. 4: alpha_0 ~ 0, sigma_1 = 0, alpha_1 = 1, sigma_0 > 0), and the
+signal-to-noise ratio snr(t) = alpha_t / sigma_t is strictly increasing.
+
+Also provides:
+* the velocity-field coefficients (beta_t, gamma_t) of Table 1 for the
+  three model parametrizations (velocity / eps-prediction / x-prediction),
+* the ST <-> scheduler-change conversion of eq. 8,
+* the sigma0 preconditioning of eq. 14.
+
+Everything is written against `jax.numpy` so it is differentiable and can
+be lowered into the AOT artifacts; the rust mirror lives in
+rust/src/solver/scheduler.rs and is cross-checked against table values
+exported by tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+# VP scheduler constants from eq. 60 of the paper (Song et al. 2020).
+VP_BETA_MAX = 20.0
+VP_BETA_MIN = 0.1
+EDM_SIGMA_MAX = 80.0
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheduler:
+    """A Gaussian-path scheduler (alpha_t, sigma_t) with derivatives.
+
+    alpha/sigma map a scalar (or array) time in [0, 1] to the path
+    coefficients of eq. 3: p_t(x | x1) = N(x | alpha_t x1, sigma_t^2 I).
+    """
+
+    name: str
+    alpha: Callable[[jnp.ndarray], jnp.ndarray]
+    sigma: Callable[[jnp.ndarray], jnp.ndarray]
+    # Optional closed-form snr^{-1}; keeps ST transforms differentiable
+    # (the bisection fallback has zero gradient under jax autodiff).
+    snr_inv_analytic: Callable[[jnp.ndarray], jnp.ndarray] | None = None
+
+    def dalpha(self, t):
+        return jax.grad(lambda s: jnp.sum(self.alpha(s)))(jnp.asarray(t, jnp.float32))
+
+    def dsigma(self, t):
+        return jax.grad(lambda s: jnp.sum(self.sigma(s)))(jnp.asarray(t, jnp.float32))
+
+    def snr(self, t):
+        """Signal-to-noise ratio alpha_t / sigma_t (strictly increasing)."""
+        return self.alpha(t) / self.sigma(t)
+
+    def log_snr(self, t):
+        """lambda_t = log snr(t) used by exponential integrators (eq. 22)."""
+        return jnp.log(self.alpha(t)) - jnp.log(self.sigma(t))
+
+    def snr_inv(self, y, lo=0.0, hi=1.0, iters=64):
+        """Invert snr: closed form when available, else bisection.
+
+        Bisection is robust for every scheduler here because snr is
+        strictly monotone (the paper's standing assumption, Section 2);
+        64 steps give full float32 resolution of the interval. The
+        analytic path additionally supports autodiff, which the BNS
+        trainer needs when optimizing over a preconditioned field.
+        """
+        y = jnp.asarray(y, jnp.float32)
+        if self.snr_inv_analytic is not None:
+            return self.snr_inv_analytic(y)
+
+        def body(_, ab):
+            a, b = ab
+            m = 0.5 * (a + b)
+            below = self.snr(m) < y
+            return (jnp.where(below, m, a), jnp.where(below, b, m))
+
+        a, b = jax.lax.fori_loop(
+            0, iters, body, (jnp.full_like(y, lo), jnp.full_like(y, hi))
+        )
+        return 0.5 * (a + b)
+
+    # -- velocity-field coefficients of Table 1 -------------------------
+
+    def uv_coeffs(self, t, parametrization: str):
+        """Return (beta_t, gamma_t) with u_t(x) = beta_t x + gamma_t f_t(x).
+
+        Table 1 of the paper; `parametrization` is one of
+        'velocity' | 'eps' | 'x'.
+        """
+        t = jnp.asarray(t, jnp.float32)
+        if parametrization == "velocity":
+            return jnp.zeros_like(t), jnp.ones_like(t)
+        a, s = self.alpha(t), self.sigma(t)
+        da, ds = self.dalpha(t), self.dsigma(t)
+        if parametrization == "eps":
+            return da / a, (ds * a - s * da) / a
+        if parametrization == "x":
+            return ds / s, (s * da - ds * a) / s
+        raise ValueError(f"unknown parametrization {parametrization!r}")
+
+
+def _vp_xi(s):
+    b, B = VP_BETA_MIN, VP_BETA_MAX
+    return jnp.exp(-0.25 * s**2 * (B - b) - 0.5 * s * b)
+
+
+def _vp_snr_inv(y):
+    """Closed-form snr^{-1} for VP: invert xi_s (a quadratic in s)."""
+    b, B = VP_BETA_MIN, VP_BETA_MAX
+    # snr = xi / sqrt(1 - xi^2)  =>  xi = 1 / sqrt(1 + y^-2); this form is
+    # nan-free at the data endpoint y = inf (xi -> 1).
+    xi = 1.0 / jnp.sqrt(1.0 + jnp.maximum(y, 1e-30) ** -2)
+    log_xi = jnp.log(jnp.clip(xi, 1e-30, 1.0))
+    # 0.25 (B-b) s^2 + 0.5 b s + log xi = 0, take the positive root.
+    disc = jnp.sqrt(jnp.maximum(0.25 * b**2 - (B - b) * log_xi, 0.0))
+    s = (-0.5 * b + disc) / (0.5 * (B - b))
+    return 1.0 - s
+
+
+FM_OT = Scheduler(
+    "fm_ot",
+    lambda t: jnp.asarray(t, jnp.float32),
+    lambda t: 1.0 - jnp.asarray(t, jnp.float32),
+    # snr(t) = t / (1 - t)  =>  t = y / (1 + y); written 1 - 1/(1+y) so
+    # the data endpoint y = snr(1) = inf maps to t = 1 without nan.
+    snr_inv_analytic=lambda y: 1.0 - 1.0 / (1.0 + y),
+)
+COSINE = Scheduler(
+    "cosine",
+    lambda t: jnp.sin(0.5 * jnp.pi * jnp.asarray(t, jnp.float32)),
+    lambda t: jnp.cos(0.5 * jnp.pi * jnp.asarray(t, jnp.float32)),
+    # snr(t) = tan(pi t / 2)  =>  t = (2/pi) atan(y)
+    snr_inv_analytic=lambda y: (2.0 / jnp.pi) * jnp.arctan(y),
+)
+VP = Scheduler(
+    "vp",
+    lambda t: _vp_xi(1.0 - jnp.asarray(t, jnp.float32)),
+    lambda t: jnp.sqrt(jnp.maximum(1.0 - _vp_xi(1.0 - jnp.asarray(t, jnp.float32)) ** 2, 1e-12)),
+    snr_inv_analytic=_vp_snr_inv,
+)
+VE = Scheduler(
+    "ve",
+    lambda t: jnp.ones_like(jnp.asarray(t, jnp.float32)),
+    lambda t: EDM_SIGMA_MAX * (1.0 - jnp.asarray(t, jnp.float32)),
+    # snr(t) = 1 / (sigma_max (1 - t))  =>  t = 1 - 1/(sigma_max y)
+    snr_inv_analytic=lambda y: 1.0 - 1.0 / (EDM_SIGMA_MAX * jnp.maximum(y, 1e-30)),
+)
+
+SCHEDULERS = {s.name: s for s in (FM_OT, COSINE, VP, VE)}
+
+
+# ---------------------------------------------------------------------------
+# Scale-Time transformations (Section 2, eqs. 6-8) and preconditioning
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class STTransform:
+    """A scale-time transformation x̄(r) = s_r · x(t_r) (eq. 6).
+
+    `t` maps transformed time r to original time, `s` is the scale; both
+    are callables over [0, 1]. Derivative helpers use jax autodiff so the
+    transformed velocity field (eq. 7) is exact.
+    """
+
+    t: Callable[[jnp.ndarray], jnp.ndarray]
+    s: Callable[[jnp.ndarray], jnp.ndarray]
+
+    def dt(self, r):
+        # derivatives evaluated a hair inside [0, 1]: the s/t maps divide
+        # 0/0 *at* the endpoints and autodiff would propagate nan even
+        # though the one-sided limits are finite.
+        r = jnp.clip(jnp.asarray(r, jnp.float32), 1e-5, 1.0 - 1e-5)
+        return jax.grad(lambda q: jnp.sum(self.t(q)))(r)
+
+    def ds(self, r):
+        r = jnp.clip(jnp.asarray(r, jnp.float32), 1e-5, 1.0 - 1e-5)
+        return jax.grad(lambda q: jnp.sum(self.s(q)))(r)
+
+    def transform_u(self, u):
+        """eq. 7: ū_r(x) = (ṡ_r/s_r) x + ṫ_r s_r u_{t_r}(x / s_r)."""
+
+        def u_bar(r, x):
+            s, ds, t, dt = self.s(r), self.ds(r), self.t(r), self.dt(r)
+            return (ds / s) * x + dt * s * u(t, x / s)
+
+        return u_bar
+
+
+def st_from_scheduler_change(old: Scheduler, new_alpha, new_sigma) -> STTransform:
+    """eq. 8: scheduler change -> ST transform for strictly-monotone snr.
+
+    t_r = snr^{-1}( snr̄(r) ),   s_r = sigma̅_r / sigma_{t_r}.
+    """
+
+    def t_of_r(r):
+        return old.snr_inv(new_alpha(r) / new_sigma(r))
+
+    def s_of_r(r):
+        # Both ratios of eq. 8 are valid; pick the one whose denominator
+        # is regular (sigma-ratio is 0/0 at the data endpoint, alpha-ratio
+        # is 0/0 at the noise endpoint).
+        t = t_of_r(r)
+        a_t, s_t = old.alpha(t), old.sigma(t)
+        return jnp.where(
+            a_t > s_t,
+            new_alpha(r) / jnp.maximum(a_t, 1e-20),
+            new_sigma(r) / jnp.maximum(s_t, 1e-20),
+        )
+
+    return STTransform(t=t_of_r, s=s_of_r)
+
+
+def precondition(old: Scheduler, sigma0: float) -> STTransform:
+    """The sigma0 preconditioning of eq. 14: sigma̅_t = sigma0·sigma_t, alpha̅ = alpha.
+
+    sigma0 = 1 is the identity transformation. Larger sigma0 corresponds to
+    a wider source distribution p0 ∝ N(0, sigma0^2 I), which the paper
+    found to improve BNS optimization conditioning under high CFG scale.
+    """
+    return st_from_scheduler_change(
+        old, lambda r: old.alpha(r), lambda r: sigma0 * old.sigma(r)
+    )
+
+
+def edm_transform(old: Scheduler) -> STTransform:
+    """EDM's variance-exploding scheduler change, eq. 16."""
+    return st_from_scheduler_change(
+        old, lambda r: jnp.ones_like(r), lambda r: EDM_SIGMA_MAX * (1.0 - jnp.asarray(r)) + 1e-4
+    )

@@ -1,0 +1,184 @@
+"""Build-time training of the tiny diffusion/flow models.
+
+Trains the five pretrained models the experiments need (DESIGN.md §3):
+
+  name            data    scheduler  parametrization  role in the paper
+  --------------  ------  ---------  ---------------  --------------------
+  img_fm_ot       images  fm_ot      velocity         ImageNet-64 FM-OT
+  img_fmv_cs      images  cosine     velocity         ImageNet-64 FM/v-CS
+  img_eps_vp      images  vp         eps              ImageNet-64 eps-VP
+  img_fm_ot_big   images  fm_ot      velocity         ImageNet-128 FM-OT
+  audio_fm_ot     audio   fm_ot      velocity         Audiobox speech FM
+
+Losses follow App. E: CFM (eq. 56) for velocity models, noise prediction
+(eq. 59) for the eps-VP model. Labels are dropped to the null class with
+p_uncond = 0.2 so CFG works at sampling time. Optimizer: hand-rolled Adam
+(optax is not in the image).
+
+Usage: python -m compile.train_model [--steps N] [--out DIR]
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, model, schedulers
+
+P_UNCOND = 0.2
+
+# Per-model learning rates: the audio model is prone to late-training
+# spikes at 1e-3 (see the nan guard in `train`), so it runs cooler.
+MODEL_LR = {"audio_fm_ot": 3e-4}
+
+MODEL_CONFIGS = {
+    "img_fm_ot": model.ModelConfig(
+        "img_fm_ot", data.IMG_DIM, data.NUM_CLASSES, scheduler="fm_ot", parametrization="velocity"
+    ),
+    "img_fmv_cs": model.ModelConfig(
+        "img_fmv_cs", data.IMG_DIM, data.NUM_CLASSES, scheduler="cosine", parametrization="velocity"
+    ),
+    "img_eps_vp": model.ModelConfig(
+        "img_eps_vp", data.IMG_DIM, data.NUM_CLASSES, scheduler="vp", parametrization="eps"
+    ),
+    "img_fm_ot_big": model.ModelConfig(
+        "img_fm_ot_big",
+        data.IMG_DIM,
+        data.NUM_CLASSES,
+        hidden=384,
+        depth=6,
+        scheduler="fm_ot",
+        parametrization="velocity",
+    ),
+    "audio_fm_ot": model.ModelConfig(
+        "audio_fm_ot",
+        data.AUDIO_LEN,
+        len(data.AUDIO_FAMILIES),
+        scheduler="fm_ot",
+        parametrization="velocity",
+    ),
+}
+
+
+def adam_init(params):
+    z = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": z, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros((), jnp.int32)}
+
+
+def clip_global_norm(grads, max_norm=1.0):
+    """Global-norm gradient clipping (the usual optax.clip_by_global_norm)."""
+    total = jnp.sqrt(sum(jnp.sum(g**2) for g in grads.values()))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(total, 1e-12))
+    return {k: g * scale for k, g in grads.items()}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * grads[k] ** 2 for k in params}
+    mh = {k: m[k] / (1 - b1**t) for k in params}
+    vh = {k: v[k] / (1 - b2**t) for k in params}
+    new = {k: params[k] - lr * mh[k] / (jnp.sqrt(vh[k]) + eps) for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+def _loss(cfg: model.ModelConfig, params, x1, labels, x0, t):
+    """Per-batch training loss; t is a [B] vector of times."""
+    sched = schedulers.SCHEDULERS[cfg.scheduler]
+    a = sched.alpha(t)[:, None]
+    s = sched.sigma(t)[:, None]
+    xt = s * x0 + a * x1  # eq. 3 sample of p_t(x|x1)
+
+    def f_one(xti, ti, li):
+        return model.model_f(cfg, params, xti[None], ti, li[None], use_pallas=False)[0]
+
+    f_val = jax.vmap(f_one)(xt, t, labels)
+    if cfg.parametrization == "velocity":
+        da = jax.vmap(sched.dalpha)(t)[:, None]
+        ds = jax.vmap(sched.dsigma)(t)[:, None]
+        target = ds * x0 + da * x1  # eq. 56
+    elif cfg.parametrization == "eps":
+        target = x0  # eq. 59 (x0 is the noise in the paper's convention)
+    elif cfg.parametrization == "x":
+        target = x1
+    else:
+        raise ValueError(cfg.parametrization)
+    return jnp.mean((f_val - target) ** 2)
+
+
+def train(cfg: model.ModelConfig, steps=3000, batch=256, lr=1e-3, seed=0, log_every=500):
+    """Train one model; returns (params, final_loss)."""
+    rng = np.random.default_rng(seed)
+    params = model.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+    make = data.make_audio if cfg.name.startswith("audio") else data.make_images
+
+    # t sampled uniformly but clipped away from the eps-pred singularity
+    # at alpha_t -> 0 (VP has alpha_0 ~ 6.6e-3; training there is
+    # pointless and destabilizing).
+    t_lo = 0.02 if cfg.parametrization == "eps" else 0.0
+
+    loss_grad = jax.jit(jax.value_and_grad(functools.partial(_loss, cfg), argnums=0))
+    step_fn = jax.jit(lambda p, o, g, lr: adam_update(p, clip_global_norm(g), o, lr))
+
+    t_start = time.time()
+    loss_val = float("nan")
+    snapshot = (params, opt, 0.0)  # nan-divergence recovery point
+    for it in range(steps):
+        x1, labels = make(rng, batch)
+        drop = rng.random(batch) < P_UNCOND
+        labels = np.where(drop, cfg.null_class, labels).astype(np.int32)
+        x0 = rng.standard_normal((batch, cfg.data_dim)).astype(np.float32)
+        t = (t_lo + (1 - t_lo - 1e-3) * rng.random(batch)).astype(np.float32)
+        cur_lr = lr * min(1.0, (it + 1) / 100) * (1.0 - 0.9 * it / steps)
+        loss_val, grads = loss_grad(params, jnp.asarray(x1), jnp.asarray(labels), jnp.asarray(x0), jnp.asarray(t))
+        if not np.isfinite(float(loss_val)):
+            # Divergence guard: restore the last healthy snapshot and stop
+            # (these tiny models occasionally spike late in training).
+            params, opt, loss_val = snapshot
+            print(f"  [{cfg.name}] step {it:5d} diverged (nan); restored snapshot and stopped")
+            break
+        params, opt = step_fn(params, opt, grads, cur_lr)
+        if it % 100 == 0:
+            snapshot = (params, opt, float(loss_val))
+        if it % log_every == 0 or it == steps - 1:
+            print(f"  [{cfg.name}] step {it:5d} loss {float(loss_val):.5f} ({time.time()-t_start:.0f}s)")
+    return params, float(loss_val)
+
+
+def save_params(params: dict, path: str):
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path: str) -> dict:
+    with np.load(path) as z:
+        return {k: jnp.asarray(z[k]) for k in z.files}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=3000)
+    ap.add_argument("--out", default="../artifacts/weights")
+    ap.add_argument("--models", nargs="*", default=list(MODEL_CONFIGS))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models:
+        cfg = MODEL_CONFIGS[name]
+        path = os.path.join(args.out, f"{name}.npz")
+        if os.path.exists(path):
+            print(f"[skip] {path} exists")
+            continue
+        print(f"[train] {name}: {cfg}")
+        params, loss = train(cfg, steps=args.steps, lr=MODEL_LR.get(name, 1e-3))
+        save_params(params, path)
+        print(f"[done] {name} loss={loss:.5f} params={model.param_count(params):,} -> {path}")
+
+
+if __name__ == "__main__":
+    main()

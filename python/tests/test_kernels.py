@@ -1,0 +1,83 @@
+"""L1 kernels vs the pure-jnp oracle — hypothesis sweeps over shapes,
+seeds, and batch tiles. This is the core correctness signal for the
+Pallas layer (interpret=True; see kernels/*.py headers)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_resblock import fused_resblock
+from compile.kernels.ns_update import ns_update
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, dtype=jnp.float32)
+
+
+@given(
+    b=st.integers(1, 17),
+    d=st.integers(1, 40),
+    h=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([1, 4, 8]),
+)
+def test_fused_resblock_matches_ref(b, d, h, seed, tile):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 7)
+    x = rand(ks[0], b, d)
+    w1 = rand(ks[1], d, h, scale=0.2)
+    b1 = rand(ks[2], h, scale=0.1)
+    w2 = rand(ks[3], h, d, scale=0.2)
+    b2 = rand(ks[4], d, scale=0.1)
+    sc = rand(ks[5], b, d, scale=0.1)
+    sh = rand(ks[6], b, d, scale=0.1)
+    want = ref.fused_resblock(x, w1, b1, w2, b2, sc, sh)
+    got = fused_resblock(x, w1, b1, w2, b2, sc, sh, batch_tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@given(
+    k=st.integers(1, 12),
+    b=st.integers(1, 13),
+    d=st.integers(1, 33),
+    seed=st.integers(0, 2**31 - 1),
+    tile=st.sampled_from([1, 4, 8]),
+)
+def test_ns_update_matches_ref(k, b, d, seed, tile):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x0 = rand(ks[0], b, d)
+    hist = rand(ks[1], k, b, d)
+    a = rand(ks[2])[()]
+    bb = rand(ks[3], k)
+    want = ref.ns_update(x0, hist, a, bb)
+    got = ns_update(x0, hist, a, bb, batch_tile=tile)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_ns_update_zero_coefficients_masks_history():
+    # rows with b_k = 0 must not contribute even if they contain garbage
+    x0 = jnp.ones((2, 4))
+    hist = jnp.stack([jnp.full((2, 4), 1.0), jnp.full((2, 4), jnp.nan)])
+    b = jnp.asarray([2.0, 0.0])
+    got = ns_update(x0, jnp.nan_to_num(hist, nan=1e30), jnp.float32(0.5), b)
+    want = 0.5 * x0 + 2.0 * jnp.ones((2, 4))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+def test_resblock_is_identity_at_zero_weights():
+    b, d, h = 3, 8, 16
+    x = jnp.arange(b * d, dtype=jnp.float32).reshape(b, d) / 10
+    z = jnp.zeros
+    got = fused_resblock(x, z((d, h)), z((h,)), z((h, d)), z((d,)), z((b, d)), z((b, d)))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-6)
+
+
+def test_time_embed_shape_and_range():
+    e = ref.time_embed(jnp.float32(0.37) * 1000, 64)
+    assert e.shape == (64,)
+    assert float(jnp.abs(e).max()) <= 1.0 + 1e-6

@@ -1,0 +1,169 @@
+"""Model contracts, Algorithm 2 behavior, the preconditioning fold-out
+identity, and BST export equivalence — on tiny budgets (CI-scale)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import bns, data, model, ns, train_model
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = model.ModelConfig("tiny", data_dim=12, num_classes=4, hidden=32, depth=2, emb_dim=16)
+    params = model.init_params(cfg, seed=1)
+    # init_params zero-initializes the output head (residual style), which
+    # makes the velocity field trivially integrable — rescale so the field
+    # is genuinely nonlinear without having to train in unit tests.
+    params = dict(params)
+    params["out_w"] = params["out_w"] * 3e3
+    params["out_b"] = params["out_b"] + 0.05
+    return cfg, params
+
+
+def test_model_shapes_and_determinism(tiny):
+    cfg, params = tiny
+    x = jnp.ones((5, cfg.data_dim))
+    lab = jnp.asarray([0, 1, 2, 3, 0], jnp.int32)
+    out1 = model.model_f(cfg, params, x, jnp.float32(0.3), lab, use_pallas=False)
+    out2 = model.model_f(cfg, params, x, jnp.float32(0.3), lab, use_pallas=False)
+    assert out1.shape == (5, cfg.data_dim)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_pallas_and_ref_paths_agree(tiny):
+    cfg, params = tiny
+    x = jax.random.normal(jax.random.PRNGKey(0), (6, cfg.data_dim))
+    lab = jnp.zeros(6, jnp.int32)
+    a = model.model_f(cfg, params, x, jnp.float32(0.5), lab, use_pallas=True)
+    b = model.model_f(cfg, params, x, jnp.float32(0.5), lab, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_guided_velocity_w0_equals_conditional(tiny):
+    cfg, params = tiny
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.data_dim))
+    lab = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    gw = model.guided_velocity(cfg, params, x, jnp.float32(0.4), lab, 0.0, use_pallas=False)
+    cv = model.velocity(cfg, params, x, jnp.float32(0.4), lab, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(cv), rtol=1e-5, atol=1e-6)
+
+
+def test_guided_velocity_interpolates(tiny):
+    cfg, params = tiny
+    x = jax.random.normal(jax.random.PRNGKey(2), (3, cfg.data_dim))
+    lab = jnp.asarray([1, 2, 3], jnp.int32)
+    null = jnp.full((3,), cfg.null_class, jnp.int32)
+    u_c = model.velocity(cfg, params, x, jnp.float32(0.6), lab, use_pallas=False)
+    u_n = model.velocity(cfg, params, x, jnp.float32(0.6), null, use_pallas=False)
+    w = 2.5
+    want = u_c + w * (u_c - u_n)
+    got = model.guided_velocity(cfg, params, x, jnp.float32(0.6), lab, w, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def _mini_pairs(cfg, params, n, seed, w=0.0):
+    def fnp(t, x, labels):
+        return np.asarray(
+            model.guided_velocity(cfg, params, jnp.asarray(x), jnp.float32(t),
+                                  jnp.asarray(labels), w, use_pallas=False)
+        )
+    return bns.make_pairs(fnp, cfg.data_dim, n, seed=seed, num_classes=cfg.num_classes)
+
+
+def test_bns_training_improves_over_init(tiny):
+    cfg, params = tiny
+    tr = _mini_pairs(cfg, params, 48, seed=0)
+    va = _mini_pairs(cfg, params, 48, seed=1)
+
+    def field(t, x, labels):
+        return model.guided_velocity(cfg, params, x, t, labels, 0.0, use_pallas=False)
+
+    # euler init leaves clear headroom even on this untrained tiny model
+    res = bns.train_bns(field, tr, va, nfe=6, init="euler", iters=150, val_every=30,
+                        log=lambda *a: None)
+    assert res.val_psnr > res.init_val_psnr + 0.5, (res.val_psnr, res.init_val_psnr)
+    # exported solver is valid and reproduces the val PSNR when run in numpy
+    solver = res.solver
+    assert (np.diff(solver.times) > 0).all()
+
+    def fnp(t, x):
+        return np.asarray(field(jnp.float32(t), jnp.asarray(x), jnp.asarray(va["labels"])))
+
+    out = solver.sample(fnp, va["x0"])
+    got = float(bns.psnr(jnp.asarray(out), jnp.asarray(va["x1"])))
+    assert got == pytest.approx(res.val_psnr, abs=0.6)
+
+
+def test_precondition_fold_identity(tiny):
+    cfg, params = tiny
+
+    def field(t, x, labels):
+        return model.guided_velocity(cfg, params, x, t, labels, 1.5, use_pallas=False)
+
+    for schedname in ("fm_ot", "cosine", "vp"):
+        pc = bns.Precondition(schedname, sigma0=4.0)
+        lab = jnp.asarray(np.arange(5) % cfg.num_classes, jnp.int32)
+        u_l = lambda t, x: field(t, x, lab)
+        sol_r = ns.euler_ns(ns.uniform_times(5))
+        s0, s1 = float(pc.s_of_r(0.0)), float(pc.s_of_r(1.0))
+        x0 = np.random.default_rng(3).standard_normal((5, cfg.data_dim)).astype(np.float32)
+        xa = bns.sample_ns_jax(
+            pc.transform(u_l),
+            jnp.asarray(sol_r.times, jnp.float32),
+            jnp.asarray(sol_r.a, jnp.float32),
+            jnp.asarray(sol_r.b, jnp.float32),
+            s0 * jnp.asarray(x0),
+        ) / s1
+        folded = bns.fold_transform(sol_r, *pc.node_values(sol_r.times))
+        xb = folded.sample(lambda t, x: np.asarray(u_l(jnp.float32(t), jnp.asarray(x))), x0)
+        rel = np.abs(np.asarray(xa) - xb).max() / max(1e-9, np.abs(xb).max())
+        assert rel < 1e-4, f"{schedname}: {rel}"
+
+
+def test_bst_training_exports_valid_ns(tiny):
+    cfg, params = tiny
+    tr = _mini_pairs(cfg, params, 40, seed=5)
+    va = _mini_pairs(cfg, params, 40, seed=6)
+
+    def field(t, x, labels):
+        return model.guided_velocity(cfg, params, x, t, labels, 0.0, use_pallas=False)
+
+    res = bns.train_bst(field, tr, va, nfe=6, iters=100, val_every=25, log=lambda *a: None)
+    res.solver.times  # exported NS form
+    assert (np.diff(res.solver.times) > 0).all()
+    assert res.val_psnr >= res.init_val_psnr - 0.2  # never worse than init
+
+
+def test_datasets_bounded_and_labeled():
+    rng = np.random.default_rng(0)
+    x, lab = data.make_images(rng, 64)
+    assert x.shape == (64, data.IMG_DIM) and np.abs(x).max() <= 1.0
+    assert lab.min() >= 0 and lab.max() < data.NUM_CLASSES
+    xa, la = data.make_audio(rng, 64)
+    assert xa.shape == (64, data.AUDIO_LEN) and np.abs(xa).max() <= 1.0
+
+
+def test_training_loss_decreases_quick():
+    cfg = model.ModelConfig("t2", data_dim=12, num_classes=4, hidden=32, depth=2, emb_dim=16)
+    # patch data gen to the tiny dim via a monkeypatched make: reuse audio?
+    # simplest: train on synthetic gaussians through the private loss path
+    params = model.init_params(cfg, seed=0)
+    import functools
+    from compile.train_model import _loss, adam_init, adam_update, clip_global_norm
+
+    rng = np.random.default_rng(0)
+    lg = jax.jit(jax.value_and_grad(functools.partial(_loss, cfg)))
+    opt = adam_init(params)
+    losses = []
+    for it in range(80):
+        x1 = rng.standard_normal((32, cfg.data_dim)).astype(np.float32) * 0.5
+        lab = rng.integers(0, 4, 32).astype(np.int32)
+        x0 = rng.standard_normal((32, cfg.data_dim)).astype(np.float32)
+        t = rng.random(32).astype(np.float32)
+        loss, g = lg(params, jnp.asarray(x1), jnp.asarray(lab), jnp.asarray(x0), jnp.asarray(t))
+        params, opt = adam_update(params, clip_global_norm(g), opt, 1e-3)
+        losses.append(float(loss))
+    # compare averaged windows — single batches are too noisy
+    assert np.mean(losses[-10:]) < np.mean(losses[:10])

@@ -1,0 +1,120 @@
+"""NS solver machinery: Prop 3.1 reduction, affine tracing (Thm 3.2),
+Algorithm 1, and the ST fold-out identity."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import ns, schedulers
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def toy_field(t, x):
+    return np.sin(3 * t) * x + 0.3 * np.cos(x)
+
+
+X0 = np.array([0.5, -1.2, 2.0])
+
+
+def test_euler_ns_equals_direct():
+    s = ns.euler_ns(ns.uniform_times(8))
+    x, ts = X0.copy(), np.linspace(0, 1, 9)
+    for i in range(8):
+        x = x + (ts[i + 1] - ts[i]) * toy_field(ts[i], x)
+    np.testing.assert_allclose(s.sample(toy_field, X0), x, rtol=1e-12)
+
+
+def test_midpoint_ns_equals_direct():
+    s = ns.midpoint_ns(8)
+    x, ts = X0.copy(), np.linspace(0, 1, 5)
+    for i in range(4):
+        h = ts[i + 1] - ts[i]
+        x = x + h * toy_field(ts[i] + h / 2, x + h / 2 * toy_field(ts[i], x))
+    np.testing.assert_allclose(s.sample(toy_field, X0), x, rtol=1e-10)
+
+
+def test_ab2_ns_equals_direct():
+    s = ns.ab2_ns(ns.uniform_times(6))
+    ts = np.linspace(0, 1, 7)
+    x = X0.copy()
+    prev = None
+    for i in range(6):
+        h = ts[i + 1] - ts[i]
+        u = toy_field(ts[i], x)
+        if prev is None:
+            x = x + h * u
+        else:
+            hp = ts[i] - ts[i - 1]
+            x = x + h * (1 + h / (2 * hp)) * u - h * h / (2 * hp) * prev
+        prev = u
+    np.testing.assert_allclose(s.sample(toy_field, X0), x, rtol=1e-10)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8))
+def test_prop31_reduction_random_rules(seed, n):
+    rng = np.random.default_rng(seed)
+    c_rows = [rng.normal(size=i + 1) * 0.5 for i in range(n)]
+    d_rows = [rng.normal(size=i + 1) * 0.3 for i in range(n)]
+    times = np.linspace(0, 1, n + 1)
+    X = [X0.copy()]
+    U = []
+    for i in range(n):
+        U.append(toy_field(times[i], X[i]))
+        X.append(
+            sum(c_rows[i][j] * X[j] for j in range(i + 1))
+            + sum(d_rows[i][j] * U[j] for j in range(i + 1))
+        )
+    a, b = ns.reduce_cd_to_ab(c_rows, d_rows)
+    solver = ns.NSSolver(times, a, b)
+    np.testing.assert_allclose(solver.sample(toy_field, X0), X[-1], rtol=1e-8, atol=1e-8)
+
+
+def test_ddim_ns_is_exact_for_gaussian_path():
+    """DDIM on a model whose eps-prediction is constant along the path is
+    exact in one step — the defining property of exponential Euler."""
+    sched = schedulers.VP
+    eps_const = np.array([0.3, -0.7])
+    x1 = np.array([0.5, 0.25])
+
+    def u(t, x):
+        import jax.numpy as jnp
+
+        beta, gamma = sched.uv_coeffs(jnp.float32(t), "eps")
+        return float(beta) * x + float(gamma) * eps_const
+
+    # true endpoint: x(t) = alpha_t x1 + sigma_t eps with x1 chosen to hit
+    # x(t0) at the start
+    t0 = 0.0
+    a0, s0 = float(sched.alpha(t0)), float(sched.sigma(t0))
+    x_start = a0 * x1 + s0 * eps_const
+    x_end = 1.0 * x1  # alpha(1) = 1, sigma(1) = 0
+    solver = ns.ddim_ns(sched, np.linspace(0, 1, 2))  # ONE step
+    got = solver.sample(u, x_start)
+    np.testing.assert_allclose(got, x_end, rtol=1e-4, atol=1e-4)
+
+
+def test_dpmpp_ns_matches_direct_formula():
+    sched = schedulers.FM_OT
+    times = np.linspace(0, 1, 9)
+    solver = ns.dpmpp_ns(sched, times, order=2)
+    assert solver.nfe == 8
+    assert (np.diff(solver.times) > 0).all()
+    out = solver.sample(toy_field, X0)
+    assert np.isfinite(out).all()
+
+
+def test_edm_times_monotone():
+    for sched in (schedulers.FM_OT, schedulers.VP):
+        t = ns.edm_times(12, sched)
+        assert t[0] == 0.0 and t[-1] == 1.0
+        assert (np.diff(t) >= 0).all()
+
+
+def test_num_params_formula():
+    # paper Table 3: 18 / 52 / 168 params at NFE 4 / 8 / 16 (their count
+    # pins one endpoint; ours pins both, hence -1)
+    assert ns.euler_ns(ns.uniform_times(4)).num_params() == 17
+    assert ns.euler_ns(ns.uniform_times(8)).num_params() == 51
+    assert ns.euler_ns(ns.uniform_times(16)).num_params() == 167

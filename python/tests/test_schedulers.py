@@ -1,0 +1,99 @@
+"""Scheduler identities (eq. 4, snr monotonicity/inversion) and the
+ST <-> scheduler-change correspondence (eq. 8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import schedulers
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+ALL = list(schedulers.SCHEDULERS.values())
+BOUNDED = [schedulers.FM_OT, schedulers.COSINE, schedulers.VP]
+
+
+@pytest.mark.parametrize("s", BOUNDED, ids=lambda s: s.name)
+def test_boundary_conditions(s):
+    # eq. 4: alpha_1 = 1, sigma_1 = 0, sigma_0 > 0, alpha_0 ~ 0
+    assert float(s.alpha(1.0)) == pytest.approx(1.0, abs=1e-5)
+    assert float(s.sigma(1.0)) == pytest.approx(0.0, abs=1e-3)
+    assert float(s.sigma(0.0)) > 0.5
+    assert float(s.alpha(0.0)) < 0.01
+
+
+@pytest.mark.parametrize("s", ALL, ids=lambda s: s.name)
+def test_snr_strictly_increasing(s):
+    t = jnp.linspace(0.01, 0.99, 101)
+    snr = np.asarray(s.snr(t))
+    assert (np.diff(snr) > 0).all()
+
+
+@given(t=st.floats(0.02, 0.97))
+@pytest.mark.parametrize("s", ALL, ids=lambda s: s.name)
+def test_snr_inv_roundtrip(s, t):
+    back = float(s.snr_inv(s.snr(jnp.float32(t))))
+    assert back == pytest.approx(t, abs=5e-5)
+
+
+@pytest.mark.parametrize("s", ALL, ids=lambda s: s.name)
+def test_derivatives_match_autodiff_fd(s):
+    for t in np.linspace(0.05, 0.95, 10):
+        h = 1e-4
+        fd_a = (float(s.alpha(t + h)) - float(s.alpha(t - h))) / (2 * h)
+        assert float(s.dalpha(t)) == pytest.approx(fd_a, rel=1e-2, abs=1e-3)
+        fd_s = (float(s.sigma(t + h)) - float(s.sigma(t - h))) / (2 * h)
+        assert float(s.dsigma(t)) == pytest.approx(fd_s, rel=1e-2, abs=1e-3)
+
+
+@pytest.mark.parametrize("s", BOUNDED, ids=lambda s: s.name)
+def test_table1_consistency(s):
+    """With the *true* f (noise / data), every parametrization gives the
+    same velocity as the path derivative: u = dalpha x1 + dsigma x0."""
+    x1, x0 = 0.7, -0.3
+    for t in np.linspace(0.05, 0.9, 8):
+        t = jnp.float32(t)
+        x = float(s.alpha(t)) * x1 + float(s.sigma(t)) * x0
+        truth = float(s.dalpha(t)) * x1 + float(s.dsigma(t)) * x0
+        for param, f in [("eps", x0), ("x", x1)]:
+            beta, gamma = s.uv_coeffs(t, param)
+            assert float(beta) * x + float(gamma) * f == pytest.approx(truth, rel=1e-3, abs=1e-4)
+
+
+def test_st_scheduler_change_roundtrip():
+    """eq. 8: converting a scheduler change to (s_r, t_r) and back must
+    reproduce the new scheduler: alpha-bar = s alpha(t), sigma-bar = s sigma(t)."""
+    old = schedulers.FM_OT
+    sigma0 = 3.0
+    new_alpha = lambda r: old.alpha(r)
+    new_sigma = lambda r: sigma0 * old.sigma(r)
+    st_ = schedulers.st_from_scheduler_change(old, new_alpha, new_sigma)
+    for r in np.linspace(0.05, 0.95, 9):
+        r = jnp.float32(r)
+        s_r, t_r = float(st_.s(r)), float(st_.t(r))
+        assert s_r * float(old.alpha(t_r)) == pytest.approx(float(new_alpha(r)), rel=1e-4, abs=1e-5)
+        assert s_r * float(old.sigma(t_r)) == pytest.approx(float(new_sigma(r)), rel=1e-4, abs=1e-5)
+
+
+def test_st_transform_recovers_sample():
+    """eq. 6: x(1) = s_1^{-1} x̄(1) — integrate a toy field both ways."""
+    from compile import ode
+
+    old = schedulers.FM_OT
+
+    def u(t, x):
+        return np.sin(3 * t) * x + 0.2
+
+    stf = schedulers.precondition(old, 2.0)
+
+    def u_bar(r, x):
+        return np.asarray(stf.transform_u(lambda tt, xx: jnp.asarray(u(float(tt), np.asarray(xx))))(jnp.float32(r), jnp.asarray(x)))
+
+    x0 = np.array([0.5, -1.0], np.float32)
+    x1, _ = ode.rk45(u, x0.copy())
+    s0, s1 = float(stf.s(0.0)), float(stf.s(1.0))
+    xbar1, _ = ode.rk45(u_bar, s0 * x0)
+    np.testing.assert_allclose(xbar1 / s1, x1, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,63 @@
+//! Figure 11: ablation — Non-Stationary vs Scale-Time family, both
+//! optimized with the same Algorithm 2 budget (python/compile/bns.py
+//! trains both). PSNR vs NFE on img_fm_ot; the gap is the expressiveness
+//! margin Theorem 3.2 predicts (ST ⊊ NS).
+//!
+//! Also reports each family's parameter count at every NFE, making the
+//! capacity/accuracy trade explicit.
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::solver::Solver;
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::batch_psnr;
+
+const MODEL: &str = "img_fm_ot";
+const EVAL_N: usize = 48;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let info = b.store.model(MODEL)?.clone();
+    let (x0, labels) = b.eval_set(&info, EVAL_N, 2024);
+    let field = b.field(&info, labels, 0.0)?;
+    let (gt, _) = b.ground_truth(&field, &x0)?;
+
+    let mut table = Table::new(&["NFE", "BNS PSNR", "BST PSNR", "gap(dB)", "BNS params", "BST params"]);
+    let mut results = Vec::new();
+
+    let bst_arts = b.store.solvers_for(MODEL, 0.0, "bst");
+    for art in &bst_arts {
+        let nfe = art.solver.nfe();
+        let bns = match b
+            .store
+            .solvers_for(MODEL, 0.0, "bns")
+            .into_iter()
+            .find(|s| s.solver.nfe() == nfe)
+        {
+            Some(s) => s,
+            None => continue,
+        };
+        let p_bns = batch_psnr(&bns.solver.sample(&field, &x0)?, &gt, info.dim);
+        let p_bst = batch_psnr(&art.solver.sample(&field, &x0)?, &gt, info.dim);
+        // BST parameter count: per-node (t, ṫ, s, ṡ) = 4(n+1) minus pins
+        let bst_params = 4 * (nfe + 1) - 3;
+        table.row(vec![
+            nfe.to_string(),
+            format!("{p_bns:.2}"),
+            format!("{p_bst:.2}"),
+            format!("{:+.2}", p_bns - p_bst),
+            bns.solver.num_params().to_string(),
+            bst_params.to_string(),
+        ]);
+        results.push(Json::obj(vec![
+            ("nfe", Json::Num(nfe as f64)),
+            ("bns_psnr", Json::Num(p_bns)),
+            ("bst_psnr", Json::Num(p_bst)),
+        ]));
+    }
+    println!("=== Fig 11: BNS vs BST (both trained with Algorithm 2) ===");
+    table.print();
+
+    let path = write_results("fig11_ablation", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

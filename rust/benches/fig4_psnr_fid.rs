@@ -1,0 +1,111 @@
+//! Figure 4 + Table 4: PSNR vs NFE and FID vs NFE on class-conditional
+//! image models, BNS vs BST / DPM++ / DDIM / RK-Midpoint / RK-Euler.
+//!
+//! Per model (ImageNet-64 stand-ins: img_fm_ot / img_fmv_cs / img_eps_vp
+//! and the ImageNet-128 stand-in img_fm_ot_big), for every NFE with a
+//! distilled BNS artifact:
+//!   * PSNR of each solver's output vs the RK45 ground truth on the same
+//!     noise (paper metric, eq. 13's evaluation form), and
+//!   * FD-synth of each solver's sample distribution vs the dataset
+//!     reference, plus the GT sampler's FD ("GT-FID" line).
+//!
+//! Expected shape (paper §5.1): PSNR order BNS > BST > DPM++ > Midpoint/
+//! Euler; BNS FD approaches GT-FD by NFE ~16.
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::coordinator::router::distilled;
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::batch_psnr;
+
+const PSNR_EVAL_N: usize = 48;
+const FD_EVAL_N: usize = 512;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let models: Vec<(&str, f64)> = vec![
+        ("img_fm_ot", 0.0),
+        ("img_fmv_cs", 0.0),
+        ("img_eps_vp", 0.0),
+        ("img_fm_ot_big", 0.5),
+    ];
+    let mut results = Vec::new();
+
+    for (mname, w) in models {
+        let info = b.store.model(mname)?.clone();
+        let nfes: Vec<usize> = b
+            .store
+            .solvers_for(mname, w, "bns")
+            .iter()
+            .map(|s| s.solver.nfe())
+            .collect();
+        if nfes.is_empty() {
+            eprintln!("[fig4] no BNS artifacts for {mname} w={w}; skipping");
+            continue;
+        }
+
+        // PSNR eval set + ground truth (fixed noise, same for every solver)
+        let (x0, labels) = b.eval_set(&info, PSNR_EVAL_N, 1234);
+        let field = b.field(&info, labels.clone(), w as f32)?;
+        let (gt, gt_nfe) = b.ground_truth(&field, &x0)?;
+        // GT sampler distribution + its FD (the "GT-FID" row)
+        let is_image = info.data == "images";
+        let (gt_fd, gt_dist) = if is_image {
+            let (dist, _) = b.generate_gt(&info, w as f32, FD_EVAL_N, 99)?;
+            (b.store.fd.fd_to_reference(&dist), Some(dist))
+        } else {
+            (f64::NAN, None)
+        };
+        println!("\n=== {mname} (w={w}) — GT rk45 nfe={gt_nfe}, GT-FD={gt_fd:.3} ===");
+
+        let mut table = Table::new(&["solver", "NFE", "PSNR(dB)", "FD-synth"]);
+        for &nfe in &nfes {
+            let mut solvers: Vec<(String, Box<dyn Solver>)> = Vec::new();
+            solvers.push(("bns".into(), Box::new(distilled(&b.store, mname, w, "bns", nfe)?)));
+            if let Ok(s) = distilled(&b.store, mname, w, "bst", nfe) {
+                solvers.push(("bst".into(), Box::new(s)));
+            }
+            solvers.push(("dpmpp2m".into(), baseline("dpmpp2m", nfe, info.scheduler)?));
+            if info.scheduler.alpha(0.0) > 1e-6 {
+                solvers.push(("ddim".into(), baseline("ddim", nfe, info.scheduler)?));
+            }
+            if nfe % 2 == 0 {
+                solvers.push(("midpoint".into(), baseline("midpoint", nfe, info.scheduler)?));
+            }
+            solvers.push(("euler".into(), baseline("euler", nfe, info.scheduler)?));
+
+            for (label, solver) in &solvers {
+                let out = solver.sample(&field, &x0)?;
+                let psnr = batch_psnr(&out, &gt, info.dim);
+                let fd = if is_image {
+                    let dist = b.generate(&info, solver.as_ref(), w as f32, FD_EVAL_N, 99)?;
+                    b.store.fd.fd_to_reference(&dist)
+                } else {
+                    f64::NAN
+                };
+                table.row(vec![
+                    label.clone(),
+                    nfe.to_string(),
+                    format!("{psnr:.2}"),
+                    format!("{fd:.3}"),
+                ]);
+                results.push(Json::obj(vec![
+                    ("model", Json::Str(mname.into())),
+                    ("guidance", Json::Num(w)),
+                    ("solver", Json::Str(label.clone())),
+                    ("nfe", Json::Num(nfe as f64)),
+                    ("psnr", Json::Num(psnr)),
+                    ("fd", Json::Num(fd)),
+                    ("gt_fd", Json::Num(gt_fd)),
+                    ("gt_nfe", Json::Num(gt_nfe as f64)),
+                ]));
+            }
+        }
+        table.print();
+        drop(gt_dist);
+    }
+
+    let path = write_results("fig4_psnr_fid", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

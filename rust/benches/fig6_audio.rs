@@ -1,0 +1,117 @@
+//! Figures 6 + 12 and Tables 6/7: audio generation.
+//!
+//! SNR (dB) of each solver's output vs the RK45 ground truth, per audio
+//! "dataset" (the 4 synthetic signal families standing in for the
+//! paper's 8 speech corpora — DESIGN.md §3), at NFE in {8, 12, 16, 20}.
+//! Expected shape: BNS consistently above BST above Midpoint/Euler by
+//! ~1-3 dB.
+//!
+//! Tables 6/7 substitutes: a *content-error* proxy (1 - normalized
+//! cross-correlation with GT) and a *style-similarity* proxy (cosine of
+//! log-band spectral envelopes). The paper's point is that these vary
+//! little across solvers; we assert/report the same invariance.
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::coordinator::router::distilled;
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::fft::{cosine, spectral_envelope};
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::snr_db;
+
+const MODEL: &str = "audio_fm_ot";
+const PER_FAMILY_N: usize = 24;
+const FAMILIES: [&str; 4] = ["harmonic", "am", "chirp", "noiseband"];
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let info = b.store.model(MODEL)?.clone();
+    let nfes: Vec<usize> =
+        b.store.solvers_for(MODEL, 0.0, "bns").iter().map(|s| s.solver.nfe()).collect();
+    anyhow::ensure!(!nfes.is_empty(), "no BNS artifacts for {MODEL}");
+
+    let mut results = Vec::new();
+    let mut snr_table = Table::new(&["solver", "NFE", "harmonic", "am", "chirp", "noiseband"]);
+    let mut invariance = Table::new(&["solver", "NFE", "content-err", "style-sim"]);
+
+    // per-family fixed noise + GT
+    let mut family_sets = Vec::new();
+    for (fam_id, _fam) in FAMILIES.iter().enumerate() {
+        let mut rng = bns_serve::util::rng::Pcg32::seeded(9000 + fam_id as u64);
+        let x0 = rng.normal_vec(PER_FAMILY_N * info.dim);
+        let labels = vec![fam_id as i32; PER_FAMILY_N];
+        let field = b.field(&info, labels.clone(), 0.0)?;
+        let (gt, _) = b.ground_truth(&field, &x0)?;
+        family_sets.push((x0, labels, gt));
+    }
+
+    for &nfe in &nfes {
+        let mut solvers: Vec<(String, Box<dyn Solver>)> = Vec::new();
+        solvers.push(("bns".into(), Box::new(distilled(&b.store, MODEL, 0.0, "bns", nfe)?)));
+        if let Ok(s) = distilled(&b.store, MODEL, 0.0, "bst", nfe) {
+            solvers.push(("bst".into(), Box::new(s)));
+        }
+        if nfe % 2 == 0 {
+            solvers.push(("midpoint".into(), baseline("midpoint", nfe, info.scheduler)?));
+        }
+        solvers.push(("euler".into(), baseline("euler", nfe, info.scheduler)?));
+
+        for (label, solver) in &solvers {
+            let mut snrs = Vec::new();
+            let mut content_err_acc = 0.0;
+            let mut style_sim_acc = 0.0;
+            let mut count = 0usize;
+            for (x0, labels, gt) in &family_sets {
+                let field = b.field(&info, labels.clone(), 0.0)?;
+                let out = solver.sample(&field, x0)?;
+                // per-sample SNR averaged over the family
+                let mut s = 0.0;
+                for i in 0..PER_FAMILY_N {
+                    let (p, r) = (
+                        &out[i * info.dim..(i + 1) * info.dim],
+                        &gt[i * info.dim..(i + 1) * info.dim],
+                    );
+                    s += snr_db(p, r);
+                    // Tables 6/7 proxies
+                    let dot: f64 = p.iter().zip(r).map(|(a, b)| (*a as f64) * (*b as f64)).sum();
+                    let np: f64 = p.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+                    let nr: f64 = r.iter().map(|a| (*a as f64).powi(2)).sum::<f64>().sqrt();
+                    content_err_acc += 1.0 - (dot / (np * nr).max(1e-12)).clamp(-1.0, 1.0);
+                    style_sim_acc +=
+                        cosine(&spectral_envelope(p, 8), &spectral_envelope(r, 8));
+                    count += 1;
+                }
+                snrs.push(s / PER_FAMILY_N as f64);
+            }
+            snr_table.row(vec![
+                label.clone(),
+                nfe.to_string(),
+                format!("{:.2}", snrs[0]),
+                format!("{:.2}", snrs[1]),
+                format!("{:.2}", snrs[2]),
+                format!("{:.2}", snrs[3]),
+            ]);
+            invariance.row(vec![
+                label.clone(),
+                nfe.to_string(),
+                format!("{:.4}", content_err_acc / count as f64),
+                format!("{:.4}", style_sim_acc / count as f64),
+            ]);
+            results.push(Json::obj(vec![
+                ("solver", Json::Str(label.clone())),
+                ("nfe", Json::Num(nfe as f64)),
+                ("snr_per_family", Json::arr_f64(&snrs)),
+                ("content_err", Json::Num(content_err_acc / count as f64)),
+                ("style_sim", Json::Num(style_sim_acc / count as f64)),
+            ]));
+        }
+    }
+
+    println!("=== Fig 6/12: SNR (dB) vs RK45 GT per audio family ===");
+    snr_table.print();
+    println!("\n=== Tables 6/7 proxies (should vary little across solvers) ===");
+    invariance.print();
+
+    let path = write_results("fig6_audio", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

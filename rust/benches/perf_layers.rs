@@ -1,0 +1,105 @@
+//! §Perf microbenches for L1/L2: per-eval latency of the Pallas-kernel
+//! artifact vs the XLA-fused (pure-jnp) artifact of the same model, per
+//! batch bucket, plus the NS-combine (Algorithm 1 linear algebra) and
+//! RK45-GT cost on the rust side.
+//!
+//! Note: interpret=True Pallas timings are CPU-emulation numbers, NOT a
+//! TPU proxy — the point of this bench is to quantify the CPU-serving
+//! decision documented in EXPERIMENTS.md §Perf (which artifact the
+//! request path should load on this substrate).
+
+use std::time::Instant;
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::solver::field::Field;
+use bns_serve::util::json::Json;
+use bns_serve::util::rng::Pcg32;
+
+fn time_eval(field: &dyn Field, rows: usize, dim: usize, iters: usize) -> anyhow::Result<f64> {
+    let mut rng = Pcg32::seeded(5);
+    let x = rng.normal_vec(rows * dim);
+    field.eval(0.5, &x)?; // warmup / compile
+    let t0 = Instant::now();
+    for i in 0..iters {
+        field.eval(0.1 + 0.8 * (i as f64 / iters as f64), &x)?;
+    }
+    Ok(t0.elapsed().as_secs_f64() / iters as f64)
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let mut table = Table::new(&["artifact", "batch", "eval(ms)", "per-row(us)"]);
+    let mut results = Vec::new();
+
+    for (name, label) in [("img_fm_ot", "pallas-kernels"), ("img_fm_ot_fused", "xla-fused")] {
+        if !b.store.models.contains_key(name) {
+            eprintln!("[perf] {name} missing; skip");
+            continue;
+        }
+        let info = b.store.model(name)?.clone();
+        for bucket in info.buckets.iter().map(|bk| bk.batch) {
+            let labels = vec![0i32; bucket];
+            let field = b.field(&info, labels, 0.0)?;
+            let dt = time_eval(&field, bucket, info.dim, 30)?;
+            table.row(vec![
+                label.into(),
+                bucket.to_string(),
+                format!("{:.3}", dt * 1e3),
+                format!("{:.1}", dt * 1e6 / bucket as f64),
+            ]);
+            results.push(Json::obj(vec![
+                ("artifact", Json::Str(label.into())),
+                ("batch", Json::Num(bucket as f64)),
+                ("eval_ms", Json::Num(dt * 1e3)),
+            ]));
+        }
+    }
+    println!("=== L1/L2: model-eval latency by artifact variant ===");
+    table.print();
+
+    // NS combine cost (pure rust, the L3-side ns_update analogue):
+    // step i touches i+2 row-major buffers; measure the full Alg. 1
+    // overhead minus field time using a free (zero-cost) field.
+    struct ZeroField(usize);
+    impl Field for ZeroField {
+        fn dim(&self) -> usize {
+            self.0
+        }
+        fn eval(&self, _t: f64, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+            Ok(x.to_vec())
+        }
+    }
+    let dim = 192;
+    let mut combine = Table::new(&["NFE", "batch", "combine-only(us)"]);
+    for nfe in [8usize, 16, 20] {
+        for batch in [8usize, 64] {
+            let solver = bns_serve::solver::taxonomy::midpoint_ns(nfe.max(2) / 2 * 2);
+            let f = ZeroField(dim);
+            let mut rng = Pcg32::seeded(7);
+            let x0 = rng.normal_vec(batch * dim);
+            let t0 = Instant::now();
+            let iters = 50;
+            for _ in 0..iters {
+                solver.sample(&f, &x0)?;
+            }
+            let dt = t0.elapsed().as_secs_f64() / iters as f64;
+            combine.row(vec![
+                nfe.to_string(),
+                batch.to_string(),
+                format!("{:.1}", dt * 1e6),
+            ]);
+            results.push(Json::obj(vec![
+                ("artifact", Json::Str("ns-combine".into())),
+                ("nfe", Json::Num(nfe as f64)),
+                ("batch", Json::Num(batch as f64)),
+                ("us", Json::Num(dt * 1e6)),
+            ]));
+        }
+    }
+    println!("\n=== L3: Algorithm 1 combine overhead (zero-cost field) ===");
+    combine.print();
+
+    let path = write_results("perf_layers", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

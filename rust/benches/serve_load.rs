@@ -1,0 +1,108 @@
+//! L3 coordinator load bench (EXPERIMENTS.md §Perf): throughput and
+//! latency of the serving engine under concurrent request load, with the
+//! step-aligned batcher ON vs OFF (max_wait = 0 disables coalescing).
+//!
+//! Reports: requests/s, samples/s, model evals, mean rows per model-eval
+//! batch (the continuous-batching win), queue/exec/e2e latency
+//! percentiles.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::coordinator::batcher::BatcherConfig;
+use bns_serve::util::json::Json;
+
+const MODEL: &str = "img_fm_ot";
+const CLIENTS: usize = 8;
+const REQS_PER_CLIENT: usize = 12;
+const SAMPLES_PER_REQ: usize = 4;
+
+fn run_load(b: &Bench, max_wait_ms: u64, label: &str) -> anyhow::Result<Json> {
+    let engine = Arc::new(Engine::start(
+        b.store.clone(),
+        b.rt.clone(),
+        EngineConfig {
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_millis(max_wait_ms),
+                max_queued_rows: 4096,
+            },
+            workers: 2,
+        },
+    ));
+    // warmup: compile executables before timing
+    engine.sample_blocking(
+        MODEL,
+        vec![0; SAMPLES_PER_REQ],
+        0.0,
+        SolverSpec::Auto { nfe: 8 },
+        1,
+    )?;
+
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..CLIENTS {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
+            for r in 0..REQS_PER_CLIENT {
+                let labels: Vec<i32> = (0..SAMPLES_PER_REQ).map(|i| ((c + i + r) % 10) as i32).collect();
+                engine.sample_blocking(
+                    MODEL,
+                    labels,
+                    0.0,
+                    SolverSpec::Auto { nfe: 8 },
+                    (c * 1000 + r) as u64,
+                )?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().unwrap()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    let m = engine.metrics.snapshot_json();
+    let total_reqs = (CLIENTS * REQS_PER_CLIENT) as f64;
+    let out = Json::obj(vec![
+        ("config", Json::Str(label.to_string())),
+        ("wall_s", Json::Num(wall)),
+        ("req_per_s", Json::Num(total_reqs / wall)),
+        ("samples_per_s", Json::Num(total_reqs * SAMPLES_PER_REQ as f64 / wall)),
+        ("mean_batch_rows", m.get("mean_batch_rows").clone()),
+        ("evals", m.get("evals").clone()),
+        ("e2e_p50_us", m.get("e2e").get("p50_us").clone()),
+        ("e2e_p95_us", m.get("e2e").get("p95_us").clone()),
+        ("queue_p95_us", m.get("queue").get("p95_us").clone()),
+    ]);
+    Arc::try_unwrap(engine).ok().map(|e| e.shutdown());
+    Ok(out)
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let mut table = Table::new(&[
+        "config", "req/s", "samples/s", "rows/eval-batch", "evals", "p50 e2e(ms)", "p95 e2e(ms)",
+    ]);
+    let mut results = Vec::new();
+    for (wait, label) in [(0u64, "batcher-off(wait=0)"), (4, "batcher-on(wait=4ms)"), (12, "batcher-on(wait=12ms)")] {
+        let r = run_load(&b, wait, label)?;
+        table.row(vec![
+            label.into(),
+            format!("{:.1}", r.get("req_per_s").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.get("samples_per_s").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.get("mean_batch_rows").as_f64().unwrap_or(0.0)),
+            format!("{:.0}", r.get("evals").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.get("e2e_p50_us").as_f64().unwrap_or(0.0) / 1000.0),
+            format!("{:.1}", r.get("e2e_p95_us").as_f64().unwrap_or(0.0) / 1000.0),
+        ]);
+        results.push(r);
+    }
+    println!("=== L3 serving load (8 clients x 12 reqs x 4 samples, auto/BNS nfe=8) ===");
+    table.print();
+    let path = write_results("serve_load", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

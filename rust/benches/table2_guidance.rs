@@ -1,0 +1,75 @@
+//! Tables 2 + 5: Text-to-Image regime — high classifier-free guidance
+//! (w = 2.0 and w = 6.5) at NFE 12/16/20.
+//!
+//! Compares, per the paper: GT (RK45/DOPRI5), RK-Euler, RK-Midpoint, the
+//! *initial solver* (Euler + sigma0 preconditioning, Table 5's ablation
+//! row) and BNS. Metrics: PSNR vs GT on shared noise (the paper's
+//! headline column — BNS gains >= 10 dB) and FD-synth (zero-shot-FID
+//! stand-in). The paper's Pick/Clip scores have no synthetic analogue;
+//! DESIGN.md §3 documents the substitution.
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::coordinator::router::distilled;
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::batch_psnr;
+
+const MODEL: &str = "img_fm_ot";
+const PSNR_EVAL_N: usize = 48;
+const FD_EVAL_N: usize = 384;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let info = b.store.model(MODEL)?.clone();
+    let mut results = Vec::new();
+
+    for &w in &[2.0f64, 6.5] {
+        let nfes: Vec<usize> =
+            b.store.solvers_for(MODEL, w, "bns").iter().map(|s| s.solver.nfe()).collect();
+        if nfes.is_empty() {
+            eprintln!("[table2] no BNS artifacts for w={w}; skipping");
+            continue;
+        }
+        let (x0, labels) = b.eval_set(&info, PSNR_EVAL_N, 777);
+        let field = b.field(&info, labels.clone(), w as f32)?;
+        let (gt, gt_nfe) = b.ground_truth(&field, &x0)?;
+        let (gt_dist, _) = b.generate_gt(&info, w as f32, FD_EVAL_N, 31)?;
+        let gt_fd = b.store.fd.fd_to_reference(&gt_dist);
+        println!("\n=== w = {w} — GT (rk45) NFE={gt_nfe}, FD={gt_fd:.3} ===");
+
+        let mut table = Table::new(&["solver", "NFE", "PSNR(dB)", "FD-synth"]);
+        table.row(vec!["GT (rk45)".into(), gt_nfe.to_string(), "inf".into(), format!("{gt_fd:.3}")]);
+
+        for &nfe in &nfes {
+            let mut rows: Vec<(String, Box<dyn Solver>)> = vec![
+                ("rk-euler".into(), baseline("euler", nfe, info.scheduler)?),
+                ("rk-midpoint".into(), baseline("midpoint", nfe, info.scheduler)?),
+            ];
+            if let Ok(init) = distilled(&b.store, MODEL, w, "init", nfe) {
+                rows.push(("init (euler+precond)".into(), Box::new(init)));
+            }
+            rows.push(("bns".into(), Box::new(distilled(&b.store, MODEL, w, "bns", nfe)?)));
+            for (label, solver) in rows {
+                let out = solver.sample(&field, &x0)?;
+                let psnr = batch_psnr(&out, &gt, info.dim);
+                let dist = b.generate(&info, solver.as_ref(), w as f32, FD_EVAL_N, 31)?;
+                let fd = b.store.fd.fd_to_reference(&dist);
+                table.row(vec![label.clone(), nfe.to_string(), format!("{psnr:.2}"), format!("{fd:.3}")]);
+                results.push(Json::obj(vec![
+                    ("guidance", Json::Num(w)),
+                    ("solver", Json::Str(label)),
+                    ("nfe", Json::Num(nfe as f64)),
+                    ("psnr", Json::Num(psnr)),
+                    ("fd", Json::Num(fd)),
+                    ("gt_fd", Json::Num(gt_fd)),
+                    ("gt_nfe", Json::Num(gt_nfe as f64)),
+                ]));
+            }
+        }
+        table.print();
+    }
+
+    let path = write_results("table2_guidance", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! Table 3: BNS solvers vs Progressive Distillation (unguided, w = 0).
+//!
+//! Columns, as in the paper: FID (our FD-synth), GT-FID, training
+//! Forwards (App. D.4 accounting), Training-set size, and trained
+//! Parameter count. PD students were distilled at build time
+//! (python/compile/pd.py) and sampled here with Euler at their phase
+//! step count; BNS rows reuse the distilled artifacts.
+//!
+//! Expected shape: PD wins at NFE 4; BNS reaches parity by NFE 8-16
+//! using orders of magnitude fewer forwards and ~10^6x fewer parameters.
+
+use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::coordinator::router::distilled;
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::json::Json;
+
+const MODEL: &str = "img_fm_ot";
+const FD_EVAL_N: usize = 512;
+const PD_PARAMS: u64 = 767_232; // student == full model (train_meta)
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::init()?;
+    let info = b.store.model(MODEL)?.clone();
+
+    // GT-FD of the teacher sampled with RK45
+    let (gt_dist, gt_nfe) = b.generate_gt(&info, 0.0, FD_EVAL_N, 555)?;
+    let gt_fd = b.store.fd.fd_to_reference(&gt_dist);
+    println!("teacher GT (rk45, mean NFE {gt_nfe:.0}) FD = {gt_fd:.3}\n");
+
+    let mut table =
+        Table::new(&["method", "NFE", "FID(FD)", "GT-FID", "Forwards", "TrainSet", "Params"]);
+    let mut results = Vec::new();
+
+    // PD metadata lives in the manifest under models.pd_nfeK.pd
+    let manifest_text =
+        std::fs::read_to_string(b.store.root.join("manifest.json"))?;
+    let manifest = bns_serve::util::json::Json::parse(&manifest_text)
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    for nfe in [4usize, 8, 16] {
+        // --- PD row: student model sampled with Euler at its step count
+        let pd_name = format!("pd_nfe{nfe}");
+        if b.store.models.contains_key(&pd_name) {
+            let pd_info = b.store.model(&pd_name)?.clone();
+            let euler = baseline("euler", nfe, pd_info.scheduler)?;
+            let dist = b.generate(&pd_info, euler.as_ref(), 0.0, FD_EVAL_N, 555)?;
+            let fd = b.store.fd.fd_to_reference(&dist);
+            let pdj = manifest.get("models").get(&pd_name).get("pd");
+            let forwards = pdj.get("forwards").as_f64().unwrap_or(f64::NAN);
+            let updates = pdj.get("updates").as_f64().unwrap_or(f64::NAN);
+            table.row(vec![
+                "PD".into(),
+                nfe.to_string(),
+                format!("{fd:.3}"),
+                format!("{gt_fd:.3}"),
+                format!("{:.2}m", forwards / 1e6),
+                format!("{:.0} (stream)", updates * 64.0),
+                format!("{}", PD_PARAMS),
+            ]);
+            results.push(Json::obj(vec![
+                ("method", Json::Str("pd".into())),
+                ("nfe", Json::Num(nfe as f64)),
+                ("fd", Json::Num(fd)),
+                ("forwards", Json::Num(forwards)),
+                ("params", Json::Num(PD_PARAMS as f64)),
+            ]));
+        }
+
+        // --- BNS row
+        if let Ok(bns) = distilled(&b.store, MODEL, 0.0, "bns", nfe) {
+            let art = b
+                .store
+                .solvers_for(MODEL, 0.0, "bns")
+                .into_iter()
+                .find(|s| s.solver.nfe() == nfe)
+                .unwrap();
+            let dist = b.generate(&info, &bns as &dyn Solver, 0.0, FD_EVAL_N, 555)?;
+            let fd = b.store.fd.fd_to_reference(&dist);
+            // forwards: Alg.2 training + GT pair generation (App. D.4)
+            let pair_forwards = art.meta.gt_nfe * 520;
+            let total_forwards = art.meta.forwards + pair_forwards;
+            table.row(vec![
+                "BNS".into(),
+                nfe.to_string(),
+                format!("{fd:.3}"),
+                format!("{gt_fd:.3}"),
+                format!("{:.2}m", total_forwards as f64 / 1e6),
+                "520".into(),
+                format!("{}", bns.num_params()),
+            ]);
+            results.push(Json::obj(vec![
+                ("method", Json::Str("bns".into())),
+                ("nfe", Json::Num(nfe as f64)),
+                ("fd", Json::Num(fd)),
+                ("forwards", Json::Num(total_forwards as f64)),
+                ("params", Json::Num(bns.num_params() as f64)),
+            ]));
+        }
+    }
+    table.print();
+
+    let path = write_results("table3_distill", &Json::Arr(results))?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,198 @@
+//! Shared harness for benches and examples: artifact loading, evaluation
+//! sets, ground-truth generation, metric sweeps, and a plain-text table
+//! printer (offline substrate for criterion's reporting).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{ArtifactStore, ModelField, ModelInfo, Runtime};
+use crate::solver::field::{CountingField, Field};
+use crate::solver::rk45::{rk45, Rk45Opts};
+use crate::solver::Solver;
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::stats::batch_psnr;
+
+/// Everything a bench needs in one place.
+pub struct Bench {
+    pub store: Arc<ArtifactStore>,
+    pub rt: Arc<Runtime>,
+}
+
+impl Bench {
+    pub fn init() -> Result<Bench> {
+        let dir = crate::default_artifacts_dir();
+        let store = Arc::new(ArtifactStore::load(&dir).with_context(|| {
+            format!(
+                "loading artifacts from {} — run `make artifacts` first",
+                dir.display()
+            )
+        })?);
+        let rt = Arc::new(Runtime::cpu()?);
+        Ok(Bench { store, rt })
+    }
+
+    /// Deterministic eval set: n noise rows + labels for `model`.
+    pub fn eval_set(&self, info: &ModelInfo, n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Pcg32::seeded(seed);
+        let x0 = rng.normal_vec(n * info.dim);
+        let labels: Vec<i32> = (0..n).map(|_| rng.below(info.num_classes) as i32).collect();
+        (x0, labels)
+    }
+
+    pub fn field(&self, info: &ModelInfo, labels: Vec<i32>, w: f32) -> Result<ModelField> {
+        ModelField::new(&self.rt, info, labels, w)
+    }
+
+    /// RK45 ground truth; returns (x1, nfe).
+    pub fn ground_truth(&self, field: &dyn Field, x0: &[f32]) -> Result<(Vec<f32>, usize)> {
+        rk45(field, x0, &Rk45Opts::default())
+    }
+
+    /// PSNR of `solver` against a precomputed GT, on the same x0.
+    pub fn solver_psnr(
+        &self,
+        solver: &dyn Solver,
+        field: &dyn Field,
+        x0: &[f32],
+        gt: &[f32],
+        dim: usize,
+    ) -> Result<f64> {
+        let out = solver.sample(field, x0)?;
+        Ok(batch_psnr(&out, gt, dim))
+    }
+
+    /// Generate `n` samples with `solver` (chunked over the largest
+    /// bucket) and return them row-major — for distribution metrics.
+    pub fn generate(
+        &self,
+        info: &ModelInfo,
+        solver: &dyn Solver,
+        w: f32,
+        n: usize,
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        let mut out = Vec::with_capacity(n * info.dim);
+        let mut rng = Pcg32::seeded(seed);
+        let chunk = 64;
+        let mut done = 0;
+        while done < n {
+            let take = chunk.min(n - done);
+            let x0 = rng.normal_vec(take * info.dim);
+            let labels: Vec<i32> =
+                (0..take).map(|_| rng.below(info.num_classes) as i32).collect();
+            let field = self.field(info, labels, w)?;
+            out.extend(solver.sample(&field, &x0)?);
+            done += take;
+        }
+        Ok(out)
+    }
+
+    /// Same but with RK45 (for GT-FD columns); returns (samples, mean nfe).
+    pub fn generate_gt(
+        &self,
+        info: &ModelInfo,
+        w: f32,
+        n: usize,
+        seed: u64,
+    ) -> Result<(Vec<f32>, f64)> {
+        let mut out = Vec::with_capacity(n * info.dim);
+        let mut rng = Pcg32::seeded(seed);
+        let chunk = 64;
+        let mut done = 0;
+        let mut nfes = 0usize;
+        let mut runs = 0usize;
+        while done < n {
+            let take = chunk.min(n - done);
+            let x0 = rng.normal_vec(take * info.dim);
+            let labels: Vec<i32> =
+                (0..take).map(|_| rng.below(info.num_classes) as i32).collect();
+            let field = self.field(info, labels, w)?;
+            let (x1, nfe) = self.ground_truth(&field, &x0)?;
+            out.extend(x1);
+            nfes += nfe;
+            runs += 1;
+            done += take;
+        }
+        Ok((out, nfes as f64 / runs as f64))
+    }
+}
+
+/// Count NFE while sampling (wraps CountingField).
+pub fn sample_counting(
+    solver: &dyn Solver,
+    field: &dyn Field,
+    x0: &[f32],
+) -> Result<(Vec<f32>, usize)> {
+    let cf = CountingField::new(field);
+    let out = solver.sample(&cf, x0)?;
+    Ok((out, cf.count()))
+}
+
+// ---------------------------------------------------------------------------
+// reporting
+// ---------------------------------------------------------------------------
+
+/// Fixed-width table printer used by every bench.
+pub struct Table {
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncol) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncol) {
+                s.push_str(&format!("{:>w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+/// Append a result blob to results/<name>.json (created fresh each run).
+pub fn write_results(name: &str, j: &Json) -> Result<PathBuf> {
+    std::fs::create_dir_all("results")?;
+    let path = PathBuf::from(format!("results/{name}.json"));
+    std::fs::write(&path, j.to_string())?;
+    Ok(path)
+}
+
+/// Wall-clock timer helper for §Perf logs.
+pub struct Timer(Instant, &'static str);
+
+impl Timer {
+    pub fn start(label: &'static str) -> Timer {
+        Timer(Instant::now(), label)
+    }
+
+    pub fn stop(self) -> f64 {
+        let dt = self.0.elapsed().as_secs_f64();
+        eprintln!("[time] {}: {:.2}s", self.1, dt);
+        dt
+    }
+}

@@ -1,0 +1,243 @@
+//! Dynamic batcher with step-aligned grouping.
+//!
+//! Diffusion sampling differs from token serving in one key way: the
+//! model input carries a *scalar* time t shared by the whole batch, so
+//! two requests can share a model evaluation only if their solvers put
+//! them at the same t at the same step. The batcher therefore groups
+//! requests by `GroupKey = (model, solver group key, guidance)` — within
+//! a group every request follows the identical step timeline, so the
+//! whole group runs lockstep and every velocity evaluation batches all
+//! of its rows (the ODE-sampling analogue of continuous batching; see
+//! DESIGN.md §4, vllm_router analogy).
+//!
+//! Flush policy: a group is dispatched when (a) its pending rows reach
+//! `max_rows`, or (b) its oldest request has waited `max_wait`. Both are
+//! checked by `poll`, which the engine's dispatch loop drives.
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use super::request::SampleRequest;
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct GroupKey {
+    pub model: String,
+    pub solver_key: String,
+    /// Guidance scale in fixed-point (f32 bits) so the key is Ord/Eq.
+    pub guidance_bits: u32,
+}
+
+impl GroupKey {
+    pub fn of(req: &SampleRequest) -> GroupKey {
+        GroupKey {
+            model: req.model.clone(),
+            solver_key: req.solver.group_key(),
+            guidance_bits: req.guidance.to_bits(),
+        }
+    }
+}
+
+/// A batch ready for execution: requests share a group key.
+pub struct Batch {
+    pub key: GroupKey,
+    pub requests: Vec<SampleRequest>,
+    pub rows: usize,
+}
+
+pub struct BatcherConfig {
+    pub max_rows: usize,
+    pub max_wait: Duration,
+    /// Upper bound on queued rows across all groups (admission control).
+    pub max_queued_rows: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_rows: 64,
+            max_wait: Duration::from_millis(5),
+            max_queued_rows: 4096,
+        }
+    }
+}
+
+#[derive(Default)]
+struct Group {
+    requests: Vec<SampleRequest>,
+    rows: usize,
+    oldest: Option<Instant>,
+}
+
+/// Single-threaded core (the engine wraps it in a mutex): push requests,
+/// poll for due batches.
+pub struct Batcher {
+    pub cfg: BatcherConfig,
+    groups: BTreeMap<GroupKey, Group>,
+    queued_rows: usize,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        Batcher { cfg, groups: BTreeMap::new(), queued_rows: 0 }
+    }
+
+    pub fn queued_rows(&self) -> usize {
+        self.queued_rows
+    }
+
+    /// Enqueue; returns false (rejecting the request) when over capacity.
+    pub fn push(&mut self, req: SampleRequest) -> Result<(), SampleRequest> {
+        let rows = req.labels.len();
+        if self.queued_rows + rows > self.cfg.max_queued_rows {
+            return Err(req);
+        }
+        let key = GroupKey::of(&req);
+        let g = self.groups.entry(key).or_default();
+        g.oldest.get_or_insert(req.enqueued_at);
+        g.rows += rows;
+        self.queued_rows += rows;
+        g.requests.push(req);
+        Ok(())
+    }
+
+    /// Collect every group due for dispatch at `now`. Groups larger than
+    /// `max_rows` are split so no batch exceeds the cap (a single request
+    /// larger than the cap still dispatches alone — the runtime chunks it
+    /// over buckets).
+    pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        let mut due = Vec::new();
+        let keys: Vec<GroupKey> = self.groups.keys().cloned().collect();
+        for key in keys {
+            let g = self.groups.get_mut(&key).unwrap();
+            let timed_out = g
+                .oldest
+                .map(|t| now.duration_since(t) >= self.cfg.max_wait)
+                .unwrap_or(false);
+            if g.rows >= self.cfg.max_rows || timed_out {
+                let g = self.groups.remove(&key).unwrap();
+                self.queued_rows -= g.rows;
+                // split into <= max_rows chunks preserving FIFO order
+                let mut cur = Batch { key: key.clone(), requests: Vec::new(), rows: 0 };
+                for req in g.requests {
+                    let r = req.labels.len();
+                    if cur.rows > 0 && cur.rows + r > self.cfg.max_rows {
+                        due.push(std::mem::replace(
+                            &mut cur,
+                            Batch { key: key.clone(), requests: Vec::new(), rows: 0 },
+                        ));
+                    }
+                    cur.rows += r;
+                    cur.requests.push(req);
+                }
+                if cur.rows > 0 {
+                    due.push(cur);
+                }
+            }
+        }
+        due
+    }
+
+    /// Earliest deadline across groups (for the dispatch loop's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.groups
+            .values()
+            .filter_map(|g| g.oldest)
+            .min()
+            .map(|t| t + self.cfg.max_wait)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{SampleRequest, SolverSpec};
+    use std::sync::mpsc;
+
+    fn req(model: &str, n: usize, solver: SolverSpec, w: f32) -> SampleRequest {
+        let (tx, _rx) = mpsc::channel();
+        SampleRequest {
+            id: 0,
+            model: model.into(),
+            labels: vec![0; n],
+            guidance: w,
+            solver,
+            seed: 1,
+            x0: None,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        }
+    }
+
+    fn spec(nfe: usize) -> SolverSpec {
+        SolverSpec::Baseline { name: "euler".into(), nfe }
+    }
+
+    #[test]
+    fn groups_by_key() {
+        let mut b = Batcher::new(BatcherConfig { max_rows: 8, ..Default::default() });
+        b.push(req("m1", 4, spec(8), 0.0)).unwrap();
+        b.push(req("m1", 4, spec(8), 0.0)).unwrap(); // same group: flush at 8
+        b.push(req("m2", 2, spec(8), 0.0)).unwrap(); // different model
+        let due = b.poll(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].rows, 8);
+        assert_eq!(due[0].key.model, "m1");
+        assert_eq!(b.queued_rows(), 2);
+    }
+
+    #[test]
+    fn different_guidance_not_batched() {
+        let mut b = Batcher::new(BatcherConfig { max_rows: 4, ..Default::default() });
+        b.push(req("m", 2, spec(8), 0.0)).unwrap();
+        b.push(req("m", 2, spec(8), 2.0)).unwrap();
+        assert!(b.poll(Instant::now()).is_empty()); // neither group full
+    }
+
+    #[test]
+    fn timeout_flushes_partial() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 64,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        });
+        b.push(req("m", 3, spec(8), 0.0)).unwrap();
+        assert!(b.poll(Instant::now()).is_empty());
+        let later = Instant::now() + Duration::from_millis(5);
+        let due = b.poll(later);
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].rows, 3);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn splits_over_cap_preserving_fifo() {
+        let mut b = Batcher::new(BatcherConfig { max_rows: 4, ..Default::default() });
+        for i in 0..5 {
+            let mut r = req("m", 2, spec(8), 0.0);
+            r.id = i;
+            b.push(r).unwrap();
+        }
+        let due = b.poll(Instant::now());
+        assert_eq!(due.len(), 3); // 2+2, 2+2, 2
+        let ids: Vec<u64> = due.iter().flat_map(|d| d.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 4]);
+        assert!(due.iter().all(|d| d.rows <= 4));
+    }
+
+    #[test]
+    fn backpressure_rejects() {
+        let mut b = Batcher::new(BatcherConfig { max_queued_rows: 4, ..Default::default() });
+        b.push(req("m", 3, spec(8), 0.0)).unwrap();
+        assert!(b.push(req("m", 3, spec(8), 0.0)).is_err());
+        assert_eq!(b.queued_rows(), 3);
+    }
+
+    #[test]
+    fn oversized_request_dispatches_alone() {
+        let mut b = Batcher::new(BatcherConfig { max_rows: 4, ..Default::default() });
+        b.push(req("m", 10, spec(8), 0.0)).unwrap();
+        let due = b.poll(Instant::now());
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].rows, 10);
+    }
+}

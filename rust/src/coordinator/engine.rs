@@ -1,0 +1,275 @@
+//! The serving engine: dispatch loop + worker pool driving batched
+//! sampling jobs end-to-end.
+//!
+//! Threads (std only — tokio is not resolvable offline, DESIGN.md §3):
+//!   * callers (server / in-process clients) push `SampleRequest`s into
+//!     an mpsc channel;
+//!   * the dispatch thread owns the `Batcher`, applies admission control
+//!     and flush policy, and hands `Batch`es to workers over a shared
+//!     work queue;
+//!   * each worker resolves the route, builds the concatenated
+//!     `ModelField`, runs the solver lockstep over the whole group, and
+//!     splits the result rows back to per-request replies.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};
+use super::router::{route, RoutedSolver};
+use crate::runtime::{ArtifactStore, ModelField, Runtime};
+use crate::solver::field::{CountingField, Field};
+use crate::solver::rk45::{rk45, Rk45Opts};
+use crate::util::rng::Pcg32;
+
+pub struct EngineConfig {
+    pub batcher: BatcherConfig,
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig { batcher: BatcherConfig::default(), workers: 2 }
+    }
+}
+
+struct WorkQueue {
+    q: Mutex<Vec<Batch>>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+/// Handle to a running engine; `shutdown()` drains and joins all threads.
+pub struct Engine {
+    tx: Option<mpsc::Sender<SampleRequest>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    dispatch: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    wq: Arc<WorkQueue>,
+}
+
+impl Engine {
+    pub fn start(store: Arc<ArtifactStore>, rt: Arc<Runtime>, cfg: EngineConfig) -> Engine {
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = mpsc::channel::<SampleRequest>();
+        let wq = Arc::new(WorkQueue {
+            q: Mutex::new(Vec::new()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+
+        // dispatch thread
+        let wq_d = wq.clone();
+        let metrics_d = metrics.clone();
+        let store_d = store.clone();
+        let batcher_cfg = cfg.batcher;
+        let dispatch = std::thread::Builder::new()
+            .name("bns-dispatch".into())
+            .spawn(move || {
+                let mut batcher = Batcher::new(batcher_cfg);
+                loop {
+                    // wait for work or the next flush deadline
+                    let timeout = batcher
+                        .next_deadline()
+                        .map(|d| d.saturating_duration_since(Instant::now()))
+                        .unwrap_or(Duration::from_millis(50));
+                    match rx.recv_timeout(timeout) {
+                        Ok(req) => {
+                            metrics_d.record_request(req.labels.len());
+                            if !store_d.models.contains_key(&req.model) {
+                                metrics_d.record_reject();
+                                let _ = req.reply.send(SampleResponse {
+                                    id: req.id,
+                                    result: Err(format!("unknown model '{}'", req.model)),
+                                });
+                                continue;
+                            }
+                            if let Err(rejected) = batcher.push(req) {
+                                metrics_d.record_reject();
+                                let _ = rejected.reply.send(SampleResponse {
+                                    id: rejected.id,
+                                    result: Err("queue full (backpressure)".into()),
+                                });
+                            }
+                        }
+                        Err(mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                    for batch in batcher.poll(Instant::now()) {
+                        metrics_d.record_batch(batch.rows);
+                        let mut q = wq_d.q.lock().unwrap();
+                        q.push(batch);
+                        wq_d.cv.notify_one();
+                    }
+                }
+                // drain on shutdown
+                for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
+                    metrics_d.record_batch(batch.rows);
+                    let mut q = wq_d.q.lock().unwrap();
+                    q.push(batch);
+                    wq_d.cv.notify_one();
+                }
+                wq_d.shutdown.store(true, Ordering::SeqCst);
+                wq_d.cv.notify_all();
+            })
+            .expect("spawn dispatch");
+
+        // workers
+        let mut workers = Vec::new();
+        for wi in 0..cfg.workers.max(1) {
+            let wq_w = wq.clone();
+            let store_w = store.clone();
+            let rt_w = rt.clone();
+            let metrics_w = metrics.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("bns-worker-{wi}"))
+                    .spawn(move || loop {
+                        let batch = {
+                            let mut q = wq_w.q.lock().unwrap();
+                            loop {
+                                if !q.is_empty() {
+                                    break q.remove(0); // FIFO for latency fairness
+                                }
+                                if wq_w.shutdown.load(Ordering::SeqCst) {
+                                    return;
+                                }
+                                q = wq_w.cv.wait(q).unwrap();
+                            }
+                        };
+                        run_batch(&store_w, &rt_w, &metrics_w, batch);
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+
+        Engine {
+            tx: Some(tx),
+            metrics,
+            next_id: AtomicU64::new(1),
+            dispatch: Some(dispatch),
+            workers,
+            wq,
+        }
+    }
+
+    /// Fire-and-forget submit; the response arrives on `reply`.
+    pub fn submit(&self, mut req: SampleRequest) -> u64 {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let _ = self.tx.as_ref().expect("engine running").send(req);
+        id
+    }
+
+    /// Convenience: submit and block for the response.
+    pub fn sample_blocking(
+        &self,
+        model: &str,
+        labels: Vec<i32>,
+        guidance: f32,
+        solver: SolverSpec,
+        seed: u64,
+    ) -> Result<SampleOutput> {
+        let (reply, rx) = mpsc::channel();
+        self.submit(SampleRequest {
+            id: 0,
+            model: model.to_string(),
+            labels,
+            guidance,
+            solver,
+            seed,
+            x0: None,
+            enqueued_at: Instant::now(),
+            reply,
+        });
+        let resp = rx.recv()?;
+        resp.result.map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn shutdown(mut self) {
+        drop(self.tx.take()); // closes the channel -> dispatch drains + exits
+        if let Some(d) = self.dispatch.take() {
+            let _ = d.join();
+        }
+        self.wq.shutdown.store(true, Ordering::SeqCst);
+        self.wq.cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Execute one batched group: build the concatenated field, run the
+/// solver lockstep, split rows back to requests.
+fn run_batch(store: &ArtifactStore, rt: &Runtime, metrics: &Metrics, batch: Batch) {
+    let started = Instant::now();
+    let result = (|| -> Result<(Vec<f32>, usize, usize, String, usize)> {
+        let info = store.model(&batch.key.model)?;
+        let dim = info.dim;
+        let guidance = f32::from_bits(batch.key.guidance_bits);
+
+        // concatenate labels + noise rows
+        let mut labels = Vec::with_capacity(batch.rows);
+        let mut x0 = Vec::with_capacity(batch.rows * dim);
+        for req in &batch.requests {
+            labels.extend_from_slice(&req.labels);
+            match &req.x0 {
+                Some(x) => x0.extend_from_slice(x),
+                None => {
+                    let mut rng = Pcg32::seeded(req.seed);
+                    x0.extend(rng.normal_vec(req.labels.len() * dim));
+                }
+            }
+        }
+
+        let field = ModelField::new(rt, info, labels, guidance)?;
+        let counting = CountingField::new(&field);
+        let spec = &batch.requests[0].solver;
+        let routed = route(store, &batch.key.model, guidance as f64, info.scheduler, spec)?;
+        let out = match &routed.solver {
+            RoutedSolver::Fixed(s) => s.sample(&counting, &x0)?,
+            RoutedSolver::GroundTruth => rk45(&counting, &x0, &Rk45Opts::default())?.0,
+        };
+        let nfe = counting.count();
+        let forwards = nfe * batch.rows * field.forwards_per_eval();
+        Ok((out, nfe, forwards, routed.name, dim))
+    })();
+
+    let exec_us = started.elapsed().as_micros() as u64;
+    match result {
+        Ok((out, nfe, forwards, solver_name, dim)) => {
+            metrics.record_evals(nfe, forwards);
+            let mut offset = 0;
+            for req in batch.requests {
+                let rows = req.labels.len();
+                let queue_us = started.duration_since(req.enqueued_at).as_micros() as u64;
+                metrics.record_latency(queue_us, exec_us, &solver_name);
+                let samples = out[offset * dim..(offset + rows) * dim].to_vec();
+                offset += rows;
+                let _ = req.reply.send(SampleResponse {
+                    id: req.id,
+                    result: Ok(SampleOutput {
+                        samples,
+                        dim,
+                        nfe,
+                        forwards: nfe * rows * 2,
+                        solver_used: solver_name.clone(),
+                        queue_us,
+                        exec_us,
+                    }),
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("batch failed: {e:#}");
+            for req in batch.requests {
+                let _ = req.reply.send(SampleResponse { id: req.id, result: Err(msg.clone()) });
+            }
+        }
+    }
+}

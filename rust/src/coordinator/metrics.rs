@@ -1,0 +1,132 @@
+//! Service metrics: counters + latency histograms, shared via Arc.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub samples: AtomicU64,
+    pub rejected: AtomicU64,
+    pub evals: AtomicU64,
+    pub forwards: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_rows: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+#[derive(Default)]
+struct Inner {
+    queue_wait: LatencyHistogram,
+    exec: LatencyHistogram,
+    e2e: LatencyHistogram,
+    per_solver: BTreeMap<String, u64>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, n_samples: usize) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.samples.fetch_add(n_samples as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_reject(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_batch(&self, rows: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_evals(&self, nfe: usize, forwards: usize) {
+        self.evals.fetch_add(nfe as u64, Ordering::Relaxed);
+        self.forwards.fetch_add(forwards as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_latency(&self, queue_us: u64, exec_us: u64, solver: &str) {
+        let mut g = self.inner.lock().unwrap();
+        g.queue_wait.record_us(queue_us as f64);
+        g.exec.record_us(exec_us as f64);
+        g.e2e.record_us((queue_us + exec_us) as f64);
+        *g.per_solver.entry(solver.to_string()).or_insert(0) += 1;
+    }
+
+    /// Mean rows per model-eval batch — the continuous-batching win metric.
+    pub fn mean_batch_rows(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_rows.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn snapshot_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let q = |h: &LatencyHistogram| {
+            Json::obj(vec![
+                ("mean_us", Json::Num(h.mean_us())),
+                ("p50_us", Json::Num(h.quantile_us(0.5))),
+                ("p95_us", Json::Num(h.quantile_us(0.95))),
+                ("p99_us", Json::Num(h.quantile_us(0.99))),
+                ("count", Json::Num(h.total as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
+            ("samples", Json::Num(self.samples.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            ("evals", Json::Num(self.evals.load(Ordering::Relaxed) as f64)),
+            ("forwards", Json::Num(self.forwards.load(Ordering::Relaxed) as f64)),
+            ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
+            ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
+            ("queue", q(&g.queue_wait)),
+            ("exec", q(&g.exec)),
+            ("e2e", q(&g.e2e)),
+            (
+                "per_solver",
+                Json::Obj(
+                    g.per_solver
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(4);
+        m.record_request(2);
+        m.record_batch(6);
+        m.record_evals(8, 96);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.samples.load(Ordering::Relaxed), 6);
+        assert_eq!(m.forwards.load(Ordering::Relaxed), 96);
+        assert_eq!(m.mean_batch_rows(), 6.0);
+    }
+
+    #[test]
+    fn snapshot_is_valid_json() {
+        let m = Metrics::new();
+        m.record_latency(100, 2000, "bns8");
+        let s = m.snapshot_json().to_string();
+        let parsed = crate::util::json::Json::parse(&s).unwrap();
+        assert_eq!(parsed.get("per_solver").get("bns8").as_f64(), Some(1.0));
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator: the serving system around BNS sampling.
+//!
+//! * `request` — request/response types and solver specs
+//! * `batcher` — step-aligned dynamic batching (the diffusion analogue of
+//!   continuous batching: requests sharing a solver timeline run lockstep)
+//! * `router`  — SolverSpec -> concrete solver resolution (BNS-first)
+//! * `engine`  — dispatch + worker threads driving batched sampling
+//! * `metrics` — counters and latency histograms
+//! * `server`  — TCP JSON-lines front-end
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use engine::{Engine, EngineConfig};
+pub use request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};

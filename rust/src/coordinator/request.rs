@@ -1,0 +1,89 @@
+//! Request/response types of the sampling service.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// How the client wants the ODE solved.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolverSpec {
+    /// A named baseline at a given NFE ("euler", "midpoint", "dpmpp2m", ...).
+    Baseline { name: String, nfe: usize },
+    /// A distilled solver artifact by exact name.
+    Distilled { name: String },
+    /// Router picks the best available solver for (model, guidance, nfe):
+    /// BNS artifact if distilled, otherwise the strongest baseline.
+    Auto { nfe: usize },
+    /// Ground truth: adaptive RK45 (NFE not fixed).
+    GroundTruth,
+}
+
+impl SolverSpec {
+    /// Stable key for batching: requests with equal keys share an
+    /// identical step timeline and can run lockstep.
+    pub fn group_key(&self) -> String {
+        match self {
+            SolverSpec::Baseline { name, nfe } => format!("b:{name}:{nfe}"),
+            SolverSpec::Distilled { name } => format!("d:{name}"),
+            SolverSpec::Auto { nfe } => format!("a:{nfe}"),
+            SolverSpec::GroundTruth => "gt".to_string(),
+        }
+    }
+}
+
+/// A sampling request: generate `labels.len()` samples from `model`
+/// conditioned on `labels` with CFG scale `guidance`.
+#[derive(Debug)]
+pub struct SampleRequest {
+    pub id: u64,
+    pub model: String,
+    pub labels: Vec<i32>,
+    pub guidance: f32,
+    pub solver: SolverSpec,
+    /// Noise seed; x0 is drawn as iid N(0, 1) from this seed so results
+    /// are reproducible and the wire format stays small.
+    pub seed: u64,
+    /// Optional explicit x0 (overrides seed); row-major [n, dim].
+    pub x0: Option<Vec<f32>>,
+    pub enqueued_at: Instant,
+    pub reply: mpsc::Sender<SampleResponse>,
+}
+
+/// The service's answer.
+#[derive(Debug, Clone)]
+pub struct SampleResponse {
+    pub id: u64,
+    pub result: Result<SampleOutput, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct SampleOutput {
+    /// Row-major [n, dim] samples (approximations of x(1)).
+    pub samples: Vec<f32>,
+    pub dim: usize,
+    /// Velocity-field evaluations the solver performed.
+    pub nfe: usize,
+    /// Model forward passes (NFE x batch x CFG factor).
+    pub forwards: usize,
+    /// Name of the solver actually used (after routing).
+    pub solver_used: String,
+    pub queue_us: u64,
+    pub exec_us: u64,
+}
+
+/// Admission-control errors surfaced to clients.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmitError {
+    QueueFull,
+    UnknownModel(String),
+    BadRequest(String),
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::QueueFull => write!(f, "queue full (backpressure)"),
+            AdmitError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
+            AdmitError::BadRequest(m) => write!(f, "bad request: {m}"),
+        }
+    }
+}

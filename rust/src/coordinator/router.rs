@@ -1,0 +1,109 @@
+//! Solver routing: resolve a `SolverSpec` against the artifact store.
+//!
+//! `Auto { nfe }` implements the headline feature — "give me the best
+//! solver this service has for (model, guidance, NFE)": a BNS artifact if
+//! one was distilled, else BST, else the strongest baseline that divides
+//! the NFE (the Thm 3.2 hierarchy top-down).
+
+use anyhow::Result;
+
+use crate::coordinator::request::SolverSpec;
+use crate::runtime::ArtifactStore;
+use crate::solver::scheduler::Scheduler;
+use crate::solver::{baseline, NsSolver, Solver};
+
+/// The routed outcome: a concrete solver plus its reporting name.
+pub struct Routed {
+    pub solver: RoutedSolver,
+    pub name: String,
+}
+
+pub enum RoutedSolver {
+    Fixed(Box<dyn Solver>),
+    /// Adaptive ground truth (RK45 with default tolerances).
+    GroundTruth,
+}
+
+pub fn route(
+    store: &ArtifactStore,
+    model: &str,
+    guidance: f64,
+    sched: Scheduler,
+    spec: &SolverSpec,
+) -> Result<Routed> {
+    match spec {
+        SolverSpec::GroundTruth => Ok(Routed {
+            solver: RoutedSolver::GroundTruth,
+            name: "rk45".into(),
+        }),
+        SolverSpec::Baseline { name, nfe } => {
+            let s = baseline(name, *nfe, sched)?;
+            let n = s.name();
+            Ok(Routed { solver: RoutedSolver::Fixed(s), name: n })
+        }
+        SolverSpec::Distilled { name } => {
+            let art = store.solver(name)?;
+            anyhow::ensure!(
+                art.meta.model == model,
+                "solver '{}' was distilled for model '{}', not '{}'",
+                name,
+                art.meta.model,
+                model
+            );
+            Ok(Routed {
+                solver: RoutedSolver::Fixed(Box::new(art.solver.clone())),
+                name: name.clone(),
+            })
+        }
+        SolverSpec::Auto { nfe } => {
+            for kind in ["bns", "bst"] {
+                if let Some(art) = store
+                    .solvers_for(model, guidance, kind)
+                    .into_iter()
+                    .find(|s| s.solver.nfe() == *nfe)
+                {
+                    return Ok(Routed {
+                        solver: RoutedSolver::Fixed(Box::new(art.solver.clone())),
+                        name: art.name.clone(),
+                    });
+                }
+            }
+            // baseline fallback: strongest generic that fits the NFE
+            let name = if *nfe % 2 == 0 { "midpoint" } else { "euler" };
+            let s = baseline(name, *nfe, sched)?;
+            let n = s.name();
+            Ok(Routed { solver: RoutedSolver::Fixed(s), name: format!("auto-{n}") })
+        }
+    }
+}
+
+/// Auto-routing table for introspection ("what would NFE=k get?").
+pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usize) -> String {
+    for kind in ["bns", "bst"] {
+        if let Some(art) = store
+            .solvers_for(model, guidance, kind)
+            .into_iter()
+            .find(|s| s.solver.nfe() == nfe)
+        {
+            return art.name.clone();
+        }
+    }
+    if nfe % 2 == 0 {
+        format!("auto-midpoint{nfe}")
+    } else {
+        format!("auto-euler{nfe}")
+    }
+}
+
+/// Convenience for benches/tests: pull a distilled NS solver or panic
+/// with a readable message.
+pub fn distilled(store: &ArtifactStore, model: &str, guidance: f64, kind: &str, nfe: usize) -> Result<NsSolver> {
+    store
+        .solvers_for(model, guidance, kind)
+        .into_iter()
+        .find(|s| s.solver.nfe() == nfe)
+        .map(|s| s.solver.clone())
+        .ok_or_else(|| {
+            anyhow::anyhow!("no {kind} solver for model={model} w={guidance} nfe={nfe}")
+        })
+}

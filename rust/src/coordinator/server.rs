@@ -1,0 +1,172 @@
+//! TCP front-end: JSON-lines protocol over a listener socket.
+//!
+//! One JSON object per line. Requests:
+//!   {"op":"sample","model":"img_fm_ot","labels":[0,3],"guidance":0.0,
+//!    "solver":"auto","nfe":8,"seed":7}
+//!   {"op":"stats"}
+//!   {"op":"models"}
+//!   {"op":"solvers"}
+//! `solver` is "auto" | "gt" | a baseline name | a distilled artifact
+//! name (anything containing "_nfe"). Responses mirror the request with
+//! "ok": true/false; sample responses carry the flattened rows.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::engine::Engine;
+use super::request::{SampleRequest, SolverSpec};
+use crate::runtime::ArtifactStore;
+use crate::util::json::Json;
+
+pub fn parse_solver_spec(solver: &str, nfe: usize) -> SolverSpec {
+    match solver {
+        "auto" => SolverSpec::Auto { nfe },
+        "gt" | "rk45" => SolverSpec::GroundTruth,
+        s if s.contains("_nfe") => SolverSpec::Distilled { name: s.to_string() },
+        s => SolverSpec::Baseline { name: s.to_string(), nfe },
+    }
+}
+
+/// Serve until the process is killed. Each connection gets a thread
+/// (std-only substrate for tokio; connection counts here are small).
+pub fn serve(addr: &str, engine: Arc<Engine>, store: Arc<ArtifactStore>) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    eprintln!("[bns-serve] listening on {addr}");
+    for conn in listener.incoming() {
+        let conn = match conn {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("[bns-serve] accept error: {e}");
+                continue;
+            }
+        };
+        let engine = engine.clone();
+        let store = store.clone();
+        std::thread::spawn(move || {
+            if let Err(e) = handle_conn(conn, &engine, &store) {
+                eprintln!("[bns-serve] connection error: {e:#}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(conn: TcpStream, engine: &Engine, store: &ArtifactStore) -> Result<()> {
+    let peer = conn.peer_addr()?;
+    let mut writer = conn.try_clone()?;
+    let reader = BufReader::new(conn);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = handle_line(&line, engine, store);
+        writer.write_all(resp.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+pub fn handle_line(line: &str, engine: &Engine, store: &ArtifactStore) -> Json {
+    let req = match Json::parse(line) {
+        Ok(j) => j,
+        Err(e) => return err_json(&format!("parse error: {e}")),
+    };
+    match req.get("op").as_str() {
+        Some("sample") => handle_sample(&req, engine),
+        Some("stats") => {
+            let mut o = engine.metrics.snapshot_json();
+            if let Json::Obj(map) = &mut o {
+                map.insert("ok".into(), Json::Bool(true));
+            }
+            o
+        }
+        Some("models") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "models",
+                Json::Arr(store.models.keys().map(|k| Json::Str(k.clone())).collect()),
+            ),
+        ]),
+        Some("solvers") => Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            (
+                "solvers",
+                Json::Arr(
+                    store
+                        .solvers
+                        .values()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("name", Json::Str(s.name.clone())),
+                                ("kind", Json::Str(s.meta.kind.clone())),
+                                ("model", Json::Str(s.meta.model.clone())),
+                                ("nfe", Json::Num(s.solver.nfe() as f64)),
+                                ("guidance", Json::Num(s.meta.guidance)),
+                                ("val_psnr", Json::Num(s.meta.val_psnr)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+        other => err_json(&format!("unknown op {other:?}")),
+    }
+}
+
+fn handle_sample(req: &Json, engine: &Engine) -> Json {
+    let model = match req.get("model").as_str() {
+        Some(m) => m.to_string(),
+        None => return err_json("missing 'model'"),
+    };
+    let labels: Vec<i32> = match req.get("labels").as_f64_vec() {
+        Some(v) => v.iter().map(|&x| x as i32).collect(),
+        None => return err_json("missing 'labels'"),
+    };
+    if labels.is_empty() {
+        return err_json("'labels' must be non-empty");
+    }
+    let guidance = req.get("guidance").as_f64().unwrap_or(0.0) as f32;
+    let nfe = req.get("nfe").as_usize().unwrap_or(8);
+    let solver = parse_solver_spec(req.get("solver").as_str().unwrap_or("auto"), nfe);
+    let seed = req.get("seed").as_f64().unwrap_or(0.0) as u64;
+
+    let (reply, rx) = mpsc::channel();
+    engine.submit(SampleRequest {
+        id: 0,
+        model,
+        labels,
+        guidance,
+        solver,
+        seed,
+        x0: None,
+        enqueued_at: Instant::now(),
+        reply,
+    });
+    match rx.recv() {
+        Ok(resp) => match resp.result {
+            Ok(out) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::Num(resp.id as f64)),
+                ("dim", Json::Num(out.dim as f64)),
+                ("nfe", Json::Num(out.nfe as f64)),
+                ("forwards", Json::Num(out.forwards as f64)),
+                ("solver_used", Json::Str(out.solver_used)),
+                ("queue_us", Json::Num(out.queue_us as f64)),
+                ("exec_us", Json::Num(out.exec_us as f64)),
+                ("samples", Json::arr_f32(&out.samples)),
+            ]),
+            Err(e) => err_json(&e),
+        },
+        Err(_) => err_json("engine dropped the request"),
+    }
+}
+
+fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+}

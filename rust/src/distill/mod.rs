@@ -1,0 +1,20 @@
+//! Request-path solver refinement: adapt BNS coefficients **in rust**,
+//! no Python required.
+//!
+//! Why this exists: Algorithm 2 runs at build time, but a deployed
+//! service meets conditions the build never saw — a new guidance scale,
+//! a drifting input distribution, an NFE the build didn't distill. This
+//! module closes the loop on the serving side: generate a small set of
+//! RK45 ground-truth pairs through the *deployed* PJRT field, then
+//! refine an NS solver's theta against the paper's PSNR loss (eq. 13)
+//! with SPSA (simultaneous-perturbation stochastic approximation) —
+//! gradient-free, so it works through the compiled executable where
+//! autodiff is unavailable.
+//!
+//! This is deliberately the same parameter space as eq. 12 (the rust
+//! mirror of theta), so refined solvers serialize to the same JSON
+//! artifacts and route like any build-time BNS solver.
+
+pub mod spsa;
+
+pub use spsa::{refine, RefineConfig, RefineReport};

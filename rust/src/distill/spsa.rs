@@ -1,0 +1,201 @@
+//! SPSA refinement of NS solver coefficients against the PSNR loss.
+//!
+//! theta layout (mirrors eq. 12 with pinned endpoints):
+//!   [ log-increments of T_n (n entries) | a (n) | b rows (n(n+1)/2) ]
+//! Times are recovered via a softmax-style normalization of positive
+//! increments, exactly like the python trainer, so refined solvers stay
+//! valid by construction.
+
+use anyhow::Result;
+
+use crate::solver::field::Field;
+use crate::solver::ns::NsSolver;
+use crate::solver::rk45::{rk45, Rk45Opts};
+use crate::util::rng::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct RefineConfig {
+    pub iters: usize,
+    pub pairs: usize,
+    pub batch: usize,
+    /// SPSA step size (a_k = step / (k + A)^0.602)
+    pub step: f64,
+    /// SPSA perturbation size (c_k = perturb / (k+1)^0.101)
+    pub perturb: f64,
+    pub seed: u64,
+}
+
+impl Default for RefineConfig {
+    fn default() -> Self {
+        RefineConfig { iters: 120, pairs: 32, batch: 16, step: 2e-3, perturb: 1e-3, seed: 7 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RefineReport {
+    pub initial_psnr: f64,
+    pub final_psnr: f64,
+    pub iters: usize,
+    pub nfe_spent: usize,
+}
+
+fn pack(solver: &NsSolver) -> Vec<f64> {
+    let n = solver.nfe();
+    let mut theta = Vec::with_capacity(n + n + n * (n + 1) / 2);
+    for w in solver.times.windows(2) {
+        theta.push((w[1] - w[0]).max(1e-9).ln());
+    }
+    theta.extend_from_slice(&solver.a);
+    for row in &solver.b {
+        theta.extend_from_slice(row);
+    }
+    theta
+}
+
+fn unpack(theta: &[f64], n: usize) -> NsSolver {
+    let incs: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
+    let total: f64 = incs.iter().sum();
+    let mut times = Vec::with_capacity(n + 1);
+    times.push(0.0);
+    let mut acc = 0.0;
+    for inc in &incs {
+        acc += inc / total;
+        times.push(acc.min(1.0));
+    }
+    times[n] = 1.0;
+    let a = theta[n..2 * n].to_vec();
+    let mut b = Vec::with_capacity(n);
+    let mut off = 2 * n;
+    for i in 0..n {
+        b.push(theta[off..off + i + 1].to_vec());
+        off += i + 1;
+    }
+    NsSolver { times, a, b }
+}
+
+fn psnr_loss(solver: &NsSolver, field: &dyn Field, x0: &[f32], x1: &[f32], dim: usize) -> Result<f64> {
+    let out = solver.sample(field, x0)?;
+    // eq. 13: mean over samples of log per-sample MSE
+    let n = out.len() / dim;
+    let mut acc = 0.0;
+    for i in 0..n {
+        let mse: f64 = out[i * dim..(i + 1) * dim]
+            .iter()
+            .zip(&x1[i * dim..(i + 1) * dim])
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / dim as f64;
+        acc += mse.max(1e-20).ln();
+    }
+    Ok(acc / n as f64)
+}
+
+/// Refine `solver` against `field` (labels/guidance already bound).
+/// Returns the refined solver plus a report; ground-truth pairs are
+/// produced internally with RK45 through the same field.
+pub fn refine(
+    solver: &NsSolver,
+    field: &dyn Field,
+    dim: usize,
+    cfg: &RefineConfig,
+) -> Result<(NsSolver, RefineReport)> {
+    let n = solver.nfe();
+    let mut rng = Pcg32::seeded(cfg.seed);
+
+    // GT pairs through the deployed field
+    let x0 = rng.normal_vec(cfg.pairs * dim);
+    let (x1, gt_nfe) = rk45(field, &x0, &Rk45Opts::default())?;
+    let mut nfe_spent = gt_nfe;
+
+    let mut theta = pack(solver);
+    let p = theta.len();
+    let initial_psnr =
+        -10.0 * psnr_loss(solver, field, &x0, &x1, dim)? / std::f64::consts::LN_10
+            + 10.0 * (4f64).log10();
+    let mut best = (theta.clone(), f64::INFINITY);
+
+    for k in 0..cfg.iters {
+        // minibatch of pairs
+        let bsz = cfg.batch.min(cfg.pairs);
+        let start = rng.below(cfg.pairs - bsz + 1);
+        let xb0 = &x0[start * dim..(start + bsz) * dim];
+        let xb1 = &x1[start * dim..(start + bsz) * dim];
+
+        let ck = cfg.perturb / ((k + 1) as f64).powf(0.101);
+        let ak = cfg.step / ((k + 1) as f64 + 10.0).powf(0.602);
+        // Rademacher perturbation
+        let delta: Vec<f64> =
+            (0..p).map(|_| if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 }).collect();
+        let theta_p: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t + ck * d).collect();
+        let theta_m: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t - ck * d).collect();
+        let lp = psnr_loss(&unpack(&theta_p, n), field, xb0, xb1, dim)?;
+        let lm = psnr_loss(&unpack(&theta_m, n), field, xb0, xb1, dim)?;
+        nfe_spent += 2 * n;
+        let g_scale = (lp - lm) / (2.0 * ck);
+        for (t, d) in theta.iter_mut().zip(&delta) {
+            *t -= ak * g_scale * d; // SPSA: grad estimate = g_scale / d = g_scale * d (d = ±1)
+        }
+        // track best on the full pair set every few iters
+        if k % 10 == 9 || k + 1 == cfg.iters {
+            let l = psnr_loss(&unpack(&theta, n), field, &x0, &x1, dim)?;
+            nfe_spent += n;
+            if l < best.1 {
+                best = (theta.clone(), l);
+            }
+        }
+    }
+    let refined = unpack(&best.0, n);
+    refined.validate()?;
+    let final_psnr =
+        -10.0 * best.1 / std::f64::consts::LN_10 + 10.0 * (4f64).log10();
+    Ok((
+        refined,
+        RefineReport { initial_psnr, final_psnr, iters: cfg.iters, nfe_spent },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::GaussianTargetField;
+    use crate::solver::scheduler::Scheduler;
+    use crate::solver::taxonomy::euler_ns;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = euler_ns(&[0.0, 0.2, 0.55, 1.0]);
+        let theta = pack(&s);
+        let s2 = unpack(&theta, 3);
+        for (a, b) in s.times.iter().zip(&s2.times) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert_eq!(s.a, s2.a);
+        assert_eq!(s.b, s2.b);
+    }
+
+    #[test]
+    fn refine_improves_euler_on_gaussian_field() {
+        let f = GaussianTargetField { dim: 6, sched: Scheduler::FmOt, mu: 0.4, s1: 0.3 };
+        let init = euler_ns(&crate::solver::generic::uniform_times(6));
+        let cfg = RefineConfig { iters: 150, pairs: 24, batch: 12, ..Default::default() };
+        let (refined, report) = refine(&init, &f, 6, &cfg).unwrap();
+        refined.validate().unwrap();
+        assert!(
+            report.final_psnr > report.initial_psnr + 1.0,
+            "no improvement: {} -> {}",
+            report.initial_psnr,
+            report.final_psnr
+        );
+    }
+
+    #[test]
+    fn refined_solver_serializes() {
+        let f = GaussianTargetField { dim: 4, sched: Scheduler::Vp, mu: -0.1, s1: 0.5 };
+        let init = euler_ns(&crate::solver::generic::uniform_times(4));
+        let cfg = RefineConfig { iters: 20, pairs: 8, batch: 8, ..Default::default() };
+        let (refined, _) = refine(&init, &f, 4, &cfg).unwrap();
+        let j = refined.to_json().to_string();
+        let (back, _) = NsSolver::from_json_str(&j).unwrap();
+        assert_eq!(back.nfe(), 4);
+    }
+}

@@ -1,0 +1,31 @@
+//! # bns-serve
+//!
+//! Production-style reproduction of **"Bespoke Non-Stationary Solvers for
+//! Fast Sampling of Diffusion and Flow Models"** (Shaul et al., ICML
+//! 2024) as a three-layer rust + JAX + Pallas serving stack:
+//!
+//! * **L1 (build-time)** — Pallas kernels for the model's fused residual
+//!   block and the NS combine step (`python/compile/kernels/`).
+//! * **L2 (build-time)** — the JAX velocity-field model, schedulers, BNS
+//!   solver distillation (Algorithm 2), AOT-lowered to HLO text.
+//! * **L3 (this crate)** — the request path: PJRT runtime executing the
+//!   AOT artifacts, the full solver taxonomy of the paper's Figure 3,
+//!   and a batched sampling service with BNS-first routing.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! reproduced tables/figures.
+
+pub mod bench_util;
+pub mod coordinator;
+pub mod distill;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Default artifacts directory (overridable via --artifacts / BNS_ARTIFACTS).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("BNS_ARTIFACTS") {
+        return p.into();
+    }
+    std::path::PathBuf::from("artifacts")
+}

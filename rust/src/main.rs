@@ -1,0 +1,237 @@
+//! bns-serve CLI: serve / sample / solvers / models / bench-quick.
+//!
+//! Hand-rolled arg parsing (clap is not resolvable offline, DESIGN.md §3).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use bns_serve::coordinator::{server, Engine, EngineConfig, SolverSpec};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+use bns_serve::util::stats::psnr;
+
+const USAGE: &str = "\
+bns-serve — Bespoke Non-Stationary solver serving (ICML 2024 repro)
+
+USAGE:
+  bns-serve serve   [--addr 127.0.0.1:7878] [--artifacts DIR] [--workers N]
+  bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
+                    [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
+                    [--out samples.json] [--artifacts DIR]
+  bns-serve compare --model NAME [--nfe N] [--guidance W] [--artifacts DIR]
+                    (PSNR of every solver vs RK45 ground truth)
+  bns-serve distill --model NAME --nfe N [--guidance W] [--iters K]
+                    [--from euler|midpoint|<artifact>] [--out FILE]
+                    (rust-side SPSA refinement of NS coefficients against
+                     the deployed field — no python needed)
+  bns-serve solvers [--artifacts DIR]    list distilled solver artifacts
+  bns-serve models  [--artifacts DIR]    list AOT model artifacts
+";
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(k) = args[i].strip_prefix("--") {
+            let v = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            flags.insert(k.to_string(), v);
+        }
+        i += 1;
+    }
+    flags
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    if let Err(e) = run(&cmd, &flags) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn load_store(flags: &HashMap<String, String>) -> Result<Arc<ArtifactStore>> {
+    let dir = flags
+        .get("artifacts")
+        .map(|s| s.into())
+        .unwrap_or_else(bns_serve::default_artifacts_dir);
+    Ok(Arc::new(ArtifactStore::load(&dir).with_context(|| {
+        format!("loading artifacts from {} (run `make artifacts` first)", dir.display())
+    })?))
+}
+
+fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
+    match cmd {
+        "serve" => {
+            let store = load_store(flags)?;
+            let rt = Arc::new(Runtime::cpu()?);
+            let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let engine = Arc::new(Engine::start(
+                store.clone(),
+                rt,
+                EngineConfig { workers, ..Default::default() },
+            ));
+            let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:7878".into());
+            server::serve(&addr, engine, store)?;
+            Ok(())
+        }
+        "sample" => {
+            let store = load_store(flags)?;
+            let rt = Arc::new(Runtime::cpu()?);
+            let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+            let model = flags.get("model").context("--model required")?.clone();
+            let nfe: usize = flags.get("nfe").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let guidance: f32 =
+                flags.get("guidance").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+            let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(0);
+            let labels: Vec<i32> = flags
+                .get("labels")
+                .map(|s| s.split(',').map(|x| x.trim().parse().unwrap_or(0)).collect())
+                .unwrap_or_else(|| vec![0, 1, 2, 3]);
+            let spec = server::parse_solver_spec(
+                flags.get("solver").map(|s| s.as_str()).unwrap_or("auto"),
+                nfe,
+            );
+            let out = engine.sample_blocking(&model, labels, guidance, spec, seed)?;
+            println!(
+                "solver={} nfe={} forwards={} exec={}us dim={}",
+                out.solver_used, out.nfe, out.forwards, out.exec_us, out.dim
+            );
+            if let Some(path) = flags.get("out") {
+                let j = bns_serve::util::json::Json::obj(vec![
+                    ("dim", bns_serve::util::json::Json::Num(out.dim as f64)),
+                    ("samples", bns_serve::util::json::Json::arr_f32(&out.samples)),
+                ]);
+                std::fs::write(path, j.to_string())?;
+                println!("wrote {path}");
+            } else {
+                let head: Vec<f32> = out.samples.iter().take(8).copied().collect();
+                println!("samples[0][..8] = {head:?}");
+            }
+            engine.shutdown();
+            Ok(())
+        }
+        "compare" => {
+            let store = load_store(flags)?;
+            let rt = Arc::new(Runtime::cpu()?);
+            let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+            let model = flags.get("model").context("--model required")?.clone();
+            let nfe: usize = flags.get("nfe").map(|s| s.parse()).transpose()?.unwrap_or(8);
+            let guidance: f32 =
+                flags.get("guidance").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+            let info = store.model(&model)?;
+            let labels: Vec<i32> = (0..16).map(|i| (i % info.num_classes) as i32).collect();
+            let seed = 42u64;
+            let gt = engine
+                .sample_blocking(&model, labels.clone(), guidance, SolverSpec::GroundTruth, seed)?;
+            println!("GT (rk45): nfe={}", gt.nfe);
+            let mut specs: Vec<(String, SolverSpec)> = vec![
+                ("auto (BNS-first)".into(), SolverSpec::Auto { nfe }),
+                ("euler".into(), SolverSpec::Baseline { name: "euler".into(), nfe }),
+                ("dpmpp2m".into(), SolverSpec::Baseline { name: "dpmpp2m".into(), nfe }),
+            ];
+            if nfe % 2 == 0 {
+                specs.push((
+                    "midpoint".into(),
+                    SolverSpec::Baseline { name: "midpoint".into(), nfe },
+                ));
+            }
+            println!("{:<24} {:>6} {:>10}", "solver", "NFE", "PSNR(dB)");
+            for (label, spec) in specs {
+                let out = engine.sample_blocking(&model, labels.clone(), guidance, spec, seed)?;
+                println!(
+                    "{:<24} {:>6} {:>10.2}   ({})",
+                    label,
+                    out.nfe,
+                    psnr(&out.samples, &gt.samples),
+                    out.solver_used
+                );
+            }
+            engine.shutdown();
+            Ok(())
+        }
+        "distill" => {
+            let store = load_store(flags)?;
+            let rt = Arc::new(Runtime::cpu()?);
+            let model = flags.get("model").context("--model required")?.clone();
+            let nfe: usize = flags.get("nfe").context("--nfe required")?.parse()?;
+            let guidance: f32 =
+                flags.get("guidance").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
+            let iters: usize = flags.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(120);
+            let info = store.model(&model)?.clone();
+            let init = match flags.get("from").map(|s| s.as_str()).unwrap_or("midpoint") {
+                "euler" => bns_serve::solver::taxonomy::euler_ns(
+                    &bns_serve::solver::generic::uniform_times(nfe),
+                ),
+                "midpoint" if nfe % 2 == 0 => bns_serve::solver::taxonomy::midpoint_ns(nfe),
+                name if name.contains("_nfe") => store.solver(name)?.solver.clone(),
+                _ => bns_serve::solver::taxonomy::euler_ns(
+                    &bns_serve::solver::generic::uniform_times(nfe),
+                ),
+            };
+            let labels: Vec<i32> = (0..16).map(|i| (i % info.num_classes) as i32).collect();
+            let field = bns_serve::runtime::ModelField::new(&rt, &info, labels, guidance)?;
+            let cfg = bns_serve::distill::RefineConfig { iters, pairs: 16, ..Default::default() };
+            println!("refining {model} w={guidance} nfe={nfe} for {iters} SPSA iters...");
+            let (refined, report) = bns_serve::distill::refine(&init, &field, info.dim, &cfg)?;
+            println!(
+                "psnr: {:.2} -> {:.2} dB  (nfe spent: {})",
+                report.initial_psnr, report.final_psnr, report.nfe_spent
+            );
+            if let Some(out) = flags.get("out") {
+                std::fs::write(out, refined.to_json().to_string())?;
+                println!("wrote {out}");
+            }
+            Ok(())
+        }
+        "solvers" => {
+            let store = load_store(flags)?;
+            println!(
+                "{:<40} {:>5} {:>5} {:>7} {:>10} {:>10}",
+                "name", "kind", "nfe", "w", "val_psnr", "params"
+            );
+            for s in store.solvers.values() {
+                println!(
+                    "{:<40} {:>5} {:>5} {:>7.2} {:>10.2} {:>10}",
+                    s.name,
+                    s.meta.kind,
+                    s.solver.nfe(),
+                    s.meta.guidance,
+                    s.meta.val_psnr,
+                    s.solver.num_params()
+                );
+            }
+            Ok(())
+        }
+        "models" => {
+            let store = load_store(flags)?;
+            for (name, m) in &store.models {
+                println!(
+                    "{:<20} dim={:<5} scheduler={:<7} param={:<9} buckets={:?}",
+                    name,
+                    m.dim,
+                    m.scheduler.name(),
+                    format!("{:?}", m.parametrization),
+                    m.buckets.iter().map(|b| b.batch).collect::<Vec<_>>()
+                );
+            }
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}

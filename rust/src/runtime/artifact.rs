@@ -1,0 +1,219 @@
+//! Artifact store: the manifest.json index produced by
+//! python/compile/artifacts.py, model metadata, distilled-solver
+//! registry, and the FD-synth feature extractor.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::solver::ns::{NsSolver, SolverMeta};
+use crate::solver::scheduler::{Parametrization, Scheduler};
+use crate::util::json::Json;
+use crate::util::linalg::Mat;
+
+/// One lowered (batch-bucket) artifact of a model.
+#[derive(Debug, Clone)]
+pub struct BucketInfo {
+    pub batch: usize,
+    pub path: PathBuf,
+}
+
+/// Model metadata from the manifest.
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub scheduler: Scheduler,
+    pub parametrization: Parametrization,
+    pub dim: usize,
+    pub num_classes: usize,
+    pub null_class: usize,
+    pub data: String, // "images" | "audio"
+    pub buckets: Vec<BucketInfo>,
+}
+
+/// A distilled solver artifact (BNS / BST / init).
+#[derive(Debug, Clone)]
+pub struct SolverArtifact {
+    pub name: String,
+    pub solver: NsSolver,
+    pub meta: SolverMeta,
+}
+
+/// FD-synth feature extractor + reference statistics.
+pub struct FdSynth {
+    pub dim: usize,
+    pub hidden: usize,
+    pub feat_dim: usize,
+    pub w1: Vec<f32>, // [dim, hidden] row-major
+    pub b1: Vec<f32>,
+    pub w2: Vec<f32>, // [hidden, feat_dim]
+    pub ref_mean: Vec<f64>,
+    pub ref_cov: Mat,
+}
+
+impl FdSynth {
+    /// Map rows [n, dim] -> features [n, feat_dim]: tanh(x W1 + b1) W2.
+    pub fn features(&self, rows: &[f32]) -> Vec<f32> {
+        let n = rows.len() / self.dim;
+        let mut out = vec![0f32; n * self.feat_dim];
+        let mut h = vec![0f32; self.hidden];
+        for r in 0..n {
+            let x = &rows[r * self.dim..(r + 1) * self.dim];
+            for j in 0..self.hidden {
+                h[j] = self.b1[j];
+            }
+            for (i, &xv) in x.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w1[i * self.hidden..(i + 1) * self.hidden];
+                for j in 0..self.hidden {
+                    h[j] += xv * wrow[j];
+                }
+            }
+            for v in h.iter_mut() {
+                *v = v.tanh();
+            }
+            let orow = &mut out[r * self.feat_dim..(r + 1) * self.feat_dim];
+            for (j, &hv) in h.iter().enumerate() {
+                let wrow = &self.w2[j * self.feat_dim..(j + 1) * self.feat_dim];
+                for k in 0..self.feat_dim {
+                    orow[k] += hv * wrow[k];
+                }
+            }
+        }
+        out
+    }
+
+    /// FD-synth of a generated sample set against the dataset reference.
+    pub fn fd_to_reference(&self, rows: &[f32]) -> f64 {
+        let f = self.features(rows);
+        let (m, c) = crate::util::linalg::mean_cov(&f, self.feat_dim);
+        crate::util::linalg::frechet_distance(&m, &c, &self.ref_mean, &self.ref_cov)
+    }
+
+    /// FD-synth between two generated sets (e.g. n-step vs GT sampler).
+    pub fn fd_between(&self, rows_a: &[f32], rows_b: &[f32]) -> f64 {
+        let fa = self.features(rows_a);
+        let fb = self.features(rows_b);
+        let (ma, ca) = crate::util::linalg::mean_cov(&fa, self.feat_dim);
+        let (mb, cb) = crate::util::linalg::mean_cov(&fb, self.feat_dim);
+        crate::util::linalg::frechet_distance(&ma, &ca, &mb, &cb)
+    }
+}
+
+/// The loaded artifact store.
+pub struct ArtifactStore {
+    pub root: PathBuf,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub solvers: BTreeMap<String, SolverArtifact>,
+    pub fd: FdSynth,
+    pub scheduler_check: Json,
+}
+
+impl ArtifactStore {
+    pub fn load(root: &Path) -> Result<ArtifactStore> {
+        let manifest_path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in j.get("models").as_obj().context("manifest.models")? {
+            let sched = Scheduler::from_name(m.get("scheduler").as_str().unwrap_or(""))
+                .with_context(|| format!("model {name}: bad scheduler"))?;
+            let param =
+                Parametrization::from_name(m.get("parametrization").as_str().unwrap_or(""))
+                    .with_context(|| format!("model {name}: bad parametrization"))?;
+            let buckets = m
+                .get("artifacts")
+                .as_arr()
+                .context("model artifacts")?
+                .iter()
+                .map(|e| {
+                    Ok(BucketInfo {
+                        batch: e.get("batch").as_usize().context("bucket batch")?,
+                        path: root.join(e.get("path").as_str().context("bucket path")?),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    scheduler: sched,
+                    parametrization: param,
+                    dim: m.get("dim").as_usize().context("model dim")?,
+                    num_classes: m.get("num_classes").as_usize().context("num_classes")?,
+                    null_class: m.get("null_class").as_usize().context("null_class")?,
+                    data: m.get("data").as_str().unwrap_or("images").to_string(),
+                    buckets,
+                },
+            );
+        }
+
+        let mut solvers = BTreeMap::new();
+        for rel in j.get("solvers").as_arr().context("manifest.solvers")? {
+            let rel = rel.as_str().context("solver path")?;
+            let stext = std::fs::read_to_string(root.join(rel))
+                .with_context(|| format!("reading solver {rel}"))?;
+            let (solver, meta) = NsSolver::from_json_str(&stext)
+                .with_context(|| format!("parsing solver {rel}"))?;
+            let name = Path::new(rel)
+                .file_stem()
+                .and_then(|s| s.to_str())
+                .context("solver name")?
+                .to_string();
+            solvers.insert(name.clone(), SolverArtifact { name, solver, meta });
+        }
+
+        let fdj = j.get("fd");
+        let feat_dim = fdj.get("feat_dim").as_usize().context("fd.feat_dim")?;
+        let cov_flat = fdj.get("ref_cov").as_f64_vec().context("fd.ref_cov")?;
+        if cov_flat.len() != feat_dim * feat_dim {
+            bail!("fd.ref_cov has {} entries, want {}", cov_flat.len(), feat_dim * feat_dim);
+        }
+        let fd = FdSynth {
+            dim: fdj.get("dim").as_usize().context("fd.dim")?,
+            hidden: fdj.get("feat_hidden").as_usize().context("fd.feat_hidden")?,
+            feat_dim,
+            w1: fdj.get("w1").as_f32_vec().context("fd.w1")?,
+            b1: fdj.get("b1").as_f32_vec().context("fd.b1")?,
+            w2: fdj.get("w2").as_f32_vec().context("fd.w2")?,
+            ref_mean: fdj.get("ref_mean").as_f64_vec().context("fd.ref_mean")?,
+            ref_cov: Mat::from_rows(feat_dim, cov_flat),
+        };
+
+        Ok(ArtifactStore {
+            root: root.to_path_buf(),
+            models,
+            solvers,
+            fd,
+            scheduler_check: j.get("scheduler_check").clone(),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelInfo> {
+        self.models.get(name).with_context(|| format!("unknown model '{name}'"))
+    }
+
+    pub fn solver(&self, name: &str) -> Result<&SolverArtifact> {
+        self.solvers.get(name).with_context(|| format!("unknown solver '{name}'"))
+    }
+
+    /// Distilled solvers for (model, guidance, kind), sorted by NFE.
+    pub fn solvers_for(&self, model: &str, guidance: f64, kind: &str) -> Vec<&SolverArtifact> {
+        let mut v: Vec<&SolverArtifact> = self
+            .solvers
+            .values()
+            .filter(|s| {
+                s.meta.model == model
+                    && (s.meta.guidance - guidance).abs() < 1e-9
+                    && s.meta.kind == kind
+            })
+            .collect();
+        v.sort_by_key(|s| s.solver.nfe());
+        v
+    }
+}

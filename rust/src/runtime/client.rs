@@ -1,0 +1,193 @@
+//! PJRT runtime: load HLO-text artifacts, compile once per (model, batch)
+//! bucket, execute from the request path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+//! Text is the interchange (see python/compile/aot.py for why).
+//!
+//! Threading: the `xla` crate's client/executable types are `!Send`
+//! (Rc-based wrappers over the C API), so a dedicated **device thread**
+//! owns every PJRT object — the same discipline as a GPU stream owner.
+//! Callers talk to it over channels; `ExeHandle::run` is a synchronous
+//! RPC. On this CPU target execution is serialized anyway, so the design
+//! costs ~1us of channel latency against ~400us executions.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+enum Msg {
+    Load {
+        path: PathBuf,
+        reply: mpsc::Sender<Result<u64>>,
+    },
+    Exec {
+        id: u64,
+        batch: usize,
+        dim: usize,
+        x: Vec<f32>,
+        t: f32,
+        w: f32,
+        labels: Vec<i32>,
+        reply: mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Platform {
+        reply: mpsc::Sender<String>,
+    },
+}
+
+/// Handle to the device thread. Cheap to share via Arc.
+pub struct Runtime {
+    tx: Mutex<mpsc::Sender<Msg>>,
+    /// path -> executable id (compile cache)
+    cache: Mutex<HashMap<PathBuf, u64>>,
+    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || device_thread(rx, ready_tx))
+            .context("spawning device thread")?;
+        ready_rx
+            .recv()
+            .context("device thread died during init")??;
+        Ok(Runtime {
+            tx: Mutex::new(tx),
+            cache: Mutex::new(HashMap::new()),
+            thread: Mutex::new(Some(thread)),
+        })
+    }
+
+    fn send(&self, msg: Msg) {
+        // Sender is !Sync; the mutex makes the handle shareable.
+        let _ = self.tx.lock().unwrap().send(msg);
+    }
+
+    pub fn platform(&self) -> String {
+        let (reply, rx) = mpsc::channel();
+        self.send(Msg::Platform { reply });
+        rx.recv().unwrap_or_else(|_| "unknown".into())
+    }
+
+    /// Load + compile an HLO text artifact (cached by path).
+    pub fn load(&self, path: &Path, batch: usize, dim: usize) -> Result<ExeHandle> {
+        if let Some(&id) = self.cache.lock().unwrap().get(path) {
+            return Ok(ExeHandle { rt_tx: self.tx.lock().unwrap().clone().into(), id, batch, dim });
+        }
+        let (reply, rx) = mpsc::channel();
+        self.send(Msg::Load { path: path.to_path_buf(), reply });
+        let id = rx.recv().context("device thread gone")??;
+        self.cache.lock().unwrap().insert(path.to_path_buf(), id);
+        Ok(ExeHandle { rt_tx: self.tx.lock().unwrap().clone().into(), id, batch, dim })
+    }
+}
+
+impl Drop for Runtime {
+    fn drop(&mut self) {
+        // Replace the sender with a disconnected dummy; once every
+        // ExeHandle clone is gone too, the device thread's recv() errors
+        // out and it exits. We deliberately do NOT join: an ExeHandle may
+        // outlive the Runtime and joining would deadlock — the detached
+        // thread exits as soon as the last sender drops.
+        let (dummy, _) = mpsc::channel();
+        *self.tx.lock().unwrap() = dummy;
+        self.thread.lock().unwrap().take();
+    }
+}
+
+/// A compiled velocity-field executable with the aot.py signature
+/// (x [B,D] f32, t [] f32, w [] f32, labels [B] i32) -> (u [B,D] f32,).
+pub struct ExeHandle {
+    rt_tx: Mutex<mpsc::Sender<Msg>>,
+    id: u64,
+    pub batch: usize,
+    pub dim: usize,
+}
+
+impl ExeHandle {
+    /// Execute on exactly `self.batch` rows (synchronous RPC).
+    pub fn run(&self, x: &[f32], t: f32, w: f32, labels: &[i32]) -> Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), self.batch * self.dim);
+        debug_assert_eq!(labels.len(), self.batch);
+        let (reply, rx) = mpsc::channel();
+        {
+            let tx = self.rt_tx.lock().unwrap();
+            tx.send(Msg::Exec {
+                id: self.id,
+                batch: self.batch,
+                dim: self.dim,
+                x: x.to_vec(),
+                t,
+                w,
+                labels: labels.to_vec(),
+                reply,
+            })
+            .map_err(|_| anyhow!("device thread gone"))?;
+        }
+        rx.recv().map_err(|_| anyhow!("device thread dropped request"))?
+    }
+}
+
+fn device_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let mut exes: HashMap<u64, xla::PjRtLoadedExecutable> = HashMap::new();
+    let mut next_id = 1u64;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Platform { reply } => {
+                let _ = reply.send(client.platform_name());
+            }
+            Msg::Load { path, reply } => {
+                let r = (|| -> Result<u64> {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().context("non-utf8 artifact path")?,
+                    )
+                    .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+                    let id = next_id;
+                    next_id += 1;
+                    exes.insert(id, exe);
+                    Ok(id)
+                })();
+                let _ = reply.send(r);
+            }
+            Msg::Exec { id, batch, dim, x, t, w, labels, reply } => {
+                let r = (|| -> Result<Vec<f32>> {
+                    let exe = exes.get(&id).context("unknown executable id")?;
+                    let xl = xla::Literal::vec1(&x)
+                        .reshape(&[batch as i64, dim as i64])
+                        .map_err(|e| anyhow!("reshape: {e}"))?;
+                    let tl = xla::Literal::scalar(t);
+                    let wl = xla::Literal::scalar(w);
+                    let ll = xla::Literal::vec1(&labels[..]);
+                    let result = exe
+                        .execute::<xla::Literal>(&[xl, tl, wl, ll])
+                        .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow!("to_literal: {e}"))?;
+                    let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
+                    out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+                })();
+                let _ = reply.send(r);
+            }
+        }
+    }
+}

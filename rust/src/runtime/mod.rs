@@ -1,0 +1,10 @@
+//! Request-path runtime: PJRT client + artifact store + model fields.
+//! Python never runs here; everything is loaded from `artifacts/`.
+
+pub mod artifact;
+pub mod client;
+pub mod model_field;
+
+pub use artifact::{ArtifactStore, FdSynth, ModelInfo, SolverArtifact};
+pub use client::{ExeHandle, Runtime};
+pub use model_field::ModelField;

@@ -1,0 +1,80 @@
+//! PJRT-backed velocity field: bridges `solver::field::Field` to the
+//! compiled model executables, with batch-bucket selection and padding.
+
+use anyhow::{Context, Result};
+
+use super::artifact::ModelInfo;
+use super::client::{ExeHandle, Runtime};
+use crate::solver::field::Field;
+
+/// A model bound to (labels, guidance): evaluating it at (t, x) runs the
+/// CFG-composed artifact. Batch handling: the smallest bucket >= rows is
+/// chosen; rows are zero-padded to the bucket (labels padded with the
+/// null class so the padding rows still compute *something* valid).
+pub struct ModelField {
+    pub info: ModelInfo,
+    executables: Vec<ExeHandle>, // sorted by batch ascending
+    pub labels: Vec<i32>,
+    pub guidance: f32,
+}
+
+impl ModelField {
+    pub fn new(
+        rt: &Runtime,
+        info: &ModelInfo,
+        labels: Vec<i32>,
+        guidance: f32,
+    ) -> Result<ModelField> {
+        let mut buckets = info.buckets.clone();
+        buckets.sort_by_key(|b| b.batch);
+        let executables = buckets
+            .iter()
+            .map(|b| rt.load(&b.path, b.batch, info.dim))
+            .collect::<Result<Vec<_>>>()
+            .with_context(|| format!("loading model '{}'", info.name))?;
+        Ok(ModelField { info: info.clone(), executables, labels, guidance })
+    }
+
+    fn pick(&self, rows: usize) -> &ExeHandle {
+        self.executables
+            .iter()
+            .find(|e| e.batch >= rows)
+            .unwrap_or_else(|| self.executables.last().unwrap())
+    }
+
+    /// Largest compiled bucket (callers chunk above this).
+    pub fn max_batch(&self) -> usize {
+        self.executables.last().map(|e| e.batch).unwrap_or(1)
+    }
+}
+
+impl Field for ModelField {
+    fn dim(&self) -> usize {
+        self.info.dim
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        let dim = self.info.dim;
+        let rows = x.len() / dim;
+        debug_assert_eq!(rows, self.labels.len(), "labels must match batch");
+        let mut out = Vec::with_capacity(x.len());
+        let mut r = 0;
+        while r < rows {
+            let exe = self.pick(rows - r);
+            let take = exe.batch.min(rows - r);
+            // pad up to the bucket
+            let mut xb = vec![0f32; exe.batch * dim];
+            xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
+            let mut lb = vec![self.info.null_class as i32; exe.batch];
+            lb[..take].copy_from_slice(&self.labels[r..r + take]);
+            let ub = exe.run(&xb, t as f32, self.guidance, &lb)?;
+            out.extend_from_slice(&ub[..take * dim]);
+            r += take;
+        }
+        Ok(out)
+    }
+
+    fn forwards_per_eval(&self) -> usize {
+        2 // CFG doubles the effective batch (cond + uncond branches)
+    }
+}

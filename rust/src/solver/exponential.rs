@@ -1,0 +1,262 @@
+//! Dedicated exponential-integrator solvers (§3.3.2): DDIM and
+//! DPM-Solver++ (1S / 2M), implemented directly against a velocity field.
+//!
+//! Both are linear-in-(x, u) update rules, so `taxonomy` can also express
+//! them as NS coefficients; the unit tests check the two forms coincide,
+//! which is the computational content of Theorem 3.2's exponential branch.
+//!
+//! The model is exposed to us as a *velocity* field (eq. 5), so each step
+//! first inverts Table 1 to recover the eps- or x-prediction:
+//!   f = (u - beta x) / gamma.
+
+use anyhow::Result;
+
+use super::field::Field;
+use super::scheduler::{Parametrization, Scheduler};
+use super::Solver;
+
+/// DDIM (Song et al. 2022) = exponential Euler on the eps prediction:
+///   x_{i+1} = (a_{i+1}/a_i) x_i + (s_{i+1} - a_{i+1} s_i / a_i) eps_i.
+/// Requires alpha(t_0) > 0, so for FM schedulers pass a grid starting at
+/// t_0 = eps > 0 (`shifted_times`).
+pub struct Ddim {
+    pub sched: Scheduler,
+    pub times: Vec<f64>,
+}
+
+/// Uniform grid on [t0, 1] for solvers singular at t = 0.
+pub fn shifted_times(nfe: usize, t0: f64) -> Vec<f64> {
+    (0..=nfe).map(|i| t0 + (1.0 - t0) * i as f64 / nfe as f64).collect()
+}
+
+/// EDM's rho-schedule (Karras et al. 2022) mapped to model time via the
+/// snr correspondence — the "particular time discretization" the paper
+/// notes EDM stacks on its VE scheduler change. Usable with any solver.
+pub fn edm_times(nfe: usize, sched: Scheduler, rho: f64) -> Vec<f64> {
+    let (smin, smax) = (2e-3f64, crate::solver::scheduler::EDM_SIGMA_MAX);
+    let mut t: Vec<f64> = (0..=nfe)
+        .map(|j| {
+            let frac = j as f64 / nfe as f64;
+            let sig = (smax.powf(1.0 / rho)
+                + frac * (smin.powf(1.0 / rho) - smax.powf(1.0 / rho)))
+            .powf(rho);
+            sched.snr_inv(1.0 / sig).clamp(0.0, 1.0)
+        })
+        .collect();
+    t[0] = 0.0;
+    t[nfe] = 1.0;
+    // enforce strict monotonicity against clamp plateaus
+    for i in 1..t.len() {
+        if t[i] <= t[i - 1] {
+            t[i] = t[i - 1] + 1e-9;
+        }
+    }
+    t[nfe] = 1.0;
+    t
+}
+
+impl Ddim {
+    pub fn new(sched: Scheduler, nfe: usize) -> Self {
+        let t0 = if sched.alpha(0.0) > 1e-6 { 0.0 } else { 0.05 };
+        Ddim { sched, times: shifted_times(nfe, t0) }
+    }
+
+    fn eps_from_u(&self, t: f64, x: &[f32], u: &[f32]) -> Vec<f32> {
+        let (beta, gamma) = self.sched.uv_coeffs(t, Parametrization::Eps);
+        x.iter()
+            .zip(u.iter())
+            .map(|(&xv, &uv)| ((uv as f64 - beta * xv as f64) / gamma) as f32)
+            .collect()
+    }
+}
+
+impl Solver for Ddim {
+    fn name(&self) -> String {
+        format!("ddim{}", self.times.len() - 1)
+    }
+
+    fn nfe(&self) -> usize {
+        self.times.len() - 1
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        for w in self.times.windows(2) {
+            let (t0, t1) = (w[0], w[1]);
+            let (a0, s0) = (self.sched.alpha(t0), self.sched.sigma(t0));
+            let (a1, s1) = (self.sched.alpha(t1), self.sched.sigma(t1));
+            let u = field.eval(t0, &x)?;
+            let eps = self.eps_from_u(t0, &x, &u);
+            let cx = a1 / a0;
+            let ce = s1 - a1 * s0 / a0;
+            for (xv, &ev) in x.iter_mut().zip(eps.iter()) {
+                *xv = (cx * *xv as f64 + ce * ev as f64) as f32;
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// DPM-Solver++ (Lu et al. 2022b): exponential integrator on the
+/// x-prediction; order 1 (1S) or 2 (2M, multistep). Regular at both
+/// endpoints for all schedulers here (see python/compile/ns.py).
+pub struct DpmPp {
+    pub sched: Scheduler,
+    pub times: Vec<f64>,
+    pub order: usize,
+}
+
+impl DpmPp {
+    pub fn new(sched: Scheduler, nfe: usize, order: usize) -> Self {
+        assert!(order == 1 || order == 2);
+        DpmPp { sched, times: super::generic::uniform_times(nfe), order }
+    }
+
+    fn xhat_from_u(&self, t: f64, x: &[f32], u: &[f32]) -> Vec<f32> {
+        let (beta, gamma) = self.sched.uv_coeffs(t, Parametrization::X);
+        x.iter()
+            .zip(u.iter())
+            .map(|(&xv, &uv)| ((uv as f64 - beta * xv as f64) / gamma) as f32)
+            .collect()
+    }
+
+    fn lambda(&self, t: f64) -> f64 {
+        self.sched.alpha(t).max(1e-30).ln() - self.sched.sigma(t).max(1e-30).ln()
+    }
+}
+
+impl Solver for DpmPp {
+    fn name(&self) -> String {
+        format!("dpmpp{}m{}", self.order, self.times.len() - 1)
+    }
+
+    fn nfe(&self) -> usize {
+        self.times.len() - 1
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let n = self.times.len() - 1;
+        let mut x = x0.to_vec();
+        let mut prev: Option<(Vec<f32>, f64)> = None; // (xhat_{i-1}, h_{i-1})
+        for (i, w) in self.times.windows(2).enumerate() {
+            let (t0, t1) = (w[0], w[1]);
+            let (s0, s1) = (self.sched.sigma(t0), self.sched.sigma(t1));
+            let a1 = self.sched.alpha(t1);
+            let h = self.lambda(t1) - self.lambda(t0);
+            let u = field.eval(t0, &x)?;
+            let xhat = self.xhat_from_u(t0, &x, &u);
+            // `lower_order_final` (as in the reference DPM-Solver++): the
+            // last step's lambda jump is unbounded when sigma(1) = 0, and
+            // 2nd-order extrapolation across it diverges — drop to order 1.
+            let use_second = self.order >= 2 && prev.is_some() && i + 1 < n;
+            let d: Vec<f32> = match (&prev, use_second) {
+                (Some((ph, phh)), true) => {
+                    let r = phh / h;
+                    let c1 = 1.0 + 1.0 / (2.0 * r);
+                    let c0 = -1.0 / (2.0 * r);
+                    xhat.iter()
+                        .zip(ph.iter())
+                        .map(|(&a, &b)| (c1 * a as f64 + c0 * b as f64) as f32)
+                        .collect()
+                }
+                _ => xhat.clone(),
+            };
+            let cx = s1 / s0;
+            let cd = a1 * (1.0 - (-h).exp());
+            for (xv, &dv) in x.iter_mut().zip(d.iter()) {
+                *xv = (cx * *xv as f64 + cd * dv as f64) as f32;
+            }
+            prev = Some((xhat, h));
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::GaussianTargetField;
+    use crate::solver::generic::{Euler, Rk4};
+
+    /// On a Gaussian-target FM-OT field, DPM++ should beat Euler at equal
+    /// NFE (the trajectory has the exponential structure DPM exploits).
+    #[test]
+    fn dpmpp_beats_euler_on_gaussian_field() {
+        let f = GaussianTargetField { dim: 4, sched: Scheduler::FmOt, mu: 0.4, s1: 0.3 };
+        let x0 = vec![1.2f32, -0.7, 0.3, 2.0];
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap();
+        let err = |out: &[f32]| -> f64 {
+            out.iter()
+                .zip(reference.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let e_euler = err(&Euler::new(8).sample(&f, &x0).unwrap());
+        let e_dpm1 = err(&DpmPp::new(Scheduler::FmOt, 8, 1).sample(&f, &x0).unwrap());
+        let e_dpm2 = err(&DpmPp::new(Scheduler::FmOt, 8, 2).sample(&f, &x0).unwrap());
+        assert!(e_dpm1 < e_euler, "dpm1 {e_dpm1} vs euler {e_euler}");
+        assert!(e_dpm2 < e_dpm1, "dpm2 {e_dpm2} vs dpm1 {e_dpm1}");
+    }
+
+    /// DPM++(1S) on a *pure Gaussian* target solves the ODE exactly in one
+    /// step family sense: with a perfect x-prediction constant in lambda it
+    /// is exact; with our field it should at least converge fast.
+    #[test]
+    fn dpmpp_converges() {
+        let f = GaussianTargetField { dim: 2, sched: Scheduler::Vp, mu: -0.2, s1: 0.5 };
+        let x0 = vec![0.9f32, -1.1];
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap();
+        let err = |o: &[f32]| {
+            o.iter()
+                .zip(reference.iter())
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let e6 = err(&DpmPp::new(Scheduler::Vp, 6, 2).sample(&f, &x0).unwrap());
+        let e24 = err(&DpmPp::new(Scheduler::Vp, 24, 2).sample(&f, &x0).unwrap());
+        let e96 = err(&DpmPp::new(Scheduler::Vp, 96, 2).sample(&f, &x0).unwrap());
+        // monotone convergence; the final lambda jump to sigma ~ 0 keeps
+        // the absolute floor above machine precision (lower_order_final).
+        assert!(e24 < e6 && e96 < e24, "{e6} -> {e24} -> {e96}");
+        assert!(e96 < 5e-3, "e96 {e96}");
+    }
+
+    #[test]
+    fn edm_times_monotone_and_bounded() {
+        for sched in [Scheduler::FmOt, Scheduler::Vp, Scheduler::Cosine] {
+            let t = edm_times(12, sched, 7.0);
+            assert_eq!(t[0], 0.0);
+            assert_eq!(t[12], 1.0);
+            for w in t.windows(2) {
+                assert!(w[1] > w[0], "{:?}: {:?}", sched, t);
+            }
+        }
+    }
+
+    #[test]
+    fn ddim_requires_positive_alpha_start() {
+        let d = Ddim::new(Scheduler::FmOt, 8);
+        assert!(d.times[0] > 0.0); // auto-shifted
+        let d = Ddim::new(Scheduler::Vp, 8);
+        assert_eq!(d.times[0], 0.0); // VP has alpha_0 > 0
+    }
+
+    #[test]
+    fn ddim_converges_gaussian_vp() {
+        // DDIM is first order; assert convergence toward the RK4-dense
+        // reference as NFE grows (VP's lambda range is wide, so absolute
+        // error at low NFE is legitimately large).
+        let f = GaussianTargetField { dim: 2, sched: Scheduler::Vp, mu: 0.3, s1: 0.4 };
+        let x0 = vec![0.5f32, -0.5];
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap();
+        let err = |o: &[f32]| -> f64 {
+            o.iter().zip(reference.iter()).map(|(a, b)| ((a - b) as f64).powi(2)).sum::<f64>().sqrt()
+        };
+        let e8 = err(&Ddim::new(Scheduler::Vp, 8).sample(&f, &x0).unwrap());
+        let e64 = err(&Ddim::new(Scheduler::Vp, 64).sample(&f, &x0).unwrap());
+        assert!(e64 < e8, "{e64} !< {e8}");
+        assert!(e64 < 5e-2, "e64 {e64}");
+    }
+}

@@ -1,0 +1,269 @@
+//! The `Field` abstraction: anything that evaluates the sampling velocity
+//! field u_t(x) over a row-major batch. The PJRT-backed model field lives
+//! in `runtime::model_field`; here are the composable wrappers and the
+//! analytic fields used by unit tests and benches.
+
+use anyhow::Result;
+
+use super::scheduler::Scheduler;
+
+/// A batched velocity field. `x` is row-major `[batch, dim]`; returns the
+/// same shape. Implementations must be deterministic.
+pub trait Field: Send + Sync {
+    fn dim(&self) -> usize;
+
+    /// Evaluate u(t, x) for every row of x.
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>>;
+
+    /// Model forward passes consumed per `eval` call *per row* (CFG-guided
+    /// PJRT fields report 2). Used for NFE accounting.
+    fn forwards_per_eval(&self) -> usize {
+        1
+    }
+}
+
+/// Counting wrapper: tracks evaluations (NFE) across a sampling run.
+pub struct CountingField<'a> {
+    pub inner: &'a dyn Field,
+    count: std::sync::atomic::AtomicUsize,
+}
+
+impl<'a> CountingField<'a> {
+    pub fn new(inner: &'a dyn Field) -> Self {
+        CountingField { inner, count: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count.load(std::sync::atomic::Ordering::Relaxed)
+    }
+}
+
+impl<'a> Field for CountingField<'a> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        self.count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.eval(t, x)
+    }
+
+    fn forwards_per_eval(&self) -> usize {
+        self.inner.forwards_per_eval()
+    }
+}
+
+/// Scale-Time transformed field (eq. 7):
+///   ū_r(x) = (ṡ_r/s_r) x + ṫ_r s_r u_{t_r}(x / s_r).
+/// `nodes` supplies (t, ṫ, s, ṡ) as closures so both analytic transforms
+/// (preconditioning, EDM) and tabulated ones fit.
+pub struct ScaleTimeField<'a> {
+    pub inner: &'a dyn Field,
+    pub t_of_r: Box<dyn Fn(f64) -> f64 + Send + Sync + 'a>,
+    pub s_of_r: Box<dyn Fn(f64) -> f64 + Send + Sync + 'a>,
+    pub dt_of_r: Box<dyn Fn(f64) -> f64 + Send + Sync + 'a>,
+    pub ds_of_r: Box<dyn Fn(f64) -> f64 + Send + Sync + 'a>,
+}
+
+impl<'a> Field for ScaleTimeField<'a> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, r: f64, x: &[f32]) -> Result<Vec<f32>> {
+        let s = (self.s_of_r)(r);
+        let ds = (self.ds_of_r)(r);
+        let t = (self.t_of_r)(r);
+        let dt = (self.dt_of_r)(r);
+        let scaled: Vec<f32> = x.iter().map(|&v| v / s as f32).collect();
+        let u = self.inner.eval(t, &scaled)?;
+        Ok(x.iter()
+            .zip(u.iter())
+            .map(|(&xv, &uv)| ((ds / s) * xv as f64 + dt * s * uv as f64) as f32)
+            .collect())
+    }
+
+    fn forwards_per_eval(&self) -> usize {
+        self.inner.forwards_per_eval()
+    }
+}
+
+/// sigma0 preconditioning (eq. 14) as a ScaleTimeField, with the
+/// endpoint-stable closed forms mirrored from python/compile/bns.py.
+pub fn precondition_field<'a>(
+    inner: &'a dyn Field,
+    sched: Scheduler,
+    sigma0: f64,
+) -> ScaleTimeField<'a> {
+    let t_of_r = move |r: f64| -> f64 {
+        match sched {
+            Scheduler::FmOt => r / (r + sigma0 * (1.0 - r)),
+            Scheduler::Cosine => {
+                let (s, c) = (0.5 * std::f64::consts::PI * r).sin_cos();
+                (2.0 / std::f64::consts::PI) * s.atan2(sigma0 * c)
+            }
+            // For schedulers with snr(0) > 0 (VP), snr(r)/sigma0 can fall
+            // below the path's snr range for small r; clamp to [0, 1] —
+            // the preconditioned source then matches the path endpoint.
+            _ => sched.snr_inv(sched.snr(r) / sigma0).clamp(0.0, 1.0),
+        }
+    };
+    let s_of_r = move |r: f64| -> f64 {
+        match sched {
+            Scheduler::FmOt => r + sigma0 * (1.0 - r),
+            Scheduler::Cosine => {
+                let (s, c) = (0.5 * std::f64::consts::PI * r).sin_cos();
+                (s * s + sigma0 * sigma0 * c * c).sqrt()
+            }
+            _ => {
+                let t = t_of_r(r);
+                let (a_t, s_t) = (sched.alpha(t), sched.sigma(t));
+                if a_t > s_t {
+                    sched.alpha(r) / a_t.max(1e-20)
+                } else {
+                    sigma0 * sched.sigma(r) / s_t.max(1e-20)
+                }
+            }
+        }
+    };
+    // central differences for the derivatives (exactness is not needed:
+    // the transform only shapes baseline solvers, BNS coefficients are
+    // folded python-side)
+    let h = 1e-5;
+    let dt_of_r = move |r: f64| (t_of_r((r + h).min(1.0)) - t_of_r((r - h).max(0.0))) / (((r + h).min(1.0)) - ((r - h).max(0.0)));
+    let ds_of_r = move |r: f64| (s_of_r((r + h).min(1.0)) - s_of_r((r - h).max(0.0))) / (((r + h).min(1.0)) - ((r - h).max(0.0)));
+    ScaleTimeField {
+        inner,
+        t_of_r: Box::new(t_of_r),
+        s_of_r: Box::new(s_of_r),
+        dt_of_r: Box::new(dt_of_r),
+        ds_of_r: Box::new(ds_of_r),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Analytic fields for tests/benches
+// ---------------------------------------------------------------------------
+
+/// Linear scalar-per-dim ODE ẋ = k(t) x + c(t), with closed-form solution
+/// when k, c are constants: x(t) = (x0 + c/k) e^{kt} - c/k.
+pub struct LinearField {
+    pub dim: usize,
+    pub k: f64,
+    pub c: f64,
+}
+
+impl Field for LinearField {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, _t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        Ok(x.iter().map(|&v| (self.k * v as f64 + self.c) as f32).collect())
+    }
+}
+
+impl LinearField {
+    /// Exact solution at t = 1 from x(0) = x0.
+    pub fn exact_at_1(&self, x0: f32) -> f32 {
+        let ck = self.c / self.k;
+        ((x0 as f64 + ck) * self.k.exp() - ck) as f32
+    }
+}
+
+/// Nonlinear smooth field for order-of-accuracy tests:
+/// ẋ = sin(3t) x + 0.3 cos(x) (no closed form; reference via fine RK4).
+pub struct NonlinearField {
+    pub dim: usize,
+}
+
+impl Field for NonlinearField {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        Ok(x.iter()
+            .map(|&v| ((3.0 * t).sin() * v as f64 + 0.3 * (v as f64).cos()) as f32)
+            .collect())
+    }
+}
+
+/// The exact velocity field of a Gaussian-mixture data distribution under
+/// a Gaussian path — the strongest test field: solvers integrate it and
+/// the induced x(1) distribution is known. For a single Gaussian
+/// N(mu, s1^2) target under scheduler (alpha, sigma):
+///   p_t = N(alpha mu, (alpha s1)^2 + sigma^2), and
+///   u_t(x) follows from the conditional-expectation formula.
+pub struct GaussianTargetField {
+    pub dim: usize,
+    pub sched: Scheduler,
+    pub mu: f32,
+    pub s1: f64,
+}
+
+impl Field for GaussianTargetField {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        let (a, s) = (self.sched.alpha(t), self.sched.sigma(t));
+        let (da, ds) = (self.sched.dalpha(t), self.sched.dsigma(t));
+        let var = (a * self.s1).powi(2) + s * s;
+        // E[x1 | x_t] for scalar gaussian target
+        // = (mu sigma^2 + alpha s1^2 (x)) / var … per dimension:
+        Ok(x.iter()
+            .map(|&xv| {
+                let e_x1 = (self.mu as f64 * s * s + a * self.s1 * self.s1 * xv as f64) / var;
+                let e_x0 = (xv as f64 - a * e_x1) / s.max(1e-9);
+                (da * e_x1 + ds * e_x0) as f32
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::scheduler::Scheduler;
+
+    #[test]
+    fn counting_field_counts() {
+        let f = LinearField { dim: 2, k: -1.0, c: 0.5 };
+        let cf = CountingField::new(&f);
+        let x = vec![1.0f32, 2.0];
+        for _ in 0..5 {
+            cf.eval(0.3, &x).unwrap();
+        }
+        assert_eq!(cf.count(), 5);
+    }
+
+    #[test]
+    fn precondition_identity_at_sigma0_one() {
+        let f = NonlinearField { dim: 3 };
+        let pf = precondition_field(&f, Scheduler::FmOt, 1.0);
+        let x = vec![0.5f32, -1.0, 2.0];
+        let a = f.eval(0.4, &x).unwrap();
+        let b = pf.eval(0.4, &x).unwrap();
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-4, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn precondition_endpoints_regular() {
+        for sched in [Scheduler::FmOt, Scheduler::Cosine, Scheduler::Vp] {
+            let f = NonlinearField { dim: 1 };
+            let pf = precondition_field(&f, sched, 5.0);
+            for r in [0.0, 0.5, 1.0] {
+                let s = (pf.s_of_r)(r);
+                let t = (pf.t_of_r)(r);
+                assert!(s.is_finite() && s > 0.0, "{:?} s({r}) = {s}", sched);
+                assert!((0.0..=1.0).contains(&t), "{:?} t({r}) = {t}", sched);
+            }
+            assert!(((pf.s_of_r)(0.0) - 5.0).abs() < 1e-6, "{:?}", sched);
+            assert!(((pf.s_of_r)(1.0) - 1.0).abs() < 2e-3, "{:?}", sched);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Generic (stationary) ODE solvers of §3.3.1: Runge-Kutta family and
+//! Adams-Bashforth multistep, implemented as *direct* steppers.
+//!
+//! These serve three roles: (i) baselines in every benchmark, (ii) the
+//! cross-check targets for `taxonomy` (direct stepping must equal the
+//! NS-coefficient form bit-for-bit in exact arithmetic), and (iii) BNS
+//! initialization references.
+
+use anyhow::Result;
+
+use super::field::Field;
+use super::Solver;
+
+/// Time grids.
+pub fn uniform_times(n: usize) -> Vec<f64> {
+    (0..=n).map(|i| i as f64 / n as f64).collect()
+}
+
+/// Euler (RK1): x_{i+1} = x_i + h_i u(t_i, x_i). NFE = steps.
+pub struct Euler {
+    pub times: Vec<f64>,
+}
+
+impl Euler {
+    pub fn new(nfe: usize) -> Self {
+        Euler { times: uniform_times(nfe) }
+    }
+}
+
+impl Solver for Euler {
+    fn name(&self) -> String {
+        format!("euler{}", self.times.len() - 1)
+    }
+
+    fn nfe(&self) -> usize {
+        self.times.len() - 1
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        for w in self.times.windows(2) {
+            let h = (w[1] - w[0]) as f32;
+            let u = field.eval(w[0], &x)?;
+            for (xv, uv) in x.iter_mut().zip(u.iter()) {
+                *xv += h * uv;
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// RK-Midpoint (RK2): NFE = 2 * macro steps.
+pub struct Midpoint {
+    pub macro_times: Vec<f64>,
+}
+
+impl Midpoint {
+    /// `nfe` must be even.
+    pub fn new(nfe: usize) -> Self {
+        assert!(nfe % 2 == 0, "midpoint needs even NFE");
+        Midpoint { macro_times: uniform_times(nfe / 2) }
+    }
+}
+
+impl Solver for Midpoint {
+    fn name(&self) -> String {
+        format!("midpoint{}", (self.macro_times.len() - 1) * 2)
+    }
+
+    fn nfe(&self) -> usize {
+        (self.macro_times.len() - 1) * 2
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        for w in self.macro_times.windows(2) {
+            let h = w[1] - w[0];
+            let u1 = field.eval(w[0], &x)?;
+            let xi: Vec<f32> = x
+                .iter()
+                .zip(u1.iter())
+                .map(|(&xv, &uv)| xv + (0.5 * h) as f32 * uv)
+                .collect();
+            let u2 = field.eval(w[0] + 0.5 * h, &xi)?;
+            for (xv, uv) in x.iter_mut().zip(u2.iter()) {
+                *xv += h as f32 * uv;
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// Heun (explicit trapezoid, RK2): NFE = 2 * macro steps.
+pub struct Heun {
+    pub macro_times: Vec<f64>,
+}
+
+impl Heun {
+    pub fn new(nfe: usize) -> Self {
+        assert!(nfe % 2 == 0, "heun needs even NFE");
+        Heun { macro_times: uniform_times(nfe / 2) }
+    }
+}
+
+impl Solver for Heun {
+    fn name(&self) -> String {
+        format!("heun{}", (self.macro_times.len() - 1) * 2)
+    }
+
+    fn nfe(&self) -> usize {
+        (self.macro_times.len() - 1) * 2
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        for w in self.macro_times.windows(2) {
+            let h = w[1] - w[0];
+            let u1 = field.eval(w[0], &x)?;
+            let xe: Vec<f32> = x
+                .iter()
+                .zip(u1.iter())
+                .map(|(&xv, &uv)| xv + h as f32 * uv)
+                .collect();
+            let u2 = field.eval(w[1].min(1.0 - 1e-9), &xe)?;
+            for ((xv, &a), &b) in x.iter_mut().zip(u1.iter()).zip(u2.iter()) {
+                *xv += (0.5 * h) as f32 * (a + b);
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// Classic RK4: NFE = 4 * macro steps.
+pub struct Rk4 {
+    pub macro_times: Vec<f64>,
+}
+
+impl Rk4 {
+    pub fn new(nfe: usize) -> Self {
+        assert!(nfe % 4 == 0, "rk4 needs NFE divisible by 4");
+        Rk4 { macro_times: uniform_times(nfe / 4) }
+    }
+}
+
+impl Solver for Rk4 {
+    fn name(&self) -> String {
+        format!("rk4_{}", (self.macro_times.len() - 1) * 4)
+    }
+
+    fn nfe(&self) -> usize {
+        (self.macro_times.len() - 1) * 4
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        let axpy = |x: &[f32], k: &[f32], c: f64| -> Vec<f32> {
+            x.iter().zip(k.iter()).map(|(&a, &b)| a + c as f32 * b).collect()
+        };
+        for w in self.macro_times.windows(2) {
+            let h = w[1] - w[0];
+            let k1 = field.eval(w[0], &x)?;
+            let k2 = field.eval(w[0] + 0.5 * h, &axpy(&x, &k1, 0.5 * h))?;
+            let k3 = field.eval(w[0] + 0.5 * h, &axpy(&x, &k2, 0.5 * h))?;
+            let k4 = field.eval((w[0] + h).min(1.0 - 1e-9), &axpy(&x, &k3, h))?;
+            for i in 0..x.len() {
+                x[i] += (h / 6.0) as f32
+                    * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+            }
+        }
+        Ok(x)
+    }
+}
+
+/// 2-step Adams-Bashforth with Euler bootstrap (variable step form).
+pub struct Ab2 {
+    pub times: Vec<f64>,
+}
+
+impl Ab2 {
+    pub fn new(nfe: usize) -> Self {
+        Ab2 { times: uniform_times(nfe) }
+    }
+}
+
+impl Solver for Ab2 {
+    fn name(&self) -> String {
+        format!("ab2_{}", self.times.len() - 1)
+    }
+
+    fn nfe(&self) -> usize {
+        self.times.len() - 1
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        let mut prev_u: Option<Vec<f32>> = None;
+        for i in 0..self.times.len() - 1 {
+            let h = self.times[i + 1] - self.times[i];
+            let u = field.eval(self.times[i], &x)?;
+            match &prev_u {
+                None => {
+                    for (xv, uv) in x.iter_mut().zip(u.iter()) {
+                        *xv += h as f32 * uv;
+                    }
+                }
+                Some(pu) => {
+                    let hp = self.times[i] - self.times[i - 1];
+                    let w1 = h * (1.0 + h / (2.0 * hp));
+                    let w0 = -h * h / (2.0 * hp);
+                    for ((xv, &a), &b) in x.iter_mut().zip(u.iter()).zip(pu.iter()) {
+                        *xv += (w1 as f32) * a + (w0 as f32) * b;
+                    }
+                }
+            }
+            prev_u = Some(u);
+        }
+        Ok(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::{LinearField, NonlinearField};
+
+    /// Empirical order of accuracy: error ratio when halving h should be
+    /// ~2^order.
+    fn order_of(solver_at: impl Fn(usize) -> Box<dyn Solver>, base_nfe: usize) -> f64 {
+        let f = NonlinearField { dim: 1 };
+        let x0 = vec![0.8f32];
+        // dense reference
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap()[0] as f64;
+        let e1 = (solver_at(base_nfe).sample(&f, &x0).unwrap()[0] as f64 - reference).abs();
+        let e2 = (solver_at(base_nfe * 2).sample(&f, &x0).unwrap()[0] as f64 - reference).abs();
+        (e1 / e2).log2()
+    }
+
+    #[test]
+    fn euler_is_first_order() {
+        let p = order_of(|n| Box::new(Euler::new(n)), 16);
+        assert!((0.7..1.4).contains(&p), "order {p}");
+    }
+
+    #[test]
+    fn midpoint_is_second_order() {
+        let p = order_of(|n| Box::new(Midpoint::new(n)), 16);
+        assert!((1.6..2.6).contains(&p), "order {p}");
+    }
+
+    #[test]
+    fn heun_is_second_order() {
+        let p = order_of(|n| Box::new(Heun::new(n)), 16);
+        assert!((1.6..2.6).contains(&p), "order {p}");
+    }
+
+    #[test]
+    fn ab2_is_second_order() {
+        let p = order_of(|n| Box::new(Ab2::new(n)), 16);
+        assert!((1.5..2.8).contains(&p), "order {p}");
+    }
+
+    #[test]
+    fn rk4_solves_linear_exactly_enough() {
+        let f = LinearField { dim: 2, k: -1.3, c: 0.7 };
+        let x0 = vec![1.0f32, -2.0];
+        let out = Rk4::new(32).sample(&f, &x0).unwrap();
+        for (o, &x) in out.iter().zip(x0.iter()) {
+            assert!((o - f.exact_at_1(x)).abs() < 1e-5, "{o} vs {}", f.exact_at_1(x));
+        }
+    }
+
+    #[test]
+    fn accuracy_hierarchy_on_nonlinear() {
+        // at equal NFE = 16: rk4 < midpoint < euler error (generic order)
+        let f = NonlinearField { dim: 1 };
+        let x0 = vec![0.8f32];
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap()[0] as f64;
+        let err = |s: &dyn Solver| (s.sample(&f, &x0).unwrap()[0] as f64 - reference).abs();
+        let (ee, em, er) = (
+            err(&Euler::new(16)),
+            err(&Midpoint::new(16)),
+            err(&Rk4::new(16)),
+        );
+        assert!(ee > em && em > er, "euler {ee}, midpoint {em}, rk4 {er}");
+    }
+}

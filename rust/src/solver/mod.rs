@@ -1,0 +1,81 @@
+//! The solver library: every family in the paper's Figure 3 taxonomy.
+//!
+//! * `scheduler`   — Gaussian-path schedulers (mirror of the L2 python)
+//! * `field`       — the batched velocity-field abstraction + ST wrappers
+//! * `generic`     — stationary solvers: Euler / Midpoint / Heun / RK4 / AB2
+//! * `exponential` — dedicated solvers: DDIM, DPM-Solver++ (1S/2M)
+//! * `rk45`        — adaptive ground-truth solver
+//! * `ns`          — Non-Stationary solvers (Algorithm 1) + JSON artifacts
+//! * `taxonomy`    — constructive Thm 3.2: any family -> NS coefficients
+
+pub mod exponential;
+pub mod field;
+pub mod generic;
+pub mod ns;
+pub mod rk45;
+pub mod scheduler;
+pub mod taxonomy;
+
+use anyhow::Result;
+
+use field::Field;
+
+/// A fixed-NFE sampling solver.
+pub trait Solver: Send + Sync {
+    fn name(&self) -> String;
+
+    /// Number of velocity-field evaluations one `sample` performs.
+    fn nfe(&self) -> usize;
+
+    /// Drive `x0` (row-major [batch, dim]) to an approximation of x(1).
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl Solver for ns::NsSolver {
+    fn name(&self) -> String {
+        format!("ns{}", self.nfe())
+    }
+
+    fn nfe(&self) -> usize {
+        self.a.len()
+    }
+
+    fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        NsSolver::sample(self, field, x0)
+    }
+}
+
+pub use ns::NsSolver;
+
+/// Construct a named baseline solver at a given NFE — the registry the
+/// CLI, server and benches share. `sched` is the model's scheduler
+/// (needed by the dedicated solvers).
+pub fn baseline(
+    name: &str,
+    nfe: usize,
+    sched: scheduler::Scheduler,
+) -> Result<Box<dyn Solver>> {
+    Ok(match name {
+        "euler" => Box::new(generic::Euler::new(nfe)),
+        "midpoint" => Box::new(generic::Midpoint::new(nfe)),
+        "heun" => Box::new(generic::Heun::new(nfe)),
+        "rk4" => Box::new(generic::Rk4::new(nfe)),
+        "ab2" => Box::new(generic::Ab2::new(nfe)),
+        "ddim" => Box::new(exponential::Ddim::new(sched, nfe)),
+        "dpmpp1" => Box::new(exponential::DpmPp::new(sched, nfe, 1)),
+        "dpmpp" | "dpmpp2m" => Box::new(exponential::DpmPp::new(sched, nfe, 2)),
+        // Euler on EDM's rho-grid (the EDM discretization of §3.3.2)
+        "euler_edm" => Box::new(generic::Euler {
+            times: exponential::edm_times(nfe, sched, 7.0),
+        }),
+        // NS-form equivalents (exercise Algorithm 1 on the same math)
+        "euler_ns" => Box::new(taxonomy::euler_ns(&generic::uniform_times(nfe))),
+        "midpoint_ns" => Box::new(taxonomy::midpoint_ns(nfe)),
+        other => anyhow::bail!("unknown baseline solver '{other}'"),
+    })
+}
+
+/// All baseline names `baseline` accepts (for CLI help / sweeps).
+pub const BASELINES: &[&str] = &[
+    "euler", "midpoint", "heun", "rk4", "ab2", "ddim", "dpmpp1", "dpmpp2m",
+];

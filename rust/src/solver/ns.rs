@@ -1,0 +1,244 @@
+//! The Non-Stationary solver (paper §3.1): eq. 11/12 representation plus
+//! Algorithm 1 sampling, and the JSON interchange with the python-side
+//! BNS/BST trainer (python/compile/bns.py emits, we consume).
+
+use anyhow::{bail, Context, Result};
+
+use super::field::Field;
+use crate::util::json::Json;
+
+/// theta of eq. 12: a time grid T_n and per-step (a_i, b_i) with
+/// x_{i+1} = a_i x_0 + sum_{j<=i} b_ij u_j. `b` is dense lower-triangular.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NsSolver {
+    pub times: Vec<f64>, // n+1 entries, times[0] = 0, times[n] = 1
+    pub a: Vec<f64>,     // n entries
+    pub b: Vec<Vec<f64>>, // row i has i+1 entries
+}
+
+/// Metadata carried by distilled-solver artifacts (solver JSON files).
+#[derive(Debug, Clone, Default)]
+pub struct SolverMeta {
+    pub kind: String, // "bns" | "bst" | "init"
+    pub model: String,
+    pub guidance: f64,
+    pub sigma0: f64,
+    pub init: String,
+    pub val_psnr: f64,
+    pub init_val_psnr: f64,
+    pub iters: u64,
+    pub forwards: u64,
+    pub gt_nfe: u64,
+}
+
+impl NsSolver {
+    pub fn nfe(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Parameter-space dimension n(n+5)/2 + 1 of the paper (§3.2), minus
+    /// the two pinned endpoint times.
+    pub fn num_params(&self) -> usize {
+        let n = self.nfe();
+        n * (n + 5) / 2 + 1 - 2
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let n = self.nfe();
+        if self.times.len() != n + 1 {
+            bail!("times must have n+1 = {} entries, got {}", n + 1, self.times.len());
+        }
+        if self.times[0].abs() > 1e-9 || (self.times[n] - 1.0).abs() > 1e-6 {
+            bail!("times must start at 0 and end at 1");
+        }
+        for w in self.times.windows(2) {
+            if w[1] <= w[0] {
+                bail!("times must be strictly increasing ({} !< {})", w[0], w[1]);
+            }
+        }
+        for (i, row) in self.b.iter().enumerate() {
+            if row.len() != i + 1 {
+                bail!("b row {} must have {} entries, got {}", i, i + 1, row.len());
+            }
+        }
+        if self.b.len() != n {
+            bail!("b must have n = {} rows", n);
+        }
+        Ok(())
+    }
+
+    /// Algorithm 1: Non-Stationary sampling over a batched field.
+    /// `x0` is row-major [batch, dim]; returns x_n of the same shape.
+    pub fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
+        let mut x = x0.to_vec();
+        let mut hist: Vec<Vec<f32>> = Vec::with_capacity(self.nfe());
+        let mut acc = vec![0f32; x0.len()];
+        for i in 0..self.nfe() {
+            hist.push(field.eval(self.times[i], &x)?);
+            // x_{i+1} = a_i x_0 + sum_j b_ij u_j  (the ns_update hot op)
+            let a = self.a[i] as f32;
+            for (o, &x0v) in acc.iter_mut().zip(x0.iter()) {
+                *o = a * x0v;
+            }
+            for (j, row_b) in self.b[i].iter().enumerate() {
+                let bj = *row_b as f32;
+                if bj == 0.0 {
+                    continue;
+                }
+                for (o, &uv) in acc.iter_mut().zip(hist[j].iter()) {
+                    *o += bj * uv;
+                }
+            }
+            std::mem::swap(&mut x, &mut acc);
+        }
+        Ok(x)
+    }
+
+    /// Like `sample` but keeps every trajectory iterate (diagnostics).
+    pub fn sample_trajectory(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<Vec<f32>>> {
+        let mut traj = vec![x0.to_vec()];
+        let mut hist: Vec<Vec<f32>> = Vec::new();
+        for i in 0..self.nfe() {
+            let x = traj.last().unwrap();
+            hist.push(field.eval(self.times[i], x)?);
+            let mut next: Vec<f32> = x0.iter().map(|&v| self.a[i] as f32 * v).collect();
+            for (j, row_b) in self.b[i].iter().enumerate() {
+                let bj = *row_b as f32;
+                for (o, &uv) in next.iter_mut().zip(hist[j].iter()) {
+                    *o += bj * uv;
+                }
+            }
+            traj.push(next);
+        }
+        Ok(traj)
+    }
+
+    // -- JSON interchange -----------------------------------------------
+
+    pub fn from_json(j: &Json) -> Result<(NsSolver, SolverMeta)> {
+        let times = j.get("times").as_f64_vec().context("solver json: times")?;
+        let a = j.get("a").as_f64_vec().context("solver json: a")?;
+        let b = j
+            .get("b")
+            .as_arr()
+            .context("solver json: b")?
+            .iter()
+            .map(|row| row.as_f64_vec().context("solver json: b row"))
+            .collect::<Result<Vec<_>>>()?;
+        let solver = NsSolver { times, a, b };
+        solver.validate()?;
+        let g = |k: &str| j.get(k).as_f64().unwrap_or(0.0);
+        let s = |k: &str| j.get(k).as_str().unwrap_or("").to_string();
+        let meta = SolverMeta {
+            kind: s("kind"),
+            model: s("model"),
+            guidance: g("guidance"),
+            sigma0: if j.get("sigma0") == &Json::Null { 1.0 } else { g("sigma0") },
+            init: s("init"),
+            val_psnr: g("val_psnr"),
+            init_val_psnr: g("init_val_psnr"),
+            iters: g("iters") as u64,
+            forwards: g("forwards") as u64,
+            gt_nfe: g("gt_nfe") as u64,
+        };
+        Ok((solver, meta))
+    }
+
+    pub fn from_json_str(s: &str) -> Result<(NsSolver, SolverMeta)> {
+        let j = Json::parse(s).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("times", Json::arr_f64(&self.times)),
+            ("a", Json::arr_f64(&self.a)),
+            (
+                "b",
+                Json::Arr(self.b.iter().map(|row| Json::arr_f64(row)).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::LinearField;
+
+    fn euler_direct(f: &dyn Field, x0: &[f32], n: usize) -> Vec<f32> {
+        let mut x = x0.to_vec();
+        for i in 0..n {
+            let t = i as f64 / n as f64;
+            let u = f.eval(t, &x).unwrap();
+            for (xv, uv) in x.iter_mut().zip(u.iter()) {
+                *xv += (1.0 / n as f64) as f32 * uv;
+            }
+        }
+        x
+    }
+
+    fn euler_ns(n: usize) -> NsSolver {
+        // hand-built: x_{i+1} = x_i + h u_i, reduced form a_i = 1,
+        // b_ij = h for all j <= i.
+        let h = 1.0 / n as f64;
+        NsSolver {
+            times: (0..=n).map(|i| i as f64 * h).collect(),
+            a: vec![1.0; n],
+            b: (0..n).map(|i| vec![h; i + 1]).collect(),
+        }
+    }
+
+    #[test]
+    fn algorithm1_matches_euler() {
+        let f = LinearField { dim: 3, k: -0.8, c: 0.4 };
+        let x0 = vec![1.0f32, -0.5, 2.0];
+        let s = euler_ns(8);
+        s.validate().unwrap();
+        let a = s.sample(&f, &x0).unwrap();
+        let b = euler_direct(&f, &x0, 8);
+        for (u, v) in a.iter().zip(b.iter()) {
+            assert!((u - v).abs() < 1e-5, "{u} vs {v}");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = euler_ns(5);
+        let j = s.to_json().to_string();
+        let (s2, _) = NsSolver::from_json_str(&j).unwrap();
+        assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn validate_rejects_bad() {
+        let mut s = euler_ns(4);
+        s.times[2] = s.times[1]; // non-monotone
+        assert!(s.validate().is_err());
+        let mut s = euler_ns(4);
+        s.b[2].push(0.0); // wrong row length
+        assert!(s.validate().is_err());
+        let mut s = euler_ns(4);
+        s.times[4] = 0.9; // wrong endpoint
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn num_params_formula() {
+        // n(n+5)/2 + 1 - 2; e.g. paper Table 3: n=4 -> 18, n=8 -> 52,
+        // n=16 -> 168.
+        assert_eq!(euler_ns(4).num_params(), 17); // 18 incl. one endpoint convention
+        assert_eq!(euler_ns(8).num_params(), 51);
+        assert_eq!(euler_ns(16).num_params(), 167);
+    }
+
+    #[test]
+    fn trajectory_has_n_plus_1_points() {
+        let f = LinearField { dim: 2, k: 0.3, c: 0.0 };
+        let s = euler_ns(6);
+        let traj = s.sample_trajectory(&f, &[1.0, 2.0]).unwrap();
+        assert_eq!(traj.len(), 7);
+        let last = s.sample(&f, &[1.0, 2.0]).unwrap();
+        assert_eq!(traj.last().unwrap(), &last);
+    }
+}

@@ -1,0 +1,181 @@
+//! Adaptive Dormand-Prince RK45 — the ground-truth solver (Shampine 1986
+//! in the paper). Mirrors python/compile/ode.py: same tableau, same step
+//! control, so GT samples agree across the build and request paths.
+
+use anyhow::{bail, Result};
+
+use super::field::Field;
+
+const C: [f64; 7] = [0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
+const B5: [f64; 7] = [
+    35.0 / 384.0,
+    0.0,
+    500.0 / 1113.0,
+    125.0 / 192.0,
+    -2187.0 / 6784.0,
+    11.0 / 84.0,
+    0.0,
+];
+const B4: [f64; 7] = [
+    5179.0 / 57600.0,
+    0.0,
+    7571.0 / 16695.0,
+    393.0 / 640.0,
+    -92097.0 / 339200.0,
+    187.0 / 2100.0,
+    1.0 / 40.0,
+];
+
+fn a_row(i: usize) -> &'static [f64] {
+    const A1: [f64; 1] = [1.0 / 5.0];
+    const A2: [f64; 2] = [3.0 / 40.0, 9.0 / 40.0];
+    const A3: [f64; 3] = [44.0 / 45.0, -56.0 / 15.0, 32.0 / 9.0];
+    const A4: [f64; 4] = [19372.0 / 6561.0, -25360.0 / 2187.0, 64448.0 / 6561.0, -212.0 / 729.0];
+    const A5: [f64; 5] = [
+        9017.0 / 3168.0,
+        -355.0 / 33.0,
+        46732.0 / 5247.0,
+        49.0 / 176.0,
+        -5103.0 / 18656.0,
+    ];
+    const A6: [f64; 6] = [
+        35.0 / 384.0,
+        0.0,
+        500.0 / 1113.0,
+        125.0 / 192.0,
+        -2187.0 / 6784.0,
+        11.0 / 84.0,
+    ];
+    match i {
+        1 => &A1,
+        2 => &A2,
+        3 => &A3,
+        4 => &A4,
+        5 => &A5,
+        6 => &A6,
+        _ => unreachable!(),
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Rk45Opts {
+    pub rtol: f64,
+    pub atol: f64,
+    pub h0: f64,
+    pub max_nfe: usize,
+}
+
+impl Default for Rk45Opts {
+    fn default() -> Self {
+        Rk45Opts { rtol: 1e-5, atol: 1e-5, h0: 0.05, max_nfe: 10_000 }
+    }
+}
+
+/// Integrate dx/dt = u(t, x) from 0 to 1 adaptively (batched, shared step
+/// size with an RMS error norm over the whole batch — matches ode.py).
+/// Returns (x1, nfe).
+pub fn rk45(field: &dyn Field, x0: &[f32], opts: &Rk45Opts) -> Result<(Vec<f32>, usize)> {
+    let n = x0.len();
+    let mut x: Vec<f64> = x0.iter().map(|&v| v as f64).collect();
+    let mut t = 0.0f64;
+    let mut h = opts.h0;
+    let mut nfe = 0usize;
+
+    let eval = |t: f64, x: &[f64]| -> Result<Vec<f64>> {
+        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        Ok(field.eval(t.min(1.0 - 1e-9), &xf)?.iter().map(|&v| v as f64).collect())
+    };
+
+    let mut k1 = eval(t, &x)?;
+    nfe += 1;
+    while t < 1.0 - 1e-12 {
+        h = h.min(1.0 - t);
+        let mut ks: Vec<Vec<f64>> = vec![k1.clone()];
+        for i in 1..7 {
+            let mut xi = x.clone();
+            for (j, &a) in a_row(i).iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                for (d, &kv) in xi.iter_mut().zip(ks[j].iter()) {
+                    *d += h * a * kv;
+                }
+            }
+            ks.push(eval(t + C[i] * h, &xi)?);
+            nfe += 1;
+        }
+        let mut x5 = x.clone();
+        let mut x4 = x.clone();
+        for j in 0..7 {
+            for i in 0..n {
+                x5[i] += h * B5[j] * ks[j][i];
+                x4[i] += h * B4[j] * ks[j][i];
+            }
+        }
+        let mut err2 = 0.0;
+        for i in 0..n {
+            let scale = opts.atol + opts.rtol * x[i].abs().max(x5[i].abs());
+            let e = (x5[i] - x4[i]) / scale;
+            err2 += e * e;
+        }
+        let err = (err2 / n as f64).sqrt();
+        if err <= 1.0 {
+            t += h;
+            x = x5;
+            k1 = ks.pop().unwrap(); // FSAL
+        }
+        let factor = 0.9 * err.max(1e-10).powf(-0.2);
+        h *= factor.clamp(0.2, 5.0);
+        if nfe > opts.max_nfe {
+            bail!("rk45 exceeded max_nfe = {} (err = {:.3e})", opts.max_nfe, err);
+        }
+    }
+    Ok((x.iter().map(|&v| v as f32).collect(), nfe))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::{GaussianTargetField, LinearField, NonlinearField};
+    use crate::solver::generic::Rk4;
+    use crate::solver::scheduler::Scheduler;
+    use crate::solver::Solver;
+
+    #[test]
+    fn linear_exact() {
+        let f = LinearField { dim: 3, k: -1.1, c: 0.6 };
+        let x0 = vec![1.0f32, 0.0, -2.0];
+        let (out, nfe) = rk45(&f, &x0, &Rk45Opts::default()).unwrap();
+        for (o, &x) in out.iter().zip(x0.iter()) {
+            assert!((o - f.exact_at_1(x)).abs() < 1e-4, "{o} vs {}", f.exact_at_1(x));
+        }
+        assert!(nfe < 200, "nfe {nfe}");
+    }
+
+    #[test]
+    fn tighter_tolerance_more_steps() {
+        let f = NonlinearField { dim: 4 };
+        let x0 = vec![0.5f32, -0.5, 1.0, 2.0];
+        let (_, n1) = rk45(&f, &x0, &Rk45Opts { rtol: 1e-3, atol: 1e-3, ..Default::default() }).unwrap();
+        let (_, n2) = rk45(&f, &x0, &Rk45Opts { rtol: 1e-8, atol: 1e-8, ..Default::default() }).unwrap();
+        assert!(n2 > n1, "{n2} !> {n1}");
+    }
+
+    #[test]
+    fn matches_dense_rk4() {
+        let f = GaussianTargetField { dim: 2, sched: Scheduler::FmOt, mu: 0.3, s1: 0.4 };
+        let x0 = vec![0.9f32, -1.4];
+        let (a, _) = rk45(&f, &x0, &Rk45Opts::default()).unwrap();
+        let b = Rk4::new(512).sample(&f, &x0).unwrap();
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn nfe_budget_enforced() {
+        let f = NonlinearField { dim: 1 };
+        let r = rk45(&f, &[1.0], &Rk45Opts { rtol: 1e-12, atol: 1e-14, max_nfe: 20, ..Default::default() });
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,229 @@
+//! Rust mirror of the Gaussian-path schedulers (python/compile/schedulers.py).
+//!
+//! Analytic alpha/sigma and derivatives for FM-OT, cosine, VP and VE, the
+//! snr machinery, and the Table-1 velocity-field coefficients. The python
+//! side exports a (t, alpha, sigma) cross-check grid in the artifacts
+//! manifest; `runtime::artifact` tests assert the two implementations
+//! agree to float32 precision.
+
+use std::f64::consts::PI;
+
+/// VP constants from eq. 60.
+pub const VP_BETA_MAX: f64 = 20.0;
+pub const VP_BETA_MIN: f64 = 0.1;
+pub const EDM_SIGMA_MAX: f64 = 80.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Scheduler {
+    FmOt,
+    Cosine,
+    Vp,
+    Ve,
+}
+
+/// Model output parametrizations of Table 1.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Parametrization {
+    Velocity,
+    Eps,
+    X,
+}
+
+fn vp_xi(s: f64) -> f64 {
+    (-0.25 * s * s * (VP_BETA_MAX - VP_BETA_MIN) - 0.5 * s * VP_BETA_MIN).exp()
+}
+
+fn vp_dxi(s: f64) -> f64 {
+    vp_xi(s) * (-0.5 * s * (VP_BETA_MAX - VP_BETA_MIN) - 0.5 * VP_BETA_MIN)
+}
+
+impl Scheduler {
+    pub fn from_name(name: &str) -> Option<Scheduler> {
+        match name {
+            "fm_ot" => Some(Scheduler::FmOt),
+            "cosine" => Some(Scheduler::Cosine),
+            "vp" => Some(Scheduler::Vp),
+            "ve" => Some(Scheduler::Ve),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheduler::FmOt => "fm_ot",
+            Scheduler::Cosine => "cosine",
+            Scheduler::Vp => "vp",
+            Scheduler::Ve => "ve",
+        }
+    }
+
+    pub fn alpha(&self, t: f64) -> f64 {
+        match self {
+            Scheduler::FmOt => t,
+            Scheduler::Cosine => (0.5 * PI * t).sin(),
+            Scheduler::Vp => vp_xi(1.0 - t),
+            Scheduler::Ve => 1.0,
+        }
+    }
+
+    pub fn sigma(&self, t: f64) -> f64 {
+        match self {
+            Scheduler::FmOt => 1.0 - t,
+            Scheduler::Cosine => (0.5 * PI * t).cos(),
+            Scheduler::Vp => (1.0 - vp_xi(1.0 - t).powi(2)).max(1e-12).sqrt(),
+            Scheduler::Ve => EDM_SIGMA_MAX * (1.0 - t),
+        }
+    }
+
+    pub fn dalpha(&self, t: f64) -> f64 {
+        match self {
+            Scheduler::FmOt => 1.0,
+            Scheduler::Cosine => 0.5 * PI * (0.5 * PI * t).cos(),
+            Scheduler::Vp => -vp_dxi(1.0 - t),
+            Scheduler::Ve => 0.0,
+        }
+    }
+
+    pub fn dsigma(&self, t: f64) -> f64 {
+        match self {
+            Scheduler::FmOt => -1.0,
+            Scheduler::Cosine => -0.5 * PI * (0.5 * PI * t).sin(),
+            Scheduler::Vp => {
+                let a = self.alpha(t);
+                -a * self.dalpha(t) / self.sigma(t)
+            }
+            Scheduler::Ve => -EDM_SIGMA_MAX,
+        }
+    }
+
+    /// snr(t) = alpha / sigma (strictly increasing; +inf at sigma = 0).
+    pub fn snr(&self, t: f64) -> f64 {
+        self.alpha(t) / self.sigma(t)
+    }
+
+    /// snr^{-1} — closed form per scheduler, matching the python side.
+    pub fn snr_inv(&self, y: f64) -> f64 {
+        match self {
+            Scheduler::FmOt => 1.0 - 1.0 / (1.0 + y),
+            Scheduler::Cosine => (2.0 / PI) * y.atan(),
+            Scheduler::Vp => {
+                let xi = 1.0 / (1.0 + y.max(1e-30).powi(-2)).sqrt();
+                let (b, bb) = (VP_BETA_MIN, VP_BETA_MAX);
+                let log_xi = xi.clamp(1e-30, 1.0).ln();
+                let disc = (0.25 * b * b - (bb - b) * log_xi).max(0.0).sqrt();
+                let s = (-0.5 * b + disc) / (0.5 * (bb - b));
+                1.0 - s
+            }
+            Scheduler::Ve => 1.0 - 1.0 / (EDM_SIGMA_MAX * y.max(1e-30)),
+        }
+    }
+
+    /// Table 1: (beta_t, gamma_t) with u_t(x) = beta x + gamma f(x).
+    /// For eps/x the coefficient time is clamped to [1e-4, 1 - 1e-3]
+    /// (endpoint singularities; mirrors model.velocity_from_f).
+    pub fn uv_coeffs(&self, t: f64, p: Parametrization) -> (f64, f64) {
+        match p {
+            Parametrization::Velocity => (0.0, 1.0),
+            Parametrization::Eps => {
+                let t = t.clamp(1e-4, 1.0 - 1e-3);
+                let (a, s) = (self.alpha(t), self.sigma(t));
+                let (da, ds) = (self.dalpha(t), self.dsigma(t));
+                (da / a, (ds * a - s * da) / a)
+            }
+            Parametrization::X => {
+                let t = t.clamp(1e-4, 1.0 - 1e-3);
+                let (a, s) = (self.alpha(t), self.sigma(t));
+                let (da, ds) = (self.dalpha(t), self.dsigma(t));
+                (ds / s, (s * da - ds * a) / s)
+            }
+        }
+    }
+}
+
+impl Parametrization {
+    pub fn from_name(name: &str) -> Option<Parametrization> {
+        match name {
+            "velocity" => Some(Parametrization::Velocity),
+            "eps" => Some(Parametrization::Eps),
+            "x" => Some(Parametrization::X),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL: [Scheduler; 4] = [Scheduler::FmOt, Scheduler::Cosine, Scheduler::Vp, Scheduler::Ve];
+
+    #[test]
+    fn boundary_conditions() {
+        // eq. 4: alpha_1 = 1, sigma_1 = 0, sigma_0 > 0 (alpha_0 ~ 0)
+        for s in [Scheduler::FmOt, Scheduler::Cosine, Scheduler::Vp] {
+            assert!((s.alpha(1.0) - 1.0).abs() < 1e-6, "{:?}", s);
+            assert!(s.sigma(1.0).abs() < 1e-5, "{:?}", s);
+            assert!(s.sigma(0.0) > 0.5, "{:?}", s);
+            assert!(s.alpha(0.0) < 0.01, "{:?}", s);
+        }
+    }
+
+    #[test]
+    fn snr_monotone() {
+        for s in ALL {
+            let mut prev = s.snr(0.001);
+            for i in 1..100 {
+                let t = 0.001 + 0.99 * i as f64 / 100.0;
+                let cur = s.snr(t);
+                assert!(cur > prev, "{:?} at t={}", s, t);
+                prev = cur;
+            }
+        }
+    }
+
+    #[test]
+    fn snr_inv_roundtrip() {
+        for s in ALL {
+            for i in 1..20 {
+                let t = i as f64 / 20.0 * 0.95 + 0.01;
+                let back = s.snr_inv(s.snr(t));
+                assert!((back - t).abs() < 1e-6, "{:?} t={} back={}", s, t, back);
+            }
+        }
+    }
+
+    #[test]
+    fn derivatives_match_finite_difference() {
+        let h = 1e-6;
+        for s in ALL {
+            for i in 1..20 {
+                let t = i as f64 / 21.0;
+                let fd_a = (s.alpha(t + h) - s.alpha(t - h)) / (2.0 * h);
+                let fd_s = (s.sigma(t + h) - s.sigma(t - h)) / (2.0 * h);
+                assert!((fd_a - s.dalpha(t)).abs() < 1e-4 * (1.0 + s.dalpha(t).abs()), "{:?}", s);
+                assert!((fd_s - s.dsigma(t)).abs() < 1e-4 * (1.0 + s.dsigma(t).abs()), "{:?}", s);
+            }
+        }
+    }
+
+    #[test]
+    fn velocity_coeffs_consistent() {
+        // For the ideal path x_t = alpha x1 + sigma x0, the velocity is
+        // dalpha x1 + dsigma x0; check eps parametrization reproduces it:
+        // with f = x0 (true noise), u = beta x + gamma x0 must equal it.
+        let s = Scheduler::Vp;
+        let (x1, x0) = (0.7, -0.3);
+        for i in 1..10 {
+            let t = i as f64 / 10.0 * 0.9 + 0.05;
+            let x = s.alpha(t) * x1 + s.sigma(t) * x0;
+            let truth = s.dalpha(t) * x1 + s.dsigma(t) * x0;
+            let (beta, gamma) = s.uv_coeffs(t, Parametrization::Eps);
+            let u = beta * x + gamma * x0;
+            assert!((u - truth).abs() < 1e-6, "t={t}: {u} vs {truth}");
+            // and x-parametrization with f = x1 (true data)
+            let (beta, gamma) = s.uv_coeffs(t, Parametrization::X);
+            let u = beta * x + gamma * x1;
+            assert!((u - truth).abs() < 1e-6, "t={t}: {u} vs {truth}");
+        }
+    }
+}

@@ -1,0 +1,374 @@
+//! Constructive Theorem 3.2: every solver family of Figure 3 expressed as
+//! Non-Stationary coefficients.
+//!
+//! `AffineTrace` executes a solver symbolically over the affine state
+//! algebra `a·x0 + Σ b_j·u_j` (numeric coefficients, symbolic velocity
+//! evaluations). Any method whose update is a linear combination of
+//! previous states and velocities — i.e. exactly the NS family by
+//! Prop. 3.1 — can be traced, which yields its exact `NsSolver` form.
+//! The unit + integration tests assert direct stepping == NS-form
+//! sampling on nonlinear fields, for every family: that *is* the
+//! inclusion chain RK ⊂ ST-RK ⊂ NS, Multistep ⊂ ST-Multistep ⊂ NS,
+//! Exp-RK/Multistep ⊂ NS.
+
+use super::ns::NsSolver;
+use super::scheduler::{Parametrization, Scheduler};
+
+/// Affine expression a·x0 + b·(u_0..u_{k-1}).
+#[derive(Debug, Clone)]
+pub struct Aff {
+    pub a: f64,
+    pub b: Vec<f64>,
+}
+
+impl Aff {
+    fn lift(&self, k: usize) -> Vec<f64> {
+        let mut b = self.b.clone();
+        b.resize(k, 0.0);
+        b
+    }
+
+    pub fn add(&self, other: &Aff) -> Aff {
+        let k = self.b.len().max(other.b.len());
+        let (mut sb, ob) = (self.lift(k), other.lift(k));
+        for (x, y) in sb.iter_mut().zip(ob.iter()) {
+            *x += y;
+        }
+        Aff { a: self.a + other.a, b: sb }
+    }
+
+    pub fn scale(&self, c: f64) -> Aff {
+        Aff { a: self.a * c, b: self.b.iter().map(|x| x * c).collect() }
+    }
+
+    /// self + c * other (the workhorse).
+    pub fn axpy(&self, c: f64, other: &Aff) -> Aff {
+        self.add(&other.scale(c))
+    }
+}
+
+/// Symbolic execution context. Call `eval_u` wherever a concrete solver
+/// would evaluate the velocity field.
+pub struct AffineTrace {
+    times: Vec<f64>,
+    rows_a: Vec<f64>,
+    rows_b: Vec<Vec<f64>>,
+    k: usize,
+}
+
+impl AffineTrace {
+    pub fn new() -> Self {
+        AffineTrace { times: Vec::new(), rows_a: Vec::new(), rows_b: Vec::new(), k: 0 }
+    }
+
+    pub fn x0(&self) -> Aff {
+        Aff { a: 1.0, b: Vec::new() }
+    }
+
+    /// Record u_k := u(t, state); the state becomes trajectory point x_k.
+    pub fn eval_u(&mut self, state: &Aff, t: f64) -> Aff {
+        if self.k == 0 {
+            assert!(state.a == 1.0 && state.b.is_empty(), "first eval must be at x0");
+        } else {
+            self.rows_a.push(state.a);
+            self.rows_b.push(state.lift(self.k));
+        }
+        self.times.push(t);
+        let mut b = vec![0.0; self.k + 1];
+        b[self.k] = 1.0;
+        self.k += 1;
+        Aff { a: 0.0, b }
+    }
+
+    pub fn finish(mut self, final_state: &Aff, t_final: f64) -> NsSolver {
+        self.rows_a.push(final_state.a);
+        self.rows_b.push(final_state.lift(self.k));
+        self.times.push(t_final);
+        NsSolver {
+            times: self.times,
+            a: self.rows_a,
+            b: self
+                .rows_b
+                .into_iter()
+                .enumerate()
+                .map(|(i, row)| row[..=i].to_vec())
+                .collect(),
+        }
+    }
+}
+
+impl Default for AffineTrace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Proposition 3.1, eq. 32: reduce a naive (c, d) update rule
+/// x_{i+1} = X_i c_i + U_i d_i to the (a, b) form. Used by tests and by
+/// ST-transform folding.
+pub fn reduce_cd_to_ab(c_rows: &[Vec<f64>], d_rows: &[Vec<f64>]) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let n = c_rows.len();
+    let mut a = vec![0.0; n];
+    let mut b: Vec<Vec<f64>> = (0..n).map(|i| vec![0.0; i + 1]).collect();
+    for k in 0..n {
+        let (ck, dk) = (&c_rows[k], &d_rows[k]);
+        a[k] = ck[0] + (0..k).map(|j| ck[j + 1] * a[j]).sum::<f64>();
+        for j in 0..k {
+            b[k][j] = (j..k).map(|l| ck[l + 1] * b[l][j]).sum::<f64>() + dk[j];
+        }
+        b[k][k] = dk[k];
+    }
+    (a, b)
+}
+
+// ---------------------------------------------------------------------------
+// NS-coefficient generators for each family (mirrors python/compile/ns.py)
+// ---------------------------------------------------------------------------
+
+pub fn euler_ns(times: &[f64]) -> NsSolver {
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    for w in times.windows(2) {
+        let u = tr.eval_u(&x, w[0]);
+        x = x.axpy(w[1] - w[0], &u);
+    }
+    tr.finish(&x, *times.last().unwrap())
+}
+
+pub fn midpoint_ns(nfe: usize) -> NsSolver {
+    assert!(nfe % 2 == 0);
+    let s = super::generic::uniform_times(nfe / 2);
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    for w in s.windows(2) {
+        let h = w[1] - w[0];
+        let u1 = tr.eval_u(&x, w[0]);
+        let xi = x.axpy(0.5 * h, &u1);
+        let u2 = tr.eval_u(&xi, w[0] + 0.5 * h);
+        x = x.axpy(h, &u2);
+    }
+    tr.finish(&x, 1.0)
+}
+
+pub fn rk4_ns(nfe: usize) -> NsSolver {
+    assert!(nfe % 4 == 0);
+    let s = super::generic::uniform_times(nfe / 4);
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    for w in s.windows(2) {
+        let h = w[1] - w[0];
+        let k1 = tr.eval_u(&x, w[0]);
+        let k2 = tr.eval_u(&x.axpy(0.5 * h, &k1), w[0] + 0.5 * h);
+        // +1e-6h nudges keep the NS grid strictly monotone (repeated RK
+        // nodes); the coefficients themselves use the exact tableau.
+        let k3 = tr.eval_u(&x.axpy(0.5 * h, &k2), w[0] + 0.5 * h + 1e-6 * h);
+        let k4 = tr.eval_u(&x.axpy(h, &k3), w[0] + h * (1.0 - 1e-6));
+        let sum = k1.add(&k2.scale(2.0)).add(&k3.scale(2.0)).add(&k4);
+        x = x.axpy(h / 6.0, &sum);
+    }
+    tr.finish(&x, 1.0)
+}
+
+pub fn ab2_ns(times: &[f64]) -> NsSolver {
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    let mut prev: Option<Aff> = None;
+    for i in 0..times.len() - 1 {
+        let h = times[i + 1] - times[i];
+        let u = tr.eval_u(&x, times[i]);
+        match &prev {
+            None => x = x.axpy(h, &u),
+            Some(pu) => {
+                let hp = times[i] - times[i - 1];
+                x = x.axpy(h * (1.0 + h / (2.0 * hp)), &u).axpy(-h * h / (2.0 * hp), pu);
+            }
+        }
+        prev = Some(u);
+    }
+    tr.finish(&x, *times.last().unwrap())
+}
+
+/// f = (u - beta x)/gamma as an affine expression.
+fn pred_from_u(sched: Scheduler, p: Parametrization, t: f64, x: &Aff, u: &Aff) -> Aff {
+    let (beta, gamma) = sched.uv_coeffs(t, p);
+    u.axpy(-beta, x).scale(1.0 / gamma)
+}
+
+pub fn ddim_ns(sched: Scheduler, times: &[f64]) -> NsSolver {
+    assert!(sched.alpha(times[0]) > 0.0, "DDIM needs alpha(t_0) > 0");
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    for w in times.windows(2) {
+        let (a0, s0) = (sched.alpha(w[0]), sched.sigma(w[0]));
+        let (a1, s1) = (sched.alpha(w[1]), sched.sigma(w[1]));
+        let u = tr.eval_u(&x, w[0]);
+        let eps = pred_from_u(sched, Parametrization::Eps, w[0], &x, &u);
+        x = x.scale(a1 / a0).add(&eps.scale(s1 - a1 * s0 / a0));
+    }
+    tr.finish(&x, *times.last().unwrap())
+}
+
+pub fn dpmpp_ns(sched: Scheduler, times: &[f64], order: usize) -> NsSolver {
+    let lam = |t: f64| sched.alpha(t).max(1e-30).ln() - sched.sigma(t).max(1e-30).ln();
+    let n = times.len() - 1;
+    let mut tr = AffineTrace::new();
+    let mut x = tr.x0();
+    let mut prev: Option<(Aff, f64)> = None;
+    for (i, w) in times.windows(2).enumerate() {
+        let (s0, s1) = (sched.sigma(w[0]), sched.sigma(w[1]));
+        let a1 = sched.alpha(w[1]);
+        let h = lam(w[1]) - lam(w[0]);
+        let u = tr.eval_u(&x, w[0]);
+        let xhat = pred_from_u(sched, Parametrization::X, w[0], &x, &u);
+        // lower_order_final, mirroring exponential::DpmPp
+        let use_second = order >= 2 && prev.is_some() && i + 1 < n;
+        let d = match (&prev, use_second) {
+            (Some((ph, phh)), true) => {
+                let r = phh / h;
+                xhat.scale(1.0 + 1.0 / (2.0 * r)).axpy(-1.0 / (2.0 * r), ph)
+            }
+            _ => xhat.clone(),
+        };
+        x = x.scale(s1 / s0).add(&d.scale(a1 * (1.0 - (-h).exp())));
+        prev = Some((xhat, h));
+    }
+    tr.finish(&x, *times.last().unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::exponential::{shifted_times, Ddim, DpmPp};
+    use crate::solver::field::NonlinearField;
+    use crate::solver::generic::{uniform_times, Ab2, Euler, Midpoint, Rk4};
+    use crate::solver::Solver;
+
+    fn assert_same(a: &[f32], b: &[f32], tol: f32) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + y.abs()), "{x} vs {y}");
+        }
+    }
+
+    /// Each generic family, direct vs NS-form, on a nonlinear field:
+    /// the inclusion "generic ⊂ NS" of Thm 3.2, computationally.
+    #[test]
+    fn euler_equals_ns_form() {
+        let f = NonlinearField { dim: 3 };
+        let x0 = vec![0.5f32, -1.0, 1.5];
+        let direct = Euler::new(8).sample(&f, &x0).unwrap();
+        let ns = euler_ns(&uniform_times(8)).sample(&f, &x0).unwrap();
+        assert_same(&ns, &direct, 1e-6);
+    }
+
+    #[test]
+    fn midpoint_equals_ns_form() {
+        let f = NonlinearField { dim: 3 };
+        let x0 = vec![0.5f32, -1.0, 1.5];
+        let direct = Midpoint::new(8).sample(&f, &x0).unwrap();
+        let ns = midpoint_ns(8).sample(&f, &x0).unwrap();
+        assert_same(&ns, &direct, 1e-5);
+    }
+
+    #[test]
+    fn rk4_equals_ns_form() {
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.8f32, -0.3];
+        let direct = Rk4::new(8).sample(&f, &x0).unwrap();
+        let ns = rk4_ns(8).sample(&f, &x0).unwrap();
+        // rk4 direct uses exact nodes; ns uses 1e-6-nudged evaluation
+        // times, so allow a slightly looser tolerance.
+        assert_same(&ns, &direct, 1e-4);
+    }
+
+    #[test]
+    fn ab2_equals_ns_form() {
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.8f32, -0.3];
+        let direct = Ab2::new(8).sample(&f, &x0).unwrap();
+        let ns = ab2_ns(&uniform_times(8)).sample(&f, &x0).unwrap();
+        assert_same(&ns, &direct, 1e-5);
+    }
+
+    #[test]
+    fn ddim_equals_ns_form() {
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.4f32, -0.9];
+        let d = Ddim::new(Scheduler::Vp, 8);
+        let direct = d.sample(&f, &x0).unwrap();
+        let ns = ddim_ns(Scheduler::Vp, &d.times).sample(&f, &x0).unwrap();
+        assert_same(&ns, &direct, 1e-4);
+    }
+
+    #[test]
+    fn ddim_equals_ns_form_shifted_fm() {
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.4f32, -0.9];
+        let times = shifted_times(8, 0.05);
+        let direct = Ddim { sched: Scheduler::FmOt, times: times.clone() }.sample(&f, &x0).unwrap();
+        let ns = ddim_ns(Scheduler::FmOt, &times).sample(&f, &x0).unwrap();
+        assert_same(&ns, &direct, 1e-4);
+    }
+
+    #[test]
+    fn dpmpp_equals_ns_form() {
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.4f32, -0.9];
+        for order in [1, 2] {
+            for sched in [Scheduler::FmOt, Scheduler::Vp, Scheduler::Cosine] {
+                let d = DpmPp::new(sched, 8, order);
+                let direct = d.sample(&f, &x0).unwrap();
+                let ns = dpmpp_ns(sched, &d.times, order).sample(&f, &x0).unwrap();
+                assert_same(&ns, &direct, 1e-4);
+            }
+        }
+    }
+
+    /// Prop 3.1 reduction: random naive (c, d) rule vs reduced (a, b).
+    #[test]
+    fn prop31_reduction() {
+        let n = 6;
+        // deterministic pseudo-random coefficients
+        let mut state = 12345u64;
+        let mut next = || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((state >> 33) as f64 / (1u64 << 31) as f64) - 0.5
+        };
+        let c_rows: Vec<Vec<f64>> = (0..n).map(|i| (0..=i).map(|_| next() * 0.8).collect()).collect();
+        let d_rows: Vec<Vec<f64>> = (0..n).map(|i| (0..=i).map(|_| next() * 0.5).collect()).collect();
+        let times = uniform_times(n);
+        let f = NonlinearField { dim: 2 };
+        let x0 = vec![0.7f32, -0.2];
+
+        // naive stepping keeping all X, U
+        let mut xs: Vec<Vec<f32>> = vec![x0.clone()];
+        let mut us: Vec<Vec<f32>> = Vec::new();
+        use crate::solver::field::Field;
+        for i in 0..n {
+            us.push(f.eval(times[i], &xs[i]).unwrap());
+            let mut next_x = vec![0f32; 2];
+            for j in 0..=i {
+                for k in 0..2 {
+                    next_x[k] += c_rows[i][j] as f32 * xs[j][k] + d_rows[i][j] as f32 * us[j][k];
+                }
+            }
+            xs.push(next_x);
+        }
+
+        let (a, b) = reduce_cd_to_ab(&c_rows, &d_rows);
+        let solver = NsSolver { times, a, b };
+        solver.validate().unwrap();
+        let reduced = solver.sample(&f, &x0).unwrap();
+        assert_same(&reduced, xs.last().unwrap(), 1e-4);
+    }
+
+    /// The NS form of a k-th order method keeps its order.
+    #[test]
+    fn ns_form_preserves_accuracy_order() {
+        let f = NonlinearField { dim: 1 };
+        let x0 = vec![0.8f32];
+        let reference = Rk4::new(512).sample(&f, &x0).unwrap()[0] as f64;
+        let err = |s: &NsSolver| (s.sample(&f, &x0).unwrap()[0] as f64 - reference).abs();
+        let p = (err(&midpoint_ns(16)) / err(&midpoint_ns(32))).log2();
+        assert!((1.5..2.7).contains(&p), "order {p}");
+    }
+}

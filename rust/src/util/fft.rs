@@ -1,0 +1,159 @@
+//! Radix-2 FFT for the audio perceptual proxies (Tables 6/7 substitutes):
+//! spectral-envelope "style" similarity needs power spectra of length-128
+//! waveforms. Offline substrate (no FFT crate in the image).
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 Cooley-Tukey over interleaved (re, im).
+/// `n` must be a power of two.
+pub fn fft_inplace(re: &mut [f64], im: &mut [f64]) {
+    let n = re.len();
+    assert_eq!(n, im.len());
+    assert!(n.is_power_of_two(), "fft length must be a power of two");
+    // bit-reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    let mut len = 2;
+    while len <= n {
+        let ang = -2.0 * PI / len as f64;
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let (mut cr, mut ci) = (1.0f64, 0.0f64);
+            for k in 0..len / 2 {
+                let (ur, ui) = (re[i + k], im[i + k]);
+                let (vr, vi) = (
+                    re[i + k + len / 2] * cr - im[i + k + len / 2] * ci,
+                    re[i + k + len / 2] * ci + im[i + k + len / 2] * cr,
+                );
+                re[i + k] = ur + vr;
+                im[i + k] = ui + vi;
+                re[i + k + len / 2] = ur - vr;
+                im[i + k + len / 2] = ui - vi;
+                let ncr = cr * wr - ci * wi;
+                ci = cr * wi + ci * wr;
+                cr = ncr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Power spectrum (first n/2+1 bins) of a real signal.
+pub fn power_spectrum(x: &[f32]) -> Vec<f64> {
+    let n = x.len().next_power_of_two();
+    let mut re: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+    re.resize(n, 0.0);
+    let mut im = vec![0.0f64; n];
+    fft_inplace(&mut re, &mut im);
+    (0..=n / 2).map(|k| re[k] * re[k] + im[k] * im[k]).collect()
+}
+
+/// Log-band spectral envelope: mean log-power in `bands` geometric bands.
+/// This is the "speaker style" embedding proxy for Table 6.
+pub fn spectral_envelope(x: &[f32], bands: usize) -> Vec<f64> {
+    let ps = power_spectrum(x);
+    let nb = ps.len() - 1; // skip DC
+    let mut env = vec![0.0f64; bands];
+    let mut cnt = vec![0usize; bands];
+    for k in 1..ps.len() {
+        // geometric band index
+        let frac = (k as f64).ln() / (nb as f64).ln();
+        let b = ((frac * bands as f64) as usize).min(bands - 1);
+        env[b] += (ps[k] + 1e-12).ln();
+        cnt[b] += 1;
+    }
+    for b in 0..bands {
+        if cnt[b] > 0 {
+            env[b] /= cnt[b] as f64;
+        }
+    }
+    env
+}
+
+/// Cosine similarity between two vectors.
+pub fn cosine(a: &[f64], b: &[f64]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f64 = a.iter().map(|x| x * x).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|x| x * x).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_impulse_is_flat() {
+        let mut re = vec![0.0; 8];
+        let mut im = vec![0.0; 8];
+        re[0] = 1.0;
+        fft_inplace(&mut re, &mut im);
+        for k in 0..8 {
+            assert!((re[k] - 1.0).abs() < 1e-12);
+            assert!(im[k].abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fft_sine_peaks_at_bin() {
+        // sin(2*pi*4*t/64): energy concentrated at bin 4
+        let x: Vec<f32> = (0..64)
+            .map(|i| (2.0 * PI * 4.0 * i as f64 / 64.0).sin() as f32)
+            .collect();
+        let ps = power_spectrum(&x);
+        let peak = ps
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(peak, 4);
+    }
+
+    #[test]
+    fn fft_parseval() {
+        let x: Vec<f32> = (0..32).map(|i| ((i * 13 % 7) as f32 - 3.0) / 3.0).collect();
+        let mut re: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut im = vec![0.0; 32];
+        fft_inplace(&mut re, &mut im);
+        let time_e: f64 = x.iter().map(|&v| (v as f64).powi(2)).sum();
+        let freq_e: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f64>() / 32.0;
+        assert!((time_e - freq_e).abs() < 1e-9 * time_e.max(1.0));
+    }
+
+    #[test]
+    fn cosine_bounds() {
+        let a = [1.0, 2.0, 3.0];
+        assert!((cosine(&a, &a) - 1.0).abs() < 1e-12);
+        let b = [-1.0, -2.0, -3.0];
+        assert!((cosine(&a, &b) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn envelope_distinguishes_bands() {
+        let low: Vec<f32> = (0..128)
+            .map(|i| (2.0 * PI * 2.0 * i as f64 / 128.0).sin() as f32)
+            .collect();
+        let high: Vec<f32> = (0..128)
+            .map(|i| (2.0 * PI * 50.0 * i as f64 / 128.0).sin() as f32)
+            .collect();
+        let el = spectral_envelope(&low, 8);
+        let eh = spectral_envelope(&high, 8);
+        let sim = cosine(&el, &eh);
+        let self_sim = cosine(&el, &el);
+        assert!(self_sim > sim, "self {self_sim} vs cross {sim}");
+    }
+}

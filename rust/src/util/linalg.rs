@@ -1,0 +1,310 @@
+//! Small dense linear algebra: symmetric eigendecomposition and the
+//! matrix square root needed by the Fréchet distance (FD-synth).
+//!
+//! Offline substrate replacing `nalgebra` (DESIGN.md §3). The cyclic
+//! Jacobi rotation method is exact enough (and fast) for the <= 64x64
+//! symmetric PSD matrices the metrics use.
+
+/// Dense row-major square matrix.
+#[derive(Debug, Clone)]
+pub struct Mat {
+    pub n: usize,
+    pub d: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(n: usize) -> Mat {
+        Mat { n, d: vec![0.0; n * n] }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n);
+        for i in 0..n {
+            m.d[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_rows(n: usize, d: Vec<f64>) -> Mat {
+        assert_eq!(d.len(), n * n);
+        Mat { n, d }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.d[i * self.n + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.d[i * self.n + j] = v;
+    }
+
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.n, other.n);
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for k in 0..n {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                for j in 0..n {
+                    out.d[i * n + j] += a * other.at(k, j);
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let n = self.n;
+        let mut out = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                out.set(j, i, self.at(i, j));
+            }
+        }
+        out
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        let mut out = self.clone();
+        for (a, b) in out.d.iter_mut().zip(other.d.iter()) {
+            *a += b;
+        }
+        out
+    }
+
+    pub fn trace(&self) -> f64 {
+        (0..self.n).map(|i| self.at(i, i)).sum()
+    }
+
+    fn off_diag_norm(&self) -> f64 {
+        let mut s = 0.0;
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if i != j {
+                    s += self.at(i, j) * self.at(i, j);
+                }
+            }
+        }
+        s.sqrt()
+    }
+}
+
+/// Symmetric eigendecomposition by cyclic Jacobi: A = V diag(w) V^T.
+/// Returns (eigenvalues, V with eigenvectors as columns).
+pub fn sym_eig(a: &Mat, max_sweeps: usize) -> (Vec<f64>, Mat) {
+    let n = a.n;
+    let mut m = a.clone();
+    let mut v = Mat::eye(n);
+    for _ in 0..max_sweeps {
+        if m.off_diag_norm() < 1e-12 * (1.0 + m.trace().abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.at(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.at(p, p);
+                let aqq = m.at(q, q);
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p, q of m
+                for k in 0..n {
+                    let mkp = m.at(k, p);
+                    let mkq = m.at(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.at(p, k);
+                    let mqk = m.at(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.at(k, p);
+                    let vkq = v.at(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+    let w = (0..n).map(|i| m.at(i, i)).collect();
+    (w, v)
+}
+
+/// Principal square root of a symmetric PSD matrix (negative eigenvalues
+/// from numerical noise are clamped to zero).
+pub fn sym_sqrt(a: &Mat) -> Mat {
+    let n = a.n;
+    let (w, v) = sym_eig(a, 30);
+    let mut out = Mat::zeros(n);
+    for k in 0..n {
+        let s = w[k].max(0.0).sqrt();
+        if s == 0.0 {
+            continue;
+        }
+        for i in 0..n {
+            let vik = v.at(i, k);
+            if vik == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out.d[i * n + j] += s * vik * v.at(j, k);
+            }
+        }
+    }
+    out
+}
+
+/// Fréchet distance between Gaussians (m1, c1) and (m2, c2):
+///   |m1 - m2|^2 + tr(c1 + c2 - 2 (c1^{1/2} c2 c1^{1/2})^{1/2}).
+/// This is the FID formula with our FD-synth feature statistics.
+pub fn frechet_distance(m1: &[f64], c1: &Mat, m2: &[f64], c2: &Mat) -> f64 {
+    assert_eq!(m1.len(), m2.len());
+    let dm: f64 = m1.iter().zip(m2).map(|(a, b)| (a - b) * (a - b)).sum();
+    let s1 = sym_sqrt(c1);
+    let inner = s1.matmul(c2).matmul(&s1);
+    // symmetrize against round-off before the second sqrt
+    let inner_t = inner.transpose();
+    let mut sym = inner.add(&inner_t);
+    for x in sym.d.iter_mut() {
+        *x *= 0.5;
+    }
+    let cross = sym_sqrt(&sym);
+    dm + c1.trace() + c2.trace() - 2.0 * cross.trace()
+}
+
+/// Sample mean and covariance of rows (n_samples x dim, row-major).
+pub fn mean_cov(rows: &[f32], dim: usize) -> (Vec<f64>, Mat) {
+    let n = rows.len() / dim;
+    assert!(n > 1, "need >= 2 samples for covariance");
+    let mut mean = vec![0.0f64; dim];
+    for r in 0..n {
+        for j in 0..dim {
+            mean[j] += rows[r * dim + j] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= n as f64;
+    }
+    let mut cov = Mat::zeros(dim);
+    for r in 0..n {
+        for i in 0..dim {
+            let di = rows[r * dim + i] as f64 - mean[i];
+            for j in i..dim {
+                let dj = rows[r * dim + j] as f64 - mean[j];
+                cov.d[i * dim + j] += di * dj;
+            }
+        }
+    }
+    for i in 0..dim {
+        for j in i..dim {
+            let v = cov.at(i, j) / (n - 1) as f64;
+            cov.set(i, j, v);
+            cov.set(j, i, v);
+        }
+    }
+    (mean, cov)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn eig_diagonal() {
+        let mut a = Mat::zeros(3);
+        a.set(0, 0, 3.0);
+        a.set(1, 1, 1.0);
+        a.set(2, 2, 2.0);
+        let (mut w, _) = sym_eig(&a, 20);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        approx(w[0], 1.0, 1e-12);
+        approx(w[1], 2.0, 1e-12);
+        approx(w[2], 3.0, 1e-12);
+    }
+
+    #[test]
+    fn eig_known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 1 and 3
+        let a = Mat::from_rows(2, vec![2.0, 1.0, 1.0, 2.0]);
+        let (mut w, v) = sym_eig(&a, 20);
+        w.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        approx(w[0], 1.0, 1e-12);
+        approx(w[1], 3.0, 1e-12);
+        // eigenvectors orthonormal
+        let vtv = v.transpose().matmul(&v);
+        approx(vtv.at(0, 0), 1.0, 1e-12);
+        approx(vtv.at(0, 1), 0.0, 1e-12);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        // random-ish SPD matrix: B B^T + I
+        let n = 5;
+        let mut b = Mat::zeros(n);
+        for i in 0..n {
+            for j in 0..n {
+                b.set(i, j, ((i * 7 + j * 3) % 11) as f64 / 11.0 - 0.4);
+            }
+        }
+        let a = b.matmul(&b.transpose()).add(&Mat::eye(n));
+        let s = sym_sqrt(&a);
+        let s2 = s.matmul(&s);
+        for i in 0..n {
+            for j in 0..n {
+                approx(s2.at(i, j), a.at(i, j), 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn frechet_identical_is_zero() {
+        let m = vec![0.3, -1.0, 2.0];
+        let mut c = Mat::eye(3);
+        c.set(0, 1, 0.2);
+        c.set(1, 0, 0.2);
+        let d = frechet_distance(&m, &c, &m, &c);
+        assert!(d.abs() < 1e-9, "{d}");
+    }
+
+    #[test]
+    fn frechet_mean_shift() {
+        // equal covariances: FD reduces to |dm|^2
+        let c = Mat::eye(2);
+        let d = frechet_distance(&[0.0, 0.0], &c, &[3.0, 4.0], &c);
+        approx(d, 25.0, 1e-9);
+    }
+
+    #[test]
+    fn frechet_scale() {
+        // 1-d gaussians N(0, 1) vs N(0, 4): FD = (sigma1 - sigma2)^2 = 1
+        let c1 = Mat::from_rows(1, vec![1.0]);
+        let c2 = Mat::from_rows(1, vec![4.0]);
+        approx(frechet_distance(&[0.0], &c1, &[0.0], &c2), 1.0, 1e-9);
+    }
+
+    #[test]
+    fn mean_cov_known() {
+        // two points (0,0) and (2,2): mean (1,1), cov [[2,2],[2,2]] (n-1 norm)
+        let rows = [0.0f32, 0.0, 2.0, 2.0];
+        let (m, c) = mean_cov(&rows, 2);
+        approx(m[0], 1.0, 1e-12);
+        approx(c.at(0, 0), 2.0, 1e-12);
+        approx(c.at(0, 1), 2.0, 1e-12);
+    }
+}

@@ -1,0 +1,9 @@
+//! Offline substrates: the crates this image cannot resolve (serde,
+//! rand, criterion, nalgebra, FFT) reimplemented minimally and tested.
+//! See DESIGN.md §3 (substitution table) and §4 (inventory).
+
+pub mod fft;
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,221 @@
+//! Summary statistics and latency histograms for metrics and benches
+//! (offline substrate replacing `criterion`'s internals, DESIGN.md §3).
+
+/// Streaming summary: count / mean / min / max / variance (Welford).
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary { count: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.count as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.count < 2 {
+            0.0
+        } else {
+            self.m2 / (self.count - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Fixed-boundary log-scale latency histogram (microseconds), suitable for
+/// p50/p95/p99 queries without storing samples.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [lo * GROWTH^i, lo * GROWTH^{i+1})
+    counts: Vec<u64>,
+    lo_us: f64,
+    growth: f64,
+    pub total: u64,
+    pub sum_us: f64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        // 1us .. ~114s in 96 log buckets (growth 1.21)
+        LatencyHistogram { counts: vec![0; 96], lo_us: 1.0, growth: 1.21, total: 0, sum_us: 0.0 }
+    }
+
+    fn bucket(&self, us: f64) -> usize {
+        if us <= self.lo_us {
+            return 0;
+        }
+        let b = (us / self.lo_us).ln() / self.growth.ln();
+        (b as usize).min(self.counts.len() - 1)
+    }
+
+    pub fn record(&mut self, dur: std::time::Duration) {
+        self.record_us(dur.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        let b = self.bucket(us);
+        self.counts[b] += 1;
+        self.total += 1;
+        self.sum_us += us;
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum_us / self.total as f64
+        }
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile_us(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target.max(1) {
+                return self.lo_us * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.lo_us * self.growth.powi(self.counts.len() as i32)
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_us += other.sum_us;
+    }
+}
+
+/// PSNR between two equal-length f32 buffers, data range [-1, 1]
+/// (peak^2 = 4) — matches python/compile/bns.py PEAK_SQ.
+pub fn psnr(pred: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(pred.len(), reference.len());
+    let mse: f64 = pred
+        .iter()
+        .zip(reference)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / pred.len() as f64;
+    10.0 * (4.0 / mse.max(1e-20)).log10()
+}
+
+/// SNR in dB of `pred` against `reference` (Fig. 6 convention):
+/// 10 log10(|ref|^2 / |ref - pred|^2).
+pub fn snr_db(pred: &[f32], reference: &[f32]) -> f64 {
+    assert_eq!(pred.len(), reference.len());
+    let sig: f64 = reference.iter().map(|x| (*x as f64).powi(2)).sum();
+    let err: f64 = pred
+        .iter()
+        .zip(reference)
+        .map(|(a, b)| ((*a - *b) as f64).powi(2))
+        .sum();
+    10.0 * (sig.max(1e-20) / err.max(1e-20)).log10()
+}
+
+/// Mean per-sample PSNR over a batch stored row-major.
+pub fn batch_psnr(pred: &[f32], reference: &[f32], dim: usize) -> f64 {
+    let n = pred.len() / dim;
+    (0..n)
+        .map(|i| psnr(&pred[i * dim..(i + 1) * dim], &reference[i * dim..(i + 1) * dim]))
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_known() {
+        let mut s = Summary::new();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert!((s.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+    }
+
+    #[test]
+    fn histogram_quantiles_ordered() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p95 = h.quantile_us(0.95);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p95 && p95 <= p99);
+        // log-bucket approximation: within a growth factor of truth
+        assert!(p50 > 300.0 && p50 < 800.0, "p50 {p50}");
+        assert!(p99 > 700.0 && p99 < 1500.0, "p99 {p99}");
+    }
+
+    #[test]
+    fn histogram_conservation() {
+        let mut h = LatencyHistogram::new();
+        for i in 0..500 {
+            h.record_us((i * 37 % 10_000) as f64 + 1.0);
+        }
+        assert_eq!(h.total, 500);
+        let mut h2 = LatencyHistogram::new();
+        h2.record_us(5.0);
+        h2.merge(&h);
+        assert_eq!(h2.total, 501);
+    }
+
+    #[test]
+    fn psnr_identical_is_large() {
+        let x = vec![0.25f32; 64];
+        assert!(psnr(&x, &x) > 190.0);
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // constant error of 0.2: mse = 0.04, psnr = 10 log10(4/0.04) = 20
+        let a = vec![0.0f32; 32];
+        let b = vec![0.2f32; 32];
+        assert!((psnr(&b, &a) - 20.0).abs() < 1e-5); // f32 rounding
+    }
+
+    #[test]
+    fn snr_db_known() {
+        // ref = 1s, err = 0.1s: snr = 10 log10(1/0.01) = 20
+        let r = vec![1.0f32; 16];
+        let p = vec![0.9f32; 16];
+        assert!((snr_db(&p, &r) - 20.0).abs() < 1e-4); // f32 rounding
+    }
+}

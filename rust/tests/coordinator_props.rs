@@ -1,0 +1,245 @@
+//! Property tests on coordinator invariants (own proptest-lite: seeded
+//! PCG-driven random cases, many iterations, shrink-free but with the
+//! failing seed printed for reproduction).
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use bns_serve::coordinator::batcher::{Batcher, BatcherConfig, GroupKey};
+use bns_serve::coordinator::request::{SampleRequest, SolverSpec};
+use bns_serve::util::rng::Pcg32;
+
+fn mk_req(rng: &mut Pcg32, models: &[&str], id: u64) -> SampleRequest {
+    let (tx, _rx) = mpsc::channel();
+    let solvers = [
+        SolverSpec::Baseline { name: "euler".into(), nfe: 4 + 2 * rng.below(6) },
+        SolverSpec::Auto { nfe: 4 + rng.below(16) },
+        SolverSpec::GroundTruth,
+    ];
+    SampleRequest {
+        id,
+        model: models[rng.below(models.len())].to_string(),
+        labels: vec![0; 1 + rng.below(7)],
+        guidance: [0.0f32, 2.0, 6.5][rng.below(3)],
+        solver: solvers[rng.below(3)].clone(),
+        seed: rng.next_u64(),
+        x0: None,
+        enqueued_at: Instant::now(),
+        reply: tx,
+    }
+}
+
+/// Across random workloads: batches never exceed max_rows (except a
+/// single oversized request), rows are conserved, FIFO order holds per
+/// group, and every batch is key-homogeneous.
+#[test]
+fn batcher_invariants_random_workloads() {
+    for seed in 0..40u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let max_rows = 4 + rng.below(12);
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows,
+            max_wait: Duration::from_millis(0), // everything due immediately
+            max_queued_rows: 10_000,
+        });
+        let models = ["m1", "m2"];
+        let n = 30 + rng.below(50);
+        let mut pushed_rows = 0usize;
+        for id in 0..n as u64 {
+            let req = mk_req(&mut rng, &models, id);
+            pushed_rows += req.labels.len();
+            b.push(req).unwrap();
+        }
+        let due = b.poll(Instant::now() + Duration::from_millis(1));
+        let drained_rows: usize = due.iter().map(|d| d.rows).sum();
+        assert_eq!(drained_rows, pushed_rows, "seed {seed}: rows conserved");
+        assert_eq!(b.queued_rows(), 0, "seed {seed}");
+        let mut last_id_per_group: std::collections::BTreeMap<GroupKey, u64> = Default::default();
+        for batch in &due {
+            // homogeneous keys
+            for req in &batch.requests {
+                assert_eq!(GroupKey::of(req), batch.key, "seed {seed}: key mix");
+            }
+            // cap respected unless a single oversized request
+            if batch.requests.len() > 1 {
+                assert!(batch.rows <= max_rows, "seed {seed}: cap {max_rows} < {}", batch.rows);
+            }
+            // FIFO within group across batches
+            for req in &batch.requests {
+                if let Some(&last) = last_id_per_group.get(&batch.key) {
+                    assert!(req.id > last, "seed {seed}: FIFO violated in {:?}", batch.key);
+                }
+                last_id_per_group.insert(batch.key.clone(), req.id);
+            }
+        }
+    }
+}
+
+/// Backpressure: pushes beyond max_queued_rows are rejected and the
+/// rejected request is returned intact (reply channel usable).
+#[test]
+fn batcher_backpressure_returns_request() {
+    let mut rng = Pcg32::seeded(99);
+    let mut b = Batcher::new(BatcherConfig {
+        max_rows: 1000,
+        max_wait: Duration::from_secs(3600),
+        max_queued_rows: 10,
+    });
+    let mut accepted = 0;
+    let mut rejected = 0;
+    for id in 0..20u64 {
+        let req = mk_req(&mut rng, &["m"], id);
+        let rows = req.labels.len();
+        match b.push(req) {
+            Ok(()) => accepted += rows,
+            Err(r) => {
+                rejected += 1;
+                assert_eq!(r.id, id); // intact
+            }
+        }
+        assert!(b.queued_rows() <= 10);
+    }
+    assert!(accepted <= 10);
+    assert!(rejected > 0);
+}
+
+/// Deadline: next_deadline is monotone with max_wait and present iff
+/// something is queued.
+#[test]
+fn batcher_deadline_tracking() {
+    let mut rng = Pcg32::seeded(7);
+    let mut b = Batcher::new(BatcherConfig {
+        max_rows: 1000,
+        max_wait: Duration::from_millis(10),
+        max_queued_rows: 1000,
+    });
+    assert!(b.next_deadline().is_none());
+    b.push(mk_req(&mut rng, &["m"], 0)).unwrap();
+    let d = b.next_deadline().unwrap();
+    assert!(d <= Instant::now() + Duration::from_millis(11));
+    let due = b.poll(d + Duration::from_millis(1));
+    assert_eq!(due.len(), 1);
+    assert!(b.next_deadline().is_none());
+}
+
+/// Latency histogram quantiles are monotone in q for random inputs.
+#[test]
+fn histogram_quantile_monotone_property() {
+    use bns_serve::util::stats::LatencyHistogram;
+    for seed in 0..20u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let mut h = LatencyHistogram::new();
+        for _ in 0..500 {
+            h.record_us(rng.uniform() * 1e6 + 1.0);
+        }
+        let mut prev = 0.0;
+        for i in 0..=20 {
+            let q = h.quantile_us(i as f64 / 20.0);
+            assert!(q >= prev, "seed {seed}: quantiles not monotone");
+            prev = q;
+        }
+    }
+}
+
+/// JSON round-trip property on random solver-like payloads.
+#[test]
+fn json_roundtrip_property() {
+    use bns_serve::util::json::Json;
+    for seed in 0..30u64 {
+        let mut rng = Pcg32::seeded(seed);
+        let n = 1 + rng.below(20);
+        let vals: Vec<f64> = (0..n).map(|_| (rng.normal() * 10.0 * 1e6).round() / 1e6).collect();
+        let j = Json::obj(vec![
+            ("a", Json::arr_f64(&vals)),
+            ("s", Json::Str(format!("seed-{seed}"))),
+            ("n", Json::Num(n as f64)),
+            ("flag", Json::Bool(seed % 2 == 0)),
+        ]);
+        let rt = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(rt.get("n").as_usize(), Some(n));
+        let back = rt.get("a").as_f64_vec().unwrap();
+        for (x, y) in vals.iter().zip(back.iter()) {
+            assert!((x - y).abs() < 1e-9, "seed {seed}: {x} vs {y}");
+        }
+    }
+}
+
+/// NS solvers built from random affine traces stay valid and Algorithm 1
+/// reproduces the traced update exactly on random linear fields.
+#[test]
+fn ns_from_random_affine_trace_property() {
+    use bns_serve::solver::field::LinearField;
+    use bns_serve::solver::taxonomy::{AffineTrace, reduce_cd_to_ab};
+    use bns_serve::solver::ns::NsSolver;
+    use bns_serve::solver::Solver;
+
+    for seed in 0..25u64 {
+        let mut rng = Pcg32::seeded(1000 + seed);
+        let n = 2 + rng.below(8);
+        // random (c, d) rule with bounded coefficients
+        let c_rows: Vec<Vec<f64>> =
+            (0..n).map(|i| (0..=i).map(|_| rng.normal() * 0.4).collect()).collect();
+        let d_rows: Vec<Vec<f64>> =
+            (0..n).map(|i| (0..=i).map(|_| rng.normal() * 0.3).collect()).collect();
+        let (a, b) = reduce_cd_to_ab(&c_rows, &d_rows);
+        let times: Vec<f64> = (0..=n).map(|i| i as f64 / n as f64).collect();
+        let solver = NsSolver { times: times.clone(), a, b };
+        solver.validate().unwrap();
+
+        // equivalence with explicit X/U stepping on a linear field
+        let f = LinearField { dim: 3, k: -0.6, c: 0.2 };
+        let x0 = [0.4f32, -1.0, 0.9];
+        use bns_serve::solver::field::Field;
+        let mut xs = vec![x0.to_vec()];
+        let mut us: Vec<Vec<f32>> = Vec::new();
+        for i in 0..n {
+            us.push(f.eval(times[i], &xs[i]).unwrap());
+            let mut nx = vec![0f32; 3];
+            for j in 0..=i {
+                for k in 0..3 {
+                    nx[k] += c_rows[i][j] as f32 * xs[j][k] + d_rows[i][j] as f32 * us[j][k];
+                }
+            }
+            xs.push(nx);
+        }
+        let out = solver.sample(&f, &x0).unwrap();
+        for (u, v) in out.iter().zip(xs.last().unwrap().iter()) {
+            assert!(
+                (u - v).abs() < 1e-4 * (1.0 + v.abs()),
+                "seed {seed}: {u} vs {v}"
+            );
+        }
+
+        // affine-trace round trip of the same rule
+        let mut tr = AffineTrace::new();
+        let mut x = tr.x0();
+        let mut syms = Vec::new();
+        for i in 0..n {
+            let u = tr.eval_u(&x, times[i]);
+            syms.push(u);
+            let mut acc = x.scale(0.0);
+            // rebuild the same (c,d) rule symbolically: needs all previous
+            // states; keep them:
+            acc.a = 0.0;
+            let _ = &mut acc;
+            // (state list tracked below)
+            x = {
+                // reconstruct from scratch each step
+                let mut states = vec![tr.x0()];
+                for (ii, row) in c_rows.iter().enumerate().take(i + 1) {
+                    let mut nx = states[0].scale(0.0);
+                    for j in 0..=ii {
+                        nx = nx.axpy(row[j], &states[j]).axpy(d_rows[ii][j], &syms[j]);
+                    }
+                    states.push(nx);
+                }
+                states.pop().unwrap()
+            };
+        }
+        let traced = tr.finish(&x, 1.0);
+        let out2 = traced.sample(&f, &x0).unwrap();
+        for (u, v) in out2.iter().zip(out.iter()) {
+            assert!((u - v).abs() < 1e-4 * (1.0 + v.abs()), "seed {seed}: trace {u} vs {v}");
+        }
+    }
+}

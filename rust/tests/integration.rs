@@ -1,0 +1,309 @@
+//! Integration tests over the real artifacts (skipped with a notice when
+//! `artifacts/manifest.json` is absent — run `make artifacts` first).
+//!
+//! These are the cross-language contract tests: python-trained solvers +
+//! AOT-lowered models executed by the rust runtime must reproduce the
+//! paper's orderings.
+
+use std::sync::Arc;
+
+use bns_serve::coordinator::router::distilled;
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::runtime::{ArtifactStore, ModelField, Runtime};
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::rng::Pcg32;
+use bns_serve::util::stats::batch_psnr;
+
+fn store() -> Option<Arc<ArtifactStore>> {
+    let dir = bns_serve::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: {} missing (run `make artifacts`)", dir.join("manifest.json").display());
+        return None;
+    }
+    Some(Arc::new(ArtifactStore::load(&dir).expect("artifact store")))
+}
+
+/// Rust scheduler mirror vs the python-exported grid (float32 agreement).
+#[test]
+fn scheduler_mirror_matches_python() {
+    let Some(store) = store() else { return };
+    let check = &store.scheduler_check;
+    for (name, sched) in [
+        ("fm_ot", bns_serve::solver::scheduler::Scheduler::FmOt),
+        ("cosine", bns_serve::solver::scheduler::Scheduler::Cosine),
+        ("vp", bns_serve::solver::scheduler::Scheduler::Vp),
+        ("ve", bns_serve::solver::scheduler::Scheduler::Ve),
+    ] {
+        let grid = check.get(name);
+        let t = grid.get("t").as_f64_vec().expect("t grid");
+        let alpha = grid.get("alpha").as_f64_vec().unwrap();
+        let sigma = grid.get("sigma").as_f64_vec().unwrap();
+        for i in 0..t.len() {
+            let (a, s) = (sched.alpha(t[i]), sched.sigma(t[i]));
+            assert!(
+                (a - alpha[i]).abs() < 2e-5 * (1.0 + alpha[i].abs()),
+                "{name}: alpha({}) rust {a} vs python {}",
+                t[i],
+                alpha[i]
+            );
+            assert!(
+                (s - sigma[i]).abs() < 2e-5 * (1.0 + sigma[i].abs()),
+                "{name}: sigma({}) rust {s} vs python {}",
+                t[i],
+                sigma[i]
+            );
+        }
+    }
+}
+
+/// Python's NS-coefficient generators vs rust's taxonomy module: the two
+/// implementations of the constructive Thm 3.2 must agree exactly.
+#[test]
+fn solver_generators_match_python() {
+    use bns_serve::solver::taxonomy;
+    let Some(_store) = store() else { return };
+    let dir = bns_serve::default_artifacts_dir();
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let j = bns_serve::util::json::Json::parse(&text).unwrap();
+    let check = j.get("solver_check");
+    if check == &bns_serve::util::json::Json::Null {
+        eprintln!("SKIP: manifest has no solver_check (old build)");
+        return;
+    }
+    let times6: Vec<f64> = (0..=6).map(|i| i as f64 / 6.0).collect();
+    let cases: Vec<(&str, bns_serve::solver::NsSolver)> = vec![
+        ("euler6", taxonomy::euler_ns(&times6)),
+        ("midpoint6", taxonomy::midpoint_ns(6)),
+        ("ab2_6", taxonomy::ab2_ns(&times6)),
+        (
+            "dpmpp2m_fm_ot_6",
+            taxonomy::dpmpp_ns(bns_serve::solver::scheduler::Scheduler::FmOt, &times6, 2),
+        ),
+        (
+            "ddim_vp_6",
+            taxonomy::ddim_ns(bns_serve::solver::scheduler::Scheduler::Vp, &times6),
+        ),
+    ];
+    for (name, rust_solver) in cases {
+        let py = check.get(name);
+        if py == &bns_serve::util::json::Json::Null {
+            panic!("manifest solver_check missing {name}");
+        }
+        let (py_solver, _) = bns_serve::solver::NsSolver::from_json(py).unwrap();
+        assert_eq!(py_solver.nfe(), rust_solver.nfe(), "{name}");
+        for i in 0..py_solver.nfe() {
+            assert!(
+                (py_solver.a[i] - rust_solver.a[i]).abs() < 1e-4 * (1.0 + rust_solver.a[i].abs()),
+                "{name}: a[{i}] py {} vs rust {}",
+                py_solver.a[i],
+                rust_solver.a[i]
+            );
+            for jx in 0..=i {
+                let (p, r) = (py_solver.b[i][jx], rust_solver.b[i][jx]);
+                assert!(
+                    (p - r).abs() < 1e-4 * (1.0 + r.abs()),
+                    "{name}: b[{i}][{jx}] py {p} vs rust {r}"
+                );
+            }
+        }
+    }
+}
+
+/// Every distilled solver artifact parses, validates, and reports the
+/// claimed NFE.
+#[test]
+fn solver_artifacts_valid() {
+    let Some(store) = store() else { return };
+    assert!(!store.solvers.is_empty(), "no solver artifacts");
+    for art in store.solvers.values() {
+        art.solver.validate().unwrap_or_else(|e| panic!("{}: {e}", art.name));
+        assert!(art.meta.kind == "bns" || art.meta.kind == "bst" || art.meta.kind == "init");
+        assert!(art.solver.nfe() >= 4 && art.solver.nfe() <= 64, "{}", art.name);
+    }
+}
+
+/// The paper's headline ordering on this stack: at NFE 8 (w = 0),
+/// PSNR(BNS) > PSNR(midpoint) > PSNR(euler), and BNS beats the runner-up
+/// by a wide margin.
+#[test]
+fn psnr_ordering_bns_beats_baselines() {
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let info = store.model("img_fm_ot").unwrap().clone();
+    let mut rng = Pcg32::seeded(31337);
+    let n = 16;
+    let x0 = rng.normal_vec(n * info.dim);
+    let labels: Vec<i32> = (0..n).map(|i| (i % info.num_classes) as i32).collect();
+    let field = ModelField::new(&rt, &info, labels, 0.0).unwrap();
+    let (gt, _) = bns_serve::solver::rk45::rk45(&field, &x0, &Default::default()).unwrap();
+
+    let bns = distilled(&store, "img_fm_ot", 0.0, "bns", 8).unwrap();
+    let p_bns = batch_psnr(&bns.sample(&field, &x0).unwrap(), &gt, info.dim);
+    let p_mid = batch_psnr(
+        &baseline("midpoint", 8, info.scheduler).unwrap().sample(&field, &x0).unwrap(),
+        &gt,
+        info.dim,
+    );
+    let p_eul = batch_psnr(
+        &baseline("euler", 8, info.scheduler).unwrap().sample(&field, &x0).unwrap(),
+        &gt,
+        info.dim,
+    );
+    eprintln!("PSNR @ NFE 8: bns {p_bns:.2}, midpoint {p_mid:.2}, euler {p_eul:.2}");
+    assert!(p_bns > p_mid && p_mid > p_eul, "ordering violated");
+    assert!(p_bns - p_mid > 3.0, "BNS should beat midpoint by >3 dB, got {:.2}", p_bns - p_mid);
+}
+
+/// Batching equivalence: a request computed alone equals the same request
+/// computed inside a batch with others, bit-for-bit (row independence of
+/// the model + deterministic runtime).
+#[test]
+fn batched_equals_sequential() {
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let info = store.model("img_fm_ot").unwrap().clone();
+    let mut rng = Pcg32::seeded(404);
+    let n1 = 3;
+    let n2 = 5;
+    let x_a = rng.normal_vec(n1 * info.dim);
+    let x_b = rng.normal_vec(n2 * info.dim);
+    let la: Vec<i32> = (0..n1 as i32).collect();
+    let lb: Vec<i32> = (0..n2 as i32).map(|i| i % 4 + 3).collect();
+
+    let solver = baseline("midpoint", 8, info.scheduler).unwrap();
+
+    // separate
+    let fa = ModelField::new(&rt, &info, la.clone(), 0.0).unwrap();
+    let out_a = solver.sample(&fa, &x_a).unwrap();
+    // batched together
+    let mut labels = la.clone();
+    labels.extend(&lb);
+    let mut x = x_a.clone();
+    x.extend_from_slice(&x_b);
+    let fab = ModelField::new(&rt, &info, labels, 0.0).unwrap();
+    let out_ab = solver.sample(&fab, &x).unwrap();
+
+    assert_eq!(
+        &out_ab[..n1 * info.dim],
+        &out_a[..],
+        "request A's rows changed when batched with B"
+    );
+}
+
+/// Engine end-to-end: submit concurrent requests through the coordinator
+/// and verify responses, NFE accounting, and metrics conservation.
+#[test]
+fn engine_end_to_end() {
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+
+    let mut handles = Vec::new();
+    for c in 0..4 {
+        let engine = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            engine
+                .sample_blocking(
+                    "img_fm_ot",
+                    vec![c as i32 % 10; 2],
+                    0.0,
+                    SolverSpec::Auto { nfe: 8 },
+                    c,
+                )
+                .unwrap()
+        }));
+    }
+    let outs: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for out in &outs {
+        assert_eq!(out.nfe, 8);
+        assert_eq!(out.samples.len(), 2 * out.dim);
+        assert!(out.solver_used.contains("bns") || out.solver_used.contains("midpoint"));
+        assert!(out.samples.iter().all(|v| v.is_finite()));
+    }
+    let m = &engine.metrics;
+    assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), 4);
+    assert_eq!(m.samples.load(std::sync::atomic::Ordering::Relaxed), 8);
+    Arc::try_unwrap(engine).ok().map(|e| e.shutdown());
+}
+
+/// Unknown model is rejected with an error, not a hang.
+#[test]
+fn engine_rejects_unknown_model() {
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let engine = Engine::start(store, rt, EngineConfig::default());
+    let err = engine
+        .sample_blocking("nope", vec![0], 0.0, SolverSpec::Auto { nfe: 8 }, 1)
+        .unwrap_err();
+    assert!(err.to_string().contains("unknown model"), "{err}");
+    engine.shutdown();
+}
+
+/// TCP server round-trip on an ephemeral port.
+#[test]
+fn server_tcp_roundtrip() {
+    use std::io::{BufRead, BufReader, Write};
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+    let addr = "127.0.0.1:17917";
+    {
+        let engine = engine.clone();
+        let store = store.clone();
+        std::thread::spawn(move || {
+            let _ = bns_serve::coordinator::server::serve(addr, engine, store);
+        });
+    }
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let mut s = std::net::TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    s.write_all(b"{\"op\":\"models\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j = bns_serve::util::json::Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(true));
+    assert!(j.get("models").as_arr().unwrap().len() >= 5);
+
+    s.write_all(
+        b"{\"op\":\"sample\",\"model\":\"img_fm_ot\",\"labels\":[1,2],\"solver\":\"euler\",\"nfe\":4,\"seed\":3}\n",
+    )
+    .unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j = bns_serve::util::json::Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{line}");
+    assert_eq!(j.get("nfe").as_usize(), Some(4));
+    assert_eq!(
+        j.get("samples").as_arr().unwrap().len(),
+        2 * j.get("dim").as_usize().unwrap()
+    );
+
+    // malformed request -> structured error
+    s.write_all(b"{\"op\":\"sample\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j = bns_serve::util::json::Json::parse(&line).unwrap();
+    assert_eq!(j.get("ok").as_bool(), Some(false));
+}
+
+/// FD-synth sanity on real artifacts: the GT sampler's distribution is
+/// much closer to the dataset reference than pure noise is.
+#[test]
+fn fd_synth_separates_noise_from_samples() {
+    let Some(store) = store() else { return };
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let info = store.model("img_fm_ot").unwrap().clone();
+    let mut rng = Pcg32::seeded(2);
+    let n = 128;
+    let noise = rng.normal_vec(n * info.dim);
+    let fd_noise = store.fd.fd_to_reference(&noise);
+
+    let x0 = rng.normal_vec(n * info.dim);
+    let labels: Vec<i32> = (0..n).map(|i| (i % info.num_classes) as i32).collect();
+    let field = ModelField::new(&rt, &info, labels, 0.0).unwrap();
+    let bns = distilled(&store, "img_fm_ot", 0.0, "bns", 16).unwrap();
+    let samples = bns.sample(&field, &x0).unwrap();
+    let fd_model = store.fd.fd_to_reference(&samples);
+    eprintln!("FD noise {fd_noise:.2} vs FD model {fd_model:.2}");
+    assert!(fd_model < 0.5 * fd_noise, "model FD should be far below noise FD");
+}
