@@ -347,6 +347,10 @@ def stage_manifest(out, prof, aot_entries, log=print):
             num_classes=cfg.num_classes,
             null_class=cfg.null_class,
             data="audio" if cfg.name.startswith("audio") else "images",
+            # guided_velocity composes cond + uncond branches per eval; the
+            # rust NFE accounting multiplies by this (defaults to 2 when
+            # absent for older manifests).
+            forwards_per_eval=2,
             artifacts=entry,
             **extra,
         )

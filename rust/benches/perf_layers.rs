@@ -1,7 +1,11 @@
-//! §Perf microbenches for L1/L2: per-eval latency of the Pallas-kernel
+//! §Perf microbenches for L1/L2/L3: per-eval latency of the Pallas-kernel
 //! artifact vs the XLA-fused (pure-jnp) artifact of the same model, per
-//! batch bucket, plus the NS-combine (Algorithm 1 linear algebra) and
-//! RK45-GT cost on the rust side.
+//! batch bucket, plus the NS-combine (Algorithm 1 linear algebra) cost on
+//! the rust side — seed allocating `sample` vs the workspace-backed
+//! `sample_into` hot path.
+//!
+//! The L1/L2 sections need real model artifacts (`make artifacts`) and
+//! are skipped with a notice when absent; the L3 sections run anywhere.
 //!
 //! Note: interpret=True Pallas timings are CPU-emulation numbers, NOT a
 //! TPU proxy — the point of this bench is to quantify the CPU-serving
@@ -12,6 +16,7 @@ use std::time::Instant;
 
 use bns_serve::bench_util::{write_results, Bench, Table};
 use bns_serve::solver::field::Field;
+use bns_serve::solver::{NsSolver, SampleWorkspace, Solver};
 use bns_serve::util::json::Json;
 use bns_serve::util::rng::Pcg32;
 
@@ -26,78 +31,176 @@ fn time_eval(field: &dyn Field, rows: usize, dim: usize, iters: usize) -> anyhow
     Ok(t0.elapsed().as_secs_f64() / iters as f64)
 }
 
+/// Identity field with an allocation-free `eval_into`: isolates the
+/// solver-side combine cost from model time.
+struct ZeroField(usize);
+
+impl Field for ZeroField {
+    fn dim(&self) -> usize {
+        self.0
+    }
+    fn eval(&self, _t: f64, x: &[f32]) -> anyhow::Result<Vec<f32>> {
+        Ok(x.to_vec())
+    }
+    fn eval_into(&self, _t: f64, x: &[f32], out: &mut [f32]) -> anyhow::Result<()> {
+        out.copy_from_slice(x);
+        Ok(())
+    }
+}
+
+/// Dense random valid NS solver — the coefficient shape a distilled BNS
+/// artifact has (every b entry nonzero).
+fn dense_ns(nfe: usize) -> NsSolver {
+    let mut rng = Pcg32::seeded(13);
+    NsSolver {
+        times: (0..=nfe).map(|i| i as f64 / nfe as f64).collect(),
+        a: (0..nfe).map(|_| 1.0 + 0.05 * rng.normal()).collect(),
+        b: (0..nfe)
+            .map(|i| (0..=i).map(|_| 0.1 * rng.normal()).collect())
+            .collect(),
+    }
+}
+
 fn main() -> anyhow::Result<()> {
-    let b = Bench::init()?;
-    let mut table = Table::new(&["artifact", "batch", "eval(ms)", "per-row(us)"]);
     let mut results = Vec::new();
 
-    for (name, label) in [("img_fm_ot", "pallas-kernels"), ("img_fm_ot_fused", "xla-fused")] {
-        if !b.store.models.contains_key(name) {
-            eprintln!("[perf] {name} missing; skip");
-            continue;
-        }
-        let info = b.store.model(name)?.clone();
-        for bucket in info.buckets.iter().map(|bk| bk.batch) {
-            let labels = vec![0i32; bucket];
-            let field = b.field(&info, labels, 0.0)?;
-            let dt = time_eval(&field, bucket, info.dim, 30)?;
-            table.row(vec![
-                label.into(),
-                bucket.to_string(),
-                format!("{:.3}", dt * 1e3),
-                format!("{:.1}", dt * 1e6 / bucket as f64),
-            ]);
-            results.push(Json::obj(vec![
-                ("artifact", Json::Str(label.into())),
-                ("batch", Json::Num(bucket as f64)),
-                ("eval_ms", Json::Num(dt * 1e3)),
-            ]));
-        }
-    }
-    println!("=== L1/L2: model-eval latency by artifact variant ===");
-    table.print();
-
-    // NS combine cost (pure rust, the L3-side ns_update analogue):
-    // step i touches i+2 row-major buffers; measure the full Alg. 1
-    // overhead minus field time using a free (zero-cost) field.
-    struct ZeroField(usize);
-    impl Field for ZeroField {
-        fn dim(&self) -> usize {
-            self.0
-        }
-        fn eval(&self, _t: f64, x: &[f32]) -> anyhow::Result<Vec<f32>> {
-            Ok(x.to_vec())
-        }
-    }
-    let dim = 192;
-    let mut combine = Table::new(&["NFE", "batch", "combine-only(us)"]);
-    for nfe in [8usize, 16, 20] {
-        for batch in [8usize, 64] {
-            let solver = bns_serve::solver::taxonomy::midpoint_ns(nfe.max(2) / 2 * 2);
-            let f = ZeroField(dim);
-            let mut rng = Pcg32::seeded(7);
-            let x0 = rng.normal_vec(batch * dim);
-            let t0 = Instant::now();
-            let iters = 50;
-            for _ in 0..iters {
-                solver.sample(&f, &x0)?;
+    // ---- L1/L2: model-eval latency by artifact variant (needs artifacts)
+    match Bench::init() {
+        Ok(b) => {
+            let mut table = Table::new(&["artifact", "batch", "eval(ms)", "per-row(us)"]);
+            for (name, label) in [("img_fm_ot", "pallas-kernels"), ("img_fm_ot_fused", "xla-fused")] {
+                if !b.store.models.contains_key(name) {
+                    eprintln!("[perf] {name} missing; skip");
+                    continue;
+                }
+                let info = b.store.model(name)?.clone();
+                for bucket in info.buckets.iter().map(|bk| bk.batch) {
+                    let labels = vec![0i32; bucket];
+                    let field = b.field(&info, labels, 0.0)?;
+                    let dt = time_eval(&field, bucket, info.dim, 30)?;
+                    table.row(vec![
+                        label.into(),
+                        bucket.to_string(),
+                        format!("{:.3}", dt * 1e3),
+                        format!("{:.1}", dt * 1e6 / bucket as f64),
+                    ]);
+                    results.push(Json::obj(vec![
+                        ("artifact", Json::Str(label.into())),
+                        ("batch", Json::Num(bucket as f64)),
+                        ("eval_ms", Json::Num(dt * 1e3)),
+                    ]));
+                }
             }
-            let dt = t0.elapsed().as_secs_f64() / iters as f64;
-            combine.row(vec![
-                nfe.to_string(),
-                batch.to_string(),
-                format!("{:.1}", dt * 1e6),
-            ]);
-            results.push(Json::obj(vec![
-                ("artifact", Json::Str("ns-combine".into())),
-                ("nfe", Json::Num(nfe as f64)),
-                ("batch", Json::Num(batch as f64)),
-                ("us", Json::Num(dt * 1e6)),
-            ]));
+            println!("=== L1/L2: model-eval latency by artifact variant ===");
+            table.print();
+        }
+        Err(e) => {
+            eprintln!("[perf] artifacts unavailable ({e:#}); skipping L1/L2 sections");
         }
     }
-    println!("\n=== L3: Algorithm 1 combine overhead (zero-cost field) ===");
-    combine.print();
+
+    // ---- L3: seed allocating `sample` vs workspace `sample_into` -------
+    //
+    // The acceptance target: the allocation-free path must beat the seed
+    // implementation on NS sampling at nfe=16, batch=64 — and outputs
+    // must be bit-identical (also enforced by tests/sample_into_equiv.rs).
+    let dim = 192;
+    let mut hot = Table::new(&[
+        "solver", "NFE", "batch", "sample(us)", "sample_into(us)", "speedup",
+    ]);
+    let mut ws = SampleWorkspace::new();
+    for nfe in [8usize, 16] {
+        for batch in [8usize, 64] {
+            for (tag, solver) in [
+                ("midpoint_ns", bns_serve::solver::taxonomy::midpoint_ns(nfe)),
+                ("bns-dense", dense_ns(nfe)),
+            ] {
+                let f = ZeroField(dim);
+                let mut rng = Pcg32::seeded(7);
+                let x0 = rng.normal_vec(batch * dim);
+                let iters = 100;
+                // equivalence guard before timing
+                let a = solver.sample(&f, &x0)?;
+                let bref = solver.sample_into(&f, &x0, &mut ws)?;
+                assert_eq!(
+                    a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    bref.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "{tag}: sample_into drifted from sample"
+                );
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    solver.sample(&f, &x0)?;
+                }
+                let dt_alloc = t0.elapsed().as_secs_f64() / iters as f64;
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    solver.sample_into(&f, &x0, &mut ws)?;
+                }
+                let dt_ws = t0.elapsed().as_secs_f64() / iters as f64;
+                hot.row(vec![
+                    tag.into(),
+                    nfe.to_string(),
+                    batch.to_string(),
+                    format!("{:.1}", dt_alloc * 1e6),
+                    format!("{:.1}", dt_ws * 1e6),
+                    format!("{:.2}x", dt_alloc / dt_ws),
+                ]);
+                results.push(Json::obj(vec![
+                    ("artifact", Json::Str(format!("ns-combine-{tag}"))),
+                    ("nfe", Json::Num(nfe as f64)),
+                    ("batch", Json::Num(batch as f64)),
+                    ("sample_us", Json::Num(dt_alloc * 1e6)),
+                    ("sample_into_us", Json::Num(dt_ws * 1e6)),
+                    ("speedup", Json::Num(dt_alloc / dt_ws)),
+                ]));
+            }
+        }
+    }
+    println!("\n=== L3: Algorithm 1 combine — allocating sample vs workspace sample_into ===");
+    hot.print();
+
+    // ---- L3: generic steppers through the same hot path ----------------
+    let mut gen = Table::new(&["solver", "NFE", "batch", "sample(us)", "sample_into(us)", "speedup"]);
+    for name in ["euler", "midpoint", "rk4"] {
+        let solver = bns_serve::solver::baseline(
+            name,
+            16,
+            bns_serve::solver::scheduler::Scheduler::FmOt,
+        )?;
+        let f = ZeroField(dim);
+        let mut rng = Pcg32::seeded(9);
+        let batch = 64;
+        let x0 = rng.normal_vec(batch * dim);
+        let iters = 100;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            solver.sample(&f, &x0)?;
+        }
+        let dt_alloc = t0.elapsed().as_secs_f64() / iters as f64;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            solver.sample_into(&f, &x0, &mut ws)?;
+        }
+        let dt_ws = t0.elapsed().as_secs_f64() / iters as f64;
+        gen.row(vec![
+            name.into(),
+            "16".into(),
+            batch.to_string(),
+            format!("{:.1}", dt_alloc * 1e6),
+            format!("{:.1}", dt_ws * 1e6),
+            format!("{:.2}x", dt_alloc / dt_ws),
+        ]);
+        results.push(Json::obj(vec![
+            ("artifact", Json::Str(format!("stepper-{name}"))),
+            ("nfe", Json::Num(16.0)),
+            ("batch", Json::Num(batch as f64)),
+            ("sample_us", Json::Num(dt_alloc * 1e6)),
+            ("sample_into_us", Json::Num(dt_ws * 1e6)),
+            ("speedup", Json::Num(dt_alloc / dt_ws)),
+        ]));
+    }
+    println!("\n=== L3: generic steppers — allocating sample vs workspace sample_into ===");
+    gen.print();
 
     let path = write_results("perf_layers", &Json::Arr(results))?;
     println!("\nwrote {}", path.display());

@@ -2,7 +2,7 @@
 //! sets, ground-truth generation, metric sweeps, and a plain-text table
 //! printer (offline substrate for criterion's reporting).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -130,6 +130,83 @@ pub fn sample_counting(
     let cf = CountingField::new(field);
     let out = solver.sample(&cf, x0)?;
     Ok((out, cf.count()))
+}
+
+// ---------------------------------------------------------------------------
+// stub artifact stores (default-build tests/benches; see runtime/backend.rs)
+// ---------------------------------------------------------------------------
+
+/// Description of one stub-backend model (an affine velocity field the
+/// stub device backend can "execute"); see `runtime::backend`.
+pub struct StubModel<'a> {
+    pub name: &'a str,
+    pub dim: usize,
+    pub num_classes: usize,
+    /// Forward passes per eval per row (2 = CFG-composed, 1 = uncond).
+    pub forwards_per_eval: usize,
+    /// Field: u = k·x + c (per element).
+    pub k: f64,
+    pub c: f64,
+    pub buckets: &'a [usize],
+}
+
+/// Write a complete, loadable artifact directory (manifest + per-bucket
+/// stub model files, no distilled solvers) for the stub device backend.
+/// Lets `cargo test` and benches drive the full engine/runtime stack
+/// without compiled HLO artifacts.
+pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
+    use std::collections::BTreeMap;
+    std::fs::create_dir_all(dir.join("models"))?;
+    let mut model_entries: BTreeMap<String, Json> = BTreeMap::new();
+    for m in models {
+        let mut buckets = Vec::new();
+        for &b in m.buckets {
+            let rel = format!("models/{}_b{b}.stub.json", m.name);
+            let spec = Json::obj(vec![(
+                "bns_stub_field",
+                Json::obj(vec![("k", Json::Num(m.k)), ("c", Json::Num(m.c))]),
+            )]);
+            std::fs::write(dir.join(&rel), spec.to_string())?;
+            buckets.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("path", Json::Str(rel)),
+            ]));
+        }
+        model_entries.insert(
+            m.name.to_string(),
+            Json::obj(vec![
+                ("scheduler", Json::Str("fm_ot".into())),
+                ("parametrization", Json::Str("velocity".into())),
+                ("dim", Json::Num(m.dim as f64)),
+                ("num_classes", Json::Num(m.num_classes as f64)),
+                ("null_class", Json::Num(m.num_classes as f64)),
+                ("data", Json::Str("images".into())),
+                ("forwards_per_eval", Json::Num(m.forwards_per_eval as f64)),
+                ("artifacts", Json::Arr(buckets)),
+            ]),
+        );
+    }
+    // minimal-but-valid FD-synth block (identity-ish 2-feature extractor)
+    let dim = models.first().map(|m| m.dim).unwrap_or(2);
+    let hidden = 2;
+    let feat_dim = 2;
+    let fd = Json::obj(vec![
+        ("dim", Json::Num(dim as f64)),
+        ("feat_hidden", Json::Num(hidden as f64)),
+        ("feat_dim", Json::Num(feat_dim as f64)),
+        ("w1", Json::arr_f64(&vec![0.1; dim * hidden])),
+        ("b1", Json::arr_f64(&[0.0; 2])),
+        ("w2", Json::arr_f64(&[1.0, 0.0, 0.0, 1.0])),
+        ("ref_mean", Json::arr_f64(&[0.0, 0.0])),
+        ("ref_cov", Json::arr_f64(&[1.0, 0.0, 0.0, 1.0])),
+    ]);
+    let manifest = Json::obj(vec![
+        ("models", Json::Obj(model_entries)),
+        ("solvers", Json::Arr(Vec::new())),
+        ("fd", fd),
+    ]);
+    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------

@@ -6,11 +6,15 @@
 //!     an mpsc channel;
 //!   * the dispatch thread owns the `Batcher`, applies admission control
 //!     and flush policy, and hands `Batch`es to workers over a shared
-//!     work queue;
-//!   * each worker resolves the route, builds the concatenated
-//!     `ModelField`, runs the solver lockstep over the whole group, and
+//!     work queue (a `VecDeque` — FIFO pops are O(1), not the O(n)
+//!     front-removal of a `Vec`);
+//!   * each worker owns a `SampleWorkspace` for its whole lifetime,
+//!     resolves the route through the shared `RouterCache`, builds the
+//!     concatenated `ModelField`, runs the solver lockstep over the
+//!     whole group via the allocation-free `sample_into` path, and
 //!     splits the result rows back to per-request replies.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -20,10 +24,11 @@ use anyhow::Result;
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};
-use super::router::{route, RoutedSolver};
+use super::router::{RoutedSolver, RouterCache};
 use crate::runtime::{ArtifactStore, ModelField, Runtime};
 use crate::solver::field::{CountingField, Field};
-use crate::solver::rk45::{rk45, Rk45Opts};
+use crate::solver::rk45::{rk45_into, Rk45Opts};
+use crate::solver::SampleWorkspace;
 use crate::util::rng::Pcg32;
 
 pub struct EngineConfig {
@@ -38,7 +43,7 @@ impl Default for EngineConfig {
 }
 
 struct WorkQueue {
-    q: Mutex<Vec<Batch>>,
+    q: Mutex<VecDeque<Batch>>,
     cv: Condvar,
     shutdown: AtomicBool,
 }
@@ -58,10 +63,11 @@ impl Engine {
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
-            q: Mutex::new(Vec::new()),
+            q: Mutex::new(VecDeque::new()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
+        let router = Arc::new(RouterCache::new());
 
         // dispatch thread
         let wq_d = wq.clone();
@@ -103,7 +109,7 @@ impl Engine {
                     for batch in batcher.poll(Instant::now()) {
                         metrics_d.record_batch(batch.rows);
                         let mut q = wq_d.q.lock().unwrap();
-                        q.push(batch);
+                        q.push_back(batch);
                         wq_d.cv.notify_one();
                     }
                 }
@@ -111,7 +117,7 @@ impl Engine {
                 for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
                     metrics_d.record_batch(batch.rows);
                     let mut q = wq_d.q.lock().unwrap();
-                    q.push(batch);
+                    q.push_back(batch);
                     wq_d.cv.notify_one();
                 }
                 wq_d.shutdown.store(true, Ordering::SeqCst);
@@ -126,23 +132,29 @@ impl Engine {
             let store_w = store.clone();
             let rt_w = rt.clone();
             let metrics_w = metrics.clone();
+            let router_w = router.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bns-worker-{wi}"))
-                    .spawn(move || loop {
-                        let batch = {
-                            let mut q = wq_w.q.lock().unwrap();
-                            loop {
-                                if !q.is_empty() {
-                                    break q.remove(0); // FIFO for latency fairness
+                    .spawn(move || {
+                        // one workspace per worker, reused across batches:
+                        // the sampling hot path allocates nothing per step
+                        let mut ws = SampleWorkspace::new();
+                        loop {
+                            let batch = {
+                                let mut q = wq_w.q.lock().unwrap();
+                                loop {
+                                    if let Some(b) = q.pop_front() {
+                                        break b; // FIFO for latency fairness
+                                    }
+                                    if wq_w.shutdown.load(Ordering::SeqCst) {
+                                        return;
+                                    }
+                                    q = wq_w.cv.wait(q).unwrap();
                                 }
-                                if wq_w.shutdown.load(Ordering::SeqCst) {
-                                    return;
-                                }
-                                q = wq_w.cv.wait(q).unwrap();
-                            }
-                        };
-                        run_batch(&store_w, &rt_w, &metrics_w, batch);
+                            };
+                            run_batch(&store_w, &rt_w, &metrics_w, &router_w, batch, &mut ws);
+                        }
                     })
                     .expect("spawn worker"),
             );
@@ -204,61 +216,87 @@ impl Engine {
     }
 }
 
-/// Execute one batched group: build the concatenated field, run the
-/// solver lockstep, split rows back to requests.
-fn run_batch(store: &ArtifactStore, rt: &Runtime, metrics: &Metrics, batch: Batch) {
-    let started = Instant::now();
-    let result = (|| -> Result<(Vec<f32>, usize, usize, String, usize)> {
-        let info = store.model(&batch.key.model)?;
-        let dim = info.dim;
-        let guidance = f32::from_bits(batch.key.guidance_bits);
+/// What a solved batch hands back to the reply-splitting loop. `out`
+/// borrows the worker's workspace — rows are copied per request, which
+/// is the one unavoidable allocation (the reply owns its samples).
+struct BatchOutcome<'w> {
+    out: &'w [f32],
+    nfe: usize,
+    forwards_per_eval: usize,
+    solver_name: String,
+    dim: usize,
+}
 
-        // concatenate labels + noise rows
-        let mut labels = Vec::with_capacity(batch.rows);
-        let mut x0 = Vec::with_capacity(batch.rows * dim);
-        for req in &batch.requests {
-            labels.extend_from_slice(&req.labels);
-            match &req.x0 {
-                Some(x) => x0.extend_from_slice(x),
-                None => {
-                    let mut rng = Pcg32::seeded(req.seed);
-                    x0.extend(rng.normal_vec(req.labels.len() * dim));
-                }
+fn solve_batch<'w>(
+    store: &ArtifactStore,
+    rt: &Runtime,
+    router: &RouterCache,
+    batch: &Batch,
+    ws: &'w mut SampleWorkspace,
+) -> Result<BatchOutcome<'w>> {
+    let info = store.model(&batch.key.model)?;
+    let dim = info.dim;
+    let guidance = f32::from_bits(batch.key.guidance_bits);
+
+    // concatenate labels + noise rows
+    let mut labels = Vec::with_capacity(batch.rows);
+    let mut x0 = Vec::with_capacity(batch.rows * dim);
+    for req in &batch.requests {
+        labels.extend_from_slice(&req.labels);
+        match &req.x0 {
+            Some(x) => x0.extend_from_slice(x),
+            None => {
+                let mut rng = Pcg32::seeded(req.seed);
+                x0.extend(rng.normal_vec(req.labels.len() * dim));
             }
         }
+    }
 
-        let field = ModelField::new(rt, info, labels, guidance)?;
-        let counting = CountingField::new(&field);
-        let spec = &batch.requests[0].solver;
-        let routed = route(store, &batch.key.model, guidance as f64, info.scheduler, spec)?;
-        let out = match &routed.solver {
-            RoutedSolver::Fixed(s) => s.sample(&counting, &x0)?,
-            RoutedSolver::GroundTruth => rk45(&counting, &x0, &Rk45Opts::default())?.0,
-        };
-        let nfe = counting.count();
-        let forwards = nfe * batch.rows * field.forwards_per_eval();
-        Ok((out, nfe, forwards, routed.name, dim))
-    })();
+    let field = ModelField::new(rt, info, labels, guidance)?;
+    let forwards_per_eval = field.forwards_per_eval();
+    let counting = CountingField::new(&field);
+    let spec = &batch.requests[0].solver;
+    let routed = router.resolve(store, &batch.key.model, guidance, info.scheduler, spec)?;
+    let out: &[f32] = match &routed.solver {
+        RoutedSolver::Fixed(s) => s.sample_into(&counting, &x0, ws)?,
+        RoutedSolver::GroundTruth => rk45_into(&counting, &x0, &Rk45Opts::default(), ws)?.0,
+    };
+    let nfe = counting.count();
+    Ok(BatchOutcome { out, nfe, forwards_per_eval, solver_name: routed.name.clone(), dim })
+}
 
-    let exec_us = started.elapsed().as_micros() as u64;
-    match result {
-        Ok((out, nfe, forwards, solver_name, dim)) => {
-            metrics.record_evals(nfe, forwards);
+/// Execute one batched group: build the concatenated field, run the
+/// solver lockstep through the worker's workspace, split rows back.
+fn run_batch(
+    store: &ArtifactStore,
+    rt: &Runtime,
+    metrics: &Metrics,
+    router: &RouterCache,
+    batch: Batch,
+    ws: &mut SampleWorkspace,
+) {
+    let started = Instant::now();
+    match solve_batch(store, rt, router, &batch, ws) {
+        Ok(o) => {
+            let exec_us = started.elapsed().as_micros() as u64;
+            // aggregate and per-request accounting share one formula:
+            // forwards = nfe × rows × forwards-per-eval of *this* field
+            metrics.record_evals(o.nfe, o.nfe * batch.rows * o.forwards_per_eval);
             let mut offset = 0;
             for req in batch.requests {
                 let rows = req.labels.len();
                 let queue_us = started.duration_since(req.enqueued_at).as_micros() as u64;
-                metrics.record_latency(queue_us, exec_us, &solver_name);
-                let samples = out[offset * dim..(offset + rows) * dim].to_vec();
+                metrics.record_latency(queue_us, exec_us, &o.solver_name);
+                let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
                 offset += rows;
                 let _ = req.reply.send(SampleResponse {
                     id: req.id,
                     result: Ok(SampleOutput {
                         samples,
-                        dim,
-                        nfe,
-                        forwards: nfe * rows * 2,
-                        solver_used: solver_name.clone(),
+                        dim: o.dim,
+                        nfe: o.nfe,
+                        forwards: o.nfe * rows * o.forwards_per_eval,
+                        solver_used: o.solver_name.clone(),
                         queue_us,
                         exec_us,
                     }),

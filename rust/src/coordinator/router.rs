@@ -3,7 +3,17 @@
 //! `Auto { nfe }` implements the headline feature — "give me the best
 //! solver this service has for (model, guidance, NFE)": a BNS artifact if
 //! one was distilled, else BST, else the strongest baseline that divides
-//! the NFE (the Thm 3.2 hierarchy top-down).
+//! the NFE (the Thm 3.2 hierarchy top-down: RK4 when 4 | NFE, midpoint
+//! when 2 | NFE, Euler otherwise).
+//!
+//! Routing used to happen from scratch on every batch — including a
+//! clone of a distilled solver's dense lower-triangular `b` matrix
+//! (O(nfe²) f64s). `RouterCache` memoizes the routed outcome per
+//! `(model, guidance, solver key)` behind an `Arc`, so steady-state
+//! batches share one immutable solver instance across workers.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
@@ -22,6 +32,17 @@ pub enum RoutedSolver {
     Fixed(Box<dyn Solver>),
     /// Adaptive ground truth (RK45 with default tolerances).
     GroundTruth,
+}
+
+/// Strongest generic baseline that divides `nfe` (Thm 3.2 hierarchy).
+fn auto_baseline_name(nfe: usize) -> &'static str {
+    if nfe % 4 == 0 {
+        "rk4"
+    } else if nfe % 2 == 0 {
+        "midpoint"
+    } else {
+        "euler"
+    }
 }
 
 pub fn route(
@@ -69,8 +90,7 @@ pub fn route(
                 }
             }
             // baseline fallback: strongest generic that fits the NFE
-            let name = if *nfe % 2 == 0 { "midpoint" } else { "euler" };
-            let s = baseline(name, *nfe, sched)?;
+            let s = baseline(auto_baseline_name(*nfe), *nfe, sched)?;
             let n = s.name();
             Ok(Routed { solver: RoutedSolver::Fixed(s), name: format!("auto-{n}") })
         }
@@ -78,6 +98,7 @@ pub fn route(
 }
 
 /// Auto-routing table for introspection ("what would NFE=k get?").
+/// Kept consistent with `route`'s `Auto` arm (asserted by unit tests).
 pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usize) -> String {
     for kind in ["bns", "bst"] {
         if let Some(art) = store
@@ -88,10 +109,65 @@ pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usi
             return art.name.clone();
         }
     }
-    if nfe % 2 == 0 {
-        format!("auto-midpoint{nfe}")
-    } else {
-        format!("auto-euler{nfe}")
+    // Derive the name exactly the way `route`'s Auto arm does, so the
+    // two can never drift. The generic steppers ignore the scheduler,
+    // and `auto_baseline_name` guarantees the divisibility their
+    // constructors assert.
+    let s = baseline(auto_baseline_name(nfe), nfe, Scheduler::FmOt)
+        .expect("generic auto baselines always construct");
+    format!("auto-{}", s.name())
+}
+
+/// Memoized routing: one resolution (and one dense-`b` clone) per
+/// distinct `(model, guidance, solver key)`, shared across workers.
+/// The artifact store is immutable for the engine's lifetime, so cached
+/// entries never go stale.
+///
+/// The key includes the request's guidance scale and solver spec — both
+/// client-controlled — so the cache is bounded: once `MAX_ENTRIES`
+/// distinct keys exist, further misses resolve uncached (steady
+/// workloads keep their hits; an adversarial guidance/NFE sweep degrades
+/// to per-batch resolution instead of unbounded growth).
+#[derive(Default)]
+pub struct RouterCache {
+    map: Mutex<HashMap<(String, u32, String), Arc<Routed>>>,
+}
+
+/// Upper bound on cached routes (each distilled entry holds an O(nfe²)
+/// dense `b` clone, so keep this modest).
+const MAX_ENTRIES: usize = 512;
+
+impl RouterCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn resolve(
+        &self,
+        store: &ArtifactStore,
+        model: &str,
+        guidance: f32,
+        sched: Scheduler,
+        spec: &SolverSpec,
+    ) -> Result<Arc<Routed>> {
+        let key = (model.to_string(), guidance.to_bits(), spec.group_key());
+        if let Some(r) = self.map.lock().unwrap().get(&key) {
+            return Ok(r.clone());
+        }
+        let routed = Arc::new(route(store, model, guidance as f64, sched, spec)?);
+        let mut map = self.map.lock().unwrap();
+        if map.len() < MAX_ENTRIES {
+            map.entry(key).or_insert_with(|| routed.clone());
+        }
+        Ok(routed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -106,4 +182,78 @@ pub fn distilled(store: &ArtifactStore, model: &str, guidance: f64, kind: &str, 
         .ok_or_else(|| {
             anyhow::anyhow!("no {kind} solver for model={model} w={guidance} nfe={nfe}")
         })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{ArtifactStore, FdSynth};
+    use crate::util::json::Json;
+    use crate::util::linalg::Mat;
+
+    fn empty_store() -> ArtifactStore {
+        ArtifactStore {
+            root: std::path::PathBuf::from("."),
+            models: Default::default(),
+            solvers: Default::default(),
+            fd: FdSynth {
+                dim: 1,
+                hidden: 1,
+                feat_dim: 1,
+                w1: vec![0.0],
+                b1: vec![0.0],
+                w2: vec![0.0],
+                ref_mean: vec![0.0],
+                ref_cov: Mat::from_rows(1, vec![1.0]),
+            },
+            scheduler_check: Json::Null,
+        }
+    }
+
+    fn routed_name(store: &ArtifactStore, nfe: usize) -> String {
+        route(store, "m", 0.0, Scheduler::FmOt, &SolverSpec::Auto { nfe })
+            .unwrap()
+            .name
+    }
+
+    #[test]
+    fn auto_fallback_tiers() {
+        let store = empty_store();
+        // 4 | nfe -> RK4 (the strongest generic baseline of Thm 3.2)
+        assert_eq!(routed_name(&store, 8), "auto-rk4_8");
+        assert_eq!(routed_name(&store, 16), "auto-rk4_16");
+        // even but not divisible by 4 -> midpoint
+        assert_eq!(routed_name(&store, 6), "auto-midpoint6");
+        assert_eq!(routed_name(&store, 10), "auto-midpoint10");
+        // odd -> euler
+        assert_eq!(routed_name(&store, 5), "auto-euler5");
+        assert_eq!(routed_name(&store, 7), "auto-euler7");
+    }
+
+    #[test]
+    fn describe_auto_matches_route() {
+        let store = empty_store();
+        for nfe in [4usize, 5, 6, 7, 8, 10, 12, 15, 16, 20] {
+            assert_eq!(
+                describe_auto(&store, "m", 0.0, nfe),
+                routed_name(&store, nfe),
+                "nfe {nfe}"
+            );
+        }
+    }
+
+    #[test]
+    fn cache_returns_shared_instance() {
+        let store = empty_store();
+        let cache = RouterCache::new();
+        let spec = SolverSpec::Auto { nfe: 8 };
+        let a = cache.resolve(&store, "m", 0.0, Scheduler::FmOt, &spec).unwrap();
+        let b = cache.resolve(&store, "m", 0.0, Scheduler::FmOt, &spec).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second resolve must hit the cache");
+        assert_eq!(cache.len(), 1);
+        // a different guidance is a different cache entry
+        let c = cache.resolve(&store, "m", 1.5, Scheduler::FmOt, &spec).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.len(), 2);
+    }
 }

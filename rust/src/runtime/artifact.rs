@@ -30,6 +30,11 @@ pub struct ModelInfo {
     pub null_class: usize,
     pub data: String, // "images" | "audio"
     pub buckets: Vec<BucketInfo>,
+    /// Model forward passes per velocity evaluation per row: 2 for the
+    /// CFG-composed artifacts aot.py lowers (cond + uncond branches),
+    /// 1 for unconditional/non-CFG models. Manifest key
+    /// `forwards_per_eval`, defaulting to 2 for backward compatibility.
+    pub forwards_per_eval: usize,
 }
 
 /// A distilled solver artifact (BNS / BST / init).
@@ -149,6 +154,7 @@ impl ArtifactStore {
                     null_class: m.get("null_class").as_usize().context("null_class")?,
                     data: m.get("data").as_str().unwrap_or("images").to_string(),
                     buckets,
+                    forwards_per_eval: m.get("forwards_per_eval").as_usize().unwrap_or(2),
                 },
             );
         }

@@ -1,0 +1,259 @@
+//! Device backends behind the device thread in `client.rs`.
+//!
+//! The real executor is PJRT via the `xla` crate — which, like
+//! serde/tokio/clap, is **not resolvable in the offline build image**
+//! (DESIGN.md §3). It is therefore gated behind the `pjrt` cargo feature:
+//! enabling it requires vendoring the `xla` crate and adding it to
+//! `[dependencies]`. The code paths are otherwise identical — both
+//! backends sit behind the same `Backend` trait and the same device
+//! thread, so the engine/runtime layers never know which one runs.
+//!
+//! The default (no-feature) build uses `StubBackend`: it refuses real
+//! HLO-text artifacts with an actionable error, but loads *stub field*
+//! artifacts — a JSON file `{"bns_stub_field": {"k": .., "c": ..}}`
+//! describing the affine velocity field
+//!     u[r, d] = k * x[r, d] + c + label_scale * labels[r] + t_scale * t
+//! evaluated in f32. That keeps the full serving stack (engine, batcher,
+//! router, accounting) executable and testable — `cargo test` drives
+//! real batches end-to-end through the device thread — without any
+//! compiled model. `bench_util::write_stub_artifacts` emits a complete
+//! artifact directory in this format.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled-executable store owned by the device thread. Implementors
+/// are **not** required to be `Send`/`Sync`: a single device thread owns
+/// the backend for its whole lifetime (the PJRT types are `!Send`).
+pub trait Backend {
+    fn platform(&self) -> String;
+
+    /// Load + compile an artifact file; returns a backend-local id.
+    fn load(&mut self, path: &Path) -> Result<u64>;
+
+    /// Execute executable `id` on exactly `batch` rows.
+    #[allow(clippy::too_many_arguments)]
+    fn exec(
+        &mut self,
+        id: u64,
+        batch: usize,
+        dim: usize,
+        x: &[f32],
+        t: f32,
+        w: f32,
+        labels: &[i32],
+    ) -> Result<Vec<f32>>;
+}
+
+/// Construct the CPU backend selected at compile time.
+pub fn new_cpu() -> Result<Box<dyn Backend>> {
+    #[cfg(feature = "pjrt")]
+    return Ok(Box::new(pjrt::PjrtBackend::new()?));
+    #[cfg(not(feature = "pjrt"))]
+    Ok(Box::new(StubBackend::new()))
+}
+
+// ---------------------------------------------------------------------------
+// Stub backend (default build)
+// ---------------------------------------------------------------------------
+
+/// Parameters of one stub affine field artifact.
+#[derive(Debug, Clone, Copy)]
+struct StubExe {
+    k: f32,
+    c: f32,
+    label_scale: f32,
+    t_scale: f32,
+}
+
+/// Offline-build device backend: loads `bns_stub_field` JSON artifacts.
+pub struct StubBackend {
+    exes: Vec<StubExe>,
+}
+
+impl StubBackend {
+    pub fn new() -> Self {
+        StubBackend { exes: Vec::new() }
+    }
+}
+
+impl Default for StubBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backend for StubBackend {
+    fn platform(&self) -> String {
+        "stub-cpu".to_string()
+    }
+
+    fn load(&mut self, path: &Path) -> Result<u64> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading artifact {}", path.display()))?;
+        let trimmed = text.trim_start();
+        let spec = if trimmed.starts_with('{') {
+            crate::util::json::Json::parse(trimmed)
+                .ok()
+                .map(|j| j.get("bns_stub_field").clone())
+                .filter(|s| s != &crate::util::json::Json::Null)
+        } else {
+            None
+        };
+        let Some(spec) = spec else {
+            return Err(anyhow!(
+                "artifact {} is not a bns_stub_field JSON file; executing real HLO \
+                 artifacts requires the PJRT backend (build with `--features pjrt` \
+                 and a vendored `xla` crate)",
+                path.display()
+            ));
+        };
+        let g = |k: &str, default: f64| spec.get(k).as_f64().unwrap_or(default) as f32;
+        self.exes.push(StubExe {
+            k: g("k", -1.0),
+            c: g("c", 0.0),
+            label_scale: g("label_scale", 0.0),
+            t_scale: g("t_scale", 0.0),
+        });
+        Ok(self.exes.len() as u64)
+    }
+
+    fn exec(
+        &mut self,
+        id: u64,
+        batch: usize,
+        dim: usize,
+        x: &[f32],
+        t: f32,
+        _w: f32,
+        labels: &[i32],
+    ) -> Result<Vec<f32>> {
+        let e = *self
+            .exes
+            .get(id as usize - 1)
+            .with_context(|| format!("unknown stub executable id {id}"))?;
+        anyhow::ensure!(x.len() == batch * dim, "stub exec: x has wrong shape");
+        anyhow::ensure!(labels.len() == batch, "stub exec: labels have wrong shape");
+        let mut out = vec![0f32; batch * dim];
+        for r in 0..batch {
+            let bias = e.c + e.label_scale * labels[r] as f32 + e.t_scale * t;
+            let row = &x[r * dim..(r + 1) * dim];
+            let orow = &mut out[r * dim..(r + 1) * dim];
+            for (o, &xv) in orow.iter_mut().zip(row.iter()) {
+                *o = e.k * xv + bias;
+            }
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend (feature = "pjrt"; requires a vendored `xla` crate)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use anyhow::{anyhow, Context, Result};
+
+    use super::Backend;
+
+    /// PJRT CPU client + compiled-executable cache. Pattern follows
+    /// /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
+    /// `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
+    pub struct PjrtBackend {
+        client: xla::PjRtClient,
+        exes: HashMap<u64, xla::PjRtLoadedExecutable>,
+        next_id: u64,
+    }
+
+    impl PjrtBackend {
+        pub fn new() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
+            Ok(PjrtBackend { client, exes: HashMap::new(), next_id: 1 })
+        }
+    }
+
+    impl Backend for PjrtBackend {
+        fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn load(&mut self, path: &Path) -> Result<u64> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
+            let id = self.next_id;
+            self.next_id += 1;
+            self.exes.insert(id, exe);
+            Ok(id)
+        }
+
+        fn exec(
+            &mut self,
+            id: u64,
+            batch: usize,
+            dim: usize,
+            x: &[f32],
+            t: f32,
+            w: f32,
+            labels: &[i32],
+        ) -> Result<Vec<f32>> {
+            let exe = self.exes.get(&id).context("unknown executable id")?;
+            let xl = xla::Literal::vec1(x)
+                .reshape(&[batch as i64, dim as i64])
+                .map_err(|e| anyhow!("reshape: {e}"))?;
+            let tl = xla::Literal::scalar(t);
+            let wl = xla::Literal::scalar(w);
+            let ll = xla::Literal::vec1(labels);
+            let result = exe
+                .execute::<xla::Literal>(&[xl, tl, wl, ll])
+                .map_err(|e| anyhow!("execute: {e}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("to_literal: {e}"))?;
+            let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
+            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_backend_loads_and_executes_stub_artifacts() {
+        let dir = std::env::temp_dir().join(format!("bns-stub-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m_b2.stub.json");
+        std::fs::write(&path, r#"{"bns_stub_field": {"k": -0.5, "c": 0.25}}"#).unwrap();
+
+        let mut b = StubBackend::new();
+        let id = b.load(&path).unwrap();
+        let out = b.exec(id, 2, 2, &[1.0, 2.0, -1.0, 0.0], 0.3, 0.0, &[0, 1]).unwrap();
+        assert_eq!(out, vec![-0.25, -0.75, 0.75, 0.25]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stub_backend_rejects_real_hlo() {
+        let dir = std::env::temp_dir().join(format!("bns-stub-hlo-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m_b2.hlo.txt");
+        std::fs::write(&path, "HloModule m\nENTRY main { ... }").unwrap();
+        let mut b = StubBackend::new();
+        let err = b.load(&path).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

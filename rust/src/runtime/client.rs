@@ -1,22 +1,31 @@
-//! PJRT runtime: load HLO-text artifacts, compile once per (model, batch)
+//! Runtime device thread: load artifacts, compile once per (model, batch)
 //! bucket, execute from the request path.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! -> `XlaComputation::from_proto` -> `PjRtClient::compile` -> `execute`.
-//! Text is the interchange (see python/compile/aot.py for why).
+//! The concrete executor lives behind `backend::Backend` — real PJRT via
+//! the `xla` crate when built with `--features pjrt`, the offline stub
+//! backend otherwise (see `backend.rs` for the rationale and the stub
+//! artifact format).
 //!
-//! Threading: the `xla` crate's client/executable types are `!Send`
-//! (Rc-based wrappers over the C API), so a dedicated **device thread**
-//! owns every PJRT object — the same discipline as a GPU stream owner.
-//! Callers talk to it over channels; `ExeHandle::run` is a synchronous
-//! RPC. On this CPU target execution is serialized anyway, so the design
-//! costs ~1us of channel latency against ~400us executions.
+//! Threading: the PJRT client/executable types are `!Send` (Rc-based
+//! wrappers over the C API), so a dedicated **device thread** owns every
+//! backend object — the same discipline as a GPU stream owner. Callers
+//! talk to it over channels; `ExeHandle::run` is a synchronous RPC. On
+//! this CPU target execution is serialized anyway, so the design costs
+//! ~1us of channel latency against ~400us executions.
+//!
+//! TODO(perf): `ExeHandle::run` copies `x`/`labels` into the message and
+//! the backend returns a fresh output vector — per-eval allocations that
+//! survive the solver-side workspace rewrite. Pooling request/response
+//! buffers across the channel would finish the job; it needs a buffer
+//! return path, so it is deferred.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::{mpsc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
+
+use super::backend;
 
 enum Msg {
     Load {
@@ -75,7 +84,7 @@ impl Runtime {
         rx.recv().unwrap_or_else(|_| "unknown".into())
     }
 
-    /// Load + compile an HLO text artifact (cached by path).
+    /// Load + compile an artifact (cached by path).
     pub fn load(&self, path: &Path, batch: usize, dim: usize) -> Result<ExeHandle> {
         if let Some(&id) = self.cache.lock().unwrap().get(path) {
             return Ok(ExeHandle { rt_tx: self.tx.lock().unwrap().clone().into(), id, batch, dim });
@@ -135,58 +144,26 @@ impl ExeHandle {
 }
 
 fn device_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
-    let client = match xla::PjRtClient::cpu() {
-        Ok(c) => {
+    let mut be = match backend::new_cpu() {
+        Ok(b) => {
             let _ = ready.send(Ok(()));
-            c
+            b
         }
         Err(e) => {
-            let _ = ready.send(Err(anyhow!("PJRT CPU client: {e}")));
+            let _ = ready.send(Err(e));
             return;
         }
     };
-    let mut exes: HashMap<u64, xla::PjRtLoadedExecutable> = HashMap::new();
-    let mut next_id = 1u64;
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Platform { reply } => {
-                let _ = reply.send(client.platform_name());
+                let _ = reply.send(be.platform());
             }
             Msg::Load { path, reply } => {
-                let r = (|| -> Result<u64> {
-                    let proto = xla::HloModuleProto::from_text_file(
-                        path.to_str().context("non-utf8 artifact path")?,
-                    )
-                    .map_err(|e| anyhow!("parsing HLO {}: {e}", path.display()))?;
-                    let comp = xla::XlaComputation::from_proto(&proto);
-                    let exe = client
-                        .compile(&comp)
-                        .map_err(|e| anyhow!("compiling {}: {e}", path.display()))?;
-                    let id = next_id;
-                    next_id += 1;
-                    exes.insert(id, exe);
-                    Ok(id)
-                })();
-                let _ = reply.send(r);
+                let _ = reply.send(be.load(&path));
             }
             Msg::Exec { id, batch, dim, x, t, w, labels, reply } => {
-                let r = (|| -> Result<Vec<f32>> {
-                    let exe = exes.get(&id).context("unknown executable id")?;
-                    let xl = xla::Literal::vec1(&x)
-                        .reshape(&[batch as i64, dim as i64])
-                        .map_err(|e| anyhow!("reshape: {e}"))?;
-                    let tl = xla::Literal::scalar(t);
-                    let wl = xla::Literal::scalar(w);
-                    let ll = xla::Literal::vec1(&labels[..]);
-                    let result = exe
-                        .execute::<xla::Literal>(&[xl, tl, wl, ll])
-                        .map_err(|e| anyhow!("execute: {e}"))?[0][0]
-                        .to_literal_sync()
-                        .map_err(|e| anyhow!("to_literal: {e}"))?;
-                    let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
-                    out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
-                })();
-                let _ = reply.send(r);
+                let _ = reply.send(be.exec(id, batch, dim, &x, t, w, &labels));
             }
         }
     }

@@ -2,6 +2,7 @@
 //! Python never runs here; everything is loaded from `artifacts/`.
 
 pub mod artifact;
+pub mod backend;
 pub mod client;
 pub mod model_field;
 

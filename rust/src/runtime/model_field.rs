@@ -1,11 +1,22 @@
 //! PJRT-backed velocity field: bridges `solver::field::Field` to the
 //! compiled model executables, with batch-bucket selection and padding.
 
+use std::sync::Mutex;
+
 use anyhow::{Context, Result};
 
 use super::artifact::ModelInfo;
 use super::client::{ExeHandle, Runtime};
 use crate::solver::field::Field;
+
+/// Reusable padding buffers for the off-bucket path of `eval_into`
+/// (rows that don't line up with a compiled bucket). One per field;
+/// workers each own their field, so the lock is uncontended.
+#[derive(Default)]
+struct EvalScratch {
+    xb: Vec<f32>,
+    lb: Vec<i32>,
+}
 
 /// A model bound to (labels, guidance): evaluating it at (t, x) runs the
 /// CFG-composed artifact. Batch handling: the smallest bucket >= rows is
@@ -16,6 +27,7 @@ pub struct ModelField {
     executables: Vec<ExeHandle>, // sorted by batch ascending
     pub labels: Vec<i32>,
     pub guidance: f32,
+    scratch: Mutex<EvalScratch>,
 }
 
 impl ModelField {
@@ -32,7 +44,13 @@ impl ModelField {
             .map(|b| rt.load(&b.path, b.batch, info.dim))
             .collect::<Result<Vec<_>>>()
             .with_context(|| format!("loading model '{}'", info.name))?;
-        Ok(ModelField { info: info.clone(), executables, labels, guidance })
+        Ok(ModelField {
+            info: info.clone(),
+            executables,
+            labels,
+            guidance,
+            scratch: Mutex::new(EvalScratch::default()),
+        })
     }
 
     fn pick(&self, rows: usize) -> &ExeHandle {
@@ -54,27 +72,49 @@ impl Field for ModelField {
     }
 
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; x.len()];
+        self.eval_into(t, x, &mut out)?;
+        Ok(out)
+    }
+
+    /// Hot-path evaluation: chunks over buckets, writing each chunk's
+    /// output straight into `out`. When a chunk exactly fills a compiled
+    /// bucket — the common case once the batcher aligns `max_rows` with
+    /// the bucket sizes — the input rows and labels are passed through
+    /// without the padded staging copy; only off-bucket tails go through
+    /// the (reused, preallocated) padding scratch.
+    fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
         let dim = self.info.dim;
         let rows = x.len() / dim;
         debug_assert_eq!(rows, self.labels.len(), "labels must match batch");
-        let mut out = Vec::with_capacity(x.len());
+        debug_assert_eq!(out.len(), x.len(), "output buffer must match x");
         let mut r = 0;
         while r < rows {
             let exe = self.pick(rows - r);
             let take = exe.batch.min(rows - r);
-            // pad up to the bucket
-            let mut xb = vec![0f32; exe.batch * dim];
-            xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
-            let mut lb = vec![self.info.null_class as i32; exe.batch];
-            lb[..take].copy_from_slice(&self.labels[r..r + take]);
-            let ub = exe.run(&xb, t as f32, self.guidance, &lb)?;
-            out.extend_from_slice(&ub[..take * dim]);
+            let ub = if take == exe.batch {
+                // bucket-aligned: no padding, no staging copy
+                exe.run(&x[r * dim..(r + take) * dim], t as f32, self.guidance, &self.labels[r..r + take])?
+            } else {
+                // pad up to the bucket through reused scratch
+                let mut s = self.scratch.lock().unwrap();
+                s.xb.clear();
+                s.xb.resize(exe.batch * dim, 0.0);
+                s.xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
+                s.lb.clear();
+                s.lb.resize(exe.batch, self.info.null_class as i32);
+                s.lb[..take].copy_from_slice(&self.labels[r..r + take]);
+                exe.run(&s.xb, t as f32, self.guidance, &s.lb)?
+            };
+            out[r * dim..(r + take) * dim].copy_from_slice(&ub[..take * dim]);
             r += take;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn forwards_per_eval(&self) -> usize {
-        2 // CFG doubles the effective batch (cond + uncond branches)
+        // CFG-composed artifacts run cond + uncond branches per row; the
+        // manifest says which composition a model was lowered with.
+        self.info.forwards_per_eval
     }
 }

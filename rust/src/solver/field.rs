@@ -15,6 +15,23 @@ pub trait Field: Send + Sync {
     /// Evaluate u(t, x) for every row of x.
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>>;
 
+    /// Write u(t, x) into `out` (same length as `x`) without allocating
+    /// the result buffer — the hot-path entry used by `sample_into`.
+    /// Must produce values bit-identical to `eval`. The default falls
+    /// back to `eval` and copies; `ModelField` overrides it to write the
+    /// executable output straight into the caller's buffer.
+    fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
+        let u = self.eval(t, x)?;
+        anyhow::ensure!(
+            u.len() == out.len(),
+            "eval returned {} values for an output buffer of {}",
+            u.len(),
+            out.len()
+        );
+        out.copy_from_slice(&u);
+        Ok(())
+    }
+
     /// Model forward passes consumed per `eval` call *per row* (CFG-guided
     /// PJRT fields report 2). Used for NFE accounting.
     fn forwards_per_eval(&self) -> usize {
@@ -46,6 +63,11 @@ impl<'a> Field for CountingField<'a> {
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
         self.count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         self.inner.eval(t, x)
+    }
+
+    fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.count.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.inner.eval_into(t, x, out)
     }
 
     fn forwards_per_eval(&self) -> usize {
@@ -237,6 +259,18 @@ mod tests {
             cf.eval(0.3, &x).unwrap();
         }
         assert_eq!(cf.count(), 5);
+    }
+
+    #[test]
+    fn eval_into_matches_eval_and_counts() {
+        let f = NonlinearField { dim: 2 };
+        let cf = CountingField::new(&f);
+        let x = vec![0.3f32, -0.7, 1.1, 0.0];
+        let a = cf.eval(0.4, &x).unwrap();
+        let mut b = vec![0f32; x.len()];
+        cf.eval_into(0.4, &x, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(cf.count(), 2);
     }
 
     #[test]

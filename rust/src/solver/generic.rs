@@ -9,6 +9,7 @@
 use anyhow::Result;
 
 use super::field::Field;
+use super::workspace::SampleWorkspace;
 use super::Solver;
 
 /// Time grids.
@@ -46,6 +47,28 @@ impl Solver for Euler {
             }
         }
         Ok(x)
+    }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        ws.ensure_stages(x0.len(), 1);
+        {
+            let x = &mut ws.x;
+            let [u, ..] = &mut ws.stage;
+            x.copy_from_slice(x0);
+            for w in self.times.windows(2) {
+                let h = (w[1] - w[0]) as f32;
+                field.eval_into(w[0], x, u)?;
+                for (xv, uv) in x.iter_mut().zip(u.iter()) {
+                    *xv += h * uv;
+                }
+            }
+        }
+        Ok(&ws.x)
     }
 }
 
@@ -88,6 +111,32 @@ impl Solver for Midpoint {
         }
         Ok(x)
     }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        ws.ensure_stages(x0.len(), 3);
+        {
+            let x = &mut ws.x;
+            let [u1, xi, u2, ..] = &mut ws.stage;
+            x.copy_from_slice(x0);
+            for w in self.macro_times.windows(2) {
+                let h = w[1] - w[0];
+                field.eval_into(w[0], x, u1)?;
+                for ((o, &xv), &uv) in xi.iter_mut().zip(x.iter()).zip(u1.iter()) {
+                    *o = xv + (0.5 * h) as f32 * uv;
+                }
+                field.eval_into(w[0] + 0.5 * h, xi, u2)?;
+                for (xv, uv) in x.iter_mut().zip(u2.iter()) {
+                    *xv += h as f32 * uv;
+                }
+            }
+        }
+        Ok(&ws.x)
+    }
 }
 
 /// Heun (explicit trapezoid, RK2): NFE = 2 * macro steps.
@@ -127,6 +176,32 @@ impl Solver for Heun {
             }
         }
         Ok(x)
+    }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        ws.ensure_stages(x0.len(), 3);
+        {
+            let x = &mut ws.x;
+            let [u1, xe, u2, ..] = &mut ws.stage;
+            x.copy_from_slice(x0);
+            for w in self.macro_times.windows(2) {
+                let h = w[1] - w[0];
+                field.eval_into(w[0], x, u1)?;
+                for ((o, &xv), &uv) in xe.iter_mut().zip(x.iter()).zip(u1.iter()) {
+                    *o = xv + h as f32 * uv;
+                }
+                field.eval_into(w[1].min(1.0 - 1e-9), xe, u2)?;
+                for ((xv, &a), &b) in x.iter_mut().zip(u1.iter()).zip(u2.iter()) {
+                    *xv += (0.5 * h) as f32 * (a + b);
+                }
+            }
+        }
+        Ok(&ws.x)
     }
 }
 
@@ -168,6 +243,40 @@ impl Solver for Rk4 {
             }
         }
         Ok(x)
+    }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        ws.ensure_stages(x0.len(), 5);
+        {
+            let x = &mut ws.x;
+            let [k1, k2, k3, k4, xi] = &mut ws.stage;
+            x.copy_from_slice(x0);
+            let axpy_into = |out: &mut [f32], x: &[f32], k: &[f32], c: f64| {
+                for ((o, &a), &b) in out.iter_mut().zip(x.iter()).zip(k.iter()) {
+                    *o = a + c as f32 * b;
+                }
+            };
+            for w in self.macro_times.windows(2) {
+                let h = w[1] - w[0];
+                field.eval_into(w[0], x, k1)?;
+                axpy_into(xi, x, k1, 0.5 * h);
+                field.eval_into(w[0] + 0.5 * h, xi, k2)?;
+                axpy_into(xi, x, k2, 0.5 * h);
+                field.eval_into(w[0] + 0.5 * h, xi, k3)?;
+                axpy_into(xi, x, k3, h);
+                field.eval_into((w[0] + h).min(1.0 - 1e-9), xi, k4)?;
+                for i in 0..x.len() {
+                    x[i] += (h / 6.0) as f32
+                        * (k1[i] + 2.0 * k2[i] + 2.0 * k3[i] + k4[i]);
+                }
+            }
+        }
+        Ok(&ws.x)
     }
 }
 
@@ -215,6 +324,43 @@ impl Solver for Ab2 {
             prev_u = Some(u);
         }
         Ok(x)
+    }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        ws.ensure_stages(x0.len(), 2);
+        {
+            let x = &mut ws.x;
+            let [ua, ub, ..] = &mut ws.stage;
+            x.copy_from_slice(x0);
+            // u and prev_u alternate between the two stage registers.
+            let mut bufs = [ua, ub];
+            let mut have_prev = false;
+            for i in 0..self.times.len() - 1 {
+                let h = self.times[i + 1] - self.times[i];
+                let (cur, prev) = bufs.split_at_mut(1);
+                field.eval_into(self.times[i], x, &mut *cur[0])?;
+                if !have_prev {
+                    for (xv, uv) in x.iter_mut().zip(cur[0].iter()) {
+                        *xv += h as f32 * uv;
+                    }
+                    have_prev = true;
+                } else {
+                    let hp = self.times[i] - self.times[i - 1];
+                    let w1 = h * (1.0 + h / (2.0 * hp));
+                    let w0 = -h * h / (2.0 * hp);
+                    for ((xv, &a), &b) in x.iter_mut().zip(cur[0].iter()).zip(prev[0].iter()) {
+                        *xv += (w1 as f32) * a + (w0 as f32) * b;
+                    }
+                }
+                bufs.swap(0, 1);
+            }
+        }
+        Ok(&ws.x)
     }
 }
 

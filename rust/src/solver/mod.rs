@@ -7,6 +7,50 @@
 //! * `rk45`        — adaptive ground-truth solver
 //! * `ns`          — Non-Stationary solvers (Algorithm 1) + JSON artifacts
 //! * `taxonomy`    — constructive Thm 3.2: any family -> NS coefficients
+//! * `workspace`   — preallocated scratch for the serving hot path
+//!
+//! # Workspace & buffer reuse (the serving hot path)
+//!
+//! The paper's efficiency claim is per-NFE: a distilled solver wins only
+//! if each of its few steps is a tight fused op. The seed implementation
+//! allocated on every step — `NsSolver::sample` grew a `Vec<Vec<f32>>`
+//! history, the RK steppers collected fresh intermediate-state vectors,
+//! and every `Field::eval` returned a new output buffer. Under serving
+//! load that is an allocator round-trip per step per worker.
+//!
+//! The buffer-reusing design has three layers:
+//!
+//! 1. [`SampleWorkspace`] owns every per-step buffer: the current state,
+//!    five f32 stage registers (enough for RK4's `k1..k4` plus a stage
+//!    input), a flat `[nfe, batch * dim]` history arena for the NS
+//!    combine, and the f64 state/stage arenas RK45 needs. A worker
+//!    thread creates one workspace and reuses it for every batch; the
+//!    `ensure_*` sizing calls run once per sampling run and are no-ops
+//!    at steady state.
+//! 2. [`Solver::sample_into`] is the allocation-free entry point:
+//!    `sample_into(field, x0, &mut ws)` leaves the result in the
+//!    workspace and returns a borrow of it. `NsSolver` and the five
+//!    generic steppers implement it with zero per-step allocation and
+//!    **bit-identical** arithmetic to their allocating `sample` (the
+//!    per-element operation order is unchanged; equivalence is enforced
+//!    by `tests/sample_into_equiv.rs`). Solvers without a dedicated
+//!    implementation (the exponential integrators) fall back to
+//!    `sample` transparently. `rk45_into` is the adaptive analogue.
+//! 3. [`field::Field::eval_into`] writes the velocity directly into a
+//!    caller buffer (a history-arena row, a stage register), so the
+//!    PJRT-backed `ModelField` can skip the padded-bucket staging copy
+//!    when a batch lines up with a compiled bucket.
+//!
+//! Scope of the claim: the *solver-side* combine (state updates, stage
+//! math, history bookkeeping) is allocation-free per step. Model-backed
+//! fields still pay per-eval copies inside the device-thread RPC
+//! (`ExeHandle::run` owns its message buffers and the backend returns a
+//! fresh output vector); pooling those across the channel is future
+//! work tracked in `runtime/client.rs`.
+//!
+//! `sample` remains the simple allocating reference path — benches
+//! (`perf_layers`) time the two against each other, and the equivalence
+//! tests pin them together.
 
 pub mod exponential;
 pub mod field;
@@ -15,10 +59,13 @@ pub mod ns;
 pub mod rk45;
 pub mod scheduler;
 pub mod taxonomy;
+pub mod workspace;
 
 use anyhow::Result;
 
 use field::Field;
+
+pub use workspace::SampleWorkspace;
 
 /// A fixed-NFE sampling solver.
 pub trait Solver: Send + Sync {
@@ -29,6 +76,20 @@ pub trait Solver: Send + Sync {
 
     /// Drive `x0` (row-major [batch, dim]) to an approximation of x(1).
     fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>>;
+
+    /// Buffer-reusing variant of `sample`: all scratch lives in `ws`, the
+    /// result is left in the workspace and returned as a borrow. Must be
+    /// bit-identical to `sample`. The default falls back to `sample` for
+    /// solvers without a dedicated allocation-free implementation.
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        let out = self.sample(field, x0)?;
+        Ok(ws.store_result(out))
+    }
 }
 
 impl Solver for ns::NsSolver {
@@ -42,6 +103,15 @@ impl Solver for ns::NsSolver {
 
     fn sample(&self, field: &dyn Field, x0: &[f32]) -> Result<Vec<f32>> {
         NsSolver::sample(self, field, x0)
+    }
+
+    fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        NsSolver::sample_into(self, field, x0, ws)
     }
 }
 

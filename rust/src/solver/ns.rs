@@ -5,6 +5,7 @@
 use anyhow::{bail, Context, Result};
 
 use super::field::Field;
+use super::workspace::SampleWorkspace;
 use crate::util::json::Json;
 
 /// theta of eq. 12: a time grid T_n and per-step (a_i, b_i) with
@@ -47,6 +48,19 @@ impl NsSolver {
         let n = self.nfe();
         if self.times.len() != n + 1 {
             bail!("times must have n+1 = {} entries, got {}", n + 1, self.times.len());
+        }
+        // Non-finite coefficients in a corrupt distilled artifact would
+        // otherwise propagate NaNs silently into served samples.
+        if let Some(t) = self.times.iter().find(|t| !t.is_finite()) {
+            bail!("times contain a non-finite entry ({t})");
+        }
+        if let Some(a) = self.a.iter().find(|a| !a.is_finite()) {
+            bail!("a contains a non-finite entry ({a})");
+        }
+        for (i, row) in self.b.iter().enumerate() {
+            if let Some(b) = row.iter().find(|b| !b.is_finite()) {
+                bail!("b row {i} contains a non-finite entry ({b})");
+            }
         }
         if self.times[0].abs() > 1e-9 || (self.times[n] - 1.0).abs() > 1e-6 {
             bail!("times must start at 0 and end at 1");
@@ -92,6 +106,50 @@ impl NsSolver {
             std::mem::swap(&mut x, &mut acc);
         }
         Ok(x)
+    }
+
+    /// Allocation-free Algorithm 1: identical math to `sample`, but the
+    /// velocity history lives in the workspace's flat `[nfe, len]` arena
+    /// and the `a_i·x0 + Σ_j b_ij·u_j` combine writes the state register
+    /// in place — zero heap allocation per step in steady state. The
+    /// per-element operation order matches `sample` exactly, so outputs
+    /// are bit-identical (enforced by tests/sample_into_equiv.rs).
+    pub fn sample_into<'w>(
+        &self,
+        field: &dyn Field,
+        x0: &[f32],
+        ws: &'w mut SampleWorkspace,
+    ) -> Result<&'w [f32]> {
+        let len = x0.len();
+        let n = self.nfe();
+        ws.ensure_hist(n, len);
+        {
+            let x = &mut ws.x;
+            let hist = &mut ws.hist;
+            x.copy_from_slice(x0);
+            for i in 0..n {
+                // u_i = u(t_i, x_i) written straight into its arena row
+                let (prev, cur) = hist.split_at_mut(i * len);
+                field.eval_into(self.times[i], x, &mut cur[..len])?;
+                // x_{i+1} = a_i x_0 + sum_j b_ij u_j — x_i is dead once
+                // u_i is recorded, so the combine overwrites x in place.
+                let a = self.a[i] as f32;
+                for (o, &x0v) in x.iter_mut().zip(x0.iter()) {
+                    *o = a * x0v;
+                }
+                for (j, row_b) in self.b[i].iter().enumerate() {
+                    let bj = *row_b as f32;
+                    if bj == 0.0 {
+                        continue;
+                    }
+                    let uj = if j < i { &prev[j * len..(j + 1) * len] } else { &cur[..len] };
+                    for (o, &uv) in x.iter_mut().zip(uj.iter()) {
+                        *o += bj * uv;
+                    }
+                }
+            }
+        }
+        Ok(&ws.x)
     }
 
     /// Like `sample` but keeps every trajectory iterate (diagnostics).
@@ -221,6 +279,43 @@ mod tests {
         let mut s = euler_ns(4);
         s.times[4] = 0.9; // wrong endpoint
         assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_non_finite() {
+        let mut s = euler_ns(4);
+        s.a[1] = f64::NAN;
+        assert!(s.validate().is_err());
+        let mut s = euler_ns(4);
+        s.b[2][0] = f64::INFINITY;
+        assert!(s.validate().is_err());
+        let mut s = euler_ns(4);
+        s.times[1] = f64::NAN;
+        assert!(s.validate().is_err());
+    }
+
+    #[test]
+    fn from_json_rejects_non_finite() {
+        // JSON has no NaN literal, but overflow parses to +inf — a corrupt
+        // artifact must not reach the serving path.
+        let s = euler_ns(3);
+        let j = s.to_json().to_string().replacen("1,", "1e999,", 1);
+        assert!(NsSolver::from_json_str(&j).is_err(), "{j}");
+    }
+
+    #[test]
+    fn sample_into_bit_identical_to_sample() {
+        use crate::solver::workspace::SampleWorkspace;
+        let f = LinearField { dim: 3, k: -0.8, c: 0.4 };
+        let x0 = vec![1.0f32, -0.5, 2.0, 0.25, -1.5, 0.75];
+        let s = euler_ns(8);
+        let a = s.sample(&f, &x0).unwrap();
+        let mut ws = SampleWorkspace::new();
+        let b = s.sample_into(&f, &x0, &mut ws).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

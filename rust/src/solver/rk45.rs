@@ -5,6 +5,7 @@
 use anyhow::{bail, Result};
 
 use super::field::Field;
+use super::workspace::SampleWorkspace;
 
 const C: [f64; 7] = [0.0, 1.0 / 5.0, 3.0 / 10.0, 4.0 / 5.0, 8.0 / 9.0, 1.0, 1.0];
 const B5: [f64; 7] = [
@@ -73,64 +74,110 @@ impl Default for Rk45Opts {
 
 /// Integrate dx/dt = u(t, x) from 0 to 1 adaptively (batched, shared step
 /// size with an RMS error norm over the whole batch — matches ode.py).
-/// Returns (x1, nfe).
+/// Returns (x1, nfe). Allocating convenience wrapper over [`rk45_into`].
 pub fn rk45(field: &dyn Field, x0: &[f32], opts: &Rk45Opts) -> Result<(Vec<f32>, usize)> {
+    let mut ws = SampleWorkspace::new();
+    let (out, nfe) = rk45_into(field, x0, opts, &mut ws)?;
+    Ok((out.to_vec(), nfe))
+}
+
+/// Buffer-reusing RK45: every f64 stage / candidate buffer and the f32
+/// field-interface staging buffers live in `ws`, so the adaptive loop is
+/// allocation-free in steady state. Arithmetic order matches the seed
+/// allocating implementation exactly.
+pub fn rk45_into<'w>(
+    field: &dyn Field,
+    x0: &[f32],
+    opts: &Rk45Opts,
+    ws: &'w mut SampleWorkspace,
+) -> Result<(&'w [f32], usize)> {
     let n = x0.len();
-    let mut x: Vec<f64> = x0.iter().map(|&v| v as f64).collect();
-    let mut t = 0.0f64;
-    let mut h = opts.h0;
+    ws.ensure_rk45(n);
     let mut nfe = 0usize;
+    {
+        let x = &mut ws.x64;
+        let k = &mut ws.k64; // flat [7, n] stage arena
+        let [xi, x5, x4] = &mut ws.s64;
+        let [xf, uf, ..] = &mut ws.stage;
+        for (d, &v) in x.iter_mut().zip(x0.iter()) {
+            *d = v as f64;
+        }
+        let mut t = 0.0f64;
+        let mut h = opts.h0;
 
-    let eval = |t: f64, x: &[f64]| -> Result<Vec<f64>> {
-        let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
-        Ok(field.eval(t.min(1.0 - 1e-9), &xf)?.iter().map(|&v| v as f64).collect())
-    };
+        // f64 state -> the field's f32 interface -> f64, via reused staging
+        fn eval_into(
+            field: &dyn Field,
+            t: f64,
+            xin: &[f64],
+            out: &mut [f64],
+            xf: &mut [f32],
+            uf: &mut [f32],
+        ) -> Result<()> {
+            for (s, &v) in xf.iter_mut().zip(xin.iter()) {
+                *s = v as f32;
+            }
+            field.eval_into(t.min(1.0 - 1e-9), xf, uf)?;
+            for (o, &v) in out.iter_mut().zip(uf.iter()) {
+                *o = v as f64;
+            }
+            Ok(())
+        }
 
-    let mut k1 = eval(t, &x)?;
-    nfe += 1;
-    while t < 1.0 - 1e-12 {
-        h = h.min(1.0 - t);
-        let mut ks: Vec<Vec<f64>> = vec![k1.clone()];
-        for i in 1..7 {
-            let mut xi = x.clone();
-            for (j, &a) in a_row(i).iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        {
+            let (k1, _) = k.split_at_mut(n);
+            eval_into(field, t, x, k1, xf, uf)?;
+        }
+        nfe += 1;
+        while t < 1.0 - 1e-12 {
+            h = h.min(1.0 - t);
+            for i in 1..7 {
+                xi.copy_from_slice(x);
+                for (j, &a) in a_row(i).iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let kj = &k[j * n..(j + 1) * n];
+                    for (d, &kv) in xi.iter_mut().zip(kj.iter()) {
+                        *d += h * a * kv;
+                    }
                 }
-                for (d, &kv) in xi.iter_mut().zip(ks[j].iter()) {
-                    *d += h * a * kv;
+                let (_, ki) = k.split_at_mut(i * n);
+                eval_into(field, t + C[i] * h, xi, &mut ki[..n], xf, uf)?;
+                nfe += 1;
+            }
+            x5.copy_from_slice(x);
+            x4.copy_from_slice(x);
+            for j in 0..7 {
+                let kj = &k[j * n..(j + 1) * n];
+                for i in 0..n {
+                    x5[i] += h * B5[j] * kj[i];
+                    x4[i] += h * B4[j] * kj[i];
                 }
             }
-            ks.push(eval(t + C[i] * h, &xi)?);
-            nfe += 1;
-        }
-        let mut x5 = x.clone();
-        let mut x4 = x.clone();
-        for j in 0..7 {
+            let mut err2 = 0.0;
             for i in 0..n {
-                x5[i] += h * B5[j] * ks[j][i];
-                x4[i] += h * B4[j] * ks[j][i];
+                let scale = opts.atol + opts.rtol * x[i].abs().max(x5[i].abs());
+                let e = (x5[i] - x4[i]) / scale;
+                err2 += e * e;
             }
-        }
-        let mut err2 = 0.0;
-        for i in 0..n {
-            let scale = opts.atol + opts.rtol * x[i].abs().max(x5[i].abs());
-            let e = (x5[i] - x4[i]) / scale;
-            err2 += e * e;
-        }
-        let err = (err2 / n as f64).sqrt();
-        if err <= 1.0 {
-            t += h;
-            x = x5;
-            k1 = ks.pop().unwrap(); // FSAL
-        }
-        let factor = 0.9 * err.max(1e-10).powf(-0.2);
-        h *= factor.clamp(0.2, 5.0);
-        if nfe > opts.max_nfe {
-            bail!("rk45 exceeded max_nfe = {} (err = {:.3e})", opts.max_nfe, err);
+            let err = (err2 / n as f64).sqrt();
+            if err <= 1.0 {
+                t += h;
+                x.copy_from_slice(x5);
+                k.copy_within(6 * n..7 * n, 0); // FSAL: k1 <- k7
+            }
+            let factor = 0.9 * err.max(1e-10).powf(-0.2);
+            h *= factor.clamp(0.2, 5.0);
+            if nfe > opts.max_nfe {
+                bail!("rk45 exceeded max_nfe = {} (err = {:.3e})", opts.max_nfe, err);
+            }
         }
     }
-    Ok((x.iter().map(|&v| v as f32).collect(), nfe))
+    for (o, &v) in ws.x.iter_mut().zip(ws.x64.iter()) {
+        *o = v as f32;
+    }
+    Ok((&ws.x, nfe))
 }
 
 #[cfg(test)]

@@ -1,0 +1,121 @@
+//! Preallocated scratch for the allocation-free sampling hot path.
+//!
+//! A serving worker owns one `SampleWorkspace` for its whole lifetime and
+//! passes it to every `Solver::sample_into` / `rk45_into` call. All
+//! per-step buffers — the NS history arena, RK stage registers, the RK45
+//! f64 state — live here, so in steady state (after the first batch of a
+//! given size warms the buffers) a sampling run performs **zero heap
+//! allocation per step**. See the module docs in `solver/mod.rs` for the
+//! design rationale.
+//!
+//! Buffers only ever grow; `ensure_*` is called once per sampling run
+//! (not per step) and is a no-op once capacity covers the batch size.
+
+/// Reusable buffers for one lockstep sampling run over a row-major
+/// `[batch, dim]` state of `len = batch * dim` f32 elements.
+#[derive(Default)]
+pub struct SampleWorkspace {
+    /// Current state x_i; holds the final sample after `sample_into`.
+    pub(crate) x: Vec<f32>,
+    /// General-purpose stage registers (RK k-values, midpoint/Heun
+    /// intermediate states, AB2 velocity history, RK45 f32 staging).
+    pub(crate) stage: [Vec<f32>; 5],
+    /// Flat `[nfe, len]` velocity-history arena for the NS combine
+    /// (replaces the seed `Vec<Vec<f32>>` per-step allocations).
+    pub(crate) hist: Vec<f32>,
+    /// RK45 f64 state.
+    pub(crate) x64: Vec<f64>,
+    /// RK45 flat `[7, len]` f64 stage arena.
+    pub(crate) k64: Vec<f64>,
+    /// RK45 f64 scratch: stage input, 5th- and 4th-order candidates.
+    pub(crate) s64: [Vec<f64>; 3],
+}
+
+/// Size `buf` to exactly `len` elements. A true no-op when the length is
+/// unchanged (the steady-state case): every workspace buffer is fully
+/// written before it is read (states via `copy_from_slice`, history rows
+/// and stage registers via `eval_into`), so surviving contents from a
+/// previous run are never observable and no zeroing pass is needed.
+pub(crate) fn reset_f32(buf: &mut Vec<f32>, len: usize) {
+    buf.resize(len, 0.0);
+}
+
+pub(crate) fn reset_f64(buf: &mut Vec<f64>, len: usize) {
+    buf.resize(len, 0.0);
+}
+
+impl SampleWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The result of the last `sample_into` run (row-major `[batch, dim]`).
+    pub fn out(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Adopt an externally produced result (the `sample` fallback path of
+    /// solvers that have no dedicated buffer-reusing implementation).
+    pub(crate) fn store_result(&mut self, out: Vec<f32>) -> &[f32] {
+        self.x = out;
+        &self.x
+    }
+
+    /// Size the state + first `stages` stage registers for `len` elements.
+    pub(crate) fn ensure_stages(&mut self, len: usize, stages: usize) {
+        reset_f32(&mut self.x, len);
+        for s in self.stage.iter_mut().take(stages) {
+            reset_f32(s, len);
+        }
+    }
+
+    /// Size the state + the `[nfe, len]` history arena (NS sampling).
+    pub(crate) fn ensure_hist(&mut self, nfe: usize, len: usize) {
+        reset_f32(&mut self.x, len);
+        reset_f32(&mut self.hist, nfe * len);
+    }
+
+    /// Size the f64 RK45 buffers plus two f32 staging registers used for
+    /// the field's f32 interface.
+    pub(crate) fn ensure_rk45(&mut self, len: usize) {
+        reset_f32(&mut self.x, len);
+        for s in self.stage.iter_mut().take(2) {
+            reset_f32(s, len);
+        }
+        reset_f64(&mut self.x64, len);
+        reset_f64(&mut self.k64, 7 * len);
+        for s in self.s64.iter_mut() {
+            reset_f64(s, len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buffers_track_requested_sizes() {
+        let mut ws = SampleWorkspace::new();
+        ws.ensure_hist(4, 8);
+        assert_eq!(ws.x.len(), 8);
+        assert_eq!(ws.hist.len(), 32);
+        let cap = ws.hist.capacity();
+        // shrinking the logical size keeps capacity (no realloc on the
+        // next grow back) — contents are don't-care, every buffer is
+        // fully written before being read
+        ws.ensure_hist(2, 4);
+        assert_eq!(ws.hist.len(), 8);
+        assert_eq!(ws.hist.capacity(), cap);
+        ws.ensure_hist(4, 8);
+        assert_eq!(ws.hist.len(), 32);
+        assert_eq!(ws.hist.capacity(), cap);
+    }
+
+    #[test]
+    fn store_result_is_out() {
+        let mut ws = SampleWorkspace::new();
+        let r = ws.store_result(vec![1.0, 2.0]).to_vec();
+        assert_eq!(r, ws.out());
+    }
+}

@@ -1,0 +1,160 @@
+//! Engine-level accounting and routing tests over a *stub* artifact
+//! store: the default-build device backend executes affine stub fields
+//! (see `runtime/backend.rs`), so these run everywhere — no compiled
+//! HLO artifacts, no `make artifacts`.
+//!
+//! Regression targets:
+//!   * per-request `forwards` once hardcoded the CFG factor (`* 2`)
+//!     instead of using the field's `forwards_per_eval`, contradicting
+//!     the aggregate metric — the sum test pins the two together;
+//!   * `SolverSpec::Auto` fallback never picked RK4.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use bns_serve::bench_util::{write_stub_artifacts, StubModel};
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+
+const DIM: usize = 6;
+
+fn stub_store(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
+    let dir = std::env::temp_dir().join(format!("bns-acct-{}-{tag}", std::process::id()));
+    write_stub_artifacts(
+        &dir,
+        &[
+            StubModel {
+                name: "stub_cfg",
+                dim: DIM,
+                num_classes: 4,
+                forwards_per_eval: 2,
+                k: -0.9,
+                c: 0.1,
+                buckets: &[4, 16],
+            },
+            StubModel {
+                name: "stub_uncond",
+                dim: DIM,
+                num_classes: 4,
+                forwards_per_eval: 1,
+                k: -0.5,
+                c: 0.0,
+                buckets: &[4, 16],
+            },
+        ],
+    )
+    .unwrap();
+    (Arc::new(ArtifactStore::load(&dir).unwrap()), dir)
+}
+
+fn start_engine(store: Arc<ArtifactStore>) -> Engine {
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    Engine::start(store, rt, EngineConfig::default())
+}
+
+/// Per-request `forwards` must sum exactly to the aggregate
+/// `Metrics.forwards`, across models with different CFG factors, mixed
+/// row counts, and mixed solvers.
+#[test]
+fn per_request_forwards_sum_to_aggregate() {
+    let (store, dir) = stub_store("sum");
+    let engine = start_engine(store);
+
+    let mut total = 0usize;
+    let cases: Vec<(&str, usize, SolverSpec)> = vec![
+        ("stub_cfg", 3, SolverSpec::Baseline { name: "euler".into(), nfe: 4 }),
+        ("stub_cfg", 1, SolverSpec::Baseline { name: "euler".into(), nfe: 4 }),
+        ("stub_uncond", 2, SolverSpec::Baseline { name: "midpoint".into(), nfe: 6 }),
+        ("stub_uncond", 5, SolverSpec::Auto { nfe: 8 }),
+        ("stub_cfg", 4, SolverSpec::Auto { nfe: 8 }),
+        ("stub_uncond", 1, SolverSpec::GroundTruth),
+    ];
+    for (i, (model, rows, spec)) in cases.into_iter().enumerate() {
+        let out = engine
+            .sample_blocking(model, vec![0; rows], 0.0, spec, i as u64)
+            .unwrap();
+        assert!(out.samples.iter().all(|v| v.is_finite()), "non-finite samples");
+        total += out.forwards;
+    }
+    let aggregate = engine.metrics.forwards.load(Ordering::SeqCst) as usize;
+    assert_eq!(
+        total, aggregate,
+        "per-request forwards must sum to the aggregate metric"
+    );
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The CFG factor comes from the field, not a hardcoded `* 2`.
+#[test]
+fn forwards_use_field_cfg_factor() {
+    let (store, dir) = stub_store("factor");
+    let engine = start_engine(store);
+
+    let spec = SolverSpec::Baseline { name: "euler".into(), nfe: 4 };
+    let cfg = engine.sample_blocking("stub_cfg", vec![0; 3], 0.0, spec.clone(), 1).unwrap();
+    assert_eq!(cfg.nfe, 4);
+    assert_eq!(cfg.forwards, 4 * 3 * 2, "CFG model: nfe × rows × 2");
+
+    let un = engine.sample_blocking("stub_uncond", vec![0; 3], 0.0, spec, 2).unwrap();
+    assert_eq!(un.nfe, 4);
+    assert_eq!(un.forwards, 4 * 3, "non-CFG model: nfe × rows × 1 (seed bug doubled this)");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Auto routing with no distilled artifacts falls back to the strongest
+/// generic baseline that divides the NFE: rk4, then midpoint, then euler.
+#[test]
+fn auto_routes_strongest_dividing_baseline() {
+    let (store, dir) = stub_store("auto");
+    let engine = start_engine(store);
+
+    let out = engine
+        .sample_blocking("stub_cfg", vec![0; 2], 0.0, SolverSpec::Auto { nfe: 8 }, 3)
+        .unwrap();
+    assert_eq!(out.nfe, 8);
+    assert_eq!(out.solver_used, "auto-rk4_8");
+
+    let out = engine
+        .sample_blocking("stub_cfg", vec![0; 2], 0.0, SolverSpec::Auto { nfe: 6 }, 4)
+        .unwrap();
+    assert_eq!(out.solver_used, "auto-midpoint6");
+
+    let out = engine
+        .sample_blocking("stub_cfg", vec![0; 2], 0.0, SolverSpec::Auto { nfe: 5 }, 5)
+        .unwrap();
+    assert_eq!(out.solver_used, "auto-euler5");
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Same seed → same samples through the whole engine stack (workspace
+/// reuse across batches must not perturb results), and a request equals
+/// itself when re-submitted while other traffic runs.
+#[test]
+fn engine_deterministic_across_workspace_reuse() {
+    let (store, dir) = stub_store("det");
+    let engine = start_engine(store);
+    let spec = SolverSpec::Baseline { name: "rk4".into(), nfe: 8 };
+
+    let a = engine
+        .sample_blocking("stub_cfg", vec![1; 3], 0.0, spec.clone(), 42)
+        .unwrap();
+    // interleave unrelated traffic with different batch sizes
+    for i in 0..4 {
+        engine
+            .sample_blocking("stub_uncond", vec![0; 1 + i], 0.0, spec.clone(), i as u64)
+            .unwrap();
+    }
+    let b = engine
+        .sample_blocking("stub_cfg", vec![1; 3], 0.0, spec, 42)
+        .unwrap();
+    assert_eq!(a.samples, b.samples, "same seed must reproduce bit-identically");
+    assert_eq!(a.samples.len(), 3 * DIM);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,138 @@
+//! The allocation-free `sample_into` hot path must be **bit-identical**
+//! to the allocating reference `sample` across the whole solver zoo —
+//! the serving engine serves `sample_into` outputs, so any drift here is
+//! a silent correctness regression.
+
+use bns_serve::solver::field::{GaussianTargetField, NonlinearField};
+use bns_serve::solver::generic::uniform_times;
+use bns_serve::solver::rk45::{rk45, rk45_into, Rk45Opts};
+use bns_serve::solver::scheduler::Scheduler;
+use bns_serve::solver::{baseline, taxonomy, NsSolver, SampleWorkspace, Solver};
+use bns_serve::util::rng::Pcg32;
+
+fn assert_bits_eq(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{tag}: element {i} differs ({x} vs {y})"
+        );
+    }
+}
+
+fn x0_batch(n: usize, seed: u64) -> Vec<f32> {
+    Pcg32::seeded(seed).normal_vec(n)
+}
+
+/// Every named baseline (direct steppers with dedicated `sample_into`
+/// implementations AND the exponential integrators going through the
+/// fallback) agrees bit-for-bit, with ONE workspace reused across all of
+/// them — stale state from a previous solver must never leak.
+#[test]
+fn baselines_bit_identical_with_shared_workspace() {
+    let field = NonlinearField { dim: 4 };
+    let x0 = x0_batch(3 * 4, 11);
+    let mut ws = SampleWorkspace::new();
+    for name in ["euler", "midpoint", "heun", "rk4", "ab2", "ddim", "dpmpp1", "dpmpp2m"] {
+        let s = baseline(name, 8, Scheduler::Vp).unwrap();
+        let reference = s.sample(&field, &x0).unwrap();
+        let fast = s.sample_into(&field, &x0, &mut ws).unwrap();
+        assert_bits_eq(&reference, fast, name);
+    }
+}
+
+/// NS solvers: taxonomy-derived forms of every family plus a dense
+/// random "distilled-like" solver (the shape a BNS artifact has).
+#[test]
+fn ns_zoo_bit_identical() {
+    let field = GaussianTargetField { dim: 3, sched: Scheduler::FmOt, mu: 0.3, s1: 0.4 };
+    let x0 = x0_batch(5 * 3, 23);
+    let mut ws = SampleWorkspace::new();
+
+    let mut cases: Vec<(String, NsSolver)> = vec![
+        ("euler_ns".into(), taxonomy::euler_ns(&uniform_times(8))),
+        ("midpoint_ns".into(), taxonomy::midpoint_ns(8)),
+        ("rk4_ns".into(), taxonomy::rk4_ns(8)),
+        ("ab2_ns".into(), taxonomy::ab2_ns(&uniform_times(8))),
+        (
+            "dpmpp_ns".into(),
+            taxonomy::dpmpp_ns(Scheduler::Vp, &uniform_times(8), 2),
+        ),
+    ];
+    // dense random valid NS solver (every b entry nonzero, like BNS)
+    let mut rng = Pcg32::seeded(7);
+    let n = 8;
+    cases.push((
+        "dense_random".into(),
+        NsSolver {
+            times: uniform_times(n),
+            a: (0..n).map(|_| 1.0 + 0.1 * rng.normal()).collect(),
+            b: (0..n)
+                .map(|i| (0..=i).map(|_| 0.2 * rng.normal()).collect())
+                .collect(),
+        },
+    ));
+
+    for (tag, s) in cases {
+        s.validate().unwrap_or_else(|e| panic!("{tag}: {e}"));
+        let reference = NsSolver::sample(&s, &field, &x0).unwrap();
+        let fast = s.sample_into(&field, &x0, &mut ws).unwrap().to_vec();
+        assert_bits_eq(&reference, &fast, &tag);
+        // and through the trait object (the engine's path)
+        let boxed: Box<dyn Solver> = Box::new(s);
+        let via_trait = boxed.sample_into(&field, &x0, &mut ws).unwrap();
+        assert_bits_eq(&reference, via_trait, &tag);
+    }
+}
+
+/// The adaptive ground-truth solver: buffer-reusing form is bit-identical
+/// and performs the identical number of field evaluations.
+#[test]
+fn rk45_into_bit_identical() {
+    let field = GaussianTargetField { dim: 2, sched: Scheduler::FmOt, mu: 0.1, s1: 0.5 };
+    let x0 = x0_batch(4 * 2, 31);
+    let (reference, nfe_ref) = rk45(&field, &x0, &Rk45Opts::default()).unwrap();
+    let mut ws = SampleWorkspace::new();
+    let (fast, nfe_fast) = rk45_into(&field, &x0, &Rk45Opts::default(), &mut ws).unwrap();
+    assert_eq!(nfe_ref, nfe_fast);
+    assert_bits_eq(&reference, fast, "rk45");
+}
+
+/// Workspace reuse across *shrinking* batch sizes: a big run must not
+/// contaminate a following small run.
+#[test]
+fn workspace_reuse_across_batch_sizes() {
+    let field = NonlinearField { dim: 4 };
+    let s = taxonomy::midpoint_ns(16);
+    let mut ws = SampleWorkspace::new();
+    let big = x0_batch(64 * 4, 5);
+    let small = x0_batch(2 * 4, 6);
+    let _ = s.sample_into(&field, &big, &mut ws).unwrap();
+    let reused = s.sample_into(&field, &small, &mut ws).unwrap().to_vec();
+    let fresh = s
+        .sample_into(&field, &small, &mut SampleWorkspace::new())
+        .unwrap()
+        .to_vec();
+    let reference = NsSolver::sample(&s, &field, &small).unwrap();
+    assert_bits_eq(&reused, &fresh, "reused-vs-fresh");
+    assert_bits_eq(&reused, &reference, "reused-vs-sample");
+}
+
+/// NFE accounting is unchanged by the buffer-reusing path.
+#[test]
+fn sample_into_preserves_nfe_counting() {
+    use bns_serve::solver::field::CountingField;
+    let field = NonlinearField { dim: 2 };
+    let x0 = x0_batch(2 * 2, 17);
+    let mut ws = SampleWorkspace::new();
+    for name in ["euler", "midpoint", "rk4", "ab2"] {
+        let s = baseline(name, 8, Scheduler::FmOt).unwrap();
+        let c1 = CountingField::new(&field);
+        s.sample(&c1, &x0).unwrap();
+        let c2 = CountingField::new(&field);
+        s.sample_into(&c2, &x0, &mut ws).unwrap();
+        assert_eq!(c1.count(), c2.count(), "{name}");
+        assert_eq!(c2.count(), s.nfe(), "{name}");
+    }
+}
