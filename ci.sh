@@ -40,6 +40,19 @@ cargo build --release || fail=1
 step "tier-1: cargo test -q"
 cargo test -q || fail=1
 
+# Perf trajectory: the serve_load bench runs on the stub backend (no
+# artifacts needed) and writes machine-readable BENCH_serve.json at the
+# repo root — evals/s, batch-row means, latency percentiles, and the
+# multi-lane worker-scaling ratio, tracked PR-over-PR. Advisory unless
+# STRICT=1 (shares the lint gate).
+step "perf trajectory: cargo bench --bench serve_load -> BENCH_serve.json"
+if BENCH_SERVE_OUT="../BENCH_serve.json" cargo bench --bench serve_load; then
+  echo "wrote $(cd .. && pwd)/BENCH_serve.json"
+else
+  echo "serve_load bench failed (perf trajectory not updated)"
+  lint_fail=1
+fi
+
 echo
 if [ "$fail" -ne 0 ]; then
   echo "CI FAILED (tier-1)"
@@ -47,10 +60,10 @@ if [ "$fail" -ne 0 ]; then
 fi
 if [ "$lint_fail" -ne 0 ]; then
   if [ "${STRICT:-0}" = "1" ]; then
-    echo "CI FAILED (lints, STRICT=1)"
+    echo "CI FAILED (advisory steps, STRICT=1)"
     exit 1
   fi
-  echo "CI PASSED (tier-1 green; lints reported issues — rerun with STRICT=1 to gate)"
+  echo "CI PASSED (tier-1 green; advisory steps (lints/bench) reported issues — rerun with STRICT=1 to gate)"
   exit 0
 fi
 echo "CI PASSED"

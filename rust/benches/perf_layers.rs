@@ -11,14 +11,54 @@
 //! TPU proxy — the point of this bench is to quantify the CPU-serving
 //! decision documented in EXPERIMENTS.md §Perf (which artifact the
 //! request path should load on this substrate).
+//!
+//! This binary runs under a **counting global allocator** so the
+//! zero-allocation claims are measured, not asserted from reading the
+//! code: the pooled device-lane section reports allocations per
+//! `eval_into` through the full solver → field → lane → backend path.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
-use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::bench_util::{stub_store, write_results, Bench, StubModel, Table};
+use bns_serve::runtime::{LoadedModel, Runtime};
 use bns_serve::solver::field::Field;
 use bns_serve::solver::{NsSolver, SampleWorkspace, Solver};
 use bns_serve::util::json::Json;
 use bns_serve::util::rng::Pcg32;
+
+/// Counts every heap allocation in the process (all threads — the device
+/// lane included, which is the point).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn time_eval(field: &dyn Field, rows: usize, dim: usize, iters: usize) -> anyhow::Result<f64> {
     let mut rng = Pcg32::seeded(5);
@@ -97,6 +137,93 @@ fn main() -> anyhow::Result<()> {
         Err(e) => {
             eprintln!("[perf] artifacts unavailable ({e:#}); skipping L1/L2 sections");
         }
+    }
+
+    // ---- L3: pooled device-lane eval — allocations per model eval ------
+    //
+    // The acceptance target of the device-lane rework: at steady state a
+    // bucket-aligned `eval_into` performs ZERO heap allocation end-to-end
+    // (solver buffer -> ModelField -> lane RPC -> stub backend and back).
+    // The allocating `eval` path is timed alongside for contrast. Runs on
+    // the stub backend, so it works without compiled artifacts.
+    {
+        let (stubs, dir) = stub_store(
+            "perf-alloc",
+            &[StubModel {
+                name: "perf_stub",
+                dim: 192,
+                num_classes: 8,
+                forwards_per_eval: 2,
+                k: -0.7,
+                c: 0.1,
+                label_scale: 0.02,
+                cost: 1,
+                buckets: &[64],
+            }],
+        )?;
+        let rt = Runtime::with_lanes(1)?;
+        let info = stubs.model("perf_stub")?.clone();
+        let model = Arc::new(LoadedModel::load(&rt, &info)?);
+        let field = model.bind((0..64).map(|i| (i % 8) as i32).collect(), 0.0);
+        let mut rng = Pcg32::seeded(11);
+        let x = rng.normal_vec(64 * info.dim);
+        let mut out = vec![0f32; x.len()];
+        // warm the slot pool, lane channel, and thread parkers
+        for _ in 0..16 {
+            field.eval_into(0.5, &x, &mut out)?;
+        }
+        let iters = 2000usize;
+        let a0 = alloc_count();
+        let t0 = Instant::now();
+        for i in 0..iters {
+            field.eval_into(0.1 + 0.8 * (i as f64 / iters as f64), &x, &mut out)?;
+        }
+        let dt_into = t0.elapsed().as_secs_f64() / iters as f64;
+        let allocs_into = (alloc_count() - a0) as f64 / iters as f64;
+
+        for _ in 0..4 {
+            field.eval(0.5, &x)?;
+        }
+        let a1 = alloc_count();
+        let t1 = Instant::now();
+        for i in 0..iters {
+            field.eval(0.1 + 0.8 * (i as f64 / iters as f64), &x)?;
+        }
+        let dt_alloc = t1.elapsed().as_secs_f64() / iters as f64;
+        let allocs_alloc = (alloc_count() - a1) as f64 / iters as f64;
+
+        let mut pool = Table::new(&["path", "allocs/eval", "eval(us)"]);
+        pool.row(vec![
+            "eval (allocating)".into(),
+            format!("{allocs_alloc:.3}"),
+            format!("{:.1}", dt_alloc * 1e6),
+        ]);
+        pool.row(vec![
+            "eval_into (pooled lane)".into(),
+            format!("{allocs_into:.3}"),
+            format!("{:.1}", dt_into * 1e6),
+        ]);
+        println!("\n=== L3: pooled device lane — heap allocations per model eval (batch=64) ===");
+        pool.print();
+        if allocs_into > 0.0 {
+            eprintln!(
+                "[perf] WARNING: pooled eval_into allocated {allocs_into:.3}/eval — \
+                 expected 0 at steady state"
+            );
+        }
+        results.push(Json::obj(vec![
+            ("artifact", Json::Str("model-eval-pooled".into())),
+            ("batch", Json::Num(64.0)),
+            ("allocs_per_eval", Json::Num(allocs_into)),
+            ("eval_us", Json::Num(dt_into * 1e6)),
+        ]));
+        results.push(Json::obj(vec![
+            ("artifact", Json::Str("model-eval-allocating".into())),
+            ("batch", Json::Num(64.0)),
+            ("allocs_per_eval", Json::Num(allocs_alloc)),
+            ("eval_us", Json::Num(dt_alloc * 1e6)),
+        ]));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     // ---- L3: seed allocating `sample` vs workspace `sample_into` -------

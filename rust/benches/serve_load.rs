@@ -1,108 +1,213 @@
 //! L3 coordinator load bench (EXPERIMENTS.md §Perf): throughput and
-//! latency of the serving engine under concurrent request load, with the
-//! step-aligned batcher ON vs OFF (max_wait = 0 disables coalescing).
+//! latency of the serving engine under concurrent request load, swept
+//! over device-lane / worker configurations.
 //!
-//! Reports: requests/s, samples/s, model evals, mean rows per model-eval
-//! batch (the continuous-batching win), queue/exec/e2e latency
-//! percentiles.
+//! Runs entirely on the *stub* device backend (a `cost`-weighted affine
+//! field emulating a heavy model), so it works offline and in CI — no
+//! compiled HLO artifacts needed. For every configuration it first runs a
+//! fixed sequential probe set and asserts the samples are bit-identical
+//! to the single-lane reference (lane pooling must never change results),
+//! then measures a concurrent load phase.
+//!
+//! Reports per config: evals/s, samples/s, mean rows per model-eval batch
+//! (the continuous-batching win), queue/exec latency percentiles, and
+//! per-lane busy time; plus the **worker-scaling ratio** (best multi-lane
+//! evals/s over the single-lane configuration). Machine-readable output
+//! goes to `BENCH_serve.json` (path override: `BENCH_SERVE_OUT`) so the
+//! perf trajectory is tracked PR-over-PR by ci.sh.
 
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
-use std::time::{Duration, Instant};
+use std::time::Instant;
 
-use bns_serve::bench_util::{write_results, Bench, Table};
+use bns_serve::bench_util::{stub_store, write_results, StubModel, Table};
 use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
-use bns_serve::coordinator::batcher::BatcherConfig;
+use bns_serve::runtime::Runtime;
 use bns_serve::util::json::Json;
 
-const MODEL: &str = "img_fm_ot";
+const MODEL: &str = "serve_stub";
+const DIM: usize = 1024;
 const CLIENTS: usize = 8;
-const REQS_PER_CLIENT: usize = 12;
-const SAMPLES_PER_REQ: usize = 4;
+const REQS_PER_CLIENT: usize = 16;
+const ROWS_PER_REQ: usize = 8;
+const PROBES: usize = 6;
 
-fn run_load(b: &Bench, max_wait_ms: u64, label: &str) -> anyhow::Result<Json> {
-    let engine = Arc::new(Engine::start(
-        b.store.clone(),
-        b.rt.clone(),
-        EngineConfig {
-            batcher: BatcherConfig {
-                max_rows: 64,
-                max_wait: Duration::from_millis(max_wait_ms),
-                max_queued_rows: 4096,
-            },
-            workers: 2,
-        },
-    ));
-    // warmup: compile executables before timing
-    engine.sample_blocking(
-        MODEL,
-        vec![0; SAMPLES_PER_REQ],
-        0.0,
-        SolverSpec::Auto { nfe: 8 },
-        1,
-    )?;
+fn spec() -> SolverSpec {
+    SolverSpec::Auto { nfe: 8 }
+}
 
+/// Sequential fixed-seed probe; used for the cross-config bit-identity
+/// check.
+fn run_probes(engine: &Engine) -> anyhow::Result<Vec<Vec<u32>>> {
+    let mut outs = Vec::new();
+    for p in 0..PROBES {
+        let labels: Vec<i32> = (0..4).map(|i| ((p + i) % 8) as i32).collect();
+        let out = engine.sample_blocking(MODEL, labels, 0.0, spec(), 500 + p as u64)?;
+        outs.push(out.samples.iter().map(|v| v.to_bits()).collect());
+    }
+    Ok(outs)
+}
+
+struct ConfigResult {
+    json: Json,
+    evals_per_s: f64,
+    probes: Vec<Vec<u32>>,
+}
+
+fn run_config(
+    store: &Arc<bns_serve::runtime::ArtifactStore>,
+    label: &str,
+    lanes: usize,
+    workers: usize,
+) -> anyhow::Result<ConfigResult> {
+    let rt = Arc::new(Runtime::with_lanes(lanes)?);
+    let engine = Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() });
+
+    // warmup compiles every bucket; probes double as the correctness set
+    engine.sample_blocking(MODEL, vec![0; ROWS_PER_REQ], 0.0, spec(), 1)?;
+    let probes = run_probes(&engine)?;
+
+    let evals_before = engine.metrics.evals.load(Ordering::SeqCst);
     let t0 = Instant::now();
-    let mut handles = Vec::new();
-    for c in 0..CLIENTS {
-        let engine = engine.clone();
-        handles.push(std::thread::spawn(move || -> anyhow::Result<()> {
-            for r in 0..REQS_PER_CLIENT {
-                let labels: Vec<i32> = (0..SAMPLES_PER_REQ).map(|i| ((c + i + r) % 10) as i32).collect();
-                engine.sample_blocking(
-                    MODEL,
-                    labels,
-                    0.0,
-                    SolverSpec::Auto { nfe: 8 },
-                    (c * 1000 + r) as u64,
-                )?;
-            }
-            Ok(())
-        }));
-    }
-    for h in handles {
-        h.join().unwrap()?;
-    }
+    std::thread::scope(|s| {
+        for c in 0..CLIENTS {
+            let engine = &engine;
+            s.spawn(move || {
+                for r in 0..REQS_PER_CLIENT {
+                    let labels: Vec<i32> =
+                        (0..ROWS_PER_REQ).map(|i| ((c + i + r) % 8) as i32).collect();
+                    engine
+                        .sample_blocking(MODEL, labels, 0.0, spec(), (c * 1000 + r) as u64)
+                        .expect("load request failed");
+                }
+            });
+        }
+    });
     let wall = t0.elapsed().as_secs_f64();
+    let evals = (engine.metrics.evals.load(Ordering::SeqCst) - evals_before) as f64;
 
     let m = engine.metrics.snapshot_json();
     let total_reqs = (CLIENTS * REQS_PER_CLIENT) as f64;
-    let out = Json::obj(vec![
+    let evals_per_s = evals / wall;
+    let lanes_json = m.get("lanes").clone();
+    let json = Json::obj(vec![
         ("config", Json::Str(label.to_string())),
+        ("lanes", Json::Num(lanes as f64)),
+        ("workers", Json::Num(workers as f64)),
         ("wall_s", Json::Num(wall)),
+        ("evals", Json::Num(evals)),
+        ("evals_per_s", Json::Num(evals_per_s)),
         ("req_per_s", Json::Num(total_reqs / wall)),
-        ("samples_per_s", Json::Num(total_reqs * SAMPLES_PER_REQ as f64 / wall)),
+        (
+            "samples_per_s",
+            Json::Num(total_reqs * ROWS_PER_REQ as f64 / wall),
+        ),
         ("mean_batch_rows", m.get("mean_batch_rows").clone()),
-        ("evals", m.get("evals").clone()),
-        ("e2e_p50_us", m.get("e2e").get("p50_us").clone()),
-        ("e2e_p95_us", m.get("e2e").get("p95_us").clone()),
+        ("queue_p50_us", m.get("queue").get("p50_us").clone()),
         ("queue_p95_us", m.get("queue").get("p95_us").clone()),
+        ("exec_p50_us", m.get("exec").get("p50_us").clone()),
+        ("exec_p95_us", m.get("exec").get("p95_us").clone()),
+        ("lane_stats", lanes_json),
     ]);
-    Arc::try_unwrap(engine).ok().map(|e| e.shutdown());
-    Ok(out)
+    engine.shutdown();
+    Ok(ConfigResult { json, evals_per_s, probes })
 }
 
 fn main() -> anyhow::Result<()> {
-    let b = Bench::init()?;
+    let (store, dir) = stub_store(
+        "serve-load",
+        &[StubModel {
+            name: MODEL,
+            dim: DIM,
+            num_classes: 8,
+            forwards_per_eval: 2,
+            k: -0.8,
+            c: 0.05,
+            label_scale: 0.01,
+            cost: 6,
+            buckets: &[16, 64],
+        }],
+    )?;
+
+    // (label, lanes, workers); index 1 is the single-lane baseline the
+    // scaling ratio is measured against
+    let configs: &[(&str, usize, usize)] = &[
+        ("lanes=1 workers=1", 1, 1),
+        ("lanes=1 workers=2", 1, 2),
+        ("lanes=2 workers=2", 2, 2),
+        ("lanes=4 workers=4", 4, 4),
+    ];
+
     let mut table = Table::new(&[
-        "config", "req/s", "samples/s", "rows/eval-batch", "evals", "p50 e2e(ms)", "p95 e2e(ms)",
+        "config", "evals/s", "samples/s", "rows/eval-batch", "exec p50(ms)", "queue p95(ms)",
     ]);
     let mut results = Vec::new();
-    for (wait, label) in [(0u64, "batcher-off(wait=0)"), (4, "batcher-on(wait=4ms)"), (12, "batcher-on(wait=12ms)")] {
-        let r = run_load(&b, wait, label)?;
+    let mut baseline_probes: Option<Vec<Vec<u32>>> = None;
+    let mut single_lane_eps = 0.0f64;
+    let mut best_multi_eps = 0.0f64;
+    for (i, &(label, lanes, workers)) in configs.iter().enumerate() {
+        let r = run_config(&store, label, lanes, workers)?;
+        if baseline_probes.is_none() {
+            baseline_probes = Some(r.probes.clone());
+        } else {
+            let want = baseline_probes.as_ref().unwrap();
+            assert_eq!(
+                &r.probes, want,
+                "{label}: samples drifted from the single-lane reference"
+            );
+        }
+        if i == 1 {
+            single_lane_eps = r.evals_per_s;
+        }
+        if lanes > 1 && workers > 1 {
+            best_multi_eps = best_multi_eps.max(r.evals_per_s);
+        }
         table.row(vec![
             label.into(),
-            format!("{:.1}", r.get("req_per_s").as_f64().unwrap_or(0.0)),
-            format!("{:.1}", r.get("samples_per_s").as_f64().unwrap_or(0.0)),
-            format!("{:.1}", r.get("mean_batch_rows").as_f64().unwrap_or(0.0)),
-            format!("{:.0}", r.get("evals").as_f64().unwrap_or(0.0)),
-            format!("{:.1}", r.get("e2e_p50_us").as_f64().unwrap_or(0.0) / 1000.0),
-            format!("{:.1}", r.get("e2e_p95_us").as_f64().unwrap_or(0.0) / 1000.0),
+            format!("{:.1}", r.evals_per_s),
+            format!("{:.1}", r.json.get("samples_per_s").as_f64().unwrap_or(0.0)),
+            format!("{:.1}", r.json.get("mean_batch_rows").as_f64().unwrap_or(0.0)),
+            format!("{:.2}", r.json.get("exec_p50_us").as_f64().unwrap_or(0.0) / 1000.0),
+            format!("{:.2}", r.json.get("queue_p95_us").as_f64().unwrap_or(0.0) / 1000.0),
         ]);
-        results.push(r);
+        results.push(r.json);
     }
-    println!("=== L3 serving load (8 clients x 12 reqs x 4 samples, auto/BNS nfe=8) ===");
+    let scaling = if single_lane_eps > 0.0 { best_multi_eps / single_lane_eps } else { 0.0 };
+
+    println!(
+        "=== L3 serving load ({CLIENTS} clients x {REQS_PER_CLIENT} reqs x {ROWS_PER_REQ} rows, \
+         auto nfe=8, stub dim={DIM} cost=6) ==="
+    );
     table.print();
+    println!("\nworker-scaling ratio (best multi-lane / single-lane): {scaling:.2}x");
+    println!("bit-identical across configs: yes (asserted)");
+
+    let bench = Json::obj(vec![
+        ("bench", Json::Str("serve_load".into())),
+        (
+            "workload",
+            Json::obj(vec![
+                ("clients", Json::Num(CLIENTS as f64)),
+                ("reqs_per_client", Json::Num(REQS_PER_CLIENT as f64)),
+                ("rows_per_req", Json::Num(ROWS_PER_REQ as f64)),
+                ("model_dim", Json::Num(DIM as f64)),
+                ("stub_cost", Json::Num(6.0)),
+                ("solver", Json::Str("auto nfe=8".into())),
+            ]),
+        ),
+        ("configs", Json::Arr(results.clone())),
+        ("single_lane_evals_per_s", Json::Num(single_lane_eps)),
+        ("best_multi_lane_evals_per_s", Json::Num(best_multi_eps)),
+        ("worker_scaling_ratio", Json::Num(scaling)),
+        ("bit_identical", Json::Bool(true)),
+    ]);
+    let out_path =
+        std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    std::fs::write(&out_path, bench.to_string())?;
+    println!("wrote {out_path}");
     let path = write_results("serve_load", &Json::Arr(results))?;
-    println!("\nwrote {}", path.display());
+    println!("wrote {}", path.display());
+
+    std::fs::remove_dir_all(&dir).ok();
     Ok(())
 }

@@ -144,9 +144,15 @@ pub struct StubModel<'a> {
     pub num_classes: usize,
     /// Forward passes per eval per row (2 = CFG-composed, 1 = uncond).
     pub forwards_per_eval: usize,
-    /// Field: u = k·x + c (per element).
+    /// Field: u = k·x + c + label_scale·label (per element).
     pub k: f64,
     pub c: f64,
+    /// Per-label bias — nonzero makes outputs label-sensitive, so
+    /// cross-lane/pooling corruption tests can detect swapped rows.
+    pub label_scale: f64,
+    /// Stub compute passes per exec (identical output, `cost`× the wall
+    /// time) — lets load benches emulate heavier models.
+    pub cost: usize,
     pub buckets: &'a [usize],
 }
 
@@ -164,7 +170,12 @@ pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
             let rel = format!("models/{}_b{b}.stub.json", m.name);
             let spec = Json::obj(vec![(
                 "bns_stub_field",
-                Json::obj(vec![("k", Json::Num(m.k)), ("c", Json::Num(m.c))]),
+                Json::obj(vec![
+                    ("k", Json::Num(m.k)),
+                    ("c", Json::Num(m.c)),
+                    ("label_scale", Json::Num(m.label_scale)),
+                    ("cost", Json::Num(m.cost.max(1) as f64)),
+                ]),
             )]);
             std::fs::write(dir.join(&rel), spec.to_string())?;
             buckets.push(Json::obj(vec![
@@ -207,6 +218,15 @@ pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
     ]);
     std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
     Ok(())
+}
+
+/// Write stub artifacts to a per-process temp dir and load them as an
+/// `ArtifactStore` — the one-liner tests and benches share. The caller
+/// owns cleanup of the returned directory.
+pub fn stub_store(tag: &str, models: &[StubModel]) -> Result<(Arc<ArtifactStore>, PathBuf)> {
+    let dir = std::env::temp_dir().join(format!("bns-stubstore-{}-{tag}", std::process::id()));
+    write_stub_artifacts(&dir, models)?;
+    Ok((Arc::new(ArtifactStore::load(&dir)?), dir))
 }
 
 // ---------------------------------------------------------------------------

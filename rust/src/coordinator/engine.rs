@@ -8,13 +8,21 @@
 //!     and flush policy, and hands `Batch`es to workers over a shared
 //!     work queue (a `VecDeque` — FIFO pops are O(1), not the O(n)
 //!     front-removal of a `Vec`);
-//!   * each worker owns a `SampleWorkspace` for its whole lifetime,
-//!     resolves the route through the shared `RouterCache`, builds the
-//!     concatenated `ModelField`, runs the solver lockstep over the
-//!     whole group via the allocation-free `sample_into` path, and
-//!     splits the result rows back to per-request replies.
+//!   * each worker owns a `SampleWorkspace` for its whole lifetime plus a
+//!     per-worker cache of `LoadedModel`s (compiled executables pinned to
+//!     a device lane — see DESIGN.md §5), resolves the route through the
+//!     shared `RouterCache`, binds the batch's labels/guidance to the
+//!     cached model, runs the solver lockstep over the whole group via
+//!     the allocation-free `sample_into` path, and splits the result rows
+//!     back to per-request replies. Because each worker's models pin to
+//!     their own lanes (round-robin), workers execute model evals truly
+//!     concurrently on a multi-lane runtime.
+//!
+//! Shutdown: `shutdown()` drains and joins all threads; dropping an
+//! `Engine` without calling it performs the same teardown (the seed
+//! leaked the dispatch/worker threads on drop).
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -25,7 +33,7 @@ use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};
 use super::router::{RoutedSolver, RouterCache};
-use crate::runtime::{ArtifactStore, ModelField, Runtime};
+use crate::runtime::{ArtifactStore, LoadedModel, Runtime};
 use crate::solver::field::{CountingField, Field};
 use crate::solver::rk45::{rk45_into, Rk45Opts};
 use crate::solver::SampleWorkspace;
@@ -48,7 +56,8 @@ struct WorkQueue {
     shutdown: AtomicBool,
 }
 
-/// Handle to a running engine; `shutdown()` drains and joins all threads.
+/// Handle to a running engine; `shutdown()` (or `Drop`) drains and joins
+/// all threads.
 pub struct Engine {
     tx: Option<mpsc::Sender<SampleRequest>>,
     pub metrics: Arc<Metrics>,
@@ -61,6 +70,15 @@ pub struct Engine {
 impl Engine {
     pub fn start(store: Arc<ArtifactStore>, rt: Arc<Runtime>, cfg: EngineConfig) -> Engine {
         let metrics = Arc::new(Metrics::new());
+        {
+            // lane utilization on the /metrics surface; a Weak keeps a
+            // retained `metrics` clone from pinning the Runtime (and its
+            // lane threads) alive past the last real handle
+            let rt = Arc::downgrade(&rt);
+            metrics.set_lane_provider(Box::new(move || {
+                rt.upgrade().map(|rt| rt.lane_stats()).unwrap_or_default()
+            }));
+        }
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
             q: Mutex::new(VecDeque::new()),
@@ -108,6 +126,7 @@ impl Engine {
                     }
                     for batch in batcher.poll(Instant::now()) {
                         metrics_d.record_batch(batch.rows);
+                        metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
                         let mut q = wq_d.q.lock().unwrap();
                         q.push_back(batch);
                         wq_d.cv.notify_one();
@@ -116,6 +135,7 @@ impl Engine {
                 // drain on shutdown
                 for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
                     metrics_d.record_batch(batch.rows);
+                    metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
                     let mut q = wq_d.q.lock().unwrap();
                     q.push_back(batch);
                     wq_d.cv.notify_one();
@@ -138,8 +158,13 @@ impl Engine {
                     .name(format!("bns-worker-{wi}"))
                     .spawn(move || {
                         // one workspace per worker, reused across batches:
-                        // the sampling hot path allocates nothing per step
+                        // the sampling hot path allocates nothing per step.
+                        // LoadedModels are cached per worker: executables
+                        // compile once and pin to a device lane, so a
+                        // batch binds labels/guidance instead of
+                        // re-resolving buckets every time.
                         let mut ws = SampleWorkspace::new();
+                        let mut models: HashMap<String, Arc<LoadedModel>> = HashMap::new();
                         loop {
                             let batch = {
                                 let mut q = wq_w.q.lock().unwrap();
@@ -153,7 +178,11 @@ impl Engine {
                                     q = wq_w.cv.wait(q).unwrap();
                                 }
                             };
-                            run_batch(&store_w, &rt_w, &metrics_w, &router_w, batch, &mut ws);
+                            metrics_w.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                            run_batch(
+                                &store_w, &rt_w, &metrics_w, &router_w, &mut models, batch,
+                                &mut ws,
+                            );
                         }
                     })
                     .expect("spawn worker"),
@@ -203,7 +232,10 @@ impl Engine {
         resp.result.map_err(|e| anyhow::anyhow!(e))
     }
 
-    pub fn shutdown(mut self) {
+    /// Drain pending work and join every thread. Idempotent — `Drop`
+    /// calls it too, so an engine that goes out of scope without an
+    /// explicit `shutdown()` still tears down cleanly.
+    fn shutdown_inner(&mut self) {
         drop(self.tx.take()); // closes the channel -> dispatch drains + exits
         if let Some(d) = self.dispatch.take() {
             let _ = d.join();
@@ -213,6 +245,16 @@ impl Engine {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
     }
 }
 
@@ -231,11 +273,22 @@ fn solve_batch<'w>(
     store: &ArtifactStore,
     rt: &Runtime,
     router: &RouterCache,
+    models: &mut HashMap<String, Arc<LoadedModel>>,
     batch: &Batch,
     ws: &'w mut SampleWorkspace,
 ) -> Result<BatchOutcome<'w>> {
-    let info = store.model(&batch.key.model)?;
-    let dim = info.dim;
+    // per-worker model cache: compile + pin once, bind per batch
+    let loaded = match models.get(&batch.key.model) {
+        Some(m) => m.clone(),
+        None => {
+            let info = store.model(&batch.key.model)?;
+            let m = Arc::new(LoadedModel::load(rt, info)?);
+            models.insert(batch.key.model.clone(), m.clone());
+            m
+        }
+    };
+    let dim = loaded.info.dim;
+    let sched = loaded.info.scheduler;
     let guidance = f32::from_bits(batch.key.guidance_bits);
 
     // concatenate labels + noise rows
@@ -252,11 +305,11 @@ fn solve_batch<'w>(
         }
     }
 
-    let field = ModelField::new(rt, info, labels, guidance)?;
+    let field = loaded.bind(labels, guidance);
     let forwards_per_eval = field.forwards_per_eval();
     let counting = CountingField::new(&field);
     let spec = &batch.requests[0].solver;
-    let routed = router.resolve(store, &batch.key.model, guidance, info.scheduler, spec)?;
+    let routed = router.resolve(store, &batch.key, sched, spec)?;
     let out: &[f32] = match &routed.solver {
         RoutedSolver::Fixed(s) => s.sample_into(&counting, &x0, ws)?,
         RoutedSolver::GroundTruth => rk45_into(&counting, &x0, &Rk45Opts::default(), ws)?.0,
@@ -265,18 +318,20 @@ fn solve_batch<'w>(
     Ok(BatchOutcome { out, nfe, forwards_per_eval, solver_name: routed.name.clone(), dim })
 }
 
-/// Execute one batched group: build the concatenated field, run the
-/// solver lockstep through the worker's workspace, split rows back.
+/// Execute one batched group: bind the cached model, run the solver
+/// lockstep through the worker's workspace, split rows back.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     store: &ArtifactStore,
     rt: &Runtime,
     metrics: &Metrics,
     router: &RouterCache,
+    models: &mut HashMap<String, Arc<LoadedModel>>,
     batch: Batch,
     ws: &mut SampleWorkspace,
 ) {
     let started = Instant::now();
-    match solve_batch(store, rt, router, &batch, ws) {
+    match solve_batch(store, rt, router, models, &batch, ws) {
         Ok(o) => {
             let exec_us = started.elapsed().as_micros() as u64;
             // aggregate and per-request accounting share one formula:

@@ -7,6 +7,11 @@ use std::sync::Mutex;
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 
+/// Provider of per-lane `(execs, busy_us)` counters, registered by the
+/// engine so lane utilization shows up on the `/metrics` surface without
+/// the metrics layer depending on the runtime.
+pub type LaneStatsProvider = Box<dyn Fn() -> Vec<(u64, u64)> + Send + Sync>;
+
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
@@ -16,6 +21,9 @@ pub struct Metrics {
     pub forwards: AtomicU64,
     pub batches: AtomicU64,
     pub batched_rows: AtomicU64,
+    /// Gauge: batches sitting in the engine work queue right now.
+    pub queue_depth: AtomicU64,
+    lane_provider: Mutex<Option<LaneStatsProvider>>,
     inner: Mutex<Inner>,
 }
 
@@ -51,6 +59,12 @@ impl Metrics {
         self.forwards.fetch_add(forwards as u64, Ordering::Relaxed);
     }
 
+    /// Register the source of per-lane device counters (the engine wires
+    /// this to `Runtime::lane_stats`).
+    pub fn set_lane_provider(&self, f: LaneStatsProvider) {
+        *self.lane_provider.lock().unwrap() = Some(f);
+    }
+
     pub fn record_latency(&self, queue_us: u64, exec_us: u64, solver: &str) {
         let mut g = self.inner.lock().unwrap();
         g.queue_wait.record_us(queue_us as f64);
@@ -70,6 +84,13 @@ impl Metrics {
     }
 
     pub fn snapshot_json(&self) -> Json {
+        let lanes: Vec<(u64, u64)> = self
+            .lane_provider
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|f| f())
+            .unwrap_or_default();
         let g = self.inner.lock().unwrap();
         let q = |h: &LatencyHistogram| {
             Json::obj(vec![
@@ -88,6 +109,23 @@ impl Metrics {
             ("forwards", Json::Num(self.forwards.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
             ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
+            ("work_queue_depth", Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            (
+                "lanes",
+                Json::Arr(
+                    lanes
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &(execs, busy_us))| {
+                            Json::obj(vec![
+                                ("lane", Json::Num(i as f64)),
+                                ("execs", Json::Num(execs as f64)),
+                                ("busy_us", Json::Num(busy_us as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("queue", q(&g.queue_wait)),
             ("exec", q(&g.exec)),
             ("e2e", q(&g.e2e)),
@@ -128,5 +166,21 @@ mod tests {
         let s = m.snapshot_json().to_string();
         let parsed = crate::util::json::Json::parse(&s).unwrap();
         assert_eq!(parsed.get("per_solver").get("bns8").as_f64(), Some(1.0));
+        // without a provider the lane array is present but empty
+        assert_eq!(parsed.get("lanes").as_arr().map(|a| a.len()), Some(0));
+        assert_eq!(parsed.get("work_queue_depth").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn lane_provider_and_queue_depth_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.set_lane_provider(Box::new(|| vec![(10, 1500), (4, 600)]));
+        m.queue_depth.fetch_add(3, Ordering::Relaxed);
+        let snap = m.snapshot_json();
+        let lanes = snap.get("lanes").as_arr().unwrap();
+        assert_eq!(lanes.len(), 2);
+        assert_eq!(lanes[0].get("execs").as_f64(), Some(10.0));
+        assert_eq!(lanes[1].get("busy_us").as_f64(), Some(600.0));
+        assert_eq!(snap.get("work_queue_depth").as_f64(), Some(3.0));
     }
 }

@@ -17,6 +17,7 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use crate::coordinator::batcher::GroupKey;
 use crate::coordinator::request::SolverSpec;
 use crate::runtime::ArtifactStore;
 use crate::solver::scheduler::Scheduler;
@@ -123,6 +124,10 @@ pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usi
 /// The artifact store is immutable for the engine's lifetime, so cached
 /// entries never go stale.
 ///
+/// Keyed directly by the batcher's `GroupKey`, so the per-batch lookup
+/// borrows the batch's key instead of assembling an owned
+/// `(String, u32, String)` triple — a cache hit allocates nothing.
+///
 /// The key includes the request's guidance scale and solver spec — both
 /// client-controlled — so the cache is bounded: once `MAX_ENTRIES`
 /// distinct keys exist, further misses resolve uncached (steady
@@ -130,7 +135,7 @@ pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usi
 /// to per-batch resolution instead of unbounded growth).
 #[derive(Default)]
 pub struct RouterCache {
-    map: Mutex<HashMap<(String, u32, String), Arc<Routed>>>,
+    map: Mutex<HashMap<GroupKey, Arc<Routed>>>,
 }
 
 /// Upper bound on cached routes (each distilled entry holds an O(nfe²)
@@ -142,22 +147,25 @@ impl RouterCache {
         Self::default()
     }
 
+    /// Resolve the routed solver for a batch group. `spec` must be the
+    /// solver spec the key was derived from (`GroupKey::of`); it is only
+    /// consulted on a cache miss.
     pub fn resolve(
         &self,
         store: &ArtifactStore,
-        model: &str,
-        guidance: f32,
+        key: &GroupKey,
         sched: Scheduler,
         spec: &SolverSpec,
     ) -> Result<Arc<Routed>> {
-        let key = (model.to_string(), guidance.to_bits(), spec.group_key());
-        if let Some(r) = self.map.lock().unwrap().get(&key) {
+        debug_assert_eq!(spec.group_key(), key.solver_key, "spec/key mismatch");
+        if let Some(r) = self.map.lock().unwrap().get(key) {
             return Ok(r.clone());
         }
-        let routed = Arc::new(route(store, model, guidance as f64, sched, spec)?);
+        let guidance = f32::from_bits(key.guidance_bits) as f64;
+        let routed = Arc::new(route(store, &key.model, guidance, sched, spec)?);
         let mut map = self.map.lock().unwrap();
         if map.len() < MAX_ENTRIES {
-            map.entry(key).or_insert_with(|| routed.clone());
+            map.entry(key.clone()).or_insert_with(|| routed.clone());
         }
         Ok(routed)
     }
@@ -247,12 +255,17 @@ mod tests {
         let store = empty_store();
         let cache = RouterCache::new();
         let spec = SolverSpec::Auto { nfe: 8 };
-        let a = cache.resolve(&store, "m", 0.0, Scheduler::FmOt, &spec).unwrap();
-        let b = cache.resolve(&store, "m", 0.0, Scheduler::FmOt, &spec).unwrap();
+        let key = |w: f32| GroupKey {
+            model: "m".into(),
+            solver_key: spec.group_key(),
+            guidance_bits: w.to_bits(),
+        };
+        let a = cache.resolve(&store, &key(0.0), Scheduler::FmOt, &spec).unwrap();
+        let b = cache.resolve(&store, &key(0.0), Scheduler::FmOt, &spec).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second resolve must hit the cache");
         assert_eq!(cache.len(), 1);
         // a different guidance is a different cache entry
-        let c = cache.resolve(&store, "m", 1.5, Scheduler::FmOt, &spec).unwrap();
+        let c = cache.resolve(&store, &key(1.5), Scheduler::FmOt, &spec).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(cache.len(), 2);
     }

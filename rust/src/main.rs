@@ -16,6 +16,8 @@ bns-serve — Bespoke Non-Stationary solver serving (ICML 2024 repro)
 
 USAGE:
   bns-serve serve   [--addr 127.0.0.1:7878] [--artifacts DIR] [--workers N]
+                    [--lanes N]  (device lanes; default = workers, forced
+                     to 1 when built with --features pjrt)
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -75,8 +77,15 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
     match cmd {
         "serve" => {
             let store = load_store(flags)?;
-            let rt = Arc::new(Runtime::cpu()?);
             let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let lanes: usize =
+                flags.get("lanes").map(|s| s.parse()).transpose()?.unwrap_or(workers);
+            let rt = Arc::new(Runtime::with_lanes(lanes)?);
+            eprintln!(
+                "[bns-serve] {} device lane(s) on '{}', {workers} worker(s)",
+                rt.num_lanes(),
+                rt.platform()
+            );
             let engine = Arc::new(Engine::start(
                 store.clone(),
                 rt,

@@ -29,6 +29,8 @@ pub struct ModelInfo {
     pub num_classes: usize,
     pub null_class: usize,
     pub data: String, // "images" | "audio"
+    /// Lowered batch buckets, sorted by batch ascending at parse time so
+    /// `LoadedModel` never re-sorts (or clones) the list per load.
     pub buckets: Vec<BucketInfo>,
     /// Model forward passes per velocity evaluation per row: 2 for the
     /// CFG-composed artifacts aot.py lowers (cond + uncond branches),
@@ -131,7 +133,7 @@ impl ArtifactStore {
             let param =
                 Parametrization::from_name(m.get("parametrization").as_str().unwrap_or(""))
                     .with_context(|| format!("model {name}: bad parametrization"))?;
-            let buckets = m
+            let mut buckets = m
                 .get("artifacts")
                 .as_arr()
                 .context("model artifacts")?
@@ -143,6 +145,7 @@ impl ArtifactStore {
                     })
                 })
                 .collect::<Result<Vec<_>>>()?;
+            buckets.sort_by_key(|b| b.batch);
             models.insert(
                 name.clone(),
                 ModelInfo {

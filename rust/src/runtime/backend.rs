@@ -1,4 +1,5 @@
-//! Device backends behind the device thread in `client.rs`.
+//! Device backends behind the device lane threads in `client.rs`
+//! (each lane owns one `Backend` instance; see DESIGN.md §5).
 //!
 //! The real executor is PJRT via the `xla` crate — which, like
 //! serde/tokio/clap, is **not resolvable in the offline build image**
@@ -13,7 +14,9 @@
 //! artifacts — a JSON file `{"bns_stub_field": {"k": .., "c": ..}}`
 //! describing the affine velocity field
 //!     u[r, d] = k * x[r, d] + c + label_scale * labels[r] + t_scale * t
-//! evaluated in f32. That keeps the full serving stack (engine, batcher,
+//! evaluated in f32. An optional `cost` key repeats the compute pass
+//! (identical output, proportionally more wall time) so load benches can
+//! emulate heavier models. That keeps the full serving stack (engine, batcher,
 //! router, accounting) executable and testable — `cargo test` drives
 //! real batches end-to-end through the device thread — without any
 //! compiled model. `bench_util::write_stub_artifacts` emits a complete
@@ -23,16 +26,35 @@ use std::path::Path;
 
 use anyhow::{anyhow, Context, Result};
 
-/// A compiled-executable store owned by the device thread. Implementors
-/// are **not** required to be `Send`/`Sync`: a single device thread owns
-/// the backend for its whole lifetime (the PJRT types are `!Send`).
+/// A compiled-executable store owned by a device lane thread. Implementors
+/// are **not** required to be `Send`/`Sync`: one lane thread owns each
+/// backend instance for its whole lifetime (the PJRT types are `!Send`).
 pub trait Backend {
     fn platform(&self) -> String;
 
     /// Load + compile an artifact file; returns a backend-local id.
     fn load(&mut self, path: &Path) -> Result<u64>;
 
-    /// Execute executable `id` on exactly `batch` rows.
+    /// Execute executable `id` on exactly `batch` rows, writing the
+    /// velocities into `out` (`len == batch * dim`). Every element of
+    /// `out` must be overwritten on success — callers pass pooled
+    /// buffers whose prior contents are arbitrary. This is the hot-path
+    /// entry: the stub backend computes straight into `out`, PJRT copies
+    /// its result literal into `out` once.
+    #[allow(clippy::too_many_arguments)]
+    fn exec_into(
+        &mut self,
+        id: u64,
+        batch: usize,
+        dim: usize,
+        x: &[f32],
+        t: f32,
+        w: f32,
+        labels: &[i32],
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Allocating convenience wrapper around `exec_into`.
     #[allow(clippy::too_many_arguments)]
     fn exec(
         &mut self,
@@ -43,7 +65,11 @@ pub trait Backend {
         t: f32,
         w: f32,
         labels: &[i32],
-    ) -> Result<Vec<f32>>;
+    ) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; batch * dim];
+        self.exec_into(id, batch, dim, x, t, w, labels, &mut out)?;
+        Ok(out)
+    }
 }
 
 /// Construct the CPU backend selected at compile time.
@@ -58,13 +84,16 @@ pub fn new_cpu() -> Result<Box<dyn Backend>> {
 // Stub backend (default build)
 // ---------------------------------------------------------------------------
 
-/// Parameters of one stub affine field artifact.
+/// Parameters of one stub affine field artifact. `cost` repeats the
+/// (idempotent) compute pass so benches can emulate heavier models:
+/// output is identical for any cost, wall time scales with it.
 #[derive(Debug, Clone, Copy)]
 struct StubExe {
     k: f32,
     c: f32,
     label_scale: f32,
     t_scale: f32,
+    cost: u32,
 }
 
 /// Offline-build device backend: loads `bns_stub_field` JSON artifacts.
@@ -115,11 +144,12 @@ impl Backend for StubBackend {
             c: g("c", 0.0),
             label_scale: g("label_scale", 0.0),
             t_scale: g("t_scale", 0.0),
+            cost: spec.get("cost").as_f64().unwrap_or(1.0).max(1.0) as u32,
         });
         Ok(self.exes.len() as u64)
     }
 
-    fn exec(
+    fn exec_into(
         &mut self,
         id: u64,
         batch: usize,
@@ -128,23 +158,31 @@ impl Backend for StubBackend {
         t: f32,
         _w: f32,
         labels: &[i32],
-    ) -> Result<Vec<f32>> {
+        out: &mut [f32],
+    ) -> Result<()> {
         let e = *self
             .exes
             .get(id as usize - 1)
             .with_context(|| format!("unknown stub executable id {id}"))?;
         anyhow::ensure!(x.len() == batch * dim, "stub exec: x has wrong shape");
         anyhow::ensure!(labels.len() == batch, "stub exec: labels have wrong shape");
-        let mut out = vec![0f32; batch * dim];
-        for r in 0..batch {
-            let bias = e.c + e.label_scale * labels[r] as f32 + e.t_scale * t;
-            let row = &x[r * dim..(r + 1) * dim];
-            let orow = &mut out[r * dim..(r + 1) * dim];
-            for (o, &xv) in orow.iter_mut().zip(row.iter()) {
-                *o = e.k * xv + bias;
+        anyhow::ensure!(out.len() == batch * dim, "stub exec: out has wrong shape");
+        for pass in 0..e.cost {
+            for r in 0..batch {
+                let bias = e.c + e.label_scale * labels[r] as f32 + e.t_scale * t;
+                let row = &x[r * dim..(r + 1) * dim];
+                let orow = &mut out[r * dim..(r + 1) * dim];
+                for (o, &xv) in orow.iter_mut().zip(row.iter()) {
+                    *o = e.k * xv + bias;
+                }
+            }
+            if pass + 1 < e.cost {
+                // redundant passes write the same values; black_box keeps
+                // the optimizer from collapsing the cost knob
+                std::hint::black_box(&mut *out);
             }
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -199,7 +237,7 @@ mod pjrt {
             Ok(id)
         }
 
-        fn exec(
+        fn exec_into(
             &mut self,
             id: u64,
             batch: usize,
@@ -208,7 +246,8 @@ mod pjrt {
             t: f32,
             w: f32,
             labels: &[i32],
-        ) -> Result<Vec<f32>> {
+            out: &mut [f32],
+        ) -> Result<()> {
             let exe = self.exes.get(&id).context("unknown executable id")?;
             let xl = xla::Literal::vec1(x)
                 .reshape(&[batch as i64, dim as i64])
@@ -221,8 +260,16 @@ mod pjrt {
                 .map_err(|e| anyhow!("execute: {e}"))?[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow!("to_literal: {e}"))?;
-            let out = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
-            out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+            let u = result.to_tuple1().map_err(|e| anyhow!("tuple: {e}"))?;
+            let v = u.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))?;
+            anyhow::ensure!(
+                v.len() == out.len(),
+                "executable returned {} values for an output of {}",
+                v.len(),
+                out.len()
+            );
+            out.copy_from_slice(&v);
+            Ok(())
         }
     }
 }
@@ -242,6 +289,30 @@ mod tests {
         let id = b.load(&path).unwrap();
         let out = b.exec(id, 2, 2, &[1.0, 2.0, -1.0, 0.0], 0.3, 0.0, &[0, 1]).unwrap();
         assert_eq!(out, vec![-0.25, -0.75, 0.75, 0.25]);
+
+        // exec_into fully overwrites a dirty pooled buffer
+        let mut pooled = vec![f32::NAN; 4];
+        b.exec_into(id, 2, 2, &[1.0, 2.0, -1.0, 0.0], 0.3, 0.0, &[0, 1], &mut pooled)
+            .unwrap();
+        assert_eq!(pooled, out);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stub_cost_knob_does_not_change_output() {
+        let dir = std::env::temp_dir().join(format!("bns-stub-cost-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("m1.stub.json");
+        let p8 = dir.join("m8.stub.json");
+        std::fs::write(&p1, r#"{"bns_stub_field": {"k": -0.5, "c": 0.25, "cost": 1}}"#).unwrap();
+        std::fs::write(&p8, r#"{"bns_stub_field": {"k": -0.5, "c": 0.25, "cost": 8}}"#).unwrap();
+        let mut b = StubBackend::new();
+        let id1 = b.load(&p1).unwrap();
+        let id8 = b.load(&p8).unwrap();
+        let x = [0.4f32, -1.2, 2.0, 0.0];
+        let a = b.exec(id1, 2, 2, &x, 0.7, 0.0, &[1, 2]).unwrap();
+        let c = b.exec(id8, 2, 2, &x, 0.7, 0.0, &[1, 2]).unwrap();
+        assert_eq!(a, c, "cost must scale wall time only, never the values");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -1,149 +1,338 @@
-//! Runtime device thread: load artifacts, compile once per (model, batch)
-//! bucket, execute from the request path.
+//! Runtime device lanes: load artifacts, compile once per (lane, model,
+//! batch) bucket, execute from the request path.
 //!
 //! The concrete executor lives behind `backend::Backend` — real PJRT via
 //! the `xla` crate when built with `--features pjrt`, the offline stub
 //! backend otherwise (see `backend.rs` for the rationale and the stub
 //! artifact format).
 //!
-//! Threading: the PJRT client/executable types are `!Send` (Rc-based
-//! wrappers over the C API), so a dedicated **device thread** owns every
-//! backend object — the same discipline as a GPU stream owner. Callers
-//! talk to it over channels; `ExeHandle::run` is a synchronous RPC. On
-//! this CPU target execution is serialized anyway, so the design costs
-//! ~1us of channel latency against ~400us executions.
+//! # Device lanes
 //!
-//! TODO(perf): `ExeHandle::run` copies `x`/`labels` into the message and
-//! the backend returns a fresh output vector — per-eval allocations that
-//! survive the solver-side workspace rewrite. Pooling request/response
-//! buffers across the channel would finish the job; it needs a buffer
-//! return path, so it is deferred.
+//! The runtime owns a configurable set of **lanes**. Each lane is one
+//! dedicated thread that owns its own `Backend` instance and its own
+//! compile cache — the same discipline as a GPU stream owner, multiplied.
+//! Executables (and therefore model fields) are *pinned* to the lane that
+//! compiled them, so two engine workers whose models landed on different
+//! lanes execute model evals truly concurrently. Under `--features pjrt`
+//! the lane count is forced to 1: the PJRT client/executable types are
+//! `!Send` (Rc-based wrappers over the C API) and the vendored bindings
+//! assume a single process-wide client.
+//!
+//! # Pooled (zero-allocation) execution
+//!
+//! `ExeHandle::run_into` is the hot-path RPC. Its request/response
+//! buffers live in a per-handle **slot pool**: the x/labels/out vectors
+//! travel to the lane inside the message and come back with the reply, so
+//! at steady state an eval performs no heap allocation anywhere on the
+//! path — the lane channel is a bounded `sync_channel` (preallocated ring,
+//! allocation-free sends), each slot's reply channel is a rendezvous
+//! `sync_channel(1)`, and the backend writes velocities into the pooled
+//! `out` buffer in place (`Backend::exec_into`). To be precise: the claim
+//! is zero *allocation*, not zero copy — each eval still pays two bounded
+//! memcpys (caller x into the slot, pooled out back into the caller's
+//! buffer); eliminating those would require the solver workspace itself
+//! to cross the thread boundary. The lane thread wraps backend calls in
+//! `catch_unwind` so a panicking backend yields an error reply instead of
+//! a wedged caller. `benches/perf_layers.rs` measures allocations per
+//! eval with a counting global allocator to pin the claim.
 
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::{mpsc, Mutex};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
 use super::backend;
+
+/// Bounded depth of each lane's request channel. Generous: the channel is
+/// a backpressure valve, not a queueing layer — workers block in
+/// `run_into` anyway.
+const LANE_QUEUE_CAP: usize = 256;
 
 enum Msg {
     Load {
         path: PathBuf,
         reply: mpsc::Sender<Result<u64>>,
     },
-    Exec {
-        id: u64,
-        batch: usize,
-        dim: usize,
-        x: Vec<f32>,
-        t: f32,
-        w: f32,
-        labels: Vec<i32>,
-        reply: mpsc::Sender<Result<Vec<f32>>>,
-    },
+    Exec(ExecMsg),
     Platform {
         reply: mpsc::Sender<String>,
     },
 }
 
-/// Handle to the device thread. Cheap to share via Arc.
-pub struct Runtime {
-    tx: Mutex<mpsc::Sender<Msg>>,
-    /// path -> executable id (compile cache)
+/// One pooled execution request. The buffers are owned by the message
+/// while it is in flight and return to the caller inside `ExecReply`.
+struct ExecMsg {
+    id: u64,
+    batch: usize,
+    dim: usize,
+    t: f32,
+    w: f32,
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    out: Vec<f32>,
+    reply: mpsc::SyncSender<ExecReply>,
+}
+
+struct ExecReply {
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    out: Vec<f32>,
+    result: Result<()>,
+}
+
+/// Per-lane execution counters, shared with the lane thread. `busy_us`
+/// is time spent inside the backend — utilization is `busy_us / wall`.
+#[derive(Default)]
+pub struct LaneStats {
+    pub execs: AtomicU64,
+    pub busy_us: AtomicU64,
+}
+
+struct Lane {
+    // Senders are !Sync; the mutex makes the handle shareable.
+    tx: Mutex<mpsc::SyncSender<Msg>>,
+    /// path -> executable id (per-lane compile cache: ids are local to
+    /// the lane's backend instance).
     cache: Mutex<HashMap<PathBuf, u64>>,
-    thread: Mutex<Option<std::thread::JoinHandle<()>>>,
+    stats: Arc<LaneStats>,
+}
+
+/// Handle to the device lanes. Cheap to share via Arc.
+pub struct Runtime {
+    lanes: Vec<Lane>,
+    /// Round-robin cursor for pinning new loads to a lane.
+    next: AtomicUsize,
 }
 
 impl Runtime {
+    /// Single-lane runtime — the PJRT-safe default.
     pub fn cpu() -> Result<Runtime> {
-        let (tx, rx) = mpsc::channel::<Msg>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let thread = std::thread::Builder::new()
-            .name("pjrt-device".into())
-            .spawn(move || device_thread(rx, ready_tx))
-            .context("spawning device thread")?;
-        ready_rx
-            .recv()
-            .context("device thread died during init")??;
-        Ok(Runtime {
-            tx: Mutex::new(tx),
-            cache: Mutex::new(HashMap::new()),
-            thread: Mutex::new(Some(thread)),
-        })
+        Self::with_lanes(1)
     }
 
-    fn send(&self, msg: Msg) {
-        // Sender is !Sync; the mutex makes the handle shareable.
-        let _ = self.tx.lock().unwrap().send(msg);
+    /// Runtime with `n` device lanes. Forced to 1 under `--features
+    /// pjrt` (the PJRT types are `!Send` and the bindings assume one
+    /// process-wide client).
+    pub fn with_lanes(n: usize) -> Result<Runtime> {
+        let n = if cfg!(feature = "pjrt") { 1 } else { n.max(1) };
+        let mut lanes = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = mpsc::sync_channel::<Msg>(LANE_QUEUE_CAP);
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let stats = Arc::new(LaneStats::default());
+            let stats_t = stats.clone();
+            std::thread::Builder::new()
+                .name(format!("bns-lane-{i}"))
+                .spawn(move || lane_thread(rx, ready_tx, stats_t))
+                .context("spawning device lane thread")?;
+            ready_rx
+                .recv()
+                .context("device lane died during init")??;
+            lanes.push(Lane {
+                tx: Mutex::new(tx),
+                cache: Mutex::new(HashMap::new()),
+                stats,
+            });
+        }
+        Ok(Runtime { lanes, next: AtomicUsize::new(0) })
+    }
+
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Next lane in round-robin order — the pinning policy for new loads.
+    pub fn next_lane(&self) -> usize {
+        self.next.fetch_add(1, Ordering::Relaxed) % self.lanes.len()
+    }
+
+    /// Per-lane `(execs, busy_us)` counters, indexed by lane.
+    pub fn lane_stats(&self) -> Vec<(u64, u64)> {
+        self.lanes
+            .iter()
+            .map(|l| {
+                (
+                    l.stats.execs.load(Ordering::Relaxed),
+                    l.stats.busy_us.load(Ordering::Relaxed),
+                )
+            })
+            .collect()
     }
 
     pub fn platform(&self) -> String {
         let (reply, rx) = mpsc::channel();
-        self.send(Msg::Platform { reply });
+        let _ = self.lanes[0].tx.lock().unwrap().send(Msg::Platform { reply });
         rx.recv().unwrap_or_else(|_| "unknown".into())
     }
 
-    /// Load + compile an artifact (cached by path).
+    /// Load + compile an artifact on `lane` (cached per lane by path).
+    pub fn load_on(&self, lane: usize, path: &Path, batch: usize, dim: usize) -> Result<ExeHandle> {
+        let l = self
+            .lanes
+            .get(lane)
+            .ok_or_else(|| anyhow!("lane {lane} out of range ({} lanes)", self.lanes.len()))?;
+        // hold the cache lock across the compile RPC: concurrent first
+        // loads of the same artifact must not compile it twice (the
+        // loser's executable would be orphaned in the lane's backend —
+        // a duplicate HLO compile + held memory under PJRT). The lane
+        // thread never takes this lock, so no deadlock; concurrent loads
+        // on one lane serialize, which a compile does anyway.
+        let id = {
+            let mut cache = l.cache.lock().unwrap();
+            match cache.get(path).copied() {
+                Some(id) => id,
+                None => {
+                    let (reply, rx) = mpsc::channel();
+                    l.tx.lock()
+                        .unwrap()
+                        .send(Msg::Load { path: path.to_path_buf(), reply })
+                        .map_err(|_| anyhow!("device lane gone"))?;
+                    let id = rx.recv().context("device lane gone")??;
+                    cache.insert(path.to_path_buf(), id);
+                    id
+                }
+            }
+        };
+        Ok(ExeHandle {
+            tx: Mutex::new(l.tx.lock().unwrap().clone()),
+            pool: Mutex::new(Vec::new()),
+            id,
+            lane,
+            batch,
+            dim,
+        })
+    }
+
+    /// Load + compile on the next round-robin lane.
     pub fn load(&self, path: &Path, batch: usize, dim: usize) -> Result<ExeHandle> {
-        if let Some(&id) = self.cache.lock().unwrap().get(path) {
-            return Ok(ExeHandle { rt_tx: self.tx.lock().unwrap().clone().into(), id, batch, dim });
-        }
-        let (reply, rx) = mpsc::channel();
-        self.send(Msg::Load { path: path.to_path_buf(), reply });
-        let id = rx.recv().context("device thread gone")??;
-        self.cache.lock().unwrap().insert(path.to_path_buf(), id);
-        Ok(ExeHandle { rt_tx: self.tx.lock().unwrap().clone().into(), id, batch, dim })
+        self.load_on(self.next_lane(), path, batch, dim)
     }
 }
 
 impl Drop for Runtime {
     fn drop(&mut self) {
-        // Replace the sender with a disconnected dummy; once every
-        // ExeHandle clone is gone too, the device thread's recv() errors
-        // out and it exits. We deliberately do NOT join: an ExeHandle may
+        // Replace each lane's sender with a disconnected dummy; once every
+        // ExeHandle clone is gone too, the lane's recv() errors out and
+        // the thread exits. We deliberately do NOT join: an ExeHandle may
         // outlive the Runtime and joining would deadlock — the detached
         // thread exits as soon as the last sender drops.
-        let (dummy, _) = mpsc::channel();
-        *self.tx.lock().unwrap() = dummy;
-        self.thread.lock().unwrap().take();
+        for lane in &self.lanes {
+            let (dummy, _) = mpsc::sync_channel(1);
+            *lane.tx.lock().unwrap() = dummy;
+        }
+    }
+}
+
+/// One pooled buffer set + its private reply channel. Slots cycle
+/// caller -> lane -> caller; their vectors only ever grow, so steady
+/// state reuses capacity and allocates nothing.
+struct ExecSlot {
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    out: Vec<f32>,
+    reply_tx: mpsc::SyncSender<ExecReply>,
+    reply_rx: mpsc::Receiver<ExecReply>,
+}
+
+impl Default for ExecSlot {
+    fn default() -> Self {
+        let (reply_tx, reply_rx) = mpsc::sync_channel(1);
+        ExecSlot {
+            x: Vec::new(),
+            labels: Vec::new(),
+            out: Vec::new(),
+            reply_tx,
+            reply_rx,
+        }
     }
 }
 
 /// A compiled velocity-field executable with the aot.py signature
-/// (x [B,D] f32, t [] f32, w [] f32, labels [B] i32) -> (u [B,D] f32,).
+/// (x [B,D] f32, t [] f32, w [] f32, labels [B] i32) -> (u [B,D] f32,),
+/// pinned to the device lane that compiled it.
 pub struct ExeHandle {
-    rt_tx: Mutex<mpsc::Sender<Msg>>,
+    tx: Mutex<mpsc::SyncSender<Msg>>,
+    pool: Mutex<Vec<ExecSlot>>,
     id: u64,
+    /// Lane this executable is pinned to.
+    pub lane: usize,
     pub batch: usize,
     pub dim: usize,
 }
 
 impl ExeHandle {
-    /// Execute on exactly `self.batch` rows (synchronous RPC).
-    pub fn run(&self, x: &[f32], t: f32, w: f32, labels: &[i32]) -> Result<Vec<f32>> {
+    /// Execute on exactly `self.batch` rows, writing the velocities into
+    /// `out` (synchronous RPC over pooled buffers; zero heap allocation
+    /// at steady state).
+    pub fn run_into(
+        &self,
+        x: &[f32],
+        t: f32,
+        w: f32,
+        labels: &[i32],
+        out: &mut [f32],
+    ) -> Result<()> {
         debug_assert_eq!(x.len(), self.batch * self.dim);
         debug_assert_eq!(labels.len(), self.batch);
-        let (reply, rx) = mpsc::channel();
-        {
-            let tx = self.rt_tx.lock().unwrap();
-            tx.send(Msg::Exec {
-                id: self.id,
-                batch: self.batch,
-                dim: self.dim,
-                x: x.to_vec(),
-                t,
-                w,
-                labels: labels.to_vec(),
-                reply,
-            })
-            .map_err(|_| anyhow!("device thread gone"))?;
+        debug_assert_eq!(out.len(), self.batch * self.dim);
+        let mut slot = self.pool.lock().unwrap().pop().unwrap_or_default();
+        slot.x.clear();
+        slot.x.extend_from_slice(x);
+        slot.labels.clear();
+        slot.labels.extend_from_slice(labels);
+        slot.out.resize(out.len(), 0.0);
+        let msg = Msg::Exec(ExecMsg {
+            id: self.id,
+            batch: self.batch,
+            dim: self.dim,
+            t,
+            w,
+            x: std::mem::take(&mut slot.x),
+            labels: std::mem::take(&mut slot.labels),
+            out: std::mem::take(&mut slot.out),
+            reply: slot.reply_tx.clone(),
+        });
+        let sent = self.tx.lock().unwrap().send(msg);
+        if let Err(mpsc::SendError(msg)) = sent {
+            // lane gone: recover the buffers so the slot stays warm
+            if let Msg::Exec(m) = msg {
+                slot.x = m.x;
+                slot.labels = m.labels;
+                slot.out = m.out;
+            }
+            self.pool.lock().unwrap().push(slot);
+            return Err(anyhow!("device lane gone"));
         }
-        rx.recv().map_err(|_| anyhow!("device thread dropped request"))?
+        // The lane always replies (backend panics are caught and turned
+        // into error replies), so this only fails if the lane died.
+        let reply = match slot.reply_rx.recv() {
+            Ok(r) => r,
+            Err(_) => return Err(anyhow!("device lane dropped request")),
+        };
+        slot.x = reply.x;
+        slot.labels = reply.labels;
+        slot.out = reply.out;
+        let result = reply.result;
+        if result.is_ok() {
+            out.copy_from_slice(&slot.out);
+        }
+        self.pool.lock().unwrap().push(slot);
+        result
+    }
+
+    /// Allocating convenience wrapper around `run_into`.
+    pub fn run(&self, x: &[f32], t: f32, w: f32, labels: &[i32]) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; self.batch * self.dim];
+        self.run_into(x, t, w, labels, &mut out)?;
+        Ok(out)
     }
 }
 
-fn device_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
+fn lane_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>, stats: Arc<LaneStats>) {
     let mut be = match backend::new_cpu() {
         Ok(b) => {
             let _ = ready.send(Ok(()));
@@ -160,11 +349,113 @@ fn device_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>) {
                 let _ = reply.send(be.platform());
             }
             Msg::Load { path, reply } => {
-                let _ = reply.send(be.load(&path));
+                let r = catch_unwind(AssertUnwindSafe(|| be.load(&path)))
+                    .unwrap_or_else(|_| Err(anyhow!("backend panicked during load")));
+                let _ = reply.send(r);
             }
-            Msg::Exec { id, batch, dim, x, t, w, labels, reply } => {
-                let _ = reply.send(be.exec(id, batch, dim, &x, t, w, &labels));
+            Msg::Exec(m) => {
+                let ExecMsg { id, batch, dim, t, w, x, labels, mut out, reply } = m;
+                let t0 = Instant::now();
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    be.exec_into(id, batch, dim, &x, t, w, &labels, &mut out)
+                }))
+                .unwrap_or_else(|_| Err(anyhow!("backend panicked during exec")));
+                stats.execs.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .busy_us
+                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                let _ = reply.send(ExecReply { x, labels, out, result });
             }
         }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    fn stub_artifact(tag: &str, body: &str) -> (PathBuf, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("bns-client-{}-{tag}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.stub.json");
+        std::fs::write(&path, body).unwrap();
+        (dir, path)
+    }
+
+    #[test]
+    fn run_into_matches_run_and_reuses_pooled_buffers() {
+        let (dir, path) =
+        stub_artifact(
+            "pool",
+            r#"{"bns_stub_field": {"k": -0.5, "c": 0.25, "label_scale": 0.1, "t_scale": 0.5}}"#,
+        );
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_on(0, &path, 2, 3).unwrap();
+        let x = [1.0f32, 2.0, -1.0, 0.5, 0.0, -2.0];
+        let labels = [1, 3];
+        let reference = exe.run(&x, 0.4, 0.0, &labels).unwrap();
+        let mut out = vec![f32::NAN; 6];
+        for i in 0..50 {
+            // vary t then restore: the pool must never leak stale values
+            let t = if i % 2 == 0 { 0.4 } else { 0.9 };
+            exe.run_into(&x, t, 0.0, &labels, &mut out).unwrap();
+            if i % 2 == 0 {
+                assert_eq!(out, reference, "iteration {i}");
+            } else {
+                assert_ne!(out, reference, "t must change the stub output");
+            }
+        }
+        assert_eq!(rt.lane_stats()[0].0, 51, "every exec is counted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn lanes_are_independent_and_stats_split() {
+        let (dir, path) = stub_artifact("lanes", r#"{"bns_stub_field": {"k": 2.0, "c": 0.0}}"#);
+        let rt = Runtime::with_lanes(2).unwrap();
+        assert_eq!(rt.num_lanes(), 2);
+        let e0 = rt.load_on(0, &path, 1, 2).unwrap();
+        let e1 = rt.load_on(1, &path, 1, 2).unwrap();
+        assert_eq!(e0.lane, 0);
+        assert_eq!(e1.lane, 1);
+        let mut a = [0f32; 2];
+        let mut b = [0f32; 2];
+        e0.run_into(&[1.0, 2.0], 0.0, 0.0, &[0], &mut a).unwrap();
+        e1.run_into(&[1.0, 2.0], 0.0, 0.0, &[0], &mut b).unwrap();
+        assert_eq!(a, [2.0, 4.0]);
+        assert_eq!(a, b, "both lanes compiled the same artifact");
+        let stats = rt.lane_stats();
+        assert_eq!((stats[0].0, stats[1].0), (1, 1));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn round_robin_pins_loads_across_lanes() {
+        let (dir, path) = stub_artifact("rr", r#"{"bns_stub_field": {"k": 1.0, "c": 0.0}}"#);
+        let rt = Runtime::with_lanes(3).unwrap();
+        let lanes: Vec<usize> = (0..6).map(|_| rt.load(&path, 1, 1).unwrap().lane).collect();
+        assert_eq!(lanes, vec![0, 1, 2, 0, 1, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn handle_outlives_runtime() {
+        let (dir, path) = stub_artifact("outlive", r#"{"bns_stub_field": {"k": -1.0, "c": 0.0}}"#);
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_on(0, &path, 1, 2).unwrap();
+        drop(rt);
+        // the lane thread stays alive while the handle holds a sender
+        let out = exe.run(&[3.0, -4.0], 0.0, 0.0, &[0]).unwrap();
+        assert_eq!(out, vec![-3.0, 4.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn bad_artifact_is_an_error_not_a_hang() {
+        let (dir, path) = stub_artifact("bad", "HloModule m\nENTRY main { ... }");
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_on(0, &path, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,4 +1,4 @@
-//! Request-path runtime: PJRT client + artifact store + model fields.
+//! Request-path runtime: device lanes + artifact store + model fields.
 //! Python never runs here; everything is loaded from `artifacts/`.
 
 pub mod artifact;
@@ -7,5 +7,5 @@ pub mod client;
 pub mod model_field;
 
 pub use artifact::{ArtifactStore, FdSynth, ModelInfo, SolverArtifact};
-pub use client::{ExeHandle, Runtime};
-pub use model_field::ModelField;
+pub use client::{ExeHandle, LaneStats, Runtime};
+pub use model_field::{LoadedModel, ModelField};

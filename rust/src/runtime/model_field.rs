@@ -1,7 +1,23 @@
-//! PJRT-backed velocity field: bridges `solver::field::Field` to the
+//! Device-backed velocity field: bridges `solver::field::Field` to the
 //! compiled model executables, with batch-bucket selection and padding.
+//!
+//! Split into two layers so serving workers can cache the expensive part:
+//!
+//! * [`LoadedModel`] — the per-(worker, model) cacheable object: compiled
+//!   bucket executables pinned to one device lane, plus the padding
+//!   scratch. Loading resolves buckets and talks to the lane's compile
+//!   cache once; engine workers keep these in a per-worker map instead of
+//!   re-resolving buckets and re-cloning `ModelInfo` every batch.
+//! * [`ModelField`] — a cheap binding of a `LoadedModel` to eval-time
+//!   arguments (labels, guidance). Constructed per batch (one `Arc`
+//!   bump + moving the already-built labels vector); evaluating it at
+//!   (t, x) runs the CFG-composed artifact.
+//!
+//! Batch handling: the smallest bucket >= rows is chosen; rows are
+//! zero-padded to the bucket (labels padded with the null class so the
+//! padding rows still compute *something* valid).
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
@@ -9,48 +25,56 @@ use super::artifact::ModelInfo;
 use super::client::{ExeHandle, Runtime};
 use crate::solver::field::Field;
 
-/// Reusable padding buffers for the off-bucket path of `eval_into`
-/// (rows that don't line up with a compiled bucket). One per field;
-/// workers each own their field, so the lock is uncontended.
+/// Reusable staging buffers for the off-bucket path of `eval_into`
+/// (rows that don't line up with a compiled bucket). One per loaded
+/// model; workers each own their models, so the lock is uncontended.
 #[derive(Default)]
 struct EvalScratch {
     xb: Vec<f32>,
     lb: Vec<i32>,
+    ob: Vec<f32>,
 }
 
-/// A model bound to (labels, guidance): evaluating it at (t, x) runs the
-/// CFG-composed artifact. Batch handling: the smallest bucket >= rows is
-/// chosen; rows are zero-padded to the bucket (labels padded with the
-/// null class so the padding rows still compute *something* valid).
-pub struct ModelField {
+/// A model's compiled executables, pinned to one device lane. Cacheable:
+/// workers load a model once and bind labels/guidance per batch.
+pub struct LoadedModel {
     pub info: ModelInfo,
     executables: Vec<ExeHandle>, // sorted by batch ascending
-    pub labels: Vec<i32>,
-    pub guidance: f32,
+    lane: usize,
     scratch: Mutex<EvalScratch>,
 }
 
-impl ModelField {
-    pub fn new(
-        rt: &Runtime,
-        info: &ModelInfo,
-        labels: Vec<i32>,
-        guidance: f32,
-    ) -> Result<ModelField> {
-        let mut buckets = info.buckets.clone();
-        buckets.sort_by_key(|b| b.batch);
-        let executables = buckets
+impl LoadedModel {
+    /// Load + compile every bucket on the runtime's next round-robin lane.
+    pub fn load(rt: &Runtime, info: &ModelInfo) -> Result<LoadedModel> {
+        Self::load_on(rt, rt.next_lane(), info)
+    }
+
+    /// Load + compile every bucket on a specific lane.
+    pub fn load_on(rt: &Runtime, lane: usize, info: &ModelInfo) -> Result<LoadedModel> {
+        // manifest buckets are sorted by batch at parse time (artifact.rs)
+        debug_assert!(
+            info.buckets.windows(2).all(|w| w[0].batch <= w[1].batch),
+            "ModelInfo.buckets must be sorted by batch"
+        );
+        let executables = info
+            .buckets
             .iter()
-            .map(|b| rt.load(&b.path, b.batch, info.dim))
+            .map(|b| rt.load_on(lane, &b.path, b.batch, info.dim))
             .collect::<Result<Vec<_>>>()
             .with_context(|| format!("loading model '{}'", info.name))?;
-        Ok(ModelField {
+        anyhow::ensure!(!executables.is_empty(), "model '{}' has no artifacts", info.name);
+        Ok(LoadedModel {
             info: info.clone(),
             executables,
-            labels,
-            guidance,
+            lane,
             scratch: Mutex::new(EvalScratch::default()),
         })
+    }
+
+    /// The device lane every executable of this model is pinned to.
+    pub fn lane(&self) -> usize {
+        self.lane
     }
 
     fn pick(&self, rows: usize) -> &ExeHandle {
@@ -64,11 +88,56 @@ impl ModelField {
     pub fn max_batch(&self) -> usize {
         self.executables.last().map(|e| e.batch).unwrap_or(1)
     }
+
+    /// Bind eval-time arguments, producing a `Field` for one batch.
+    /// Consumes the `Arc` handle (one refcount bump at the caller's
+    /// `clone`, no other work) — callers keeping the model cached clone
+    /// before binding.
+    pub fn bind(self: Arc<Self>, labels: Vec<i32>, guidance: f32) -> ModelField {
+        ModelField { model: self, labels, guidance }
+    }
+}
+
+/// A loaded model bound to (labels, guidance) for one sampling run.
+pub struct ModelField {
+    model: Arc<LoadedModel>,
+    pub labels: Vec<i32>,
+    pub guidance: f32,
+}
+
+impl ModelField {
+    /// Load-and-bind in one step (benches/CLI convenience; serving
+    /// workers cache the `LoadedModel` and call `bind` instead).
+    pub fn new(
+        rt: &Runtime,
+        info: &ModelInfo,
+        labels: Vec<i32>,
+        guidance: f32,
+    ) -> Result<ModelField> {
+        Ok(Arc::new(LoadedModel::load(rt, info)?).bind(labels, guidance))
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.model.info
+    }
+
+    pub fn lane(&self) -> usize {
+        self.model.lane
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.model.max_batch()
+    }
+
+    /// The underlying cacheable model (for re-binding).
+    pub fn model(&self) -> &Arc<LoadedModel> {
+        &self.model
+    }
 }
 
 impl Field for ModelField {
     fn dim(&self) -> usize {
-        self.info.dim
+        self.model.info.dim
     }
 
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
@@ -77,36 +146,45 @@ impl Field for ModelField {
         Ok(out)
     }
 
-    /// Hot-path evaluation: chunks over buckets, writing each chunk's
-    /// output straight into `out`. When a chunk exactly fills a compiled
-    /// bucket — the common case once the batcher aligns `max_rows` with
-    /// the bucket sizes — the input rows and labels are passed through
-    /// without the padded staging copy; only off-bucket tails go through
-    /// the (reused, preallocated) padding scratch.
+    /// Hot-path evaluation: chunks over buckets, the lane backend writing
+    /// each chunk's velocities straight into `out`. When a chunk exactly
+    /// fills a compiled bucket — the common case once the batcher aligns
+    /// `max_rows` with the bucket sizes — the rows, labels, and output
+    /// slice pass through the pooled lane RPC with no staging copy and no
+    /// allocation; only off-bucket tails go through the (reused,
+    /// preallocated) padding scratch.
     fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
-        let dim = self.info.dim;
+        let dim = self.model.info.dim;
         let rows = x.len() / dim;
         debug_assert_eq!(rows, self.labels.len(), "labels must match batch");
         debug_assert_eq!(out.len(), x.len(), "output buffer must match x");
         let mut r = 0;
         while r < rows {
-            let exe = self.pick(rows - r);
+            let exe = self.model.pick(rows - r);
             let take = exe.batch.min(rows - r);
-            let ub = if take == exe.batch {
+            if take == exe.batch {
                 // bucket-aligned: no padding, no staging copy
-                exe.run(&x[r * dim..(r + take) * dim], t as f32, self.guidance, &self.labels[r..r + take])?
+                exe.run_into(
+                    &x[r * dim..(r + take) * dim],
+                    t as f32,
+                    self.guidance,
+                    &self.labels[r..r + take],
+                    &mut out[r * dim..(r + take) * dim],
+                )?;
             } else {
                 // pad up to the bucket through reused scratch
-                let mut s = self.scratch.lock().unwrap();
+                let mut s = self.model.scratch.lock().unwrap();
+                let s = &mut *s;
                 s.xb.clear();
                 s.xb.resize(exe.batch * dim, 0.0);
                 s.xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
                 s.lb.clear();
-                s.lb.resize(exe.batch, self.info.null_class as i32);
+                s.lb.resize(exe.batch, self.model.info.null_class as i32);
                 s.lb[..take].copy_from_slice(&self.labels[r..r + take]);
-                exe.run(&s.xb, t as f32, self.guidance, &s.lb)?
-            };
-            out[r * dim..(r + take) * dim].copy_from_slice(&ub[..take * dim]);
+                s.ob.resize(exe.batch * dim, 0.0);
+                exe.run_into(&s.xb, t as f32, self.guidance, &s.lb, &mut s.ob)?;
+                out[r * dim..(r + take) * dim].copy_from_slice(&s.ob[..take * dim]);
+            }
             r += take;
         }
         Ok(())
@@ -115,6 +193,98 @@ impl Field for ModelField {
     fn forwards_per_eval(&self) -> usize {
         // CFG-composed artifacts run cond + uncond branches per row; the
         // manifest says which composition a model was lowered with.
-        self.info.forwards_per_eval
+        self.model.info.forwards_per_eval
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+    use crate::bench_util::StubModel;
+    use crate::runtime::ArtifactStore;
+
+    fn stub_store(tag: &str) -> (Arc<ArtifactStore>, std::path::PathBuf) {
+        crate::bench_util::stub_store(
+            &format!("mf-{tag}"),
+            &[StubModel {
+                name: "m",
+                dim: 4,
+                num_classes: 3,
+                forwards_per_eval: 2,
+                k: -0.5,
+                c: 0.1,
+                label_scale: 0.25,
+                cost: 1,
+                buckets: &[4, 8],
+            }],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn bind_reuses_loaded_model_and_matches_eval() {
+        let (store, dir) = stub_store("bind");
+        let rt = Runtime::cpu().unwrap();
+        let info = store.model("m").unwrap();
+        let model = Arc::new(LoadedModel::load(&rt, info).unwrap());
+        let f1 = model.clone().bind(vec![0, 1, 2, 0], 0.0);
+        let f2 = model.bind(vec![2, 2, 2, 2], 1.5);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let a = f1.eval(0.3, &x).unwrap();
+        let mut b = vec![0f32; 16];
+        f1.eval_into(0.3, &x, &mut b).unwrap();
+        assert_eq!(a, b, "eval_into must match eval bit-for-bit");
+        // a different binding of the same model gives different values
+        let c = f2.eval(0.3, &x).unwrap();
+        assert_ne!(a, c, "labels are eval-time arguments");
+        assert_eq!(f1.lane(), f2.lane(), "bindings share the pinned lane");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn off_bucket_rows_equal_bucket_aligned_rows() {
+        let (store, dir) = stub_store("pad");
+        let rt = Runtime::cpu().unwrap();
+        let info = store.model("m").unwrap();
+        let model = Arc::new(LoadedModel::load(&rt, info).unwrap());
+        // 3 rows -> padded into the 4-bucket
+        let f3 = model.clone().bind(vec![0, 1, 2], 0.0);
+        // the same 3 rows inside a bucket-aligned 4-row batch
+        let f4 = model.bind(vec![0, 1, 2, 0], 0.0);
+        let x3: Vec<f32> = (0..12).map(|i| (i as f32).sin()).collect();
+        let mut x4 = x3.clone();
+        x4.extend_from_slice(&[0.5, -0.5, 1.0, -1.0]);
+        let o3 = f3.eval(0.6, &x3).unwrap();
+        let o4 = f4.eval(0.6, &x4).unwrap();
+        assert_eq!(o3[..], o4[..12], "padding must not perturb real rows");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn concurrent_eval_into_on_shared_field_is_stable() {
+        let (store, dir) = stub_store("conc");
+        let rt = Arc::new(Runtime::with_lanes(2).unwrap());
+        let info = store.model("m").unwrap();
+        let model = Arc::new(LoadedModel::load(&rt, info).unwrap());
+        let field = Arc::new(model.bind(vec![1, 2, 0, 1], 0.0));
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.3).cos()).collect();
+        let expected = field.eval(0.4, &x).unwrap();
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let field = field.clone();
+            let x = x.clone();
+            let expected = expected.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut out = vec![0f32; x.len()];
+                for i in 0..200 {
+                    field.eval_into(0.4, &x, &mut out).unwrap();
+                    assert_eq!(out, expected, "iteration {i}: pooled buffers corrupted");
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -17,9 +17,12 @@ pub trait Field: Send + Sync {
 
     /// Write u(t, x) into `out` (same length as `x`) without allocating
     /// the result buffer — the hot-path entry used by `sample_into`.
-    /// Must produce values bit-identical to `eval`. The default falls
-    /// back to `eval` and copies; `ModelField` overrides it to write the
-    /// executable output straight into the caller's buffer.
+    /// Must produce values bit-identical to `eval`, and must fully
+    /// overwrite `out` (callers pass reused workspace buffers whose prior
+    /// contents are arbitrary). Implementations should avoid per-call
+    /// heap allocation: `ModelField` routes through the pooled device-lane
+    /// RPC, which allocates nothing at steady state (DESIGN.md §5). The
+    /// default falls back to `eval` and copies.
     fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
         let u = self.eval(t, x)?;
         anyhow::ensure!(

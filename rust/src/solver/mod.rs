@@ -41,12 +41,13 @@
 //!    PJRT-backed `ModelField` can skip the padded-bucket staging copy
 //!    when a batch lines up with a compiled bucket.
 //!
-//! Scope of the claim: the *solver-side* combine (state updates, stage
-//! math, history bookkeeping) is allocation-free per step. Model-backed
-//! fields still pay per-eval copies inside the device-thread RPC
-//! (`ExeHandle::run` owns its message buffers and the backend returns a
-//! fresh output vector); pooling those across the channel is future
-//! work tracked in `runtime/client.rs`.
+//! Scope of the claim: with the pooled device-lane runtime
+//! (`runtime/client.rs`, DESIGN.md §5) the whole eval path is
+//! allocation-free at steady state — the solver-side combine reuses the
+//! workspace, and a bucket-aligned `ModelField::eval_into` rides pooled
+//! request/response buffers through the lane RPC while the backend
+//! writes velocities in place (`Backend::exec_into`). `perf_layers`
+//! measures allocations per eval with a counting global allocator.
 //!
 //! `sample` remains the simple allocating reference path — benches
 //! (`perf_layers`) time the two against each other, and the equivalence

@@ -15,16 +15,15 @@ use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
-use bns_serve::bench_util::{write_stub_artifacts, StubModel};
+use bns_serve::bench_util::StubModel;
 use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
 use bns_serve::runtime::{ArtifactStore, Runtime};
 
 const DIM: usize = 6;
 
 fn stub_store(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
-    let dir = std::env::temp_dir().join(format!("bns-acct-{}-{tag}", std::process::id()));
-    write_stub_artifacts(
-        &dir,
+    bns_serve::bench_util::stub_store(
+        &format!("acct-{tag}"),
         &[
             StubModel {
                 name: "stub_cfg",
@@ -33,6 +32,8 @@ fn stub_store(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
                 forwards_per_eval: 2,
                 k: -0.9,
                 c: 0.1,
+                label_scale: 0.0,
+                cost: 1,
                 buckets: &[4, 16],
             },
             StubModel {
@@ -42,12 +43,13 @@ fn stub_store(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
                 forwards_per_eval: 1,
                 k: -0.5,
                 c: 0.0,
+                label_scale: 0.0,
+                cost: 1,
                 buckets: &[4, 16],
             },
         ],
     )
-    .unwrap();
-    (Arc::new(ArtifactStore::load(&dir).unwrap()), dir)
+    .unwrap()
 }
 
 fn start_engine(store: Arc<ArtifactStore>) -> Engine {

@@ -1,0 +1,198 @@
+//! Multi-worker / multi-lane stress tests over stub artifacts.
+//!
+//! The pooled device-lane runtime must be *invisible* to results: the
+//! same request set, solved under any (workers, lanes) configuration and
+//! any concurrent interleaving, yields bit-identical samples — pooled
+//! buffers never leak rows across lanes or requests — and the forwards
+//! accounting still balances (per-request sums equal the aggregate
+//! metric). Also covers the `Drop`-shutdown path and the lane/queue
+//! metrics surface.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use bns_serve::bench_util::{stub_store, StubModel};
+use bns_serve::coordinator::{Engine, EngineConfig, SampleOutput, SampleRequest, SolverSpec};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+
+const DIM: usize = 12;
+
+fn store(tag: &str) -> (Arc<ArtifactStore>, std::path::PathBuf) {
+    stub_store(
+        &format!("lane-stress-{tag}"),
+        &[
+            StubModel {
+                name: "m_cfg",
+                dim: DIM,
+                num_classes: 6,
+                forwards_per_eval: 2,
+                k: -0.8,
+                c: 0.2,
+                label_scale: 0.05,
+                cost: 2,
+                buckets: &[4, 16],
+            },
+            StubModel {
+                name: "m_uncond",
+                dim: DIM,
+                num_classes: 6,
+                forwards_per_eval: 1,
+                k: -0.4,
+                c: 0.0,
+                label_scale: 0.1,
+                cost: 1,
+                buckets: &[8],
+            },
+        ],
+    )
+    .unwrap()
+}
+
+/// Deterministic mixed workload: two models, varying row counts, mixed
+/// solver specs — three fixed-step batch groups plus the adaptive
+/// RK45 ground-truth path (different eval cadence and buffer-reuse
+/// pattern, so pooling bugs specific to it can't hide). Fixed-step
+/// solvers are row-independent, so their batch composition can't change
+/// results; RK45's step control spans the batch, so every GT request
+/// gets a *unique* guidance (the stub field ignores w) and therefore a
+/// singleton batch group — composition is identical in every config by
+/// construction, not by flush timing.
+fn request_plan() -> Vec<(&'static str, usize, u64, f32, SolverSpec)> {
+    let mut plan = Vec::new();
+    for i in 0..24u64 {
+        let (model, rows) = match i % 4 {
+            0 => ("m_cfg", 3),
+            1 => ("m_uncond", 5),
+            2 => ("m_cfg", 1),
+            _ => ("m_uncond", 2),
+        };
+        // i%5 injects GT so the spec sequence stays decorrelated from
+        // the i%4 model/rows cycle (more distinct group keys per model)
+        let (guidance, spec) = if i % 5 == 4 {
+            (0.25 * (1.0 + i as f32), SolverSpec::GroundTruth)
+        } else {
+            let spec = match i % 3 {
+                0 => SolverSpec::Baseline { name: "rk4".into(), nfe: 8 },
+                1 => SolverSpec::Auto { nfe: 8 },
+                _ => SolverSpec::Baseline { name: "euler".into(), nfe: 5 },
+            };
+            (0.0, spec)
+        };
+        plan.push((model, rows, 1000 + i, guidance, spec));
+    }
+    plan
+}
+
+/// Submit the whole plan at once (so batching and worker interleaving
+/// actually happen) and collect outputs in plan order.
+fn run_plan(engine: &Engine) -> Vec<SampleOutput> {
+    let mut rxs = Vec::new();
+    for (model, rows, seed, guidance, spec) in request_plan() {
+        let (tx, rx) = mpsc::channel();
+        engine.submit(SampleRequest {
+            id: 0,
+            model: model.to_string(),
+            labels: (0..rows).map(|r| (r % 6) as i32).collect(),
+            guidance,
+            solver: spec,
+            seed,
+            x0: None,
+            enqueued_at: Instant::now(),
+            reply: tx,
+        });
+        rxs.push(rx);
+    }
+    rxs.iter()
+        .map(|rx| rx.recv().expect("engine dropped reply").result.expect("sample failed"))
+        .collect()
+}
+
+#[test]
+fn results_bit_identical_across_worker_and_lane_counts() {
+    let (store, dir) = store("bitident");
+
+    // reference: strictly serial — 1 lane, 1 worker
+    let reference = {
+        let rt = Arc::new(Runtime::with_lanes(1).unwrap());
+        let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 1, ..Default::default() });
+        let outs = run_plan(&engine);
+        engine.shutdown();
+        outs
+    };
+
+    for (lanes, workers) in [(1usize, 4usize), (2, 2), (4, 4)] {
+        let rt = Arc::new(Runtime::with_lanes(lanes).unwrap());
+        let engine =
+            Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() });
+        let outs = run_plan(&engine);
+
+        assert_eq!(outs.len(), reference.len());
+        for (i, (got, want)) in outs.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(got.nfe, want.nfe, "req {i}: nfe drifted ({lanes} lanes, {workers} workers)");
+            assert_eq!(
+                got.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "req {i}: samples drifted ({lanes} lanes, {workers} workers)"
+            );
+        }
+
+        // forwards accounting balances under concurrency
+        let per_request: usize = outs.iter().map(|o| o.forwards).sum();
+        let aggregate = engine.metrics.forwards.load(Ordering::SeqCst) as usize;
+        assert_eq!(
+            per_request, aggregate,
+            "forwards out of balance ({lanes} lanes, {workers} workers)"
+        );
+        engine.shutdown();
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn engine_drop_without_shutdown_joins_threads() {
+    let (store, dir) = store("drop");
+    for _ in 0..3 {
+        let rt = Arc::new(Runtime::with_lanes(2).unwrap());
+        let engine =
+            Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() });
+        let out = engine
+            .sample_blocking(
+                "m_cfg",
+                vec![0, 1],
+                0.0,
+                SolverSpec::Baseline { name: "euler".into(), nfe: 4 },
+                7,
+            )
+            .unwrap();
+        assert_eq!(out.samples.len(), 2 * DIM);
+        // no explicit shutdown: Drop must drain, join, and not hang
+        drop(engine);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn lane_and_queue_metrics_are_exposed() {
+    let (store, dir) = store("metrics");
+    let rt = Arc::new(Runtime::with_lanes(2).unwrap());
+    let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() });
+    let outs = run_plan(&engine);
+    assert!(!outs.is_empty());
+
+    let snap = engine.metrics.snapshot_json();
+    let lanes = snap.get("lanes").as_arr().expect("lanes array");
+    assert_eq!(lanes.len(), 2, "one entry per device lane");
+    let total_execs: f64 = lanes.iter().map(|l| l.get("execs").as_f64().unwrap_or(0.0)).sum();
+    let evals = snap.get("evals").as_f64().unwrap_or(0.0);
+    assert!(
+        total_execs >= evals && evals > 0.0,
+        "every solver eval reaches a lane (execs {total_execs} vs evals {evals})"
+    );
+    // all work is done, so the gauge must be back to zero
+    assert_eq!(snap.get("work_queue_depth").as_f64(), Some(0.0));
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
