@@ -53,6 +53,20 @@ else
   lint_fail=1
 fi
 
+# Distillation trajectory: a smoke-sized run of the first-order trainer
+# on the stub backend, emitting BENCH_distill.json at the repo root —
+# PSNR-vs-NFE for rust-distilled BNS vs stationary baselines, trainer
+# iters/s, and NFE-to-target-PSNR, tracked PR-over-PR. Advisory unless
+# STRICT=1 (shares the lint gate).
+step "distill trajectory: cargo bench --bench distill_bench -> BENCH_distill.json"
+if BENCH_DISTILL_OUT="../BENCH_distill.json" DISTILL_BENCH_ITERS="${DISTILL_BENCH_ITERS:-80}" \
+    cargo bench --bench distill_bench; then
+  echo "wrote $(cd .. && pwd)/BENCH_distill.json"
+else
+  echo "distill_bench failed (distill trajectory not updated)"
+  lint_fail=1
+fi
+
 echo
 if [ "$fail" -ne 0 ]; then
   echo "CI FAILED (tier-1)"

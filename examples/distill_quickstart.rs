@@ -1,0 +1,49 @@
+//! Distill → serve, end to end in-process (library-API twin of the CLI
+//! quickstart in README.md):
+//!
+//!     make artifacts && cargo run --release --example distill_quickstart
+//!
+//! 1. train an NFE=8 BNS solver against the deployed model field with
+//!    the first-order trainer (analytic gradients, RK45 teacher pairs),
+//! 2. register the artifact (full SolverMeta provenance) in the store,
+//! 3. reload and sample — the BNS-first auto router now picks it.
+
+use std::sync::Arc;
+
+use bns_serve::bench_util::add_solver_artifact;
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::distill::{train, ConditionedModel, TrainConfig};
+use bns_serve::runtime::{ArtifactStore, LoadedModel, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = bns_serve::default_artifacts_dir();
+    let store = Arc::new(ArtifactStore::load(&dir)?);
+    let rt = Arc::new(Runtime::with_lanes(2)?);
+    let model = "img_fm_ot";
+    let nfe = 8;
+    let info = store.model(model)?.clone();
+
+    // 1. distill: teacher pairs + minibatches are conditioned per row
+    let cfg = TrainConfig { iters: 300, threads: 4, init: "midpoint".into(), ..Default::default() };
+    let labels: Vec<i32> =
+        (0..cfg.pairs + cfg.val_pairs).map(|i| (i % info.num_classes) as i32).collect();
+    let loaded = Arc::new(LoadedModel::load(&rt, &info)?);
+    let src = ConditionedModel::new(loaded, labels, 0.0);
+    let (solver, report) = train(&src, info.dim, nfe, &cfg)?;
+    println!(
+        "distilled nfe={nfe}: val psnr {:.2} -> {:.2} dB ({} forwards)",
+        report.init_val_psnr, report.final_val_psnr, report.forwards
+    );
+
+    // 2. emit + register: loads like any build-time BNS artifact
+    let name = format!("{model}_w0_nfe{nfe}_bns_rs");
+    add_solver_artifact(&dir, &name, &solver, &report.meta(model, 0.0))?;
+
+    // 3. serve with it
+    let store = Arc::new(ArtifactStore::load(&dir)?);
+    let engine = Engine::start(store, rt, EngineConfig::default());
+    let out = engine.sample_blocking(model, vec![0, 1, 2, 3], 0.0, SolverSpec::Auto { nfe }, 7)?;
+    println!("auto-routed to '{}' (nfe {}, {} forwards)", out.solver_used, out.nfe, out.forwards);
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Distillation trainer bench (fig. 4-style, stub-backed): PSNR vs NFE
+//! of the rust-distilled BNS solver against stationary baselines, plus
+//! trainer throughput — no compiled artifacts needed, so it runs in CI.
+//!
+//! Emits machine-readable `BENCH_distill.json` (path override:
+//! `BENCH_DISTILL_OUT`) with the PSNR-vs-NFE trajectory, per-NFE trainer
+//! stats (iters/s, forwards, init→final val PSNR) and the smallest NFE
+//! reaching the target PSNR — the perf-trajectory hooks `ci.sh` tracks
+//! PR-over-PR. `DISTILL_BENCH_ITERS` scales the training run (default
+//! 150, smoke-sized).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use bns_serve::bench_util::{stub_store, StubModel, Table};
+use bns_serve::distill::{sample_loss, train, ConditionedModel, DistillField, TeacherSet, TrainConfig};
+use bns_serve::runtime::{LoadedModel, Runtime};
+use bns_serve::solver::{baseline, Solver};
+use bns_serve::util::json::Json;
+use bns_serve::util::stats::psnr_from_log_mse;
+
+const DIM: usize = 6;
+const TARGET_PSNR: f64 = 40.0;
+const EVAL_PAIRS: usize = 16;
+
+fn main() -> anyhow::Result<()> {
+    let iters: usize = std::env::var("DISTILL_BENCH_ITERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let (store, dir) = stub_store(
+        "distill-bench",
+        &[StubModel {
+            name: "m",
+            dim: DIM,
+            num_classes: 4,
+            forwards_per_eval: 2,
+            k: -0.7,
+            c: 0.1,
+            label_scale: 0.15,
+            cost: 1,
+            buckets: &[8, 16, 32],
+        }],
+    )?;
+    let rt = Arc::new(Runtime::with_lanes(2)?);
+    let info = store.model("m")?.clone();
+    let loaded = Arc::new(LoadedModel::load(&rt, &info)?);
+
+    let mut table = Table::new(&[
+        "NFE", "bns(rs)", "euler", "midpoint", "dpmpp2m", "init->final(val)", "iters/s",
+    ]);
+    let mut rows = Vec::new();
+    let mut nfe_to_target: i64 = -1;
+
+    for nfe in [4usize, 8] {
+        // train against the deployed stub field
+        let pairs = 24;
+        let val_pairs = 12;
+        let labels: Vec<i32> =
+            (0..pairs + val_pairs).map(|i| (i % info.num_classes) as i32).collect();
+        let src = ConditionedModel::new(loaded.clone(), labels, 0.0);
+        let cfg = TrainConfig {
+            iters,
+            pairs,
+            val_pairs,
+            batch: 12,
+            threads: 2,
+            init: "auto".into(),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let (solver, report) = train(&src, DIM, nfe, &cfg)?;
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let iters_per_s = report.iters as f64 / secs;
+
+        // held-out evaluation set (fresh seed) for all solvers
+        let eval_labels: Vec<i32> =
+            (0..EVAL_PAIRS).map(|i| ((i + 1) % info.num_classes) as i32).collect();
+        let eval_src = ConditionedModel::new(loaded.clone(), eval_labels, 0.0);
+        let eval = TeacherSet::generate(&eval_src, DIM, EVAL_PAIRS, 4242, 2)?;
+        let efield = eval_src.full();
+        let psnr_of = |s: &dyn bns_serve::solver::Solver| -> anyhow::Result<f64> {
+            let out = s.sample(efield, &eval.x0)?;
+            Ok(psnr_from_log_mse(bns_serve::distill::log_mse_loss(&out, &eval.x1, DIM)))
+        };
+        let p_bns = psnr_from_log_mse(sample_loss(&solver, efield, &eval.x0, &eval.x1, DIM)?);
+        let p_euler = psnr_of(baseline("euler", nfe, info.scheduler)?.as_ref())?;
+        let p_mid = if nfe % 2 == 0 {
+            psnr_of(baseline("midpoint", nfe, info.scheduler)?.as_ref())?
+        } else {
+            f64::NAN
+        };
+        let p_dpm = psnr_of(baseline("dpmpp2m", nfe, info.scheduler)?.as_ref())?;
+        if nfe_to_target < 0 && p_bns >= TARGET_PSNR {
+            nfe_to_target = nfe as i64;
+        }
+
+        table.row(vec![
+            nfe.to_string(),
+            format!("{p_bns:.2}"),
+            format!("{p_euler:.2}"),
+            format!("{p_mid:.2}"),
+            format!("{p_dpm:.2}"),
+            format!("{:.2} -> {:.2}", report.init_val_psnr, report.final_val_psnr),
+            format!("{iters_per_s:.1}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("nfe", Json::Num(nfe as f64)),
+            ("psnr_bns", Json::Num(p_bns)),
+            ("psnr_euler", Json::Num(p_euler)),
+            ("psnr_midpoint", Json::Num(p_mid)),
+            ("psnr_dpmpp2m", Json::Num(p_dpm)),
+            ("init_val_psnr", Json::Num(report.init_val_psnr)),
+            ("final_val_psnr", Json::Num(report.final_val_psnr)),
+            ("iters", Json::Num(report.iters as f64)),
+            ("iters_per_s", Json::Num(iters_per_s)),
+            ("forwards", Json::Num(report.forwards as f64)),
+            ("gt_nfe", Json::Num(report.gt_nfe as f64)),
+            ("init", Json::Str(report.init_name.clone())),
+        ]));
+    }
+    table.print();
+
+    let out = Json::obj(vec![
+        ("bench", Json::Str("distill".into())),
+        ("dim", Json::Num(DIM as f64)),
+        ("iters_config", Json::Num(iters as f64)),
+        ("target_psnr", Json::Num(TARGET_PSNR)),
+        // -1 = no swept NFE reached the target
+        ("nfe_to_target_psnr", Json::Num(nfe_to_target as f64)),
+        ("points", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("BENCH_DISTILL_OUT")
+        .unwrap_or_else(|_| "BENCH_distill.json".to_string());
+    std::fs::write(&path, out.to_string())?;
+    println!("\nwrote {path}");
+    std::fs::remove_dir_all(&dir).ok();
+    Ok(())
+}

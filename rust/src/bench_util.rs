@@ -10,6 +10,7 @@ use anyhow::{Context, Result};
 
 use crate::runtime::{ArtifactStore, ModelField, ModelInfo, Runtime};
 use crate::solver::field::{CountingField, Field};
+use crate::solver::ns::{NsSolver, SolverMeta};
 use crate::solver::rk45::{rk45, Rk45Opts};
 use crate::solver::Solver;
 use crate::util::json::Json;
@@ -217,6 +218,45 @@ pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
         ("fd", fd),
     ]);
     std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    Ok(())
+}
+
+/// Write `solvers/<name>.json` (coefficients + full `SolverMeta`
+/// provenance) under an artifact directory and register it in
+/// `manifest.json`, so rust-distilled solvers load exactly like
+/// build-time ones on the next `ArtifactStore::load`. Idempotent:
+/// re-adding a name overwrites the file and keeps one manifest entry.
+pub fn add_solver_artifact(
+    dir: &Path,
+    name: &str,
+    solver: &NsSolver,
+    meta: &SolverMeta,
+) -> Result<()> {
+    solver.validate()?;
+    std::fs::create_dir_all(dir.join("solvers"))?;
+    let rel = format!("solvers/{name}.json");
+    std::fs::write(dir.join(&rel), solver.to_json_with_meta(meta).to_string())?;
+    let mpath = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&mpath)
+        .with_context(|| format!("reading {}", mpath.display()))?;
+    let mut manifest = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+    match &mut manifest {
+        Json::Obj(map) => {
+            let solvers = map
+                .entry("solvers".to_string())
+                .or_insert_with(|| Json::Arr(Vec::new()));
+            match solvers {
+                Json::Arr(v) => {
+                    if !v.iter().any(|e| e.as_str() == Some(rel.as_str())) {
+                        v.push(Json::Str(rel.clone()));
+                    }
+                }
+                _ => anyhow::bail!("manifest.solvers is not an array"),
+            }
+        }
+        _ => anyhow::bail!("manifest root is not an object"),
+    }
+    std::fs::write(&mpath, manifest.to_string())?;
     Ok(())
 }
 

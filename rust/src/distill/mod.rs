@@ -1,20 +1,43 @@
-//! Request-path solver refinement: adapt BNS coefficients **in rust**,
-//! no Python required.
+//! Rust-native BNS solver distillation: optimize eq. 12's <200-parameter
+//! non-stationary solver against an RK45 teacher through the *deployed*
+//! field — no python required, closing the train → artifact → serve loop
+//! on the serving side.
 //!
 //! Why this exists: Algorithm 2 runs at build time, but a deployed
 //! service meets conditions the build never saw — a new guidance scale,
-//! a drifting input distribution, an NFE the build didn't distill. This
-//! module closes the loop on the serving side: generate a small set of
-//! RK45 ground-truth pairs through the *deployed* PJRT field, then
-//! refine an NS solver's theta against the paper's PSNR loss (eq. 13)
-//! with SPSA (simultaneous-perturbation stochastic approximation) —
-//! gradient-free, so it works through the compiled executable where
-//! autodiff is unavailable.
+//! a drifting input distribution, an NFE the build didn't distill.
+//! Module map:
 //!
-//! This is deliberately the same parameter space as eq. 12 (the rust
-//! mirror of theta), so refined solvers serialize to the same JSON
-//! artifacts and route like any build-time BNS solver.
+//! * `theta`   — the shared eq. 12 reparameterization (log-increment
+//!   times with pinned endpoints) + its exact chain rule;
+//! * `teacher` — the teacher-trajectory store: RK45 ground-truth pairs
+//!   generated once (thread-fanned in fixed chunks, bit-identical for
+//!   any thread count), disk-cached, with per-row conditioning
+//!   (`DistillField`) and the shared unbiased minibatch sampler;
+//! * `grad`    — exact first-order gradients of the eq. 13 log-MSE loss
+//!   through Algorithm 1, field coupling via `Field::jvp` (JVPs only —
+//!   compiled executables have no transpose);
+//! * `adam`    — the Adam optimizer substrate;
+//! * `trainer` — the first-order training loop: taxonomy init (§3.1),
+//!   validation-PSNR best-checkpoint selection, `SolverMeta` provenance;
+//! * `spsa`    — the zeroth-order (gradient-free) refiner, kept for
+//!   fields where JVPs are impractical; shares theta, teacher pairs and
+//!   minibatching with the trainer.
+//!
+//! Both optimizers emit solvers in the same JSON artifact format the
+//! build-time trainer uses (`NsSolver::to_json_with_meta`), so they load
+//! and route like any python-distilled solver. DESIGN.md §7 has the
+//! system-level walkthrough.
 
+pub mod adam;
+pub mod grad;
 pub mod spsa;
+pub mod teacher;
+pub mod theta;
+pub mod trainer;
 
-pub use spsa::{refine, RefineConfig, RefineReport};
+pub use adam::Adam;
+pub use grad::{log_mse_loss, loss_and_grad, sample_loss, LossGrad};
+pub use spsa::{refine, refine_with, RefineConfig, RefineReport};
+pub use teacher::{sample_indices, ConditionedModel, DistillField, TeacherSet, UniformField};
+pub use trainer::{train, train_from, TrainConfig, TrainReport};

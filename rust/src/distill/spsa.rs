@@ -1,17 +1,27 @@
-//! SPSA refinement of NS solver coefficients against the PSNR loss.
+//! SPSA refinement of NS solver coefficients against the PSNR loss —
+//! the zeroth-order fallback for fields whose JVP is too expensive or
+//! too noisy (the first-order path is `distill::trainer`).
 //!
-//! theta layout (mirrors eq. 12 with pinned endpoints):
-//!   [ log-increments of T_n (n entries) | a (n) | b rows (n(n+1)/2) ]
-//! Times are recovered via a softmax-style normalization of positive
-//! increments, exactly like the python trainer, so refined solvers stay
-//! valid by construction.
+//! Operates in the shared theta space of `distill::theta` (log-increment
+//! times with pinned endpoints, raw a/b), draws its ground-truth pairs
+//! from the shared teacher store, and samples minibatches with the same
+//! unbiased shuffled-index helper as the Adam trainer — contiguous
+//! windows used to make every gradient estimate depend on pair order.
+//!
+//! `refine` is the entry for unconditioned (analytic/test) fields;
+//! label-conditioned model fields go through [`refine_with`], whose
+//! `DistillField` seam binds the right labels to every generation chunk
+//! and minibatch — exactly like the trainer.
 
 use anyhow::Result;
 
+use crate::distill::grad::sample_loss;
+use crate::distill::teacher::{sample_indices, DistillField, TeacherSet, UniformField};
+use crate::distill::theta::{pack, unpack};
 use crate::solver::field::Field;
 use crate::solver::ns::NsSolver;
-use crate::solver::rk45::{rk45, Rk45Opts};
 use crate::util::rng::Pcg32;
+use crate::util::stats::psnr_from_log_mse;
 
 #[derive(Debug, Clone)]
 pub struct RefineConfig {
@@ -37,89 +47,63 @@ pub struct RefineReport {
     pub final_psnr: f64,
     pub iters: usize,
     pub nfe_spent: usize,
+    /// Mean RK45 NFE per teacher trajectory (artifact provenance).
+    pub gt_nfe: u64,
 }
 
-fn pack(solver: &NsSolver) -> Vec<f64> {
-    let n = solver.nfe();
-    let mut theta = Vec::with_capacity(n + n + n * (n + 1) / 2);
-    for w in solver.times.windows(2) {
-        theta.push((w[1] - w[0]).max(1e-9).ln());
-    }
-    theta.extend_from_slice(&solver.a);
-    for row in &solver.b {
-        theta.extend_from_slice(row);
-    }
-    theta
-}
-
-fn unpack(theta: &[f64], n: usize) -> NsSolver {
-    let incs: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
-    let total: f64 = incs.iter().sum();
-    let mut times = Vec::with_capacity(n + 1);
-    times.push(0.0);
-    let mut acc = 0.0;
-    for inc in &incs {
-        acc += inc / total;
-        times.push(acc.min(1.0));
-    }
-    times[n] = 1.0;
-    let a = theta[n..2 * n].to_vec();
-    let mut b = Vec::with_capacity(n);
-    let mut off = 2 * n;
-    for i in 0..n {
-        b.push(theta[off..off + i + 1].to_vec());
-        off += i + 1;
-    }
-    NsSolver { times, a, b }
-}
-
-fn psnr_loss(solver: &NsSolver, field: &dyn Field, x0: &[f32], x1: &[f32], dim: usize) -> Result<f64> {
-    let out = solver.sample(field, x0)?;
-    // eq. 13: mean over samples of log per-sample MSE
-    let n = out.len() / dim;
-    let mut acc = 0.0;
-    for i in 0..n {
-        let mse: f64 = out[i * dim..(i + 1) * dim]
-            .iter()
-            .zip(&x1[i * dim..(i + 1) * dim])
-            .map(|(a, b)| ((a - b) as f64).powi(2))
-            .sum::<f64>()
-            / dim as f64;
-        acc += mse.max(1e-20).ln();
-    }
-    Ok(acc / n as f64)
-}
-
-/// Refine `solver` against `field` (labels/guidance already bound).
-/// Returns the refined solver plus a report; ground-truth pairs are
-/// produced internally with RK45 through the same field.
+/// Refine `solver` against an *unconditioned* `field` (analytic/test
+/// fields, or a model field whose rows are label-uniform). For per-row
+/// label conditioning use [`refine_with`].
 pub fn refine(
     solver: &NsSolver,
     field: &dyn Field,
     dim: usize,
     cfg: &RefineConfig,
 ) -> Result<(NsSolver, RefineReport)> {
+    refine_with(&UniformField(field), solver, dim, cfg)
+}
+
+/// Refine `solver` against a conditioned field source. Ground-truth
+/// pairs are produced internally with RK45 through the same source (via
+/// the teacher store), and every generation chunk and shuffled minibatch
+/// is re-bound to its rows' conditioning — pair i always sees label i.
+pub fn refine_with(
+    src: &dyn DistillField,
+    solver: &NsSolver,
+    dim: usize,
+    cfg: &RefineConfig,
+) -> Result<(NsSolver, RefineReport)> {
     let n = solver.nfe();
-    let mut rng = Pcg32::seeded(cfg.seed);
+    // distinct stream from the teacher's noise draws — perturbation
+    // signs and minibatch picks must be independent of the pair data
+    // (SPSA's gradient estimate assumes it), same discipline as the
+    // Adam trainer's rng
+    let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(0x05b5_a5ee));
 
     // GT pairs through the deployed field
-    let x0 = rng.normal_vec(cfg.pairs * dim);
-    let (x1, gt_nfe) = rk45(field, &x0, &Rk45Opts::default())?;
-    let mut nfe_spent = gt_nfe;
+    let teacher = TeacherSet::generate(src, dim, cfg.pairs, cfg.seed, 1)?;
+    let full = src.full();
+    let (x0, x1) = (&teacher.x0, &teacher.x1);
+    let mut nfe_spent = teacher.gt_evals as usize;
 
     let mut theta = pack(solver);
     let p = theta.len();
-    let initial_psnr =
-        -10.0 * psnr_loss(solver, field, &x0, &x1, dim)? / std::f64::consts::LN_10
-            + 10.0 * (4f64).log10();
-    let mut best = (theta.clone(), f64::INFINITY);
+    let init_loss = sample_loss(solver, full, x0, x1, dim)?;
+    nfe_spent += n;
+    let initial_psnr = psnr_from_log_mse(init_loss);
+    // the init is the first checkpoint candidate: refinement can never
+    // return (or --register publish) a solver worse than what it
+    // started from — same guarantee as the Adam trainer
+    let mut best = (theta.clone(), init_loss);
+    let (mut xb0, mut xb1) = (Vec::new(), Vec::new());
 
     for k in 0..cfg.iters {
-        // minibatch of pairs
+        // unbiased minibatch: a shuffled index set, not a contiguous
+        // window (shared with the Adam trainer), bound to its own labels
         let bsz = cfg.batch.min(cfg.pairs);
-        let start = rng.below(cfg.pairs - bsz + 1);
-        let xb0 = &x0[start * dim..(start + bsz) * dim];
-        let xb1 = &x1[start * dim..(start + bsz) * dim];
+        let idx = sample_indices(&mut rng, cfg.pairs, bsz);
+        teacher.gather(&idx, &mut xb0, &mut xb1);
+        let bfield = src.bind_rows(&idx)?;
 
         let ck = cfg.perturb / ((k + 1) as f64).powf(0.101);
         let ak = cfg.step / ((k + 1) as f64 + 10.0).powf(0.602);
@@ -128,8 +112,8 @@ pub fn refine(
             (0..p).map(|_| if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 }).collect();
         let theta_p: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t + ck * d).collect();
         let theta_m: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t - ck * d).collect();
-        let lp = psnr_loss(&unpack(&theta_p, n), field, xb0, xb1, dim)?;
-        let lm = psnr_loss(&unpack(&theta_m, n), field, xb0, xb1, dim)?;
+        let lp = sample_loss(&unpack(&theta_p, n), bfield.as_ref(), &xb0, &xb1, dim)?;
+        let lm = sample_loss(&unpack(&theta_m, n), bfield.as_ref(), &xb0, &xb1, dim)?;
         nfe_spent += 2 * n;
         let g_scale = (lp - lm) / (2.0 * ck);
         for (t, d) in theta.iter_mut().zip(&delta) {
@@ -137,7 +121,7 @@ pub fn refine(
         }
         // track best on the full pair set every few iters
         if k % 10 == 9 || k + 1 == cfg.iters {
-            let l = psnr_loss(&unpack(&theta, n), field, &x0, &x1, dim)?;
+            let l = sample_loss(&unpack(&theta, n), full, x0, x1, dim)?;
             nfe_spent += n;
             if l < best.1 {
                 best = (theta.clone(), l);
@@ -146,11 +130,16 @@ pub fn refine(
     }
     let refined = unpack(&best.0, n);
     refined.validate()?;
-    let final_psnr =
-        -10.0 * best.1 / std::f64::consts::LN_10 + 10.0 * (4f64).log10();
+    let final_psnr = psnr_from_log_mse(best.1);
     Ok((
         refined,
-        RefineReport { initial_psnr, final_psnr, iters: cfg.iters, nfe_spent },
+        RefineReport {
+            initial_psnr,
+            final_psnr,
+            iters: cfg.iters,
+            nfe_spent,
+            gt_nfe: teacher.gt_nfe,
+        },
     ))
 }
 
@@ -160,18 +149,6 @@ mod tests {
     use crate::solver::field::GaussianTargetField;
     use crate::solver::scheduler::Scheduler;
     use crate::solver::taxonomy::euler_ns;
-
-    #[test]
-    fn pack_unpack_roundtrip() {
-        let s = euler_ns(&[0.0, 0.2, 0.55, 1.0]);
-        let theta = pack(&s);
-        let s2 = unpack(&theta, 3);
-        for (a, b) in s.times.iter().zip(&s2.times) {
-            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
-        }
-        assert_eq!(s.a, s2.a);
-        assert_eq!(s.b, s2.b);
-    }
 
     #[test]
     fn refine_improves_euler_on_gaussian_field() {

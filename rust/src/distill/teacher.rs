@@ -1,0 +1,474 @@
+//! Teacher-trajectory store: RK45 ground-truth `(x0, x1)` pairs generated
+//! once through the deployed field, cached to disk, and shared by every
+//! distillation run whose `(dim, pairs, seed, scope)` key matches — the
+//! caller-supplied `scope` string encodes whatever else the pairs depend
+//! on (model name, guidance, label draw), so a cache file is never
+//! silently reused across fields it wasn't generated through.
+//!
+//! Generation fans out across threads in **fixed-size chunks**
+//! ([`GT_CHUNK`] rows per RK45 call): the adaptive step control sees the
+//! same batches regardless of parallelism, so teacher sets are
+//! bit-identical for any `threads` value (pinned by a unit test). Each
+//! chunk is integrated through the conditioning of its own rows
+//! ([`DistillField::bind_rows`]), so label-conditioned model fields see
+//! the right labels per row — the same mechanism the trainer uses for
+//! unbiased shuffled minibatches ([`sample_indices`]).
+
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::runtime::model_field::{LoadedModel, ModelField};
+use crate::solver::field::Field;
+use crate::solver::rk45::{rk45, Rk45Opts};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Rows integrated per RK45 call during teacher generation. Fixed (never
+/// derived from the thread count) so results don't depend on
+/// parallelism: RK45 shares one adaptive step across the rows of a call,
+/// so changing the chunking would change the ground truth itself.
+pub const GT_CHUNK: usize = 8;
+
+/// A velocity field together with the per-row conditioning needed to
+/// evaluate arbitrary row subsets of a teacher set — the seam between
+/// the distillation loop (which thinks in pair indices) and the field
+/// (which may carry per-row labels).
+pub trait DistillField: Sync {
+    /// The field bound to the full teacher set (row i ↔ pair i).
+    fn full(&self) -> &dyn Field;
+
+    /// Bind the conditioning of a row subset (a minibatch or a
+    /// generation chunk): row r of the returned field must see the
+    /// conditioning of set row `idx[r]`.
+    fn bind_rows(&self, idx: &[usize]) -> Result<Box<dyn Field + '_>>;
+}
+
+/// Forwarding wrapper so `bind_rows` can hand out a borrow of an
+/// unconditioned field as a boxed `Field`.
+struct Borrowed<'a>(&'a dyn Field);
+
+impl Field for Borrowed<'_> {
+    fn dim(&self) -> usize {
+        self.0.dim()
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        self.0.eval(t, x)
+    }
+
+    fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.0.eval_into(t, x, out)
+    }
+
+    fn forwards_per_eval(&self) -> usize {
+        self.0.forwards_per_eval()
+    }
+
+    fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
+        self.0.jvp(t, x, v, dt)
+    }
+}
+
+/// Conditioning-free fields (the analytic/test fields): every row subset
+/// sees the same field.
+pub struct UniformField<'a>(pub &'a dyn Field);
+
+impl DistillField for UniformField<'_> {
+    fn full(&self) -> &dyn Field {
+        self.0
+    }
+
+    fn bind_rows(&self, _idx: &[usize]) -> Result<Box<dyn Field + '_>> {
+        Ok(Box::new(Borrowed(self.0)))
+    }
+}
+
+/// A loaded model plus per-pair labels and guidance — the serving-side
+/// conditioning of a teacher set drawn over a label distribution.
+/// `bind_rows` re-binds the cached `LoadedModel` to the gathered labels
+/// (an `Arc` bump plus one small vec; no recompilation).
+pub struct ConditionedModel {
+    full: ModelField,
+}
+
+impl ConditionedModel {
+    pub fn new(model: Arc<LoadedModel>, labels: Vec<i32>, guidance: f32) -> ConditionedModel {
+        ConditionedModel { full: model.bind(labels, guidance) }
+    }
+
+    pub fn labels(&self) -> &[i32] {
+        &self.full.labels
+    }
+}
+
+impl DistillField for ConditionedModel {
+    fn full(&self) -> &dyn Field {
+        &self.full
+    }
+
+    fn bind_rows(&self, idx: &[usize]) -> Result<Box<dyn Field + '_>> {
+        let labels = idx
+            .iter()
+            .map(|&i| {
+                self.full
+                    .labels
+                    .get(i)
+                    .copied()
+                    .with_context(|| format!("pair index {i} out of range"))
+            })
+            .collect::<Result<Vec<i32>>>()?;
+        Ok(Box::new(self.full.model().clone().bind(labels, self.full.guidance)))
+    }
+}
+
+/// The cached ground-truth pair set.
+pub struct TeacherSet {
+    pub dim: usize,
+    pub pairs: usize,
+    pub seed: u64,
+    /// Caller-supplied cache-key component for everything the pairs
+    /// depend on beyond `(dim, pairs, seed)` — typically
+    /// `"model|w=guidance"`. Empty for in-memory (uncached) sets.
+    pub scope: String,
+    /// Noise inputs, row-major `[pairs, dim]`.
+    pub x0: Vec<f32>,
+    /// RK45 endpoints, row-major `[pairs, dim]`.
+    pub x1: Vec<f32>,
+    /// Total RK45 `eval` calls spent generating the set (each call
+    /// covers one chunk of up to [`GT_CHUNK`] rows).
+    pub gt_evals: u64,
+    /// Mean RK45 NFE per trajectory (rows of a chunk share the adaptive
+    /// steps, so per-trajectory NFE equals the chunk's eval count).
+    pub gt_nfe: u64,
+}
+
+fn run_chunk(
+    src: &dyn DistillField,
+    dim: usize,
+    opts: &Rk45Opts,
+    chunk: usize,
+    xc0: &[f32],
+    xc1: &mut [f32],
+) -> Result<usize> {
+    let rows = xc1.len() / dim;
+    let idx: Vec<usize> = (chunk * GT_CHUNK..chunk * GT_CHUNK + rows).collect();
+    let field = src.bind_rows(&idx)?;
+    let (out, nfe) = rk45(field.as_ref(), xc0, opts)?;
+    xc1.copy_from_slice(&out);
+    Ok(nfe)
+}
+
+impl TeacherSet {
+    /// Generate `pairs` ground-truth pairs through `src`, fanning the
+    /// fixed-size chunks out over up to `threads` worker threads.
+    pub fn generate(
+        src: &dyn DistillField,
+        dim: usize,
+        pairs: usize,
+        seed: u64,
+        threads: usize,
+    ) -> Result<TeacherSet> {
+        anyhow::ensure!(pairs > 0, "teacher set needs at least one pair");
+        let mut rng = Pcg32::seeded(seed);
+        let x0 = rng.normal_vec(pairs * dim);
+        let mut x1 = vec![0f32; pairs * dim];
+        let opts = Rk45Opts::default();
+        let nchunks = (pairs + GT_CHUNK - 1) / GT_CHUNK;
+        let workers = threads.max(1).min(nchunks);
+
+        let mut gt_evals = 0u64;
+        if workers <= 1 {
+            for (ci, (xc0, xc1)) in
+                x0.chunks(GT_CHUNK * dim).zip(x1.chunks_mut(GT_CHUNK * dim)).enumerate()
+            {
+                gt_evals += run_chunk(src, dim, &opts, ci, xc0, xc1)? as u64;
+            }
+        } else {
+            let jobs: Mutex<Vec<(usize, &[f32], &mut [f32])>> = Mutex::new(
+                x0.chunks(GT_CHUNK * dim)
+                    .zip(x1.chunks_mut(GT_CHUNK * dim))
+                    .enumerate()
+                    .map(|(ci, (a, b))| (ci, a, b))
+                    .collect(),
+            );
+            let evals = AtomicU64::new(0);
+            let errors: Mutex<Vec<anyhow::Error>> = Mutex::new(Vec::new());
+            std::thread::scope(|s| {
+                for _ in 0..workers {
+                    s.spawn(|| loop {
+                        let job = jobs.lock().unwrap().pop();
+                        let (ci, xc0, xc1) = match job {
+                            Some(j) => j,
+                            None => break,
+                        };
+                        match run_chunk(src, dim, &opts, ci, xc0, xc1) {
+                            Ok(nfe) => {
+                                evals.fetch_add(nfe as u64, Ordering::Relaxed);
+                            }
+                            Err(e) => {
+                                errors.lock().unwrap().push(e);
+                                break;
+                            }
+                        }
+                    });
+                }
+            });
+            if let Some(e) = errors.into_inner().unwrap().pop() {
+                return Err(e.context("teacher-trajectory generation"));
+            }
+            gt_evals = evals.into_inner();
+        }
+        Ok(TeacherSet {
+            dim,
+            pairs,
+            seed,
+            scope: String::new(),
+            x0,
+            x1,
+            gt_evals,
+            gt_nfe: gt_evals / nchunks as u64,
+        })
+    }
+
+    /// Load a cached set if it matches `(dim, pairs, seed, scope)`
+    /// exactly — any mismatch (including the field scope) misses, so a
+    /// cache generated through one model/guidance never trains another.
+    pub fn load_cached(
+        path: &Path,
+        dim: usize,
+        pairs: usize,
+        seed: u64,
+        scope: &str,
+    ) -> Option<TeacherSet> {
+        let text = std::fs::read_to_string(path).ok()?;
+        let j = Json::parse(&text).ok()?;
+        let (cdim, cpairs) = (j.get("dim").as_usize()?, j.get("pairs").as_usize()?);
+        let cseed = j.get("seed").as_f64()? as u64;
+        let cscope = j.get("scope").as_str().unwrap_or("");
+        if cdim != dim || cpairs != pairs || cseed != seed || cscope != scope {
+            return None;
+        }
+        let x0 = j.get("x0").as_f32_vec()?;
+        let x1 = j.get("x1").as_f32_vec()?;
+        if x0.len() != pairs * dim || x1.len() != pairs * dim {
+            return None;
+        }
+        Some(TeacherSet {
+            dim,
+            pairs,
+            seed,
+            scope: scope.to_string(),
+            x0,
+            x1,
+            gt_evals: j.get("gt_evals").as_f64().unwrap_or(0.0) as u64,
+            gt_nfe: j.get("gt_nfe").as_f64().unwrap_or(0.0) as u64,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let j = Json::obj(vec![
+            ("dim", Json::Num(self.dim as f64)),
+            ("pairs", Json::Num(self.pairs as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("scope", Json::Str(self.scope.clone())),
+            ("gt_evals", Json::Num(self.gt_evals as f64)),
+            ("gt_nfe", Json::Num(self.gt_nfe as f64)),
+            ("x0", Json::arr_f32(&self.x0)),
+            ("x1", Json::arr_f32(&self.x1)),
+        ]);
+        std::fs::write(path, j.to_string())
+            .with_context(|| format!("writing teacher cache {}", path.display()))
+    }
+
+    /// Cache-or-generate: the "generate once" entry the trainer uses.
+    /// `scope` joins the cache key (see [`TeacherSet::scope`]).
+    pub fn load_or_generate(
+        cache: Option<&Path>,
+        src: &dyn DistillField,
+        dim: usize,
+        pairs: usize,
+        seed: u64,
+        threads: usize,
+        scope: &str,
+    ) -> Result<TeacherSet> {
+        if let Some(path) = cache {
+            if let Some(set) = Self::load_cached(path, dim, pairs, seed, scope) {
+                return Ok(set);
+            }
+        }
+        let mut set = Self::generate(src, dim, pairs, seed, threads)?;
+        set.scope = scope.to_string();
+        if let Some(path) = cache {
+            set.save(path)?;
+        }
+        Ok(set)
+    }
+
+    /// Gather the pairs `idx` into contiguous row-major minibatch
+    /// buffers (reused across iterations by the caller).
+    pub fn gather(&self, idx: &[usize], xb0: &mut Vec<f32>, xb1: &mut Vec<f32>) {
+        xb0.clear();
+        xb1.clear();
+        for &i in idx {
+            xb0.extend_from_slice(&self.x0[i * self.dim..(i + 1) * self.dim]);
+            xb1.extend_from_slice(&self.x1[i * self.dim..(i + 1) * self.dim]);
+        }
+    }
+}
+
+/// `bsz` *distinct* indices drawn uniformly from `[0, total)` via a
+/// partial Fisher-Yates shuffle — the unbiased minibatch sampler shared
+/// by the Adam trainer and the SPSA refiner (whose contiguous windows
+/// used to bias every gradient estimate toward pair order).
+pub fn sample_indices(rng: &mut Pcg32, total: usize, bsz: usize) -> Vec<usize> {
+    let bsz = bsz.min(total);
+    let mut idx: Vec<usize> = (0..total).collect();
+    for i in 0..bsz {
+        let j = i + rng.below(total - i);
+        idx.swap(i, j);
+    }
+    idx.truncate(bsz);
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::field::GaussianTargetField;
+    use crate::solver::scheduler::Scheduler;
+
+    fn test_field() -> GaussianTargetField {
+        GaussianTargetField { dim: 3, sched: Scheduler::FmOt, mu: 0.3, s1: 0.4 }
+    }
+
+    #[test]
+    fn generation_is_thread_count_invariant() {
+        let f = test_field();
+        let src = UniformField(&f);
+        let a = TeacherSet::generate(&src, 3, 20, 11, 1).unwrap();
+        let b = TeacherSet::generate(&src, 3, 20, 11, 4).unwrap();
+        assert_eq!(a.x0, b.x0);
+        assert_eq!(
+            a.x1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.x1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "teacher x1 must not depend on the thread count"
+        );
+        assert_eq!(a.gt_evals, b.gt_evals);
+        assert!(a.gt_nfe > 0);
+    }
+
+    #[test]
+    fn cache_roundtrip_and_mismatch_rejection() {
+        let f = test_field();
+        let src = UniformField(&f);
+        let mut set = TeacherSet::generate(&src, 3, 9, 5, 1).unwrap();
+        set.scope = "model-a|w=0.5".into();
+        let path = std::env::temp_dir()
+            .join(format!("bns-teacher-{}.json", std::process::id()));
+        set.save(&path).unwrap();
+        let back = TeacherSet::load_cached(&path, 3, 9, 5, "model-a|w=0.5").unwrap();
+        assert_eq!(back.x0, set.x0);
+        assert_eq!(back.x1, set.x1);
+        assert_eq!(back.gt_evals, set.gt_evals);
+        assert_eq!(back.scope, set.scope);
+        // any key mismatch must miss (forcing regeneration) — including
+        // the scope, so another model/guidance never reuses these pairs
+        assert!(TeacherSet::load_cached(&path, 3, 9, 6, "model-a|w=0.5").is_none());
+        assert!(TeacherSet::load_cached(&path, 3, 8, 5, "model-a|w=0.5").is_none());
+        assert!(TeacherSet::load_cached(&path, 2, 9, 5, "model-a|w=0.5").is_none());
+        assert!(TeacherSet::load_cached(&path, 3, 9, 5, "model-b|w=0.5").is_none());
+        assert!(TeacherSet::load_cached(&path, 3, 9, 5, "").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn sample_indices_distinct_in_range() {
+        let mut rng = Pcg32::seeded(3);
+        for _ in 0..50 {
+            let idx = sample_indices(&mut rng, 13, 6);
+            assert_eq!(idx.len(), 6);
+            let mut seen = [false; 13];
+            for &i in &idx {
+                assert!(i < 13);
+                assert!(!seen[i], "duplicate index {i}");
+                seen[i] = true;
+            }
+        }
+        // bsz == total -> a permutation
+        let idx = sample_indices(&mut rng, 7, 7);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..7).collect::<Vec<_>>());
+        // bsz > total clamps
+        assert_eq!(sample_indices(&mut rng, 3, 9).len(), 3);
+    }
+
+    #[test]
+    fn gather_picks_the_right_rows() {
+        let set = TeacherSet {
+            dim: 2,
+            pairs: 3,
+            seed: 0,
+            scope: String::new(),
+            x0: vec![0.0, 1.0, 10.0, 11.0, 20.0, 21.0],
+            x1: vec![0.5, 1.5, 10.5, 11.5, 20.5, 21.5],
+            gt_evals: 0,
+            gt_nfe: 0,
+        };
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        set.gather(&[2, 0], &mut a, &mut b);
+        assert_eq!(a, vec![20.0, 21.0, 0.0, 1.0]);
+        assert_eq!(b, vec![20.5, 21.5, 0.5, 1.5]);
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+    use crate::bench_util::{stub_store, StubModel};
+    use crate::runtime::Runtime;
+
+    /// `bind_rows` must align labels with the gathered rows — the bug
+    /// class the `DistillField` seam exists to prevent.
+    #[test]
+    fn conditioned_model_binds_matching_labels() {
+        let (store, dir) = stub_store(
+            "teacher-cond",
+            &[StubModel {
+                name: "m",
+                dim: 2,
+                num_classes: 4,
+                forwards_per_eval: 1,
+                k: -0.4,
+                c: 0.0,
+                label_scale: 0.5,
+                cost: 1,
+                buckets: &[4, 8],
+            }],
+        )
+        .unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let info = store.model("m").unwrap();
+        let model = Arc::new(crate::runtime::LoadedModel::load(&rt, info).unwrap());
+        let labels = vec![0, 1, 2, 3, 0, 1, 2, 3];
+        let src = ConditionedModel::new(model, labels, 0.0);
+        let x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.37).sin()).collect();
+        let full = src.full().eval(0.3, &x).unwrap();
+        let idx = [5usize, 2, 7];
+        let sub = src.bind_rows(&idx).unwrap();
+        let xs: Vec<f32> = idx.iter().flat_map(|&i| x[i * 2..(i + 1) * 2].to_vec()).collect();
+        let out = sub.eval(0.3, &xs).unwrap();
+        for (r, &i) in idx.iter().enumerate() {
+            assert_eq!(
+                out[r * 2..(r + 1) * 2],
+                full[i * 2..(i + 1) * 2],
+                "row {r} (set row {i}) saw the wrong label"
+            );
+        }
+        assert!(src.bind_rows(&[99]).is_err(), "out-of-range index must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

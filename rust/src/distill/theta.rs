@@ -1,0 +1,170 @@
+//! The shared theta reparameterization of eq. 12 with pinned endpoints —
+//! one parameter space for every rust-side optimizer (the first-order
+//! Adam trainer and the zeroth-order SPSA refiner), mirroring the python
+//! trainer so solvers stay valid by construction:
+//!
+//!   theta = [ log-increments z_0..z_{n-1} | a_0..a_{n-1} | b rows ]
+//!
+//! Times are recovered by normalizing the positive increments e^{z_k}
+//! to sum to one (softmax-style), so `times` is always strictly
+//! increasing with T_0 = 0 and T_n = 1. `a` and `b` map through
+//! unchanged. `grad_to_theta` is the exact chain rule of `unpack`,
+//! used by the analytic trainer to pull solver-space gradients back
+//! into theta space.
+
+use crate::solver::ns::NsSolver;
+
+/// Parameters in theta for an NFE-n solver: n increments + n a's +
+/// n(n+1)/2 b entries.
+pub fn theta_len(n: usize) -> usize {
+    2 * n + n * (n + 1) / 2
+}
+
+pub fn pack(solver: &NsSolver) -> Vec<f64> {
+    let n = solver.nfe();
+    let mut theta = Vec::with_capacity(theta_len(n));
+    for w in solver.times.windows(2) {
+        theta.push((w[1] - w[0]).max(1e-9).ln());
+    }
+    theta.extend_from_slice(&solver.a);
+    for row in &solver.b {
+        theta.extend_from_slice(row);
+    }
+    theta
+}
+
+pub fn unpack(theta: &[f64], n: usize) -> NsSolver {
+    let incs: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
+    let total: f64 = incs.iter().sum();
+    let mut times = Vec::with_capacity(n + 1);
+    times.push(0.0);
+    let mut acc = 0.0;
+    for inc in &incs {
+        acc += inc / total;
+        times.push(acc.min(1.0));
+    }
+    times[n] = 1.0;
+    let a = theta[n..2 * n].to_vec();
+    let mut b = Vec::with_capacity(n);
+    let mut off = 2 * n;
+    for i in 0..n {
+        b.push(theta[off..off + i + 1].to_vec());
+        off += i + 1;
+    }
+    NsSolver { times, a, b }
+}
+
+/// Chain rule of `unpack`: map a gradient in solver space — `d_times`
+/// over `times[0..=n]` (endpoints pinned, so entries 0 and n are
+/// ignored), `d_a`, and the lower-triangular `d_b` — into theta space.
+///
+/// With w_k = e^{z_k}, S = Σ w and T_i = (Σ_{k<i} w_k)/S:
+///   ∂T_i/∂z_m = w_m · (1[m < i] − T_i) / S,
+/// and a/b pass through unchanged.
+pub fn grad_to_theta(
+    theta: &[f64],
+    n: usize,
+    d_times: &[f64],
+    d_a: &[f64],
+    d_b: &[Vec<f64>],
+) -> Vec<f64> {
+    debug_assert_eq!(theta.len(), theta_len(n));
+    debug_assert_eq!(d_times.len(), n + 1);
+    debug_assert_eq!(d_a.len(), n);
+    let w: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
+    let total: f64 = w.iter().sum();
+    let mut ts = vec![0.0; n + 1];
+    let mut acc = 0.0;
+    for i in 0..n {
+        acc += w[i] / total;
+        ts[i + 1] = acc.min(1.0);
+    }
+    let mut g = vec![0.0; theta.len()];
+    for (m, gm) in g.iter_mut().enumerate().take(n) {
+        let mut s = 0.0;
+        for i in 1..n {
+            // T_n is pinned to 1 by unpack; its derivative is zero.
+            let ind = if m < i { 1.0 } else { 0.0 };
+            s += d_times[i] * w[m] * (ind - ts[i]) / total;
+        }
+        *gm = s;
+    }
+    g[n..2 * n].copy_from_slice(d_a);
+    let mut off = 2 * n;
+    for row in d_b {
+        g[off..off + row.len()].copy_from_slice(row);
+        off += row.len();
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solver::taxonomy::euler_ns;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let s = euler_ns(&[0.0, 0.2, 0.55, 1.0]);
+        let theta = pack(&s);
+        assert_eq!(theta.len(), theta_len(3));
+        let s2 = unpack(&theta, 3);
+        for (a, b) in s.times.iter().zip(&s2.times) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
+        assert_eq!(s.a, s2.a);
+        assert_eq!(s.b, s2.b);
+    }
+
+    #[test]
+    fn unpack_always_valid() {
+        // arbitrary theta (including extreme increments) must give a
+        // valid solver: strictly increasing times, pinned endpoints
+        let n = 5;
+        let mut theta = vec![0.0; theta_len(n)];
+        for (i, t) in theta.iter_mut().enumerate() {
+            *t = ((i * 37 % 17) as f64 - 8.0) * 0.5;
+        }
+        unpack(&theta, n).validate().unwrap();
+    }
+
+    /// The time part of `grad_to_theta` is the exact Jacobian of the
+    /// times produced by `unpack` (checked against central differences).
+    #[test]
+    fn time_chain_rule_matches_finite_differences() {
+        let n = 4;
+        let s = euler_ns(&[0.0, 0.1, 0.35, 0.7, 1.0]);
+        let theta = pack(&s);
+        // probe dL/dz for the synthetic loss L = Σ_i c_i · T_i
+        let c = [0.0, 0.3, -0.7, 1.1, 0.0];
+        let d_a = vec![0.0; n];
+        let d_b: Vec<Vec<f64>> = (0..n).map(|i| vec![0.0; i + 1]).collect();
+        let g = grad_to_theta(&theta, n, &c, &d_a, &d_b);
+        let h = 1e-6;
+        for m in 0..n {
+            let mut tp = theta.clone();
+            tp[m] += h;
+            let mut tm = theta.clone();
+            tm[m] -= h;
+            let lp: f64 =
+                unpack(&tp, n).times.iter().zip(&c).map(|(t, ci)| t * ci).sum();
+            let lm: f64 =
+                unpack(&tm, n).times.iter().zip(&c).map(|(t, ci)| t * ci).sum();
+            let fd = (lp - lm) / (2.0 * h);
+            assert!((g[m] - fd).abs() < 1e-6, "z_{m}: {} vs {}", g[m], fd);
+        }
+    }
+
+    #[test]
+    fn a_and_b_pass_through() {
+        let n = 3;
+        let s = euler_ns(&[0.0, 0.4, 0.8, 1.0]);
+        let theta = pack(&s);
+        let d_times = vec![0.0; n + 1];
+        let d_a = vec![1.0, 2.0, 3.0];
+        let d_b = vec![vec![4.0], vec![5.0, 6.0], vec![7.0, 8.0, 9.0]];
+        let g = grad_to_theta(&theta, n, &d_times, &d_a, &d_b);
+        assert_eq!(&g[n..2 * n], &d_a[..]);
+        assert_eq!(&g[2 * n..], &[4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+    }
+}

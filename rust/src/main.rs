@@ -24,9 +24,15 @@ USAGE:
   bns-serve compare --model NAME [--nfe N] [--guidance W] [--artifacts DIR]
                     (PSNR of every solver vs RK45 ground truth)
   bns-serve distill --model NAME --nfe N [--guidance W] [--iters K]
-                    [--from euler|midpoint|<artifact>] [--out FILE]
-                    (rust-side SPSA refinement of NS coefficients against
-                     the deployed field — no python needed)
+                    [--init euler|midpoint|rk4|auto|<artifact>] [--out FILE]
+                    [--method adam|spsa] [--pairs P] [--val-pairs V]
+                    [--batch B] [--lr R] [--seed S] [--threads T]
+                    [--lanes L] [--teacher-cache FILE] [--register]
+                    (rust-native solver distillation against the deployed
+                     field — first-order Adam on analytic gradients by
+                     default, zeroth-order SPSA via --method spsa; no
+                     python needed. --register adds the artifact to the
+                     store so `serve`/`sample` route to it immediately)
   bns-serve solvers [--artifacts DIR]    list distilled solver artifacts
   bns-serve models  [--artifacts DIR]    list AOT model artifacts
 ";
@@ -71,6 +77,37 @@ fn load_store(flags: &HashMap<String, String>) -> Result<Arc<ArtifactStore>> {
     Ok(Arc::new(ArtifactStore::load(&dir).with_context(|| {
         format!("loading artifacts from {} (run `make artifacts` first)", dir.display())
     })?))
+}
+
+/// Shared tail of the `distill` subcommand: write the artifact
+/// (coefficients + full meta) and, under `--register`, add it to the
+/// store's manifest so `serve`/`sample` route to it immediately.
+fn finish_distill(
+    store: &ArtifactStore,
+    flags: &HashMap<String, String>,
+    model: &str,
+    guidance: f32,
+    nfe: usize,
+    solver: &bns_serve::solver::NsSolver,
+    meta: &bns_serve::solver::ns::SolverMeta,
+) -> Result<()> {
+    let default_name = format!("{model}_w{guidance}_nfe{nfe}_bns");
+    let out = flags.get("out").cloned().unwrap_or(format!("{default_name}.json"));
+    std::fs::write(&out, solver.to_json_with_meta(meta).to_string())?;
+    println!("wrote {out}");
+    if flags.contains_key("register") {
+        let name = std::path::Path::new(&out)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or(&default_name)
+            .to_string();
+        bns_serve::bench_util::add_solver_artifact(&store.root, &name, solver, meta)?;
+        println!(
+            "registered '{name}' in {} (route via --solver {name} or auto at nfe={nfe})",
+            store.root.join("manifest.json").display()
+        );
+    }
+    Ok(())
 }
 
 fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
@@ -172,36 +209,111 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
         }
         "distill" => {
             let store = load_store(flags)?;
-            let rt = Arc::new(Runtime::cpu()?);
             let model = flags.get("model").context("--model required")?.clone();
             let nfe: usize = flags.get("nfe").context("--nfe required")?.parse()?;
             let guidance: f32 =
                 flags.get("guidance").map(|s| s.parse()).transpose()?.unwrap_or(0.0);
-            let iters: usize = flags.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(120);
+            let iters: usize = flags.get("iters").map(|s| s.parse()).transpose()?.unwrap_or(300);
+            let pairs: usize = flags.get("pairs").map(|s| s.parse()).transpose()?.unwrap_or(32);
+            let val_pairs: usize =
+                flags.get("val-pairs").map(|s| s.parse()).transpose()?.unwrap_or(16);
+            let batch: usize = flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(16);
+            let lr: f64 = flags.get("lr").map(|s| s.parse()).transpose()?.unwrap_or(8e-3);
+            let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(7);
+            let threads: usize =
+                flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(4);
+            let lanes: usize = flags.get("lanes").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let method = flags.get("method").map(|s| s.as_str()).unwrap_or("adam");
+            let init = flags
+                .get("init")
+                .or_else(|| flags.get("from"))
+                .map(|s| s.as_str())
+                .unwrap_or("auto");
+            let rt = Arc::new(Runtime::with_lanes(lanes)?);
             let info = store.model(&model)?.clone();
-            let init = match flags.get("from").map(|s| s.as_str()).unwrap_or("midpoint") {
-                "euler" => bns_serve::solver::taxonomy::euler_ns(
-                    &bns_serve::solver::generic::uniform_times(nfe),
-                ),
-                "midpoint" if nfe % 2 == 0 => bns_serve::solver::taxonomy::midpoint_ns(nfe),
-                name if name.contains("_nfe") => store.solver(name)?.solver.clone(),
-                _ => bns_serve::solver::taxonomy::euler_ns(
-                    &bns_serve::solver::generic::uniform_times(nfe),
-                ),
+            // one conditioned source recipe for both optimizers: labels
+            // cycle the model's classes, one pair per row
+            let make_src = |count: usize| -> Result<bns_serve::distill::ConditionedModel> {
+                let labels: Vec<i32> =
+                    (0..count).map(|i| (i % info.num_classes) as i32).collect();
+                let loaded = Arc::new(bns_serve::runtime::LoadedModel::load(&rt, &info)?);
+                Ok(bns_serve::distill::ConditionedModel::new(loaded, labels, guidance))
             };
-            let labels: Vec<i32> = (0..16).map(|i| (i % info.num_classes) as i32).collect();
-            let field = bns_serve::runtime::ModelField::new(&rt, &info, labels, guidance)?;
-            let cfg = bns_serve::distill::RefineConfig { iters, pairs: 16, ..Default::default() };
-            println!("refining {model} w={guidance} nfe={nfe} for {iters} SPSA iters...");
-            let (refined, report) = bns_serve::distill::refine(&init, &field, info.dim, &cfg)?;
-            println!(
-                "psnr: {:.2} -> {:.2} dB  (nfe spent: {})",
-                report.initial_psnr, report.final_psnr, report.nfe_spent
-            );
-            if let Some(out) = flags.get("out") {
-                std::fs::write(out, refined.to_json().to_string())?;
-                println!("wrote {out}");
+
+            if method == "spsa" {
+                let init_solver = if init.contains("_nfe") {
+                    store.solver(init)?.solver.clone()
+                } else {
+                    bns_serve::solver::taxonomy::init_ns(init, nfe)?
+                };
+                let src = make_src(pairs)?;
+                let cfg = bns_serve::distill::RefineConfig { iters, pairs, batch, seed, ..Default::default() };
+                println!("refining {model} w={guidance} nfe={nfe} for {iters} SPSA iters...");
+                let (refined, report) =
+                    bns_serve::distill::refine_with(&src, &init_solver, info.dim, &cfg)?;
+                println!(
+                    "psnr: {:.2} -> {:.2} dB  (nfe spent: {})",
+                    report.initial_psnr, report.final_psnr, report.nfe_spent
+                );
+                let meta = bns_serve::solver::ns::SolverMeta {
+                    kind: "bns".into(),
+                    model: model.clone(),
+                    guidance: guidance as f64,
+                    sigma0: 1.0,
+                    init: init.to_string(),
+                    val_psnr: report.final_psnr,
+                    init_val_psnr: report.initial_psnr,
+                    iters: report.iters as u64,
+                    forwards: report.nfe_spent as u64,
+                    gt_nfe: report.gt_nfe,
+                };
+                finish_distill(&store, flags, &model, guidance, refined.nfe(), &refined, &meta)?;
+                return Ok(());
             }
+
+            // first-order path: teacher + minibatches conditioned per row
+            let src = make_src(pairs + val_pairs)?;
+            let cfg = bns_serve::distill::TrainConfig {
+                iters,
+                pairs,
+                val_pairs,
+                batch,
+                lr,
+                seed,
+                threads,
+                init: init.to_string(),
+                teacher_cache: flags.get("teacher-cache").map(std::path::PathBuf::from),
+                teacher_scope: format!("{model}|w={guidance}"),
+                ..Default::default()
+            };
+            println!(
+                "distilling {model} w={guidance} nfe={nfe}: {iters} Adam iters, \
+                 {pairs}+{val_pairs} teacher pairs, init={init}, {} lane(s), {threads} thread(s)...",
+                rt.num_lanes()
+            );
+            let t0 = std::time::Instant::now();
+            let (solver, report) = if init.contains("_nfe") {
+                let art = store.solver(init)?.clone();
+                bns_serve::distill::train_from(&src, info.dim, &art.solver, &art.name, &cfg)?
+            } else {
+                bns_serve::distill::train(&src, info.dim, nfe, &cfg)?
+            };
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "val psnr: {:.2} -> {:.2} dB  ({} iters in {:.1}s = {:.1} iters/s; \
+                 forwards {}, teacher nfe/traj {})",
+                report.init_val_psnr,
+                report.final_val_psnr,
+                report.iters,
+                secs,
+                report.iters as f64 / secs.max(1e-9),
+                report.forwards,
+                report.gt_nfe
+            );
+            let meta = report.meta(&model, guidance as f64);
+            // name by the solver's actual NFE (an artifact init may
+            // differ from --nfe)
+            finish_distill(&store, flags, &model, guidance, solver.nfe(), &solver, &meta)?;
             Ok(())
         }
         "solvers" => {

@@ -40,6 +40,48 @@ pub trait Field: Send + Sync {
     fn forwards_per_eval(&self) -> usize {
         1
     }
+
+    /// Directional derivative (JVP) of the field along the tangent
+    /// `(dt, v)`:
+    ///   d/dε u(t + ε·dt, x + ε·v) |_{ε=0},
+    /// batched row-major like `eval` (`v` has the same shape as `x`, `dt`
+    /// is a scalar time tangent shared by the batch).
+    ///
+    /// The first-order distillation trainer (`distill/grad.rs`) uses this
+    /// to propagate solver-parameter tangents through the field
+    /// dependence of later velocities, and time-grid gradients via the
+    /// `dt` component. The default is a central difference through `eval`
+    /// (two extra field evaluations — exact for affine fields such as the
+    /// stub backend's, O(ε²) otherwise); analytic fields override it with
+    /// closed forms. The perturbation direction is normalized so large
+    /// tangents never leave the linearization region, and `t ± h·dt` is
+    /// evaluated unclamped (h ≤ 1e-3, and pinned endpoint times never
+    /// carry a time tangent).
+    fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
+        anyhow::ensure!(v.len() == x.len(), "jvp tangent length {} != x length {}", v.len(), x.len());
+        let scale = v.iter().fold(dt.abs(), |m, &vi| m.max((vi as f64).abs()));
+        if scale == 0.0 {
+            return Ok(vec![0.0; x.len()]);
+        }
+        let h = 1e-3 / scale;
+        let xp: Vec<f32> = x
+            .iter()
+            .zip(v.iter())
+            .map(|(&xv, &vv)| (xv as f64 + h * vv as f64) as f32)
+            .collect();
+        let xm: Vec<f32> = x
+            .iter()
+            .zip(v.iter())
+            .map(|(&xv, &vv)| (xv as f64 - h * vv as f64) as f32)
+            .collect();
+        let up = self.eval(t + h * dt, &xp)?;
+        let um = self.eval(t - h * dt, &xm)?;
+        Ok(up
+            .iter()
+            .zip(um.iter())
+            .map(|(&a, &b)| ((a as f64 - b as f64) / (2.0 * h)) as f32)
+            .collect())
+    }
 }
 
 /// Counting wrapper: tracks evaluations (NFE) across a sampling run.
@@ -75,6 +117,14 @@ impl<'a> Field for CountingField<'a> {
 
     fn forwards_per_eval(&self) -> usize {
         self.inner.forwards_per_eval()
+    }
+
+    /// Counted as two evaluations — the finite-difference cost of the
+    /// default `jvp`. Closed-form overrides are cheaper, so this is a
+    /// conservative (upper-bound) accounting.
+    fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
+        self.count.fetch_add(2, std::sync::atomic::Ordering::Relaxed);
+        self.inner.jvp(t, x, v, dt)
     }
 }
 
@@ -186,6 +236,11 @@ impl Field for LinearField {
     fn eval(&self, _t: f64, x: &[f32]) -> Result<Vec<f32>> {
         Ok(x.iter().map(|&v| (self.k * v as f64 + self.c) as f32).collect())
     }
+
+    /// Closed form: ∂u/∂x = k (diagonal), ∂u/∂t = 0.
+    fn jvp(&self, _t: f64, _x: &[f32], v: &[f32], _dt: f64) -> Result<Vec<f32>> {
+        Ok(v.iter().map(|&vv| (self.k * vv as f64) as f32).collect())
+    }
 }
 
 impl LinearField {
@@ -210,6 +265,17 @@ impl Field for NonlinearField {
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
         Ok(x.iter()
             .map(|&v| ((3.0 * t).sin() * v as f64 + 0.3 * (v as f64).cos()) as f32)
+            .collect())
+    }
+
+    /// Closed form: ∂u/∂x = sin(3t) − 0.3 sin(x), ∂u/∂t = 3 cos(3t)·x.
+    fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
+        let (s3t, c3t) = (3.0 * t).sin_cos();
+        Ok(x.iter()
+            .zip(v.iter())
+            .map(|(&xv, &vv)| {
+                ((s3t - 0.3 * (xv as f64).sin()) * vv as f64 + 3.0 * c3t * xv as f64 * dt) as f32
+            })
             .collect())
     }
 }
@@ -246,6 +312,28 @@ impl Field for GaussianTargetField {
             })
             .collect())
     }
+
+    /// The field is affine in x: u_t(x) = A(t)·x + B(t). The spatial part
+    /// of the JVP is the closed form A(t)·v; the time part needs second
+    /// derivatives of the scheduler (unavailable), so it falls back to a
+    /// central difference of `eval` at fixed x — still exact in x.
+    fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
+        let (a, s) = (self.sched.alpha(t), self.sched.sigma(t));
+        let (da, ds) = (self.sched.dalpha(t), self.sched.dsigma(t));
+        let var = (a * self.s1).powi(2) + s * s;
+        let de1 = a * self.s1 * self.s1 / var; // dE[x1|x]/dx
+        let coef = da * de1 + ds * (1.0 - a * de1) / s.max(1e-9); // A(t)
+        let mut out: Vec<f32> = v.iter().map(|&vv| (coef * vv as f64) as f32).collect();
+        if dt != 0.0 {
+            let h = 1e-4;
+            let up = self.eval(t + h, x)?;
+            let um = self.eval(t - h, x)?;
+            for ((o, &p), &m) in out.iter_mut().zip(up.iter()).zip(um.iter()) {
+                *o += (((p as f64 - m as f64) / (2.0 * h)) * dt) as f32;
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +361,59 @@ mod tests {
         let mut b = vec![0f32; x.len()];
         cf.eval_into(0.4, &x, &mut b).unwrap();
         assert_eq!(a, b);
+        assert_eq!(cf.count(), 2);
+    }
+
+    /// Strips a field's `jvp` override so the trait's central-difference
+    /// default applies — lets tests pin closed forms against it.
+    struct FdOnly<'a>(&'a dyn Field);
+
+    impl Field for FdOnly<'_> {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+
+        fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+            self.0.eval(t, x)
+        }
+    }
+
+    #[test]
+    fn closed_form_jvp_matches_finite_differences() {
+        let lin = LinearField { dim: 3, k: -0.7, c: 0.2 };
+        let nonlin = NonlinearField { dim: 3 };
+        let gauss = GaussianTargetField { dim: 3, sched: Scheduler::FmOt, mu: 0.3, s1: 0.5 };
+        let fields: [&dyn Field; 3] = [&lin, &nonlin, &gauss];
+        let x = vec![0.4f32, -1.1, 0.9];
+        let v = vec![1.3f32, -0.5, 2.0];
+        for f in fields {
+            for dt in [0.0, 1.0, -0.5] {
+                let a = f.jvp(0.35, &x, &v, dt).unwrap();
+                let b = FdOnly(f).jvp(0.35, &x, &v, dt).unwrap();
+                for (u, w) in a.iter().zip(b.iter()) {
+                    assert!((u - w).abs() < 2e-2 * (1.0 + w.abs()), "{u} vs {w} (dt={dt})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jvp_zero_tangent_is_zero() {
+        let f = NonlinearField { dim: 2 };
+        let x = vec![0.5f32, -0.5];
+        let z = vec![0.0f32, 0.0];
+        // default impl short-circuits; closed form multiplies through
+        assert_eq!(FdOnly(&f).jvp(0.4, &x, &z, 0.0).unwrap(), z);
+        assert_eq!(f.jvp(0.4, &x, &z, 0.0).unwrap(), z);
+    }
+
+    #[test]
+    fn counting_field_counts_jvp_as_two_evals() {
+        let f = LinearField { dim: 2, k: -1.0, c: 0.0 };
+        let cf = CountingField::new(&f);
+        let x = vec![1.0f32, 2.0];
+        let v = vec![0.5f32, -0.5];
+        cf.jvp(0.3, &x, &v, 0.0).unwrap();
         assert_eq!(cf.count(), 2);
     }
 

@@ -217,6 +217,32 @@ impl NsSolver {
             ),
         ])
     }
+
+    /// Coefficients plus the full [`SolverMeta`] provenance — the
+    /// artifact format `from_json` reads back and the router's
+    /// `solvers_for` filters on. `to_json` alone drops every meta field,
+    /// so rust-side emission (the distill CLI, refine outputs) must use
+    /// this or the solver loses kind/model/guidance/val_psnr provenance.
+    pub fn to_json_with_meta(&self, meta: &SolverMeta) -> Json {
+        Json::obj(vec![
+            ("times", Json::arr_f64(&self.times)),
+            ("a", Json::arr_f64(&self.a)),
+            (
+                "b",
+                Json::Arr(self.b.iter().map(|row| Json::arr_f64(row)).collect()),
+            ),
+            ("kind", Json::Str(meta.kind.clone())),
+            ("model", Json::Str(meta.model.clone())),
+            ("guidance", Json::Num(meta.guidance)),
+            ("sigma0", Json::Num(meta.sigma0)),
+            ("init", Json::Str(meta.init.clone())),
+            ("val_psnr", Json::Num(meta.val_psnr)),
+            ("init_val_psnr", Json::Num(meta.init_val_psnr)),
+            ("iters", Json::Num(meta.iters as f64)),
+            ("forwards", Json::Num(meta.forwards as f64)),
+            ("gt_nfe", Json::Num(meta.gt_nfe as f64)),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -266,6 +292,36 @@ mod tests {
         let j = s.to_json().to_string();
         let (s2, _) = NsSolver::from_json_str(&j).unwrap();
         assert_eq!(s, s2);
+    }
+
+    #[test]
+    fn json_with_meta_roundtrip() {
+        let s = euler_ns(5);
+        let meta = SolverMeta {
+            kind: "bns".into(),
+            model: "img_fm_ot".into(),
+            guidance: 1.5,
+            sigma0: 0.75,
+            init: "midpoint".into(),
+            val_psnr: 37.25,
+            init_val_psnr: 31.5,
+            iters: 400,
+            forwards: 123_456,
+            gt_nfe: 512,
+        };
+        let j = s.to_json_with_meta(&meta).to_string();
+        let (s2, m2) = NsSolver::from_json_str(&j).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(m2.kind, meta.kind);
+        assert_eq!(m2.model, meta.model);
+        assert_eq!(m2.guidance, meta.guidance);
+        assert_eq!(m2.sigma0, meta.sigma0);
+        assert_eq!(m2.init, meta.init);
+        assert_eq!(m2.val_psnr, meta.val_psnr);
+        assert_eq!(m2.init_val_psnr, meta.init_val_psnr);
+        assert_eq!(m2.iters, meta.iters);
+        assert_eq!(m2.forwards, meta.forwards);
+        assert_eq!(m2.gt_nfe, meta.gt_nfe);
     }
 
     #[test]

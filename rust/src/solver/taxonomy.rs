@@ -11,6 +11,8 @@
 //! inclusion chain RK ⊂ ST-RK ⊂ NS, Multistep ⊂ ST-Multistep ⊂ NS,
 //! Exp-RK/Multistep ⊂ NS.
 
+use anyhow::{bail, Result};
+
 use super::ns::NsSolver;
 use super::scheduler::{Parametrization, Scheduler};
 
@@ -169,6 +171,37 @@ pub fn rk4_ns(nfe: usize) -> NsSolver {
     tr.finish(&x, 1.0)
 }
 
+/// §3.1 taxonomy-based initialization for distillation: a named
+/// classical family at this NFE, in NS-coefficient form. `"auto"` picks
+/// the strongest family the NFE admits — the same divisibility hierarchy
+/// the router's `Auto` fallback uses (RK4 when 4 | NFE, midpoint when
+/// 2 | NFE, Euler otherwise).
+pub fn init_ns(kind: &str, nfe: usize) -> Result<NsSolver> {
+    match kind {
+        "euler" => Ok(euler_ns(&super::generic::uniform_times(nfe))),
+        "midpoint" => {
+            if nfe % 2 != 0 {
+                bail!("midpoint init needs an even NFE (got {nfe})");
+            }
+            Ok(midpoint_ns(nfe))
+        }
+        "rk4" => {
+            if nfe % 4 != 0 {
+                bail!("rk4 init needs NFE divisible by 4 (got {nfe})");
+            }
+            Ok(rk4_ns(nfe))
+        }
+        "auto" | "" => Ok(if nfe % 4 == 0 {
+            rk4_ns(nfe)
+        } else if nfe % 2 == 0 {
+            midpoint_ns(nfe)
+        } else {
+            euler_ns(&super::generic::uniform_times(nfe))
+        }),
+        other => bail!("unknown distillation init '{other}' (euler|midpoint|rk4|auto)"),
+    }
+}
+
 pub fn ab2_ns(times: &[f64]) -> NsSolver {
     let mut tr = AffineTrace::new();
     let mut x = tr.x0();
@@ -321,6 +354,20 @@ mod tests {
                 assert_same(&ns, &direct, 1e-4);
             }
         }
+    }
+
+    #[test]
+    fn init_ns_resolves_families_and_divisibility() {
+        assert_eq!(init_ns("euler", 5).unwrap().nfe(), 5);
+        assert_eq!(init_ns("midpoint", 6).unwrap().nfe(), 6);
+        assert_eq!(init_ns("rk4", 8).unwrap().nfe(), 8);
+        assert!(init_ns("midpoint", 5).is_err());
+        assert!(init_ns("rk4", 6).is_err());
+        assert!(init_ns("nope", 4).is_err());
+        // auto follows the router's divisibility hierarchy
+        assert_eq!(init_ns("auto", 8).unwrap(), rk4_ns(8));
+        assert_eq!(init_ns("auto", 6).unwrap(), midpoint_ns(6));
+        assert_eq!(init_ns("auto", 5).unwrap(), euler_ns(&uniform_times(5)));
     }
 
     /// Prop 3.1 reduction: random naive (c, d) rule vs reduced (a, b).

@@ -130,6 +130,15 @@ pub fn psnr(pred: &[f32], reference: &[f32]) -> f64 {
     10.0 * (4.0 / mse.max(1e-20)).log10()
 }
 
+/// PSNR in dB from a mean log-MSE (the eq. 13 training loss), under the
+/// same data-range convention as [`psnr`]: range [-1, 1], peak² = 4 —
+/// matches python/compile/bns.py PEAK_SQ. Single home for the
+/// `-10·log_mse/ln10 + 10·log10(4)` conversion (previously hand-inlined
+/// in the SPSA refiner and benches).
+pub fn psnr_from_log_mse(log_mse: f64) -> f64 {
+    -10.0 * log_mse / std::f64::consts::LN_10 + 10.0 * 4f64.log10()
+}
+
 /// SNR in dB of `pred` against `reference` (Fig. 6 convention):
 /// 10 log10(|ref|^2 / |ref - pred|^2).
 pub fn snr_db(pred: &[f32], reference: &[f32]) -> f64 {
@@ -209,6 +218,23 @@ mod tests {
         let a = vec![0.0f32; 32];
         let b = vec![0.2f32; 32];
         assert!((psnr(&b, &a) - 20.0).abs() < 1e-5); // f32 rounding
+    }
+
+    /// Pins the data-range convention: log-MSE -> dB must agree with the
+    /// direct `psnr` (peak² = 4), on a known value and on random data.
+    #[test]
+    fn psnr_from_log_mse_matches_psnr() {
+        // constant error of 0.2: mse = 0.04 -> 20 dB (same as psnr_known_value)
+        assert!((psnr_from_log_mse((0.04f64).ln()) - 20.0).abs() < 1e-9);
+        let a: Vec<f32> = (0..48).map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.1).collect();
+        let b: Vec<f32> = (0..48).map(|i| ((i * 11 % 23) as f32 - 11.0) * 0.08).collect();
+        let mse: f64 = a
+            .iter()
+            .zip(&b)
+            .map(|(x, y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64;
+        assert!((psnr_from_log_mse(mse.ln()) - psnr(&a, &b)).abs() < 1e-9);
     }
 
     #[test]

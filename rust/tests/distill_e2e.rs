@@ -1,0 +1,161 @@
+//! End-to-end distillation: train a solver with the first-order trainer
+//! against the *stub-backed device runtime* (the same lane RPC path a
+//! real PJRT model takes), emit the artifact with full provenance,
+//! reload the store, and serve with it — the acceptance path of the
+//! native distillation subsystem:
+//!
+//!   train → artifact JSON → ArtifactStore → Engine routing → samples,
+//!
+//! with the distilled solver (a) beating its taxonomy init by ≥ 2 dB
+//! validation PSNR, (b) passing `NsSolver::validate`, and (c) sampling
+//! via `sample_into` bit-identically to `sample` after the round-trip.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use bns_serve::bench_util::{add_solver_artifact, stub_store, StubModel};
+use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::distill::{train, ConditionedModel, DistillField, TrainConfig};
+use bns_serve::runtime::{ArtifactStore, LoadedModel, Runtime};
+use bns_serve::solver::SampleWorkspace;
+use bns_serve::util::rng::Pcg32;
+
+const DIM: usize = 4;
+const NFE: usize = 8;
+
+fn store_with_model(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
+    stub_store(
+        &format!("distill-e2e-{tag}"),
+        &[StubModel {
+            name: "m",
+            dim: DIM,
+            num_classes: 3,
+            forwards_per_eval: 2,
+            k: -0.8,
+            c: 0.15,
+            label_scale: 0.2,
+            cost: 1,
+            buckets: &[8, 16, 32],
+        }],
+    )
+    .unwrap()
+}
+
+#[test]
+fn train_emit_reload_serve() {
+    let (store, dir) = store_with_model("main");
+    let rt = Arc::new(Runtime::with_lanes(2).unwrap());
+    let info = store.model("m").unwrap().clone();
+
+    // -- train against the deployed (stub) field, conditioned per pair
+    let pairs = 24usize;
+    let val_pairs = 12usize;
+    let labels: Vec<i32> =
+        (0..pairs + val_pairs).map(|i| (i % info.num_classes) as i32).collect();
+    let loaded = Arc::new(LoadedModel::load(&rt, &info).unwrap());
+    let src = ConditionedModel::new(loaded, labels, 0.0);
+    let cfg = TrainConfig {
+        iters: 250,
+        pairs,
+        val_pairs,
+        batch: 12,
+        init: "midpoint".into(),
+        threads: 2,
+        ..Default::default()
+    };
+    let (solver, report) = train(&src, DIM, NFE, &cfg).unwrap();
+
+    // (b) structural validity
+    solver.validate().unwrap();
+    assert_eq!(solver.nfe(), NFE);
+    // (a) beats the taxonomy init by >= 2 dB validation PSNR
+    assert!(
+        report.final_val_psnr >= report.init_val_psnr + 2.0,
+        "gained only {:.2} dB ({:.2} -> {:.2})",
+        report.final_val_psnr - report.init_val_psnr,
+        report.init_val_psnr,
+        report.final_val_psnr
+    );
+
+    // -- emit with provenance + register in the manifest
+    let name = format!("m_w0_nfe{NFE}_bns");
+    let meta = report.meta("m", 0.0);
+    add_solver_artifact(&dir, &name, &solver, &meta).unwrap();
+
+    // -- reload: coefficients AND meta must round-trip
+    let store2 = Arc::new(ArtifactStore::load(&dir).unwrap());
+    let art = store2.solver(&name).unwrap();
+    assert_eq!(art.solver, solver);
+    assert_eq!(art.meta.kind, "bns");
+    assert_eq!(art.meta.model, "m");
+    assert_eq!(art.meta.init, "midpoint");
+    assert_eq!(art.meta.iters, cfg.iters as u64);
+    assert_eq!(art.meta.forwards, report.forwards);
+    assert_eq!(art.meta.gt_nfe, report.gt_nfe);
+    assert!((art.meta.val_psnr - report.final_val_psnr).abs() < 1e-9);
+    // the router's kind/guidance filter finds it
+    assert_eq!(store2.solvers_for("m", 0.0, "bns").len(), 1);
+
+    // (c) the reloaded solver samples via sample_into bit-identically
+    // to sample (the serving hot path vs the reference path), through
+    // the live device-lane runtime
+    let field = src.full();
+    let mut rng = Pcg32::seeded(5);
+    let x0 = rng.normal_vec((pairs + val_pairs) * DIM);
+    let a = art.solver.sample(field, &x0).unwrap();
+    let mut ws = SampleWorkspace::new();
+    let b = art.solver.sample_into(field, &x0, &mut ws).unwrap().to_vec();
+    assert_eq!(
+        a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "sample_into must stay bit-identical to sample for distilled solvers"
+    );
+
+    // -- serve with it: explicit routing and BNS-first auto routing
+    let engine = Engine::start(store2.clone(), rt.clone(), EngineConfig::default());
+    let out = engine
+        .sample_blocking(
+            "m",
+            vec![0, 1, 2, 0],
+            0.0,
+            SolverSpec::Distilled { name: name.clone() },
+            42,
+        )
+        .unwrap();
+    assert_eq!(out.nfe, NFE);
+    assert_eq!(out.solver_used, name);
+    assert_eq!(out.samples.len(), 4 * DIM);
+    assert!(out.samples.iter().all(|v| v.is_finite()));
+    let auto = engine
+        .sample_blocking("m", vec![0, 1, 2, 0], 0.0, SolverSpec::Auto { nfe: NFE }, 42)
+        .unwrap();
+    assert_eq!(auto.solver_used, name, "auto routing must prefer the distilled artifact");
+    assert_eq!(auto.samples, out.samples, "same seed, same solver -> same samples");
+    engine.shutdown();
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Registration is idempotent and additive: re-adding a name keeps one
+/// manifest entry, adding a second artifact keeps both loadable.
+#[test]
+fn register_idempotent_and_additive() {
+    let (_, dir) = store_with_model("reg");
+    let s4 = bns_serve::solver::taxonomy::init_ns("auto", 4).unwrap();
+    let s8 = bns_serve::solver::taxonomy::init_ns("auto", 8).unwrap();
+    let meta = bns_serve::solver::ns::SolverMeta {
+        kind: "bns".into(),
+        model: "m".into(),
+        ..Default::default()
+    };
+    add_solver_artifact(&dir, "m_w0_nfe4_bns", &s4, &meta).unwrap();
+    add_solver_artifact(&dir, "m_w0_nfe4_bns", &s4, &meta).unwrap();
+    add_solver_artifact(&dir, "m_w0_nfe8_bns", &s8, &meta).unwrap();
+    let store = ArtifactStore::load(&dir).unwrap();
+    assert_eq!(store.solvers.len(), 2);
+    assert_eq!(store.solver("m_w0_nfe4_bns").unwrap().solver.nfe(), 4);
+    assert_eq!(store.solver("m_w0_nfe8_bns").unwrap().solver.nfe(), 8);
+    std::fs::remove_dir_all(&dir).ok();
+}
