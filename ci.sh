@@ -56,12 +56,31 @@ fi
 # Distillation trajectory: a smoke-sized run of the first-order trainer
 # on the stub backend, emitting BENCH_distill.json at the repo root —
 # PSNR-vs-NFE for rust-distilled BNS vs stationary baselines, trainer
-# iters/s, and NFE-to-target-PSNR, tracked PR-over-PR. Advisory unless
-# STRICT=1 (shares the lint gate).
+# iters/s, NFE-to-target-PSNR, and the wavefront grad-step microbench
+# (grad_steps_per_sec, jvp_round_trips, allocs_per_step), tracked
+# PR-over-PR. Advisory unless STRICT=1 (shares the lint gate); STRICT=1
+# additionally gates the steady-state hot-loop allocation count at 0.
 step "distill trajectory: cargo bench --bench distill_bench -> BENCH_distill.json"
 if BENCH_DISTILL_OUT="../BENCH_distill.json" DISTILL_BENCH_ITERS="${DISTILL_BENCH_ITERS:-80}" \
     cargo bench --bench distill_bench; then
   echo "wrote $(cd .. && pwd)/BENCH_distill.json"
+  # surface the wavefront gradient-engine numbers
+  echo "grad engine: $(grep -o '"grad_steps_per_sec":[0-9.eE+-]*' ../BENCH_distill.json | tr '\n' ' ')"
+  echo "grad engine: $(grep -o '"jvp_round_trips":[0-9]*' ../BENCH_distill.json | tr '\n' ' ')"
+  echo "grad engine: $(grep -o '"allocs_per_step":[0-9.eE+-]*' ../BENCH_distill.json | tr '\n' ' ')"
+  # zero-allocation gate: every steady-state grad step must report 0 —
+  # and at least one measurement must exist, so a renamed/dropped field
+  # can never make the gate pass vacuously
+  n_allocs=$(grep -c '"allocs_per_step":' ../BENCH_distill.json || true)
+  bad_allocs=$(grep -o '"allocs_per_step":[0-9.eE+-]*' ../BENCH_distill.json \
+    | cut -d: -f2 | grep -cv '^0$' || true)
+  if [ "${n_allocs:-0}" -eq 0 ]; then
+    echo "WARN: BENCH_distill.json has no allocs_per_step measurements (gate vacuous)"
+    lint_fail=1
+  elif [ "${bad_allocs:-0}" -ne 0 ]; then
+    echo "WARN: $bad_allocs grad-step config(s) allocate in the hot loop (expected 0)"
+    lint_fail=1
+  fi
 else
   echo "distill_bench failed (distill trajectory not updated)"
   lint_fail=1

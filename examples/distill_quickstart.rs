@@ -13,7 +13,7 @@ use std::sync::Arc;
 use bns_serve::bench_util::add_solver_artifact;
 use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
 use bns_serve::distill::{train, ConditionedModel, TrainConfig};
-use bns_serve::runtime::{ArtifactStore, LoadedModel, Runtime};
+use bns_serve::runtime::{ArtifactStore, Runtime};
 
 fn main() -> anyhow::Result<()> {
     let dir = bns_serve::default_artifacts_dir();
@@ -23,12 +23,15 @@ fn main() -> anyhow::Result<()> {
     let nfe = 8;
     let info = store.model(model)?.clone();
 
-    // 1. distill: teacher pairs + minibatches are conditioned per row
+    // 1. distill: teacher pairs + minibatches are conditioned per row;
+    //    `threads` fans RK45 teacher generation AND the wavefront
+    //    gradient chunks (DESIGN.md §8), and `replicated` compiles the
+    //    model once per device lane so those chunks drive both lanes —
+    //    results are bit-identical for any threads/lanes value
     let cfg = TrainConfig { iters: 300, threads: 4, init: "midpoint".into(), ..Default::default() };
     let labels: Vec<i32> =
         (0..cfg.pairs + cfg.val_pairs).map(|i| (i % info.num_classes) as i32).collect();
-    let loaded = Arc::new(LoadedModel::load(&rt, &info)?);
-    let src = ConditionedModel::new(loaded, labels, 0.0);
+    let src = ConditionedModel::replicated(&rt, &info, labels, 0.0)?;
     let (solver, report) = train(&src, info.dim, nfe, &cfg)?;
     println!(
         "distilled nfe={nfe}: val psnr {:.2} -> {:.2} dB ({} forwards)",

@@ -2,22 +2,140 @@
 //! of the rust-distilled BNS solver against stationary baselines, plus
 //! trainer throughput — no compiled artifacts needed, so it runs in CI.
 //!
+//! Runs under a **counting global allocator** (the `perf_layers` idiom)
+//! so the wavefront gradient engine's zero-allocation claim is measured,
+//! not asserted from reading the code: the steady-state grad-step
+//! section reports `allocs_per_step` (gated at 0 by `ci.sh` under
+//! STRICT=1), `grad_steps_per_sec`, and `jvp_round_trips` — asserting
+//! the O(n) round-trip bound for n = 8 and 16.
+//!
 //! Emits machine-readable `BENCH_distill.json` (path override:
 //! `BENCH_DISTILL_OUT`) with the PSNR-vs-NFE trajectory, per-NFE trainer
-//! stats (iters/s, forwards, init→final val PSNR) and the smallest NFE
-//! reaching the target PSNR — the perf-trajectory hooks `ci.sh` tracks
-//! PR-over-PR. `DISTILL_BENCH_ITERS` scales the training run (default
-//! 150, smoke-sized).
+//! stats (iters/s, forwards, init→final val PSNR), the smallest NFE
+//! reaching the target PSNR, and the `grad_steps` microbench — the
+//! perf-trajectory hooks `ci.sh` tracks PR-over-PR.
+//! `DISTILL_BENCH_ITERS` scales the training run (default 150,
+//! smoke-sized).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
 use bns_serve::bench_util::{stub_store, StubModel, Table};
-use bns_serve::distill::{sample_loss, train, ConditionedModel, DistillField, TeacherSet, TrainConfig};
+use bns_serve::distill::theta::{pack, unpack_into, ThetaGrad};
+use bns_serve::distill::{
+    sample_indices_into, sample_loss, train, Adam, ConditionedModel, DistillField, GradFan,
+    TeacherSet, TrainConfig, GRAD_CHUNK,
+};
 use bns_serve::runtime::{LoadedModel, Runtime};
+use bns_serve::solver::taxonomy::init_ns;
 use bns_serve::solver::{baseline, Solver};
 use bns_serve::util::json::Json;
+use bns_serve::util::rng::Pcg32;
 use bns_serve::util::stats::psnr_from_log_mse;
+
+/// Counts every heap allocation in the process (all threads — the device
+/// lane included, which is the point).
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Steady-state wavefront grad-step microbench for one NFE: the
+/// trainer's exact hot-loop body (minibatch draw → unpack → fanned
+/// wavefront gradient → theta chain rule → Adam) on a bucket-aligned
+/// stub model, measured after warmup. Returns the JSON row and asserts
+/// the O(n) round-trip bound.
+fn grad_step_bench(
+    loaded: &Arc<LoadedModel>,
+    dim: usize,
+    nfe: usize,
+    pairs: usize,
+    batch: usize,
+) -> anyhow::Result<Json> {
+    let labels: Vec<i32> = (0..pairs).map(|i| (i % 4) as i32).collect();
+    let src = ConditionedModel::new(loaded.clone(), labels, 0.0);
+    let teacher = TeacherSet::generate(&src, dim, pairs, 99, 1)?;
+    let solver0 = init_ns("euler", nfe)?;
+    let mut theta = pack(&solver0);
+    let mut adam = Adam::new(theta.len(), 4e-3);
+    let mut fan = GradFan::new();
+    let mut tgrad = ThetaGrad::new();
+    let mut gtheta: Vec<f64> = Vec::new();
+    let mut solver = solver0.clone();
+    let mut idx: Vec<usize> = Vec::new();
+    let mut rng = Pcg32::seeded(17);
+    let nchunks = (batch + GRAD_CHUNK - 1) / GRAD_CHUNK;
+
+    // warmup (3 steps): size every workspace/slot/pool buffer, then 20
+    // measured steps of the trainer's exact hot-loop body
+    let warmup = 3;
+    let iters = 20;
+    let mut a0 = 0u64;
+    let mut t0 = Instant::now();
+    let mut trips = 0u64;
+    for k in 0..warmup + iters {
+        if k == warmup {
+            a0 = alloc_count();
+            t0 = Instant::now();
+        }
+        sample_indices_into(&mut rng, pairs, batch, &mut idx);
+        unpack_into(&theta, nfe, &mut solver);
+        fan.compute(&solver, &src, &teacher, &idx, dim, 1)?;
+        tgrad.apply(&theta, nfe, &fan.d_times, &fan.d_a, &fan.d_b, &mut gtheta);
+        adam.step(&mut theta, &gtheta);
+        trips = fan.jvp_round_trips;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let allocs_per_step = (alloc_count() - a0) as f64 / iters as f64;
+    let steps_per_sec = iters as f64 / secs.max(1e-9);
+
+    // the wavefront contract: O(n) device dispatches per minibatch —
+    // one per interior step per chunk
+    assert!(
+        trips <= (nchunks * nfe) as u64,
+        "nfe={nfe}: {trips} round trips > O(n) bound {}",
+        nchunks * nfe
+    );
+    assert_eq!(trips, (nchunks * (nfe - 1)) as u64, "nfe={nfe}: exact trip count");
+
+    println!(
+        "grad step nfe={nfe}: {steps_per_sec:.1} steps/s, {trips} jvp round trips/step, \
+         {allocs_per_step:.3} allocs/step"
+    );
+    Ok(Json::obj(vec![
+        ("nfe", Json::Num(nfe as f64)),
+        ("batch", Json::Num(batch as f64)),
+        ("grad_steps_per_sec", Json::Num(steps_per_sec)),
+        ("jvp_round_trips", Json::Num(trips as f64)),
+        ("allocs_per_step", Json::Num(allocs_per_step)),
+    ]))
+}
 
 const DIM: usize = 6;
 const TARGET_PSNR: f64 = 40.0;
@@ -121,6 +239,16 @@ fn main() -> anyhow::Result<()> {
     }
     table.print();
 
+    // wavefront grad-step microbench: steady-state throughput, O(n)
+    // round-trip assert, and hot-loop allocations (STRICT-gated at 0 by
+    // ci.sh) — bucket-aligned batch (GRAD_CHUNK rows ↔ the 8-bucket;
+    // the stacked JVP rows decompose exactly into the 32/16/8 buckets)
+    println!();
+    let mut grad_rows = Vec::new();
+    for nfe in [8usize, 16] {
+        grad_rows.push(grad_step_bench(&loaded, DIM, nfe, 16, GRAD_CHUNK)?);
+    }
+
     let out = Json::obj(vec![
         ("bench", Json::Str("distill".into())),
         ("dim", Json::Num(DIM as f64)),
@@ -129,6 +257,7 @@ fn main() -> anyhow::Result<()> {
         // -1 = no swept NFE reached the target
         ("nfe_to_target_psnr", Json::Num(nfe_to_target as f64)),
         ("points", Json::Arr(rows)),
+        ("grad_steps", Json::Arr(grad_rows)),
     ]);
     let path = std::env::var("BENCH_DISTILL_OUT")
         .unwrap_or_else(|_| "BENCH_distill.json".to_string());

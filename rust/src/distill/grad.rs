@@ -1,5 +1,6 @@
 //! Exact first-order gradients of the eq. 13 log-MSE loss through
-//! Algorithm 1 — the analytic core of the native BNS trainer.
+//! Algorithm 1 — the analytic core of the native BNS trainer, organized
+//! as a **step-major wavefront**.
 //!
 //! Algorithm 1 is the lower-triangular recursion
 //!   x_{i+1} = a_i·x0 + Σ_{j≤i} b_ij·u_j,   u_j = u(t_j, x_j),
@@ -8,24 +9,59 @@
 //! *field-mediated* paths where moving x_k moves every later velocity
 //! u_k, u_{k+1}, … . The reverse part — the per-sample loss adjoint
 //! λ = ∂loss/∂x_n and the closed-form direct terms — costs nothing; the
-//! field-mediated part is computed by exact tangent (forward-sensitivity)
-//! propagation: for each parameter, inject its seed tangent at its
-//! combine row and push it through the remaining steps with one
-//! [`Field::jvp`] per step, which also carries the time-grid gradients
-//! via the `dt` tangent. Only JVPs are required — never a transposed
-//! field Jacobian, which a compiled (PJRT/stub) executable cannot
-//! provide — and the result is exact up to the field's own `jvp`
-//! accuracy (closed form for the analytic fields, central differences —
-//! exact on the affine stub fields — otherwise).
+//! field-mediated part is exact tangent (forward-sensitivity)
+//! propagation. Only JVPs are required — never a transposed field
+//! Jacobian, which a compiled (PJRT/stub) executable cannot provide.
 //!
-//! Cost: O(n²) tangent propagations of ≤ n JVP calls each (n = NFE),
-//! ~n³/6 batched JVPs per minibatch — negligible against the teacher
-//! RK45 cost for the paper's n ≤ 16 regime.
+//! # The wavefront
+//!
+//! The PR 3 implementation was *parameter-major*: one tangent
+//! propagation per parameter, each spending one `Field::jvp` (= one
+//! device round trip) per remaining step — ~n³/6 serial round trips per
+//! minibatch. But every tangent of every parameter is linearized at the
+//! **same** recorded base points (t_k, x_k), so the loop nests swap: at
+//! step k, *all* live tangents go through the field in **one**
+//! [`Field::jvp_batch_into`] call. Device round trips per minibatch drop
+//! from O(n³) to exactly n−1 (one per interior step), while the total
+//! eval *work* — and therefore the honest `forwards` accounting via
+//! [`Field::jvp_cost`] — is unchanged.
+//!
+//! Parameters are ordered by the step their tangent first exists
+//! (`wavefront step`): step s introduces the time parameter t_s (a pure
+//! δt tangent at its own eval) and row s−1's a/b parameters (their seed
+//! appears in x_s). The live set at step k is therefore a *prefix* of
+//! this ordering, which makes the tangent-history arena a ragged
+//! `[step, live(step), len]` stack with contiguous slabs — no per-tangent
+//! allocation anywhere.
+//!
+//! All state lives in a reusable [`GradWorkspace`] (the gradient-side
+//! analogue of `solver::workspace::SampleWorkspace`, sharing its
+//! only-ever-grow discipline): trajectory and velocity arenas for the
+//! forward recording pass, the tangent slabs, the stacked JVP
+//! staging buffers, and the gradient outputs. A steady-state gradient
+//! evaluation allocates nothing.
+//!
+//! [`GradFan`] fans minibatch rows across worker threads in fixed
+//! [`GRAD_CHUNK`]-row chunks (the same determinism scheme as
+//! `distill::teacher`): chunk boundaries and the final reduction order
+//! never depend on the thread count, so gradients are **bit-identical**
+//! for any `threads` value, and lane-replicated sources
+//! (`ConditionedModel::replicated`) pin chunk c to device lane
+//! c mod lanes so the fan-out drives every lane.
 
 use anyhow::Result;
 
+use crate::distill::teacher::{BoundField, DistillField, TeacherSet};
 use crate::solver::field::Field;
 use crate::solver::ns::NsSolver;
+use crate::solver::workspace::{reset_f32, reset_f64};
+use crate::util::stats::log_mse_term;
+
+/// Rows per gradient chunk. Fixed (never derived from the thread count)
+/// so chunk boundaries — and with them the finite-difference step
+/// normalization inside a chunk's JVPs and the f64 reduction order —
+/// are identical for any parallelism.
+pub const GRAD_CHUNK: usize = 8;
 
 /// Loss plus the full solver-space gradient for one minibatch.
 pub struct LossGrad {
@@ -37,13 +73,29 @@ pub struct LossGrad {
     pub d_a: Vec<f64>,
     /// Lower-triangular, same shape as `NsSolver::b`.
     pub d_b: Vec<Vec<f64>>,
-    /// `Field::jvp` calls made (each costs two evals under the default
-    /// central-difference implementation — the accounting upper bound).
-    pub jvp_calls: usize,
+    /// Batched JVP dispatches made — one logical stacked eval per
+    /// interior step, exactly n−1 per chunk (vs one dispatch per
+    /// (parameter, step) — ~n³/6 — on the sequential path). Each
+    /// dispatch still bucket-chunks on the device (§5): realized RPCs
+    /// scale with tangent rows / max compiled bucket, every RPC
+    /// carrying a full bucket of useful rows, where the sequential path
+    /// paid a latency-bound pair of batch-sized RPCs per tangent.
+    pub jvp_round_trips: u64,
+    /// Field evaluations charged for those JVPs ([`Field::jvp_cost`]):
+    /// 2 per tangent under central differences, the true (cheaper) cost
+    /// for closed-form fields. The total eval *work* of the gradient —
+    /// what `forwards` accounting meters — unlike the round-trip count,
+    /// which the wavefront collapses.
+    pub jvp_evals: u64,
+    /// Row-evaluations spent: Σ over chunks of rows·(n + jvp_evals) —
+    /// multiply by `forwards_per_eval` for model forward passes.
+    pub row_evals: u64,
 }
 
 /// eq. 13 training loss: mean over samples of the log of the per-sample
-/// MSE between `out` and the teacher endpoint `x1`.
+/// MSE between `out` and the teacher endpoint `x1`. The NaN/clamp edge
+/// cases live in `util::stats::log_mse_term`, shared with the adjoint
+/// loop of the gradient engine.
 pub fn log_mse_loss(out: &[f32], x1: &[f32], dim: usize) -> f64 {
     debug_assert_eq!(out.len(), x1.len());
     let samples = out.len() / dim;
@@ -55,10 +107,7 @@ pub fn log_mse_loss(out: &[f32], x1: &[f32], dim: usize) -> f64 {
             .map(|(a, b)| ((a - b) as f64).powi(2))
             .sum::<f64>()
             / dim as f64;
-        // NaN guard: f64::max(NaN, eps) returns eps, which would make a
-        // diverged solver (inf - inf in the f32 combine) look like the
-        // best loss ever seen — score it as the worst instead
-        acc += if mse.is_nan() { f64::INFINITY } else { mse.max(1e-20).ln() };
+        acc += log_mse_term(mse).0;
     }
     acc / samples as f64
 }
@@ -76,107 +125,216 @@ pub fn sample_loss(
     Ok(log_mse_loss(&out, x1, dim))
 }
 
-/// One tangent propagation through the recorded trajectory.
-///
-/// The tangent is injected either as δx_{start} = `seed` (the derivative
-/// of the combine row `start-1` w.r.t. its own a/b entry), or — when
-/// `time_step` is set — as a pure time tangent δt = 1 at that step's
-/// velocity eval. Returns λ·δx_n and counts the JVPs spent.
-fn propagate(
-    solver: &NsSolver,
-    field: &dyn Field,
-    xs: &[Vec<f32>],
-    lambda: &[f64],
-    start: usize,
-    seed: Option<&[f32]>,
-    time_step: Option<usize>,
-    jvp_calls: &mut usize,
-) -> Result<f64> {
-    let n = solver.nfe();
-    let len = lambda.len();
-    debug_assert!(seed.is_some() != time_step.is_some());
-    let first = time_step.unwrap_or(start);
-    // δu_j for j in [first, n); None = identically zero
-    let mut dus: Vec<Option<Vec<f32>>> = vec![None; n];
-    let mut dx = vec![0f32; len];
-    let mut dx_nonzero = false;
-    for k in first..=n {
-        // δx_k = [seed if k == start] + Σ_{j<k} b_{k-1,j}·δu_j
-        if k > first || time_step.is_none() {
-            dx.fill(0.0);
-            dx_nonzero = false;
-            if seed.is_some() && k == start {
-                dx.copy_from_slice(seed.unwrap());
-                dx_nonzero = true;
-            }
-            if k > first {
-                for (j, &bj) in solver.b[k - 1].iter().enumerate() {
-                    if let Some(du) = dus[j].as_ref() {
-                        let bj = bj as f32;
-                        if bj == 0.0 {
-                            continue;
-                        }
-                        for (o, &d) in dx.iter_mut().zip(du.iter()) {
-                            *o += bj * d;
-                        }
-                        dx_nonzero = true;
-                    }
-                }
-            }
-        }
-        if k == n {
-            break;
-        }
-        // δu_k = J_k·δx_k + ∂u/∂t·δt_k
-        let dt = if time_step == Some(k) { 1.0 } else { 0.0 };
-        if dx_nonzero || dt != 0.0 {
-            dus[k] = Some(field.jvp(solver.times[k], &xs[k], &dx, dt)?);
-            *jvp_calls += 1;
-        }
-    }
-    Ok(lambda.iter().zip(dx.iter()).map(|(&l, &d)| l * d as f64).sum())
+// ---------------------------------------------------------------------------
+// Parameter ordering
+// ---------------------------------------------------------------------------
+
+/// Where a parameter's gradient lands in (d_times, d_a, d_b).
+#[derive(Clone, Copy, Debug)]
+enum ParamKind {
+    /// t_i, 1 ≤ i ≤ n−1 (endpoints pinned): a pure δt = 1 tangent at
+    /// eval step i.
+    Time(usize),
+    /// a_i: seed δx_{i+1} = x0.
+    A(usize),
+    /// b_ij: seed δx_{i+1} = u_j.
+    B(usize, usize),
 }
 
-/// Loss and exact ∂loss/∂(times, a, b) for one minibatch of teacher
-/// pairs (`x0`, `x1`, row-major `[samples, dim]`).
-pub fn loss_and_grad(
+#[derive(Clone, Copy, Debug)]
+struct ParamInfo {
+    kind: ParamKind,
+    /// Wavefront step where this parameter's tangent first exists —
+    /// the injection step of its seed (a/b: i+1) or of its time tangent
+    /// (t_i: i). Parameters are sorted by `start`, so the live set at
+    /// any step is a prefix of the ordering.
+    start: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Workspace
+// ---------------------------------------------------------------------------
+
+/// Preallocated scratch for one wavefront gradient evaluation — the
+/// gradient-side analogue of `SampleWorkspace`: a worker owns one for
+/// its lifetime and every buffer only ever grows, so a steady-state
+/// Adam step performs zero heap allocation in the gradient.
+#[derive(Default)]
+pub struct GradWorkspace {
+    /// NFE the derived layout below was built for (0 = not yet built).
+    n: usize,
+    /// All n(n+5)/2 − 1 free parameters, sorted by wavefront start step.
+    params: Vec<ParamInfo>,
+    /// live[k] = #parameters with start ≤ k, for k in 0..=n.
+    live: Vec<usize>,
+    /// Element offset of tangent slab k (interior steps 1..=n−1) in
+    /// `dus`, in units of `len`: slab k holds rows 0..live[k].
+    slab_row: Vec<usize>,
+    /// Total tangent rows across all slabs.
+    dus_rows: usize,
+    /// Recorded trajectory, flat [n+1, len].
+    xs: Vec<f32>,
+    /// Recorded velocities, flat [n, len].
+    us: Vec<f32>,
+    /// Per-element loss adjoint λ = ∂loss/∂x_n (f64).
+    lambda: Vec<f64>,
+    /// Ragged tangent-history arena: slab k at `slab_row[k]·len`, row r
+    /// holding δu_k of parameter ordinal r.
+    dus: Vec<f32>,
+    /// Structural-nonzero flag per (slab, row): false = that tangent was
+    /// identically zero at that step (no JVP spent, treated as zero by
+    /// later combines) — mirrors the `Option<Vec>` of the old
+    /// parameter-major path.
+    du_set: Vec<bool>,
+    /// Stacked tangent staging for one `jvp_batch_into` call.
+    tg: Vec<f32>,
+    tg_out: Vec<f32>,
+    dts: Vec<f64>,
+    /// Parameter ordinal of each stacked row.
+    sel: Vec<usize>,
+    /// Final-combine scratch (one tangent).
+    dx: Vec<f32>,
+    /// Gradient outputs (d_b lower-triangular rows concatenated:
+    /// row i at offset i·(i+1)/2).
+    pub d_times: Vec<f64>,
+    pub d_a: Vec<f64>,
+    pub d_b: Vec<f64>,
+}
+
+impl GradWorkspace {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// (Re)build the parameter layout for NFE `n` and size every buffer
+    /// for `len`-element states. No-op at steady state.
+    fn ensure(&mut self, n: usize, len: usize) {
+        if self.n != n {
+            self.n = n;
+            self.params.clear();
+            for s in 1..=n {
+                if s < n {
+                    self.params.push(ParamInfo { kind: ParamKind::Time(s), start: s });
+                }
+                self.params.push(ParamInfo { kind: ParamKind::A(s - 1), start: s });
+                for j in 0..s {
+                    self.params.push(ParamInfo { kind: ParamKind::B(s - 1, j), start: s });
+                }
+            }
+            debug_assert_eq!(self.params.len(), n * (n + 5) / 2 - 1);
+            self.live.clear();
+            self.live.resize(n + 1, 0);
+            for k in 0..=n {
+                self.live[k] = self.params.iter().take_while(|p| p.start <= k).count();
+            }
+            self.slab_row.clear();
+            self.slab_row.resize(n.max(1), 0);
+            let mut rows = 0usize;
+            for k in 1..n {
+                self.slab_row[k] = rows;
+                rows += self.live[k];
+            }
+            self.dus_rows = rows;
+        }
+        reset_f32(&mut self.xs, (n + 1) * len);
+        reset_f32(&mut self.us, n * len);
+        reset_f64(&mut self.lambda, len);
+        reset_f32(&mut self.dus, self.dus_rows * len);
+        self.du_set.resize(self.dus_rows, false);
+        let live_max = if n >= 2 { self.live[n - 1] } else { 0 };
+        reset_f32(&mut self.tg, live_max * len);
+        reset_f32(&mut self.tg_out, live_max * len);
+        reset_f64(&mut self.dts, live_max);
+        self.sel.resize(live_max, 0);
+        reset_f32(&mut self.dx, len);
+        reset_f64(&mut self.d_times, n + 1);
+        reset_f64(&mut self.d_a, n);
+        reset_f64(&mut self.d_b, n * (n + 1) / 2);
+    }
+}
+
+/// Per-evaluation counters (loss is the *sum* of per-sample terms; the
+/// caller normalizes by the minibatch total).
+struct WaveOut {
+    loss_sum: f64,
+    jvp_round_trips: u64,
+    jvp_evals: u64,
+    row_evals: u64,
+}
+
+// ---------------------------------------------------------------------------
+// The wavefront
+// ---------------------------------------------------------------------------
+
+/// One wavefront gradient evaluation over `x0`/`x1` (row-major
+/// `[samples, dim]`). The adjoint is scaled by `total_samples` — the
+/// full minibatch size — so per-chunk gradients from a fanned minibatch
+/// sum directly. Gradients land in `ws.d_times` / `ws.d_a` / `ws.d_b`.
+fn wavefront(
     solver: &NsSolver,
     field: &dyn Field,
     x0: &[f32],
     x1: &[f32],
     dim: usize,
-) -> Result<LossGrad> {
+    total_samples: usize,
+    ws: &mut GradWorkspace,
+) -> Result<WaveOut> {
     let n = solver.nfe();
     let len = x0.len();
     let samples = len / dim;
     anyhow::ensure!(samples > 0 && len == samples * dim, "x0 must be [samples, dim]");
     anyhow::ensure!(x1.len() == len, "x1 must match x0");
+    ws.ensure(n, len);
+    let GradWorkspace {
+        params,
+        live,
+        slab_row,
+        xs,
+        us,
+        lambda,
+        dus,
+        du_set,
+        tg,
+        tg_out,
+        dts,
+        sel,
+        dx,
+        d_times,
+        d_a,
+        d_b,
+        ..
+    } = ws;
 
-    // forward, recording the trajectory and velocities (same op order as
+    // ---- forward, recording trajectory + velocities (same op order as
     // `sample`, so the loss here equals the loss of the sampled output)
-    let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n + 1);
-    xs.push(x0.to_vec());
-    let mut us: Vec<Vec<f32>> = Vec::with_capacity(n);
+    xs[..len].copy_from_slice(x0);
     for i in 0..n {
-        us.push(field.eval(solver.times[i], &xs[i])?);
+        // u_i = u(t_i, x_i) written straight into its arena row
+        field.eval_into(
+            solver.times[i],
+            &xs[i * len..(i + 1) * len],
+            &mut us[i * len..(i + 1) * len],
+        )?;
+        // x_{i+1} = a_i·x0 + Σ_j b_ij·u_j (op order matches `sample`)
+        let next = &mut xs[(i + 1) * len..(i + 2) * len];
         let a = solver.a[i] as f32;
-        let mut next: Vec<f32> = x0.iter().map(|&v| a * v).collect();
+        for (o, &x0v) in next.iter_mut().zip(x0.iter()) {
+            *o = a * x0v;
+        }
         for (j, &bj) in solver.b[i].iter().enumerate() {
             let bj = bj as f32;
             if bj == 0.0 {
                 continue;
             }
-            for (o, &uv) in next.iter_mut().zip(us[j].iter()) {
+            for (o, &uv) in next.iter_mut().zip(us[j * len..(j + 1) * len].iter()) {
                 *o += bj * uv;
             }
         }
-        xs.push(next);
     }
 
-    // loss + adjoint λ = ∂loss/∂x_n (f64 per element)
-    let xn = &xs[n];
-    let mut loss = 0.0;
-    let mut lambda = vec![0f64; len];
+    // ---- loss + adjoint λ = ∂loss/∂x_n (scaled by the fan total)
+    let xn = &xs[n * len..(n + 1) * len];
+    let mut loss_sum = 0.0;
     for s in 0..samples {
         let mut mse = 0.0;
         for k in 0..dim {
@@ -184,12 +342,12 @@ pub fn loss_and_grad(
             mse += d * d;
         }
         mse /= dim as f64;
-        // NaN scores as the worst loss (see log_mse_loss), never the best
-        loss += if mse.is_nan() { f64::INFINITY } else { mse.max(1e-20).ln() };
+        let (term, diffable) = log_mse_term(mse);
+        loss_sum += term;
         // in the clamp region (and for non-finite mse) the loss is
         // treated as flat: adjoint is zero there
-        let c = if mse.is_finite() && mse > 1e-20 {
-            2.0 / (samples as f64 * dim as f64 * mse)
+        let c = if diffable {
+            2.0 / (total_samples as f64 * dim as f64 * mse)
         } else {
             0.0
         };
@@ -197,39 +355,491 @@ pub fn loss_and_grad(
             lambda[s * dim + k] = c * (xn[s * dim + k] - x1[s * dim + k]) as f64;
         }
     }
-    loss /= samples as f64;
 
-    let mut jvp_calls = 0usize;
-    let mut d_a = vec![0.0; n];
-    let mut d_b: Vec<Vec<f64>> = (0..n).map(|i| vec![0.0; i + 1]).collect();
-    let mut d_times = vec![0.0; n + 1];
-    for i in 0..n {
-        // row i injects into x_{i+1}: seed x0 for a_i, u_j for b_ij
-        d_a[i] =
-            propagate(solver, field, &xs, &lambda, i + 1, Some(x0), None, &mut jvp_calls)?;
-        for j in 0..=i {
-            d_b[i][j] = propagate(
-                solver,
-                field,
-                &xs,
-                &lambda,
-                i + 1,
-                Some(&us[j]),
-                None,
-                &mut jvp_calls,
+    // ---- the wavefront: at each interior step k, every live tangent
+    // goes through the field in one batched JVP
+    let mut jvp_round_trips = 0u64;
+    let mut jvp_evals = 0u64;
+    for k in 1..n {
+        let mut t_cnt = 0usize;
+        for (r, p) in params.iter().take(live[k]).enumerate() {
+            // δx_k = [seed if k == start] + Σ_{j<k} b_{k-1,j}·δu_j
+            let row = &mut tg[t_cnt * len..(t_cnt + 1) * len];
+            let mut structural = false;
+            row.fill(0.0);
+            if p.start == k {
+                match p.kind {
+                    ParamKind::A(_) => {
+                        row.copy_from_slice(x0);
+                        structural = true;
+                    }
+                    ParamKind::B(_, j) => {
+                        row.copy_from_slice(&us[j * len..(j + 1) * len]);
+                        structural = true;
+                    }
+                    ParamKind::Time(_) => {}
+                }
+            }
+            for j in p.start..k {
+                if !du_set[slab_row[j] + r] {
+                    continue;
+                }
+                let bj = solver.b[k - 1][j] as f32;
+                if bj == 0.0 {
+                    continue;
+                }
+                let du = &dus[(slab_row[j] + r) * len..(slab_row[j] + r + 1) * len];
+                for (o, &d) in row.iter_mut().zip(du.iter()) {
+                    *o += bj * d;
+                }
+                structural = true;
+            }
+            let dt = match p.kind {
+                ParamKind::Time(i) if i == k => 1.0,
+                _ => 0.0,
+            };
+            if structural || dt != 0.0 {
+                dts[t_cnt] = dt;
+                sel[t_cnt] = r;
+                t_cnt += 1;
+            } else {
+                du_set[slab_row[k] + r] = false;
+            }
+        }
+        if t_cnt > 0 {
+            field.jvp_batch_into(
+                solver.times[k],
+                &xs[k * len..(k + 1) * len],
+                &tg[..t_cnt * len],
+                &dts[..t_cnt],
+                &mut tg_out[..t_cnt * len],
             )?;
+            jvp_round_trips += 1;
+            jvp_evals += field.jvp_cost(&dts[..t_cnt]) as u64;
+            for (q, &r) in sel[..t_cnt].iter().enumerate() {
+                dus[(slab_row[k] + r) * len..(slab_row[k] + r + 1) * len]
+                    .copy_from_slice(&tg_out[q * len..(q + 1) * len]);
+                du_set[slab_row[k] + r] = true;
+            }
         }
     }
-    for (i, d) in d_times.iter_mut().enumerate().take(n).skip(1) {
-        // t_0 = 0 is pinned and t_n = 1 is never an eval time
-        *d = propagate(solver, field, &xs, &lambda, i, None, Some(i), &mut jvp_calls)?;
+
+    // ---- final combine at k = n and the λ dot product
+    d_times.iter_mut().for_each(|d| *d = 0.0);
+    for (r, p) in params.iter().enumerate() {
+        dx.fill(0.0);
+        if p.start == n {
+            match p.kind {
+                ParamKind::A(_) => dx.copy_from_slice(x0),
+                ParamKind::B(_, j) => dx.copy_from_slice(&us[j * len..(j + 1) * len]),
+                ParamKind::Time(_) => unreachable!("time params end at n-1"),
+            }
+        }
+        for j in p.start..n {
+            if !du_set[slab_row[j] + r] {
+                continue;
+            }
+            let bj = solver.b[n - 1][j] as f32;
+            if bj == 0.0 {
+                continue;
+            }
+            let du = &dus[(slab_row[j] + r) * len..(slab_row[j] + r + 1) * len];
+            for (o, &d) in dx.iter_mut().zip(du.iter()) {
+                *o += bj * d;
+            }
+        }
+        let d: f64 = lambda.iter().zip(dx.iter()).map(|(&l, &v)| l * v as f64).sum();
+        match p.kind {
+            ParamKind::Time(i) => d_times[i] = d,
+            ParamKind::A(i) => d_a[i] = d,
+            ParamKind::B(i, j) => d_b[i * (i + 1) / 2 + j] = d,
+        }
     }
-    Ok(LossGrad { loss, d_times, d_a, d_b, jvp_calls })
+
+    Ok(WaveOut {
+        loss_sum,
+        jvp_round_trips,
+        jvp_evals,
+        row_evals: samples as u64 * (n as u64 + jvp_evals),
+    })
+}
+
+/// Loss and exact ∂loss/∂(times, a, b) for one minibatch of teacher
+/// pairs (`x0`, `x1`, row-major `[samples, dim]`) — the wavefront engine
+/// over a fresh workspace, as a single chunk. The trainer's hot loop
+/// uses [`GradFan`] instead (reused workspaces, thread/lane fan-out).
+pub fn loss_and_grad(
+    solver: &NsSolver,
+    field: &dyn Field,
+    x0: &[f32],
+    x1: &[f32],
+    dim: usize,
+) -> Result<LossGrad> {
+    let mut ws = GradWorkspace::new();
+    let samples = x0.len() / dim.max(1);
+    let out = wavefront(solver, field, x0, x1, dim, samples, &mut ws)?;
+    let n = solver.nfe();
+    let d_b = (0..n)
+        .map(|i| ws.d_b[i * (i + 1) / 2..i * (i + 1) / 2 + i + 1].to_vec())
+        .collect();
+    Ok(LossGrad {
+        loss: out.loss_sum / samples as f64,
+        d_times: ws.d_times.clone(),
+        d_a: ws.d_a.clone(),
+        d_b,
+        jvp_round_trips: out.jvp_round_trips,
+        jvp_evals: out.jvp_evals,
+        row_evals: out.row_evals,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Minibatch fan-out
+// ---------------------------------------------------------------------------
+
+/// One chunk's persistent state: gathered pair rows, the (rebindable)
+/// row-conditioned field, and the chunk's gradient contribution.
+struct ChunkSlot<'s> {
+    x0: Vec<f32>,
+    x1: Vec<f32>,
+    bound: Option<BoundField<'s>>,
+    loss_sum: f64,
+    d_times: Vec<f64>,
+    d_a: Vec<f64>,
+    d_b: Vec<f64>,
+    jvp_round_trips: u64,
+    jvp_evals: u64,
+    row_evals: u64,
+    err: Option<anyhow::Error>,
+}
+
+impl Default for ChunkSlot<'_> {
+    fn default() -> Self {
+        ChunkSlot {
+            x0: Vec::new(),
+            x1: Vec::new(),
+            bound: None,
+            loss_sum: 0.0,
+            d_times: Vec::new(),
+            d_a: Vec::new(),
+            d_b: Vec::new(),
+            jvp_round_trips: 0,
+            jvp_evals: 0,
+            row_evals: 0,
+            err: None,
+        }
+    }
+}
+
+fn run_slot(solver: &NsSolver, slot: &mut ChunkSlot<'_>, dim: usize, total: usize, ws: &mut GradWorkspace) {
+    let field = slot.bound.as_ref().expect("slot bound before run");
+    match wavefront(solver, field, &slot.x0, &slot.x1, dim, total, ws) {
+        Ok(out) => {
+            slot.loss_sum = out.loss_sum;
+            slot.jvp_round_trips = out.jvp_round_trips;
+            slot.jvp_evals = out.jvp_evals;
+            slot.row_evals = out.row_evals;
+            slot.d_times.clear();
+            slot.d_times.extend_from_slice(&ws.d_times);
+            slot.d_a.clear();
+            slot.d_a.extend_from_slice(&ws.d_a);
+            slot.d_b.clear();
+            slot.d_b.extend_from_slice(&ws.d_b);
+            slot.err = None;
+        }
+        Err(e) => slot.err = Some(e),
+    }
+}
+
+/// The trainer's gradient engine: fans a minibatch over fixed
+/// [`GRAD_CHUNK`]-row chunks (each rebinding its rows' conditioning and,
+/// for lane-replicated sources, pinned to device lane chunk mod lanes),
+/// runs them across up to `threads` persistent-workspace workers, and
+/// reduces the per-chunk gradients in fixed chunk order — so the result
+/// is bit-identical for any thread count, and a steady-state call
+/// allocates nothing (`threads` = 1; with more threads the only
+/// steady-state allocations are the scoped worker stacks).
+#[derive(Default)]
+pub struct GradFan<'s> {
+    slots: Vec<ChunkSlot<'s>>,
+    wss: Vec<GradWorkspace>,
+    /// Data-pointer identity of the source the slot bindings were built
+    /// from (0 = none yet). Rebinding is only valid against the same
+    /// source — `rebind_rows` swaps row conditioning, not the underlying
+    /// field — so a `compute` with a different `src` drops every
+    /// binding and binds fresh instead of silently evaluating gradients
+    /// through the previous source.
+    src_id: usize,
+    /// eq. 13 minibatch loss of the last `compute`.
+    pub loss: f64,
+    /// Combined gradient of the last `compute` (`d_b` flat
+    /// lower-triangular, row i at offset i·(i+1)/2).
+    pub d_times: Vec<f64>,
+    pub d_a: Vec<f64>,
+    pub d_b: Vec<f64>,
+    /// Batched JVP dispatches (≤ (n−1)·ceil(batch/GRAD_CHUNK)).
+    pub jvp_round_trips: u64,
+    pub jvp_evals: u64,
+    /// Σ rows·(n + jvp_evals) — multiply by `forwards_per_eval` for
+    /// model forward passes.
+    pub row_evals: u64,
+}
+
+impl<'s> GradFan<'s> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluate loss + gradient of `solver` on the teacher pairs `idx`,
+    /// conditioned per row through `src`, fanned over `threads` workers.
+    /// Returns the loss; gradients are in `d_times`/`d_a`/`d_b`.
+    pub fn compute(
+        &mut self,
+        solver: &NsSolver,
+        src: &'s dyn DistillField,
+        teacher: &TeacherSet,
+        idx: &[usize],
+        dim: usize,
+        threads: usize,
+    ) -> Result<f64> {
+        let n = solver.nfe();
+        let total = idx.len();
+        anyhow::ensure!(total > 0, "empty minibatch");
+        anyhow::ensure!(threads >= 1, "threads must be >= 1 (got 0)");
+        let nchunks = (total + GRAD_CHUNK - 1) / GRAD_CHUNK;
+        if self.slots.len() < nchunks {
+            self.slots.resize_with(nchunks, ChunkSlot::default);
+        }
+        let src_id = src as *const dyn DistillField as *const () as usize;
+        if self.src_id != src_id {
+            // a different source: stale bindings must not be rebound
+            // (they would keep the old source's field/replica)
+            for slot in self.slots.iter_mut() {
+                slot.bound = None;
+            }
+            self.src_id = src_id;
+        }
+        for (c, slot) in self.slots.iter_mut().enumerate().take(nchunks) {
+            let rows = &idx[c * GRAD_CHUNK..total.min((c + 1) * GRAD_CHUNK)];
+            teacher.gather(rows, &mut slot.x0, &mut slot.x1);
+            match slot.bound.as_mut() {
+                Some(b) => src.rebind_rows(b, rows)?,
+                None => slot.bound = Some(src.bind_chunk(rows, c)?),
+            }
+        }
+        let workers = threads.min(nchunks).max(1);
+        if self.wss.len() < workers {
+            self.wss.resize_with(workers, GradWorkspace::new);
+        }
+        if workers == 1 {
+            let ws = &mut self.wss[0];
+            for slot in self.slots.iter_mut().take(nchunks) {
+                run_slot(solver, slot, dim, total, ws);
+            }
+        } else {
+            let per = (nchunks + workers - 1) / workers;
+            let slots = &mut self.slots[..nchunks];
+            std::thread::scope(|scope| {
+                for (chunk, ws) in slots.chunks_mut(per).zip(self.wss.iter_mut()) {
+                    scope.spawn(move || {
+                        for slot in chunk {
+                            run_slot(solver, slot, dim, total, ws);
+                        }
+                    });
+                }
+            });
+        }
+        // first error in chunk order (deterministic)
+        for slot in self.slots.iter_mut().take(nchunks) {
+            if let Some(e) = slot.err.take() {
+                return Err(e.context("gradient chunk"));
+            }
+        }
+        // fixed-order reduction: chunk 0, 1, 2, … regardless of workers
+        reset_f64(&mut self.d_times, n + 1);
+        reset_f64(&mut self.d_a, n);
+        reset_f64(&mut self.d_b, n * (n + 1) / 2);
+        self.d_times.iter_mut().for_each(|d| *d = 0.0);
+        self.d_a.iter_mut().for_each(|d| *d = 0.0);
+        self.d_b.iter_mut().for_each(|d| *d = 0.0);
+        let mut loss_sum = 0.0;
+        self.jvp_round_trips = 0;
+        self.jvp_evals = 0;
+        self.row_evals = 0;
+        for slot in self.slots.iter().take(nchunks) {
+            loss_sum += slot.loss_sum;
+            for (o, &v) in self.d_times.iter_mut().zip(slot.d_times.iter()) {
+                *o += v;
+            }
+            for (o, &v) in self.d_a.iter_mut().zip(slot.d_a.iter()) {
+                *o += v;
+            }
+            for (o, &v) in self.d_b.iter_mut().zip(slot.d_b.iter()) {
+                *o += v;
+            }
+            self.jvp_round_trips += slot.jvp_round_trips;
+            self.jvp_evals += slot.jvp_evals;
+            self.row_evals += slot.row_evals;
+        }
+        self.loss = loss_sum / total as f64;
+        Ok(self.loss)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reference oracle (the PR 3 parameter-major path) + tests
+// ---------------------------------------------------------------------------
+
+/// The original parameter-major implementation, kept verbatim as the
+/// correctness oracle for the wavefront: one tangent propagation per
+/// parameter, one `Field::jvp` round trip per (parameter, step).
+#[cfg(test)]
+mod reference {
+    use super::*;
+
+    #[allow(clippy::too_many_arguments)]
+    fn propagate(
+        solver: &NsSolver,
+        field: &dyn Field,
+        xs: &[Vec<f32>],
+        lambda: &[f64],
+        start: usize,
+        seed: Option<&[f32]>,
+        time_step: Option<usize>,
+        jvp_calls: &mut usize,
+    ) -> Result<f64> {
+        let n = solver.nfe();
+        let len = lambda.len();
+        debug_assert!(seed.is_some() != time_step.is_some());
+        let first = time_step.unwrap_or(start);
+        let mut dus: Vec<Option<Vec<f32>>> = vec![None; n];
+        let mut dx = vec![0f32; len];
+        let mut dx_nonzero = false;
+        for k in first..=n {
+            if k > first || time_step.is_none() {
+                dx.fill(0.0);
+                dx_nonzero = false;
+                if seed.is_some() && k == start {
+                    dx.copy_from_slice(seed.unwrap());
+                    dx_nonzero = true;
+                }
+                if k > first {
+                    for (j, &bj) in solver.b[k - 1].iter().enumerate() {
+                        if let Some(du) = dus[j].as_ref() {
+                            let bj = bj as f32;
+                            if bj == 0.0 {
+                                continue;
+                            }
+                            for (o, &d) in dx.iter_mut().zip(du.iter()) {
+                                *o += bj * d;
+                            }
+                            dx_nonzero = true;
+                        }
+                    }
+                }
+            }
+            if k == n {
+                break;
+            }
+            let dt = if time_step == Some(k) { 1.0 } else { 0.0 };
+            if dx_nonzero || dt != 0.0 {
+                dus[k] = Some(field.jvp(solver.times[k], &xs[k], &dx, dt)?);
+                *jvp_calls += 1;
+            }
+        }
+        Ok(lambda.iter().zip(dx.iter()).map(|(&l, &d)| l * d as f64).sum())
+    }
+
+    pub fn loss_and_grad_reference(
+        solver: &NsSolver,
+        field: &dyn Field,
+        x0: &[f32],
+        x1: &[f32],
+        dim: usize,
+    ) -> Result<LossGrad> {
+        let n = solver.nfe();
+        let len = x0.len();
+        let samples = len / dim;
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(n + 1);
+        xs.push(x0.to_vec());
+        let mut us: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for i in 0..n {
+            us.push(field.eval(solver.times[i], &xs[i])?);
+            let a = solver.a[i] as f32;
+            let mut next: Vec<f32> = x0.iter().map(|&v| a * v).collect();
+            for (j, &bj) in solver.b[i].iter().enumerate() {
+                let bj = bj as f32;
+                if bj == 0.0 {
+                    continue;
+                }
+                for (o, &uv) in next.iter_mut().zip(us[j].iter()) {
+                    *o += bj * uv;
+                }
+            }
+            xs.push(next);
+        }
+        let xn = &xs[n];
+        let mut loss = 0.0;
+        let mut lambda = vec![0f64; len];
+        for s in 0..samples {
+            let mut mse = 0.0;
+            for k in 0..dim {
+                let d = (xn[s * dim + k] - x1[s * dim + k]) as f64;
+                mse += d * d;
+            }
+            mse /= dim as f64;
+            loss += if mse.is_nan() { f64::INFINITY } else { mse.max(1e-20).ln() };
+            let c = if mse.is_finite() && mse > 1e-20 {
+                2.0 / (samples as f64 * dim as f64 * mse)
+            } else {
+                0.0
+            };
+            for k in 0..dim {
+                lambda[s * dim + k] = c * (xn[s * dim + k] - x1[s * dim + k]) as f64;
+            }
+        }
+        loss /= samples as f64;
+
+        let mut jvp_calls = 0usize;
+        let mut d_a = vec![0.0; n];
+        let mut d_b: Vec<Vec<f64>> = (0..n).map(|i| vec![0.0; i + 1]).collect();
+        let mut d_times = vec![0.0; n + 1];
+        for i in 0..n {
+            d_a[i] =
+                propagate(solver, field, &xs, &lambda, i + 1, Some(x0), None, &mut jvp_calls)?;
+            for j in 0..=i {
+                d_b[i][j] = propagate(
+                    solver,
+                    field,
+                    &xs,
+                    &lambda,
+                    i + 1,
+                    Some(&us[j]),
+                    None,
+                    &mut jvp_calls,
+                )?;
+            }
+        }
+        for (i, d) in d_times.iter_mut().enumerate().take(n).skip(1) {
+            *d = propagate(solver, field, &xs, &lambda, i, None, Some(i), &mut jvp_calls)?;
+        }
+        Ok(LossGrad {
+            loss,
+            d_times,
+            d_a,
+            d_b,
+            jvp_round_trips: jvp_calls as u64,
+            jvp_evals: 2 * jvp_calls as u64,
+            row_evals: samples as u64 * (n + 2 * jvp_calls) as u64,
+        })
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::reference::loss_and_grad_reference;
     use super::*;
+    use crate::distill::teacher::UniformField;
     use crate::distill::theta::{grad_to_theta, pack, unpack};
     use crate::solver::field::{GaussianTargetField, LinearField, NonlinearField};
     use crate::solver::scheduler::Scheduler;
@@ -253,7 +863,7 @@ mod tests {
         let theta = pack(&solver);
         let g = loss_and_grad(&solver, field, &x0, &x1, dim).unwrap();
         let gt = grad_to_theta(&theta, n, &g.d_times, &g.d_a, &g.d_b);
-        assert!(g.jvp_calls > 0);
+        assert!(g.jvp_round_trips > 0);
 
         let h = 1e-3;
         for (m, &gm) in gt.iter().enumerate() {
@@ -327,6 +937,152 @@ mod tests {
         let g = loss_and_grad(&s, &f, &x0, &x1, 2).unwrap();
         for (i, d) in g.d_times.iter().enumerate() {
             assert!(d.abs() < 1e-9, "d_times[{i}] = {d}");
+        }
+    }
+
+    /// Strips every JVP override so the trait's central-difference
+    /// default applies — pins the wavefront against the oracle on the
+    /// finite-difference path too (both then share the per-call batch
+    /// normalization, since the comparison runs single-chunk).
+    struct FdOnly<'a>(&'a dyn Field);
+
+    impl Field for FdOnly<'_> {
+        fn dim(&self) -> usize {
+            self.0.dim()
+        }
+
+        fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+            self.0.eval(t, x)
+        }
+    }
+
+    /// The wavefront must reproduce the parameter-major oracle — same
+    /// loss, same gradients — on closed-form and finite-difference
+    /// fields, non-uniform grids, and sparse b (zero entries exercise
+    /// the structural-liveness bookkeeping).
+    #[test]
+    fn wavefront_matches_parameter_major_reference() {
+        let lin = LinearField { dim: 3, k: -0.8, c: 0.4 };
+        let gauss = GaussianTargetField { dim: 3, sched: Scheduler::FmOt, mu: 0.4, s1: 0.3 };
+        let nonlin = NonlinearField { dim: 3 };
+        let fd = FdOnly(&nonlin);
+        let fields: [(&dyn Field, &str); 4] =
+            [(&lin, "linear"), (&gauss, "gaussian"), (&nonlin, "nonlinear"), (&fd, "fd")];
+        for n in [3usize, 5] {
+            let times: Vec<f64> =
+                (0..=n).map(|i| (i as f64 / n as f64).powf(1.3)).collect();
+            let mut solver = euler_ns(&times);
+            solver.a[1] = 0.9;
+            solver.b[n - 1][0] = 0.0; // sparse entry: liveness gaps
+            if n >= 5 {
+                solver.b[3][1] = 0.0;
+                solver.b[4][2] *= 1.3;
+            }
+            let mut rng = Pcg32::seeded(1234 + n as u64);
+            let x0 = rng.normal_vec(5 * 3);
+            let x1: Vec<f32> = rng.normal_vec(5 * 3).iter().map(|v| v * 0.4).collect();
+            for (f, label) in fields.iter() {
+                let w = loss_and_grad(&solver, *f, &x0, &x1, 3).unwrap();
+                let r = loss_and_grad_reference(&solver, *f, &x0, &x1, 3).unwrap();
+                let close = |a: f64, b: f64| (a - b).abs() <= 1e-10 * a.abs().max(b.abs()).max(1e-12);
+                assert!(close(w.loss, r.loss), "{label} n={n} loss {} vs {}", w.loss, r.loss);
+                for i in 0..=n {
+                    assert!(
+                        close(w.d_times[i], r.d_times[i]),
+                        "{label} n={n} d_times[{i}]: {} vs {}",
+                        w.d_times[i],
+                        r.d_times[i]
+                    );
+                }
+                for i in 0..n {
+                    assert!(
+                        close(w.d_a[i], r.d_a[i]),
+                        "{label} n={n} d_a[{i}]: {} vs {}",
+                        w.d_a[i],
+                        r.d_a[i]
+                    );
+                    for j in 0..=i {
+                        assert!(
+                            close(w.d_b[i][j], r.d_b[i][j]),
+                            "{label} n={n} d_b[{i}][{j}]: {} vs {}",
+                            w.d_b[i][j],
+                            r.d_b[i][j]
+                        );
+                    }
+                }
+                // the wavefront spends the same eval work in O(n) trips
+                assert_eq!(w.jvp_round_trips, (n - 1) as u64, "{label} n={n}");
+                assert!(r.jvp_round_trips > w.jvp_round_trips, "{label} n={n}");
+            }
+        }
+    }
+
+    /// Device round trips per gradient are O(n): exactly n−1 batched
+    /// dispatches per chunk for n = 8 and 16 — versus the oracle's
+    /// ~n³/6 sequential calls.
+    #[test]
+    fn round_trips_linear_in_nfe() {
+        let f = GaussianTargetField { dim: 2, sched: Scheduler::FmOt, mu: 0.2, s1: 0.4 };
+        for n in [8usize, 16] {
+            let times: Vec<f64> = (0..=n).map(|i| i as f64 / n as f64).collect();
+            let solver = euler_ns(&times);
+            let mut rng = Pcg32::seeded(5);
+            let x0 = rng.normal_vec(4 * 2);
+            let x1 = rng.normal_vec(4 * 2);
+            let g = loss_and_grad(&solver, &f, &x0, &x1, 2).unwrap();
+            assert_eq!(g.jvp_round_trips, (n - 1) as u64, "n={n}");
+            assert!(g.jvp_round_trips <= n as u64, "n={n}: O(n) bound");
+        }
+    }
+
+    /// The fanned gradient is bit-identical for any thread count: fixed
+    /// chunk boundaries, fixed reduction order.
+    #[test]
+    fn fanned_gradient_is_thread_count_invariant() {
+        let f = GaussianTargetField { dim: 4, sched: Scheduler::FmOt, mu: 0.3, s1: 0.35 };
+        let src = UniformField(&f);
+        let teacher = TeacherSet::generate(&src, 4, 20, 77, 1).unwrap();
+        let times: Vec<f64> = (0..=6).map(|i| i as f64 / 6.0).collect();
+        let mut solver = euler_ns(&times);
+        solver.a[2] = 0.95;
+        let idx: Vec<usize> = (0..20).rev().collect(); // 3 chunks (8+8+4)
+        let mut fan1 = GradFan::new();
+        let l1 = fan1.compute(&solver, &src, &teacher, &idx, 4, 1).unwrap();
+        let mut fan4 = GradFan::new();
+        let l4 = fan4.compute(&solver, &src, &teacher, &idx, 4, 4).unwrap();
+        assert_eq!(l1.to_bits(), l4.to_bits(), "loss must not depend on threads");
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&fan1.d_times), bits(&fan4.d_times));
+        assert_eq!(bits(&fan1.d_a), bits(&fan4.d_a));
+        assert_eq!(bits(&fan1.d_b), bits(&fan4.d_b));
+        assert_eq!(fan1.jvp_round_trips, fan4.jvp_round_trips);
+        assert_eq!(fan1.row_evals, fan4.row_evals);
+        // 3 chunks × (n−1) dispatches
+        assert_eq!(fan1.jvp_round_trips, 3 * 5);
+        // repeat on the same fan (reused slots/workspaces): identical
+        let l1b = fan1.compute(&solver, &src, &teacher, &idx, 4, 1).unwrap();
+        assert_eq!(l1.to_bits(), l1b.to_bits());
+        assert_eq!(bits(&fan1.d_b), bits(&fan4.d_b));
+    }
+
+    /// A single-chunk fan reduces to `loss_and_grad` exactly (same
+    /// chunking ⇒ same finite-difference normalization ⇒ same bits).
+    #[test]
+    fn single_chunk_fan_matches_loss_and_grad() {
+        let f = NonlinearField { dim: 3 };
+        let src = UniformField(&f);
+        let teacher = TeacherSet::generate(&src, 3, 8, 21, 1).unwrap();
+        let solver = euler_ns(&[0.0, 0.3, 0.65, 1.0]);
+        let idx: Vec<usize> = (0..8).collect();
+        let mut fan = GradFan::new();
+        let loss = fan.compute(&solver, &src, &teacher, &idx, 3, 1).unwrap();
+        let g = loss_and_grad(&solver, &f, &teacher.x0, &teacher.x1, 3).unwrap();
+        assert_eq!(loss.to_bits(), g.loss.to_bits());
+        for i in 0..3 {
+            assert_eq!(fan.d_a[i].to_bits(), g.d_a[i].to_bits());
+            for j in 0..=i {
+                assert_eq!(fan.d_b[i * (i + 1) / 2 + j].to_bits(), g.d_b[i][j].to_bits());
+            }
         }
     }
 }

@@ -15,8 +15,14 @@
 //!   any thread count), disk-cached, with per-row conditioning
 //!   (`DistillField`) and the shared unbiased minibatch sampler;
 //! * `grad`    — exact first-order gradients of the eq. 13 log-MSE loss
-//!   through Algorithm 1, field coupling via `Field::jvp` (JVPs only —
-//!   compiled executables have no transpose);
+//!   through Algorithm 1, computed as a step-major *wavefront*: all
+//!   parameter tangents share the recorded base points, so each step
+//!   pushes every live tangent through the field in one batched
+//!   `Field::jvp_batch_into` dispatch (O(n) device round trips per
+//!   minibatch instead of O(n³); JVPs only — compiled executables have
+//!   no transpose). `GradWorkspace` keeps the tapes allocation-free;
+//!   `GradFan` fans minibatch chunks across threads and device lanes
+//!   with bit-identical results for any thread count;
 //! * `adam`    — the Adam optimizer substrate;
 //! * `trainer` — the first-order training loop: taxonomy init (§3.1),
 //!   validation-PSNR best-checkpoint selection, `SolverMeta` provenance;
@@ -37,7 +43,12 @@ pub mod theta;
 pub mod trainer;
 
 pub use adam::Adam;
-pub use grad::{log_mse_loss, loss_and_grad, sample_loss, LossGrad};
+pub use grad::{
+    log_mse_loss, loss_and_grad, sample_loss, GradFan, GradWorkspace, LossGrad, GRAD_CHUNK,
+};
 pub use spsa::{refine, refine_with, RefineConfig, RefineReport};
-pub use teacher::{sample_indices, ConditionedModel, DistillField, TeacherSet, UniformField};
+pub use teacher::{
+    sample_indices, sample_indices_into, BoundField, ConditionedModel, DistillField, TeacherSet,
+    UniformField,
+};
 pub use trainer::{train, train_from, TrainConfig, TrainReport};

@@ -33,11 +33,24 @@ pub struct RefineConfig {
     /// SPSA perturbation size (c_k = perturb / (k+1)^0.101)
     pub perturb: f64,
     pub seed: u64,
+    /// Teacher-generation fan-out (threads; must be ≥ 1) — the same
+    /// knob the Adam trainer's `TrainConfig::threads` plumbs, so the
+    /// distill CLI drives both optimizers consistently. Fixed-size
+    /// chunking keeps the generated pairs bit-identical for any value.
+    pub threads: usize,
 }
 
 impl Default for RefineConfig {
     fn default() -> Self {
-        RefineConfig { iters: 120, pairs: 32, batch: 16, step: 2e-3, perturb: 1e-3, seed: 7 }
+        RefineConfig {
+            iters: 120,
+            pairs: 32,
+            batch: 16,
+            step: 2e-3,
+            perturb: 1e-3,
+            seed: 7,
+            threads: 1,
+        }
     }
 }
 
@@ -74,14 +87,16 @@ pub fn refine_with(
     cfg: &RefineConfig,
 ) -> Result<(NsSolver, RefineReport)> {
     let n = solver.nfe();
+    anyhow::ensure!(cfg.threads >= 1, "threads must be >= 1 (got 0)");
     // distinct stream from the teacher's noise draws — perturbation
     // signs and minibatch picks must be independent of the pair data
     // (SPSA's gradient estimate assumes it), same discipline as the
     // Adam trainer's rng
     let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(0x05b5_a5ee));
 
-    // GT pairs through the deployed field
-    let teacher = TeacherSet::generate(src, dim, cfg.pairs, cfg.seed, 1)?;
+    // GT pairs through the deployed field (fan-out bit-identical for
+    // any thread count)
+    let teacher = TeacherSet::generate(src, dim, cfg.pairs, cfg.seed, cfg.threads)?;
     let full = src.full();
     let (x0, x1) = (&teacher.x0, &teacher.x1);
     let mut nfe_spent = teacher.gt_evals as usize;
@@ -112,8 +127,8 @@ pub fn refine_with(
             (0..p).map(|_| if rng.next_u32() & 1 == 0 { 1.0 } else { -1.0 }).collect();
         let theta_p: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t + ck * d).collect();
         let theta_m: Vec<f64> = theta.iter().zip(&delta).map(|(t, d)| t - ck * d).collect();
-        let lp = sample_loss(&unpack(&theta_p, n), bfield.as_ref(), &xb0, &xb1, dim)?;
-        let lm = sample_loss(&unpack(&theta_m, n), bfield.as_ref(), &xb0, &xb1, dim)?;
+        let lp = sample_loss(&unpack(&theta_p, n), &bfield, &xb0, &xb1, dim)?;
+        let lm = sample_loss(&unpack(&theta_m, n), &bfield, &xb0, &xb1, dim)?;
         nfe_spent += 2 * n;
         let g_scale = (lp - lm) / (2.0 * ck);
         for (t, d) in theta.iter_mut().zip(&delta) {

@@ -43,32 +43,94 @@ pub trait DistillField: Sync {
     /// Bind the conditioning of a row subset (a minibatch or a
     /// generation chunk): row r of the returned field must see the
     /// conditioning of set row `idx[r]`.
-    fn bind_rows(&self, idx: &[usize]) -> Result<Box<dyn Field + '_>>;
+    fn bind_rows(&self, idx: &[usize]) -> Result<BoundField<'_>>;
+
+    /// Re-bind an existing binding (produced by `bind_rows`/`bind_chunk`
+    /// of this same source) to a new row subset **without allocating** —
+    /// the hot-loop entry: the trainer's gradient fan-out rebinds one
+    /// persistent binding per chunk slot every Adam step. The default
+    /// falls back to a fresh `bind_rows`.
+    fn rebind_rows<'a>(&'a self, bound: &mut BoundField<'a>, idx: &[usize]) -> Result<()> {
+        *bound = self.bind_rows(idx)?;
+        Ok(())
+    }
+
+    /// `bind_rows` for work chunk `chunk` of a deterministic fixed-chunk
+    /// fan-out (teacher generation, gradient minibatch chunks). Sources
+    /// replicated over device lanes use the chunk ordinal to pin the
+    /// binding to a lane replica, so chunks fan across lanes; values must
+    /// not depend on the replica. The default ignores the ordinal.
+    fn bind_chunk(&self, idx: &[usize], _chunk: usize) -> Result<BoundField<'_>> {
+        self.bind_rows(idx)
+    }
 }
 
-/// Forwarding wrapper so `bind_rows` can hand out a borrow of an
-/// unconditioned field as a boxed `Field`.
-struct Borrowed<'a>(&'a dyn Field);
+/// A row-subset binding handed out by [`DistillField::bind_rows`] — a
+/// concrete enum (not a boxed trait object) so bindings can live in
+/// reusable slots and be re-pointed at new rows with zero allocation
+/// ([`DistillField::rebind_rows`]).
+pub enum BoundField<'a> {
+    /// A borrow of an unconditioned field (every row subset is the same).
+    Borrowed(&'a dyn Field),
+    /// A device model bound to the gathered per-row labels.
+    Model(ModelField),
+}
 
-impl Field for Borrowed<'_> {
+impl Field for BoundField<'_> {
     fn dim(&self) -> usize {
-        self.0.dim()
+        match self {
+            BoundField::Borrowed(f) => f.dim(),
+            BoundField::Model(m) => m.dim(),
+        }
     }
 
     fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
-        self.0.eval(t, x)
+        match self {
+            BoundField::Borrowed(f) => f.eval(t, x),
+            BoundField::Model(m) => m.eval(t, x),
+        }
     }
 
     fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
-        self.0.eval_into(t, x, out)
+        match self {
+            BoundField::Borrowed(f) => f.eval_into(t, x, out),
+            BoundField::Model(m) => m.eval_into(t, x, out),
+        }
     }
 
     fn forwards_per_eval(&self) -> usize {
-        self.0.forwards_per_eval()
+        match self {
+            BoundField::Borrowed(f) => f.forwards_per_eval(),
+            BoundField::Model(m) => m.forwards_per_eval(),
+        }
     }
 
     fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
-        self.0.jvp(t, x, v, dt)
+        match self {
+            BoundField::Borrowed(f) => f.jvp(t, x, v, dt),
+            BoundField::Model(m) => m.jvp(t, x, v, dt),
+        }
+    }
+
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        match self {
+            BoundField::Borrowed(f) => f.jvp_batch_into(t, x, tangents, dts, out),
+            BoundField::Model(m) => m.jvp_batch_into(t, x, tangents, dts, out),
+        }
+    }
+
+    fn jvp_cost(&self, dts: &[f64]) -> usize {
+        match self {
+            BoundField::Borrowed(f) => f.jvp_cost(dts),
+            BoundField::Model(m) => m.jvp_cost(dts),
+        }
     }
 }
 
@@ -81,26 +143,76 @@ impl DistillField for UniformField<'_> {
         self.0
     }
 
-    fn bind_rows(&self, _idx: &[usize]) -> Result<Box<dyn Field + '_>> {
-        Ok(Box::new(Borrowed(self.0)))
+    fn bind_rows(&self, _idx: &[usize]) -> Result<BoundField<'_>> {
+        Ok(BoundField::Borrowed(self.0))
+    }
+
+    fn rebind_rows<'a>(&'a self, bound: &mut BoundField<'a>, _idx: &[usize]) -> Result<()> {
+        // row-independent: the existing borrow is already correct
+        debug_assert!(matches!(bound, BoundField::Borrowed(_)));
+        Ok(())
     }
 }
 
 /// A loaded model plus per-pair labels and guidance — the serving-side
 /// conditioning of a teacher set drawn over a label distribution.
 /// `bind_rows` re-binds the cached `LoadedModel` to the gathered labels
-/// (an `Arc` bump plus one small vec; no recompilation).
+/// (an `Arc` bump plus one small vec; no recompilation), and
+/// `rebind_rows` refreshes an existing binding's label vector in place
+/// (no allocation at steady state). With [`ConditionedModel::replicated`]
+/// the model is loaded once per device lane and `bind_chunk` pins chunk
+/// `c` to replica `c % lanes`, so fixed-chunk fan-outs (teacher
+/// generation, gradient minibatch chunks) drive every lane.
 pub struct ConditionedModel {
     full: ModelField,
+    /// Lane replicas (replica 0 backs `full`); length ≥ 1.
+    replicas: Vec<Arc<LoadedModel>>,
 }
 
 impl ConditionedModel {
     pub fn new(model: Arc<LoadedModel>, labels: Vec<i32>, guidance: f32) -> ConditionedModel {
-        ConditionedModel { full: model.bind(labels, guidance) }
+        ConditionedModel { replicas: vec![model.clone()], full: model.bind(labels, guidance) }
+    }
+
+    /// Load the model once per device lane of `rt` so chunked fan-outs
+    /// execute truly concurrently (one compile per lane — outputs are
+    /// bit-identical across lanes, so results don't depend on placement).
+    pub fn replicated(
+        rt: &crate::runtime::Runtime,
+        info: &crate::runtime::ModelInfo,
+        labels: Vec<i32>,
+        guidance: f32,
+    ) -> Result<ConditionedModel> {
+        let replicas = (0..rt.num_lanes())
+            .map(|lane| Ok(Arc::new(LoadedModel::load_on(rt, lane, info)?)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ConditionedModel {
+            full: replicas[0].clone().bind(labels, guidance),
+            replicas,
+        })
     }
 
     pub fn labels(&self) -> &[i32] {
         &self.full.labels
+    }
+
+    /// Number of lane replicas backing chunked fan-outs.
+    pub fn num_replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    fn gather_labels(&self, idx: &[usize], out: &mut Vec<i32>) -> Result<()> {
+        out.clear();
+        for &i in idx {
+            out.push(
+                self.full
+                    .labels
+                    .get(i)
+                    .copied()
+                    .with_context(|| format!("pair index {i} out of range"))?,
+            );
+        }
+        Ok(())
     }
 }
 
@@ -109,18 +221,31 @@ impl DistillField for ConditionedModel {
         &self.full
     }
 
-    fn bind_rows(&self, idx: &[usize]) -> Result<Box<dyn Field + '_>> {
-        let labels = idx
-            .iter()
-            .map(|&i| {
-                self.full
-                    .labels
-                    .get(i)
-                    .copied()
-                    .with_context(|| format!("pair index {i} out of range"))
-            })
-            .collect::<Result<Vec<i32>>>()?;
-        Ok(Box::new(self.full.model().clone().bind(labels, self.full.guidance)))
+    fn bind_rows(&self, idx: &[usize]) -> Result<BoundField<'_>> {
+        self.bind_chunk(idx, 0)
+    }
+
+    fn rebind_rows<'a>(&'a self, bound: &mut BoundField<'a>, idx: &[usize]) -> Result<()> {
+        match bound {
+            BoundField::Model(mf) => {
+                // keep the binding's replica/lane; only the labels move
+                let mut labels = std::mem::take(&mut mf.labels);
+                self.gather_labels(idx, &mut labels)?;
+                mf.labels = labels;
+                Ok(())
+            }
+            BoundField::Borrowed(_) => {
+                *bound = self.bind_rows(idx)?;
+                Ok(())
+            }
+        }
+    }
+
+    fn bind_chunk(&self, idx: &[usize], chunk: usize) -> Result<BoundField<'_>> {
+        let mut labels = Vec::with_capacity(idx.len());
+        self.gather_labels(idx, &mut labels)?;
+        let replica = &self.replicas[chunk % self.replicas.len()];
+        Ok(BoundField::Model(replica.clone().bind(labels, self.full.guidance)))
     }
 }
 
@@ -155,8 +280,11 @@ fn run_chunk(
 ) -> Result<usize> {
     let rows = xc1.len() / dim;
     let idx: Vec<usize> = (chunk * GT_CHUNK..chunk * GT_CHUNK + rows).collect();
-    let field = src.bind_rows(&idx)?;
-    let (out, nfe) = rk45(field.as_ref(), xc0, opts)?;
+    // chunk-ordinal binding: lane-replicated sources fan chunks across
+    // device lanes (values are replica-independent, so GT stays
+    // bit-identical for any lane/thread count)
+    let field = src.bind_chunk(&idx, chunk)?;
+    let (out, nfe) = rk45(&field, xc0, opts)?;
     xc1.copy_from_slice(&out);
     Ok(nfe)
 }
@@ -324,14 +452,24 @@ impl TeacherSet {
 /// by the Adam trainer and the SPSA refiner (whose contiguous windows
 /// used to bias every gradient estimate toward pair order).
 pub fn sample_indices(rng: &mut Pcg32, total: usize, bsz: usize) -> Vec<usize> {
+    let mut idx = Vec::new();
+    sample_indices_into(rng, total, bsz, &mut idx);
+    idx
+}
+
+/// `sample_indices` into a reused buffer — the trainer's hot loop draws
+/// a minibatch every Adam step, and this keeps the draw allocation-free
+/// at steady state. Identical draws to `sample_indices` for the same rng
+/// stream.
+pub fn sample_indices_into(rng: &mut Pcg32, total: usize, bsz: usize, idx: &mut Vec<usize>) {
     let bsz = bsz.min(total);
-    let mut idx: Vec<usize> = (0..total).collect();
+    idx.clear();
+    idx.extend(0..total);
     for i in 0..bsz {
         let j = i + rng.below(total - i);
         idx.swap(i, j);
     }
     idx.truncate(bsz);
-    idx
 }
 
 #[cfg(test)]
@@ -469,6 +607,98 @@ mod stub_tests {
             );
         }
         assert!(src.bind_rows(&[99]).is_err(), "out-of-range index must fail");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// `rebind_rows` must be equivalent to a fresh `bind_rows` — same
+    /// labels, same values — while reusing the binding's buffers (the
+    /// hot-loop contract the gradient fan relies on).
+    #[test]
+    fn rebind_rows_matches_fresh_bind() {
+        let (store, dir) = stub_store(
+            "teacher-rebind",
+            &[StubModel {
+                name: "m",
+                dim: 2,
+                num_classes: 4,
+                forwards_per_eval: 1,
+                k: -0.4,
+                c: 0.0,
+                label_scale: 0.5,
+                cost: 1,
+                buckets: &[4, 8],
+            }],
+        )
+        .unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let info = store.model("m").unwrap();
+        let model = Arc::new(crate::runtime::LoadedModel::load(&rt, info).unwrap());
+        let src = ConditionedModel::new(model, vec![0, 1, 2, 3, 0, 1], 0.0);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.21).cos()).collect();
+        let mut bound = src.bind_rows(&[0, 1, 2, 3]).unwrap();
+        for idx in [[5usize, 2, 0, 4], [1, 1, 3, 0]] {
+            src.rebind_rows(&mut bound, &idx).unwrap();
+            let fresh = src.bind_rows(&idx).unwrap();
+            let a = bound.eval(0.3, &x).unwrap();
+            let b = fresh.eval(0.3, &x).unwrap();
+            assert_eq!(a, b, "rebind {idx:?} must equal a fresh bind");
+        }
+        assert!(src.rebind_rows(&mut bound, &[99]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// Lane replicas: `bind_chunk` pins chunks round-robin across lanes
+    /// and every replica computes identical values.
+    #[test]
+    fn replicated_chunks_pin_lanes_with_identical_values() {
+        let (store, dir) = stub_store(
+            "teacher-repl",
+            &[StubModel {
+                name: "m",
+                dim: 2,
+                num_classes: 3,
+                forwards_per_eval: 1,
+                k: -0.6,
+                c: 0.1,
+                label_scale: 0.25,
+                cost: 1,
+                buckets: &[4],
+            }],
+        )
+        .unwrap();
+        let rt = Runtime::with_lanes(2).unwrap();
+        let info = store.model("m").unwrap();
+        let labels: Vec<i32> = (0..12).map(|i| (i % 3) as i32).collect();
+        let src = ConditionedModel::replicated(&rt, info, labels.clone(), 0.0).unwrap();
+        assert_eq!(src.num_replicas(), 2);
+        let x: Vec<f32> = (0..8).map(|i| (i as f32 * 0.17).sin()).collect();
+        let idx = [0usize, 3, 5, 7];
+        let b0 = src.bind_chunk(&idx, 0).unwrap();
+        let b1 = src.bind_chunk(&idx, 1).unwrap();
+        let (l0, l1) = match (&b0, &b1) {
+            (BoundField::Model(m0), BoundField::Model(m1)) => (m0.lane(), m1.lane()),
+            _ => panic!("replicated bindings must be model-backed"),
+        };
+        assert_ne!(l0, l1, "consecutive chunks must land on different lanes");
+        assert_eq!(
+            b0.eval(0.4, &x).unwrap(),
+            b1.eval(0.4, &x).unwrap(),
+            "replicas must be value-identical"
+        );
+        // thread-fanned teacher generation through replicas (2 chunks,
+        // one per lane) stays bit-identical to the single-lane
+        // single-thread path
+        let single = ConditionedModel::new(
+            Arc::new(crate::runtime::LoadedModel::load(&rt, info).unwrap()),
+            labels,
+            0.0,
+        );
+        let a = TeacherSet::generate(&single, 2, 12, 3, 1).unwrap();
+        let b = TeacherSet::generate(&src, 2, 12, 3, 2).unwrap();
+        assert_eq!(
+            a.x1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.x1.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
         std::fs::remove_dir_all(&dir).ok();
     }
 }

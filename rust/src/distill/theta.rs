@@ -34,24 +34,38 @@ pub fn pack(solver: &NsSolver) -> Vec<f64> {
 }
 
 pub fn unpack(theta: &[f64], n: usize) -> NsSolver {
-    let incs: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
-    let total: f64 = incs.iter().sum();
-    let mut times = Vec::with_capacity(n + 1);
-    times.push(0.0);
+    let mut solver = NsSolver { times: Vec::new(), a: Vec::new(), b: Vec::new() };
+    unpack_into(theta, n, &mut solver);
+    solver
+}
+
+/// `unpack` into a reused solver — the trainer's hot loop rebuilds the
+/// candidate solver every Adam step, and this keeps that rebuild free of
+/// heap allocation at steady state (times/a/b rows only ever reuse their
+/// capacity). Identical arithmetic to `unpack`.
+pub fn unpack_into(theta: &[f64], n: usize, solver: &mut NsSolver) {
+    debug_assert_eq!(theta.len(), theta_len(n));
+    let total: f64 = theta[..n].iter().map(|z| z.exp()).sum();
+    solver.times.clear();
+    solver.times.push(0.0);
     let mut acc = 0.0;
-    for inc in &incs {
-        acc += inc / total;
-        times.push(acc.min(1.0));
+    for z in &theta[..n] {
+        acc += z.exp() / total;
+        solver.times.push(acc.min(1.0));
     }
-    times[n] = 1.0;
-    let a = theta[n..2 * n].to_vec();
-    let mut b = Vec::with_capacity(n);
+    solver.times[n] = 1.0;
+    solver.a.clear();
+    solver.a.extend_from_slice(&theta[n..2 * n]);
+    solver.b.truncate(n);
+    while solver.b.len() < n {
+        solver.b.push(Vec::new());
+    }
     let mut off = 2 * n;
-    for i in 0..n {
-        b.push(theta[off..off + i + 1].to_vec());
+    for (i, row) in solver.b.iter_mut().enumerate() {
+        row.clear();
+        row.extend_from_slice(&theta[off..off + i + 1]);
         off += i + 1;
     }
-    NsSolver { times, a, b }
 }
 
 /// Chain rule of `unpack`: map a gradient in solver space — `d_times`
@@ -68,34 +82,74 @@ pub fn grad_to_theta(
     d_a: &[f64],
     d_b: &[Vec<f64>],
 ) -> Vec<f64> {
-    debug_assert_eq!(theta.len(), theta_len(n));
-    debug_assert_eq!(d_times.len(), n + 1);
-    debug_assert_eq!(d_a.len(), n);
-    let w: Vec<f64> = theta[..n].iter().map(|z| z.exp()).collect();
-    let total: f64 = w.iter().sum();
-    let mut ts = vec![0.0; n + 1];
-    let mut acc = 0.0;
-    for i in 0..n {
-        acc += w[i] / total;
-        ts[i + 1] = acc.min(1.0);
-    }
-    let mut g = vec![0.0; theta.len()];
-    for (m, gm) in g.iter_mut().enumerate().take(n) {
-        let mut s = 0.0;
-        for i in 1..n {
-            // T_n is pinned to 1 by unpack; its derivative is zero.
-            let ind = if m < i { 1.0 } else { 0.0 };
-            s += d_times[i] * w[m] * (ind - ts[i]) / total;
-        }
-        *gm = s;
-    }
-    g[n..2 * n].copy_from_slice(d_a);
-    let mut off = 2 * n;
+    let mut flat = Vec::with_capacity(n * (n + 1) / 2);
     for row in d_b {
-        g[off..off + row.len()].copy_from_slice(row);
-        off += row.len();
+        flat.extend_from_slice(row);
     }
+    let mut scratch = ThetaGrad::new();
+    let mut g = Vec::new();
+    scratch.apply(theta, n, d_times, d_a, &flat, &mut g);
     g
+}
+
+/// Reusable scratch for the allocation-free chain rule: the trainer's
+/// hot loop calls [`ThetaGrad::apply`] once per Adam step, and after the
+/// first step nothing here touches the heap. `d_b_flat` is the
+/// lower-triangular `d_b` with rows concatenated (row i at offset
+/// i·(i+1)/2) — the layout the wavefront gradient engine produces.
+#[derive(Default)]
+pub struct ThetaGrad {
+    /// [w_0..w_{n-1} | T_0..T_n] — the softmax weights and times of
+    /// `unpack` needed by the time-increment Jacobian.
+    wts: Vec<f64>,
+}
+
+impl ThetaGrad {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Same arithmetic as the original `grad_to_theta`, writing into a
+    /// reused `out` buffer.
+    pub fn apply(
+        &mut self,
+        theta: &[f64],
+        n: usize,
+        d_times: &[f64],
+        d_a: &[f64],
+        d_b_flat: &[f64],
+        out: &mut Vec<f64>,
+    ) {
+        debug_assert_eq!(theta.len(), theta_len(n));
+        debug_assert_eq!(d_times.len(), n + 1);
+        debug_assert_eq!(d_a.len(), n);
+        debug_assert_eq!(d_b_flat.len(), n * (n + 1) / 2);
+        self.wts.clear();
+        self.wts.resize(2 * n + 1, 0.0);
+        let (w, ts) = self.wts.split_at_mut(n);
+        for (wi, z) in w.iter_mut().zip(theta[..n].iter()) {
+            *wi = z.exp();
+        }
+        let total: f64 = w.iter().sum();
+        let mut acc = 0.0;
+        for i in 0..n {
+            acc += w[i] / total;
+            ts[i + 1] = acc.min(1.0);
+        }
+        out.clear();
+        out.resize(theta.len(), 0.0);
+        for (m, gm) in out.iter_mut().enumerate().take(n) {
+            let mut s = 0.0;
+            for i in 1..n {
+                // T_n is pinned to 1 by unpack; its derivative is zero.
+                let ind = if m < i { 1.0 } else { 0.0 };
+                s += d_times[i] * w[m] * (ind - ts[i]) / total;
+            }
+            *gm = s;
+        }
+        out[n..2 * n].copy_from_slice(d_a);
+        out[2 * n..].copy_from_slice(d_b_flat);
+    }
 }
 
 #[cfg(test)]

@@ -10,15 +10,23 @@
 //! tracking with best-checkpoint selection, and a report carrying the
 //! full `SolverMeta` provenance for artifact emission
 //! (`NsSolver::to_json_with_meta`).
+//!
+//! The inner loop is the wavefront gradient engine (`GradFan`,
+//! DESIGN.md §8): minibatch rows fan over `cfg.threads` workers in fixed
+//! chunks — the *same* `threads` that fans teacher generation — every
+//! buffer (minibatch indices/rows, the candidate solver, the gradient
+//! tapes, the theta chain rule, Adam moments) is reused across
+//! iterations, so a steady-state Adam step performs zero hot-loop heap
+//! allocation; only the periodic validation pass allocates.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
 use crate::distill::adam::Adam;
-use crate::distill::grad::{loss_and_grad, sample_loss};
-use crate::distill::teacher::{sample_indices, DistillField, TeacherSet};
-use crate::distill::theta::{grad_to_theta, pack, unpack};
+use crate::distill::grad::{sample_loss, GradFan};
+use crate::distill::teacher::{sample_indices_into, DistillField, TeacherSet};
+use crate::distill::theta::{pack, unpack, unpack_into, ThetaGrad};
 use crate::solver::field::Field;
 use crate::solver::ns::{NsSolver, SolverMeta};
 use crate::solver::taxonomy::init_ns;
@@ -35,8 +43,9 @@ pub struct TrainConfig {
     pub batch: usize,
     pub lr: f64,
     pub seed: u64,
-    /// Teacher-generation fan-out (threads; chunking keeps results
-    /// bit-identical for any value).
+    /// Worker fan-out for teacher generation *and* the gradient engine
+    /// (one consistent knob; must be ≥ 1). Fixed-size chunking keeps
+    /// teacher pairs and gradients bit-identical for any value.
     pub threads: usize,
     /// Taxonomy init: euler | midpoint | rk4 | auto (§3.1).
     pub init: String,
@@ -76,7 +85,9 @@ pub struct TrainReport {
     pub final_val_psnr: f64,
     pub iters: usize,
     /// Model forward passes spent training (rows × forwards_per_eval,
-    /// JVPs accounted at their finite-difference cost of two evals).
+    /// JVPs accounted at their true [`crate::solver::field::Field::jvp_cost`]:
+    /// two evals per tangent under central differences, cheaper for
+    /// closed forms).
     pub forwards: u64,
     /// Mean RK45 NFE per teacher trajectory.
     pub gt_nfe: u64,
@@ -129,6 +140,7 @@ pub fn train_from(
     let n = init.nfe();
     anyhow::ensure!(cfg.iters > 0, "iters must be positive");
     anyhow::ensure!(cfg.pairs > 0 && cfg.val_pairs > 0, "need training and validation pairs");
+    anyhow::ensure!(cfg.threads >= 1, "threads must be >= 1 (got 0)");
     // with an empty scope the cache key degenerates to (dim, pairs,
     // seed) and pairs generated through a *different* field would be
     // silently reused — refuse rather than train on foreign ground truth
@@ -158,7 +170,7 @@ pub fn train_from(
 
     let mut theta = pack(init);
     let mut forwards: u64 = 0;
-    let init_loss = sample_loss(init, vfield.as_ref(), &vx0, &vx1, dim)?;
+    let init_loss = sample_loss(init, &vfield, &vx0, &vx1, dim)?;
     forwards += cfg.val_pairs as u64 * fpe * n as u64;
     let init_val_psnr = psnr_from_log_mse(init_loss);
 
@@ -167,17 +179,24 @@ pub fn train_from(
     // separate stream from the teacher's noise draws
     let mut rng = Pcg32::seeded(cfg.seed.wrapping_add(0x5eed_1d8a));
     let mut history: Vec<(usize, f64)> = Vec::new();
-    let (mut xb0, mut xb1) = (Vec::new(), Vec::new());
     let bsz = cfg.batch.min(cfg.pairs).max(1);
+    // hot-loop state, allocated once and reused every Adam step: the
+    // wavefront gradient fan (chunk slots, workspaces, lane-pinned
+    // bindings), the candidate solver, the theta chain rule, and the
+    // minibatch index buffer — the loop body below is allocation-free
+    // at steady state (measured in benches/distill_bench.rs)
+    let mut fan = GradFan::new();
+    let mut tgrad = ThetaGrad::new();
+    let mut gtheta: Vec<f64> = Vec::new();
+    let mut solver_buf = init.clone();
+    let mut idx: Vec<usize> = Vec::new();
 
     for k in 0..cfg.iters {
-        let idx = sample_indices(&mut rng, cfg.pairs, bsz);
-        teacher.gather(&idx, &mut xb0, &mut xb1);
-        let bfield = src.bind_rows(&idx)?;
-        let solver = unpack(&theta, n);
-        let g = loss_and_grad(&solver, bfield.as_ref(), &xb0, &xb1, dim)?;
-        forwards += bsz as u64 * fpe * (n + 2 * g.jvp_calls) as u64;
-        let gtheta = grad_to_theta(&theta, n, &g.d_times, &g.d_a, &g.d_b);
+        sample_indices_into(&mut rng, cfg.pairs, bsz, &mut idx);
+        unpack_into(&theta, n, &mut solver_buf);
+        fan.compute(&solver_buf, src, &teacher, &idx, dim, cfg.threads)?;
+        forwards += fpe * fan.row_evals;
+        tgrad.apply(&theta, n, &fan.d_times, &fan.d_a, &fan.d_b, &mut gtheta);
         if gtheta.iter().any(|v| !v.is_finite()) {
             // a pathological minibatch (e.g. clamped loss) must not
             // poison the Adam moments — skip the step, keep training
@@ -194,7 +213,7 @@ pub fn train_from(
         if (cfg.val_every > 0 && (k + 1) % cfg.val_every == 0) || k + 1 == cfg.iters {
             let cand = unpack(&theta, n);
             if cand.validate().is_ok() {
-                let l = sample_loss(&cand, vfield.as_ref(), &vx0, &vx1, dim)?;
+                let l = sample_loss(&cand, &vfield, &vx0, &vx1, dim)?;
                 forwards += cfg.val_pairs as u64 * fpe * n as u64;
                 history.push((k + 1, psnr_from_log_mse(l)));
                 if l < best.1 {

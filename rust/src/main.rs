@@ -31,8 +31,12 @@ USAGE:
                     (rust-native solver distillation against the deployed
                      field — first-order Adam on analytic gradients by
                      default, zeroth-order SPSA via --method spsa; no
-                     python needed. --register adds the artifact to the
-                     store so `serve`/`sample` route to it immediately)
+                     python needed. --threads fans teacher generation AND
+                     the wavefront gradient chunks, --lanes replicates
+                     the model across device lanes for both; results are
+                     bit-identical for any --threads/--lanes. --register
+                     adds the artifact to the store so `serve`/`sample`
+                     route to it immediately)
   bns-serve solvers [--artifacts DIR]    list distilled solver artifacts
   bns-serve models  [--artifacts DIR]    list AOT model artifacts
 ";
@@ -223,6 +227,11 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let threads: usize =
                 flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(4);
             let lanes: usize = flags.get("lanes").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            // one consistent worker/lane pair drives teacher generation
+            // and the gradient fan-out alike — 0 is a config error, not
+            // a silent "no parallelism"
+            anyhow::ensure!(threads >= 1, "--threads must be >= 1 (got 0)");
+            anyhow::ensure!(lanes >= 1, "--lanes must be >= 1 (got 0)");
             let method = flags.get("method").map(|s| s.as_str()).unwrap_or("adam");
             let init = flags
                 .get("init")
@@ -232,12 +241,13 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let rt = Arc::new(Runtime::with_lanes(lanes)?);
             let info = store.model(&model)?.clone();
             // one conditioned source recipe for both optimizers: labels
-            // cycle the model's classes, one pair per row
+            // cycle the model's classes, one pair per row; the model is
+            // replicated across every device lane so chunked fan-outs
+            // (teacher RK45, wavefront gradients) drive all of them
             let make_src = |count: usize| -> Result<bns_serve::distill::ConditionedModel> {
                 let labels: Vec<i32> =
                     (0..count).map(|i| (i % info.num_classes) as i32).collect();
-                let loaded = Arc::new(bns_serve::runtime::LoadedModel::load(&rt, &info)?);
-                Ok(bns_serve::distill::ConditionedModel::new(loaded, labels, guidance))
+                bns_serve::distill::ConditionedModel::replicated(&rt, &info, labels, guidance)
             };
 
             if method == "spsa" {
@@ -247,7 +257,14 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                     bns_serve::solver::taxonomy::init_ns(init, nfe)?
                 };
                 let src = make_src(pairs)?;
-                let cfg = bns_serve::distill::RefineConfig { iters, pairs, batch, seed, ..Default::default() };
+                let cfg = bns_serve::distill::RefineConfig {
+                    iters,
+                    pairs,
+                    batch,
+                    seed,
+                    threads,
+                    ..Default::default()
+                };
                 println!("refining {model} w={guidance} nfe={nfe} for {iters} SPSA iters...");
                 let (refined, report) =
                     bns_serve::distill::refine_with(&src, &init_solver, info.dim, &cfg)?;

@@ -35,6 +35,13 @@
 //! `catch_unwind` so a panicking backend yields an error reply instead of
 //! a wedged caller. `benches/perf_layers.rs` measures allocations per
 //! eval with a counting global allocator to pin the claim.
+//!
+//! The wavefront gradient engine's stacked batched-JVP evals
+//! (`ModelField::jvp_batch_into`, DESIGN.md §8) ride this same pooled
+//! RPC: one bucketized dispatch carries the `x ± ε·v` rows of every
+//! tangent of a training step, so distillation training inherits the
+//! zero-allocation steady state — `benches/distill_bench.rs` pins it
+//! per Adam step with the same counting-allocator method.
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};

@@ -35,6 +35,25 @@ struct EvalScratch {
     ob: Vec<f32>,
 }
 
+/// Reusable staging for the stacked batched-JVP path (`jvp_batch_into`):
+/// the `x ± ε·v` perturbation rows for every tangent, their tiled
+/// labels, and the stacked velocities coming back. One per **binding**
+/// (`ModelField`), NOT per loaded model: gradient-fan workers each hold
+/// their own persistent binding, and a shared-model scratch would
+/// serialize every worker's JVP evals behind one mutex held across the
+/// device RPCs. Separate from `EvalScratch` so the stacked eval can
+/// still take the off-bucket padding path underneath without
+/// re-entering a lock. Empty vectors at construction — a binding that
+/// never computes JVPs (the serving path) pays nothing.
+#[derive(Default)]
+struct JvpScratch {
+    xs: Vec<f32>,
+    lb: Vec<i32>,
+    ob: Vec<f32>,
+    /// Per-tangent normalized step size (0.0 marks a zero tangent).
+    h: Vec<f64>,
+}
+
 /// A model's compiled executables, pinned to one device lane. Cacheable:
 /// workers load a model once and bind labels/guidance per batch.
 pub struct LoadedModel {
@@ -94,7 +113,7 @@ impl LoadedModel {
     /// `clone`, no other work) — callers keeping the model cached clone
     /// before binding.
     pub fn bind(self: Arc<Self>, labels: Vec<i32>, guidance: f32) -> ModelField {
-        ModelField { model: self, labels, guidance }
+        ModelField { model: self, labels, guidance, jvp_scratch: Mutex::new(JvpScratch::default()) }
     }
 }
 
@@ -103,6 +122,10 @@ pub struct ModelField {
     model: Arc<LoadedModel>,
     pub labels: Vec<i32>,
     pub guidance: f32,
+    /// Per-binding JVP staging (see [`JvpScratch`]): bindings are what
+    /// gradient-fan workers hold, so workers never contend on a shared
+    /// scratch while a device RPC is in flight.
+    jvp_scratch: Mutex<JvpScratch>,
 }
 
 impl ModelField {
@@ -133,6 +156,47 @@ impl ModelField {
     pub fn model(&self) -> &Arc<LoadedModel> {
         &self.model
     }
+
+    /// `eval_into` with the per-row labels passed explicitly — the
+    /// bucket-chunking core shared by the plain bound-labels path and the
+    /// stacked batched-JVP path (whose perturbation rows tile the bound
+    /// labels once per tangent sign).
+    fn eval_labeled_into(&self, t: f64, x: &[f32], labels: &[i32], out: &mut [f32]) -> Result<()> {
+        let dim = self.model.info.dim;
+        let rows = x.len() / dim;
+        debug_assert_eq!(rows, labels.len(), "labels must match rows");
+        debug_assert_eq!(out.len(), x.len(), "output buffer must match x");
+        let mut r = 0;
+        while r < rows {
+            let exe = self.model.pick(rows - r);
+            let take = exe.batch.min(rows - r);
+            if take == exe.batch {
+                // bucket-aligned: no padding, no staging copy
+                exe.run_into(
+                    &x[r * dim..(r + take) * dim],
+                    t as f32,
+                    self.guidance,
+                    &labels[r..r + take],
+                    &mut out[r * dim..(r + take) * dim],
+                )?;
+            } else {
+                // pad up to the bucket through reused scratch
+                let mut s = self.model.scratch.lock().unwrap();
+                let s = &mut *s;
+                s.xb.clear();
+                s.xb.resize(exe.batch * dim, 0.0);
+                s.xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
+                s.lb.clear();
+                s.lb.resize(exe.batch, self.model.info.null_class as i32);
+                s.lb[..take].copy_from_slice(&labels[r..r + take]);
+                s.ob.resize(exe.batch * dim, 0.0);
+                exe.run_into(&s.xb, t as f32, self.guidance, &s.lb, &mut s.ob)?;
+                out[r * dim..(r + take) * dim].copy_from_slice(&s.ob[..take * dim]);
+            }
+            r += take;
+        }
+        Ok(())
+    }
 }
 
 impl Field for ModelField {
@@ -154,46 +218,157 @@ impl Field for ModelField {
     /// allocation; only off-bucket tails go through the (reused,
     /// preallocated) padding scratch.
     fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
-        let dim = self.model.info.dim;
-        let rows = x.len() / dim;
-        debug_assert_eq!(rows, self.labels.len(), "labels must match batch");
-        debug_assert_eq!(out.len(), x.len(), "output buffer must match x");
-        let mut r = 0;
-        while r < rows {
-            let exe = self.model.pick(rows - r);
-            let take = exe.batch.min(rows - r);
-            if take == exe.batch {
-                // bucket-aligned: no padding, no staging copy
-                exe.run_into(
-                    &x[r * dim..(r + take) * dim],
-                    t as f32,
-                    self.guidance,
-                    &self.labels[r..r + take],
-                    &mut out[r * dim..(r + take) * dim],
-                )?;
-            } else {
-                // pad up to the bucket through reused scratch
-                let mut s = self.model.scratch.lock().unwrap();
-                let s = &mut *s;
-                s.xb.clear();
-                s.xb.resize(exe.batch * dim, 0.0);
-                s.xb[..take * dim].copy_from_slice(&x[r * dim..(r + take) * dim]);
-                s.lb.clear();
-                s.lb.resize(exe.batch, self.model.info.null_class as i32);
-                s.lb[..take].copy_from_slice(&self.labels[r..r + take]);
-                s.ob.resize(exe.batch * dim, 0.0);
-                exe.run_into(&s.xb, t as f32, self.guidance, &s.lb, &mut s.ob)?;
-                out[r * dim..(r + take) * dim].copy_from_slice(&s.ob[..take * dim]);
-            }
-            r += take;
-        }
-        Ok(())
+        debug_assert_eq!(
+            x.len() / self.model.info.dim,
+            self.labels.len(),
+            "labels must match batch"
+        );
+        self.eval_labeled_into(t, x, &self.labels, out)
     }
 
     fn forwards_per_eval(&self) -> usize {
         // CFG-composed artifacts run cond + uncond branches per row; the
         // manifest says which composition a model was lowered with.
         self.model.info.forwards_per_eval
+    }
+
+    /// Wavefront JVP: every tangent shares the base point `(t, x)`, so
+    /// all `x ± ε·v` perturbation rows of the dt-free tangents stack into
+    /// one bucketized device eval — the stack still chunks over the
+    /// compiled buckets underneath, but every resulting RPC carries a
+    /// full bucket of useful rows, where sequential `jvp` calls paid a
+    /// latency-bound pair of batch-sized RPCs per tangent. Timed
+    /// tangents (at most one per wavefront step: a step's own time
+    /// parameter) cannot join the stack — the compiled signature takes
+    /// one scalar `t` per call — and pay their own `t ± ε·dt` eval pair.
+    ///
+    /// Arithmetic (per-tangent normalized step, f64 perturbation and
+    /// difference) replicates the trait's central-difference default
+    /// exactly, so each output row is bit-identical to a sequential
+    /// [`Field::jvp`] call; staging lives in the model's reused
+    /// `JvpScratch`, so the steady state allocates nothing.
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let len = x.len();
+        let tcount = dts.len();
+        anyhow::ensure!(
+            tangents.len() == tcount * len && out.len() == tangents.len(),
+            "jvp_batch_into: tangents [{}] / dts [{}] / out [{}] disagree with x [{len}]",
+            tangents.len(),
+            dts.len(),
+            out.len()
+        );
+        let rows = len / self.model.info.dim;
+        let mut s = self.jvp_scratch.lock().unwrap();
+        let s = &mut *s;
+        // per-tangent normalized step (same formula as the trait default);
+        // h = 0 marks a zero tangent whose JVP is identically zero
+        s.h.clear();
+        let mut spatial = 0usize;
+        for (i, &dt) in dts.iter().enumerate() {
+            let v = &tangents[i * len..(i + 1) * len];
+            let scale = v.iter().fold(dt.abs(), |m, &vi| m.max((vi as f64).abs()));
+            let h = if scale == 0.0 { 0.0 } else { 1e-3 / scale };
+            s.h.push(h);
+            if h != 0.0 && dt == 0.0 {
+                spatial += 1;
+            }
+        }
+
+        // stack [x + h·v ; x - h·v] blocks for every dt-free tangent and
+        // tile the bound labels per block — one bucketized dispatch
+        s.xs.clear();
+        s.xs.resize(2 * spatial * len, 0.0);
+        s.lb.clear();
+        s.lb.resize(2 * spatial * rows, 0);
+        let mut q = 0usize;
+        for (i, &dt) in dts.iter().enumerate() {
+            let h = s.h[i];
+            if h == 0.0 || dt != 0.0 {
+                continue;
+            }
+            let v = &tangents[i * len..(i + 1) * len];
+            let (plus, minus) = {
+                let base = 2 * q * len;
+                let (a, b) = s.xs[base..base + 2 * len].split_at_mut(len);
+                (a, b)
+            };
+            for (((p, m), &xv), &vv) in
+                plus.iter_mut().zip(minus.iter_mut()).zip(x.iter()).zip(v.iter())
+            {
+                *p = (xv as f64 + h * vv as f64) as f32;
+                *m = (xv as f64 - h * vv as f64) as f32;
+            }
+            s.lb[2 * q * rows..(2 * q + 1) * rows].copy_from_slice(&self.labels);
+            s.lb[(2 * q + 1) * rows..(2 * q + 2) * rows].copy_from_slice(&self.labels);
+            q += 1;
+        }
+        s.ob.resize(2 * spatial * len, 0.0);
+        if spatial > 0 {
+            let (xs, ob) = (&s.xs[..2 * spatial * len], &mut s.ob[..2 * spatial * len]);
+            self.eval_labeled_into(t, xs, &s.lb, ob)?;
+        }
+        // two extra blocks past the spatial region for the timed path —
+        // appended so un-scattered spatial results are never clobbered
+        let tb = 2 * spatial * len;
+        s.xs.resize(tb + 2 * len, 0.0);
+        s.ob.resize(tb + 2 * len, 0.0);
+
+        // scatter the central differences back into the caller's rows
+        q = 0;
+        for (i, &dt) in dts.iter().enumerate() {
+            let h = s.h[i];
+            let o = &mut out[i * len..(i + 1) * len];
+            if h == 0.0 {
+                o.fill(0.0);
+                continue;
+            }
+            if dt == 0.0 {
+                let up = &s.ob[2 * q * len..(2 * q + 1) * len];
+                let um = &s.ob[(2 * q + 1) * len..(2 * q + 2) * len];
+                for ((ov, &a), &b) in o.iter_mut().zip(up.iter()).zip(um.iter()) {
+                    *ov = ((a as f64 - b as f64) / (2.0 * h)) as f32;
+                }
+                q += 1;
+            } else {
+                // timed tangent: its own t ± h·dt eval pair in the
+                // appended staging blocks
+                let v = &tangents[i * len..(i + 1) * len];
+                for ((p, &xv), &vv) in
+                    s.xs[tb..tb + len].iter_mut().zip(x.iter()).zip(v.iter())
+                {
+                    *p = (xv as f64 + h * vv as f64) as f32;
+                }
+                {
+                    let (xp, ob) = (&s.xs[tb..tb + len], &mut s.ob[tb..tb + len]);
+                    self.eval_labeled_into(t + h * dt, xp, &self.labels, ob)?;
+                }
+                for ((p, &xv), &vv) in
+                    s.xs[tb + len..tb + 2 * len].iter_mut().zip(x.iter()).zip(v.iter())
+                {
+                    *p = (xv as f64 - h * vv as f64) as f32;
+                }
+                {
+                    let (xm, ob) =
+                        (&s.xs[tb + len..tb + 2 * len], &mut s.ob[tb + len..tb + 2 * len]);
+                    self.eval_labeled_into(t - h * dt, xm, &self.labels, ob)?;
+                }
+                for ((ov, &a), &b) in o
+                    .iter_mut()
+                    .zip(s.ob[tb..tb + len].iter())
+                    .zip(s.ob[tb + len..tb + 2 * len].iter())
+                {
+                    *ov = ((a as f64 - b as f64) / (2.0 * h)) as f32;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -257,6 +432,43 @@ mod tests {
         let o3 = f3.eval(0.6, &x3).unwrap();
         let o4 = f4.eval(0.6, &x4).unwrap();
         assert_eq!(o3[..], o4[..12], "padding must not perturb real rows");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    /// The stacked batched JVP must be bit-identical to tangent-by-
+    /// tangent trait-default `jvp` (central differences through `eval`),
+    /// including a timed tangent and a zero tangent, and across repeat
+    /// calls (the scratch must never leak state between batches).
+    #[test]
+    fn jvp_batch_matches_sequential_default_jvp() {
+        let (store, dir) = stub_store("jvpb");
+        let rt = Runtime::cpu().unwrap();
+        let info = store.model("m").unwrap();
+        // 3 rows: exercises the off-bucket padding path underneath too
+        let field = ModelField::new(&rt, info, vec![0, 1, 2], 0.5).unwrap();
+        let len = 12;
+        let x: Vec<f32> = (0..len).map(|i| (i as f32 * 0.31).sin()).collect();
+        let mut tangents = vec![0f32; 4 * len];
+        for (i, v) in tangents.iter_mut().enumerate() {
+            // tangent 2 stays identically zero
+            *v = if (2 * len..3 * len).contains(&i) { 0.0 } else { ((i * 7 % 13) as f32 - 6.0) * 0.2 };
+        }
+        let dts = [0.0, 1.0, 0.0, -0.5];
+        let mut batch = vec![f32::NAN; tangents.len()];
+        for round in 0..3 {
+            field.jvp_batch_into(0.4, &x, &tangents, &dts, &mut batch).unwrap();
+            for (i, &dt) in dts.iter().enumerate() {
+                let seq = field.jvp(0.4, &x, &tangents[i * len..(i + 1) * len], dt).unwrap();
+                assert_eq!(
+                    seq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    batch[i * len..(i + 1) * len]
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect::<Vec<_>>(),
+                    "round {round} tangent {i} (dt={dt})"
+                );
+            }
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -82,6 +82,56 @@ pub trait Field: Send + Sync {
             .map(|(&a, &b)| ((a as f64 - b as f64) / (2.0 * h)) as f32)
             .collect())
     }
+
+    /// Batched multi-tangent JVP — the wavefront entry of the distill
+    /// gradient engine (`distill::grad`): all tangents share one base
+    /// point `(t, x)`, so a device-backed field can push every tangent
+    /// through the model in a single bucketized dispatch instead of one
+    /// round trip per tangent.
+    ///
+    /// `tangents` is row-major `[T, x.len()]` (tangent i in
+    /// `tangents[i*len..(i+1)*len]`), `dts` holds the scalar time tangent
+    /// of each, and `out` (same shape as `tangents`) receives the JVPs.
+    /// Each output row must equal what [`Field::jvp`] returns for that
+    /// tangent alone — the default delegates tangent-by-tangent, so any
+    /// field is correct by construction; `ModelField` overrides it with a
+    /// stacked central-difference eval (`runtime::model_field`), and the
+    /// analytic fields with allocation-free closed-form loops.
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let len = x.len();
+        anyhow::ensure!(
+            tangents.len() == dts.len() * len && out.len() == tangents.len(),
+            "jvp_batch_into: tangents [{}] / dts [{}] / out [{}] disagree with x [{len}]",
+            tangents.len(),
+            dts.len(),
+            out.len()
+        );
+        for (i, &dt) in dts.iter().enumerate() {
+            let u = self.jvp(t, x, &tangents[i * len..(i + 1) * len], dt)?;
+            out[i * len..(i + 1) * len].copy_from_slice(&u);
+        }
+        Ok(())
+    }
+
+    /// Field evaluations charged for one (batched) JVP with these time
+    /// tangents — the honest NFE cost of `jvp_batch_into` (and of `jvp`,
+    /// via a single-entry slice). The default is the central-difference
+    /// cost of two evals per tangent; closed-form fields override it with
+    /// their true cost (zero for purely analytic JVPs, two per *timed*
+    /// tangent when only the ∂u/∂t part falls back to differences).
+    /// `CountingField` and the trainer's `forwards` bookkeeping both
+    /// meter JVPs through this, so the old sequential path and the new
+    /// wavefront path stay consistent.
+    fn jvp_cost(&self, dts: &[f64]) -> usize {
+        2 * dts.len()
+    }
 }
 
 /// Counting wrapper: tracks evaluations (NFE) across a sampling run.
@@ -119,12 +169,35 @@ impl<'a> Field for CountingField<'a> {
         self.inner.forwards_per_eval()
     }
 
-    /// Counted as two evaluations — the finite-difference cost of the
-    /// default `jvp`. Closed-form overrides are cheaper, so this is a
-    /// conservative (upper-bound) accounting.
+    /// Counted at the inner field's true cost ([`Field::jvp_cost`]): two
+    /// evals for a finite-difference JVP, zero for a closed form, two
+    /// per *timed* tangent for fields whose ∂u/∂t alone needs
+    /// differences.
     fn jvp(&self, t: f64, x: &[f32], v: &[f32], dt: f64) -> Result<Vec<f32>> {
-        self.count.fetch_add(2, std::sync::atomic::Ordering::Relaxed);
+        self.count
+            .fetch_add(self.inner.jvp_cost(std::slice::from_ref(&dt)), std::sync::atomic::Ordering::Relaxed);
         self.inner.jvp(t, x, v, dt)
+    }
+
+    /// A batched JVP with T tangents counts as `jvp_cost(dts)` evals —
+    /// 2·T under central differences — exactly what T sequential `jvp`
+    /// calls would have counted, so NFE bookkeeping is identical across
+    /// the sequential and wavefront gradient paths.
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.count
+            .fetch_add(self.inner.jvp_cost(dts), std::sync::atomic::Ordering::Relaxed);
+        self.inner.jvp_batch_into(t, x, tangents, dts, out)
+    }
+
+    fn jvp_cost(&self, dts: &[f64]) -> usize {
+        self.inner.jvp_cost(dts)
     }
 }
 
@@ -241,6 +314,33 @@ impl Field for LinearField {
     fn jvp(&self, _t: f64, _x: &[f32], v: &[f32], _dt: f64) -> Result<Vec<f32>> {
         Ok(v.iter().map(|&vv| (self.k * vv as f64) as f32).collect())
     }
+
+    /// Closed-form batch: one allocation-free pass over all tangents.
+    fn jvp_batch_into(
+        &self,
+        _t: f64,
+        _x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == tangents.len() && tangents.len() % dts.len().max(1) == 0,
+            "jvp_batch_into: tangents [{}] / dts [{}] / out [{}] disagree",
+            tangents.len(),
+            dts.len(),
+            out.len()
+        );
+        for (o, &vv) in out.iter_mut().zip(tangents.iter()) {
+            *o = (self.k * vv as f64) as f32;
+        }
+        Ok(())
+    }
+
+    /// The JVP is fully analytic — zero field evaluations.
+    fn jvp_cost(&self, _dts: &[f64]) -> usize {
+        0
+    }
 }
 
 impl LinearField {
@@ -277,6 +377,40 @@ impl Field for NonlinearField {
                 ((s3t - 0.3 * (xv as f64).sin()) * vv as f64 + 3.0 * c3t * xv as f64 * dt) as f32
             })
             .collect())
+    }
+
+    /// Closed-form batch: same math as `jvp`, no per-tangent allocation.
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let len = x.len();
+        anyhow::ensure!(
+            tangents.len() == dts.len() * len && out.len() == tangents.len(),
+            "jvp_batch_into: tangents [{}] / dts [{}] / out [{}] disagree with x [{len}]",
+            tangents.len(),
+            dts.len(),
+            out.len()
+        );
+        let (s3t, c3t) = (3.0 * t).sin_cos();
+        for (i, &dt) in dts.iter().enumerate() {
+            let v = &tangents[i * len..(i + 1) * len];
+            let o = &mut out[i * len..(i + 1) * len];
+            for ((ov, &xv), &vv) in o.iter_mut().zip(x.iter()).zip(v.iter()) {
+                *ov = ((s3t - 0.3 * (xv as f64).sin()) * vv as f64
+                    + 3.0 * c3t * xv as f64 * dt) as f32;
+            }
+        }
+        Ok(())
+    }
+
+    /// Fully analytic JVP — zero field evaluations.
+    fn jvp_cost(&self, _dts: &[f64]) -> usize {
+        0
     }
 }
 
@@ -333,6 +467,64 @@ impl Field for GaussianTargetField {
             }
         }
         Ok(out)
+    }
+
+    /// Closed form in x for every tangent; the (at most once per
+    /// wavefront step) timed tangent reuses one shared `t ± h` eval pair.
+    fn jvp_batch_into(
+        &self,
+        t: f64,
+        x: &[f32],
+        tangents: &[f32],
+        dts: &[f64],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let len = x.len();
+        anyhow::ensure!(
+            tangents.len() == dts.len() * len && out.len() == tangents.len(),
+            "jvp_batch_into: tangents [{}] / dts [{}] / out [{}] disagree with x [{len}]",
+            tangents.len(),
+            dts.len(),
+            out.len()
+        );
+        let (a, s) = (self.sched.alpha(t), self.sched.sigma(t));
+        let (da, ds) = (self.sched.dalpha(t), self.sched.dsigma(t));
+        let var = (a * self.s1).powi(2) + s * s;
+        let de1 = a * self.s1 * self.s1 / var;
+        let coef = da * de1 + ds * (1.0 - a * de1) / s.max(1e-9);
+        // the time part is shared by every timed tangent (same base x)
+        let timed = if dts.iter().any(|&dt| dt != 0.0) {
+            let h = 1e-4;
+            Some((self.eval(t + h, x)?, self.eval(t - h, x)?, h))
+        } else {
+            None
+        };
+        for (i, &dt) in dts.iter().enumerate() {
+            let v = &tangents[i * len..(i + 1) * len];
+            let o = &mut out[i * len..(i + 1) * len];
+            for (ov, &vv) in o.iter_mut().zip(v.iter()) {
+                *ov = (coef * vv as f64) as f32;
+            }
+            if dt != 0.0 {
+                let (up, um, h) = timed.as_ref().unwrap();
+                for ((ov, &p), &m) in o.iter_mut().zip(up.iter()).zip(um.iter()) {
+                    *ov += (((p as f64 - m as f64) / (2.0 * h)) * dt) as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Closed form in x; a batch with any *timed* tangent pays one
+    /// shared two-eval central-difference pair for the ∂u/∂t part
+    /// (`jvp_batch_into` computes it once at the common base point, so
+    /// the cost does not scale with the number of timed tangents).
+    fn jvp_cost(&self, dts: &[f64]) -> usize {
+        if dts.iter().any(|&dt| dt != 0.0) {
+            2
+        } else {
+            0
+        }
     }
 }
 
@@ -407,14 +599,69 @@ mod tests {
         assert_eq!(f.jvp(0.4, &x, &z, 0.0).unwrap(), z);
     }
 
+    /// JVP accounting is metered by `jvp_cost`: finite-difference JVPs
+    /// count two evals per tangent (batched T tangents -> 2·T), closed
+    /// forms count their true (zero / timed-only) cost — identically
+    /// across the sequential and batched paths.
     #[test]
-    fn counting_field_counts_jvp_as_two_evals() {
-        let f = LinearField { dim: 2, k: -1.0, c: 0.0 };
-        let cf = CountingField::new(&f);
+    fn counting_field_meters_jvp_cost() {
+        let f = NonlinearField { dim: 2 };
         let x = vec![1.0f32, 2.0];
-        let v = vec![0.5f32, -0.5];
-        cf.jvp(0.3, &x, &v, 0.0).unwrap();
+        let v = vec![0.5f32, -0.5, 1.0, 0.25]; // two stacked tangents
+        let dts = [0.0, 1.0];
+        let mut out = vec![0f32; 4];
+
+        // default (finite-difference) jvp: 2 evals per tangent
+        let fd = FdOnly(&f);
+        let cf = CountingField::new(&fd);
+        cf.jvp(0.3, &x, &v[..2], 0.0).unwrap();
         assert_eq!(cf.count(), 2);
+        cf.jvp_batch_into(0.3, &x, &v, &dts, &mut out).unwrap();
+        assert_eq!(cf.count(), 2 + 2 * dts.len(), "T batched tangents count 2·T");
+
+        // closed forms count their true cost: zero for fully analytic
+        let lin = LinearField { dim: 2, k: -1.0, c: 0.0 };
+        let cl = CountingField::new(&lin);
+        cl.jvp(0.3, &x, &v[..2], 0.0).unwrap();
+        cl.jvp_batch_into(0.3, &x, &v, &dts, &mut out).unwrap();
+        assert_eq!(cl.count(), 0, "analytic JVPs cost no evals");
+
+        // ... and two evals per *timed* tangent when only ∂u/∂t needs
+        // differences (GaussianTargetField)
+        let g = GaussianTargetField { dim: 2, sched: Scheduler::FmOt, mu: 0.1, s1: 0.4 };
+        let cg = CountingField::new(&g);
+        cg.jvp_batch_into(0.3, &x, &v, &dts, &mut out).unwrap();
+        assert_eq!(cg.count(), 2, "one timed tangent -> one central-difference pair");
+    }
+
+    /// `jvp_batch_into` must equal tangent-by-tangent `jvp` on every
+    /// field — closed-form overrides and the trait default alike.
+    #[test]
+    fn jvp_batch_matches_sequential_jvp() {
+        let lin = LinearField { dim: 3, k: -0.7, c: 0.2 };
+        let nonlin = NonlinearField { dim: 3 };
+        let gauss = GaussianTargetField { dim: 3, sched: Scheduler::FmOt, mu: 0.3, s1: 0.5 };
+        let fd = FdOnly(&nonlin);
+        let fields: [&dyn Field; 4] = [&lin, &nonlin, &gauss, &fd];
+        let x = vec![0.4f32, -1.1, 0.9, 0.2, 1.4, -0.3];
+        let tangents = vec![
+            1.3f32, -0.5, 2.0, 0.1, -1.0, 0.7, // tangent 0
+            0.0, 0.0, 0.0, 0.0, 0.0, 0.0, // tangent 1: pure time
+            -0.2, 0.9, 0.4, -1.3, 0.6, 0.05, // tangent 2
+        ];
+        let dts = [0.0, 1.0, -0.5];
+        for f in fields {
+            let mut batch = vec![f32::NAN; tangents.len()];
+            f.jvp_batch_into(0.35, &x, &tangents, &dts, &mut batch).unwrap();
+            for (i, &dt) in dts.iter().enumerate() {
+                let seq = f.jvp(0.35, &x, &tangents[i * 6..(i + 1) * 6], dt).unwrap();
+                assert_eq!(
+                    seq.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    batch[i * 6..(i + 1) * 6].iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "tangent {i} (dt={dt})"
+                );
+            }
+        }
     }
 
     #[test]

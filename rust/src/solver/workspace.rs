@@ -36,6 +36,9 @@ pub struct SampleWorkspace {
 /// written before it is read (states via `copy_from_slice`, history rows
 /// and stage registers via `eval_into`), so surviving contents from a
 /// previous run are never observable and no zeroing pass is needed.
+/// Shared with the training-side `distill::grad::GradWorkspace`, which
+/// follows the same only-ever-grow, fully-written-before-read
+/// discipline for its tangent arenas (DESIGN.md §8).
 pub(crate) fn reset_f32(buf: &mut Vec<f32>, len: usize) {
     buf.resize(len, 0.0);
 }

@@ -130,6 +130,27 @@ pub fn psnr(pred: &[f32], reference: &[f32]) -> f64 {
     10.0 * (4.0 / mse.max(1e-20)).log10()
 }
 
+/// The eq. 13 per-sample guard, shared by the loss (`distill::grad::
+/// log_mse_loss`) and the adjoint loop of the wavefront gradient engine
+/// so the NaN/clamp edge cases can never drift apart:
+///
+/// * a NaN MSE (a diverged solver: `inf - inf` in the f32 combine) scores
+///   as the *worst* loss — `f64::max(NaN, eps)` returns eps, which would
+///   otherwise make garbage look like the best checkpoint ever seen;
+/// * the MSE is clamped below at 1e-20 before the log.
+///
+/// Returns `(loss term, adjoint live)`: the per-sample `ln(mse)` term,
+/// and whether the loss is differentiable at this sample — in the clamp
+/// region and for non-finite MSE the loss is treated as flat, so the
+/// per-sample adjoint must be zeroed there.
+pub fn log_mse_term(mse: f64) -> (f64, bool) {
+    if mse.is_nan() {
+        (f64::INFINITY, false)
+    } else {
+        (mse.max(1e-20).ln(), mse.is_finite() && mse > 1e-20)
+    }
+}
+
 /// PSNR in dB from a mean log-MSE (the eq. 13 training loss), under the
 /// same data-range convention as [`psnr`]: range [-1, 1], peak² = 4 —
 /// matches python/compile/bns.py PEAK_SQ. Single home for the
@@ -235,6 +256,20 @@ mod tests {
             .sum::<f64>()
             / a.len() as f64;
         assert!((psnr_from_log_mse(mse.ln()) - psnr(&a, &b)).abs() < 1e-9);
+    }
+
+    /// Pins the shared eq. 13 guard: NaN scores worst (never best), the
+    /// clamp floor applies, and the adjoint is flat exactly in the
+    /// clamp/non-finite region.
+    #[test]
+    fn log_mse_term_guards() {
+        assert_eq!(log_mse_term(f64::NAN), (f64::INFINITY, false));
+        assert_eq!(log_mse_term(f64::INFINITY), (f64::INFINITY, false));
+        assert_eq!(log_mse_term(0.0), ((1e-20f64).ln(), false));
+        assert_eq!(log_mse_term(1e-30), ((1e-20f64).ln(), false));
+        let (t, live) = log_mse_term(0.04);
+        assert!((t - (0.04f64).ln()).abs() < 1e-15);
+        assert!(live);
     }
 
     #[test]
