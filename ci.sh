@@ -34,6 +34,31 @@ else
   echo "clippy unavailable; skipping"
 fi
 
+# Documentation gate: the coordinator module is #![warn(missing_docs)],
+# so undocumented public serving API surfaces here (and rustdoc reports
+# broken intra-doc links). Advisory unless STRICT=1 (shares the lint
+# gate) — rustdoc may be absent in minimal images.
+step "cargo doc --no-deps (rustdoc + missing_docs, advisory)"
+if cargo doc --version >/dev/null 2>&1; then
+  doc_log=$(mktemp)
+  if cargo doc --no-deps --quiet 2>"$doc_log"; then
+    if grep -q "^warning" "$doc_log"; then
+      echo "cargo doc emitted warnings:"
+      cat "$doc_log"
+      lint_fail=1
+    else
+      echo "docs clean"
+    fi
+  else
+    echo "cargo doc failed:"
+    cat "$doc_log"
+    lint_fail=1
+  fi
+  rm -f "$doc_log"
+else
+  echo "rustdoc unavailable; skipping"
+fi
+
 step "tier-1: cargo build --release"
 cargo build --release || fail=1
 

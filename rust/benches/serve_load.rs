@@ -15,13 +15,24 @@
 //! evals/s over the single-lane configuration). Machine-readable output
 //! goes to `BENCH_serve.json` (path override: `BENCH_SERVE_OUT`) so the
 //! perf trajectory is tracked PR-over-PR by ci.sh.
+//!
+//! A second phase drives the **event-driven TCP serving plane** into
+//! sustained overload (offered rows ≫ the engine's in-flight budget) and
+//! asserts the admission-control contract of DESIGN.md §9: rejects are
+//! structured `err=overloaded` lines with a `retry_after_ms` hint and
+//! are counted in metrics, accepted-request p95 stays bounded (no
+//! unbounded queue growth), and TCP-path samples are bit-identical to
+//! the in-process blocking path. Results land in the `overload` section
+//! of `BENCH_serve.json`.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::atomic::Ordering;
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use bns_serve::bench_util::{stub_store, write_results, StubModel, Table};
-use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig, SolverSpec};
 use bns_serve::runtime::Runtime;
 use bns_serve::util::json::Json;
 
@@ -113,6 +124,195 @@ fn run_config(
     Ok(ConfigResult { json, evals_per_s, probes })
 }
 
+// ---------------------------------------------------------------------------
+// overload phase (TCP serving plane under admission control)
+// ---------------------------------------------------------------------------
+
+const OVER_CLIENTS: usize = 12;
+const OVER_REQS_PER_CLIENT: usize = 25;
+const OVER_MAX_INFLIGHT_ROWS: usize = 64;
+
+/// One blocking JSON-lines client over the event-driven server.
+struct TcpClient {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl TcpClient {
+    fn connect(addr: std::net::SocketAddr) -> anyhow::Result<TcpClient> {
+        let w = TcpStream::connect(addr)?;
+        w.set_read_timeout(Some(Duration::from_secs(60)))?;
+        let r = BufReader::new(w.try_clone()?);
+        Ok(TcpClient { w, r })
+    }
+
+    fn roundtrip(&mut self, line: &str) -> anyhow::Result<Json> {
+        self.w.write_all(line.as_bytes())?;
+        self.w.write_all(b"\n")?;
+        let mut resp = String::new();
+        self.r.read_line(&mut resp)?;
+        Ok(Json::parse(&resp)?)
+    }
+
+    fn sample_line(labels: &[i32], seed: u64) -> String {
+        format!(
+            "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":{labels:?},\
+             \"solver\":\"auto\",\"nfe\":8,\"seed\":{seed}}}"
+        )
+    }
+}
+
+fn percentile_us(sorted: &[u64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let i = ((sorted.len() as f64 - 1.0) * q).round() as usize;
+    sorted[i.min(sorted.len() - 1)] as f64
+}
+
+fn run_overload(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow::Result<Json> {
+    let rt = Arc::new(Runtime::with_lanes(2)?);
+    let engine = Arc::new(Engine::start(
+        store.clone(),
+        rt,
+        EngineConfig {
+            workers: 2,
+            max_inflight_rows: OVER_MAX_INFLIGHT_ROWS,
+            ..Default::default()
+        },
+    ));
+    let server = Server::bind(
+        "127.0.0.1:0",
+        ServerConfig { reactors: 2, ..Default::default() },
+        engine.clone(),
+        store.clone(),
+    )?;
+    let addr = server.local_addr();
+
+    // 1. bit-identity: the TCP path must reproduce the in-process
+    //    blocking path down to the bit for accepted requests
+    let mut probe = TcpClient::connect(addr)?;
+    for p in 0..4u64 {
+        let labels: Vec<i32> = (0..4).map(|i| ((p as usize + i) % 8) as i32).collect();
+        let want = engine.sample_blocking(MODEL, labels.clone(), 0.0, spec(), 900 + p)?;
+        let j = probe.roundtrip(&TcpClient::sample_line(&labels, 900 + p))?;
+        assert_eq!(j.get("ok").as_bool(), Some(true), "probe rejected: {j:?}");
+        let got = j.get("samples").as_f32_vec().expect("samples");
+        let want_bits: Vec<u32> = want.samples.iter().map(|v| v.to_bits()).collect();
+        let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_bits, want_bits, "TCP samples drifted from the blocking path");
+    }
+
+    // 2. solo latency (idle server) — the p95 bound is expressed
+    //    relative to this so the assert is hardware-independent
+    let solo_us = {
+        let t = Instant::now();
+        let j = probe.roundtrip(&TcpClient::sample_line(&[0; ROWS_PER_REQ], 999))?;
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        t.elapsed().as_micros() as u64
+    };
+    drop(probe);
+
+    // 3. sustained overload: 12 clients x 8 rows offered against a
+    //    64-row in-flight budget; no pacing, no retries
+    let accepted_us: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let rejected = std::sync::atomic::AtomicU64::new(0);
+    let retry_hints: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+    let unexpected: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..OVER_CLIENTS {
+            let accepted_us = &accepted_us;
+            let rejected = &rejected;
+            let retry_hints = &retry_hints;
+            let unexpected = &unexpected;
+            s.spawn(move || {
+                let mut cl = TcpClient::connect(addr).expect("connect");
+                for r in 0..OVER_REQS_PER_CLIENT {
+                    let labels: Vec<i32> =
+                        (0..ROWS_PER_REQ).map(|i| ((c + i + r) % 8) as i32).collect();
+                    let t = Instant::now();
+                    let j = cl
+                        .roundtrip(&TcpClient::sample_line(&labels, (c * 1000 + r) as u64))
+                        .expect("roundtrip");
+                    if j.get("ok").as_bool() == Some(true) {
+                        accepted_us.lock().unwrap().push(t.elapsed().as_micros() as u64);
+                    } else if j.get("err").as_str() == Some("overloaded") {
+                        rejected.fetch_add(1, Ordering::Relaxed);
+                        match j.get("retry_after_ms").as_f64() {
+                            Some(ms) => retry_hints.lock().unwrap().push(ms as u64),
+                            None => unexpected
+                                .lock()
+                                .unwrap()
+                                .push(format!("overloaded without retry_after_ms: {j:?}")),
+                        }
+                    } else {
+                        unexpected.lock().unwrap().push(format!("{j:?}"));
+                    }
+                }
+            });
+        }
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut acc = accepted_us.into_inner().unwrap();
+    acc.sort_unstable();
+    let rejected = rejected.into_inner();
+    let unexpected = unexpected.into_inner().unwrap();
+    let retry_hints = retry_hints.into_inner().unwrap();
+    assert!(unexpected.is_empty(), "non-overload errors under load: {unexpected:?}");
+    assert!(
+        rejected > 0,
+        "overload phase produced no rejects — offered load no longer exceeds the budget"
+    );
+    assert!(!acc.is_empty(), "overload phase accepted nothing");
+    // bounded p95 for accepted work: admission keeps the queue short, so
+    // accepted latency stays within a small multiple of solo latency
+    // (generous bound — this guards against unbounded queue growth, not
+    // scheduler jitter)
+    let p95 = percentile_us(&acc, 0.95);
+    let bound = (50 * solo_us).max(2_000_000) as f64;
+    assert!(
+        p95 <= bound,
+        "accepted p95 {p95:.0}us exceeds bound {bound:.0}us (solo {solo_us}us) — \
+         queue growth under overload"
+    );
+
+    // 4. metrics surface the rejects (stats op over the same wire)
+    let mut probe = TcpClient::connect(addr)?;
+    let stats = probe.roundtrip("{\"op\":\"stats\"}")?;
+    let m_rej = stats.get("rejected_overload").as_f64().unwrap_or(0.0);
+    assert!(m_rej >= rejected as f64, "metrics missed rejects: {m_rej} < {rejected}");
+    assert!(stats.get("connections").as_f64().unwrap_or(0.0) >= 1.0);
+    drop(probe);
+
+    server.shutdown();
+    drop(engine); // Drop joins the engine threads
+
+    let total = (OVER_CLIENTS * OVER_REQS_PER_CLIENT) as u64;
+    let mean_retry = if retry_hints.is_empty() {
+        0.0
+    } else {
+        retry_hints.iter().sum::<u64>() as f64 / retry_hints.len() as f64
+    };
+    Ok(Json::obj(vec![
+        ("clients", Json::Num(OVER_CLIENTS as f64)),
+        ("reqs_per_client", Json::Num(OVER_REQS_PER_CLIENT as f64)),
+        ("rows_per_req", Json::Num(ROWS_PER_REQ as f64)),
+        ("max_inflight_rows", Json::Num(OVER_MAX_INFLIGHT_ROWS as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("offered", Json::Num(total as f64)),
+        ("accepted", Json::Num(acc.len() as f64)),
+        ("rejected_overload", Json::Num(rejected as f64)),
+        ("reject_rate", Json::Num(rejected as f64 / total as f64)),
+        ("solo_us", Json::Num(solo_us as f64)),
+        ("accepted_p50_us", Json::Num(percentile_us(&acc, 0.5))),
+        ("accepted_p95_us", Json::Num(p95)),
+        ("mean_retry_after_ms", Json::Num(mean_retry)),
+        ("bit_identical_tcp", Json::Bool(true)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let (store, dir) = stub_store(
         "serve-load",
@@ -182,6 +382,24 @@ fn main() -> anyhow::Result<()> {
     println!("\nworker-scaling ratio (best multi-lane / single-lane): {scaling:.2}x");
     println!("bit-identical across configs: yes (asserted)");
 
+    // overload phase over the real TCP serving plane
+    let overload = run_overload(&store)?;
+    println!(
+        "\n=== overload (TCP, {OVER_CLIENTS} clients x {OVER_REQS_PER_CLIENT} reqs x \
+         {ROWS_PER_REQ} rows vs {OVER_MAX_INFLIGHT_ROWS}-row budget) ==="
+    );
+    println!(
+        "accepted {} / rejected {} ({:.0}% rejects), accepted p50 {:.2}ms p95 {:.2}ms, \
+         mean retry_after {:.0}ms",
+        overload.get("accepted").as_f64().unwrap_or(0.0),
+        overload.get("rejected_overload").as_f64().unwrap_or(0.0),
+        100.0 * overload.get("reject_rate").as_f64().unwrap_or(0.0),
+        overload.get("accepted_p50_us").as_f64().unwrap_or(0.0) / 1000.0,
+        overload.get("accepted_p95_us").as_f64().unwrap_or(0.0) / 1000.0,
+        overload.get("mean_retry_after_ms").as_f64().unwrap_or(0.0),
+    );
+    println!("structured rejects + TCP bit-identity: yes (asserted)");
+
     let bench = Json::obj(vec![
         ("bench", Json::Str("serve_load".into())),
         (
@@ -200,6 +418,7 @@ fn main() -> anyhow::Result<()> {
         ("best_multi_lane_evals_per_s", Json::Num(best_multi_eps)),
         ("worker_scaling_ratio", Json::Num(scaling)),
         ("bit_identical", Json::Bool(true)),
+        ("overload", overload),
     ]);
     let out_path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

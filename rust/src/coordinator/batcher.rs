@@ -12,22 +12,32 @@
 //!
 //! Flush policy: a group is dispatched when (a) its pending rows reach
 //! `max_rows`, or (b) its oldest request has waited `max_wait`. Both are
-//! checked by `poll`, which the engine's dispatch loop drives.
+//! checked by `poll`, which the engine's dispatch loop drives. Before
+//! polling, the dispatch loop calls [`Batcher::shed_expired`] so work
+//! whose deadline already passed never reaches a worker (DESIGN.md §9).
+//!
+//! Priorities do not affect grouping (a group may mix them — the batch
+//! runs at the most urgent priority it contains); they order dispatch in
+//! the engine's work queue.
 
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use super::request::SampleRequest;
+use super::request::{Priority, SampleRequest};
 
+/// Batching identity: requests with equal keys share a step timeline.
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct GroupKey {
+    /// Model name.
     pub model: String,
+    /// `SolverSpec::group_key()` of the request's solver.
     pub solver_key: String,
     /// Guidance scale in fixed-point (f32 bits) so the key is Ord/Eq.
     pub guidance_bits: u32,
 }
 
 impl GroupKey {
+    /// The group key a request batches under.
     pub fn of(req: &SampleRequest) -> GroupKey {
         GroupKey {
             model: req.model.clone(),
@@ -39,13 +49,22 @@ impl GroupKey {
 
 /// A batch ready for execution: requests share a group key.
 pub struct Batch {
+    /// Shared batching identity of every request inside.
     pub key: GroupKey,
+    /// The member requests, FIFO within the group.
     pub requests: Vec<SampleRequest>,
+    /// Total sample rows across `requests`.
     pub rows: usize,
+    /// Most urgent priority among the member requests; orders the batch
+    /// in the engine's work queue.
+    pub priority: Priority,
 }
 
+/// Flush/backpressure policy knobs.
 pub struct BatcherConfig {
+    /// Dispatch a group once its pending rows reach this.
     pub max_rows: usize,
+    /// Dispatch a group once its oldest request has waited this long.
     pub max_wait: Duration,
     /// Upper bound on queued rows across all groups (admission control).
     pub max_queued_rows: usize,
@@ -68,24 +87,32 @@ struct Group {
     oldest: Option<Instant>,
 }
 
-/// Single-threaded core (the engine wraps it in a mutex): push requests,
-/// poll for due batches.
+/// Single-threaded core (the engine's dispatch thread owns it): push
+/// requests, shed expired ones, poll for due batches.
 pub struct Batcher {
+    /// Policy knobs (public so the dispatch loop can read them).
     pub cfg: BatcherConfig,
     groups: BTreeMap<GroupKey, Group>,
     queued_rows: usize,
+    /// Queued requests carrying a deadline. When 0 (the common case —
+    /// deadlines are opt-in), `shed_expired` and `next_wake` skip their
+    /// per-request scans entirely.
+    deadlined: usize,
 }
 
 impl Batcher {
+    /// A batcher with the given policy and no queued work.
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, groups: BTreeMap::new(), queued_rows: 0 }
+        Batcher { cfg, groups: BTreeMap::new(), queued_rows: 0, deadlined: 0 }
     }
 
+    /// Rows currently queued across all groups.
     pub fn queued_rows(&self) -> usize {
         self.queued_rows
     }
 
-    /// Enqueue; returns false (rejecting the request) when over capacity.
+    /// Enqueue; returns the request back (rejecting it) when over the
+    /// queued-row bound.
     pub fn push(&mut self, req: SampleRequest) -> Result<(), SampleRequest> {
         let rows = req.labels.len();
         if self.queued_rows + rows > self.cfg.max_queued_rows {
@@ -96,8 +123,51 @@ impl Batcher {
         g.oldest.get_or_insert(req.enqueued_at);
         g.rows += rows;
         self.queued_rows += rows;
+        if req.deadline.is_some() {
+            self.deadlined += 1;
+        }
         g.requests.push(req);
         Ok(())
+    }
+
+    /// Remove and return every queued request whose deadline is at or
+    /// before `now`, so expired work is shed *before* dispatch instead of
+    /// wasting a worker. The caller replies `deadline_exceeded` to each.
+    /// Groups left empty are dropped; surviving groups keep FIFO order
+    /// and recompute their flush clock from the oldest survivor.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<SampleRequest> {
+        if self.deadlined == 0 {
+            return Vec::new(); // nothing queued carries a deadline
+        }
+        let mut shed = Vec::new();
+        let mut emptied: Vec<GroupKey> = Vec::new();
+        for (key, g) in self.groups.iter_mut() {
+            let expired = |r: &SampleRequest| r.deadline.map_or(false, |d| d <= now);
+            if !g.requests.iter().any(expired) {
+                continue; // common case: nothing to shed, no rebuild
+            }
+            let mut kept = Vec::with_capacity(g.requests.len());
+            for req in g.requests.drain(..) {
+                if expired(&req) {
+                    let rows = req.labels.len();
+                    g.rows -= rows;
+                    self.queued_rows -= rows;
+                    self.deadlined -= 1;
+                    shed.push(req);
+                } else {
+                    kept.push(req);
+                }
+            }
+            g.requests = kept;
+            g.oldest = g.requests.iter().map(|r| r.enqueued_at).min();
+            if g.requests.is_empty() {
+                emptied.push(key.clone());
+            }
+        }
+        for key in emptied {
+            self.groups.remove(&key);
+        }
+        shed
     }
 
     /// Collect every group due for dispatch at `now`. Groups larger than
@@ -123,17 +193,32 @@ impl Batcher {
         for key in due_keys {
             let g = self.groups.remove(&key).unwrap();
             self.queued_rows -= g.rows;
-            // split into <= max_rows chunks preserving FIFO order
-            let mut cur = Batch { key: key.clone(), requests: Vec::new(), rows: 0 };
+            // split into <= max_rows chunks preserving FIFO order; the
+            // chunk priority is the most urgent (min-ranked) it contains
+            let mut cur = Batch {
+                key: key.clone(),
+                requests: Vec::new(),
+                rows: 0,
+                priority: Priority::Low,
+            };
             for req in g.requests {
                 let r = req.labels.len();
+                if req.deadline.is_some() {
+                    self.deadlined -= 1;
+                }
                 if cur.rows > 0 && cur.rows + r > self.cfg.max_rows {
                     due.push(std::mem::replace(
                         &mut cur,
-                        Batch { key: key.clone(), requests: Vec::new(), rows: 0 },
+                        Batch {
+                            key: key.clone(),
+                            requests: Vec::new(),
+                            rows: 0,
+                            priority: Priority::Low,
+                        },
                     ));
                 }
                 cur.rows += r;
+                cur.priority = cur.priority.min(req.priority);
                 cur.requests.push(req);
             }
             if cur.rows > 0 {
@@ -143,13 +228,33 @@ impl Batcher {
         due
     }
 
-    /// Earliest deadline across groups (for the dispatch loop's sleep).
+    /// Earliest flush deadline across groups (oldest request + max_wait).
     pub fn next_deadline(&self) -> Option<Instant> {
         self.groups
             .values()
             .filter_map(|g| g.oldest)
             .min()
             .map(|t| t + self.cfg.max_wait)
+    }
+
+    /// Earliest instant at which the dispatch loop must act: the sooner
+    /// of the next flush deadline and the earliest queued request
+    /// deadline (so expiry responses go out on time, not at the next
+    /// flush).
+    pub fn next_wake(&self) -> Option<Instant> {
+        let flush = self.next_deadline();
+        if self.deadlined == 0 {
+            return flush; // common case: no queued deadline to track
+        }
+        let expiry = self
+            .groups
+            .values()
+            .flat_map(|g| g.requests.iter().filter_map(|r| r.deadline))
+            .min();
+        match (flush, expiry) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 }
 
@@ -170,6 +275,9 @@ mod tests {
             seed: 1,
             x0: None,
             enqueued_at: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            progress: None,
             reply: tx,
         }
     }
@@ -245,5 +353,80 @@ mod tests {
         let due = b.poll(Instant::now());
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].rows, 10);
+    }
+
+    #[test]
+    fn shed_expired_removes_only_expired_and_rebalances() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 64,
+            max_wait: Duration::from_secs(3600),
+            ..Default::default()
+        });
+        let now = Instant::now();
+        let mut dead = req("m", 3, spec(8), 0.0);
+        dead.id = 1;
+        dead.deadline = Some(now); // expired at `now`
+        let mut live = req("m", 2, spec(8), 0.0);
+        live.id = 2;
+        live.deadline = Some(now + Duration::from_secs(60));
+        b.push(dead).unwrap();
+        b.push(live).unwrap();
+        assert_eq!(b.queued_rows(), 5);
+
+        let shed = b.shed_expired(now);
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 1);
+        assert_eq!(b.queued_rows(), 2, "only the live request remains");
+
+        // survivor still flushes (rows/oldest bookkeeping intact)
+        let due = b.poll(now + Duration::from_secs(7200));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].requests[0].id, 2);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn shed_expired_drops_emptied_groups() {
+        let mut b = Batcher::new(BatcherConfig::default());
+        let now = Instant::now();
+        let mut r = req("m", 4, spec(8), 0.0);
+        r.deadline = Some(now);
+        b.push(r).unwrap();
+        assert_eq!(b.shed_expired(now).len(), 1);
+        assert_eq!(b.queued_rows(), 0);
+        assert!(b.next_wake().is_none(), "emptied group must not leave a wake time");
+    }
+
+    #[test]
+    fn next_wake_is_min_of_flush_and_request_deadline() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 64,
+            max_wait: Duration::from_secs(10),
+            ..Default::default()
+        });
+        assert!(b.next_wake().is_none());
+        let now = Instant::now();
+        let mut r = req("m", 2, spec(8), 0.0);
+        r.deadline = Some(now + Duration::from_millis(50));
+        b.push(r).unwrap();
+        // request deadline (50ms) is sooner than the flush (10s)
+        let wake = b.next_wake().unwrap();
+        assert!(wake < now + Duration::from_secs(1), "wake should track the deadline");
+        assert!(b.next_deadline().unwrap() > wake);
+    }
+
+    #[test]
+    fn batch_priority_is_most_urgent_member() {
+        let mut b = Batcher::new(BatcherConfig { max_rows: 8, ..Default::default() });
+        let mut low = req("m", 2, spec(8), 0.0);
+        low.priority = Priority::Low;
+        let mut high = req("m", 2, spec(8), 0.0);
+        high.priority = Priority::High;
+        b.push(low).unwrap();
+        b.push(high).unwrap();
+        let due = b.poll(Instant::now() + Duration::from_secs(1));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].priority, Priority::High);
+        assert_eq!(due[0].requests.len(), 2, "priorities do not split the batch");
     }
 }

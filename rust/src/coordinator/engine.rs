@@ -3,20 +3,25 @@
 //!
 //! Threads (std only — tokio is not resolvable offline, DESIGN.md §3):
 //!   * callers (server / in-process clients) push `SampleRequest`s into
-//!     an mpsc channel;
-//!   * the dispatch thread owns the `Batcher`, applies admission control
-//!     and flush policy, and hands `Batch`es to workers over a shared
-//!     work queue (a `VecDeque` — FIFO pops are O(1), not the O(n)
-//!     front-removal of a `Vec`);
+//!     an mpsc channel via [`Engine::try_submit`], which applies the
+//!     in-flight row budget (admission control, DESIGN.md §9) *before*
+//!     the channel so overload turns into an immediate structured
+//!     reject, never an unbounded queue;
+//!   * the dispatch thread owns the `Batcher`: it sheds
+//!     deadline-expired work, applies the queued-row bound and flush
+//!     policy, and hands `Batch`es to workers over a priority-ordered
+//!     work queue (three `VecDeque`s — high/normal/low — popped in
+//!     order; FIFO within a class);
 //!   * each worker owns a `SampleWorkspace` for its whole lifetime plus a
 //!     per-worker cache of `LoadedModel`s (compiled executables pinned to
 //!     a device lane — see DESIGN.md §5), resolves the route through the
 //!     shared `RouterCache`, binds the batch's labels/guidance to the
 //!     cached model, runs the solver lockstep over the whole group via
 //!     the allocation-free `sample_into` path, and splits the result rows
-//!     back to per-request replies. Because each worker's models pin to
-//!     their own lanes (round-robin), workers execute model evals truly
-//!     concurrently on a multi-lane runtime.
+//!     back to per-request replies. Requests that asked for streaming get
+//!     a [`Progress`] event per velocity-field evaluation. Because each
+//!     worker's models pin to their own lanes (round-robin), workers
+//!     execute model evals truly concurrently on a multi-lane runtime.
 //!
 //! Shutdown: `shutdown()` drains and joins all threads; dropping an
 //! `Engine` without calling it performs the same teardown (the seed
@@ -31,7 +36,10 @@ use anyhow::Result;
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
 use super::metrics::Metrics;
-use super::request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};
+use super::request::{
+    ErrCode, Priority, Progress, SampleOutput, SampleRequest, SampleResponse, ServeError,
+    SolverSpec,
+};
 use super::router::{RoutedSolver, RouterCache};
 use crate::runtime::{ArtifactStore, LoadedModel, Runtime};
 use crate::solver::field::{CountingField, Field};
@@ -39,35 +47,72 @@ use crate::solver::rk45::{rk45_into, Rk45Opts};
 use crate::solver::SampleWorkspace;
 use crate::util::rng::Pcg32;
 
+/// Engine sizing and policy knobs.
 pub struct EngineConfig {
+    /// Batching flush/backpressure policy (see [`BatcherConfig`]).
     pub batcher: BatcherConfig,
+    /// Worker threads executing batches (each pins its models to device
+    /// lanes round-robin).
     pub workers: usize,
+    /// Admission budget: maximum sample rows admitted but not yet
+    /// answered (queued + executing). Beyond it, `try_submit` rejects
+    /// with [`ErrCode::Overloaded`] instead of queueing. CLI:
+    /// `--max-inflight`.
+    pub max_inflight_rows: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        EngineConfig { batcher: BatcherConfig::default(), workers: 2 }
+        EngineConfig {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            max_inflight_rows: 4096,
+        }
     }
 }
 
+/// Priority-ordered work queue: three FIFO lanes popped high → low.
 struct WorkQueue {
-    q: Mutex<VecDeque<Batch>>,
+    q: Mutex<[VecDeque<Batch>; 3]>,
     cv: Condvar,
     shutdown: AtomicBool,
+}
+
+impl WorkQueue {
+    fn push(&self, batch: Batch) {
+        let mut q = self.q.lock().unwrap();
+        q[batch.priority.rank()].push_back(batch);
+        self.cv.notify_one();
+    }
+
+    fn pop_from(queues: &mut [VecDeque<Batch>; 3]) -> Option<Batch> {
+        queues.iter_mut().find_map(|d| d.pop_front())
+    }
 }
 
 /// Handle to a running engine; `shutdown()` (or `Drop`) drains and joins
 /// all threads.
 pub struct Engine {
     tx: Option<mpsc::Sender<SampleRequest>>,
+    /// Shared service counters/histograms; also the `stats` op payload.
     pub metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    max_inflight_rows: u64,
     dispatch: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     wq: Arc<WorkQueue>,
 }
 
+/// Decrement the in-flight row gauge for one answered/rejected request.
+fn settle_rows(metrics: &Metrics, rows: usize) {
+    metrics.inflight_rows.fetch_sub(rows as u64, Ordering::Relaxed);
+}
+
 impl Engine {
+    /// Spawn the dispatch thread and `cfg.workers` worker threads over
+    /// the given artifact store and device runtime. The engine is ready
+    /// for [`Engine::try_submit`] as soon as this returns; compilation
+    /// of model executables happens lazily on first use per worker.
     pub fn start(store: Arc<ArtifactStore>, rt: Arc<Runtime>, cfg: EngineConfig) -> Engine {
         let metrics = Arc::new(Metrics::new());
         {
@@ -81,7 +126,7 @@ impl Engine {
         }
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
-            q: Mutex::new(VecDeque::new()),
+            q: Mutex::new([VecDeque::new(), VecDeque::new(), VecDeque::new()]),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
         });
@@ -97,9 +142,10 @@ impl Engine {
             .spawn(move || {
                 let mut batcher = Batcher::new(batcher_cfg);
                 loop {
-                    // wait for work or the next flush deadline
+                    // wait for work, the next flush deadline, or the next
+                    // request expiry — whichever comes first
                     let timeout = batcher
-                        .next_deadline()
+                        .next_wake()
                         .map(|d| d.saturating_duration_since(Instant::now()))
                         .unwrap_or(Duration::from_millis(50));
                     match rx.recv_timeout(timeout) {
@@ -107,38 +153,54 @@ impl Engine {
                             metrics_d.record_request(req.labels.len());
                             if !store_d.models.contains_key(&req.model) {
                                 metrics_d.record_reject();
+                                settle_rows(&metrics_d, req.labels.len());
                                 let _ = req.reply.send(SampleResponse {
                                     id: req.id,
-                                    result: Err(format!("unknown model '{}'", req.model)),
+                                    result: Err(ServeError::new(
+                                        ErrCode::UnknownModel,
+                                        format!("unknown model '{}'", req.model),
+                                    )),
                                 });
                                 continue;
                             }
                             if let Err(rejected) = batcher.push(req) {
-                                metrics_d.record_reject();
+                                metrics_d.record_overload();
+                                settle_rows(&metrics_d, rejected.labels.len());
                                 let _ = rejected.reply.send(SampleResponse {
                                     id: rejected.id,
-                                    result: Err("queue full (backpressure)".into()),
+                                    result: Err(ServeError::overloaded(
+                                        "queue full (backpressure)",
+                                        metrics_d.suggest_retry_ms(),
+                                    )),
                                 });
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
+                    // shed expired work before it can reach a worker
+                    for req in batcher.shed_expired(Instant::now()) {
+                        metrics_d.record_expired();
+                        settle_rows(&metrics_d, req.labels.len());
+                        let _ = req.reply.send(SampleResponse {
+                            id: req.id,
+                            result: Err(ServeError::new(
+                                ErrCode::DeadlineExceeded,
+                                "deadline exceeded while queued",
+                            )),
+                        });
+                    }
                     for batch in batcher.poll(Instant::now()) {
                         metrics_d.record_batch(batch.rows);
                         metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
-                        let mut q = wq_d.q.lock().unwrap();
-                        q.push_back(batch);
-                        wq_d.cv.notify_one();
+                        wq_d.push(batch);
                     }
                 }
                 // drain on shutdown
                 for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
                     metrics_d.record_batch(batch.rows);
                     metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
-                    let mut q = wq_d.q.lock().unwrap();
-                    q.push_back(batch);
-                    wq_d.cv.notify_one();
+                    wq_d.push(batch);
                 }
                 wq_d.shutdown.store(true, Ordering::SeqCst);
                 wq_d.cv.notify_all();
@@ -169,8 +231,8 @@ impl Engine {
                             let batch = {
                                 let mut q = wq_w.q.lock().unwrap();
                                 loop {
-                                    if let Some(b) = q.pop_front() {
-                                        break b; // FIFO for latency fairness
+                                    if let Some(b) = WorkQueue::pop_from(&mut q) {
+                                        break b; // priority order, FIFO per class
                                     }
                                     if wq_w.shutdown.load(Ordering::SeqCst) {
                                         return;
@@ -193,21 +255,145 @@ impl Engine {
             tx: Some(tx),
             metrics,
             next_id: AtomicU64::new(1),
+            max_inflight_rows: cfg.max_inflight_rows.max(1) as u64,
             dispatch: Some(dispatch),
             workers,
             wq,
         }
     }
 
-    /// Fire-and-forget submit; the response arrives on `reply`.
-    pub fn submit(&self, mut req: SampleRequest) -> u64 {
+    /// Admission-controlled submit: charges the request's rows against
+    /// the in-flight budget and enqueues it, or rejects with a
+    /// structured [`ServeError`] (returning the request so the caller
+    /// can still answer through its own channel).
+    ///
+    /// Rejections:
+    /// * [`ErrCode::BadRequest`] — empty `labels`;
+    /// * [`ErrCode::DeadlineExceeded`] — the deadline already passed;
+    /// * [`ErrCode::Overloaded`] — the in-flight row budget is full
+    ///   (carries a `retry_after_ms` hint);
+    /// * [`ErrCode::Internal`] — the engine is shutting down.
+    ///
+    /// On success the engine-assigned id (also echoed as `id` in the
+    /// eventual [`SampleResponse`]) is returned.
+    pub fn try_submit(
+        &self,
+        mut req: SampleRequest,
+    ) -> Result<u64, (SampleRequest, ServeError)> {
+        let rows = req.labels.len();
+        if rows == 0 {
+            return Err((
+                req,
+                ServeError::new(ErrCode::BadRequest, "'labels' must be non-empty"),
+            ));
+        }
+        if let Some(d) = req.deadline {
+            if d <= Instant::now() {
+                self.metrics.record_expired();
+                return Err((
+                    req,
+                    ServeError::new(ErrCode::DeadlineExceeded, "deadline already expired"),
+                ));
+            }
+        }
+        // charge first, then check: two racing submits can never both
+        // slip under the budget
+        let prev = self.metrics.inflight_rows.fetch_add(rows as u64, Ordering::Relaxed);
+        if prev + rows as u64 > self.max_inflight_rows {
+            settle_rows(&self.metrics, rows);
+            self.metrics.record_overload();
+            return Err((
+                req,
+                ServeError::overloaded(
+                    format!(
+                        "in-flight row budget full ({prev} of {} rows)",
+                        self.max_inflight_rows
+                    ),
+                    self.metrics.suggest_retry_ms(),
+                ),
+            ));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
-        let _ = self.tx.as_ref().expect("engine running").send(req);
-        id
+        let tx = self.tx.as_ref().expect("engine running");
+        if let Err(mpsc::SendError(req)) = tx.send(req) {
+            settle_rows(&self.metrics, rows);
+            return Err((req, ServeError::new(ErrCode::Internal, "engine shutting down")));
+        }
+        Ok(id)
+    }
+
+    /// Fire-and-forget submit; the response — success, structured
+    /// reject, or error — always arrives on the request's `reply`
+    /// channel, so callers never need to handle a second error path.
+    ///
+    /// ```
+    /// use std::sync::{mpsc, Arc};
+    /// use std::time::Instant;
+    /// use bns_serve::bench_util::{stub_store, StubModel};
+    /// use bns_serve::coordinator::{Engine, EngineConfig, SampleRequest, SolverSpec};
+    /// use bns_serve::coordinator::request::Priority;
+    /// use bns_serve::runtime::Runtime;
+    ///
+    /// let (store, dir) = stub_store("doc-submit", &[StubModel {
+    ///     name: "m", dim: 4, num_classes: 2, forwards_per_eval: 1,
+    ///     k: -0.5, c: 0.1, label_scale: 0.0, cost: 1, buckets: &[4],
+    /// }]).unwrap();
+    /// let engine = Engine::start(store, Arc::new(Runtime::cpu().unwrap()),
+    ///                            EngineConfig::default());
+    /// let (reply, rx) = mpsc::channel();
+    /// let id = engine.submit(SampleRequest {
+    ///     id: 0,
+    ///     model: "m".into(),
+    ///     labels: vec![0, 1],
+    ///     guidance: 0.0,
+    ///     solver: SolverSpec::Auto { nfe: 4 },
+    ///     seed: 7,
+    ///     x0: None,
+    ///     enqueued_at: Instant::now(),
+    ///     deadline: None,
+    ///     priority: Priority::Normal,
+    ///     progress: None,
+    ///     reply,
+    /// });
+    /// let resp = rx.recv().unwrap();
+    /// assert_eq!(resp.id, id);
+    /// assert_eq!(resp.result.unwrap().samples.len(), 2 * 4);
+    /// engine.shutdown();
+    /// std::fs::remove_dir_all(dir).ok();
+    /// ```
+    pub fn submit(&self, req: SampleRequest) -> u64 {
+        match self.try_submit(req) {
+            Ok(id) => id,
+            Err((req, e)) => {
+                let _ = req.reply.send(SampleResponse { id: req.id, result: Err(e) });
+                req.id
+            }
+        }
     }
 
     /// Convenience: submit and block for the response.
+    ///
+    /// ```
+    /// use std::sync::Arc;
+    /// use bns_serve::bench_util::{stub_store, StubModel};
+    /// use bns_serve::coordinator::{Engine, EngineConfig, SolverSpec};
+    /// use bns_serve::runtime::Runtime;
+    ///
+    /// let (store, dir) = stub_store("doc-blocking", &[StubModel {
+    ///     name: "m", dim: 4, num_classes: 2, forwards_per_eval: 1,
+    ///     k: -0.5, c: 0.1, label_scale: 0.0, cost: 1, buckets: &[4],
+    /// }]).unwrap();
+    /// let engine = Engine::start(store, Arc::new(Runtime::cpu().unwrap()),
+    ///                            EngineConfig::default());
+    /// let out = engine
+    ///     .sample_blocking("m", vec![0, 1], 0.0, SolverSpec::Auto { nfe: 4 }, 7)
+    ///     .unwrap();
+    /// assert_eq!(out.nfe, 4);
+    /// assert_eq!(out.samples.len(), 2 * 4);
+    /// engine.shutdown();
+    /// std::fs::remove_dir_all(dir).ok();
+    /// ```
     pub fn sample_blocking(
         &self,
         model: &str,
@@ -226,6 +412,9 @@ impl Engine {
             seed,
             x0: None,
             enqueued_at: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            progress: None,
             reply,
         });
         let resp = rx.recv()?;
@@ -247,6 +436,7 @@ impl Engine {
         }
     }
 
+    /// Drain pending work and join every thread (see `Drop`).
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
@@ -255,6 +445,52 @@ impl Engine {
 impl Drop for Engine {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// Per-eval progress fan-out: delegates every call to the wrapped
+/// [`CountingField`] and, after each evaluation, sends the running eval
+/// count to every streaming subscriber in the batch. Built only when a
+/// batch actually contains streaming requests, so the non-streaming hot
+/// path pays nothing.
+struct NotifyField<'a> {
+    inner: &'a CountingField<'a>,
+    /// (request id, subscriber) pairs; a `Mutex` only to satisfy the
+    /// `Sync` bound on `Field` — a batch runs on one worker thread.
+    subs: Mutex<Vec<(u64, mpsc::Sender<Progress>)>>,
+    nfe_planned: Option<usize>,
+}
+
+impl<'a> NotifyField<'a> {
+    fn ping(&self) {
+        let evals = self.inner.count();
+        let subs = self.subs.lock().unwrap();
+        for (id, tx) in subs.iter() {
+            // receiver gone (client hung up) -> drop silently
+            let _ = tx.send(Progress { id: *id, evals, nfe: self.nfe_planned });
+        }
+    }
+}
+
+impl<'a> Field for NotifyField<'a> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval(&self, t: f64, x: &[f32]) -> Result<Vec<f32>> {
+        let r = self.inner.eval(t, x);
+        self.ping();
+        r
+    }
+
+    fn eval_into(&self, t: f64, x: &[f32], out: &mut [f32]) -> Result<()> {
+        let r = self.inner.eval_into(t, x, out);
+        self.ping();
+        r
+    }
+
+    fn forwards_per_eval(&self) -> usize {
+        self.inner.forwards_per_eval()
     }
 }
 
@@ -310,9 +546,29 @@ fn solve_batch<'w>(
     let counting = CountingField::new(&field);
     let spec = &batch.requests[0].solver;
     let routed = router.resolve(store, &batch.key, sched, spec)?;
+    // streaming subscribers (if any) ride a notify wrapper; the common
+    // non-streaming batch uses the counting field directly
+    let subs: Vec<(u64, mpsc::Sender<Progress>)> = batch
+        .requests
+        .iter()
+        .filter_map(|r| r.progress.clone().map(|tx| (r.id, tx)))
+        .collect();
+    let notify;
+    let solve_field: &dyn Field = if subs.is_empty() {
+        &counting
+    } else {
+        let nfe_planned = match &routed.solver {
+            RoutedSolver::Fixed(s) => Some(s.nfe()),
+            RoutedSolver::GroundTruth => None,
+        };
+        notify = NotifyField { inner: &counting, subs: Mutex::new(subs), nfe_planned };
+        &notify
+    };
     let out: &[f32] = match &routed.solver {
-        RoutedSolver::Fixed(s) => s.sample_into(&counting, &x0, ws)?,
-        RoutedSolver::GroundTruth => rk45_into(&counting, &x0, &Rk45Opts::default(), ws)?.0,
+        RoutedSolver::Fixed(s) => s.sample_into(solve_field, &x0, ws)?,
+        RoutedSolver::GroundTruth => {
+            rk45_into(solve_field, &x0, &Rk45Opts::default(), ws)?.0
+        }
     };
     let nfe = counting.count();
     Ok(BatchOutcome { out, nfe, forwards_per_eval, solver_name: routed.name.clone(), dim })
@@ -344,6 +600,7 @@ fn run_batch(
                 metrics.record_latency(queue_us, exec_us, &o.solver_name);
                 let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
                 offset += rows;
+                settle_rows(metrics, rows);
                 let _ = req.reply.send(SampleResponse {
                     id: req.id,
                     result: Ok(SampleOutput {
@@ -359,9 +616,10 @@ fn run_batch(
             }
         }
         Err(e) => {
-            let msg = format!("batch failed: {e:#}");
+            let err = ServeError::new(ErrCode::Internal, format!("batch failed: {e:#}"));
             for req in batch.requests {
-                let _ = req.reply.send(SampleResponse { id: req.id, result: Err(msg.clone()) });
+                settle_rows(metrics, req.labels.len());
+                let _ = req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
             }
         }
     }

@@ -1,4 +1,10 @@
 //! Service metrics: counters + latency histograms, shared via Arc.
+//!
+//! Everything here is cheap to record from hot paths (atomics for
+//! counters/gauges, one mutex for the histograms) and surfaces as one
+//! JSON object through [`Metrics::snapshot_json`] — the payload of the
+//! wire protocol's `stats` op (PROTOCOL.md) and the input to the
+//! operator runbook in README.md.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -12,17 +18,37 @@ use crate::util::stats::LatencyHistogram;
 /// the metrics layer depending on the runtime.
 pub type LaneStatsProvider = Box<dyn Fn() -> Vec<(u64, u64)> + Send + Sync>;
 
+/// Shared service counters, gauges, and latency histograms.
 #[derive(Default)]
 pub struct Metrics {
+    /// Requests admitted into the engine (rejects are counted separately).
     pub requests: AtomicU64,
+    /// Sample rows across admitted requests.
     pub samples: AtomicU64,
+    /// Requests rejected at admission (overload, queue bound, unknown
+    /// model). Superset of `rejected_overload`.
     pub rejected: AtomicU64,
+    /// Requests rejected specifically for capacity (in-flight row budget
+    /// or queued-row bound) — the wire protocol's `overloaded` code.
+    pub rejected_overload: AtomicU64,
+    /// Requests shed because their deadline passed before execution —
+    /// the wire protocol's `deadline_exceeded` code.
+    pub expired: AtomicU64,
+    /// Velocity-field evaluations performed.
     pub evals: AtomicU64,
+    /// Model forward passes performed (evals × rows × CFG factor).
     pub forwards: AtomicU64,
+    /// Batches dispatched to workers.
     pub batches: AtomicU64,
+    /// Rows across dispatched batches.
     pub batched_rows: AtomicU64,
     /// Gauge: batches sitting in the engine work queue right now.
     pub queue_depth: AtomicU64,
+    /// Gauge: rows admitted but not yet answered (queued + executing).
+    /// Admission control bounds this at the engine's in-flight budget.
+    pub inflight_rows: AtomicU64,
+    /// Gauge: TCP connections currently open on the serving plane.
+    pub connections: AtomicU64,
     lane_provider: Mutex<Option<LaneStatsProvider>>,
     inner: Mutex<Inner>,
 }
@@ -36,24 +62,41 @@ struct Inner {
 }
 
 impl Metrics {
+    /// Fresh, all-zero metrics.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Count one admitted request carrying `n_samples` rows.
     pub fn record_request(&self, n_samples: usize) {
         self.requests.fetch_add(1, Ordering::Relaxed);
         self.samples.fetch_add(n_samples as u64, Ordering::Relaxed);
     }
 
+    /// Count one admission reject (any reason).
     pub fn record_reject(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Count one capacity reject (also counts as a plain reject).
+    pub fn record_overload(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected_overload.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one deadline-expired shed.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one dispatched batch of `rows` rows.
     pub fn record_batch(&self, rows: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_rows.fetch_add(rows as u64, Ordering::Relaxed);
     }
 
+    /// Accumulate solver work: `nfe` field evaluations, `forwards` model
+    /// forward passes.
     pub fn record_evals(&self, nfe: usize, forwards: usize) {
         self.evals.fetch_add(nfe as u64, Ordering::Relaxed);
         self.forwards.fetch_add(forwards as u64, Ordering::Relaxed);
@@ -65,12 +108,26 @@ impl Metrics {
         *self.lane_provider.lock().unwrap() = Some(f);
     }
 
+    /// Record one request's queue/exec latencies and the solver it used.
     pub fn record_latency(&self, queue_us: u64, exec_us: u64, solver: &str) {
         let mut g = self.inner.lock().unwrap();
         g.queue_wait.record_us(queue_us as f64);
         g.exec.record_us(exec_us as f64);
         g.e2e.record_us((queue_us + exec_us) as f64);
         *g.per_solver.entry(solver.to_string()).or_insert(0) += 1;
+    }
+
+    /// Suggested client backoff for overload rejects: roughly one median
+    /// batch execution (clamped to [10, 2000] ms; 50 ms before any batch
+    /// has completed). Attached to `overloaded` errors as
+    /// `retry_after_ms`.
+    pub fn suggest_retry_ms(&self) -> u64 {
+        let p50_us = self.inner.lock().unwrap().exec.quantile_us(0.5);
+        if p50_us <= 0.0 {
+            50
+        } else {
+            ((p50_us / 1000.0).ceil() as u64).clamp(10, 2000)
+        }
     }
 
     /// Mean rows per model-eval batch — the continuous-batching win metric.
@@ -83,6 +140,9 @@ impl Metrics {
         }
     }
 
+    /// One JSON object with every counter, gauge, histogram quantile,
+    /// per-solver tally, and per-lane device counter. Field semantics
+    /// are documented in README.md §Operator runbook.
     pub fn snapshot_json(&self) -> Json {
         let lanes: Vec<(u64, u64)> = self
             .lane_provider
@@ -105,11 +165,18 @@ impl Metrics {
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("samples", Json::Num(self.samples.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
+            (
+                "rejected_overload",
+                Json::Num(self.rejected_overload.load(Ordering::Relaxed) as f64),
+            ),
+            ("expired", Json::Num(self.expired.load(Ordering::Relaxed) as f64)),
             ("evals", Json::Num(self.evals.load(Ordering::Relaxed) as f64)),
             ("forwards", Json::Num(self.forwards.load(Ordering::Relaxed) as f64)),
             ("batches", Json::Num(self.batches.load(Ordering::Relaxed) as f64)),
             ("mean_batch_rows", Json::Num(self.mean_batch_rows())),
             ("work_queue_depth", Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64)),
+            ("inflight_rows", Json::Num(self.inflight_rows.load(Ordering::Relaxed) as f64)),
+            ("connections", Json::Num(self.connections.load(Ordering::Relaxed) as f64)),
             (
                 "lanes",
                 Json::Arr(
@@ -157,6 +224,38 @@ mod tests {
         assert_eq!(m.samples.load(Ordering::Relaxed), 6);
         assert_eq!(m.forwards.load(Ordering::Relaxed), 96);
         assert_eq!(m.mean_batch_rows(), 6.0);
+    }
+
+    #[test]
+    fn overload_and_expiry_counters() {
+        let m = Metrics::new();
+        m.record_reject();
+        m.record_overload();
+        m.record_overload();
+        m.record_expired();
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 3);
+        assert_eq!(m.rejected_overload.load(Ordering::Relaxed), 2);
+        assert_eq!(m.expired.load(Ordering::Relaxed), 1);
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("rejected_overload").as_f64(), Some(2.0));
+        assert_eq!(snap.get("expired").as_f64(), Some(1.0));
+        assert_eq!(snap.get("connections").as_f64(), Some(0.0));
+        assert_eq!(snap.get("inflight_rows").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn retry_hint_tracks_exec_median() {
+        let m = Metrics::new();
+        assert_eq!(m.suggest_retry_ms(), 50); // no data yet
+        for _ in 0..10 {
+            m.record_latency(0, 100_000, "s"); // 100 ms execs
+        }
+        let hint = m.suggest_retry_ms();
+        assert!((50..=300).contains(&hint), "hint {hint} should be ~one exec p50");
+        // sub-millisecond execs clamp up to the 10 ms floor
+        let fast = Metrics::new();
+        fast.record_latency(0, 100, "s");
+        assert_eq!(fast.suggest_retry_ms(), 10);
     }
 
     #[test]

@@ -1,12 +1,20 @@
 //! L3 coordinator: the serving system around BNS sampling.
 //!
-//! * `request` — request/response types and solver specs
+//! * `request` — request/response types, solver specs, priorities, and
+//!   the structured error vocabulary of the wire protocol
 //! * `batcher` — step-aligned dynamic batching (the diffusion analogue of
 //!   continuous batching: requests sharing a solver timeline run lockstep)
+//!   plus deadline shedding
 //! * `router`  — SolverSpec -> concrete solver resolution (BNS-first)
-//! * `engine`  — dispatch + worker threads driving batched sampling
-//! * `metrics` — counters and latency histograms
-//! * `server`  — TCP JSON-lines front-end
+//! * `engine`  — admission control, dispatch + worker threads driving
+//!   batched sampling
+//! * `metrics` — counters, gauges, and latency histograms (the `stats` op)
+//! * `server`  — event-driven TCP JSON-lines front-end (PROTOCOL.md)
+//!
+//! This module is the crate's public serving API and is kept
+//! `missing_docs`-clean: every public item documents itself.
+
+#![warn(missing_docs)]
 
 pub mod batcher;
 pub mod engine;
@@ -16,4 +24,8 @@ pub mod router;
 pub mod server;
 
 pub use engine::{Engine, EngineConfig};
-pub use request::{SampleOutput, SampleRequest, SampleResponse, SolverSpec};
+pub use request::{
+    ErrCode, Priority, Progress, SampleOutput, SampleRequest, SampleResponse, ServeError,
+    SolverSpec,
+};
+pub use server::{Server, ServerConfig};

@@ -1,4 +1,11 @@
 //! Request/response types of the sampling service.
+//!
+//! Everything a caller exchanges with the [`Engine`](super::Engine) lives
+//! here: the solver selection ([`SolverSpec`]), the request/response pair
+//! ([`SampleRequest`], [`SampleResponse`]), scheduling hints
+//! ([`Priority`], deadlines), streaming progress events ([`Progress`]),
+//! and the structured error vocabulary ([`ServeError`], [`ErrCode`]) that
+//! the wire protocol (PROTOCOL.md) exposes verbatim as `err` codes.
 
 use std::sync::mpsc;
 use std::time::Instant;
@@ -7,12 +14,23 @@ use std::time::Instant;
 #[derive(Debug, Clone, PartialEq)]
 pub enum SolverSpec {
     /// A named baseline at a given NFE ("euler", "midpoint", "dpmpp2m", ...).
-    Baseline { name: String, nfe: usize },
+    Baseline {
+        /// Baseline solver name as understood by `solver::baseline`.
+        name: String,
+        /// Number of velocity-field evaluations.
+        nfe: usize,
+    },
     /// A distilled solver artifact by exact name.
-    Distilled { name: String },
+    Distilled {
+        /// Artifact name in the store's manifest.
+        name: String,
+    },
     /// Router picks the best available solver for (model, guidance, nfe):
     /// BNS artifact if distilled, otherwise the strongest baseline.
-    Auto { nfe: usize },
+    Auto {
+        /// Number of velocity-field evaluations.
+        nfe: usize,
+    },
     /// Ground truth: adaptive RK45 (NFE not fixed).
     GroundTruth,
 }
@@ -30,35 +48,198 @@ impl SolverSpec {
     }
 }
 
+/// Scheduling priority of a request.
+///
+/// Priorities order *dispatch*, not numerics: batches carrying
+/// higher-priority requests are popped from the engine's work queue
+/// first, but batching itself still groups purely by step timeline
+/// (mixing priorities inside one batch is allowed — the batch runs at
+/// the highest priority it contains). Declaration order makes
+/// `High < Normal < Low` under `Ord`, so `min()` picks the *most*
+/// urgent — use [`Priority::rank`] when an explicit index is clearer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Priority {
+    /// Dispatched before everything else (interactive traffic).
+    High,
+    /// The default.
+    #[default]
+    Normal,
+    /// Dispatched only when no higher-priority work is queued (bulk /
+    /// offline traffic).
+    Low,
+}
+
+impl Priority {
+    /// Queue index: 0 = high, 1 = normal, 2 = low.
+    pub fn rank(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Low => 2,
+        }
+    }
+
+    /// Wire-protocol name (`"high"` / `"normal"` / `"low"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+            Priority::Low => "low",
+        }
+    }
+
+    /// Parse a wire-protocol priority name; `None` for anything else.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "low" => Some(Priority::Low),
+            _ => None,
+        }
+    }
+}
+
+/// Machine-readable error code, surfaced verbatim as the `err` field of
+/// wire-protocol error responses (see PROTOCOL.md §Errors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrCode {
+    /// The request line was not valid JSON.
+    ParseError,
+    /// The `op` field named no known operation.
+    UnknownOp,
+    /// A required field was missing or had the wrong type/value.
+    BadRequest,
+    /// The named model is not in the artifact store.
+    UnknownModel,
+    /// A request line exceeded the server's line-length cap.
+    LineTooLong,
+    /// Admission control rejected the request (in-flight row budget or
+    /// queue bound exceeded). Retry after `retry_after_ms`.
+    Overloaded,
+    /// The request's deadline passed before execution started.
+    DeadlineExceeded,
+    /// Execution failed after admission (solver/runtime error).
+    Internal,
+}
+
+impl ErrCode {
+    /// Wire-protocol code string (e.g. `"overloaded"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrCode::ParseError => "parse_error",
+            ErrCode::UnknownOp => "unknown_op",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::UnknownModel => "unknown_model",
+            ErrCode::LineTooLong => "line_too_long",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::DeadlineExceeded => "deadline_exceeded",
+            ErrCode::Internal => "internal",
+        }
+    }
+}
+
+/// A structured service error: a machine-readable code plus a human
+/// message, and (for overload rejects) a retry hint.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServeError {
+    /// What went wrong, as a wire-stable code.
+    pub code: ErrCode,
+    /// Human-readable detail.
+    pub msg: String,
+    /// For [`ErrCode::Overloaded`]: suggested client backoff before
+    /// retrying, derived from recent execution latency.
+    pub retry_after_ms: Option<u64>,
+}
+
+impl ServeError {
+    /// A plain error with no retry hint.
+    pub fn new(code: ErrCode, msg: impl Into<String>) -> ServeError {
+        ServeError { code, msg: msg.into(), retry_after_ms: None }
+    }
+
+    /// An admission reject carrying a backoff hint.
+    pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
+        ServeError {
+            code: ErrCode::Overloaded,
+            msg: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{} ({})", self.msg, self.code.as_str())
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// A streaming progress event: sent after each velocity-field evaluation
+/// of a batch containing this request, when the request asked for
+/// streaming (`SampleRequest::progress`). Delivery is best-effort —
+/// consumers coalesce to the latest event per request.
+#[derive(Debug, Clone, Copy)]
+pub struct Progress {
+    /// Engine-assigned request id.
+    pub id: u64,
+    /// Velocity-field evaluations completed so far for this batch.
+    pub evals: usize,
+    /// Planned total evaluations (`None` for adaptive ground truth).
+    pub nfe: Option<usize>,
+}
+
 /// A sampling request: generate `labels.len()` samples from `model`
 /// conditioned on `labels` with CFG scale `guidance`.
 #[derive(Debug)]
 pub struct SampleRequest {
+    /// Engine-assigned id (overwritten by `submit`; callers pass 0).
     pub id: u64,
+    /// Model name in the artifact store.
     pub model: String,
+    /// Per-row class labels; one output row per label.
     pub labels: Vec<i32>,
+    /// CFG guidance scale.
     pub guidance: f32,
+    /// Solver selection (see [`SolverSpec`]).
     pub solver: SolverSpec,
     /// Noise seed; x0 is drawn as iid N(0, 1) from this seed so results
     /// are reproducible and the wire format stays small.
     pub seed: u64,
     /// Optional explicit x0 (overrides seed); row-major [n, dim].
     pub x0: Option<Vec<f32>>,
+    /// When the request entered the service (for queue-latency metrics).
     pub enqueued_at: Instant,
+    /// Absolute deadline: if the request is still queued when this
+    /// passes, it is shed with [`ErrCode::DeadlineExceeded`] instead of
+    /// executing. A request already running when its deadline passes
+    /// completes and delivers (late) — deadlines govern queueing, not
+    /// preemption.
+    pub deadline: Option<Instant>,
+    /// Dispatch priority (see [`Priority`]).
+    pub priority: Priority,
+    /// When set, the executing worker streams [`Progress`] events here
+    /// (one per velocity-field evaluation of the batch).
+    pub progress: Option<mpsc::Sender<Progress>>,
+    /// Where the terminal [`SampleResponse`] is delivered.
     pub reply: mpsc::Sender<SampleResponse>,
 }
 
 /// The service's answer.
 #[derive(Debug, Clone)]
 pub struct SampleResponse {
+    /// Engine-assigned request id (matches the `submit` return value).
     pub id: u64,
-    pub result: Result<SampleOutput, String>,
+    /// Samples on success, a structured error otherwise.
+    pub result: Result<SampleOutput, ServeError>,
 }
 
+/// A successful sampling result.
 #[derive(Debug, Clone)]
 pub struct SampleOutput {
     /// Row-major [n, dim] samples (approximations of x(1)).
     pub samples: Vec<f32>,
+    /// Elements per row.
     pub dim: usize,
     /// Velocity-field evaluations the solver performed.
     pub nfe: usize,
@@ -66,24 +247,33 @@ pub struct SampleOutput {
     pub forwards: usize,
     /// Name of the solver actually used (after routing).
     pub solver_used: String,
+    /// Microseconds spent queued before execution started.
     pub queue_us: u64,
+    /// Microseconds spent executing the batch.
     pub exec_us: u64,
 }
 
-/// Admission-control errors surfaced to clients.
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub enum AdmitError {
-    QueueFull,
-    UnknownModel(String),
-    BadRequest(String),
-}
+#[cfg(test)]
+mod tests {
+    use super::*;
 
-impl std::fmt::Display for AdmitError {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        match self {
-            AdmitError::QueueFull => write!(f, "queue full (backpressure)"),
-            AdmitError::UnknownModel(m) => write!(f, "unknown model '{m}'"),
-            AdmitError::BadRequest(m) => write!(f, "bad request: {m}"),
+    #[test]
+    fn priority_rank_and_roundtrip() {
+        assert!(Priority::High < Priority::Normal && Priority::Normal < Priority::Low);
+        for p in [Priority::High, Priority::Normal, Priority::Low] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
         }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Normal);
+        assert_eq!(Priority::High.rank(), 0);
+        assert_eq!(Priority::Low.rank(), 2);
+    }
+
+    #[test]
+    fn serve_error_display_carries_code() {
+        let e = ServeError::overloaded("queue full", 25);
+        assert_eq!(e.retry_after_ms, Some(25));
+        let s = e.to_string();
+        assert!(s.contains("queue full") && s.contains("overloaded"), "{s}");
     }
 }

@@ -25,11 +25,15 @@ use crate::solver::{baseline, NsSolver, Solver};
 
 /// The routed outcome: a concrete solver plus its reporting name.
 pub struct Routed {
+    /// The solver instance to run.
     pub solver: RoutedSolver,
+    /// Reporting name (surfaced as `solver_used` in responses/metrics).
     pub name: String,
 }
 
+/// A resolved solver: fixed-step or adaptive ground truth.
 pub enum RoutedSolver {
+    /// A fixed-timeline solver (baseline or distilled artifact).
     Fixed(Box<dyn Solver>),
     /// Adaptive ground truth (RK45 with default tolerances).
     GroundTruth,
@@ -46,6 +50,9 @@ fn auto_baseline_name(nfe: usize) -> &'static str {
     }
 }
 
+/// Resolve `spec` against the artifact store for (model, guidance):
+/// explicit names resolve directly; `Auto` picks a BNS/BST artifact when
+/// one matches the NFE, else the strongest dividing baseline.
 pub fn route(
     store: &ArtifactStore,
     model: &str,
@@ -143,6 +150,7 @@ pub struct RouterCache {
 const MAX_ENTRIES: usize = 512;
 
 impl RouterCache {
+    /// An empty cache.
     pub fn new() -> Self {
         Self::default()
     }
@@ -170,10 +178,12 @@ impl RouterCache {
         Ok(routed)
     }
 
+    /// Number of memoized routes.
     pub fn len(&self) -> usize {
         self.map.lock().unwrap().len()
     }
 
+    /// True when nothing has been resolved yet.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

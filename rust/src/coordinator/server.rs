@@ -1,27 +1,65 @@
-//! TCP front-end: JSON-lines protocol over a listener socket.
+//! Event-driven TCP front-end: JSON-lines protocol over non-blocking
+//! sockets.
 //!
-//! One JSON object per line. Requests:
-//!   {"op":"sample","model":"img_fm_ot","labels":[0,3],"guidance":0.0,
-//!    "solver":"auto","nfe":8,"seed":7}
-//!   {"op":"stats"}
-//!   {"op":"models"}
-//!   {"op":"solvers"}
-//! `solver` is "auto" | "gt" | a baseline name | a distilled artifact
-//! name (anything containing "_nfe"). Responses mirror the request with
-//! "ok": true/false; sample responses carry the flattened rows.
+//! The full wire specification — every op, request/response field, error
+//! code, streaming frame, and worked client examples — lives in
+//! **PROTOCOL.md** at the repo root; this header is only an index.
+//!
+//! Architecture (DESIGN.md §9): one accept thread hands sockets
+//! round-robin to a small fixed pool of **reactor** threads
+//! (`--reactors`). Each reactor multiplexes its connections with a
+//! readiness loop over `TcpStream::set_nonblocking` sockets (std-only —
+//! tokio/mio are not resolvable offline, DESIGN.md §3): it drains
+//! readable bytes into per-connection line buffers, admits complete
+//! requests into the [`Engine`] (which applies the in-flight row budget
+//! and per-request deadlines), pumps engine replies and streaming
+//! progress events back into per-connection write buffers, and flushes
+//! them without ever blocking on a peer. A slow or hung client therefore
+//! stalls only its own connection; the seed's thread-per-connection
+//! blocking loop stalled a thread per slow peer and queued without
+//! bound.
+//!
+//! Overload never queues silently: admission rejects produce a
+//! structured `{"ok":false,"err":"overloaded","retry_after_ms":...}`
+//! line immediately (PROTOCOL.md §Errors).
 
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::engine::Engine;
-use super::request::{SampleRequest, SolverSpec};
+use super::request::{
+    ErrCode, Priority, Progress, SampleRequest, SampleResponse, ServeError, SolverSpec,
+};
 use crate::runtime::ArtifactStore;
 use crate::util::json::Json;
 
+/// Map a wire solver string to a [`SolverSpec`].
+///
+/// `"auto"` routes BNS-first; `"gt"`/`"rk45"` is adaptive ground truth;
+/// anything containing `"_nfe"` is treated as a distilled artifact name;
+/// everything else is a named baseline at `nfe`.
+///
+/// ```
+/// use bns_serve::coordinator::server::parse_solver_spec;
+/// use bns_serve::coordinator::SolverSpec;
+///
+/// assert_eq!(parse_solver_spec("auto", 8), SolverSpec::Auto { nfe: 8 });
+/// assert_eq!(parse_solver_spec("gt", 8), SolverSpec::GroundTruth);
+/// assert_eq!(
+///     parse_solver_spec("euler", 4),
+///     SolverSpec::Baseline { name: "euler".into(), nfe: 4 }
+/// );
+/// assert!(matches!(
+///     parse_solver_spec("img_fm_ot_w0.5_nfe8_bns", 8),
+///     SolverSpec::Distilled { .. }
+/// ));
+/// ```
 pub fn parse_solver_spec(solver: &str, nfe: usize) -> SolverSpec {
     match solver {
         "auto" => SolverSpec::Auto { nfe },
@@ -31,113 +69,532 @@ pub fn parse_solver_spec(solver: &str, nfe: usize) -> SolverSpec {
     }
 }
 
-/// Serve until the process is killed. Each connection gets a thread
-/// (std-only substrate for tokio; connection counts here are small).
+/// Serving-plane knobs (CLI: `serve --reactors --deadline-ms`).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Reactor threads multiplexing connections. Two saturate the engine
+    /// for typical request sizes; raise for many small-request clients.
+    pub reactors: usize,
+    /// Reject request lines longer than this with `line_too_long`
+    /// (protects the reactor from unbounded buffering).
+    pub max_line_bytes: usize,
+    /// Default per-request deadline applied when a request carries no
+    /// `deadline_ms` of its own (`None` = no default deadline).
+    pub default_deadline_ms: Option<u64>,
+    /// Reactor sleep when a full pass over its connections moved no
+    /// bytes and no events (the readiness-loop idle tick).
+    pub idle_poll: Duration,
+    /// Drop a connection whose unsent output exceeds this (a peer that
+    /// stopped reading while streaming large samples).
+    pub max_outbuf_bytes: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            reactors: 2,
+            max_line_bytes: 1 << 20,
+            default_deadline_ms: None,
+            idle_poll: Duration::from_micros(500),
+            max_outbuf_bytes: 64 << 20,
+        }
+    }
+}
+
+/// A running serving plane: accept thread + reactor pool. Dropping the
+/// handle (or calling [`Server::shutdown`]) stops every thread; open
+/// connections are closed, in-flight engine work completes and its
+/// replies are discarded.
+pub struct Server {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
+    /// spawn the accept + reactor threads. Returns immediately; use
+    /// [`Server::local_addr`] for the bound address.
+    pub fn bind(
+        addr: &str,
+        cfg: ServerConfig,
+        engine: Arc<Engine>,
+        store: Arc<ArtifactStore>,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let n_reactors = cfg.reactors.max(1);
+        let mut conn_txs = Vec::with_capacity(n_reactors);
+        let mut threads = Vec::with_capacity(n_reactors + 1);
+        for ri in 0..n_reactors {
+            let (tx, rx) = mpsc::channel::<TcpStream>();
+            conn_txs.push(tx);
+            let engine = engine.clone();
+            let store = store.clone();
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name(format!("bns-reactor-{ri}"))
+                    .spawn(move || reactor_loop(rx, engine, store, stop, cfg))
+                    .expect("spawn reactor"),
+            );
+        }
+        {
+            let stop = stop.clone();
+            threads.push(
+                std::thread::Builder::new()
+                    .name("bns-accept".into())
+                    .spawn(move || accept_loop(listener, conn_txs, stop))
+                    .expect("spawn accept"),
+            );
+        }
+        Ok(Server { addr: local, stop, threads })
+    }
+
+    /// The bound socket address (resolves port 0 binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Stop accepting, close every connection, and join all threads.
+    /// Idempotent; `Drop` performs the same teardown.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Serve `addr` until the process is killed, with default
+/// [`ServerConfig`]. See [`serve_with`] for tunables.
 pub fn serve(addr: &str, engine: Arc<Engine>, store: Arc<ArtifactStore>) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    eprintln!("[bns-serve] listening on {addr}");
-    for conn in listener.incoming() {
-        let conn = match conn {
-            Ok(c) => c,
+    serve_with(addr, ServerConfig::default(), engine, store)
+}
+
+/// Serve `addr` until the process is killed (the `bns-serve serve`
+/// entrypoint): binds a [`Server`] and parks the calling thread.
+pub fn serve_with(
+    addr: &str,
+    cfg: ServerConfig,
+    engine: Arc<Engine>,
+    store: Arc<ArtifactStore>,
+) -> Result<()> {
+    let server = Server::bind(addr, cfg, engine, store)?;
+    eprintln!(
+        "[bns-serve] listening on {} ({} reactor(s))",
+        server.local_addr(),
+        cfg.reactors.max(1)
+    );
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// accept + reactor loops
+// ---------------------------------------------------------------------------
+
+fn accept_loop(
+    listener: TcpListener,
+    conn_txs: Vec<mpsc::Sender<TcpStream>>,
+    stop: Arc<AtomicBool>,
+) {
+    let mut next = 0usize;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // non-blocking from birth; NODELAY because frames are
+                // small and latency-sensitive
+                let _ = stream.set_nonblocking(true);
+                let _ = stream.set_nodelay(true);
+                if conn_txs[next % conn_txs.len()].send(stream).is_err() {
+                    return; // reactor gone -> shutting down
+                }
+                next += 1;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
             Err(e) => {
                 eprintln!("[bns-serve] accept error: {e}");
-                continue;
+                std::thread::sleep(Duration::from_millis(10));
             }
-        };
-        let engine = engine.clone();
-        let store = store.clone();
-        std::thread::spawn(move || {
-            if let Err(e) = handle_conn(conn, &engine, &store) {
-                eprintln!("[bns-serve] connection error: {e:#}");
-            }
-        });
-    }
-    Ok(())
-}
-
-fn handle_conn(conn: TcpStream, engine: &Engine, store: &ArtifactStore) -> Result<()> {
-    let peer = conn.peer_addr()?;
-    let mut writer = conn.try_clone()?;
-    let reader = BufReader::new(conn);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
         }
-        let resp = handle_line(&line, engine, store);
-        writer.write_all(resp.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
     }
-    let _ = peer;
-    Ok(())
 }
 
-pub fn handle_line(line: &str, engine: &Engine, store: &ArtifactStore) -> Json {
-    let req = match Json::parse(line) {
+/// Per-request bookkeeping between admission and the terminal reply.
+struct PendingReq {
+    /// Client asked for streaming frames (`"stream":true`).
+    stream: bool,
+    /// Client correlation value, echoed verbatim on every frame.
+    tag: Option<Json>,
+}
+
+/// One multiplexed connection owned by a reactor.
+struct Conn {
+    stream: TcpStream,
+    /// Bytes of the current (incomplete) request line.
+    rbuf: Vec<u8>,
+    /// Serialized frames awaiting a writable socket.
+    obuf: Vec<u8>,
+    /// Prefix of `obuf` already written.
+    osent: usize,
+    reply_tx: mpsc::Sender<SampleResponse>,
+    reply_rx: mpsc::Receiver<SampleResponse>,
+    prog_tx: mpsc::Sender<Progress>,
+    prog_rx: mpsc::Receiver<Progress>,
+    pending: HashMap<u64, PendingReq>,
+    /// Peer half-closed its write side; finish pending work then drop.
+    eof: bool,
+    /// Socket error / output overflow; drop immediately.
+    dead: bool,
+    /// Currently discarding an over-long line (until its newline).
+    discarding: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let (prog_tx, prog_rx) = mpsc::channel();
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            obuf: Vec::new(),
+            osent: 0,
+            reply_tx,
+            reply_rx,
+            prog_tx,
+            prog_rx,
+            pending: HashMap::new(),
+            eof: false,
+            dead: false,
+            discarding: false,
+        }
+    }
+
+    fn enqueue(&mut self, frame: &Json) {
+        self.obuf.extend_from_slice(frame.to_string().as_bytes());
+        self.obuf.push(b'\n');
+    }
+
+    fn finished(&self) -> bool {
+        self.dead || (self.eof && self.pending.is_empty() && self.osent == self.obuf.len())
+    }
+}
+
+fn reactor_loop(
+    rx: mpsc::Receiver<TcpStream>,
+    engine: Arc<Engine>,
+    store: Arc<ArtifactStore>,
+    stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut scratch = [0u8; 8192];
+    while !stop.load(Ordering::Relaxed) {
+        let mut active = false;
+        while let Ok(stream) = rx.try_recv() {
+            engine.metrics.connections.fetch_add(1, Ordering::Relaxed);
+            conns.push(Conn::new(stream));
+            active = true;
+        }
+        for c in conns.iter_mut() {
+            active |= pump_read(c, &mut scratch, &engine, &store, &cfg);
+            // progress BEFORE replies: events a worker sent ahead of the
+            // terminal reply are flushed while the request is still
+            // pending, so a streamed request always frames
+            // accepted -> progress... -> result in order
+            active |= pump_progress(c);
+            active |= pump_replies(c);
+            active |= pump_write(c);
+            if c.obuf.len() - c.osent > cfg.max_outbuf_bytes {
+                c.dead = true; // peer stopped reading; cut it loose
+            }
+        }
+        let before = conns.len();
+        conns.retain(|c| !c.finished());
+        if conns.len() != before {
+            engine
+                .metrics
+                .connections
+                .fetch_sub((before - conns.len()) as u64, Ordering::Relaxed);
+            active = true;
+        }
+        if !active {
+            std::thread::sleep(cfg.idle_poll);
+        }
+    }
+    engine.metrics.connections.fetch_sub(conns.len() as u64, Ordering::Relaxed);
+}
+
+/// Drain readable bytes; returns true if anything was read or handled.
+///
+/// The drain is capped per tick (`READ_BUDGET_PER_TICK`) so one
+/// fast-pipelining client cannot monopolize its reactor or grow its
+/// write buffer past the overflow check between ticks — when the budget
+/// runs out the tick stays "active" (no idle sleep) and the remaining
+/// bytes are picked up next pass, after every other connection got
+/// service.
+fn pump_read(
+    c: &mut Conn,
+    scratch: &mut [u8],
+    engine: &Engine,
+    store: &ArtifactStore,
+    cfg: &ServerConfig,
+) -> bool {
+    /// Max bytes ingested per connection per reactor tick.
+    const READ_BUDGET_PER_TICK: usize = 128 << 10;
+    if c.eof || c.dead {
+        return false;
+    }
+    let mut any = false;
+    let mut budget = READ_BUDGET_PER_TICK;
+    while budget > 0 {
+        let want = scratch.len().min(budget);
+        match c.stream.read(&mut scratch[..want]) {
+            Ok(0) => {
+                c.eof = true;
+                // a final line without a trailing newline still counts
+                // (`printf '%s' '{"op":"stats"}' | nc -N` style clients)
+                if !c.rbuf.is_empty() && !c.discarding {
+                    let line = std::mem::take(&mut c.rbuf);
+                    handle_request_line(c, &line, engine, store, cfg);
+                }
+                break;
+            }
+            Ok(n) => {
+                any = true;
+                budget -= n;
+                ingest_chunk(c, &scratch[..n], engine, store, cfg);
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                break;
+            }
+        }
+    }
+    any
+}
+
+/// Split a received chunk on newlines: complete lines are handled in
+/// place, the trailing fragment accumulates in `rbuf` (bounded by
+/// `max_line_bytes` — overflow rejects the line and discards the rest
+/// of it, §PROTOCOL `line_too_long`).
+fn ingest_chunk(
+    c: &mut Conn,
+    mut bytes: &[u8],
+    engine: &Engine,
+    store: &ArtifactStore,
+    cfg: &ServerConfig,
+) {
+    while let Some(pos) = bytes.iter().position(|&b| b == b'\n') {
+        let head = &bytes[..pos];
+        if c.discarding {
+            c.discarding = false; // oversized line fully skipped
+        } else if c.rbuf.len() + head.len() > cfg.max_line_bytes {
+            reject_oversize(c, cfg);
+            c.rbuf.clear(); // line ends here; nothing left to discard
+        } else {
+            c.rbuf.extend_from_slice(head);
+            let line = std::mem::take(&mut c.rbuf);
+            handle_request_line(c, &line, engine, store, cfg);
+            c.rbuf = line; // reuse the allocation
+            c.rbuf.clear();
+        }
+        bytes = &bytes[pos + 1..];
+    }
+    // trailing fragment (no newline yet)
+    if c.discarding || bytes.is_empty() {
+        return;
+    }
+    if c.rbuf.len() + bytes.len() > cfg.max_line_bytes {
+        reject_oversize(c, cfg);
+        c.rbuf.clear();
+        c.discarding = true; // swallow until this line's newline arrives
+    } else {
+        c.rbuf.extend_from_slice(bytes);
+    }
+}
+
+fn reject_oversize(c: &mut Conn, cfg: &ServerConfig) {
+    let e = ServeError::new(
+        ErrCode::LineTooLong,
+        format!("request line exceeds {} bytes", cfg.max_line_bytes),
+    );
+    let frame = error_frame(&e, None, None);
+    c.enqueue(&frame);
+}
+
+fn handle_request_line(
+    c: &mut Conn,
+    line: &[u8],
+    engine: &Engine,
+    store: &ArtifactStore,
+    cfg: &ServerConfig,
+) {
+    let Ok(text) = std::str::from_utf8(line) else {
+        let e = ServeError::new(ErrCode::ParseError, "request line is not valid UTF-8");
+        let frame = error_frame(&e, None, None);
+        c.enqueue(&frame);
+        return;
+    };
+    if text.trim().is_empty() {
+        return;
+    }
+    let req = match Json::parse(text) {
         Ok(j) => j,
-        Err(e) => return err_json(&format!("parse error: {e}")),
+        Err(e) => {
+            let e = ServeError::new(ErrCode::ParseError, format!("parse error: {e}"));
+            let frame = error_frame(&e, None, None);
+            c.enqueue(&frame);
+            return;
+        }
+    };
+    let tag = match req.get("tag") {
+        Json::Null => None,
+        t => Some(t.clone()),
     };
     match req.get("op").as_str() {
-        Some("sample") => handle_sample(&req, engine),
+        Some("sample") => handle_sample(c, &req, tag, engine, store, cfg),
         Some("stats") => {
             let mut o = engine.metrics.snapshot_json();
             if let Json::Obj(map) = &mut o {
                 map.insert("ok".into(), Json::Bool(true));
+                if let Some(t) = tag {
+                    map.insert("tag".into(), t);
+                }
             }
-            o
+            c.enqueue(&o);
         }
-        Some("models") => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            (
-                "models",
-                Json::Arr(store.models.keys().map(|k| Json::Str(k.clone())).collect()),
-            ),
-        ]),
-        Some("solvers") => Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            (
-                "solvers",
-                Json::Arr(
-                    store
-                        .solvers
-                        .values()
-                        .map(|s| {
-                            Json::obj(vec![
-                                ("name", Json::Str(s.name.clone())),
-                                ("kind", Json::Str(s.meta.kind.clone())),
-                                ("model", Json::Str(s.meta.model.clone())),
-                                ("nfe", Json::Num(s.solver.nfe() as f64)),
-                                ("guidance", Json::Num(s.meta.guidance)),
-                                ("val_psnr", Json::Num(s.meta.val_psnr)),
-                            ])
-                        })
-                        .collect(),
-                ),
-            ),
-        ]),
-        other => err_json(&format!("unknown op {other:?}")),
+        Some("ping") => {
+            let frame = ok_frame(
+                vec![("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))],
+                tag,
+            );
+            c.enqueue(&frame);
+        }
+        Some("models") => {
+            let frame = ok_frame(
+                vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "models",
+                        Json::Arr(store.models.keys().map(|k| Json::Str(k.clone())).collect()),
+                    ),
+                ],
+                tag,
+            );
+            c.enqueue(&frame);
+        }
+        Some("solvers") => {
+            let frame = ok_frame(
+                vec![
+                    ("ok", Json::Bool(true)),
+                    (
+                        "solvers",
+                        Json::Arr(
+                            store
+                                .solvers
+                                .values()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("name", Json::Str(s.name.clone())),
+                                        ("kind", Json::Str(s.meta.kind.clone())),
+                                        ("model", Json::Str(s.meta.model.clone())),
+                                        ("nfe", Json::Num(s.solver.nfe() as f64)),
+                                        ("guidance", Json::Num(s.meta.guidance)),
+                                        ("val_psnr", Json::Num(s.meta.val_psnr)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ],
+                tag,
+            );
+            c.enqueue(&frame);
+        }
+        other => {
+            let e = ServeError::new(ErrCode::UnknownOp, format!("unknown op {other:?}"));
+            let frame = error_frame(&e, None, tag.as_ref());
+            c.enqueue(&frame);
+        }
     }
 }
 
-fn handle_sample(req: &Json, engine: &Engine) -> Json {
+fn handle_sample(
+    c: &mut Conn,
+    req: &Json,
+    tag: Option<Json>,
+    engine: &Engine,
+    store: &ArtifactStore,
+    cfg: &ServerConfig,
+) {
+    let bad = |c: &mut Conn, code: ErrCode, msg: String| {
+        let frame = error_frame(&ServeError::new(code, msg), None, tag.as_ref());
+        c.enqueue(&frame);
+    };
     let model = match req.get("model").as_str() {
         Some(m) => m.to_string(),
-        None => return err_json("missing 'model'"),
+        None => return bad(c, ErrCode::BadRequest, "missing 'model'".into()),
     };
+    if !store.models.contains_key(&model) {
+        engine.metrics.record_reject();
+        return bad(c, ErrCode::UnknownModel, format!("unknown model '{model}'"));
+    }
     let labels: Vec<i32> = match req.get("labels").as_f64_vec() {
         Some(v) => v.iter().map(|&x| x as i32).collect(),
-        None => return err_json("missing 'labels'"),
+        None => return bad(c, ErrCode::BadRequest, "missing 'labels'".into()),
     };
     if labels.is_empty() {
-        return err_json("'labels' must be non-empty");
+        return bad(c, ErrCode::BadRequest, "'labels' must be non-empty".into());
     }
+    let priority = match req.get("priority") {
+        Json::Null => Priority::Normal,
+        Json::Str(s) => match Priority::parse(s) {
+            Some(p) => p,
+            None => {
+                return bad(
+                    c,
+                    ErrCode::BadRequest,
+                    format!("bad 'priority' '{s}' (want high|normal|low)"),
+                )
+            }
+        },
+        _ => return bad(c, ErrCode::BadRequest, "'priority' must be a string".into()),
+    };
+    let deadline_ms = match req.get("deadline_ms") {
+        Json::Null => cfg.default_deadline_ms,
+        v => match v.as_f64().filter(|d| *d >= 0.0) {
+            Some(d) => Some(d as u64),
+            None => {
+                return bad(c, ErrCode::BadRequest, "'deadline_ms' must be a number >= 0".into())
+            }
+        },
+    };
+    let stream = req.get("stream").as_bool().unwrap_or(false);
     let guidance = req.get("guidance").as_f64().unwrap_or(0.0) as f32;
     let nfe = req.get("nfe").as_usize().unwrap_or(8);
     let solver = parse_solver_spec(req.get("solver").as_str().unwrap_or("auto"), nfe);
     let seed = req.get("seed").as_f64().unwrap_or(0.0) as u64;
 
-    let (reply, rx) = mpsc::channel();
-    engine.submit(SampleRequest {
+    let sreq = SampleRequest {
         id: 0,
         model,
         labels,
@@ -146,27 +603,166 @@ fn handle_sample(req: &Json, engine: &Engine) -> Json {
         seed,
         x0: None,
         enqueued_at: Instant::now(),
-        reply,
-    });
-    match rx.recv() {
-        Ok(resp) => match resp.result {
-            Ok(out) => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("id", Json::Num(resp.id as f64)),
-                ("dim", Json::Num(out.dim as f64)),
-                ("nfe", Json::Num(out.nfe as f64)),
-                ("forwards", Json::Num(out.forwards as f64)),
-                ("solver_used", Json::Str(out.solver_used)),
-                ("queue_us", Json::Num(out.queue_us as f64)),
-                ("exec_us", Json::Num(out.exec_us as f64)),
-                ("samples", Json::arr_f32(&out.samples)),
-            ]),
-            Err(e) => err_json(&e),
-        },
-        Err(_) => err_json("engine dropped the request"),
+        deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+        priority,
+        progress: stream.then(|| c.prog_tx.clone()),
+        reply: c.reply_tx.clone(),
+    };
+    match engine.try_submit(sreq) {
+        Ok(id) => {
+            c.pending.insert(id, PendingReq { stream, tag: tag.clone() });
+            if stream {
+                let frame = ok_frame(
+                    vec![
+                        ("ok", Json::Bool(true)),
+                        ("frame", Json::Str("accepted".into())),
+                        ("id", Json::Num(id as f64)),
+                    ],
+                    tag,
+                );
+                c.enqueue(&frame);
+            }
+        }
+        Err((_req, e)) => {
+            let frame = error_frame(&e, None, tag.as_ref());
+            c.enqueue(&frame);
+        }
     }
 }
 
-fn err_json(msg: &str) -> Json {
-    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
+/// Drain engine replies into result/error frames.
+fn pump_replies(c: &mut Conn) -> bool {
+    let mut any = false;
+    while let Ok(resp) = c.reply_rx.try_recv() {
+        any = true;
+        // a worker sends all progress events before its terminal reply,
+        // but the two travel on separate channels: drain progress once
+        // more while this request is still pending, so its last events
+        // frame ahead of the result instead of being orphaned
+        if c.pending.get(&resp.id).map_or(false, |p| p.stream) {
+            pump_progress(c);
+        }
+        let Some(p) = c.pending.remove(&resp.id) else { continue };
+        let frame = match resp.result {
+            Ok(out) => {
+                let mut pairs = vec![
+                    ("ok", Json::Bool(true)),
+                    ("id", Json::Num(resp.id as f64)),
+                    ("dim", Json::Num(out.dim as f64)),
+                    ("nfe", Json::Num(out.nfe as f64)),
+                    ("forwards", Json::Num(out.forwards as f64)),
+                    ("solver_used", Json::Str(out.solver_used)),
+                    ("queue_us", Json::Num(out.queue_us as f64)),
+                    ("exec_us", Json::Num(out.exec_us as f64)),
+                    ("samples", Json::arr_f32(&out.samples)),
+                ];
+                if p.stream {
+                    pairs.push(("frame", Json::Str("result".into())));
+                }
+                ok_frame(pairs, p.tag)
+            }
+            Err(e) => error_frame(&e, Some(resp.id), p.tag.as_ref()),
+        };
+        c.enqueue(&frame);
+    }
+    any
+}
+
+/// Drain streaming progress, coalesced to the latest event per request
+/// (the reactor tick is the natural throttle).
+fn pump_progress(c: &mut Conn) -> bool {
+    let mut latest: Vec<Progress> = Vec::new();
+    while let Ok(p) = c.prog_rx.try_recv() {
+        match latest.iter_mut().find(|q| q.id == p.id) {
+            Some(q) => *q = p,
+            None => latest.push(p),
+        }
+    }
+    if latest.is_empty() {
+        return false;
+    }
+    let mut any = false;
+    for p in latest {
+        let Some(pd) = c.pending.get(&p.id) else { continue };
+        if !pd.stream {
+            continue;
+        }
+        any = true;
+        let mut pairs = vec![
+            ("ok", Json::Bool(true)),
+            ("frame", Json::Str("progress".into())),
+            ("id", Json::Num(p.id as f64)),
+            ("evals", Json::Num(p.evals as f64)),
+        ];
+        if let Some(nfe) = p.nfe {
+            pairs.push(("nfe", Json::Num(nfe as f64)));
+        }
+        let frame = ok_frame(pairs, pd.tag.clone());
+        c.enqueue(&frame);
+    }
+    any
+}
+
+/// Flush as much of the write buffer as the socket accepts.
+fn pump_write(c: &mut Conn) -> bool {
+    if c.dead {
+        return false;
+    }
+    let mut any = false;
+    while c.osent < c.obuf.len() {
+        match c.stream.write(&c.obuf[c.osent..]) {
+            Ok(0) => {
+                c.dead = true;
+                break;
+            }
+            Ok(n) => {
+                c.osent += n;
+                any = true;
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                break;
+            }
+        }
+    }
+    if c.osent == c.obuf.len() {
+        c.obuf.clear();
+        c.osent = 0;
+    } else if c.osent > (64 << 10) {
+        c.obuf.drain(..c.osent);
+        c.osent = 0;
+    }
+    any
+}
+
+/// Finish a success frame: append the client's `tag` (echoed on every
+/// frame per PROTOCOL.md) and build the object.
+fn ok_frame(mut pairs: Vec<(&str, Json)>, tag: Option<Json>) -> Json {
+    if let Some(t) = tag {
+        pairs.push(("tag", t));
+    }
+    Json::obj(pairs)
+}
+
+/// The documented error frame: `{"ok":false,"err":<code>,"error":<msg>}`
+/// plus `retry_after_ms` for overload, `id` once one was assigned, and
+/// the client's `tag` when present (PROTOCOL.md §Errors).
+fn error_frame(e: &ServeError, id: Option<u64>, tag: Option<&Json>) -> Json {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("err", Json::Str(e.code.as_str().into())),
+        ("error", Json::Str(e.msg.clone())),
+    ];
+    if let Some(ms) = e.retry_after_ms {
+        pairs.push(("retry_after_ms", Json::Num(ms as f64)));
+    }
+    if let Some(id) = id {
+        pairs.push(("id", Json::Num(id as f64)));
+    }
+    if let Some(t) = tag {
+        pairs.push(("tag", t.clone()));
+    }
+    Json::obj(pairs)
 }

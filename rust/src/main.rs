@@ -18,6 +18,14 @@ USAGE:
   bns-serve serve   [--addr 127.0.0.1:7878] [--artifacts DIR] [--workers N]
                     [--lanes N]  (device lanes; default = workers, forced
                      to 1 when built with --features pjrt)
+                    [--reactors N]      (connection-plane reactor threads;
+                     default 2 — see PROTOCOL.md + README runbook)
+                    [--max-inflight R]  (admission budget: sample rows
+                     admitted but unanswered; beyond it requests are
+                     rejected with err=overloaded; default 4096)
+                    [--deadline-ms MS]  (default per-request deadline when
+                     the request carries none; queued work past it is shed
+                     with err=deadline_exceeded; default: no deadline)
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -121,19 +129,35 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
             let lanes: usize =
                 flags.get("lanes").map(|s| s.parse()).transpose()?.unwrap_or(workers);
+            let reactors: usize =
+                flags.get("reactors").map(|s| s.parse()).transpose()?.unwrap_or(2);
+            let max_inflight: usize =
+                flags.get("max-inflight").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+            let deadline_ms: Option<u64> =
+                flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
+            anyhow::ensure!(reactors >= 1, "--reactors must be >= 1 (got 0)");
+            anyhow::ensure!(max_inflight >= 1, "--max-inflight must be >= 1 (got 0)");
             let rt = Arc::new(Runtime::with_lanes(lanes)?);
             eprintln!(
-                "[bns-serve] {} device lane(s) on '{}', {workers} worker(s)",
+                "[bns-serve] {} device lane(s) on '{}', {workers} worker(s), \
+                 {reactors} reactor(s), max-inflight {max_inflight} rows, \
+                 default deadline {}",
                 rt.num_lanes(),
-                rt.platform()
+                rt.platform(),
+                deadline_ms.map(|ms| format!("{ms}ms")).unwrap_or("none".into()),
             );
             let engine = Arc::new(Engine::start(
                 store.clone(),
                 rt,
-                EngineConfig { workers, ..Default::default() },
+                EngineConfig { workers, max_inflight_rows: max_inflight, ..Default::default() },
             ));
             let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:7878".into());
-            server::serve(&addr, engine, store)?;
+            let cfg = bns_serve::coordinator::ServerConfig {
+                reactors,
+                default_deadline_ms: deadline_ms,
+                ..Default::default()
+            };
+            server::serve_with(&addr, cfg, engine, store)?;
             Ok(())
         }
         "sample" => {

@@ -25,6 +25,9 @@ fn mk_req(rng: &mut Pcg32, models: &[&str], id: u64) -> SampleRequest {
         seed: rng.next_u64(),
         x0: None,
         enqueued_at: Instant::now(),
+        deadline: None,
+        priority: bns_serve::coordinator::request::Priority::Normal,
+        progress: None,
         reply: tx,
     }
 }

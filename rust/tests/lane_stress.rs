@@ -101,6 +101,9 @@ fn run_plan(engine: &Engine) -> Vec<SampleOutput> {
             seed,
             x0: None,
             enqueued_at: Instant::now(),
+            deadline: None,
+            priority: bns_serve::coordinator::request::Priority::Normal,
+            progress: None,
             reply: tx,
         });
         rxs.push(rx);

@@ -1,0 +1,391 @@
+//! Protocol error-path tests for the event-driven TCP serving plane:
+//! every failure mode documented in PROTOCOL.md §Errors must produce its
+//! structured `{"ok":false,"err":<code>,...}` line, and the streaming
+//! frame sequence must follow accepted → progress → result. Runs
+//! entirely on the stub device backend.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bns_serve::bench_util::{stub_store, StubModel};
+use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig};
+use bns_serve::coordinator::batcher::BatcherConfig;
+use bns_serve::runtime::Runtime;
+use bns_serve::util::json::Json;
+
+const MODEL: &str = "proto_stub";
+
+/// A full serving plane on an ephemeral port; dropped in reverse order.
+struct Plane {
+    server: Option<Server>,
+    engine: Option<Arc<Engine>>,
+    dir: std::path::PathBuf,
+}
+
+impl Plane {
+    fn up(tag: &str, engine_cfg: EngineConfig, server_cfg: ServerConfig) -> Plane {
+        let (store, dir) = stub_store(
+            &format!("proto-{tag}"),
+            &[StubModel {
+                name: MODEL,
+                dim: 8,
+                num_classes: 4,
+                forwards_per_eval: 1,
+                k: -0.6,
+                c: 0.05,
+                label_scale: 0.01,
+                cost: 1,
+                buckets: &[4, 16],
+            }],
+        )
+        .expect("stub store");
+        let rt = Arc::new(Runtime::cpu().expect("runtime"));
+        let engine = Arc::new(Engine::start(store.clone(), rt, engine_cfg));
+        let server = Server::bind("127.0.0.1:0", server_cfg, engine.clone(), store)
+            .expect("bind server");
+        Plane { server: Some(server), engine: Some(engine), dir }
+    }
+
+    fn client(&self) -> Client {
+        Client::connect(self.server.as_ref().unwrap().local_addr())
+    }
+
+    fn metrics(&self) -> Json {
+        self.engine.as_ref().unwrap().metrics.snapshot_json()
+    }
+}
+
+impl Drop for Plane {
+    fn drop(&mut self) {
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+        self.engine.take(); // Engine::drop joins its threads
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        w.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Client { w, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("read response");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad response json: {e} in {line:?}"))
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn assert_err(j: &Json, code: &str) {
+    assert_eq!(j.get("ok").as_bool(), Some(false), "expected error, got {j:?}");
+    assert_eq!(j.get("err").as_str(), Some(code), "wrong code in {j:?}");
+    assert!(
+        j.get("error").as_str().map_or(false, |m| !m.is_empty()),
+        "missing human message in {j:?}"
+    );
+}
+
+#[test]
+fn malformed_json_then_connection_survives() {
+    let plane = Plane::up("malformed", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    let j = c.roundtrip("{not json");
+    assert_err(&j, "parse_error");
+    // connection stays usable after a protocol error
+    let pong = c.roundtrip("{\"op\":\"ping\"}");
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    assert_eq!(pong.get("op").as_str(), Some("pong"));
+}
+
+#[test]
+fn unknown_op_is_structured() {
+    let plane = Plane::up("unknown-op", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    let j = c.roundtrip("{\"op\":\"warp\"}");
+    assert_err(&j, "unknown_op");
+    // op missing entirely is the same code
+    let j = c.roundtrip("{\"nope\":1}");
+    assert_err(&j, "unknown_op");
+}
+
+#[test]
+fn bad_request_and_unknown_model() {
+    let plane = Plane::up("bad-req", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    assert_err(&c.roundtrip("{\"op\":\"sample\"}"), "bad_request"); // no model
+    assert_err(
+        &c.roundtrip(&format!("{{\"op\":\"sample\",\"model\":\"{MODEL}\"}}")),
+        "bad_request", // no labels
+    );
+    assert_err(
+        &c.roundtrip(&format!(
+            "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[]}}"
+        )),
+        "bad_request", // empty labels
+    );
+    assert_err(
+        &c.roundtrip(&format!(
+            "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0],\"priority\":\"urgent\"}}"
+        )),
+        "bad_request", // bad priority name
+    );
+    assert_err(
+        &c.roundtrip("{\"op\":\"sample\",\"model\":\"nope\",\"labels\":[0]}"),
+        "unknown_model",
+    );
+}
+
+#[test]
+fn oversized_line_is_rejected_and_discarded() {
+    let plane = Plane::up(
+        "oversize",
+        EngineConfig::default(),
+        ServerConfig { max_line_bytes: 1024, ..Default::default() },
+    );
+    let mut c = plane.client();
+    // a 4 KiB line against a 1 KiB cap
+    let mut big = String::from("{\"op\":\"sample\",\"labels\":[");
+    while big.len() < 4096 {
+        big.push_str("0,");
+    }
+    big.push_str("0]}");
+    let j = c.roundtrip(&big);
+    assert_err(&j, "line_too_long");
+    // the remainder of the oversized line was discarded: the next line
+    // parses cleanly
+    let pong = c.roundtrip("{\"op\":\"ping\",\"tag\":7}");
+    assert_eq!(pong.get("ok").as_bool(), Some(true));
+    assert_eq!(pong.get("tag").as_f64(), Some(7.0));
+}
+
+#[test]
+fn overload_rejects_with_retry_hint_and_counts() {
+    // budget of 4 rows; a 4-row request parks in the batcher for 300 ms
+    // (max_wait) and holds the whole budget, so the next request must be
+    // rejected with a structured overload line
+    let plane = Plane::up(
+        "overload",
+        EngineConfig {
+            max_inflight_rows: 4,
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_millis(300),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ServerConfig::default(),
+    );
+    let mut c = plane.client();
+    c.send(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1,2,3],\"nfe\":4,\"tag\":\"slow\"}}"
+    ));
+    // give the reactor a moment to admit the first request
+    std::thread::sleep(Duration::from_millis(50));
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0],\"nfe\":4,\"tag\":\"rejected\"}}"
+    ));
+    assert_err(&j, "overloaded");
+    assert_eq!(j.get("tag").as_str(), Some("rejected"));
+    let retry = j.get("retry_after_ms").as_f64().expect("retry_after_ms present");
+    assert!(retry >= 1.0, "retry hint should be positive, got {retry}");
+    // the parked request still completes once the batcher flushes
+    let done = c.recv();
+    assert_eq!(done.get("ok").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.get("tag").as_str(), Some("slow"));
+    // and the reject is on the metrics surface
+    let m = plane.metrics();
+    assert!(m.get("rejected_overload").as_f64().unwrap_or(0.0) >= 1.0, "{m:?}");
+}
+
+#[test]
+fn deadline_expired_on_arrival() {
+    let plane = Plane::up("deadline-now", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0],\"deadline_ms\":0}}"
+    ));
+    assert_err(&j, "deadline_exceeded");
+    assert!(plane.metrics().get("expired").as_f64().unwrap_or(0.0) >= 1.0);
+}
+
+#[test]
+fn deadline_sheds_queued_work_before_dispatch() {
+    // flush wait (5 s) far beyond the deadline (60 ms): the request can
+    // only come back via the batcher's shed path, well before any flush
+    let plane = Plane::up(
+        "deadline-shed",
+        EngineConfig {
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_secs(5),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ServerConfig::default(),
+    );
+    let mut c = plane.client();
+    let t0 = std::time::Instant::now();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0],\"deadline_ms\":60}}"
+    ));
+    let waited = t0.elapsed();
+    assert_err(&j, "deadline_exceeded");
+    assert!(
+        waited < Duration::from_secs(4),
+        "expiry reply took {waited:?} — shed ran at flush time, not at the deadline"
+    );
+    assert!(plane.metrics().get("expired").as_f64().unwrap_or(0.0) >= 1.0);
+}
+
+#[test]
+fn default_deadline_applies_when_request_has_none() {
+    let plane = Plane::up(
+        "deadline-default",
+        EngineConfig {
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_secs(5),
+                ..Default::default()
+            },
+            ..Default::default()
+        },
+        ServerConfig { default_deadline_ms: Some(60), ..Default::default() },
+    );
+    let mut c = plane.client();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0]}}"
+    ));
+    assert_err(&j, "deadline_exceeded");
+}
+
+#[test]
+fn streaming_frames_accepted_progress_result() {
+    let plane = Plane::up("stream", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    c.send(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"solver\":\"euler\",\
+         \"nfe\":8,\"seed\":3,\"stream\":true,\"tag\":\"s1\"}}"
+    ));
+    let accepted = c.recv();
+    assert_eq!(accepted.get("ok").as_bool(), Some(true), "{accepted:?}");
+    assert_eq!(accepted.get("frame").as_str(), Some("accepted"));
+    assert_eq!(accepted.get("tag").as_str(), Some("s1"));
+    let id = accepted.get("id").as_f64().expect("accepted carries the id");
+
+    let mut progress_seen = 0usize;
+    let mut last_evals = 0usize;
+    let result = loop {
+        let f = c.recv();
+        assert_eq!(f.get("ok").as_bool(), Some(true), "{f:?}");
+        assert_eq!(f.get("id").as_f64(), Some(id));
+        assert_eq!(f.get("tag").as_str(), Some("s1"));
+        match f.get("frame").as_str() {
+            Some("progress") => {
+                let evals = f.get("evals").as_usize().expect("evals");
+                assert!(evals >= last_evals, "progress went backwards");
+                assert!(evals <= 8, "euler nfe=8 cannot exceed 8 evals");
+                assert_eq!(f.get("nfe").as_usize(), Some(8), "planned total on each frame");
+                last_evals = evals;
+                progress_seen += 1;
+            }
+            Some("result") => break f,
+            other => panic!("unexpected frame {other:?}: {f:?}"),
+        }
+    };
+    assert!(progress_seen >= 1, "streamed request produced no progress frames");
+    assert_eq!(result.get("nfe").as_usize(), Some(8));
+    assert_eq!(
+        result.get("samples").as_arr().map(|a| a.len()),
+        Some(2 * result.get("dim").as_usize().unwrap())
+    );
+
+    // a non-streamed request on the same connection gets the plain
+    // (frame-less) response shape
+    let plain = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0],\"solver\":\"euler\",\"nfe\":8}}"
+    ));
+    assert_eq!(plain.get("ok").as_bool(), Some(true));
+    assert_eq!(plain.get("frame"), &Json::Null);
+}
+
+#[test]
+fn stats_models_solvers_and_connection_gauge() {
+    let plane = Plane::up("stats", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    let models = c.roundtrip("{\"op\":\"models\"}");
+    assert_eq!(models.get("ok").as_bool(), Some(true));
+    assert!(models
+        .get("models")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .any(|m| m.as_str() == Some(MODEL)));
+    let solvers = c.roundtrip("{\"op\":\"solvers\",\"tag\":\"t\"}");
+    assert_eq!(solvers.get("ok").as_bool(), Some(true));
+    assert_eq!(solvers.get("tag").as_str(), Some("t"));
+    let stats = c.roundtrip("{\"op\":\"stats\"}");
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    assert!(
+        stats.get("connections").as_f64().unwrap_or(0.0) >= 1.0,
+        "open connection must show on the gauge: {stats:?}"
+    );
+    // a served sample settles the in-flight gauge back to zero
+    let ok = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1,2],\"nfe\":4}}"
+    ));
+    assert_eq!(ok.get("ok").as_bool(), Some(true));
+    let stats = c.roundtrip("{\"op\":\"stats\"}");
+    assert_eq!(stats.get("inflight_rows").as_f64(), Some(0.0));
+    assert!(stats.get("requests").as_f64().unwrap_or(0.0) >= 1.0);
+}
+
+/// Samples served over TCP are bit-identical to the in-process blocking
+/// path (the protocol layer must never perturb numerics).
+#[test]
+fn tcp_samples_match_blocking_path() {
+    let plane = Plane::up("bitident", EngineConfig::default(), ServerConfig::default());
+    let engine = plane.engine.as_ref().unwrap();
+    let want = engine
+        .sample_blocking(
+            MODEL,
+            vec![0, 1, 2],
+            0.0,
+            bns_serve::coordinator::SolverSpec::Auto { nfe: 8 },
+            42,
+        )
+        .unwrap();
+    let mut c = plane.client();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1,2],\"solver\":\"auto\",\
+         \"nfe\":8,\"seed\":42}}"
+    ));
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j:?}");
+    let got = j.get("samples").as_f32_vec().unwrap();
+    let want_bits: Vec<u32> = want.samples.iter().map(|v| v.to_bits()).collect();
+    let got_bits: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits);
+}
