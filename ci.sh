@@ -4,10 +4,13 @@
 #   ./ci.sh             # lints advisory, tier-1 (build + test) is the gate
 #   STRICT=1 ./ci.sh    # lints are also gating (fmt --check, clippy -D warnings)
 #
-# The tier-1 command (`cargo build --release && cargo test -q`) is always
-# a hard failure. fmt/clippy run and report, but only fail the script
-# under STRICT=1 — toolchain components (rustfmt/clippy) may be absent in
-# minimal images, and style drift must not mask a broken build.
+# The tier-1 commands (`cargo build --release && cargo test -q`, then
+# the repo-native `cargo run --release --bin bns_lint` pass, DESIGN.md
+# §10) are always hard failures. fmt/clippy run and report, but only
+# fail the script under STRICT=1 — toolchain components (rustfmt/clippy)
+# may be absent in minimal images, and style drift must not mask a
+# broken build. bns_lint is built from this crate by the tier-1 build,
+# so it has no such availability excuse and gates unconditionally.
 
 set -uo pipefail
 cd "$(dirname "$0")/rust"
@@ -64,6 +67,21 @@ cargo build --release || fail=1
 
 step "tier-1: cargo test -q"
 cargo test -q || fail=1
+
+# Repo-native static analysis (DESIGN.md §10): panic-freedom of the
+# serving plane, hot-path allocation bans, channel/lock discipline, and
+# docs drift. Built by the tier-1 build above from this crate, so unlike
+# fmt/clippy it can never be "unavailable; skipping" — it is GATING.
+# The binary prints per-rule counts; STRICT=1 additionally pins the
+# accepted-pragma count to the checked-in budget so the allowlist can
+# only shrink (or be raised as an explicit, reviewed diff).
+step "tier-1: cargo run --release --bin bns_lint (gating, DESIGN.md §10)"
+if [ "${STRICT:-0}" = "1" ]; then
+  budget=$(cat src/analysis/pragma_budget)
+  cargo run --release --quiet --bin bns_lint -- --max-pragmas "$budget" || fail=1
+else
+  cargo run --release --quiet --bin bns_lint || fail=1
+fi
 
 # Perf trajectory: the serve_load bench runs on the stub backend (no
 # artifacts needed) and writes machine-readable BENCH_serve.json at the

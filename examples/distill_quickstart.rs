@@ -44,7 +44,7 @@ fn main() -> anyhow::Result<()> {
 
     // 3. serve with it
     let store = Arc::new(ArtifactStore::load(&dir)?);
-    let engine = Engine::start(store, rt, EngineConfig::default());
+    let engine = Engine::start(store, rt, EngineConfig::default())?;
     let out = engine.sample_blocking(model, vec![0, 1, 2, 3], 0.0, SolverSpec::Auto { nfe }, 7)?;
     println!("auto-routed to '{}' (nfe {}, {} forwards)", out.solver_used, out.nfe, out.forwards);
     engine.shutdown();

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     println!("platform: {}", rt.platform());
     println!("models:   {:?}", store.models.keys().collect::<Vec<_>>());
 
-    let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+    let engine = Engine::start(store.clone(), rt, EngineConfig::default())?;
 
     // 8 samples of the class-conditional image model, classes 0..7.
     let model = "img_fm_ot";

@@ -31,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     let dir = bns_serve::default_artifacts_dir();
     let store = Arc::new(ArtifactStore::load(&dir)?);
     let rt = Arc::new(Runtime::cpu()?);
-    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default())?);
 
     // server in a background thread
     {

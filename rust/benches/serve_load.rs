@@ -72,7 +72,7 @@ fn run_config(
     workers: usize,
 ) -> anyhow::Result<ConfigResult> {
     let rt = Arc::new(Runtime::with_lanes(lanes)?);
-    let engine = Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() });
+    let engine = Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() })?;
 
     // warmup compiles every bucket; probes double as the correctness set
     engine.sample_blocking(MODEL, vec![0; ROWS_PER_REQ], 0.0, spec(), 1)?;
@@ -180,7 +180,7 @@ fn run_overload(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow::Resul
             max_inflight_rows: OVER_MAX_INFLIGHT_ROWS,
             ..Default::default()
         },
-    ));
+    )?);
     let server = Server::bind(
         "127.0.0.1:0",
         ServerConfig { reactors: 2, ..Default::default() },

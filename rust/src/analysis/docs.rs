@@ -1,0 +1,300 @@
+//! Docs-drift checks (bns-lint rule `docs_drift`).
+//!
+//! The serving plane's externally visible surfaces each have a canonical
+//! document, and code and document are only allowed to move together:
+//!
+//! * every `ErrCode` wire string in `coordinator/request.rs` must appear
+//!   (backtick-quoted) in PROTOCOL.md;
+//! * every CLI flag read from the parsed flag map in `main.rs` must
+//!   appear as `--flag` in README.md;
+//! * every field emitted by `Metrics::snapshot_json` must appear
+//!   (backtick-quoted) in DESIGN.md §4;
+//! * every `[[hot]]` manifest entry's bench marker must still exist in
+//!   the named bench source, so the static hot-path rule and the
+//!   counting-allocator measurement cannot silently diverge.
+//!
+//! Extraction runs on the source text with small shape scanners (same
+//! philosophy as `rules.rs`); the check functions are pure so the
+//! fixture tests can feed them synthetic code/doc pairs.
+
+use std::fs;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::lexer::{is_ident, lex};
+use super::rules::{fn_bodies, word_positions, HotEntry, Violation, RULE_DOCS};
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Wire strings from `ErrCode::Variant => "string"` match arms.
+pub fn err_code_strings(request_src: &str) -> Vec<String> {
+    const PAT: &[u8] = b"ErrCode::";
+    let b = request_src.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i + PAT.len() <= b.len() {
+        if &b[i..i + PAT.len()] != PAT {
+            i += 1;
+            continue;
+        }
+        let mut j = i + PAT.len();
+        while j < b.len() && is_ident(b[j]) {
+            j += 1;
+        }
+        let mut k = skip_ws(b, j);
+        if !(k + 1 < b.len() && b[k] == b'=' && b[k + 1] == b'>') {
+            i = j;
+            continue;
+        }
+        k = skip_ws(b, k + 2);
+        if k >= b.len() || b[k] != b'"' {
+            i = j;
+            continue;
+        }
+        let s = k + 1;
+        let mut e = s;
+        while e < b.len() && b[e] != b'"' {
+            e += 1;
+        }
+        let code = &request_src[s..e];
+        if !code.is_empty()
+            && code.bytes().all(|c| c.is_ascii_lowercase() || c == b'_')
+            && !out.iter().any(|c| c == code)
+        {
+            out.push(code.to_string());
+        }
+        i = e + 1;
+    }
+    out
+}
+
+/// CLI flags read via `flags.get("…")` / `flags.contains_key("…")`.
+pub fn cli_flags(main_src: &str) -> Vec<String> {
+    let b = main_src.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    for p in word_positions(b, "flags") {
+        let mut k = skip_ws(b, p + "flags".len());
+        if k >= b.len() || b[k] != b'.' {
+            continue;
+        }
+        k = skip_ws(b, k + 1);
+        let ws = k;
+        while k < b.len() && is_ident(b[k]) {
+            k += 1;
+        }
+        let method = &main_src[ws..k];
+        if method != "get" && method != "contains_key" {
+            continue;
+        }
+        k = skip_ws(b, k);
+        if k >= b.len() || b[k] != b'(' {
+            continue;
+        }
+        k = skip_ws(b, k + 1);
+        if k >= b.len() || b[k] != b'"' {
+            continue;
+        }
+        let s = k + 1;
+        let mut e = s;
+        while e < b.len() && b[e] != b'"' {
+            e += 1;
+        }
+        let flag = &main_src[s..e];
+        if !flag.is_empty()
+            && flag.bytes().all(|c| c.is_ascii_lowercase() || c == b'-')
+            && !out.iter().any(|f| f == flag)
+        {
+            out.push(flag.to_string());
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Field names emitted by `Metrics::snapshot_json`: every
+/// `("name", Json…)` pair inside that function's body.
+pub fn metrics_fields(metrics_src: &str) -> Vec<String> {
+    let lexed = lex(metrics_src);
+    let sb = lexed.scrub.as_bytes();
+    let raw = metrics_src.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    for (open, close) in fn_bodies(sb, "snapshot_json") {
+        let mut i = open;
+        while i < close.min(raw.len()) {
+            if raw[i] != b'(' {
+                i += 1;
+                continue;
+            }
+            let k = skip_ws(raw, i + 1);
+            if k >= raw.len() || raw[k] != b'"' {
+                i += 1;
+                continue;
+            }
+            let s = k + 1;
+            let mut e = s;
+            while e < raw.len() && raw[e] != b'"' {
+                e += 1;
+            }
+            let name = &metrics_src[s..e.min(raw.len())];
+            let mut m = skip_ws(raw, (e + 1).min(raw.len()));
+            let mut is_field = false;
+            if m < raw.len() && raw[m] == b',' {
+                m = skip_ws(raw, m + 1);
+                is_field = raw.len() - m >= 4 && &raw[m..m + 4] == b"Json";
+            }
+            if is_field
+                && !name.is_empty()
+                && name
+                    .bytes()
+                    .all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'_')
+                && !out.iter().any(|f| f == name)
+            {
+                out.push(name.to_string());
+            }
+            i = e + 1;
+        }
+    }
+    out
+}
+
+/// The body of the `## <prefix>…` section of a markdown file (up to the
+/// next `## ` heading).
+pub fn md_section(md: &str, prefix: &str) -> String {
+    let mut in_sec = false;
+    let mut out = String::new();
+    for line in md.lines() {
+        if let Some(h) = line.strip_prefix("## ") {
+            in_sec = h.trim_start().starts_with(prefix);
+        }
+        if in_sec {
+            out.push_str(line);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+fn backtick_quoted(doc: &str, term: &str) -> bool {
+    let needle_len = term.len() + 2;
+    let b = doc.as_bytes();
+    let t = term.as_bytes();
+    if b.len() < needle_len {
+        return false;
+    }
+    for i in 0..=b.len() - needle_len {
+        if b[i] == b'`' && &b[i + 1..i + 1 + t.len()] == t && b[i + 1 + t.len()] == b'`' {
+            return true;
+        }
+    }
+    false
+}
+
+/// Pure check: error codes present in PROTOCOL.md?
+pub fn check_err_codes(request_src: &str, protocol_md: &str) -> Vec<Violation> {
+    err_code_strings(request_src)
+        .into_iter()
+        .filter(|c| !backtick_quoted(protocol_md, c))
+        .map(|c| Violation {
+            file: "PROTOCOL.md".to_string(),
+            line: 0,
+            rule: RULE_DOCS,
+            msg: format!("error code `{c}` missing from PROTOCOL.md"),
+        })
+        .collect()
+}
+
+/// Pure check: CLI flags present in README.md?
+pub fn check_cli_flags(main_src: &str, readme_md: &str) -> Vec<Violation> {
+    cli_flags(main_src)
+        .into_iter()
+        .filter(|f| !readme_md.contains(&format!("--{f}")))
+        .map(|f| Violation {
+            file: "README.md".to_string(),
+            line: 0,
+            rule: RULE_DOCS,
+            msg: format!("CLI flag --{f} missing from README.md"),
+        })
+        .collect()
+}
+
+/// Pure check: snapshot fields present in DESIGN.md §4?
+pub fn check_metrics_fields(metrics_src: &str, design_md: &str) -> Vec<Violation> {
+    let sec = md_section(design_md, "§4");
+    metrics_fields(metrics_src)
+        .into_iter()
+        .filter(|f| !backtick_quoted(&sec, f))
+        .map(|f| Violation {
+            file: "DESIGN.md".to_string(),
+            line: 0,
+            rule: RULE_DOCS,
+            msg: format!("metrics field `{f}` missing from DESIGN.md §4"),
+        })
+        .collect()
+}
+
+/// Manifest/bench cross-check: every `[[hot]]` entry's marker must still
+/// appear in the named bench source.
+pub fn check_manifest_benches(root: &Path, manifest: &[HotEntry]) -> Vec<Violation> {
+    let mut out: Vec<Violation> = Vec::new();
+    for e in manifest {
+        if e.bench.is_empty() {
+            continue;
+        }
+        let path = root
+            .join("rust")
+            .join("benches")
+            .join(format!("{}.rs", e.bench));
+        let rel = format!("rust/benches/{}.rs", e.bench);
+        match fs::read_to_string(&path) {
+            Ok(src) => {
+                if !e.check.is_empty() && !src.contains(&e.check) {
+                    out.push(Violation {
+                        file: rel,
+                        line: 0,
+                        rule: RULE_DOCS,
+                        msg: format!(
+                            "hot-path manifest cross-check: marker `{}` for fn `{}` missing from bench `{}`",
+                            e.check, e.func, e.bench
+                        ),
+                    });
+                }
+            }
+            Err(_) => out.push(Violation {
+                file: rel,
+                line: 0,
+                rule: RULE_DOCS,
+                msg: format!(
+                    "hot-path manifest cross-check: bench source for `{}` (fn `{}`) not found",
+                    e.bench, e.func
+                ),
+            }),
+        }
+    }
+    out
+}
+
+/// Run every docs-drift check against the repo tree at `root`.
+pub fn check_all(root: &Path, manifest: &[HotEntry]) -> Result<Vec<Violation>> {
+    let read = |p: &Path| -> Result<String> {
+        fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))
+    };
+    let src = root.join("rust").join("src");
+    let request = read(&src.join("coordinator").join("request.rs"))?;
+    let protocol = read(&root.join("PROTOCOL.md"))?;
+    let main_src = read(&src.join("main.rs"))?;
+    let readme = read(&root.join("README.md"))?;
+    let metrics = read(&src.join("coordinator").join("metrics.rs"))?;
+    let design = read(&root.join("DESIGN.md"))?;
+
+    let mut v = check_err_codes(&request, &protocol);
+    v.extend(check_cli_flags(&main_src, &readme));
+    v.extend(check_metrics_fields(&metrics, &design));
+    v.extend(check_manifest_benches(root, manifest));
+    Ok(v)
+}

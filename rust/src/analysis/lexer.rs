@@ -1,0 +1,242 @@
+//! Minimal Rust lexer for bns-lint — length-preserving scrubbing.
+//!
+//! `lex` produces a *scrubbed* copy of a source file in which the bodies of
+//! comments and the contents of string/char literals are replaced by
+//! spaces. Newlines are kept, and the scrub has exactly the same byte
+//! length as the input, so byte offsets and line numbers computed on the
+//! scrub are valid for the original text. All rule scanning then runs on
+//! the scrub, which makes the scanners trivially immune to `unwrap()`
+//! appearing in a doc comment or `"panic!"` inside a log string.
+//!
+//! The lexer understands just enough Rust to scrub safely:
+//! * line comments (`//`) and nested block comments (`/* /* */ */`),
+//!   collected with their 1-based start line so the pragma parser can see
+//!   them after they've been blanked from the scrub;
+//! * plain, byte, and raw (byte) string literals (`"…"`, `b"…"`,
+//!   `r#"…"#`, `br#"…"#`), including escapes and multi-line bodies;
+//! * char literals vs lifetimes (`'a'` and `'\n'` scrub; `'static` stays).
+//!
+//! It does not parse expressions, types, or macros — the rule layer works
+//! on token-ish byte scans over the scrub instead (see `rules.rs`).
+
+/// Lexed view of one source file.
+pub struct Lexed {
+    /// Source with comment bodies and literal contents blanked to spaces.
+    /// Same byte length as the input; newlines preserved.
+    pub scrub: String,
+    /// Every comment with the 1-based line it starts on, in file order.
+    pub comments: Vec<(usize, String)>,
+}
+
+/// Is this byte part of an identifier (our word-boundary test)?
+pub fn is_ident(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Scrub one source file. See module docs for the contract.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment: blank to end of line (newline itself stays code).
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let mut j = i;
+            while j < b.len() && b[j] != b'\n' {
+                j += 1;
+            }
+            comments.push((line, String::from_utf8_lossy(&b[i..j]).into_owned()));
+            blank_into(&mut out, &b[i..j], &mut line);
+            i = j;
+            continue;
+        }
+        // Block comment, possibly nested.
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            comments.push((line, String::from_utf8_lossy(&b[i..j]).into_owned()));
+            blank_into(&mut out, &b[i..j], &mut line);
+            i = j;
+            continue;
+        }
+        let prev_ident = i > 0 && is_ident(b[i - 1]);
+        // Raw (byte) string: r"…", r#"…"#, br"…". Only when the `r`/`b`
+        // prefix is not the tail of a longer identifier.
+        if !prev_ident {
+            if let Some(j) = raw_string_end(b, i) {
+                blank_literal(&mut out, &b[i..j], &mut line);
+                i = j;
+                continue;
+            }
+        }
+        // Plain or byte string.
+        if c == b'"' || (!prev_ident && c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let open = if c == b'"' { i } else { i + 1 };
+            let mut j = open + 1;
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            let j = j.min(b.len());
+            blank_literal(&mut out, &b[i..j], &mut line);
+            i = j;
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            let mut k = i + 1;
+            while k < b.len() && is_ident(b[k]) {
+                k += 1;
+            }
+            let lifetime = k > i + 1 && b.get(k) != Some(&b'\'');
+            if !lifetime {
+                let mut j = i + 1;
+                if b.get(j) == Some(&b'\\') {
+                    j += 2;
+                }
+                while j < b.len() && b[j] != b'\'' {
+                    j += 1;
+                }
+                let j = (j + 1).min(b.len());
+                blank_literal(&mut out, &b[i..j], &mut line);
+                i = j;
+                continue;
+            }
+        }
+        out.push(c);
+        if c == b'\n' {
+            line += 1;
+        }
+        i += 1;
+    }
+    Lexed {
+        scrub: String::from_utf8_lossy(&out).into_owned(),
+        comments,
+    }
+}
+
+/// If `b[i..]` starts a raw (byte) string literal, return its end offset.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut k = i;
+    if b.get(k) == Some(&b'b') {
+        k += 1;
+    }
+    if b.get(k) != Some(&b'r') {
+        return None;
+    }
+    k += 1;
+    let mut hashes = 0usize;
+    while b.get(k) == Some(&b'#') {
+        hashes += 1;
+        k += 1;
+    }
+    if b.get(k) != Some(&b'"') {
+        return None;
+    }
+    k += 1;
+    while k < b.len() {
+        if b[k] == b'"' {
+            let mut h = 0usize;
+            while h < hashes && b.get(k + 1 + h) == Some(&b'#') {
+                h += 1;
+            }
+            if h == hashes {
+                return Some(k + 1 + hashes);
+            }
+        }
+        k += 1;
+    }
+    Some(b.len())
+}
+
+/// Blank a comment span: every byte becomes a space, newlines survive.
+fn blank_into(out: &mut Vec<u8>, seg: &[u8], line: &mut usize) {
+    for &c in seg {
+        if c == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+    }
+}
+
+/// Blank a literal span, keeping its first and last byte (the delimiters)
+/// so the scrub still shows where a literal sat. Length is preserved.
+fn blank_literal(out: &mut Vec<u8>, seg: &[u8], line: &mut usize) {
+    if seg.len() <= 2 {
+        for &c in seg {
+            out.push(c);
+            if c == b'\n' {
+                *line += 1;
+            }
+        }
+        return;
+    }
+    out.push(seg[0]);
+    for &c in &seg[1..seg.len() - 1] {
+        if c == b'\n' {
+            out.push(b'\n');
+            *line += 1;
+        } else {
+            out.push(b' ');
+        }
+    }
+    out.push(seg[seg.len() - 1]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scrub_preserves_length_and_lines() {
+        let src = "let a = \"unwrap()\"; // .unwrap() here\nlet c = '\\n'; /* panic! */ let l: &'static str = r#\"todo!()\"#;\n";
+        let lx = lex(src);
+        assert_eq!(lx.scrub.len(), src.len());
+        assert_eq!(
+            lx.scrub.matches('\n').count(),
+            src.matches('\n').count()
+        );
+        // banned tokens in comments/strings are gone from the scrub
+        assert!(!lx.scrub.contains("unwrap"));
+        assert!(!lx.scrub.contains("panic"));
+        assert!(!lx.scrub.contains("todo"));
+        // lifetime survives; comments are collected with their line
+        assert!(lx.scrub.contains("'static"));
+        assert_eq!(lx.comments.len(), 2);
+        assert_eq!(lx.comments[0].0, 1);
+        assert!(lx.comments[0].1.contains(".unwrap() here"));
+        assert_eq!(lx.comments[1].0, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_and_byte_strings() {
+        let src = "/* a /* b */ c */ let x = b\"vec![]\"; let y = 1;";
+        let lx = lex(src);
+        assert_eq!(lx.scrub.len(), src.len());
+        assert!(!lx.scrub.contains("vec!"));
+        assert!(lx.scrub.contains("let y = 1;"));
+        assert_eq!(lx.comments.len(), 1);
+    }
+}

@@ -1,0 +1,125 @@
+//! bns-lint — the repo-native static-analysis pass.
+//!
+//! Clippy and rustfmt are *advisory* in ci.sh because their toolchain
+//! components may be absent from the offline image. bns-lint is built
+//! from this crate with the same `cargo build` that tier-1 already
+//! requires, so it can never be "unavailable; skipping" — which is what
+//! lets it gate. It turns the prose invariants of DESIGN.md (§9 panic-
+//! freedom of the serving plane, §5/§8 zero-allocation hot paths, §4
+//! bounded queues) into machine-checked rules over `rust/src`.
+//!
+//! Layout:
+//! * [`lexer`] — length-preserving scrub of comments/literals;
+//! * [`rules`] — the code rules (`panic_free`, `hot_path_alloc`,
+//!   `bounded_channel`, `lock_across_call`) + pragma parsing;
+//! * [`docs`]  — the `docs_drift` checks tying code to PROTOCOL.md,
+//!   README.md, DESIGN.md §4, and the hot-path manifest to its benches;
+//! * `hot_paths.toml` — the checked-in hot-function manifest;
+//! * `pragma_budget` — the checked-in allowlist budget (STRICT=1 CI
+//!   fails if the tree carries more accepted pragmas than this).
+//!
+//! The user-facing rule catalog lives in DESIGN.md §10.
+
+pub mod docs;
+pub mod lexer;
+pub mod rules;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use rules::{HotEntry, Violation, RULES};
+
+/// Aggregate result of a full-tree lint.
+pub struct LintReport {
+    /// All findings, in (file, line) order per file.
+    pub violations: Vec<Violation>,
+    /// Accepted pragmas across the tree (the budget unit).
+    pub pragmas: usize,
+    /// `.rs` files scanned under `rust/src`.
+    pub files_scanned: usize,
+}
+
+impl LintReport {
+    /// Per-rule counts in [`RULES`] order.
+    pub fn counts(&self) -> Vec<(&'static str, usize)> {
+        RULES
+            .iter()
+            .map(|r| (*r, self.violations.iter().filter(|v| v.rule == *r).count()))
+            .collect()
+    }
+}
+
+/// Locate the repo root: walk up from `start` until a directory holding
+/// both `rust/src` and `PROTOCOL.md` is found.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut cur = Some(start.to_path_buf());
+    while let Some(d) = cur {
+        if d.join("rust").join("src").is_dir() && d.join("PROTOCOL.md").is_file() {
+            return Some(d);
+        }
+        cur = d.parent().map(Path::to_path_buf);
+    }
+    None
+}
+
+/// Recursively collect `.rs` files, sorted for deterministic reports.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<fs::DirEntry> = fs::read_dir(dir)
+        .with_context(|| format!("reading {}", dir.display()))?
+        .collect::<std::io::Result<Vec<fs::DirEntry>>>()?;
+    entries.sort_by_key(fs::DirEntry::file_name);
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            rs_files(&p, out)?;
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Lint the whole tree rooted at the repo root.
+pub fn run(root: &Path) -> Result<LintReport> {
+    let src_root = root.join("rust").join("src");
+    let manifest_path = src_root.join("analysis").join("hot_paths.toml");
+    let manifest_txt = fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {}", manifest_path.display()))?;
+    let manifest = rules::parse_manifest(&manifest_txt);
+
+    let mut files: Vec<PathBuf> = Vec::new();
+    rs_files(&src_root, &mut files)?;
+
+    let mut violations: Vec<Violation> = Vec::new();
+    let mut pragmas = 0usize;
+    for p in &files {
+        let rel = p
+            .strip_prefix(&src_root)
+            .unwrap_or(p.as_path())
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src =
+            fs::read_to_string(p).with_context(|| format!("reading {}", p.display()))?;
+        let rep = rules::lint_file(&rel, &src, &manifest);
+        pragmas += rep.pragma_count;
+        violations.extend(rep.violations);
+    }
+    violations.extend(docs::check_all(root, &manifest)?);
+    Ok(LintReport {
+        violations,
+        pragmas,
+        files_scanned: files.len(),
+    })
+}
+
+/// The checked-in pragma budget, if present.
+pub fn pragma_budget(root: &Path) -> Option<usize> {
+    let p = root
+        .join("rust")
+        .join("src")
+        .join("analysis")
+        .join("pragma_budget");
+    fs::read_to_string(p).ok()?.trim().parse().ok()
+}

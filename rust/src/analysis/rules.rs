@@ -1,0 +1,599 @@
+//! bns-lint rule scanners. All scanning runs over the scrubbed source
+//! produced by [`super::lexer::lex`], so string/comment contents can
+//! never trip a rule. The scanners are deliberately token-ish byte
+//! scans, not a parser: each rule looks for a small, syntactically
+//! unambiguous shape (a method call, a macro invocation, a `A::b` path)
+//! with identifier word boundaries on both sides.
+//!
+//! Rule families (DESIGN.md §10 is the user-facing catalog):
+//! * `panic_free`      — no `.unwrap()` / `.expect()` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` in non-test code under
+//!   `coordinator/`, `runtime/`, `distill/`.
+//! * `hot_path_alloc`  — no allocating constructs inside functions
+//!   listed in `analysis/hot_paths.toml`.
+//! * `bounded_channel` — bare `mpsc::channel()` is banned outside tests
+//!   (bounded `sync_channel` only).
+//! * `lock_across_call`— a `.lock()` result must not be used in the same
+//!   statement as a Backend/Field call (guard held across device RPC).
+//! * `pragma`          — a malformed or unjustified suppression comment
+//!   is itself a violation, and never suppresses anything.
+//!
+//! Suppression: an accepted pragma comment covers its own line and the
+//! next line. The syntax is the `bns-lint` marker, a colon, the word
+//! `allow` with a parenthesized comma-separated rule list, then a
+//! justification of at least 8 characters (see DESIGN.md §10; writing
+//! the literal form here would register as a pragma in this very file).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::lexer::{is_ident, lex};
+
+pub const RULE_PANIC: &str = "panic_free";
+pub const RULE_ALLOC: &str = "hot_path_alloc";
+pub const RULE_CHANNEL: &str = "bounded_channel";
+pub const RULE_LOCK: &str = "lock_across_call";
+pub const RULE_DOCS: &str = "docs_drift";
+pub const RULE_PRAGMA: &str = "pragma";
+
+/// Every rule name, in report order.
+pub const RULES: [&str; 6] = [
+    RULE_PANIC,
+    RULE_ALLOC,
+    RULE_CHANNEL,
+    RULE_LOCK,
+    RULE_DOCS,
+    RULE_PRAGMA,
+];
+
+/// Backend/Field entry points a lock guard must not straddle.
+const FIELD_CALLS: [&str; 8] = [
+    "eval",
+    "eval_into",
+    "eval_labeled_into",
+    "jvp",
+    "jvp_batch_into",
+    "exec_into",
+    "run_into",
+    "sample_into",
+];
+
+/// Directories the panic-freedom rule applies to (the serving plane).
+const PANIC_FREE_DIRS: [&str; 3] = ["coordinator/", "runtime/", "distill/"];
+
+/// One finding.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Path relative to `rust/src` (or a repo-level doc path for drift).
+    pub file: String,
+    /// 1-based line, 0 for whole-file findings.
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+/// One `[[hot]]` entry from `analysis/hot_paths.toml`.
+#[derive(Debug, Clone, Default)]
+pub struct HotEntry {
+    /// Function name; every `fn <name>` body in scope is checked.
+    pub func: String,
+    /// Optional path suffix under `rust/src` restricting the entry.
+    pub file: String,
+    /// Bench source (under `rust/benches`, no extension) that measures it.
+    pub bench: String,
+    /// Substring that must appear in the bench source (the marker).
+    pub check: String,
+}
+
+/// Parse the minimal TOML subset the manifest uses: `[[hot]]` tables
+/// with `key = "value"` pairs and `#` comments.
+pub fn parse_manifest(text: &str) -> Vec<HotEntry> {
+    let mut entries: Vec<HotEntry> = Vec::new();
+    for raw in text.lines() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line == "[[hot]]" {
+            entries.push(HotEntry::default());
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            continue;
+        };
+        let Some(cur) = entries.last_mut() else {
+            continue;
+        };
+        let val = v.trim().trim_matches('"').to_string();
+        match k.trim() {
+            "fn" => cur.func = val,
+            "file" => cur.file = val,
+            "bench" => cur.bench = val,
+            "check" => cur.check = val,
+            _ => {}
+        }
+    }
+    entries.retain(|e| !e.func.is_empty());
+    entries
+}
+
+/// Result of linting one source file.
+pub struct FileReport {
+    pub violations: Vec<Violation>,
+    /// Accepted (well-formed, justified) pragma comments in this file.
+    pub pragma_count: usize,
+}
+
+/// Lint one file given its path relative to `rust/src`.
+pub fn lint_file(rel: &str, src: &str, manifest: &[HotEntry]) -> FileReport {
+    let lexed = lex(src);
+    let scrub = lexed.scrub.as_bytes();
+    let regions = test_regions(&lexed.scrub);
+    let (allow, pragma_bad, pragma_count) = collect_pragmas(&lexed.comments);
+
+    let mut raw: Vec<(usize, &'static str, String)> = Vec::new();
+    if PANIC_FREE_DIRS.iter().any(|d| rel.starts_with(d)) {
+        rule_panic(scrub, &mut raw);
+    }
+    rule_channel(scrub, &mut raw);
+    rule_lock(scrub, &mut raw);
+    rule_alloc(scrub, rel, manifest, &mut raw);
+
+    let mut violations: Vec<Violation> = Vec::new();
+    for (idx, rule, msg) in raw {
+        if in_regions(idx, &regions) {
+            continue;
+        }
+        let line = line_of(scrub, idx);
+        if allow.get(&line).map_or(false, |s| s.contains(rule)) {
+            continue;
+        }
+        violations.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule,
+            msg,
+        });
+    }
+    for (line, msg) in pragma_bad {
+        violations.push(Violation {
+            file: rel.to_string(),
+            line,
+            rule: RULE_PRAGMA,
+            msg,
+        });
+    }
+    violations.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    FileReport {
+        violations,
+        pragma_count,
+    }
+}
+
+// ---------------------------------------------------------------- rules
+
+fn rule_panic(b: &[u8], out: &mut Vec<(usize, &'static str, String)>) {
+    for name in ["unwrap", "expect"] {
+        for p in method_positions(b, name) {
+            out.push((
+                p,
+                RULE_PANIC,
+                format!(".{name}() in server-path code (return a structured error instead)"),
+            ));
+        }
+    }
+    for name in ["panic", "unreachable", "todo", "unimplemented"] {
+        for p in macro_positions(b, name) {
+            out.push((
+                p,
+                RULE_PANIC,
+                format!("{name}! in server-path code (return a structured error instead)"),
+            ));
+        }
+    }
+}
+
+fn rule_channel(b: &[u8], out: &mut Vec<(usize, &'static str, String)>) {
+    for p in path2_positions(b, "mpsc", "channel") {
+        out.push((
+            p,
+            RULE_CHANNEL,
+            "unbounded mpsc::channel() (use bounded sync_channel with a capacity rationale)"
+                .to_string(),
+        ));
+    }
+}
+
+fn rule_lock(b: &[u8], out: &mut Vec<(usize, &'static str, String)>) {
+    let mut start = 0usize;
+    for m in 0..=b.len() {
+        let boundary = m == b.len() || b[m] == b';' || b[m] == b'{' || b[m] == b'}';
+        if !boundary {
+            continue;
+        }
+        let seg = &b[start..m];
+        let locks = method_positions(seg, "lock");
+        if let Some(&lock_pos) = locks.first() {
+            for f in FIELD_CALLS {
+                if !method_positions(seg, f).is_empty() {
+                    out.push((
+                        start + lock_pos,
+                        RULE_LOCK,
+                        format!("lock guard held across .{f}() in one statement"),
+                    ));
+                    break;
+                }
+            }
+        }
+        start = m + 1;
+    }
+}
+
+fn rule_alloc(
+    b: &[u8],
+    rel: &str,
+    manifest: &[HotEntry],
+    out: &mut Vec<(usize, &'static str, String)>,
+) {
+    for entry in manifest {
+        if !entry.file.is_empty() && !rel.ends_with(&entry.file) {
+            continue;
+        }
+        for (open, close) in fn_bodies(b, &entry.func) {
+            let body = &b[open..close];
+            for (p, label) in banned_allocs(body) {
+                out.push((
+                    open + p,
+                    RULE_ALLOC,
+                    format!("{label} in hot function `{}`", entry.func),
+                ));
+            }
+        }
+    }
+}
+
+/// Positions (relative to `seg`) and labels of banned allocating
+/// constructs, in source order.
+pub fn banned_allocs(seg: &[u8]) -> Vec<(usize, &'static str)> {
+    let mut v: Vec<(usize, &'static str)> = Vec::new();
+    for p in path2_positions(seg, "Vec", "new") {
+        v.push((p, "Vec::new"));
+    }
+    for p in macro_positions(seg, "vec") {
+        v.push((p, "vec![]"));
+    }
+    for p in method_positions(seg, "to_vec") {
+        v.push((p, ".to_vec()"));
+    }
+    for p in method_positions(seg, "clone") {
+        v.push((p, ".clone()"));
+    }
+    for p in path_head_positions(seg, "String") {
+        v.push((p, "String::"));
+    }
+    for p in macro_positions(seg, "format") {
+        v.push((p, "format!"));
+    }
+    for p in path2_positions(seg, "Box", "new") {
+        v.push((p, "Box::new"));
+    }
+    for p in method_positions(seg, "collect") {
+        v.push((p, ".collect()"));
+    }
+    v.sort_unstable();
+    v
+}
+
+// ------------------------------------------------- test-region skipping
+
+/// Byte spans of `#[test]` / `#[cfg(test)]`-style items (attr start to
+/// the item's closing brace). Code inside them is exempt from rules.
+pub fn test_regions(scrub: &str) -> Vec<(usize, usize)> {
+    let b = scrub.as_bytes();
+    let mut regions: Vec<(usize, usize)> = Vec::new();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] != b'#' {
+            i += 1;
+            continue;
+        }
+        let j = skip_ws(b, i + 1);
+        if j >= b.len() || b[j] != b'[' {
+            i += 1;
+            continue;
+        }
+        let Some(close) = matching(b, j, b'[', b']') else {
+            break;
+        };
+        if attr_is_test(scrub[j + 1..close].trim()) {
+            // Hop over any further stacked attributes.
+            let mut k = close + 1;
+            loop {
+                k = skip_ws(b, k);
+                if k < b.len() && b[k] == b'#' {
+                    let a2 = skip_ws(b, k + 1);
+                    if a2 < b.len() && b[a2] == b'[' {
+                        if let Some(c2) = matching(b, a2, b'[', b']') {
+                            k = c2 + 1;
+                            continue;
+                        }
+                    }
+                }
+                break;
+            }
+            // The item body is the first `{`; a `;` first means the attr
+            // sat on a brace-less item (e.g. `use`), which has no body.
+            let mut m = k;
+            let mut open: Option<usize> = None;
+            while m < b.len() {
+                match b[m] {
+                    b'{' => {
+                        open = Some(m);
+                        break;
+                    }
+                    b';' => break,
+                    _ => m += 1,
+                }
+            }
+            if let Some(o) = open {
+                let end = matching(b, o, b'{', b'}').unwrap_or(b.len().saturating_sub(1));
+                regions.push((i, end));
+            }
+        }
+        i = close + 1;
+    }
+    regions
+}
+
+/// Does an attribute body mark test-only code? `test` itself, or a
+/// `cfg(...)` whose arguments mention the word `test` outside `not(...)`.
+fn attr_is_test(attr: &str) -> bool {
+    if attr == "test" {
+        return true;
+    }
+    let b = attr.as_bytes();
+    let mut k = 0usize;
+    while k < b.len() && is_ident(b[k]) {
+        k += 1;
+    }
+    if &attr[..k] != "cfg" {
+        return false;
+    }
+    for p in word_positions(b, "test") {
+        let mut q = p;
+        while q > 0 && b[q - 1].is_ascii_whitespace() {
+            q -= 1;
+        }
+        if q >= 4 && &b[q - 4..q] == b"not(" {
+            continue;
+        }
+        return true;
+    }
+    false
+}
+
+pub fn in_regions(idx: usize, regions: &[(usize, usize)]) -> bool {
+    regions.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+// ----------------------------------------------------------- suppression
+
+/// Parse suppression comments. Returns (line -> allowed rules) covering
+/// the pragma's own line and the next, the malformed-pragma findings,
+/// and the count of accepted pragmas (the budget unit).
+pub fn collect_pragmas(
+    comments: &[(usize, String)],
+) -> (BTreeMap<usize, BTreeSet<String>>, Vec<(usize, String)>, usize) {
+    let mut allow: BTreeMap<usize, BTreeSet<String>> = BTreeMap::new();
+    let mut bad: Vec<(usize, String)> = Vec::new();
+    let mut count = 0usize;
+    let marker = concat!("bns-lint", ":");
+    for (ln, text) in comments {
+        let Some(pos) = text.find(marker) else {
+            continue;
+        };
+        let rest = text[pos + marker.len()..].trim_start();
+        let args = match rest.strip_prefix("allow").map(str::trim_start) {
+            Some(a) => a,
+            None => {
+                bad.push((*ln, malformed_msg()));
+                continue;
+            }
+        };
+        let Some(args) = args.strip_prefix('(') else {
+            bad.push((*ln, malformed_msg()));
+            continue;
+        };
+        let Some(close) = args.find(')') else {
+            bad.push((*ln, malformed_msg()));
+            continue;
+        };
+        let mut rules: Vec<&str> = Vec::new();
+        let mut ok = true;
+        for r in args[..close].split(',') {
+            let r = r.trim();
+            if r.is_empty() {
+                continue;
+            }
+            match RULES.iter().copied().find(|known| *known == r) {
+                Some(known) => rules.push(known),
+                None => {
+                    bad.push((*ln, format!("pragma names unknown rule `{r}`")));
+                    ok = false;
+                }
+            }
+        }
+        if rules.is_empty() {
+            // An unknown-rule finding above already covers this pragma.
+            if ok {
+                bad.push((*ln, malformed_msg()));
+            }
+            continue;
+        }
+        let just = args[close + 1..]
+            .trim_start_matches(|c: char| {
+                c.is_whitespace() || c == '-' || c == '\u{2014}' || c == '\u{2013}' || c == ':'
+            })
+            .trim();
+        if just.chars().count() < 8 {
+            bad.push((
+                *ln,
+                "pragma lacks a justification (>= 8 chars after the rule list)".to_string(),
+            ));
+            ok = false;
+        }
+        if !ok {
+            continue;
+        }
+        count += 1;
+        for r in rules {
+            allow.entry(*ln).or_default().insert(r.to_string());
+            allow.entry(*ln + 1).or_default().insert(r.to_string());
+        }
+    }
+    (allow, bad, count)
+}
+
+fn malformed_msg() -> String {
+    format!(
+        "malformed bns-lint pragma (expected `{}{} allow(<rule>) — <justification>`)",
+        "bns-lint", ":"
+    )
+}
+
+// ------------------------------------------------------------- scanning
+
+fn skip_ws(b: &[u8], mut i: usize) -> usize {
+    while i < b.len() && b[i].is_ascii_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Byte offset -> 1-based line number.
+pub fn line_of(b: &[u8], idx: usize) -> usize {
+    let end = idx.min(b.len());
+    1 + b[..end].iter().filter(|&&c| c == b'\n').count()
+}
+
+/// Whole-word occurrences of `word` (identifier boundaries both sides).
+pub fn word_positions(b: &[u8], word: &str) -> Vec<usize> {
+    let w = word.as_bytes();
+    let mut v: Vec<usize> = Vec::new();
+    if w.is_empty() || b.len() < w.len() {
+        return v;
+    }
+    for i in 0..=b.len() - w.len() {
+        if &b[i..i + w.len()] == w
+            && (i == 0 || !is_ident(b[i - 1]))
+            && (i + w.len() == b.len() || !is_ident(b[i + w.len()]))
+        {
+            v.push(i);
+        }
+    }
+    v
+}
+
+/// `.name(` method-call positions (position of `name`).
+pub fn method_positions(b: &[u8], name: &str) -> Vec<usize> {
+    word_positions(b, name)
+        .into_iter()
+        .filter(|&p| {
+            let mut k = p;
+            while k > 0 && b[k - 1].is_ascii_whitespace() {
+                k -= 1;
+            }
+            if k == 0 || b[k - 1] != b'.' {
+                return false;
+            }
+            let j = skip_ws(b, p + name.len());
+            j < b.len() && b[j] == b'('
+        })
+        .collect()
+}
+
+/// `name!` macro-invocation positions.
+pub fn macro_positions(b: &[u8], name: &str) -> Vec<usize> {
+    word_positions(b, name)
+        .into_iter()
+        .filter(|&p| {
+            let j = skip_ws(b, p + name.len());
+            j < b.len() && b[j] == b'!'
+        })
+        .collect()
+}
+
+/// `head :: tail` path positions (position of `head`).
+pub fn path2_positions(b: &[u8], head: &str, tail: &str) -> Vec<usize> {
+    let t = tail.as_bytes();
+    word_positions(b, head)
+        .into_iter()
+        .filter(|&p| {
+            let j = skip_ws(b, p + head.len());
+            if j + 1 >= b.len() || b[j] != b':' || b[j + 1] != b':' {
+                return false;
+            }
+            let k = skip_ws(b, j + 2);
+            k + t.len() <= b.len()
+                && &b[k..k + t.len()] == t
+                && (k + t.len() == b.len() || !is_ident(b[k + t.len()]))
+        })
+        .collect()
+}
+
+/// `head ::` path positions with any tail (e.g. any `String::…`).
+pub fn path_head_positions(b: &[u8], head: &str) -> Vec<usize> {
+    word_positions(b, head)
+        .into_iter()
+        .filter(|&p| {
+            let j = skip_ws(b, p + head.len());
+            j + 1 < b.len() && b[j] == b':' && b[j + 1] == b':'
+        })
+        .collect()
+}
+
+/// Body spans (`{` offset to matching `}`) of every `fn name` with a body.
+pub fn fn_bodies(b: &[u8], name: &str) -> Vec<(usize, usize)> {
+    let mut spans: Vec<(usize, usize)> = Vec::new();
+    for p in word_positions(b, name) {
+        let mut q = p;
+        while q > 0 && b[q - 1].is_ascii_whitespace() {
+            q -= 1;
+        }
+        let preceded_by_fn =
+            q >= 2 && &b[q - 2..q] == b"fn" && (q == 2 || !is_ident(b[q - 3]));
+        if !preceded_by_fn {
+            continue;
+        }
+        let mut m = p + name.len();
+        let mut open: Option<usize> = None;
+        while m < b.len() {
+            match b[m] {
+                b'{' => {
+                    open = Some(m);
+                    break;
+                }
+                b';' => break,
+                _ => m += 1,
+            }
+        }
+        if let Some(o) = open {
+            if let Some(e) = matching(b, o, b'{', b'}') {
+                spans.push((o, e));
+            }
+        }
+    }
+    spans
+}
+
+/// Offset of the delimiter matching the one at `open`.
+fn matching(b: &[u8], open: usize, oc: u8, cc: u8) -> Option<usize> {
+    let mut depth = 0usize;
+    for (k, &c) in b.iter().enumerate().skip(open) {
+        if c == oc {
+            depth += 1;
+        } else if c == cc {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                return Some(k);
+            }
+        }
+    }
+    None
+}

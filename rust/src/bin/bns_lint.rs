@@ -1,0 +1,163 @@
+//! bns-lint CLI: gate the repo's static invariant catalog (DESIGN.md §10).
+//!
+//! Usage:
+//!   bns_lint [--root <repo-root>] [--max-pragmas <n>] [--json]
+//!
+//! Exit status: 0 when the tree is clean (and, if a budget applies, the
+//! pragma count is within it); 1 on any violation; 2 on usage/IO errors.
+//!
+//! Without `--root`, the repo root is found by walking up from
+//! `CARGO_MANIFEST_DIR` (when run via `cargo run`) or from the current
+//! directory. `--max-pragmas` overrides the checked-in
+//! `rust/src/analysis/pragma_budget`; ci.sh passes it under STRICT=1 so
+//! the allowlist can only shrink PR-over-PR.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use bns_serve::analysis;
+
+struct Opts {
+    root: Option<PathBuf>,
+    max_pragmas: Option<usize>,
+    json: bool,
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: None,
+        max_pragmas: None,
+        json: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => {
+                let v = args.next().ok_or("--root needs a path")?;
+                opts.root = Some(PathBuf::from(v));
+            }
+            "--max-pragmas" => {
+                let v = args.next().ok_or("--max-pragmas needs a count")?;
+                let n: usize = v
+                    .parse()
+                    .map_err(|_| format!("--max-pragmas: not a count: {v}"))?;
+                opts.max_pragmas = Some(n);
+            }
+            "--json" => opts.json = true,
+            other => return Err(format!("unknown flag: {other}")),
+        }
+    }
+    Ok(opts)
+}
+
+fn main() -> ExitCode {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("bns-lint: {e}");
+            eprintln!("usage: bns_lint [--root <repo-root>] [--max-pragmas <n>] [--json]");
+            return ExitCode::from(2);
+        }
+    };
+    let root = opts.root.or_else(|| {
+        let start = std::env::var_os("CARGO_MANIFEST_DIR")
+            .map(PathBuf::from)
+            .or_else(|| std::env::current_dir().ok())?;
+        analysis::find_root(&start)
+    });
+    let Some(root) = root else {
+        eprintln!("bns-lint: could not locate the repo root (try --root)");
+        return ExitCode::from(2);
+    };
+    let report = match analysis::run(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("bns-lint: {e:#}");
+            return ExitCode::from(2);
+        }
+    };
+    let budget = opts.max_pragmas.or_else(|| analysis::pragma_budget(&root));
+    let over_budget = budget.map_or(false, |b| report.pragmas > b);
+
+    if opts.json {
+        print_json(&report, budget);
+    } else {
+        print_text(&report, budget, over_budget);
+    }
+    if report.violations.is_empty() && !over_budget {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn print_text(report: &analysis::LintReport, budget: Option<usize>, over_budget: bool) {
+    for v in &report.violations {
+        if v.line > 0 {
+            println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg);
+        } else {
+            println!("{}: [{}] {}", v.file, v.rule, v.msg);
+        }
+    }
+    let summary: Vec<String> = report
+        .counts()
+        .iter()
+        .map(|(r, n)| format!("{r}={n}"))
+        .collect();
+    println!(
+        "bns-lint: {} file(s), {} violation(s) [{}], {} pragma(s){}",
+        report.files_scanned,
+        report.violations.len(),
+        summary.join(" "),
+        report.pragmas,
+        match budget {
+            Some(b) => format!(" (budget {b})"),
+            None => String::new(),
+        }
+    );
+    if over_budget {
+        println!(
+            "bns-lint: pragma budget exceeded: {} > {} (shrink the allowlist or justify raising rust/src/analysis/pragma_budget)",
+            report.pragmas,
+            budget.unwrap_or(0)
+        );
+    }
+}
+
+fn print_json(report: &analysis::LintReport, budget: Option<usize>) {
+    // Tiny hand-rolled emitter; the violation fields are all simple.
+    let mut out = String::from("{\"violations\":[");
+    for (i, v) in report.violations.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&format!(
+            "{{\"file\":\"{}\",\"line\":{},\"rule\":\"{}\",\"msg\":\"{}\"}}",
+            escape(&v.file),
+            v.line,
+            v.rule,
+            escape(&v.msg)
+        ));
+    }
+    out.push_str(&format!(
+        "],\"pragmas\":{},\"files_scanned\":{},\"budget\":{}}}",
+        report.pragmas,
+        report.files_scanned,
+        match budget {
+            Some(b) => b.to_string(),
+            None => "null".to_string(),
+        }
+    ));
+    println!("{out}");
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
+}

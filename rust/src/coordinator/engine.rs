@@ -41,11 +41,14 @@ use super::request::{
     SolverSpec,
 };
 use super::router::{RoutedSolver, RouterCache};
+use anyhow::Context;
+
 use crate::runtime::{ArtifactStore, LoadedModel, Runtime};
 use crate::solver::field::{CountingField, Field};
 use crate::solver::rk45::{rk45_into, Rk45Opts};
 use crate::solver::SampleWorkspace;
 use crate::util::rng::Pcg32;
+use crate::util::sync::{lock_ok, wait_ok};
 
 /// Engine sizing and policy knobs.
 pub struct EngineConfig {
@@ -80,7 +83,7 @@ struct WorkQueue {
 
 impl WorkQueue {
     fn push(&self, batch: Batch) {
-        let mut q = self.q.lock().unwrap();
+        let mut q = lock_ok(&self.q);
         q[batch.priority.rank()].push_back(batch);
         self.cv.notify_one();
     }
@@ -113,7 +116,15 @@ impl Engine {
     /// the given artifact store and device runtime. The engine is ready
     /// for [`Engine::try_submit`] as soon as this returns; compilation
     /// of model executables happens lazily on first use per worker.
-    pub fn start(store: Arc<ArtifactStore>, rt: Arc<Runtime>, cfg: EngineConfig) -> Engine {
+    ///
+    /// Errors if the OS refuses to spawn a thread; on that path the
+    /// request channel is dropped, so any already-spawned threads drain
+    /// and exit on their own.
+    pub fn start(
+        store: Arc<ArtifactStore>,
+        rt: Arc<Runtime>,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
         let metrics = Arc::new(Metrics::new());
         {
             // lane utilization on the /metrics surface; a Weak keeps a
@@ -124,6 +135,7 @@ impl Engine {
                 rt.upgrade().map(|rt| rt.lane_stats()).unwrap_or_default()
             }));
         }
+        // bns-lint: allow(bounded_channel) — bounded upstream by the admission budget: try_submit charges max_inflight_rows before sending, so the queue can never exceed it
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
             q: Mutex::new([VecDeque::new(), VecDeque::new(), VecDeque::new()]),
@@ -205,7 +217,7 @@ impl Engine {
                 wq_d.shutdown.store(true, Ordering::SeqCst);
                 wq_d.cv.notify_all();
             })
-            .expect("spawn dispatch");
+            .context("spawning the engine dispatch thread")?;
 
         // workers
         let mut workers = Vec::new();
@@ -229,7 +241,7 @@ impl Engine {
                         let mut models: HashMap<String, Arc<LoadedModel>> = HashMap::new();
                         loop {
                             let batch = {
-                                let mut q = wq_w.q.lock().unwrap();
+                                let mut q = lock_ok(&wq_w.q);
                                 loop {
                                     if let Some(b) = WorkQueue::pop_from(&mut q) {
                                         break b; // priority order, FIFO per class
@@ -237,7 +249,7 @@ impl Engine {
                                     if wq_w.shutdown.load(Ordering::SeqCst) {
                                         return;
                                     }
-                                    q = wq_w.cv.wait(q).unwrap();
+                                    q = wait_ok(&wq_w.cv, q);
                                 }
                             };
                             metrics_w.queue_depth.fetch_sub(1, Ordering::Relaxed);
@@ -247,11 +259,11 @@ impl Engine {
                             );
                         }
                     })
-                    .expect("spawn worker"),
+                    .with_context(|| format!("spawning engine worker thread {wi}"))?,
             );
         }
 
-        Engine {
+        Ok(Engine {
             tx: Some(tx),
             metrics,
             next_id: AtomicU64::new(1),
@@ -259,7 +271,7 @@ impl Engine {
             dispatch: Some(dispatch),
             workers,
             wq,
-        }
+        })
     }
 
     /// Admission-controlled submit: charges the request's rows against
@@ -315,7 +327,15 @@ impl Engine {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
-        let tx = self.tx.as_ref().expect("engine running");
+        // `tx` is only None once shutdown has begun; answer with the same
+        // structured error a closed channel produces instead of panicking.
+        let tx = match self.tx.as_ref() {
+            Some(tx) => tx,
+            None => {
+                settle_rows(&self.metrics, rows);
+                return Err((req, ServeError::new(ErrCode::Internal, "engine shutting down")));
+            }
+        };
         if let Err(mpsc::SendError(req)) = tx.send(req) {
             settle_rows(&self.metrics, rows);
             return Err((req, ServeError::new(ErrCode::Internal, "engine shutting down")));
@@ -340,7 +360,7 @@ impl Engine {
     ///     k: -0.5, c: 0.1, label_scale: 0.0, cost: 1, buckets: &[4],
     /// }]).unwrap();
     /// let engine = Engine::start(store, Arc::new(Runtime::cpu().unwrap()),
-    ///                            EngineConfig::default());
+    ///                            EngineConfig::default()).unwrap();
     /// let (reply, rx) = mpsc::channel();
     /// let id = engine.submit(SampleRequest {
     ///     id: 0,
@@ -385,7 +405,7 @@ impl Engine {
     ///     k: -0.5, c: 0.1, label_scale: 0.0, cost: 1, buckets: &[4],
     /// }]).unwrap();
     /// let engine = Engine::start(store, Arc::new(Runtime::cpu().unwrap()),
-    ///                            EngineConfig::default());
+    ///                            EngineConfig::default()).unwrap();
     /// let out = engine
     ///     .sample_blocking("m", vec![0, 1], 0.0, SolverSpec::Auto { nfe: 4 }, 7)
     ///     .unwrap();
@@ -402,6 +422,7 @@ impl Engine {
         solver: SolverSpec,
         seed: u64,
     ) -> Result<SampleOutput> {
+        // bns-lint: allow(bounded_channel) — one-shot reply pair: exactly one SampleResponse is ever sent per request, so this queue holds at most one message
         let (reply, rx) = mpsc::channel();
         self.submit(SampleRequest {
             id: 0,
@@ -464,7 +485,7 @@ struct NotifyField<'a> {
 impl<'a> NotifyField<'a> {
     fn ping(&self) {
         let evals = self.inner.count();
-        let subs = self.subs.lock().unwrap();
+        let subs = lock_ok(&self.subs);
         for (id, tx) in subs.iter() {
             // receiver gone (client hung up) -> drop silently
             let _ = tx.send(Progress { id: *id, evals, nfe: self.nfe_planned });

@@ -12,6 +12,7 @@ use std::sync::Mutex;
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
+use crate::util::sync::lock_ok;
 
 /// Provider of per-lane `(execs, busy_us)` counters, registered by the
 /// engine so lane utilization shows up on the `/metrics` surface without
@@ -105,12 +106,12 @@ impl Metrics {
     /// Register the source of per-lane device counters (the engine wires
     /// this to `Runtime::lane_stats`).
     pub fn set_lane_provider(&self, f: LaneStatsProvider) {
-        *self.lane_provider.lock().unwrap() = Some(f);
+        *lock_ok(&self.lane_provider) = Some(f);
     }
 
     /// Record one request's queue/exec latencies and the solver it used.
     pub fn record_latency(&self, queue_us: u64, exec_us: u64, solver: &str) {
-        let mut g = self.inner.lock().unwrap();
+        let mut g = lock_ok(&self.inner);
         g.queue_wait.record_us(queue_us as f64);
         g.exec.record_us(exec_us as f64);
         g.e2e.record_us((queue_us + exec_us) as f64);
@@ -122,7 +123,7 @@ impl Metrics {
     /// has completed). Attached to `overloaded` errors as
     /// `retry_after_ms`.
     pub fn suggest_retry_ms(&self) -> u64 {
-        let p50_us = self.inner.lock().unwrap().exec.quantile_us(0.5);
+        let p50_us = lock_ok(&self.inner).exec.quantile_us(0.5);
         if p50_us <= 0.0 {
             50
         } else {
@@ -144,14 +145,11 @@ impl Metrics {
     /// per-solver tally, and per-lane device counter. Field semantics
     /// are documented in README.md §Operator runbook.
     pub fn snapshot_json(&self) -> Json {
-        let lanes: Vec<(u64, u64)> = self
-            .lane_provider
-            .lock()
-            .unwrap()
+        let lanes: Vec<(u64, u64)> = lock_ok(&self.lane_provider)
             .as_ref()
             .map(|f| f())
             .unwrap_or_default();
-        let g = self.inner.lock().unwrap();
+        let g = lock_ok(&self.inner);
         let q = |h: &LatencyHistogram| {
             Json::obj(vec![
                 ("mean_us", Json::Num(h.mean_us())),

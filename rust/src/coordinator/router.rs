@@ -22,6 +22,7 @@ use crate::coordinator::request::SolverSpec;
 use crate::runtime::ArtifactStore;
 use crate::solver::scheduler::Scheduler;
 use crate::solver::{baseline, NsSolver, Solver};
+use crate::util::sync::lock_ok;
 
 /// The routed outcome: a concrete solver plus its reporting name.
 pub struct Routed {
@@ -121,9 +122,13 @@ pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usi
     // two can never drift. The generic steppers ignore the scheduler,
     // and `auto_baseline_name` guarantees the divisibility their
     // constructors assert.
-    let s = baseline(auto_baseline_name(nfe), nfe, Scheduler::FmOt)
-        .expect("generic auto baselines always construct");
-    format!("auto-{}", s.name())
+    match baseline(auto_baseline_name(nfe), nfe, Scheduler::FmOt) {
+        Ok(s) => format!("auto-{}", s.name()),
+        // unreachable in practice (the generic steppers accept any
+        // divisible NFE, which auto_baseline_name guarantees); still,
+        // introspection must not panic the serving plane
+        Err(_) => format!("auto-{}", auto_baseline_name(nfe)),
+    }
 }
 
 /// Memoized routing: one resolution (and one dense-`b` clone) per
@@ -166,12 +171,12 @@ impl RouterCache {
         spec: &SolverSpec,
     ) -> Result<Arc<Routed>> {
         debug_assert_eq!(spec.group_key(), key.solver_key, "spec/key mismatch");
-        if let Some(r) = self.map.lock().unwrap().get(key) {
+        if let Some(r) = lock_ok(&self.map).get(key) {
             return Ok(r.clone());
         }
         let guidance = f32::from_bits(key.guidance_bits) as f64;
         let routed = Arc::new(route(store, &key.model, guidance, sched, spec)?);
-        let mut map = self.map.lock().unwrap();
+        let mut map = lock_ok(&self.map);
         if map.len() < MAX_ENTRIES {
             map.entry(key.clone()).or_insert_with(|| routed.clone());
         }
@@ -180,7 +185,7 @@ impl RouterCache {
 
     /// Number of memoized routes.
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().len()
+        lock_ok(&self.map).len()
     }
 
     /// True when nothing has been resolved yet.

@@ -129,26 +129,27 @@ impl Server {
         let mut conn_txs = Vec::with_capacity(n_reactors);
         let mut threads = Vec::with_capacity(n_reactors + 1);
         for ri in 0..n_reactors {
-            let (tx, rx) = mpsc::channel::<TcpStream>();
+            // Bounded handoff: 256 not-yet-adopted sockets per reactor is
+            // far beyond any accept burst a reactor can't absorb in one
+            // tick; if a reactor ever wedges, the accept thread blocks
+            // here instead of queueing sockets without bound.
+            let (tx, rx) = mpsc::sync_channel::<TcpStream>(256);
             conn_txs.push(tx);
             let engine = engine.clone();
             let store = store.clone();
-            let stop = stop.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name(format!("bns-reactor-{ri}"))
-                    .spawn(move || reactor_loop(rx, engine, store, stop, cfg))
-                    .expect("spawn reactor"),
-            );
+            let stop_r = stop.clone();
+            spawn_server_thread(
+                &mut threads,
+                &stop,
+                format!("bns-reactor-{ri}"),
+                move || reactor_loop(rx, engine, store, stop_r, cfg),
+            )?;
         }
         {
-            let stop = stop.clone();
-            threads.push(
-                std::thread::Builder::new()
-                    .name("bns-accept".into())
-                    .spawn(move || accept_loop(listener, conn_txs, stop))
-                    .expect("spawn accept"),
-            );
+            let stop_a = stop.clone();
+            spawn_server_thread(&mut threads, &stop, "bns-accept".into(), move || {
+                accept_loop(listener, conn_txs, stop_a)
+            })?;
         }
         Ok(Server { addr: local, stop, threads })
     }
@@ -175,6 +176,30 @@ impl Server {
 impl Drop for Server {
     fn drop(&mut self) {
         self.shutdown_inner();
+    }
+}
+
+/// Spawn one serving-plane thread, or — if the OS refuses — signal every
+/// already-spawned thread to stop, join them, and return the error as a
+/// structured failure of [`Server::bind`] instead of panicking.
+fn spawn_server_thread(
+    threads: &mut Vec<std::thread::JoinHandle<()>>,
+    stop: &Arc<AtomicBool>,
+    name: String,
+    f: impl FnOnce() + Send + 'static,
+) -> Result<()> {
+    match std::thread::Builder::new().name(name.clone()).spawn(f) {
+        Ok(h) => {
+            threads.push(h);
+            Ok(())
+        }
+        Err(e) => {
+            stop.store(true, Ordering::SeqCst);
+            for t in threads.drain(..) {
+                let _ = t.join();
+            }
+            Err(anyhow::Error::new(e).context(format!("spawning server thread {name}")))
+        }
     }
 }
 
@@ -209,7 +234,7 @@ pub fn serve_with(
 
 fn accept_loop(
     listener: TcpListener,
-    conn_txs: Vec<mpsc::Sender<TcpStream>>,
+    conn_txs: Vec<mpsc::SyncSender<TcpStream>>,
     stop: Arc<AtomicBool>,
 ) {
     let mut next = 0usize;
@@ -268,8 +293,8 @@ struct Conn {
 
 impl Conn {
     fn new(stream: TcpStream) -> Conn {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let (prog_tx, prog_rx) = mpsc::channel();
+        let (reply_tx, reply_rx) = mpsc::channel(); // bns-lint: allow(bounded_channel) — replies are bounded by the engine's in-flight row budget; a bounded sender here could deadlock an engine worker against a stalled reactor
+        let (prog_tx, prog_rx) = mpsc::channel(); // bns-lint: allow(bounded_channel) — progress is drained and coalesced every reactor tick; a bounded sender would let one slow streaming peer stall a whole worker batch
         Conn {
             stream,
             rbuf: Vec::new(),

@@ -432,7 +432,10 @@ fn wavefront(
             match p.kind {
                 ParamKind::A(_) => dx.copy_from_slice(x0),
                 ParamKind::B(_, j) => dx.copy_from_slice(&us[j * len..(j + 1) * len]),
-                ParamKind::Time(_) => unreachable!("time params end at n-1"),
+                // Time params end at n-1 by construction (ParamMap stamps their
+                // last influenced step); a Time param with start == n contributes
+                // nothing here, so leave dx zeroed rather than panicking.
+                ParamKind::Time(_) => {}
             }
         }
         for j in p.start..n {
@@ -532,7 +535,12 @@ impl Default for ChunkSlot<'_> {
 }
 
 fn run_slot(solver: &NsSolver, slot: &mut ChunkSlot<'_>, dim: usize, total: usize, ws: &mut GradWorkspace) {
-    let field = slot.bound.as_ref().expect("slot bound before run");
+    // compute() binds every slot before dispatch; an unbound slot reports
+    // a structured error instead of tearing down the worker thread.
+    let Some(field) = slot.bound.as_ref() else {
+        slot.err = Some(anyhow::anyhow!("gradient chunk slot ran before binding rows"));
+        return;
+    };
     match wavefront(solver, field, &slot.x0, &slot.x1, dim, total, ws) {
         Ok(out) => {
             slot.loss_sum = out.loss_sum;

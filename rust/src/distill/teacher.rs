@@ -25,6 +25,7 @@ use crate::solver::field::Field;
 use crate::solver::rk45::{rk45, Rk45Opts};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
+use crate::util::sync::lock_ok;
 
 /// Rows integrated per RK45 call during teacher generation. Fixed (never
 /// derived from the thread count) so results don't depend on
@@ -327,7 +328,7 @@ impl TeacherSet {
             std::thread::scope(|s| {
                 for _ in 0..workers {
                     s.spawn(|| loop {
-                        let job = jobs.lock().unwrap().pop();
+                        let job = lock_ok(&jobs).pop();
                         let (ci, xc0, xc1) = match job {
                             Some(j) => j,
                             None => break,
@@ -337,14 +338,14 @@ impl TeacherSet {
                                 evals.fetch_add(nfe as u64, Ordering::Relaxed);
                             }
                             Err(e) => {
-                                errors.lock().unwrap().push(e);
+                                lock_ok(&errors).push(e);
                                 break;
                             }
                         }
                     });
                 }
             });
-            if let Some(e) = errors.into_inner().unwrap().pop() {
+            if let Some(e) = errors.into_inner().unwrap_or_else(|e| e.into_inner()).pop() {
                 return Err(e.context("teacher-trajectory generation"));
             }
             gt_evals = evals.into_inner();

@@ -15,6 +15,15 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
 //! reproduced tables/figures.
 
+// Crate-wide lint posture (bns-lint rules are the repo-specific layer on
+// top; see DESIGN.md §10): no unsafe anywhere in this crate, and the
+// debug/stub macros stay out of committed code.
+#![deny(unsafe_code)]
+#![warn(clippy::dbg_macro)]
+#![warn(clippy::todo)]
+#![warn(clippy::unimplemented)]
+
+pub mod analysis;
 pub mod bench_util;
 pub mod coordinator;
 pub mod distill;

@@ -150,7 +150,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                 store.clone(),
                 rt,
                 EngineConfig { workers, max_inflight_rows: max_inflight, ..Default::default() },
-            ));
+            )?);
             let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:7878".into());
             let cfg = bns_serve::coordinator::ServerConfig {
                 reactors,
@@ -163,7 +163,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
         "sample" => {
             let store = load_store(flags)?;
             let rt = Arc::new(Runtime::cpu()?);
-            let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+            let engine = Engine::start(store.clone(), rt, EngineConfig::default())?;
             let model = flags.get("model").context("--model required")?.clone();
             let nfe: usize = flags.get("nfe").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let guidance: f32 =
@@ -199,7 +199,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
         "compare" => {
             let store = load_store(flags)?;
             let rt = Arc::new(Runtime::cpu()?);
-            let engine = Engine::start(store.clone(), rt, EngineConfig::default());
+            let engine = Engine::start(store.clone(), rt, EngineConfig::default())?;
             let model = flags.get("model").context("--model required")?.clone();
             let nfe: usize = flags.get("nfe").map(|s| s.parse()).transpose()?.unwrap_or(8);
             let guidance: f32 =

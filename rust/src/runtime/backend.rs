@@ -163,7 +163,7 @@ impl Backend for StubBackend {
         let e = *self
             .exes
             .get(id as usize - 1)
-            .with_context(|| format!("unknown stub executable id {id}"))?;
+            .with_context(|| format!("unknown stub executable id {id}"))?; // bns-lint: allow(hot_path_alloc) — format! sits in with_context's lazy closure; it runs only on the unknown-id error path, never on a successful exec
         anyhow::ensure!(x.len() == batch * dim, "stub exec: x has wrong shape");
         anyhow::ensure!(labels.len() == batch, "stub exec: labels have wrong shape");
         anyhow::ensure!(out.len() == batch * dim, "stub exec: out has wrong shape");

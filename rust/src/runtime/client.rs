@@ -53,6 +53,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::backend;
+use crate::util::sync::lock_ok;
 
 /// Bounded depth of each lane's request channel. Generous: the channel is
 /// a backpressure valve, not a queueing layer — workers block in
@@ -62,11 +63,11 @@ const LANE_QUEUE_CAP: usize = 256;
 enum Msg {
     Load {
         path: PathBuf,
-        reply: mpsc::Sender<Result<u64>>,
+        reply: mpsc::SyncSender<Result<u64>>,
     },
     Exec(ExecMsg),
     Platform {
-        reply: mpsc::Sender<String>,
+        reply: mpsc::SyncSender<String>,
     },
 }
 
@@ -129,7 +130,8 @@ impl Runtime {
         let mut lanes = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = mpsc::sync_channel::<Msg>(LANE_QUEUE_CAP);
-            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            // capacity 1: the lane sends exactly one init result
+            let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
             let stats = Arc::new(LaneStats::default());
             let stats_t = stats.clone();
             std::thread::Builder::new()
@@ -171,8 +173,9 @@ impl Runtime {
     }
 
     pub fn platform(&self) -> String {
-        let (reply, rx) = mpsc::channel();
-        let _ = self.lanes[0].tx.lock().unwrap().send(Msg::Platform { reply });
+        // capacity 1: the lane sends exactly one platform string
+        let (reply, rx) = mpsc::sync_channel(1);
+        let _ = lock_ok(&self.lanes[0].tx).send(Msg::Platform { reply });
         rx.recv().unwrap_or_else(|_| "unknown".into())
     }
 
@@ -189,13 +192,13 @@ impl Runtime {
         // thread never takes this lock, so no deadlock; concurrent loads
         // on one lane serialize, which a compile does anyway.
         let id = {
-            let mut cache = l.cache.lock().unwrap();
+            let mut cache = lock_ok(&l.cache);
             match cache.get(path).copied() {
                 Some(id) => id,
                 None => {
-                    let (reply, rx) = mpsc::channel();
-                    l.tx.lock()
-                        .unwrap()
+                    // capacity 1: the lane sends exactly one compile result
+                    let (reply, rx) = mpsc::sync_channel(1);
+                    lock_ok(&l.tx)
                         .send(Msg::Load { path: path.to_path_buf(), reply })
                         .map_err(|_| anyhow!("device lane gone"))?;
                     let id = rx.recv().context("device lane gone")??;
@@ -205,7 +208,7 @@ impl Runtime {
             }
         };
         Ok(ExeHandle {
-            tx: Mutex::new(l.tx.lock().unwrap().clone()),
+            tx: Mutex::new(lock_ok(&l.tx).clone()),
             pool: Mutex::new(Vec::new()),
             id,
             lane,
@@ -229,7 +232,7 @@ impl Drop for Runtime {
         // thread exits as soon as the last sender drops.
         for lane in &self.lanes {
             let (dummy, _) = mpsc::sync_channel(1);
-            *lane.tx.lock().unwrap() = dummy;
+            *lock_ok(&lane.tx) = dummy;
         }
     }
 }
@@ -286,7 +289,7 @@ impl ExeHandle {
         debug_assert_eq!(x.len(), self.batch * self.dim);
         debug_assert_eq!(labels.len(), self.batch);
         debug_assert_eq!(out.len(), self.batch * self.dim);
-        let mut slot = self.pool.lock().unwrap().pop().unwrap_or_default();
+        let mut slot = lock_ok(&self.pool).pop().unwrap_or_default();
         slot.x.clear();
         slot.x.extend_from_slice(x);
         slot.labels.clear();
@@ -301,9 +304,9 @@ impl ExeHandle {
             x: std::mem::take(&mut slot.x),
             labels: std::mem::take(&mut slot.labels),
             out: std::mem::take(&mut slot.out),
-            reply: slot.reply_tx.clone(),
+            reply: slot.reply_tx.clone(), // bns-lint: allow(hot_path_alloc) — SyncSender clone is an Arc refcount bump, not a heap allocation; perf_layers' counting allocator pins allocs_per_eval at 0
         });
-        let sent = self.tx.lock().unwrap().send(msg);
+        let sent = lock_ok(&self.tx).send(msg);
         if let Err(mpsc::SendError(msg)) = sent {
             // lane gone: recover the buffers so the slot stays warm
             if let Msg::Exec(m) = msg {
@@ -311,7 +314,7 @@ impl ExeHandle {
                 slot.labels = m.labels;
                 slot.out = m.out;
             }
-            self.pool.lock().unwrap().push(slot);
+            lock_ok(&self.pool).push(slot);
             return Err(anyhow!("device lane gone"));
         }
         // The lane always replies (backend panics are caught and turned
@@ -327,7 +330,7 @@ impl ExeHandle {
         if result.is_ok() {
             out.copy_from_slice(&slot.out);
         }
-        self.pool.lock().unwrap().push(slot);
+        lock_ok(&self.pool).push(slot);
         result
     }
 
@@ -339,7 +342,11 @@ impl ExeHandle {
     }
 }
 
-fn lane_thread(rx: mpsc::Receiver<Msg>, ready: mpsc::Sender<Result<()>>, stats: Arc<LaneStats>) {
+fn lane_thread(
+    rx: mpsc::Receiver<Msg>,
+    ready: mpsc::SyncSender<Result<()>>,
+    stats: Arc<LaneStats>,
+) {
     let mut be = match backend::new_cpu() {
         Ok(b) => {
             let _ = ready.send(Ok(()));

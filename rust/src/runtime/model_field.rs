@@ -24,6 +24,7 @@ use anyhow::{Context, Result};
 use super::artifact::ModelInfo;
 use super::client::{ExeHandle, Runtime};
 use crate::solver::field::Field;
+use crate::util::sync::lock_ok;
 
 /// Reusable staging buffers for the off-bucket path of `eval_into`
 /// (rows that don't line up with a compiled bucket). One per loaded
@@ -96,11 +97,14 @@ impl LoadedModel {
         self.lane
     }
 
-    fn pick(&self, rows: usize) -> &ExeHandle {
+    /// Smallest compiled bucket that fits `rows`, falling back to the
+    /// largest bucket (callers chunk above it). `None` only for a model
+    /// with no compiled buckets, which `load` never constructs.
+    fn pick(&self, rows: usize) -> Option<&ExeHandle> {
         self.executables
             .iter()
             .find(|e| e.batch >= rows)
-            .unwrap_or_else(|| self.executables.last().unwrap())
+            .or_else(|| self.executables.last())
     }
 
     /// Largest compiled bucket (callers chunk above this).
@@ -168,7 +172,9 @@ impl ModelField {
         debug_assert_eq!(out.len(), x.len(), "output buffer must match x");
         let mut r = 0;
         while r < rows {
-            let exe = self.model.pick(rows - r);
+            let Some(exe) = self.model.pick(rows - r) else {
+                anyhow::bail!("model '{}' has no compiled buckets", self.model.info.name);
+            };
             let take = exe.batch.min(rows - r);
             if take == exe.batch {
                 // bucket-aligned: no padding, no staging copy
@@ -181,7 +187,7 @@ impl ModelField {
                 )?;
             } else {
                 // pad up to the bucket through reused scratch
-                let mut s = self.model.scratch.lock().unwrap();
+                let mut s = lock_ok(&self.model.scratch);
                 let s = &mut *s;
                 s.xb.clear();
                 s.xb.resize(exe.batch * dim, 0.0);
@@ -265,7 +271,7 @@ impl Field for ModelField {
             out.len()
         );
         let rows = len / self.model.info.dim;
-        let mut s = self.jvp_scratch.lock().unwrap();
+        let mut s = lock_ok(&self.jvp_scratch);
         let s = &mut *s;
         // per-tangent normalized step (same formula as the trait default);
         // h = 0 marks a zero tangent whose JVP is identically zero

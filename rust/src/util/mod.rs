@@ -7,3 +7,4 @@ pub mod json;
 pub mod linalg;
 pub mod rng;
 pub mod stats;
+pub mod sync;

@@ -1,0 +1,62 @@
+//! Poison-tolerant locking helpers.
+//!
+//! The serving plane must not panic (bns-lint rule `panic_free`, DESIGN.md
+//! §10), and `Mutex::lock().unwrap()` is a panic waiting to happen: a mutex
+//! is poisoned only when another thread panicked while holding it, and
+//! propagating that panic into a reactor or engine worker would take the
+//! whole plane down with it. Every shared structure in this crate guarded
+//! by a mutex (metrics counters, compile caches, scratch buffers, teacher
+//! job queues) is valid after any partial update — counters may be off by
+//! one sample, a cache entry may be absent — so the right recovery is to
+//! take the data anyway and keep serving.
+//!
+//! `lock_ok` / `read_ok` / `write_ok` / `wait_ok` do exactly that: on
+//! poison they strip the `PoisonError` wrapper and hand back the guard.
+
+use std::sync::{Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_ok<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Read-lock an `RwLock`, recovering from poison.
+pub fn read_ok<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Write-lock an `RwLock`, recovering from poison.
+pub fn write_ok<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Block on a condvar, recovering the re-acquired guard from poison.
+pub fn wait_ok<'a, T>(cv: &Condvar, g: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_ok_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock_ok(&m), 7);
+    }
+
+    #[test]
+    fn rwlock_helpers_round_trip() {
+        let l = RwLock::new(1u32);
+        *write_ok(&l) = 2;
+        assert_eq!(*read_ok(&l), 2);
+    }
+}

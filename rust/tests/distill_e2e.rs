@@ -114,7 +114,7 @@ fn train_emit_reload_serve() {
     );
 
     // -- serve with it: explicit routing and BNS-first auto routing
-    let engine = Engine::start(store2.clone(), rt.clone(), EngineConfig::default());
+    let engine = Engine::start(store2.clone(), rt.clone(), EngineConfig::default()).unwrap();
     let out = engine
         .sample_blocking(
             "m",

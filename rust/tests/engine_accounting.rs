@@ -54,7 +54,7 @@ fn stub_store(tag: &str) -> (Arc<ArtifactStore>, PathBuf) {
 
 fn start_engine(store: Arc<ArtifactStore>) -> Engine {
     let rt = Arc::new(Runtime::cpu().unwrap());
-    Engine::start(store, rt, EngineConfig::default())
+    Engine::start(store, rt, EngineConfig::default()).unwrap()
 }
 
 /// Per-request `forwards` must sum exactly to the aggregate

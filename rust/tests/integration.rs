@@ -196,7 +196,7 @@ fn batched_equals_sequential() {
 fn engine_end_to_end() {
     let Some(store) = store() else { return };
     let rt = Arc::new(Runtime::cpu().unwrap());
-    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()).unwrap());
 
     let mut handles = Vec::new();
     for c in 0..4 {
@@ -231,7 +231,7 @@ fn engine_end_to_end() {
 fn engine_rejects_unknown_model() {
     let Some(store) = store() else { return };
     let rt = Arc::new(Runtime::cpu().unwrap());
-    let engine = Engine::start(store, rt, EngineConfig::default());
+    let engine = Engine::start(store, rt, EngineConfig::default()).unwrap();
     let err = engine
         .sample_blocking("nope", vec![0], 0.0, SolverSpec::Auto { nfe: 8 }, 1)
         .unwrap_err();
@@ -245,7 +245,7 @@ fn server_tcp_roundtrip() {
     use std::io::{BufRead, BufReader, Write};
     let Some(store) = store() else { return };
     let rt = Arc::new(Runtime::cpu().unwrap());
-    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()));
+    let engine = Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()).unwrap());
     let addr = "127.0.0.1:17917";
     {
         let engine = engine.clone();

@@ -120,7 +120,7 @@ fn results_bit_identical_across_worker_and_lane_counts() {
     // reference: strictly serial — 1 lane, 1 worker
     let reference = {
         let rt = Arc::new(Runtime::with_lanes(1).unwrap());
-        let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 1, ..Default::default() });
+        let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 1, ..Default::default() }).unwrap();
         let outs = run_plan(&engine);
         engine.shutdown();
         outs
@@ -129,7 +129,7 @@ fn results_bit_identical_across_worker_and_lane_counts() {
     for (lanes, workers) in [(1usize, 4usize), (2, 2), (4, 4)] {
         let rt = Arc::new(Runtime::with_lanes(lanes).unwrap());
         let engine =
-            Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() });
+            Engine::start(store.clone(), rt, EngineConfig { workers, ..Default::default() }).unwrap();
         let outs = run_plan(&engine);
 
         assert_eq!(outs.len(), reference.len());
@@ -160,7 +160,7 @@ fn engine_drop_without_shutdown_joins_threads() {
     for _ in 0..3 {
         let rt = Arc::new(Runtime::with_lanes(2).unwrap());
         let engine =
-            Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() });
+            Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() }).unwrap();
         let out = engine
             .sample_blocking(
                 "m_cfg",
@@ -181,7 +181,7 @@ fn engine_drop_without_shutdown_joins_threads() {
 fn lane_and_queue_metrics_are_exposed() {
     let (store, dir) = store("metrics");
     let rt = Arc::new(Runtime::with_lanes(2).unwrap());
-    let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() });
+    let engine = Engine::start(store.clone(), rt, EngineConfig { workers: 2, ..Default::default() }).unwrap();
     let outs = run_plan(&engine);
     assert!(!outs.is_empty());
 

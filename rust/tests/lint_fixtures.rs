@@ -1,0 +1,286 @@
+//! Fixture tests for bns-lint (DESIGN.md §10): every rule family gets
+//! at least one positive (violation detected) and one negative (clean
+//! code passes) fixture, the pragma grammar is pinned, and a final
+//! integration test runs the full pass over this repo's own tree —
+//! so `cargo test` fails if the tree ever regresses on its invariants.
+//!
+//! This file lives under `rust/tests/`, which bns-lint does not scan,
+//! so fixtures here may freely spell out banned constructs and pragma
+//! markers inside string literals.
+
+use bns_serve::analysis::docs::{
+    check_cli_flags, check_err_codes, check_metrics_fields, cli_flags, err_code_strings,
+    md_section, metrics_fields,
+};
+use bns_serve::analysis::lexer::lex;
+use bns_serve::analysis::rules::{lint_file, parse_manifest, FileReport, HotEntry};
+use bns_serve::analysis::{self, RULES};
+
+const NO_HOT: &[HotEntry] = &[];
+
+fn rules_of(rep: &FileReport) -> Vec<&'static str> {
+    rep.violations.iter().map(|v| v.rule).collect()
+}
+
+// ---------------------------------------------------------- panic_free
+
+#[test]
+fn panic_free_flags_unwrap_and_macros_in_server_dirs() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    let v = x.unwrap();\n    if v > 9 { panic!(\"boom\") }\n    v\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    let rules = rules_of(&rep);
+    assert_eq!(rules, vec!["panic_free", "panic_free"], "{:?}", rep.violations);
+    assert_eq!(rep.violations[0].line, 2);
+    assert_eq!(rep.violations[1].line, 3);
+}
+
+#[test]
+fn panic_free_ignores_non_server_dirs_and_test_regions() {
+    let src = "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    // solver/ math code is outside the serving plane: not covered.
+    assert!(lint_file("solver/x.rs", src, NO_HOT).violations.is_empty());
+
+    let test_src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { None::<u32>.unwrap(); unreachable!() }\n}\n";
+    let rep = lint_file("runtime/x.rs", test_src, NO_HOT);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+}
+
+#[test]
+fn panic_free_ignores_strings_and_comments() {
+    let src = "fn f() {\n    // .unwrap() is banned; panic! too\n    let s = \"x.unwrap(); panic!\";\n    let _ = s;\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+}
+
+#[test]
+fn cfg_not_test_is_not_a_test_region() {
+    let src = "#[cfg(not(test))]\nfn f(x: Option<u32>) -> u32 { x.unwrap() }\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["panic_free"]);
+    // …but cfg(all(test, feature = "x")) is one.
+    let src2 = "#[cfg(all(test, feature = \"slow\"))]\nmod t { fn g() { None::<u32>.unwrap(); } }\n";
+    assert!(lint_file("coordinator/x.rs", src2, NO_HOT).violations.is_empty());
+}
+
+// ------------------------------------------------------------- pragmas
+
+#[test]
+fn justified_pragma_suppresses_and_counts() {
+    let src = "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // bns-lint: allow(panic_free) — checked non-empty by the caller's admission path\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+    assert_eq!(rep.pragma_count, 1);
+}
+
+#[test]
+fn pragma_covers_the_next_line_only() {
+    let src = "fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    // bns-lint: allow(panic_free) — fixture: the line right below is covered\n    let x = a.unwrap();\n    let y = b.unwrap();\n    x + y\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["panic_free"]);
+    assert_eq!(rep.violations[0].line, 4, "{:?}", rep.violations);
+}
+
+#[test]
+fn unjustified_pragma_is_a_violation_and_does_not_suppress() {
+    let src =
+        "fn f(x: Option<u32>) -> u32 {\n    x.unwrap() // bns-lint: allow(panic_free)\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    let mut rules = rules_of(&rep);
+    rules.sort_unstable();
+    assert_eq!(rules, vec!["panic_free", "pragma"], "{:?}", rep.violations);
+    assert_eq!(rep.pragma_count, 0);
+}
+
+#[test]
+fn unknown_rule_pragma_is_a_violation() {
+    let src = "fn f() { // bns-lint: allow(no_such_rule) — long enough justification\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["pragma"]);
+    assert!(rep.violations[0].msg.contains("no_such_rule"));
+    assert_eq!(rep.pragma_count, 0);
+}
+
+#[test]
+fn malformed_pragma_is_a_violation() {
+    let src = "fn f() { // bns-lint: disable everything please\n}\n";
+    let rep = lint_file("coordinator/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["pragma"]);
+}
+
+// ------------------------------------------------------ hot_path_alloc
+
+fn hot(func: &str, file: &str) -> Vec<HotEntry> {
+    vec![HotEntry {
+        func: func.to_string(),
+        file: file.to_string(),
+        bench: String::new(),
+        check: String::new(),
+    }]
+}
+
+#[test]
+fn hot_path_alloc_flags_allocs_only_in_listed_fns() {
+    let src = "fn hot_fn(n: usize) -> usize {\n    let v = format!(\"{n}\");\n    let w = v.clone();\n    w.len()\n}\nfn cold_fn() -> String { format!(\"fine here\") }\n";
+    let rep = lint_file("solver/x.rs", src, &hot("hot_fn", ""));
+    let rules = rules_of(&rep);
+    assert_eq!(
+        rules,
+        vec!["hot_path_alloc", "hot_path_alloc"],
+        "{:?}",
+        rep.violations
+    );
+    assert!(rep.violations[0].msg.contains("format!"));
+    assert!(rep.violations[1].msg.contains("clone"));
+}
+
+#[test]
+fn hot_path_alloc_respects_file_restriction() {
+    let src = "fn hot_fn() { let _v: Vec<u32> = Vec::new(); }\n";
+    // Entry restricted to another file: no finding.
+    assert!(lint_file("solver/x.rs", src, &hot("hot_fn", "runtime/other.rs"))
+        .violations
+        .is_empty());
+    // Matching suffix: finding.
+    let rep = lint_file("solver/x.rs", src, &hot("hot_fn", "solver/x.rs"));
+    assert_eq!(rules_of(&rep), vec!["hot_path_alloc"]);
+    assert!(rep.violations[0].msg.contains("Vec::new"));
+}
+
+#[test]
+fn manifest_parses_hot_entries() {
+    let toml = "# comment\n[[hot]]\nfn = \"sample_into\"\nbench = \"perf_layers\"\ncheck = \"allocs_per_eval\"\n\n[[hot]]\nfn = \"poll\"\nfile = \"coordinator/batcher.rs\"\n";
+    let m = parse_manifest(toml);
+    assert_eq!(m.len(), 2);
+    assert_eq!(m[0].func, "sample_into");
+    assert_eq!(m[0].bench, "perf_layers");
+    assert_eq!(m[0].check, "allocs_per_eval");
+    assert_eq!(m[1].func, "poll");
+    assert_eq!(m[1].file, "coordinator/batcher.rs");
+}
+
+// ----------------------------------------------------- bounded_channel
+
+#[test]
+fn bounded_channel_flags_bare_mpsc_channel() {
+    let src = "fn f() { let (_tx, _rx) = std::sync::mpsc::channel::<u32>(); }\n";
+    let rep = lint_file("solver/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["bounded_channel"]);
+}
+
+#[test]
+fn bounded_channel_allows_sync_channel_and_tests() {
+    let src = "fn f() { let (_tx, _rx) = std::sync::mpsc::sync_channel::<u32>(4); }\n";
+    assert!(lint_file("solver/x.rs", src, NO_HOT).violations.is_empty());
+    let test_src = "#[cfg(test)]\nmod t {\n    fn f() { let (_tx, _rx) = std::sync::mpsc::channel::<u32>(); }\n}\n";
+    assert!(lint_file("solver/x.rs", test_src, NO_HOT).violations.is_empty());
+}
+
+// --------------------------------------------------- lock_across_call
+
+#[test]
+fn lock_guard_across_field_call_in_one_statement_is_flagged() {
+    let src = "fn f(m: &std::sync::Mutex<S>, t: f32, x: &[f32], o: &mut [f32]) {\n    let _ = m.lock().ok().map(|g| g.field.eval_into(t, x, o));\n}\n";
+    let rep = lint_file("solver/x.rs", src, NO_HOT);
+    assert_eq!(rules_of(&rep), vec!["lock_across_call"], "{:?}", rep.violations);
+    assert!(rep.violations[0].msg.contains("eval_into"));
+}
+
+#[test]
+fn lock_and_field_call_in_separate_statements_pass() {
+    let src = "fn f(m: &std::sync::Mutex<S>, t: f32, x: &[f32], o: &mut [f32]) {\n    let h = { m.lock().ok().map(|g| g.handle) };\n    h.eval_into(t, x, o);\n}\n";
+    let rep = lint_file("solver/x.rs", src, NO_HOT);
+    assert!(rep.violations.is_empty(), "{:?}", rep.violations);
+}
+
+// ----------------------------------------------------------- docs_drift
+
+#[test]
+fn err_code_drift_detected_and_clean_doc_passes() {
+    let req = "impl ErrCode { fn as_str(self) -> &'static str { match self { ErrCode::BadRequest => \"bad_request\", ErrCode::Overloaded => \"overloaded\", } } }";
+    assert_eq!(err_code_strings(req), vec!["bad_request", "overloaded"]);
+    let clean = "codes: `bad_request` and `overloaded`.";
+    assert!(check_err_codes(req, clean).is_empty());
+    let stale = "codes: `bad_request` only.";
+    let v = check_err_codes(req, stale);
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].rule, "docs_drift");
+    assert!(v[0].msg.contains("overloaded"));
+}
+
+#[test]
+fn cli_flag_drift_detected_and_clean_doc_passes() {
+    let main_src =
+        "fn f(flags: &std::collections::HashMap<String, String>) {\n    let _ = flags.get(\"model\");\n    let _ = flags\n        .get(\"teacher-cache\");\n    let _ = flags.contains_key(\"register\");\n}\n";
+    assert_eq!(cli_flags(main_src), vec!["model", "register", "teacher-cache"]);
+    let clean = "use --model, --register and --teacher-cache";
+    assert!(check_cli_flags(main_src, clean).is_empty());
+    let v = check_cli_flags(main_src, "only --model and --register here");
+    assert_eq!(v.len(), 1);
+    assert!(v[0].msg.contains("--teacher-cache"));
+}
+
+#[test]
+fn metrics_field_drift_detected_in_section_4_only() {
+    let met = "impl M { pub fn snapshot_json(&self) -> Json {\n    Json::obj(vec![\n        (\"requests\", Json::Num(1.0)),\n        (\n            \"inflight_rows\",\n            Json::Num(2.0),\n        ),\n    ])\n} }\nfn other() { let _ = (\"not_a_field\", Json::Num(0.0)); }\n";
+    assert_eq!(metrics_fields(met), vec!["requests", "inflight_rows"]);
+    let doc_ok = "## §3 other\nnothing\n## §4 Metrics\nfields `requests` and `inflight_rows`\n## §5 next\n";
+    assert!(check_metrics_fields(met, doc_ok).is_empty());
+    // The same backticks outside §4 do not count.
+    let doc_wrong_sec = "## §3 other\n`requests` `inflight_rows`\n## §4 Metrics\nonly `requests`\n";
+    let v = check_metrics_fields(met, doc_wrong_sec);
+    assert_eq!(v.len(), 1);
+    assert!(v[0].msg.contains("inflight_rows"));
+}
+
+#[test]
+fn md_section_extracts_heading_body() {
+    let md = "# T\n## §4 Stats\nbody line\n## §5 Next\nnope\n";
+    let sec = md_section(md, "§4");
+    assert!(sec.contains("body line"));
+    assert!(!sec.contains("nope"));
+}
+
+// ---------------------------------------------------------------- lexer
+
+#[test]
+fn lexer_scrub_is_length_preserving_over_tricky_literals() {
+    let src = "let a = r#\"unwrap() \" inner\"#; let b = b\"panic!\"; let c = '\\'';\nlet d: &'static str = \"x\"; // vec![] here\n";
+    let lx = lex(src);
+    assert_eq!(lx.scrub.len(), src.len());
+    assert!(!lx.scrub.contains("unwrap"));
+    assert!(!lx.scrub.contains("panic"));
+    assert!(!lx.scrub.contains("vec!"));
+    assert!(lx.scrub.contains("'static"));
+    assert_eq!(lx.comments.len(), 1);
+    assert_eq!(lx.comments[0].0, 2);
+}
+
+// ------------------------------------------------------ the repo itself
+
+#[test]
+fn repo_tree_is_lint_clean_and_within_pragma_budget() {
+    let manifest_dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let root = analysis::find_root(&manifest_dir).expect("repo root above rust/");
+    let report = analysis::run(&root).expect("lint run");
+    assert!(report.files_scanned > 20, "scanned {}", report.files_scanned);
+    let rendered: Vec<String> = report
+        .violations
+        .iter()
+        .map(|v| format!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.msg))
+        .collect();
+    assert!(
+        report.violations.is_empty(),
+        "bns-lint violations in tree:\n{}",
+        rendered.join("\n")
+    );
+    let budget = analysis::pragma_budget(&root).expect("rust/src/analysis/pragma_budget");
+    assert!(
+        report.pragmas <= budget,
+        "pragmas {} exceed budget {budget}",
+        report.pragmas
+    );
+    // Every rule name is unique and reportable.
+    let mut names = RULES.to_vec();
+    names.dedup();
+    assert_eq!(names.len(), RULES.len());
+}

@@ -42,7 +42,7 @@ impl Plane {
         )
         .expect("stub store");
         let rt = Arc::new(Runtime::cpu().expect("runtime"));
-        let engine = Arc::new(Engine::start(store.clone(), rt, engine_cfg));
+        let engine = Arc::new(Engine::start(store.clone(), rt, engine_cfg).unwrap());
         let server = Server::bind("127.0.0.1:0", server_cfg, engine.clone(), store)
             .expect("bind server");
         Plane { server: Some(server), engine: Some(engine), dir }
