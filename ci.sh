@@ -91,6 +91,21 @@ fi
 step "perf trajectory: cargo bench --bench serve_load -> BENCH_serve.json"
 if BENCH_SERVE_OUT="../BENCH_serve.json" cargo bench --bench serve_load; then
   echo "wrote $(cd .. && pwd)/BENCH_serve.json"
+  # fault-recovery gate: the bench's third phase wedges the only device
+  # lane and records time back to service (DESIGN.md §11). The section
+  # must exist with a respawn count >= 1 — a dropped phase or a
+  # supervisor that never respawns would otherwise pass silently.
+  echo "fault recovery: $(grep -o '"time_to_recover_ms":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  echo "fault recovery: $(grep -o '"lane_respawns":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  echo "fault recovery: $(grep -o '"exec_retries":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  if ! grep -q '"fault_recovery":' ../BENCH_serve.json; then
+    echo "WARN: BENCH_serve.json has no fault_recovery section (recovery gate vacuous)"
+    lint_fail=1
+  elif ! grep -o '"lane_respawns":[0-9.eE+-]*' ../BENCH_serve.json \
+      | cut -d: -f2 | grep -qv '^0$'; then
+    echo "WARN: fault_recovery ran but no lane respawn was recorded (supervisor inert)"
+    lint_fail=1
+  fi
 else
   echo "serve_load bench failed (perf trajectory not updated)"
   lint_fail=1

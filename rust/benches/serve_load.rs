@@ -24,6 +24,14 @@
 //! unbounded queue growth), and TCP-path samples are bit-identical to
 //! the in-process blocking path. Results land in the `overload` section
 //! of `BENCH_serve.json`.
+//!
+//! A third phase measures **fault recovery** (DESIGN.md §11): a
+//! deterministic fault schedule wedges the only device lane past its
+//! exec timeout, and the phase records how long until the supervisor's
+//! respawn restores service — plus retry/respawn/fault counters and a
+//! bit-identity check of the recovered output against a fault-free
+//! engine. Results land in the `fault_recovery` section, which ci.sh
+//! gates on under STRICT=1.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
@@ -33,7 +41,9 @@ use std::time::{Duration, Instant};
 
 use bns_serve::bench_util::{stub_store, write_results, StubModel, Table};
 use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig, SolverSpec};
-use bns_serve::runtime::Runtime;
+use bns_serve::runtime::{
+    FaultConfig, FaultKind, FaultPlan, FaultSpec, Runtime, RuntimeConfig,
+};
 use bns_serve::util::json::Json;
 
 const MODEL: &str = "serve_stub";
@@ -313,6 +323,92 @@ fn run_overload(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow::Resul
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// fault-recovery phase (lane wedge -> supervisor respawn -> service restored)
+// ---------------------------------------------------------------------------
+
+const FAULT_WEDGE_MS: u64 = 400;
+const FAULT_LANE_TIMEOUT_MS: u64 = 100;
+
+fn run_fault_recovery(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow::Result<Json> {
+    // fault-free reference output for the probe request
+    let labels = vec![0i32, 1, 2, 3];
+    let want_bits: Vec<u32> = {
+        let rt = Arc::new(Runtime::cpu()?);
+        let engine = Engine::start(store.clone(), rt, EngineConfig::default())?;
+        let out = engine.sample_blocking(MODEL, labels.clone(), 0.0, spec(), 4242)?;
+        engine.shutdown();
+        out.samples.iter().map(|v| v.to_bits()).collect()
+    };
+
+    // the very first exec on lane 0 wedges for FAULT_WEDGE_MS, well past
+    // the lane exec timeout — the supervisor must respawn the lane
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        schedule: vec![FaultSpec { lane: Some(0), call: 0, kind: FaultKind::Wedge }],
+        wedge_ms: FAULT_WEDGE_MS,
+        ..Default::default()
+    }));
+    let rt = Arc::new(Runtime::with_config(RuntimeConfig {
+        lanes: 1,
+        lane_exec_timeout: Duration::from_millis(FAULT_LANE_TIMEOUT_MS),
+        fault: Some(plan),
+    })?);
+    let engine = Engine::start(
+        store.clone(),
+        rt.clone(),
+        EngineConfig {
+            workers: 1,
+            exec_retries: 1,
+            retry_backoff_ms: 5,
+            breaker_threshold: 3,
+            breaker_cooldown_ms: 200,
+            ..Default::default()
+        },
+    )?;
+
+    // hammer the same probe until service is restored; every attempt
+    // terminates (timeout -> structured error), so this loop never hangs
+    let t0 = Instant::now();
+    let deadline = t0 + Duration::from_secs(30);
+    let mut failed_attempts = 0u64;
+    let recovered = loop {
+        match engine.sample_blocking(MODEL, labels.clone(), 0.0, spec(), 4242) {
+            Ok(out) => break out,
+            Err(e) => {
+                failed_attempts += 1;
+                assert!(
+                    Instant::now() < deadline,
+                    "service never recovered from the wedge: {e:#}"
+                );
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    };
+    let time_to_recover_ms = t0.elapsed().as_secs_f64() * 1000.0;
+    let got_bits: Vec<u32> = recovered.samples.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(got_bits, want_bits, "recovered samples drifted from the fault-free reference");
+
+    let retries = engine.metrics.exec_retries.load(Ordering::SeqCst);
+    let breaker_open = engine.metrics.breaker_open.load(Ordering::SeqCst);
+    let respawns = rt.respawns_total();
+    let faults = rt.faults_injected();
+    assert!(respawns >= 1, "wedge never triggered a lane respawn");
+    assert_eq!(faults, 1, "exactly the scheduled wedge fires");
+    engine.shutdown();
+
+    Ok(Json::obj(vec![
+        ("wedge_ms", Json::Num(FAULT_WEDGE_MS as f64)),
+        ("lane_exec_timeout_ms", Json::Num(FAULT_LANE_TIMEOUT_MS as f64)),
+        ("time_to_recover_ms", Json::Num(time_to_recover_ms)),
+        ("failed_attempts", Json::Num(failed_attempts as f64)),
+        ("exec_retries", Json::Num(retries as f64)),
+        ("lane_respawns", Json::Num(respawns as f64)),
+        ("breaker_open", Json::Num(breaker_open as f64)),
+        ("faults_injected", Json::Num(faults as f64)),
+        ("bit_identical_after_recovery", Json::Bool(true)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let (store, dir) = stub_store(
         "serve-load",
@@ -400,6 +496,23 @@ fn main() -> anyhow::Result<()> {
     );
     println!("structured rejects + TCP bit-identity: yes (asserted)");
 
+    // fault-recovery phase: wedge the lane, measure time back to service
+    let fault_recovery = run_fault_recovery(&store)?;
+    println!(
+        "\n=== fault_recovery (1 lane, wedge {FAULT_WEDGE_MS}ms vs {FAULT_LANE_TIMEOUT_MS}ms \
+         exec timeout) ==="
+    );
+    println!(
+        "time-to-recover {:.0}ms, failed attempts {}, exec retries {}, lane respawns {}, \
+         faults injected {}",
+        fault_recovery.get("time_to_recover_ms").as_f64().unwrap_or(0.0),
+        fault_recovery.get("failed_attempts").as_f64().unwrap_or(0.0),
+        fault_recovery.get("exec_retries").as_f64().unwrap_or(0.0),
+        fault_recovery.get("lane_respawns").as_f64().unwrap_or(0.0),
+        fault_recovery.get("faults_injected").as_f64().unwrap_or(0.0),
+    );
+    println!("bit-identical after recovery: yes (asserted)");
+
     let bench = Json::obj(vec![
         ("bench", Json::Str("serve_load".into())),
         (
@@ -419,6 +532,7 @@ fn main() -> anyhow::Result<()> {
         ("worker_scaling_ratio", Json::Num(scaling)),
         ("bit_identical", Json::Bool(true)),
         ("overload", overload),
+        ("fault_recovery", fault_recovery),
     ]);
     let out_path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

@@ -178,7 +178,7 @@ pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
                     ("cost", Json::Num(m.cost.max(1) as f64)),
                 ]),
             )]);
-            std::fs::write(dir.join(&rel), spec.to_string())?;
+            crate::util::fsio::write_atomic(&dir.join(&rel), &spec.to_string())?;
             buckets.push(Json::obj(vec![
                 ("batch", Json::Num(b as f64)),
                 ("path", Json::Str(rel)),
@@ -217,7 +217,8 @@ pub fn write_stub_artifacts(dir: &Path, models: &[StubModel]) -> Result<()> {
         ("solvers", Json::Arr(Vec::new())),
         ("fd", fd),
     ]);
-    std::fs::write(dir.join("manifest.json"), manifest.to_string())?;
+    // atomic: a torn manifest would make the whole artifact dir unloadable
+    crate::util::fsio::write_atomic(&dir.join("manifest.json"), &manifest.to_string())?;
     Ok(())
 }
 
@@ -235,7 +236,7 @@ pub fn add_solver_artifact(
     solver.validate()?;
     std::fs::create_dir_all(dir.join("solvers"))?;
     let rel = format!("solvers/{name}.json");
-    std::fs::write(dir.join(&rel), solver.to_json_with_meta(meta).to_string())?;
+    crate::util::fsio::write_atomic(&dir.join(&rel), &solver.to_json_with_meta(meta).to_string())?;
     let mpath = dir.join("manifest.json");
     let text = std::fs::read_to_string(&mpath)
         .with_context(|| format!("reading {}", mpath.display()))?;
@@ -256,7 +257,9 @@ pub fn add_solver_artifact(
         }
         _ => anyhow::bail!("manifest root is not an object"),
     }
-    std::fs::write(&mpath, manifest.to_string())?;
+    // atomic: registration must never leave a half-written manifest even
+    // if the process dies mid-update
+    crate::util::fsio::write_atomic(&mpath, &manifest.to_string())?;
     Ok(())
 }
 
@@ -315,7 +318,7 @@ impl Table {
 pub fn write_results(name: &str, j: &Json) -> Result<PathBuf> {
     std::fs::create_dir_all("results")?;
     let path = PathBuf::from(format!("results/{name}.json"));
-    std::fs::write(&path, j.to_string())?;
+    crate::util::fsio::write_atomic(&path, &j.to_string())?;
     Ok(path)
 }
 

@@ -1,0 +1,244 @@
+//! Per-model circuit breakers: stop dispatching to a model whose batches
+//! keep failing (a poisoned artifact, a backend that rejects its
+//! executable) instead of burning retries and lane respawns fleet-wide.
+//!
+//! Classic three-state breaker, keyed by model name:
+//!
+//! * **closed** — normal operation; consecutive batch failures are
+//!   counted, successes reset the count.
+//! * **open** — after `threshold` consecutive failures. New batches for
+//!   the model are rejected up front with [`ErrCode::Unavailable`]
+//!   (`retry_after_ms` = time until the next probe) without touching the
+//!   runtime.
+//! * **half-open** — once `cooldown` elapses, exactly one batch is let
+//!   through as a probe; success closes the breaker, failure re-opens it
+//!   (and restarts the cooldown). Concurrent batches during a probe are
+//!   rejected, so a recovering model sees one speculative batch, not a
+//!   thundering herd.
+//!
+//! Granularity is the *model*, matching the failure domain: a broken
+//! artifact fails every batch of that model on every lane, while other
+//! models keep serving. Breaker decisions never change numerics — an
+//! admitted batch runs exactly as it would without the breaker.
+//!
+//! [`ErrCode::Unavailable`]: super::request::ErrCode::Unavailable
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+use crate::util::sync::lock_ok;
+
+/// Admission decision for one batch (see [`Breakers::admit`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admit {
+    /// Run the batch. `probe` marks the single half-open trial batch —
+    /// callers must report its outcome via `on_success`/`on_failure` so
+    /// the breaker can close or re-open.
+    Proceed {
+        /// True when this batch is the half-open probe.
+        probe: bool,
+    },
+    /// Breaker is open: fail the batch's requests with `unavailable`
+    /// and this retry hint (ms until the next half-open probe).
+    Reject {
+        /// Suggested client backoff in milliseconds.
+        retry_after_ms: u64,
+    },
+}
+
+#[derive(Default)]
+struct Entry {
+    /// Consecutive failures while closed (reset by any success).
+    consecutive: u32,
+    /// Set while open / half-open: when the breaker tripped or last
+    /// re-opened.
+    opened_at: Option<Instant>,
+    /// A half-open probe batch is currently in flight.
+    probing: bool,
+}
+
+/// All per-model breakers of one engine.
+pub struct Breakers {
+    threshold: u32,
+    cooldown: Duration,
+    map: Mutex<HashMap<String, Entry>>,
+}
+
+impl Breakers {
+    /// `threshold` consecutive batch failures open a model's breaker;
+    /// after `cooldown` a single probe batch may close it again. A
+    /// `threshold` of 0 disables breakers entirely (every admit
+    /// proceeds).
+    pub fn new(threshold: u32, cooldown: Duration) -> Breakers {
+        Breakers { threshold, cooldown, map: Mutex::new(HashMap::new()) }
+    }
+
+    /// Decide whether a batch for `model` may run now.
+    pub fn admit(&self, model: &str) -> Admit {
+        if self.threshold == 0 {
+            return Admit::Proceed { probe: false };
+        }
+        let mut map = lock_ok(&self.map);
+        let Some(e) = map.get_mut(model) else {
+            return Admit::Proceed { probe: false };
+        };
+        let Some(opened_at) = e.opened_at else {
+            return Admit::Proceed { probe: false };
+        };
+        let elapsed = opened_at.elapsed();
+        if elapsed < self.cooldown {
+            let remaining = self.cooldown - elapsed;
+            return Admit::Reject { retry_after_ms: (remaining.as_millis() as u64).max(1) };
+        }
+        if e.probing {
+            // a probe is already in flight; tell others to come back in
+            // roughly one more cooldown
+            return Admit::Reject { retry_after_ms: (self.cooldown.as_millis() as u64).max(1) };
+        }
+        e.probing = true;
+        Admit::Proceed { probe: true }
+    }
+
+    /// Record a successful batch: closes the breaker (if open) and
+    /// resets the failure count.
+    pub fn on_success(&self, model: &str) {
+        if self.threshold == 0 {
+            return;
+        }
+        let mut map = lock_ok(&self.map);
+        if let Some(e) = map.get_mut(model) {
+            e.consecutive = 0;
+            e.opened_at = None;
+            e.probing = false;
+        }
+    }
+
+    /// Record a failed batch. Returns `true` when this failure
+    /// *transitioned* the breaker to open (closed -> open, or a failed
+    /// half-open probe re-opening) so callers can count distinct
+    /// breaker-open events.
+    pub fn on_failure(&self, model: &str) -> bool {
+        if self.threshold == 0 {
+            return false;
+        }
+        let mut map = lock_ok(&self.map);
+        let e = map.entry(model.to_string()).or_default();
+        if e.probing {
+            // failed probe: re-open and restart the cooldown
+            e.probing = false;
+            e.opened_at = Some(Instant::now());
+            return true;
+        }
+        if e.opened_at.is_some() {
+            // already open (a batch admitted before the trip finished
+            // late); keep the original cooldown clock
+            return false;
+        }
+        e.consecutive = e.consecutive.saturating_add(1);
+        if e.consecutive >= self.threshold {
+            e.opened_at = Some(Instant::now());
+            return true;
+        }
+        false
+    }
+
+    /// Breaker states for the `health` op: one object per model that has
+    /// ever failed, `state` in {"closed", "open", "half_open"}.
+    pub fn snapshot_json(&self) -> Json {
+        let map = lock_ok(&self.map);
+        let mut entries: Vec<(&String, &Entry)> = map.iter().collect();
+        entries.sort_by(|a, b| a.0.cmp(b.0));
+        Json::Arr(
+            entries
+                .into_iter()
+                .map(|(model, e)| {
+                    let (state, retry) = match e.opened_at {
+                        None => ("closed", None),
+                        Some(at) => {
+                            let elapsed = at.elapsed();
+                            if e.probing || elapsed >= self.cooldown {
+                                ("half_open", Some(0))
+                            } else {
+                                ("open", Some((self.cooldown - elapsed).as_millis() as u64))
+                            }
+                        }
+                    };
+                    let mut pairs = vec![
+                        ("model", Json::Str(model.clone())),
+                        ("state", Json::Str(state.to_string())),
+                        ("consecutive_failures", Json::Num(e.consecutive as f64)),
+                    ];
+                    if let Some(r) = retry {
+                        pairs.push(("retry_after_ms", Json::Num(r as f64)));
+                    }
+                    Json::obj(pairs)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trips_after_threshold_and_probe_closes() {
+        let b = Breakers::new(3, Duration::from_millis(40));
+        assert_eq!(b.admit("m"), Admit::Proceed { probe: false });
+        assert!(!b.on_failure("m"));
+        assert!(!b.on_failure("m"));
+        // third consecutive failure trips the breaker (transition = true)
+        assert!(b.on_failure("m"));
+        match b.admit("m") {
+            Admit::Reject { retry_after_ms } => assert!(retry_after_ms <= 40),
+            other => panic!("expected reject, got {other:?}"),
+        }
+        // other models are unaffected
+        assert_eq!(b.admit("other"), Admit::Proceed { probe: false });
+        std::thread::sleep(Duration::from_millis(50));
+        // cooldown elapsed: exactly one probe goes through
+        assert_eq!(b.admit("m"), Admit::Proceed { probe: true });
+        assert!(matches!(b.admit("m"), Admit::Reject { .. }));
+        b.on_success("m");
+        assert_eq!(b.admit("m"), Admit::Proceed { probe: false });
+    }
+
+    #[test]
+    fn failed_probe_reopens_and_success_resets_streak() {
+        let b = Breakers::new(2, Duration::from_millis(30));
+        assert!(!b.on_failure("m"));
+        b.on_success("m"); // streak reset
+        assert!(!b.on_failure("m"));
+        assert!(b.on_failure("m")); // 2 consecutive -> open
+        std::thread::sleep(Duration::from_millis(35));
+        assert_eq!(b.admit("m"), Admit::Proceed { probe: true });
+        // failed probe re-opens (counts as a fresh open transition)
+        assert!(b.on_failure("m"));
+        assert!(matches!(b.admit("m"), Admit::Reject { .. }));
+    }
+
+    #[test]
+    fn zero_threshold_disables_breakers() {
+        let b = Breakers::new(0, Duration::from_millis(10));
+        for _ in 0..100 {
+            assert!(!b.on_failure("m"));
+        }
+        assert_eq!(b.admit("m"), Admit::Proceed { probe: false });
+        assert_eq!(b.snapshot_json(), Json::Arr(Vec::new()));
+    }
+
+    #[test]
+    fn snapshot_reports_states() {
+        let b = Breakers::new(1, Duration::from_secs(60));
+        assert!(b.on_failure("bad"));
+        b.on_success("good"); // no entry is created for unseen-failure models
+        let s = b.snapshot_json().to_string();
+        assert!(s.contains("\"model\":\"bad\""), "{s}");
+        assert!(s.contains("\"state\":\"open\""), "{s}");
+        assert!(s.contains("\"retry_after_ms\""), "{s}");
+        assert!(!s.contains("good"), "{s}");
+    }
+}

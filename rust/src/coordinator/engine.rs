@@ -23,18 +23,27 @@
 //!     worker's models pin to their own lanes (round-robin), workers
 //!     execute model evals truly concurrently on a multi-lane runtime.
 //!
+//! Failure isolation (DESIGN.md §11): a failed batch execution is
+//! retried with decorrelated-jitter backoff after evicting the worker's
+//! cached model (so the re-load can pin to a respawned or different
+//! lane); repeated failures open a per-model circuit breaker that
+//! rejects the model's batches with a structured `unavailable` error
+//! until a half-open probe succeeds. Requests are settled exactly once
+//! regardless of how many attempts ran.
+//!
 //! Shutdown: `shutdown()` drains and joins all threads; dropping an
 //! `Engine` without calling it performs the same teardown (the seed
 //! leaked the dispatch/worker threads on drop).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::breaker::{Admit, Breakers};
 use super::metrics::Metrics;
 use super::request::{
     ErrCode, Priority, Progress, SampleOutput, SampleRequest, SampleResponse, ServeError,
@@ -47,6 +56,7 @@ use crate::runtime::{ArtifactStore, LoadedModel, Runtime};
 use crate::solver::field::{CountingField, Field};
 use crate::solver::rk45::{rk45_into, Rk45Opts};
 use crate::solver::SampleWorkspace;
+use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use crate::util::sync::{lock_ok, wait_ok};
 
@@ -62,6 +72,23 @@ pub struct EngineConfig {
     /// with [`ErrCode::Overloaded`] instead of queueing. CLI:
     /// `--max-inflight`.
     pub max_inflight_rows: usize,
+    /// Extra execution attempts after a failed batch (DESIGN.md §11).
+    /// Each retry evicts the worker's cached model so the re-load can
+    /// pin to a respawned (or different) lane, then backs off with
+    /// decorrelated jitter. Retried outputs are bit-identical to a
+    /// fault-free run because sampling is pure in (seed, labels,
+    /// solver). 0 disables retries.
+    pub exec_retries: u32,
+    /// Base backoff before a retry, in milliseconds; the actual sleep
+    /// is jittered in `[base, 3*base)` to decorrelate workers that
+    /// failed on the same lane at the same moment.
+    pub retry_backoff_ms: u64,
+    /// Consecutive batch failures (after retries) that open a model's
+    /// circuit breaker; 0 disables breakers. CLI: `--breaker-threshold`.
+    pub breaker_threshold: u32,
+    /// How long an open breaker rejects a model's batches before
+    /// letting one half-open probe through. CLI: `--breaker-cooldown-ms`.
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for EngineConfig {
@@ -70,6 +97,10 @@ impl Default for EngineConfig {
             batcher: BatcherConfig::default(),
             workers: 2,
             max_inflight_rows: 4096,
+            exec_retries: 1,
+            retry_backoff_ms: 10,
+            breaker_threshold: 5,
+            breaker_cooldown_ms: 1000,
         }
     }
 }
@@ -104,6 +135,18 @@ pub struct Engine {
     dispatch: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     wq: Arc<WorkQueue>,
+    /// Per-model circuit breakers shared with the workers (`health` op).
+    breakers: Arc<Breakers>,
+    /// Weak so a retained engine handle can't pin lane threads alive;
+    /// feeds lane generations/respawns into [`Engine::health_json`].
+    rt: Weak<Runtime>,
+}
+
+/// Bounded-retry policy handed to each worker (see [`EngineConfig`]).
+#[derive(Clone, Copy)]
+struct RetryPolicy {
+    retries: u32,
+    backoff_ms: u64,
 }
 
 /// Decrement the in-flight row gauge for one answered/rejected request.
@@ -127,14 +170,31 @@ impl Engine {
     ) -> Result<Engine> {
         let metrics = Arc::new(Metrics::new());
         {
-            // lane utilization on the /metrics surface; a Weak keeps a
-            // retained `metrics` clone from pinning the Runtime (and its
-            // lane threads) alive past the last real handle
-            let rt = Arc::downgrade(&rt);
+            // lane utilization + fault domains on the /metrics surface; a
+            // Weak keeps a retained `metrics` clone from pinning the
+            // Runtime (and its lane threads) alive past the last real
+            // handle
+            let rt_l = Arc::downgrade(&rt);
             metrics.set_lane_provider(Box::new(move || {
-                rt.upgrade().map(|rt| rt.lane_stats()).unwrap_or_default()
+                rt_l.upgrade()
+                    .map(|rt| {
+                        rt.lane_health()
+                            .into_iter()
+                            .map(|h| (h.execs, h.busy_us, h.generation, h.respawns))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            }));
+            let rt_f = Arc::downgrade(&rt);
+            metrics.set_fault_provider(Box::new(move || {
+                rt_f.upgrade().map(|rt| rt.faults_injected()).unwrap_or(0)
             }));
         }
+        let breakers = Arc::new(Breakers::new(
+            cfg.breaker_threshold,
+            Duration::from_millis(cfg.breaker_cooldown_ms.max(1)),
+        ));
+        let policy = RetryPolicy { retries: cfg.exec_retries, backoff_ms: cfg.retry_backoff_ms };
         // bns-lint: allow(bounded_channel) — bounded upstream by the admission budget: try_submit charges max_inflight_rows before sending, so the queue can never exceed it
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
@@ -227,6 +287,7 @@ impl Engine {
             let rt_w = rt.clone();
             let metrics_w = metrics.clone();
             let router_w = router.clone();
+            let breakers_w = breakers.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bns-worker-{wi}"))
@@ -254,8 +315,8 @@ impl Engine {
                             };
                             metrics_w.queue_depth.fetch_sub(1, Ordering::Relaxed);
                             run_batch(
-                                &store_w, &rt_w, &metrics_w, &router_w, &mut models, batch,
-                                &mut ws,
+                                &store_w, &rt_w, &metrics_w, &router_w, &breakers_w, policy,
+                                &mut models, batch, &mut ws,
                             );
                         }
                     })
@@ -271,7 +332,36 @@ impl Engine {
             dispatch: Some(dispatch),
             workers,
             wq,
+            breakers,
+            rt: Arc::downgrade(&rt),
         })
+    }
+
+    /// Fault-domain health for the `health` op (PROTOCOL.md): per-lane
+    /// generation/respawn counters and every tripped model breaker.
+    /// Cheap enough to poll — two lock-protected reads, no runtime RPC.
+    pub fn health_json(&self) -> Json {
+        let lanes = self
+            .rt
+            .upgrade()
+            .map(|rt| {
+                Json::Arr(
+                    rt.lane_health()
+                        .into_iter()
+                        .map(|h| {
+                            Json::obj(vec![
+                                ("lane", Json::Num(h.lane as f64)),
+                                ("generation", Json::Num(h.generation as f64)),
+                                ("respawns", Json::Num(h.respawns as f64)),
+                                ("execs", Json::Num(h.execs as f64)),
+                                ("busy_us", Json::Num(h.busy_us as f64)),
+                            ])
+                        })
+                        .collect(),
+                )
+            })
+            .unwrap_or(Json::Arr(Vec::new()));
+        Json::obj(vec![("lanes", lanes), ("breakers", self.breakers.snapshot_json())])
     }
 
     /// Admission-controlled submit: charges the request's rows against
@@ -438,7 +528,13 @@ impl Engine {
             progress: None,
             reply,
         });
-        let resp = rx.recv()?;
+        // Generous backstop, not a deadline: supervision turns lane
+        // failures into structured errors long before this fires. It
+        // exists so a lost reply can never hang the caller forever
+        // (DESIGN.md §11).
+        let resp = rx.recv_timeout(Duration::from_secs(120)).map_err(|_| {
+            anyhow::anyhow!("no response within 120s (engine wedged or reply channel lost)")
+        })?;
         resp.result.map_err(|e| anyhow::anyhow!(e))
     }
 
@@ -595,52 +691,105 @@ fn solve_batch<'w>(
     Ok(BatchOutcome { out, nfe, forwards_per_eval, solver_name: routed.name.clone(), dim })
 }
 
-/// Execute one batched group: bind the cached model, run the solver
-/// lockstep through the worker's workspace, split rows back.
+/// Execute one batched group: breaker admission, bind the cached model,
+/// run the solver lockstep through the worker's workspace (retrying a
+/// failed execution up to `policy.retries` times), split rows back.
+///
+/// Exactly-once settlement: every request in the batch is answered from
+/// precisely one of the three terminal arms — breaker reject, success,
+/// or final failure. Retries happen strictly *before* any reply is
+/// sent, so a retry can never double-settle (DESIGN.md §11).
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
     store: &ArtifactStore,
     rt: &Runtime,
     metrics: &Metrics,
     router: &RouterCache,
+    breakers: &Breakers,
+    policy: RetryPolicy,
     models: &mut HashMap<String, Arc<LoadedModel>>,
     batch: Batch,
     ws: &mut SampleWorkspace,
 ) {
-    let started = Instant::now();
-    match solve_batch(store, rt, router, models, &batch, ws) {
-        Ok(o) => {
-            let exec_us = started.elapsed().as_micros() as u64;
-            // aggregate and per-request accounting share one formula:
-            // forwards = nfe × rows × forwards-per-eval of *this* field
-            metrics.record_evals(o.nfe, o.nfe * batch.rows * o.forwards_per_eval);
-            let mut offset = 0;
-            for req in batch.requests {
-                let rows = req.labels.len();
-                let queue_us = started.duration_since(req.enqueued_at).as_micros() as u64;
-                metrics.record_latency(queue_us, exec_us, &o.solver_name);
-                let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
-                offset += rows;
-                settle_rows(metrics, rows);
-                let _ = req.reply.send(SampleResponse {
-                    id: req.id,
-                    result: Ok(SampleOutput {
-                        samples,
-                        dim: o.dim,
-                        nfe: o.nfe,
-                        forwards: o.nfe * rows * o.forwards_per_eval,
-                        solver_used: o.solver_name.clone(),
-                        queue_us,
-                        exec_us,
-                    }),
-                });
-            }
+    // breaker first: an open breaker fails the whole batch cheaply,
+    // without touching the runtime at all
+    if let Admit::Reject { retry_after_ms } = breakers.admit(&batch.key.model) {
+        let err = ServeError::unavailable(
+            format!("model '{}' unavailable (circuit breaker open)", batch.key.model),
+            retry_after_ms,
+        );
+        for req in batch.requests {
+            metrics.record_reject();
+            settle_rows(metrics, req.labels.len());
+            let _ = req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
         }
-        Err(e) => {
-            let err = ServeError::new(ErrCode::Internal, format!("batch failed: {e:#}"));
-            for req in batch.requests {
-                settle_rows(metrics, req.labels.len());
-                let _ = req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
+        return;
+    }
+    let started = Instant::now();
+    let batch_seed = batch.requests.first().map(|r| r.id).unwrap_or_default();
+    for attempt in 0..=policy.retries {
+        match solve_batch(store, rt, router, models, &batch, ws) {
+            Ok(o) => {
+                breakers.on_success(&batch.key.model);
+                let exec_us = started.elapsed().as_micros() as u64;
+                // aggregate and per-request accounting share one formula:
+                // forwards = nfe × rows × forwards-per-eval of *this* field
+                metrics.record_evals(o.nfe, o.nfe * batch.rows * o.forwards_per_eval);
+                let mut offset = 0;
+                for req in batch.requests {
+                    let rows = req.labels.len();
+                    let queue_us = started.duration_since(req.enqueued_at).as_micros() as u64;
+                    metrics.record_latency(queue_us, exec_us, &o.solver_name);
+                    let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
+                    offset += rows;
+                    settle_rows(metrics, rows);
+                    let _ = req.reply.send(SampleResponse {
+                        id: req.id,
+                        result: Ok(SampleOutput {
+                            samples,
+                            dim: o.dim,
+                            nfe: o.nfe,
+                            forwards: o.nfe * rows * o.forwards_per_eval,
+                            solver_used: o.solver_name.clone(),
+                            queue_us,
+                            exec_us,
+                        }),
+                    });
+                }
+                return;
+            }
+            Err(e) if attempt < policy.retries => {
+                // evict the cached model so the retry's re-load re-pins
+                // its executables (round-robin) — onto a respawned lane
+                // or a different one — instead of re-using the binding
+                // that just failed
+                models.remove(&batch.key.model);
+                metrics.exec_retries.fetch_add(1, Ordering::Relaxed);
+                // decorrelated jitter: workers that failed on the same
+                // lane at the same instant seed from their own batch ids
+                // and so back off by different amounts
+                let mut jitter = Pcg32::seeded(batch_seed ^ (attempt as u64) ^ 0x5eed_ba11);
+                let base = policy.backoff_ms.max(1);
+                let sleep_ms = base + jitter.below(base as usize * 2) as u64;
+                std::thread::sleep(Duration::from_millis(sleep_ms));
+                let _ = e; // retried; the final attempt reports its own error
+            }
+            Err(e) => {
+                // terminal failure: count toward the model's breaker,
+                // then settle every request exactly once
+                if breakers.on_failure(&batch.key.model) {
+                    metrics.breaker_open.fetch_add(1, Ordering::Relaxed);
+                }
+                let err = ServeError::new(
+                    ErrCode::Internal,
+                    format!("batch failed after {} attempt(s): {e:#}", attempt + 1),
+                );
+                for req in batch.requests {
+                    settle_rows(metrics, req.labels.len());
+                    let _ =
+                        req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
+                }
+                return;
             }
         }
     }

@@ -14,10 +14,15 @@ use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
 use crate::util::sync::lock_ok;
 
-/// Provider of per-lane `(execs, busy_us)` counters, registered by the
-/// engine so lane utilization shows up on the `/metrics` surface without
-/// the metrics layer depending on the runtime.
-pub type LaneStatsProvider = Box<dyn Fn() -> Vec<(u64, u64)> + Send + Sync>;
+/// Provider of per-lane `(execs, busy_us, generation, respawns)`
+/// counters, registered by the engine so lane utilization and
+/// supervision state show up on the `/metrics` surface without the
+/// metrics layer depending on the runtime.
+pub type LaneStatsProvider = Box<dyn Fn() -> Vec<(u64, u64, u64, u64)> + Send + Sync>;
+
+/// Provider of the runtime's total injected-fault count (0 outside
+/// chaos runs), registered alongside the lane provider.
+pub type FaultsProvider = Box<dyn Fn() -> u64 + Send + Sync>;
 
 /// Shared service counters, gauges, and latency histograms.
 #[derive(Default)]
@@ -50,7 +55,13 @@ pub struct Metrics {
     pub inflight_rows: AtomicU64,
     /// Gauge: TCP connections currently open on the serving plane.
     pub connections: AtomicU64,
+    /// Batch executions retried after a failure (bounded-retry layer).
+    pub exec_retries: AtomicU64,
+    /// Distinct circuit-breaker open transitions (closed -> open or a
+    /// failed half-open probe re-opening).
+    pub breaker_open: AtomicU64,
     lane_provider: Mutex<Option<LaneStatsProvider>>,
+    fault_provider: Mutex<Option<FaultsProvider>>,
     inner: Mutex<Inner>,
 }
 
@@ -104,9 +115,15 @@ impl Metrics {
     }
 
     /// Register the source of per-lane device counters (the engine wires
-    /// this to `Runtime::lane_stats`).
+    /// this to `Runtime::lane_health`).
     pub fn set_lane_provider(&self, f: LaneStatsProvider) {
         *lock_ok(&self.lane_provider) = Some(f);
+    }
+
+    /// Register the source of the injected-fault count (the engine wires
+    /// this to `Runtime::faults_injected`).
+    pub fn set_fault_provider(&self, f: FaultsProvider) {
+        *lock_ok(&self.fault_provider) = Some(f);
     }
 
     /// Record one request's queue/exec latencies and the solver it used.
@@ -145,10 +162,15 @@ impl Metrics {
     /// per-solver tally, and per-lane device counter. Field semantics
     /// are documented in README.md §Operator runbook.
     pub fn snapshot_json(&self) -> Json {
-        let lanes: Vec<(u64, u64)> = lock_ok(&self.lane_provider)
+        let lanes: Vec<(u64, u64, u64, u64)> = lock_ok(&self.lane_provider)
             .as_ref()
             .map(|f| f())
             .unwrap_or_default();
+        let faults: u64 = lock_ok(&self.fault_provider)
+            .as_ref()
+            .map(|f| f())
+            .unwrap_or(0);
+        let respawns_total: u64 = lanes.iter().map(|&(_, _, _, r)| r).sum();
         let g = lock_ok(&self.inner);
         let q = |h: &LatencyHistogram| {
             Json::obj(vec![
@@ -175,17 +197,23 @@ impl Metrics {
             ("work_queue_depth", Json::Num(self.queue_depth.load(Ordering::Relaxed) as f64)),
             ("inflight_rows", Json::Num(self.inflight_rows.load(Ordering::Relaxed) as f64)),
             ("connections", Json::Num(self.connections.load(Ordering::Relaxed) as f64)),
+            ("lane_respawns", Json::Num(respawns_total as f64)),
+            ("exec_retries", Json::Num(self.exec_retries.load(Ordering::Relaxed) as f64)),
+            ("breaker_open", Json::Num(self.breaker_open.load(Ordering::Relaxed) as f64)),
+            ("faults_injected", Json::Num(faults as f64)),
             (
                 "lanes",
                 Json::Arr(
                     lanes
                         .iter()
                         .enumerate()
-                        .map(|(i, &(execs, busy_us))| {
+                        .map(|(i, &(execs, busy_us, generation, respawns))| {
                             Json::obj(vec![
                                 ("lane", Json::Num(i as f64)),
                                 ("execs", Json::Num(execs as f64)),
                                 ("busy_us", Json::Num(busy_us as f64)),
+                                ("generation", Json::Num(generation as f64)),
+                                ("respawns", Json::Num(respawns as f64)),
                             ])
                         })
                         .collect(),
@@ -271,13 +299,32 @@ mod tests {
     #[test]
     fn lane_provider_and_queue_depth_surface_in_snapshot() {
         let m = Metrics::new();
-        m.set_lane_provider(Box::new(|| vec![(10, 1500), (4, 600)]));
+        m.set_lane_provider(Box::new(|| vec![(10, 1500, 1, 1), (4, 600, 0, 0)]));
         m.queue_depth.fetch_add(3, Ordering::Relaxed);
         let snap = m.snapshot_json();
         let lanes = snap.get("lanes").as_arr().unwrap();
         assert_eq!(lanes.len(), 2);
         assert_eq!(lanes[0].get("execs").as_f64(), Some(10.0));
         assert_eq!(lanes[1].get("busy_us").as_f64(), Some(600.0));
+        assert_eq!(lanes[0].get("generation").as_f64(), Some(1.0));
+        assert_eq!(lanes[0].get("respawns").as_f64(), Some(1.0));
+        assert_eq!(snap.get("lane_respawns").as_f64(), Some(1.0));
         assert_eq!(snap.get("work_queue_depth").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn fault_domain_counters_surface_in_snapshot() {
+        let m = Metrics::new();
+        m.exec_retries.fetch_add(2, Ordering::Relaxed);
+        m.breaker_open.fetch_add(1, Ordering::Relaxed);
+        m.set_fault_provider(Box::new(|| 7));
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("exec_retries").as_f64(), Some(2.0));
+        assert_eq!(snap.get("breaker_open").as_f64(), Some(1.0));
+        assert_eq!(snap.get("faults_injected").as_f64(), Some(7.0));
+        // no provider: faults_injected reports 0, lane_respawns 0
+        let bare = Metrics::new().snapshot_json();
+        assert_eq!(bare.get("faults_injected").as_f64(), Some(0.0));
+        assert_eq!(bare.get("lane_respawns").as_f64(), Some(0.0));
     }
 }

@@ -5,6 +5,8 @@
 //! * `batcher` — step-aligned dynamic batching (the diffusion analogue of
 //!   continuous batching: requests sharing a solver timeline run lockstep)
 //!   plus deadline shedding
+//! * `breaker` — per-model circuit breakers guarding batch dispatch
+//!   (consecutive failures open, half-open probe closes)
 //! * `router`  — SolverSpec -> concrete solver resolution (BNS-first)
 //! * `engine`  — admission control, dispatch + worker threads driving
 //!   batched sampling
@@ -17,6 +19,7 @@
 #![warn(missing_docs)]
 
 pub mod batcher;
+pub mod breaker;
 pub mod engine;
 pub mod metrics;
 pub mod request;

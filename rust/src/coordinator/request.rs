@@ -120,6 +120,10 @@ pub enum ErrCode {
     DeadlineExceeded,
     /// Execution failed after admission (solver/runtime error).
     Internal,
+    /// The model's circuit breaker is open after repeated execution
+    /// failures; the service refuses new work for it until a half-open
+    /// probe succeeds. Retry after `retry_after_ms`.
+    Unavailable,
 }
 
 impl ErrCode {
@@ -134,6 +138,7 @@ impl ErrCode {
             ErrCode::Overloaded => "overloaded",
             ErrCode::DeadlineExceeded => "deadline_exceeded",
             ErrCode::Internal => "internal",
+            ErrCode::Unavailable => "unavailable",
         }
     }
 }
@@ -146,8 +151,10 @@ pub struct ServeError {
     pub code: ErrCode,
     /// Human-readable detail.
     pub msg: String,
-    /// For [`ErrCode::Overloaded`]: suggested client backoff before
-    /// retrying, derived from recent execution latency.
+    /// For [`ErrCode::Overloaded`] / [`ErrCode::Unavailable`]: suggested
+    /// client backoff before retrying — derived from recent execution
+    /// latency (overload) or the breaker's remaining cooldown
+    /// (unavailable).
     pub retry_after_ms: Option<u64>,
 }
 
@@ -161,6 +168,16 @@ impl ServeError {
     pub fn overloaded(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
         ServeError {
             code: ErrCode::Overloaded,
+            msg: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// A circuit-breaker reject carrying a backoff hint (the time left
+    /// until the breaker's next half-open probe).
+    pub fn unavailable(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
+        ServeError {
+            code: ErrCode::Unavailable,
             msg: msg.into(),
             retry_after_ms: Some(retry_after_ms),
         }

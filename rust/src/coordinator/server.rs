@@ -507,6 +507,18 @@ fn handle_request_line(
             }
             c.enqueue(&o);
         }
+        Some("health") => {
+            // fault-domain view: lane generations/respawns + breaker
+            // states (PROTOCOL.md §health); `stats` stays the counters op
+            let mut o = engine.health_json();
+            if let Json::Obj(map) = &mut o {
+                map.insert("ok".into(), Json::Bool(true));
+                if let Some(t) = tag {
+                    map.insert("tag".into(), t);
+                }
+            }
+            c.enqueue(&o);
+        }
         Some("ping") => {
             let frame = ok_frame(
                 vec![("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))],

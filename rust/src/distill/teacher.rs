@@ -408,7 +408,10 @@ impl TeacherSet {
             ("x0", Json::arr_f32(&self.x0)),
             ("x1", Json::arr_f32(&self.x1)),
         ]);
-        std::fs::write(path, j.to_string())
+        // temp + rename: a crash mid-save leaves the previous cache (or
+        // none) rather than a truncated file that poisons later runs —
+        // load_cached treats any unparseable cache as a miss either way
+        crate::util::fsio::write_atomic(path, &j.to_string())
             .with_context(|| format!("writing teacher cache {}", path.display()))
     }
 

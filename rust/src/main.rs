@@ -8,7 +8,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use bns_serve::coordinator::{server, Engine, EngineConfig, SolverSpec};
-use bns_serve::runtime::{ArtifactStore, Runtime};
+use bns_serve::runtime::{ArtifactStore, Runtime, RuntimeConfig};
 use bns_serve::util::stats::psnr;
 
 const USAGE: &str = "\
@@ -26,6 +26,14 @@ USAGE:
                     [--deadline-ms MS]  (default per-request deadline when
                      the request carries none; queued work past it is shed
                      with err=deadline_exceeded; default: no deadline)
+                    [--lane-exec-timeout-ms MS]  (per-exec watchdog: a lane
+                     that exceeds it is declared wedged and respawned under
+                     a new generation; default 30000 — DESIGN.md §11)
+                    [--breaker-threshold N]  (consecutive batch failures
+                     that open a model's circuit breaker, 0 disables;
+                     default 5)
+                    [--breaker-cooldown-ms MS]  (open-breaker reject window
+                     before one half-open probe; default 1000)
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -135,9 +143,26 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                 flags.get("max-inflight").map(|s| s.parse()).transpose()?.unwrap_or(4096);
             let deadline_ms: Option<u64> =
                 flags.get("deadline-ms").map(|s| s.parse()).transpose()?;
+            let lane_exec_timeout_ms: u64 = flags
+                .get("lane-exec-timeout-ms")
+                .map(|s| s.parse())
+                .transpose()?
+                .unwrap_or(30_000);
+            let breaker_threshold: u32 =
+                flags.get("breaker-threshold").map(|s| s.parse()).transpose()?.unwrap_or(5);
+            let breaker_cooldown_ms: u64 =
+                flags.get("breaker-cooldown-ms").map(|s| s.parse()).transpose()?.unwrap_or(1000);
             anyhow::ensure!(reactors >= 1, "--reactors must be >= 1 (got 0)");
             anyhow::ensure!(max_inflight >= 1, "--max-inflight must be >= 1 (got 0)");
-            let rt = Arc::new(Runtime::with_lanes(lanes)?);
+            anyhow::ensure!(
+                lane_exec_timeout_ms >= 1,
+                "--lane-exec-timeout-ms must be >= 1 (got 0)"
+            );
+            let rt = Arc::new(Runtime::with_config(RuntimeConfig {
+                lanes,
+                lane_exec_timeout: std::time::Duration::from_millis(lane_exec_timeout_ms),
+                ..Default::default()
+            })?);
             eprintln!(
                 "[bns-serve] {} device lane(s) on '{}', {workers} worker(s), \
                  {reactors} reactor(s), max-inflight {max_inflight} rows, \
@@ -149,7 +174,13 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let engine = Arc::new(Engine::start(
                 store.clone(),
                 rt,
-                EngineConfig { workers, max_inflight_rows: max_inflight, ..Default::default() },
+                EngineConfig {
+                    workers,
+                    max_inflight_rows: max_inflight,
+                    breaker_threshold,
+                    breaker_cooldown_ms,
+                    ..Default::default()
+                },
             )?);
             let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:7878".into());
             let cfg = bns_serve::coordinator::ServerConfig {

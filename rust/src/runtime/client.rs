@@ -42,23 +42,66 @@
 //! tangent of a training step, so distillation training inherits the
 //! zero-allocation steady state — `benches/distill_bench.rs` pins it
 //! per Adam step with the same counting-allocator method.
+//!
+//! # Fault domains & supervision (DESIGN.md §11)
+//!
+//! A lane is the runtime's fault domain. Three mechanisms keep one bad
+//! backend call from wedging the service:
+//!
+//! * **Exec timeout** — `run_into` waits `RuntimeConfig::
+//!   lane_exec_timeout` (CLI `--lane-exec-timeout-ms`) for the lane's
+//!   reply; a stalled backend yields a structured error instead of a
+//!   parked engine worker. The timed-out slot is *dropped*, never pooled:
+//!   its reply channel may still receive a stale reply from the wedged
+//!   lane, and pooling it would hand that stale output to a future call
+//!   (the lane's late send fails against the dropped receiver without
+//!   blocking — rendezvous channel).
+//! * **Supervision & respawn** — timeouts and disconnects enqueue a
+//!   suspicion `(lane, generation)` to the supervisor thread, which
+//!   respawns the lane: fresh thread, fresh `Backend`, generation bumped,
+//!   and every artifact previously compiled on the lane eagerly
+//!   recompiled from its known path. Stale suspicions (generation already
+//!   bumped) are ignored, so one incident triggers one respawn. The old
+//!   thread is left to drain and exit on its own — it may be wedged
+//!   inside a backend call, and its late replies land on dropped
+//!   receivers.
+//! * **Generation rebinding** — an `ExeHandle` caches `(sender,
+//!   executable id)` under the generation it bound them at; when the
+//!   lane's generation moves on, the next `run_into` rebinds against the
+//!   respawned lane (compile-cache hit if the supervisor's recompile
+//!   succeeded, a fresh compile otherwise) off the hot path.
+//!
+//! Recovery preserves numerics: executables are pure functions of their
+//! artifact file, so a respawned lane's recompiled executable is
+//! bit-identical to the original — `tests/chaos.rs` pins this end to
+//! end. Deterministic fault schedules for those tests live in
+//! `fault.rs` (`RuntimeConfig::fault`).
 
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::backend;
+use super::fault::{FaultBackend, FaultPlan};
 use crate::util::sync::lock_ok;
 
 /// Bounded depth of each lane's request channel. Generous: the channel is
 /// a backpressure valve, not a queueing layer — workers block in
 /// `run_into` anyway.
 const LANE_QUEUE_CAP: usize = 256;
+
+/// Default lane exec timeout: far above any sane batch execution, so it
+/// only ever fires on a genuinely wedged backend call.
+const DEFAULT_EXEC_TIMEOUT: Duration = Duration::from_millis(30_000);
+
+/// Compiles (and respawned-backend init) get 10x the exec timeout —
+/// compilation is legitimately much slower than execution.
+const COMPILE_TIMEOUT_FACTOR: u32 = 10;
 
 enum Msg {
     Load {
@@ -92,6 +135,16 @@ struct ExecReply {
     result: Result<()>,
 }
 
+/// A suspicion report to the lane supervisor, or the shutdown sentinel.
+enum SupMsg {
+    /// `run_into` timed out or found the lane disconnected at this
+    /// generation. The supervisor ignores it if the lane has already
+    /// been respawned past `generation`.
+    Suspect { lane: usize, generation: u64 },
+    /// Runtime is dropping: exit the supervisor loop.
+    Shutdown,
+}
+
 /// Per-lane execution counters, shared with the lane thread. `busy_us`
 /// is time spent inside the backend — utilization is `busy_us / wall`.
 #[derive(Default)]
@@ -100,20 +153,76 @@ pub struct LaneStats {
     pub busy_us: AtomicU64,
 }
 
-struct Lane {
-    // Senders are !Sync; the mutex makes the handle shareable.
-    tx: Mutex<mpsc::SyncSender<Msg>>,
-    /// path -> executable id (per-lane compile cache: ids are local to
-    /// the lane's backend instance).
-    cache: Mutex<HashMap<PathBuf, u64>>,
+/// Point-in-time health of one device lane (the `health` op's `lanes`
+/// entries).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneHealth {
+    /// Lane index.
+    pub lane: usize,
+    /// Total execs served (all generations).
+    pub execs: u64,
+    /// Total microseconds inside the backend (all generations).
+    pub busy_us: u64,
+    /// Current generation: 0 at birth, +1 per respawn.
+    pub generation: u64,
+    /// Times this lane has been respawned by the supervisor.
+    pub respawns: u64,
+}
+
+/// The mutable, swap-on-respawn part of a lane: the sender feeding the
+/// current lane thread and the path -> executable-id compile cache (ids
+/// are local to the current generation's backend instance).
+struct LaneState {
+    tx: mpsc::SyncSender<Msg>,
+    cache: HashMap<PathBuf, u64>,
+}
+
+/// One lane's shared identity: survives respawns (the supervisor swaps
+/// the `LaneState` inside, bumping `generation`). Stats accumulate
+/// across generations.
+struct LaneShared {
+    index: usize,
+    state: Mutex<LaneState>,
+    generation: AtomicU64,
+    respawns: AtomicU64,
     stats: Arc<LaneStats>,
+}
+
+/// Runtime construction knobs (see module docs; `Default` = one lane,
+/// 30 s exec timeout, no fault injection).
+pub struct RuntimeConfig {
+    /// Number of device lanes (forced to 1 under `--features pjrt`).
+    pub lanes: usize,
+    /// How long `run_into` waits for a lane's reply before declaring the
+    /// lane wedged (structured error + supervisor respawn).
+    pub lane_exec_timeout: Duration,
+    /// Deterministic fault-injection plan wrapped around every lane's
+    /// backend (chaos testing; `None` in production).
+    pub fault: Option<Arc<FaultPlan>>,
+}
+
+impl Default for RuntimeConfig {
+    fn default() -> Self {
+        RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: DEFAULT_EXEC_TIMEOUT,
+            fault: None,
+        }
+    }
 }
 
 /// Handle to the device lanes. Cheap to share via Arc.
 pub struct Runtime {
-    lanes: Vec<Lane>,
+    lanes: Vec<Arc<LaneShared>>,
     /// Round-robin cursor for pinning new loads to a lane.
     next: AtomicUsize,
+    exec_timeout: Duration,
+    fault: Option<Arc<FaultPlan>>,
+    /// Senders are kept behind a Mutex for shareability (matching the
+    /// lane sender discipline); cloned into each `ExeHandle` so handles
+    /// can file suspicions without going through the Runtime.
+    sup_tx: Mutex<mpsc::SyncSender<SupMsg>>,
+    shutdown: Arc<AtomicBool>,
 }
 
 impl Runtime {
@@ -122,11 +231,20 @@ impl Runtime {
         Self::with_lanes(1)
     }
 
-    /// Runtime with `n` device lanes. Forced to 1 under `--features
-    /// pjrt` (the PJRT types are `!Send` and the bindings assume one
-    /// process-wide client).
+    /// Runtime with `n` device lanes and default supervision knobs.
     pub fn with_lanes(n: usize) -> Result<Runtime> {
-        let n = if cfg!(feature = "pjrt") { 1 } else { n.max(1) };
+        Self::with_config(RuntimeConfig { lanes: n, ..RuntimeConfig::default() })
+    }
+
+    /// Runtime with explicit supervision/fault-injection configuration.
+    /// The lane count is forced to 1 under `--features pjrt` (the PJRT
+    /// types are `!Send` and the bindings assume one process-wide
+    /// client).
+    pub fn with_config(cfg: RuntimeConfig) -> Result<Runtime> {
+        let n = if cfg!(feature = "pjrt") { 1 } else { cfg.lanes.max(1) };
+        // capacity 64: suspicions are tiny and coalescible — a full queue
+        // means respawns are already pending, so droppers just try_send
+        let (sup_tx, sup_rx) = mpsc::sync_channel::<SupMsg>(64);
         let mut lanes = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = mpsc::sync_channel::<Msg>(LANE_QUEUE_CAP);
@@ -134,20 +252,39 @@ impl Runtime {
             let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
             let stats = Arc::new(LaneStats::default());
             let stats_t = stats.clone();
+            let fault_t = cfg.fault.clone();
             std::thread::Builder::new()
                 .name(format!("bns-lane-{i}"))
-                .spawn(move || lane_thread(rx, ready_tx, stats_t))
+                .spawn(move || lane_thread(rx, ready_tx, stats_t, fault_t, i, 0))
                 .context("spawning device lane thread")?;
             ready_rx
                 .recv()
                 .context("device lane died during init")??;
-            lanes.push(Lane {
-                tx: Mutex::new(tx),
-                cache: Mutex::new(HashMap::new()),
+            lanes.push(Arc::new(LaneShared {
+                index: i,
+                state: Mutex::new(LaneState { tx, cache: HashMap::new() }),
+                generation: AtomicU64::new(0),
+                respawns: AtomicU64::new(0),
                 stats,
-            });
+            }));
         }
-        Ok(Runtime { lanes, next: AtomicUsize::new(0) })
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let lanes_s = lanes.clone();
+        let shutdown_s = shutdown.clone();
+        let fault_s = cfg.fault.clone();
+        let timeout_s = cfg.lane_exec_timeout;
+        std::thread::Builder::new()
+            .name("bns-lane-supervisor".to_string())
+            .spawn(move || supervisor_loop(sup_rx, lanes_s, fault_s, shutdown_s, timeout_s))
+            .context("spawning lane supervisor thread")?;
+        Ok(Runtime {
+            lanes,
+            next: AtomicUsize::new(0),
+            exec_timeout: cfg.lane_exec_timeout,
+            fault: cfg.fault,
+            sup_tx: Mutex::new(sup_tx),
+            shutdown,
+        })
     }
 
     pub fn num_lanes(&self) -> usize {
@@ -172,10 +309,38 @@ impl Runtime {
             .collect()
     }
 
+    /// Per-lane health (counters + supervision state), indexed by lane.
+    pub fn lane_health(&self) -> Vec<LaneHealth> {
+        self.lanes
+            .iter()
+            .map(|l| LaneHealth {
+                lane: l.index,
+                execs: l.stats.execs.load(Ordering::Relaxed),
+                busy_us: l.stats.busy_us.load(Ordering::Relaxed),
+                generation: l.generation.load(Ordering::Acquire),
+                respawns: l.respawns.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Total lane respawns across all lanes.
+    pub fn respawns_total(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| l.respawns.load(Ordering::Relaxed))
+            .sum()
+    }
+
+    /// Total faults injected by the configured fault plan (0 when no
+    /// plan is configured).
+    pub fn faults_injected(&self) -> u64 {
+        self.fault.as_ref().map(|p| p.injected()).unwrap_or(0)
+    }
+
     pub fn platform(&self) -> String {
         // capacity 1: the lane sends exactly one platform string
         let (reply, rx) = mpsc::sync_channel(1);
-        let _ = lock_ok(&self.lanes[0].tx).send(Msg::Platform { reply });
+        let _ = lock_ok(&self.lanes[0].state).tx.send(Msg::Platform { reply });
         rx.recv().unwrap_or_else(|_| "unknown".into())
     }
 
@@ -185,32 +350,39 @@ impl Runtime {
             .lanes
             .get(lane)
             .ok_or_else(|| anyhow!("lane {lane} out of range ({} lanes)", self.lanes.len()))?;
-        // hold the cache lock across the compile RPC: concurrent first
+        // hold the state lock across the compile RPC: concurrent first
         // loads of the same artifact must not compile it twice (the
         // loser's executable would be orphaned in the lane's backend —
         // a duplicate HLO compile + held memory under PJRT). The lane
         // thread never takes this lock, so no deadlock; concurrent loads
         // on one lane serialize, which a compile does anyway.
-        let id = {
-            let mut cache = lock_ok(&l.cache);
-            match cache.get(path).copied() {
+        let (id, tx, generation) = {
+            let mut state = lock_ok(&l.state);
+            let id = match state.cache.get(path).copied() {
                 Some(id) => id,
                 None => {
                     // capacity 1: the lane sends exactly one compile result
                     let (reply, rx) = mpsc::sync_channel(1);
-                    lock_ok(&l.tx)
+                    state
+                        .tx
                         .send(Msg::Load { path: path.to_path_buf(), reply })
                         .map_err(|_| anyhow!("device lane gone"))?;
-                    let id = rx.recv().context("device lane gone")??;
-                    cache.insert(path.to_path_buf(), id);
+                    let id = rx
+                        .recv_timeout(self.exec_timeout.saturating_mul(COMPILE_TIMEOUT_FACTOR))
+                        .context("device lane gone or compile timed out")??;
+                    state.cache.insert(path.to_path_buf(), id);
                     id
                 }
-            }
+            };
+            (id, state.tx.clone(), l.generation.load(Ordering::Acquire))
         };
         Ok(ExeHandle {
-            tx: Mutex::new(lock_ok(&l.tx).clone()),
+            shared: l.clone(),
+            sup_tx: Mutex::new(lock_ok(&self.sup_tx).clone()),
+            bound: Mutex::new(Bound { tx, id, generation }),
             pool: Mutex::new(Vec::new()),
-            id,
+            path: path.to_path_buf(),
+            timeout: self.exec_timeout,
             lane,
             batch,
             dim,
@@ -225,6 +397,11 @@ impl Runtime {
 
 impl Drop for Runtime {
     fn drop(&mut self) {
+        // Stop the supervisor first so no further respawns race the
+        // teardown; try_send because a full suspicion queue still drains
+        // (each queued suspect sees the shutdown flag and is skipped).
+        self.shutdown.store(true, Ordering::Relaxed);
+        let _ = lock_ok(&self.sup_tx).try_send(SupMsg::Shutdown);
         // Replace each lane's sender with a disconnected dummy; once every
         // ExeHandle clone is gone too, the lane's recv() errors out and
         // the thread exits. We deliberately do NOT join: an ExeHandle may
@@ -232,7 +409,88 @@ impl Drop for Runtime {
         // thread exits as soon as the last sender drops.
         for lane in &self.lanes {
             let (dummy, _) = mpsc::sync_channel(1);
-            *lock_ok(&lane.tx) = dummy;
+            lock_ok(&lane.state).tx = dummy;
+        }
+    }
+}
+
+/// The lane supervisor: serially processes suspicion reports, respawning
+/// each genuinely-dead lane exactly once per incident (stale generations
+/// are skipped). Exits on the shutdown sentinel, when the runtime sets
+/// the shutdown flag, or when every suspicion sender is gone.
+fn supervisor_loop(
+    rx: mpsc::Receiver<SupMsg>,
+    lanes: Vec<Arc<LaneShared>>,
+    fault: Option<Arc<FaultPlan>>,
+    shutdown: Arc<AtomicBool>,
+    exec_timeout: Duration,
+) {
+    while let Ok(msg) = rx.recv() {
+        let (lane, generation) = match msg {
+            SupMsg::Shutdown => return,
+            SupMsg::Suspect { lane, generation } => (lane, generation),
+        };
+        if shutdown.load(Ordering::Relaxed) {
+            return;
+        }
+        if let Some(shared) = lanes.get(lane) {
+            respawn_lane(shared, generation, fault.clone(), exec_timeout);
+        }
+    }
+}
+
+/// Respawn one lane: fresh thread + backend under a bumped generation,
+/// then eagerly recompile every artifact the old generation had compiled
+/// (so rebinding handles hit the cache instead of paying a compile on
+/// the request path). If the suspicion is stale or the new backend fails
+/// to initialize, the lane is left as-is — callers keep getting
+/// structured errors and a later suspicion retries the respawn.
+fn respawn_lane(
+    shared: &Arc<LaneShared>,
+    suspect_generation: u64,
+    fault: Option<Arc<FaultPlan>>,
+    exec_timeout: Duration,
+) {
+    // Stale suspicion: this incident was already handled. Only the
+    // (single) supervisor thread ever bumps generations, so the check
+    // does not race.
+    if shared.generation.load(Ordering::Acquire) != suspect_generation {
+        return;
+    }
+    let new_generation = suspect_generation + 1;
+    // bounded like the original lane channel: same backpressure valve
+    let (tx, rx) = mpsc::sync_channel::<Msg>(LANE_QUEUE_CAP);
+    // capacity 1: the lane sends exactly one init result
+    let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+    let stats = shared.stats.clone();
+    let lane = shared.index;
+    let spawned = std::thread::Builder::new()
+        .name(format!("bns-lane-{lane}-g{new_generation}"))
+        .spawn(move || lane_thread(rx, ready_tx, stats, fault, lane, new_generation));
+    if spawned.is_err() {
+        return;
+    }
+    match ready_rx.recv_timeout(exec_timeout.saturating_mul(COMPILE_TIMEOUT_FACTOR)) {
+        Ok(Ok(())) => {}
+        _ => return,
+    }
+    let mut state = lock_ok(&shared.state);
+    let old_paths: Vec<PathBuf> = state.cache.drain().map(|(p, _)| p).collect();
+    state.tx = tx;
+    shared.respawns.fetch_add(1, Ordering::Relaxed);
+    shared.generation.store(new_generation, Ordering::Release);
+    // Eager recompile while still holding the state lock: handles that
+    // saw the new generation block in rebind until the cache is warm.
+    // Per-path failures are tolerated — the path just drops out of the
+    // cache and the owning handle's rebind surfaces the compile error.
+    for path in old_paths {
+        // capacity 1: the lane sends exactly one compile result
+        let (reply, rrx) = mpsc::sync_channel(1);
+        if state.tx.send(Msg::Load { path: path.clone(), reply }).is_err() {
+            continue;
+        }
+        if let Ok(Ok(id)) = rrx.recv_timeout(exec_timeout.saturating_mul(COMPILE_TIMEOUT_FACTOR)) {
+            state.cache.insert(path, id);
         }
     }
 }
@@ -261,13 +519,27 @@ impl Default for ExecSlot {
     }
 }
 
+/// The lane binding an `ExeHandle` currently holds: the sender feeding
+/// the lane thread and the backend-local executable id, both valid for
+/// `generation` only. When the lane respawns, `run_into` rebinds.
+struct Bound {
+    tx: mpsc::SyncSender<Msg>,
+    id: u64,
+    generation: u64,
+}
+
 /// A compiled velocity-field executable with the aot.py signature
 /// (x [B,D] f32, t [] f32, w [] f32, labels [B] i32) -> (u [B,D] f32,),
-/// pinned to the device lane that compiled it.
+/// pinned to the device lane that compiled it (surviving that lane's
+/// respawns by rebinding).
 pub struct ExeHandle {
-    tx: Mutex<mpsc::SyncSender<Msg>>,
+    shared: Arc<LaneShared>,
+    sup_tx: Mutex<mpsc::SyncSender<SupMsg>>,
+    bound: Mutex<Bound>,
     pool: Mutex<Vec<ExecSlot>>,
-    id: u64,
+    /// Artifact path, kept for recompiles after a lane respawn.
+    path: PathBuf,
+    timeout: Duration,
     /// Lane this executable is pinned to.
     pub lane: usize,
     pub batch: usize,
@@ -277,7 +549,9 @@ pub struct ExeHandle {
 impl ExeHandle {
     /// Execute on exactly `self.batch` rows, writing the velocities into
     /// `out` (synchronous RPC over pooled buffers; zero heap allocation
-    /// at steady state).
+    /// at steady state). Waits at most the runtime's lane exec timeout:
+    /// a wedged lane yields a structured error (and a supervisor
+    /// respawn) instead of a parked caller.
     pub fn run_into(
         &self,
         x: &[f32],
@@ -295,18 +569,29 @@ impl ExeHandle {
         slot.labels.clear();
         slot.labels.extend_from_slice(labels);
         slot.out.resize(out.len(), 0.0);
-        let msg = Msg::Exec(ExecMsg {
-            id: self.id,
-            batch: self.batch,
-            dim: self.dim,
-            t,
-            w,
-            x: std::mem::take(&mut slot.x),
-            labels: std::mem::take(&mut slot.labels),
-            out: std::mem::take(&mut slot.out),
-            reply: slot.reply_tx.clone(), // bns-lint: allow(hot_path_alloc) — SyncSender clone is an Arc refcount bump, not a heap allocation; perf_layers' counting allocator pins allocs_per_eval at 0
-        });
-        let sent = lock_ok(&self.tx).send(msg);
+        let generation = self.shared.generation.load(Ordering::Acquire);
+        let sent = {
+            let mut bound = lock_ok(&self.bound);
+            if bound.generation != generation {
+                if let Err(e) = self.rebind(&mut bound, generation) {
+                    drop(bound);
+                    lock_ok(&self.pool).push(slot);
+                    return Err(e);
+                }
+            }
+            let msg = Msg::Exec(ExecMsg {
+                id: bound.id,
+                batch: self.batch,
+                dim: self.dim,
+                t,
+                w,
+                x: std::mem::take(&mut slot.x),
+                labels: std::mem::take(&mut slot.labels),
+                out: std::mem::take(&mut slot.out),
+                reply: slot.reply_tx.clone(), // bns-lint: allow(hot_path_alloc) — SyncSender clone is an Arc refcount bump, not a heap allocation; perf_layers' counting allocator pins allocs_per_eval at 0
+            });
+            bound.tx.send(msg)
+        };
         if let Err(mpsc::SendError(msg)) = sent {
             // lane gone: recover the buffers so the slot stays warm
             if let Msg::Exec(m) = msg {
@@ -315,13 +600,32 @@ impl ExeHandle {
                 slot.out = m.out;
             }
             lock_ok(&self.pool).push(slot);
+            self.suspect(generation);
             return Err(anyhow!("device lane gone"));
         }
         // The lane always replies (backend panics are caught and turned
-        // into error replies), so this only fails if the lane died.
-        let reply = match slot.reply_rx.recv() {
+        // into error replies) — unless it died or is wedged inside the
+        // backend, which the timeout converts into a structured error.
+        let reply = match slot.reply_rx.recv_timeout(self.timeout) {
             Ok(r) => r,
-            Err(_) => return Err(anyhow!("device lane dropped request")),
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                // Drop the slot: its reply channel may still receive the
+                // wedged lane's late reply, and pooling it would deliver
+                // stale output to a future call. The late send fails
+                // against the dropped receiver without blocking.
+                drop(slot);
+                self.suspect(generation);
+                return Err(anyhow!(
+                    "device lane {} exec timed out after {:?} (generation {generation})",
+                    self.lane,
+                    self.timeout
+                ));
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                drop(slot);
+                self.suspect(generation);
+                return Err(anyhow!("device lane dropped request"));
+            }
         };
         slot.x = reply.x;
         slot.labels = reply.labels;
@@ -332,6 +636,44 @@ impl ExeHandle {
         }
         lock_ok(&self.pool).push(slot);
         result
+    }
+
+    /// Re-resolve this handle's lane binding after a respawn: fetch the
+    /// current sender and the executable's id on the new backend (cache
+    /// hit if the supervisor's eager recompile succeeded, a synchronous
+    /// compile otherwise). Off the hot path — runs at most once per
+    /// respawn per handle.
+    fn rebind(&self, bound: &mut Bound, generation: u64) -> Result<()> {
+        let mut state = lock_ok(&self.shared.state);
+        let id = match state.cache.get(&self.path).copied() {
+            Some(id) => id,
+            None => {
+                // capacity 1: the lane sends exactly one compile result
+                let (reply, rx) = mpsc::sync_channel(1);
+                state
+                    .tx
+                    .send(Msg::Load { path: self.path.clone(), reply })
+                    .map_err(|_| anyhow!("device lane gone (rebind)"))?;
+                let id = rx
+                    .recv_timeout(self.timeout.saturating_mul(COMPILE_TIMEOUT_FACTOR))
+                    .context("device lane gone or recompile timed out (rebind)")??;
+                state.cache.insert(self.path.clone(), id);
+                id
+            }
+        };
+        bound.tx = state.tx.clone();
+        bound.id = id;
+        // read the generation back under the state lock: if another
+        // respawn landed while we were rebinding, the next run_into
+        // notices the mismatch and rebinds again
+        bound.generation = self.shared.generation.load(Ordering::Acquire);
+        Ok(())
+    }
+
+    /// File a suspicion with the lane supervisor. `try_send`: a full
+    /// queue means respawns are already pending, so dropping is safe.
+    fn suspect(&self, generation: u64) {
+        let _ = lock_ok(&self.sup_tx).try_send(SupMsg::Suspect { lane: self.lane, generation });
     }
 
     /// Allocating convenience wrapper around `run_into`.
@@ -346,8 +688,11 @@ fn lane_thread(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::SyncSender<Result<()>>,
     stats: Arc<LaneStats>,
+    fault: Option<Arc<FaultPlan>>,
+    lane: usize,
+    generation: u64,
 ) {
-    let mut be = match backend::new_cpu() {
+    let be = match backend::new_cpu() {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -356,6 +701,13 @@ fn lane_thread(
             let _ = ready.send(Err(e));
             return;
         }
+    };
+    // fault injection wraps the backend per (lane, generation) so chaos
+    // schedules can target calls precisely and respawned lanes get a
+    // fresh fault stream
+    let mut be: Box<dyn backend::Backend> = match fault {
+        Some(plan) => Box::new(FaultBackend::new(be, plan, lane, generation)),
+        None => be,
     };
     while let Ok(msg) = rx.recv() {
         match msg {
@@ -387,6 +739,7 @@ fn lane_thread(
 #[cfg(all(test, not(feature = "pjrt")))]
 mod tests {
     use super::*;
+    use crate::runtime::fault::{FaultConfig, FaultKind, FaultSpec};
 
     fn stub_artifact(tag: &str, body: &str) -> (PathBuf, PathBuf) {
         let dir = std::env::temp_dir().join(format!("bns-client-{}-{tag}", std::process::id()));
@@ -470,6 +823,92 @@ mod tests {
         let rt = Runtime::cpu().unwrap();
         let err = rt.load_on(0, &path, 1, 1).unwrap_err();
         assert!(err.to_string().contains("pjrt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fault_free_plan_is_a_noop() {
+        let (dir, path) = stub_artifact("nofault", r#"{"bns_stub_field": {"k": 2.0, "c": 1.0}}"#);
+        let rt = Runtime::with_config(RuntimeConfig {
+            fault: Some(FaultPlan::none()),
+            ..RuntimeConfig::default()
+        })
+        .unwrap();
+        let exe = rt.load_on(0, &path, 1, 2).unwrap();
+        let out = exe.run(&[1.0, -1.0], 0.0, 0.0, &[0]).unwrap();
+        assert_eq!(out, vec![3.0, -1.0]);
+        assert_eq!(rt.faults_injected(), 0);
+        assert_eq!(rt.respawns_total(), 0);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn transient_error_and_panic_do_not_kill_the_lane() {
+        let (dir, path) = stub_artifact("transient", r#"{"bns_stub_field": {"k": 1.0, "c": 0.0}}"#);
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            schedule: vec![
+                FaultSpec { lane: Some(0), call: 0, kind: FaultKind::ExecError },
+                FaultSpec { lane: Some(0), call: 1, kind: FaultKind::Panic },
+            ],
+            ..FaultConfig::default()
+        }));
+        let rt = Runtime::with_config(RuntimeConfig {
+            fault: Some(plan),
+            ..RuntimeConfig::default()
+        })
+        .unwrap();
+        let exe = rt.load_on(0, &path, 1, 1).unwrap();
+        let mut out = [0f32; 1];
+        // call 0: injected transient error, surfaced as a structured Err
+        let e = exe.run_into(&[5.0], 0.0, 0.0, &[0], &mut out).unwrap_err();
+        assert!(e.to_string().contains("injected transient exec error"), "{e}");
+        // call 1: injected panic, caught by the lane thread
+        let e = exe.run_into(&[5.0], 0.0, 0.0, &[0], &mut out).unwrap_err();
+        assert!(e.to_string().contains("backend panicked during exec"), "{e}");
+        // call 2: lane is alive and correct; neither fault caused a respawn
+        exe.run_into(&[5.0], 0.0, 0.0, &[0], &mut out).unwrap();
+        assert_eq!(out, [5.0]);
+        assert_eq!(rt.respawns_total(), 0);
+        assert_eq!(rt.faults_injected(), 2);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn wedged_lane_times_out_respawns_and_recovers_bit_identically() {
+        let (dir, path) = stub_artifact("wedge", r#"{"bns_stub_field": {"k": -0.5, "c": 0.25}}"#);
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            schedule: vec![FaultSpec { lane: Some(0), call: 1, kind: FaultKind::Wedge }],
+            wedge_ms: 400,
+            ..FaultConfig::default()
+        }));
+        let rt = Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(100),
+            fault: Some(plan),
+        })
+        .unwrap();
+        let exe = rt.load_on(0, &path, 1, 2).unwrap();
+        let x = [2.0f32, -4.0];
+        let baseline = exe.run(&x, 0.0, 0.0, &[0]).unwrap(); // call 0: clean
+        // call 1: wedge — run_into must return (structured) instead of hanging
+        let t0 = Instant::now();
+        let mut out = [0f32; 2];
+        let e = exe.run_into(&x, 0.0, 0.0, &[0], &mut out).unwrap_err();
+        assert!(e.to_string().contains("timed out"), "{e}");
+        assert!(t0.elapsed() < Duration::from_millis(350), "timeout must beat the wedge");
+        // the supervisor respawns the lane under a bumped generation
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while rt.lane_health()[0].generation == 0 {
+            assert!(Instant::now() < deadline, "lane was never respawned");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let h = rt.lane_health()[0];
+        assert_eq!(h.generation, 1);
+        assert_eq!(h.respawns, 1);
+        // service restored, bit-identical to the pre-fault output
+        let after = exe.run(&x, 0.0, 0.0, &[0]).unwrap();
+        assert_eq!(after, baseline, "respawned lane must reproduce exactly");
+        assert_eq!(rt.respawns_total(), 1);
         std::fs::remove_dir_all(&dir).ok();
     }
 }

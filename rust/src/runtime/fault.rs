@@ -1,0 +1,388 @@
+//! Deterministic fault injection for the device-lane runtime.
+//!
+//! [`FaultBackend`] wraps any [`Backend`] and injects failures according
+//! to a seeded [`FaultPlan`]: transient exec errors, backend panics,
+//! latency spikes (stalls), and wedge-forever hangs — each decided
+//! purely from `(seed, lane, generation, call_index)`, so a chaos run is
+//! exactly reproducible and a respawned lane (bumped generation) does
+//! not replay the identical fault stream that killed its predecessor.
+//!
+//! Two knobs drive injection:
+//!
+//! * **Probabilistic rates** (`error_per_mille` etc.): a hash of the
+//!   coordinates picks a fault class per exec call. Deterministic, but
+//!   statistically shaped — good for soak-style chaos tests.
+//! * **Explicit schedule** ([`FaultSpec`]): "lane 0, call 3 → Wedge".
+//!   Each entry fires at most once, for surgical scenarios (kill exactly
+//!   the second exec of lane 1).
+//!
+//! `max_faults` caps total injections so every schedule converges: after
+//! the budget is spent the backend behaves perfectly, which is what lets
+//! chaos tests assert bit-identical recovery against a fault-free run.
+//!
+//! The plan is `Send + Sync` (shared across lane threads via `Arc`); the
+//! wrapper itself is constructed inside each lane thread around that
+//! lane's own backend, preserving the `Backend: !Send` contract.
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use super::backend::Backend;
+
+/// What kind of failure to inject on a given exec call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Return a transient `Err` from `exec_into` (retryable).
+    ExecError,
+    /// Panic inside the backend (exercises the lane's `catch_unwind`).
+    Panic,
+    /// Sleep `stall_ms`, then execute normally (latency spike; output
+    /// is still correct).
+    Stall,
+    /// Sleep `wedge_ms` — chosen far above the lane exec timeout in
+    /// tests — then return an error. Models a wedged device call: the
+    /// caller times out and the supervisor respawns the lane long
+    /// before the sleeping thread wakes up.
+    Wedge,
+}
+
+/// One explicit schedule entry: inject `kind` on the `call`-th exec
+/// (0-based, per lane thread lifetime) of lane `lane` (`None` = any
+/// lane). Fires at most once.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Restrict to one lane index; `None` matches every lane.
+    pub lane: Option<usize>,
+    /// 0-based exec-call index within the lane thread's lifetime.
+    /// Respawned lanes restart their call counter at 0 but carry a
+    /// bumped generation, so a spec written against generation 0 does
+    /// not re-fire after respawn (entries are one-shot anyway).
+    pub call: u64,
+    /// The failure to inject.
+    pub kind: FaultKind,
+}
+
+/// Configuration of a deterministic fault schedule. `Default` is the
+/// all-zero config: no faults, a pure pass-through wrapper.
+#[derive(Debug, Clone, Default)]
+pub struct FaultConfig {
+    /// Seed mixed into every probabilistic decision.
+    pub seed: u64,
+    /// Per-mille (0..=1000) probability of [`FaultKind::ExecError`].
+    pub error_per_mille: u32,
+    /// Per-mille probability of [`FaultKind::Panic`].
+    pub panic_per_mille: u32,
+    /// Per-mille probability of [`FaultKind::Stall`].
+    pub stall_per_mille: u32,
+    /// Sleep duration for [`FaultKind::Stall`] injections, in ms.
+    pub stall_ms: u64,
+    /// Sleep duration for [`FaultKind::Wedge`] injections, in ms. Must
+    /// stay finite (tests pick a few hundred ms, above the lane exec
+    /// timeout) so wedged threads eventually exit and tests terminate.
+    pub wedge_ms: u64,
+    /// Hard cap on total injected faults across all lanes and
+    /// generations; `None` = unlimited. Chaos tests set this so the
+    /// system provably converges to fault-free behavior.
+    pub max_faults: Option<u64>,
+    /// Explicit one-shot entries, checked before the probabilistic
+    /// rates.
+    pub schedule: Vec<FaultSpec>,
+}
+
+/// A shared, thread-safe fault decision engine built from a
+/// [`FaultConfig`]. One plan serves every lane (and every respawned
+/// generation) of a runtime.
+pub struct FaultPlan {
+    cfg: FaultConfig,
+    /// One-shot latches, parallel to `cfg.schedule`.
+    fired: Vec<AtomicBool>,
+    injected: AtomicU64,
+}
+
+/// splitmix64 finalizer: a cheap, well-mixed hash for turning fault
+/// coordinates into an independent decision stream.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Build a plan from a config.
+    pub fn new(cfg: FaultConfig) -> FaultPlan {
+        let fired = cfg.schedule.iter().map(|_| AtomicBool::new(false)).collect();
+        FaultPlan { cfg, fired, injected: AtomicU64::new(0) }
+    }
+
+    /// A pass-through plan that never injects anything.
+    pub fn none() -> Arc<FaultPlan> {
+        Arc::new(FaultPlan::new(FaultConfig::default()))
+    }
+
+    /// Total faults injected so far (all lanes, all generations).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// The configured stall duration.
+    fn stall(&self) -> Duration {
+        Duration::from_millis(self.cfg.stall_ms)
+    }
+
+    /// The configured wedge duration.
+    fn wedge(&self) -> Duration {
+        Duration::from_millis(self.cfg.wedge_ms)
+    }
+
+    /// Decide whether the exec call at `(lane, generation, call)` should
+    /// fault, charging the `max_faults` budget when it does. Explicit
+    /// schedule entries win over probabilistic rates and fire at most
+    /// once each. Pure in its coordinates (modulo the one-shot latches
+    /// and the budget), so identical runs inject identical faults.
+    pub fn decide(&self, lane: usize, generation: u64, call: u64) -> Option<FaultKind> {
+        let kind = self.pick(lane, generation, call)?;
+        // charge the global budget; back out if it is exhausted
+        if let Some(cap) = self.cfg.max_faults {
+            if self.injected.fetch_add(1, Ordering::Relaxed) >= cap {
+                self.injected.fetch_sub(1, Ordering::Relaxed);
+                return None;
+            }
+        } else {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+        }
+        Some(kind)
+    }
+
+    /// The raw schedule/rate decision, before budget accounting.
+    fn pick(&self, lane: usize, generation: u64, call: u64) -> Option<FaultKind> {
+        for (i, spec) in self.cfg.schedule.iter().enumerate() {
+            let lane_match = spec.lane.unwrap_or(lane) == lane;
+            if lane_match && spec.call == call && generation == 0 {
+                // one-shot: first caller to flip the latch wins
+                if !self.fired[i].swap(true, Ordering::Relaxed) {
+                    return Some(spec.kind);
+                }
+            }
+        }
+        let total =
+            self.cfg.error_per_mille + self.cfg.panic_per_mille + self.cfg.stall_per_mille;
+        if total == 0 {
+            return None;
+        }
+        // mix generation in so a respawned lane sees a fresh stream —
+        // otherwise call 0 of every generation could fault forever
+        let h = mix(self
+            .cfg
+            .seed
+            .wrapping_mul(0x0100_0000_01b3)
+            .wrapping_add((lane as u64) << 40)
+            .wrapping_add(generation << 20)
+            .wrapping_add(call));
+        let roll = (h % 1000) as u32;
+        if roll < self.cfg.error_per_mille {
+            Some(FaultKind::ExecError)
+        } else if roll < self.cfg.error_per_mille + self.cfg.panic_per_mille {
+            Some(FaultKind::Panic)
+        } else if roll < total {
+            Some(FaultKind::Stall)
+        } else {
+            None
+        }
+    }
+}
+
+/// A [`Backend`] wrapper that injects the plan's faults into `exec_into`
+/// calls. `platform`/`load` always delegate — fault domains are exec
+/// calls, the unit the retry/respawn machinery recovers.
+pub struct FaultBackend {
+    inner: Box<dyn Backend>,
+    plan: Arc<FaultPlan>,
+    lane: usize,
+    generation: u64,
+    calls: u64,
+}
+
+impl FaultBackend {
+    /// Wrap `inner`, attributing faults to `(lane, generation)`.
+    pub fn new(
+        inner: Box<dyn Backend>,
+        plan: Arc<FaultPlan>,
+        lane: usize,
+        generation: u64,
+    ) -> FaultBackend {
+        FaultBackend { inner, plan, lane, generation, calls: 0 }
+    }
+}
+
+impl Backend for FaultBackend {
+    fn platform(&self) -> String {
+        self.inner.platform()
+    }
+
+    fn load(&mut self, path: &Path) -> Result<u64> {
+        self.inner.load(path)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_into(
+        &mut self,
+        id: u64,
+        batch: usize,
+        dim: usize,
+        x: &[f32],
+        t: f32,
+        w: f32,
+        labels: &[i32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        let call = self.calls;
+        self.calls += 1;
+        match self.plan.decide(self.lane, self.generation, call) {
+            None => self.inner.exec_into(id, batch, dim, x, t, w, labels, out),
+            Some(FaultKind::ExecError) => Err(anyhow::anyhow!(
+                "injected transient exec error (lane {}, generation {}, call {call})",
+                self.lane,
+                self.generation
+            )),
+            Some(FaultKind::Panic) => {
+                // panic_any is a plain function call: the injected panic
+                // is real (the lane's catch_unwind converts it into an
+                // error reply) without putting a panic macro in
+                // non-test runtime code
+                std::panic::panic_any("injected backend panic")
+            }
+            Some(FaultKind::Stall) => {
+                std::thread::sleep(self.plan.stall());
+                self.inner.exec_into(id, batch, dim, x, t, w, labels, out)
+            }
+            Some(FaultKind::Wedge) => {
+                std::thread::sleep(self.plan.wedge());
+                Err(anyhow::anyhow!(
+                    "injected wedge (lane {}, generation {}, call {call})",
+                    self.lane,
+                    self.generation
+                ))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_never_faults() {
+        let plan = FaultPlan::new(FaultConfig::default());
+        for lane in 0..4 {
+            for call in 0..1000 {
+                assert_eq!(plan.decide(lane, 0, call), None);
+            }
+        }
+        assert_eq!(plan.injected(), 0);
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_generation_sensitive() {
+        let cfg = FaultConfig {
+            seed: 7,
+            error_per_mille: 100,
+            panic_per_mille: 50,
+            stall_per_mille: 50,
+            ..FaultConfig::default()
+        };
+        let a = FaultPlan::new(cfg.clone());
+        let b = FaultPlan::new(cfg.clone());
+        let stream =
+            |p: &FaultPlan, g: u64| (0..500).map(|c| p.pick(0, g, c)).collect::<Vec<_>>();
+        // identical plans produce identical streams
+        assert_eq!(stream(&a, 0), stream(&b, 0));
+        // a bumped generation produces a different stream (so a respawn
+        // does not deterministically re-hit the same faults)
+        assert_ne!(stream(&a, 0), stream(&a, 1));
+        // rates are roughly honored: ~20% of 500 calls fault
+        let n = stream(&b, 0).iter().flatten().count();
+        assert!((50..=150).contains(&n), "faulted {n}/500");
+    }
+
+    #[test]
+    fn schedule_entries_fire_exactly_once() {
+        let cfg = FaultConfig {
+            schedule: vec![
+                FaultSpec { lane: Some(1), call: 3, kind: FaultKind::Wedge },
+                FaultSpec { lane: None, call: 0, kind: FaultKind::ExecError },
+            ],
+            ..FaultConfig::default()
+        };
+        let plan = FaultPlan::new(cfg);
+        // wildcard-lane entry fires on the first matching call only
+        assert_eq!(plan.decide(0, 0, 0), Some(FaultKind::ExecError));
+        assert_eq!(plan.decide(2, 0, 0), None);
+        // lane-pinned entry: wrong lane never fires it
+        assert_eq!(plan.decide(0, 0, 3), None);
+        assert_eq!(plan.decide(1, 0, 3), Some(FaultKind::Wedge));
+        assert_eq!(plan.decide(1, 0, 3), None);
+        // schedule entries never fire on respawned generations
+        let plan2 = FaultPlan::new(FaultConfig {
+            schedule: vec![FaultSpec { lane: None, call: 0, kind: FaultKind::Panic }],
+            ..FaultConfig::default()
+        });
+        assert_eq!(plan2.decide(0, 1, 0), None);
+        assert_eq!(plan2.decide(0, 0, 0), Some(FaultKind::Panic));
+        assert_eq!(plan.injected(), 2);
+    }
+
+    #[test]
+    fn max_faults_caps_injection() {
+        let plan = FaultPlan::new(FaultConfig {
+            seed: 1,
+            error_per_mille: 1000, // every call would fault
+            max_faults: Some(3),
+            ..FaultConfig::default()
+        });
+        let n = (0..100).filter(|&c| plan.decide(0, 0, c).is_some()).count();
+        assert_eq!(n, 3);
+        assert_eq!(plan.injected(), 3);
+        // after the budget is spent the plan is a no-op forever
+        assert_eq!(plan.decide(0, 5, 0), None);
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn fault_backend_injects_and_counts() {
+        use crate::runtime::backend;
+        let dir = std::env::temp_dir().join(format!("bns-fault-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let art = dir.join("f.json");
+        std::fs::write(
+            &art,
+            r#"{"bns_stub_field": {"k": -1.0, "c": 0.5, "label_scale": 0.0, "t_scale": 0.0}}"#,
+        )
+        .unwrap();
+
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            schedule: vec![FaultSpec { lane: Some(0), call: 1, kind: FaultKind::ExecError }],
+            ..FaultConfig::default()
+        }));
+        let mut be = FaultBackend::new(backend::new_cpu().unwrap(), plan.clone(), 0, 0);
+        assert_eq!(be.platform(), "stub-cpu");
+        let id = be.load(&art).unwrap();
+        let x = [2.0f32, 4.0];
+        let mut out = [0.0f32; 2];
+        // call 0: clean
+        be.exec_into(id, 2, 1, &x, 0.0, 1.0, &[0, 0], &mut out).unwrap();
+        assert_eq!(out, [-1.5, -3.5]);
+        // call 1: injected error
+        let err = be.exec_into(id, 2, 1, &x, 0.0, 1.0, &[0, 0], &mut out).unwrap_err();
+        assert!(err.to_string().contains("injected transient exec error"), "{err}");
+        // call 2: clean again
+        be.exec_into(id, 2, 1, &x, 0.0, 1.0, &[0, 0], &mut out).unwrap();
+        assert_eq!(plan.injected(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -4,8 +4,10 @@
 pub mod artifact;
 pub mod backend;
 pub mod client;
+pub mod fault;
 pub mod model_field;
 
 pub use artifact::{ArtifactStore, FdSynth, ModelInfo, SolverArtifact};
-pub use client::{ExeHandle, LaneStats, Runtime};
+pub use client::{ExeHandle, LaneHealth, LaneStats, Runtime, RuntimeConfig};
+pub use fault::{FaultBackend, FaultConfig, FaultKind, FaultPlan, FaultSpec};
 pub use model_field::{LoadedModel, ModelField};

@@ -1,0 +1,78 @@
+//! Crash-safe small-file persistence.
+//!
+//! `std::fs::write` truncates the destination before writing, so a crash
+//! (or an injected fault) mid-write leaves a corrupt file where a valid
+//! one used to be — a poisoned teacher cache or artifact manifest then
+//! breaks every later run. [`write_atomic`] writes to a sibling
+//! temporary and renames over the target: on POSIX the rename is atomic,
+//! so readers observe either the old contents or the new, never a
+//! truncated mix (DESIGN.md §11).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write `contents` to `path` atomically: the bytes land in a sibling
+/// `<name>.tmp.<pid>` first and are renamed into place, so a crash at
+/// any point leaves either the previous file or the complete new one.
+///
+/// The temporary lives in the same directory as `path` (renames across
+/// filesystems are not atomic). A leftover temporary from a crashed
+/// earlier run is simply overwritten. Not safe against *concurrent*
+/// writers of the same path from one process — callers serialize, as the
+/// teacher cache and manifest writers already do.
+pub fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let dir = path.parent().filter(|d| !d.as_os_str().is_empty());
+    let file = path
+        .file_name()
+        .with_context(|| format!("atomic write target {} has no file name", path.display()))?;
+    let mut tmp_name = file.to_os_string();
+    tmp_name.push(format!(".tmp.{}", std::process::id()));
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    std::fs::write(&tmp, contents)
+        .with_context(|| format!("writing temporary {}", tmp.display()))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // don't leave the temporary behind on a failed rename
+        let _ = std::fs::remove_file(&tmp);
+        return Err(anyhow::Error::new(e)
+            .context(format!("renaming {} into {}", tmp.display(), path.display())));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("bns-fsio-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = tmpdir("replace");
+        let p = dir.join("cache.json");
+        write_atomic(&p, "{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":1}");
+        write_atomic(&p, "{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":2}");
+        // no temporary left behind
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "{leftovers:?}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_name_is_an_error() {
+        assert!(write_atomic(Path::new("/"), "x").is_err());
+    }
+}

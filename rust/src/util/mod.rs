@@ -3,6 +3,7 @@
 //! See DESIGN.md §3 (substitution table) and §4 (inventory).
 
 pub mod fft;
+pub mod fsio;
 pub mod json;
 pub mod linalg;
 pub mod rng;

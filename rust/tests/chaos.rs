@@ -1,0 +1,504 @@
+//! Chaos suite (DESIGN.md §11): deterministic fault injection against
+//! the full engine and the TCP serving plane. Every test pins the
+//! recovery invariants, not just survival:
+//!
+//! * no request ever hangs — each gets exactly one structured reply;
+//! * `inflight_rows` drains to 0 once everything is settled;
+//! * lane respawn restores service under a bumped generation;
+//! * successful samples are bit-identical to a fault-free run (sampling
+//!   is pure in (seed, labels, solver), and recovery must not change
+//!   numerics).
+//!
+//! Runs on the stub device backend only (fault injection wraps it).
+#![cfg(not(feature = "pjrt"))]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use bns_serve::bench_util::{stub_store, StubModel};
+use bns_serve::coordinator::request::Priority;
+use bns_serve::coordinator::{
+    Engine, EngineConfig, SampleRequest, Server, ServerConfig, SolverSpec,
+};
+use bns_serve::runtime::{
+    ArtifactStore, FaultConfig, FaultKind, FaultPlan, FaultSpec, Runtime, RuntimeConfig,
+};
+use bns_serve::util::json::Json;
+
+const MODEL: &str = "chaos_stub";
+
+fn chaos_store(tag: &str) -> (Arc<ArtifactStore>, std::path::PathBuf) {
+    stub_store(
+        &format!("chaos-{tag}"),
+        &[StubModel {
+            name: MODEL,
+            dim: 4,
+            num_classes: 4,
+            forwards_per_eval: 1,
+            k: -0.5,
+            c: 0.25,
+            label_scale: 0.1,
+            cost: 1,
+            buckets: &[2, 4],
+        }],
+    )
+    .expect("stub store")
+}
+
+fn solver() -> SolverSpec {
+    SolverSpec::Baseline { name: "euler".into(), nfe: 2 }
+}
+
+/// The fault-free reference output for `seed` — a dedicated clean
+/// engine, because recovered outputs must match it bit for bit.
+fn baseline(tag: &str, seed: u64) -> Vec<f32> {
+    let (store, dir) = chaos_store(&format!("base-{tag}"));
+    let rt = Arc::new(Runtime::cpu().expect("runtime"));
+    let engine = Engine::start(store, rt, EngineConfig::default()).expect("engine");
+    let out = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), seed)
+        .expect("baseline sample");
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+    out.samples
+}
+
+#[test]
+fn transient_exec_fault_retries_to_bit_identical_success() {
+    let (store, dir) = chaos_store("transient");
+    // the first exec (whenever it happens) fails once, then the backend
+    // is clean forever — robust to call-index layout
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 1,
+        error_per_mille: 1000,
+        max_faults: Some(1),
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig { fault: Some(plan), ..Default::default() })
+            .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt.clone(),
+        EngineConfig { workers: 1, exec_retries: 1, retry_backoff_ms: 1, ..Default::default() },
+    )
+    .expect("engine");
+    let out = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 7)
+        .expect("retry must recover the request");
+    assert_eq!(out.samples, baseline("transient", 7), "retried output must be bit-identical");
+    assert_eq!(
+        engine.metrics.exec_retries.load(std::sync::atomic::Ordering::SeqCst),
+        1,
+        "exactly one retry"
+    );
+    assert_eq!(rt.faults_injected(), 1);
+    assert_eq!(rt.respawns_total(), 0, "a transient error must not respawn the lane");
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn backend_panic_is_contained_and_retried() {
+    let (store, dir) = chaos_store("panic");
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 2,
+        panic_per_mille: 1000,
+        max_faults: Some(1),
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig { fault: Some(plan), ..Default::default() })
+            .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt.clone(),
+        EngineConfig { workers: 1, exec_retries: 1, retry_backoff_ms: 1, ..Default::default() },
+    )
+    .expect("engine");
+    let out = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 9)
+        .expect("a caught panic must be retryable");
+    assert_eq!(out.samples, baseline("panic", 9));
+    assert_eq!(rt.respawns_total(), 0, "catch_unwind keeps the lane alive");
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn stall_is_latency_only_never_an_error() {
+    let (store, dir) = chaos_store("stall");
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 3,
+        stall_per_mille: 1000,
+        stall_ms: 50, // well under the (default 30s) lane exec timeout
+        max_faults: Some(2),
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig { fault: Some(plan), ..Default::default() })
+            .expect("runtime"),
+    );
+    let engine =
+        Engine::start(store, rt.clone(), EngineConfig { workers: 1, ..Default::default() })
+            .expect("engine");
+    let out = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 5)
+        .expect("stalls must not fail requests");
+    assert_eq!(out.samples, baseline("stall", 5), "a stalled exec still computes correctly");
+    assert_eq!(rt.faults_injected(), 2);
+    assert_eq!(rt.respawns_total(), 0);
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn wedged_lane_respawns_and_engine_service_recovers_bit_identically() {
+    let (store, dir) = chaos_store("wedge");
+    // request 1 (euler nfe=2, one bucket) consumes exec calls 0 and 1;
+    // call 2 — request 2's first exec — wedges past the lane timeout
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        schedule: vec![FaultSpec { lane: Some(0), call: 2, kind: FaultKind::Wedge }],
+        wedge_ms: 400,
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(100),
+            fault: Some(plan),
+        })
+        .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt.clone(),
+        EngineConfig {
+            workers: 1,
+            exec_retries: 1,
+            retry_backoff_ms: 1,
+            breaker_threshold: 0, // isolate respawn behavior from the breaker
+            ..Default::default()
+        },
+    )
+    .expect("engine");
+
+    let before = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 7)
+        .expect("pre-fault request");
+    assert_eq!(before.samples, baseline("wedge", 7));
+
+    // request 2 hits the wedge: it must terminate promptly either way —
+    // Ok if its retry landed on the respawned lane in time, structured
+    // Err otherwise — and never hang
+    let t0 = Instant::now();
+    match engine.sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 7) {
+        Ok(out) => assert_eq!(out.samples, before.samples, "recovered retry must match"),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("internal"), "terminal error must be structured: {msg}");
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "wedge must not hang the caller");
+
+    // the supervisor respawns the lane under generation 1
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while rt.respawns_total() == 0 {
+        assert!(Instant::now() < deadline, "lane was never respawned");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let h = rt.lane_health()[0];
+    assert_eq!((h.generation, h.respawns), (1, 1));
+
+    // service is restored and numerics are unchanged
+    let after = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 7)
+        .expect("post-respawn request");
+    assert_eq!(after.samples, before.samples, "respawned lane must reproduce exactly");
+    assert_eq!(
+        engine.metrics.inflight_rows.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "all rows settled"
+    );
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn circuit_breaker_opens_then_half_open_probe_closes() {
+    let (store, dir) = chaos_store("breaker");
+    // the first two execs fail (budget 2), then the backend is clean:
+    // with exec_retries=0 that is two consecutive failed batches
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 4,
+        error_per_mille: 1000,
+        max_faults: Some(2),
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig { fault: Some(plan), ..Default::default() })
+            .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt,
+        EngineConfig {
+            workers: 1,
+            exec_retries: 0,
+            breaker_threshold: 2,
+            breaker_cooldown_ms: 200,
+            ..Default::default()
+        },
+    )
+    .expect("engine");
+
+    for i in 0..2 {
+        let e = engine
+            .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 11)
+            .expect_err("injected failure must surface");
+        assert!(e.to_string().contains("internal"), "request {i}: {e}");
+    }
+    assert_eq!(
+        engine.metrics.breaker_open.load(std::sync::atomic::Ordering::SeqCst),
+        1,
+        "second consecutive failure trips the breaker once"
+    );
+    // open breaker: immediate structured unavailable, backend untouched
+    let e = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 11)
+        .expect_err("open breaker must reject");
+    assert!(e.to_string().contains("unavailable"), "{e}");
+
+    // after the cooldown one half-open probe runs, succeeds (fault
+    // budget is spent), and closes the breaker
+    std::thread::sleep(Duration::from_millis(250));
+    let probe = engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 11)
+        .expect("half-open probe must close the breaker");
+    assert_eq!(probe.samples, baseline("breaker", 11), "probe output must be bit-identical");
+    let health = engine.health_json().to_string();
+    assert!(health.contains("\"state\":\"closed\""), "{health}");
+    // and normal service continues
+    engine
+        .sample_blocking(MODEL, vec![0, 1], 0.0, solver(), 12)
+        .expect("closed breaker serves normally");
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Soak: a mixed fault schedule (transient errors, panics, stalls, one
+/// wedge) over many concurrent requests. Every admitted request settles
+/// exactly once and the in-flight gauge drains to zero.
+#[test]
+fn chaos_soak_settles_every_request_exactly_once() {
+    use std::collections::HashSet;
+    let (store, dir) = chaos_store("soak");
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        seed: 0xc4a05,
+        error_per_mille: 80,
+        panic_per_mille: 40,
+        stall_per_mille: 40,
+        stall_ms: 5,
+        wedge_ms: 200,
+        max_faults: Some(12),
+        schedule: vec![FaultSpec { lane: Some(0), call: 5, kind: FaultKind::Wedge }],
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(50),
+            fault: Some(plan),
+        })
+        .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt.clone(),
+        EngineConfig {
+            workers: 2,
+            exec_retries: 1,
+            retry_backoff_ms: 1,
+            breaker_threshold: 4,
+            breaker_cooldown_ms: 50,
+            ..Default::default()
+        },
+    )
+    .expect("engine");
+
+    let (reply, rx) = mpsc::channel();
+    let mut admitted: HashSet<u64> = HashSet::new();
+    for i in 0..30u64 {
+        let req = SampleRequest {
+            id: 0,
+            model: MODEL.to_string(),
+            labels: vec![(i % 4) as i32; 2],
+            guidance: 0.0,
+            solver: solver(),
+            seed: i,
+            x0: None,
+            enqueued_at: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            progress: None,
+            reply: reply.clone(),
+        };
+        if let Ok(id) = engine.try_submit(req) {
+            admitted.insert(id);
+        }
+    }
+    drop(reply);
+    assert!(!admitted.is_empty());
+
+    let mut seen: HashSet<u64> = HashSet::new();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while seen.len() < admitted.len() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        assert!(remaining > Duration::ZERO, "soak timed out with {} settled", seen.len());
+        let resp = rx.recv_timeout(remaining).expect("reply channel died early");
+        assert!(admitted.contains(&resp.id), "unadmitted id {}", resp.id);
+        assert!(seen.insert(resp.id), "duplicate reply for {}", resp.id);
+    }
+    assert_eq!(
+        engine.metrics.inflight_rows.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "inflight_rows must drain to 0"
+    );
+    engine.shutdown();
+    assert!(rx.try_recv().is_err(), "no reply may arrive after full settlement");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// TCP plane
+// ---------------------------------------------------------------------------
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        w.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Client { w, r }
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+        let mut resp = String::new();
+        let n = self.r.read_line(&mut resp).expect("read response");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(&resp).unwrap_or_else(|e| panic!("bad response json: {e} in {resp:?}"))
+    }
+}
+
+#[test]
+fn health_op_reports_lanes_and_breakers_over_tcp() {
+    let (store, dir) = chaos_store("tcp-health");
+    let rt = Arc::new(Runtime::cpu().expect("runtime"));
+    let engine =
+        Arc::new(Engine::start(store.clone(), rt, EngineConfig::default()).expect("engine"));
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default(), engine.clone(), store)
+        .expect("bind");
+    let mut c = Client::connect(server.local_addr());
+    let h = c.roundtrip("{\"op\":\"health\",\"tag\":\"t1\"}");
+    assert_eq!(h.get("ok").as_bool(), Some(true), "{h:?}");
+    assert_eq!(h.get("tag").as_str(), Some("t1"), "tag echoed");
+    let lanes = h.get("lanes").as_arr().expect("lanes array");
+    assert_eq!(lanes.len(), 1);
+    assert_eq!(lanes[0].get("lane").as_usize(), Some(0));
+    assert_eq!(lanes[0].get("generation").as_usize(), Some(0));
+    assert_eq!(lanes[0].get("respawns").as_usize(), Some(0));
+    assert_eq!(h.get("breakers").as_arr().map(|a| a.len()), Some(0), "no breaker has tripped");
+    server.shutdown();
+    drop(engine);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn tcp_plane_survives_lane_wedge_and_recovers_bit_identically() {
+    let (store, dir) = chaos_store("tcp-wedge");
+    // request 1 uses exec calls 0..2 (euler nfe=2); request 2's first
+    // exec (call 2) wedges past the 100ms lane timeout
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        schedule: vec![FaultSpec { lane: Some(0), call: 2, kind: FaultKind::Wedge }],
+        wedge_ms: 400,
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(100),
+            fault: Some(plan),
+        })
+        .expect("runtime"),
+    );
+    let engine = Arc::new(
+        Engine::start(
+            store.clone(),
+            rt,
+            EngineConfig {
+                workers: 1,
+                exec_retries: 1,
+                retry_backoff_ms: 1,
+                breaker_threshold: 0,
+                ..Default::default()
+            },
+        )
+        .expect("engine"),
+    );
+    let server = Server::bind("127.0.0.1:0", ServerConfig::default(), engine.clone(), store)
+        .expect("bind");
+    let mut c = Client::connect(server.local_addr());
+    let sample = format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"solver\":\"euler\",\
+         \"nfe\":2,\"seed\":3}}"
+    );
+
+    let r1 = c.roundtrip(&sample);
+    assert_eq!(r1.get("ok").as_bool(), Some(true), "{r1:?}");
+    let reference = r1.get("samples").as_f32_vec().expect("samples");
+
+    // the wedged request terminates with a structured frame either way
+    let r2 = c.roundtrip(&sample);
+    if r2.get("ok").as_bool() == Some(true) {
+        assert_eq!(r2.get("samples").as_f32_vec().expect("samples"), reference);
+    } else {
+        assert_eq!(r2.get("err").as_str(), Some("internal"), "{r2:?}");
+    }
+
+    // poll health until the supervisor's respawn is visible over the wire
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let h = c.roundtrip("{\"op\":\"health\"}");
+        let respawns =
+            h.get("lanes").as_arr().and_then(|l| l[0].get("respawns").as_usize()).unwrap_or(0);
+        if respawns == 1 {
+            let generation =
+                h.get("lanes").as_arr().and_then(|l| l[0].get("generation").as_usize());
+            assert_eq!(generation, Some(1), "{h:?}");
+            break;
+        }
+        assert!(Instant::now() < deadline, "respawn never surfaced in health: {h:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+
+    // service restored, numerics unchanged, gauges sane
+    let r3 = c.roundtrip(&sample);
+    assert_eq!(r3.get("ok").as_bool(), Some(true), "{r3:?}");
+    assert_eq!(r3.get("samples").as_f32_vec().expect("samples"), reference);
+    let stats = c.roundtrip("{\"op\":\"stats\"}");
+    assert_eq!(stats.get("lane_respawns").as_usize(), Some(1), "{stats:?}");
+    assert_eq!(stats.get("inflight_rows").as_usize(), Some(0), "{stats:?}");
+    assert!(stats.get("faults_injected").as_usize().unwrap_or(0) >= 1, "{stats:?}");
+    server.shutdown();
+    drop(engine);
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -167,6 +167,116 @@ fn json_roundtrip_property() {
     }
 }
 
+/// Exactly-once settlement under random fault schedules: every request
+/// `try_submit` admits gets precisely one reply — success or structured
+/// error, never zero, never two — and the in-flight row gauge drains to
+/// 0 once all replies have landed, fault injection or not.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn fault_schedules_settle_every_admitted_request_exactly_once() {
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    use bns_serve::bench_util::{stub_store, StubModel};
+    use bns_serve::coordinator::{Engine, EngineConfig};
+    use bns_serve::runtime::{FaultConfig, FaultPlan, Runtime, RuntimeConfig};
+
+    for seed in 0..6u64 {
+        let (store, dir) = stub_store(
+            &format!("props-fault-{seed}"),
+            &[StubModel {
+                name: "m",
+                dim: 3,
+                num_classes: 4,
+                forwards_per_eval: 1,
+                k: -0.5,
+                c: 0.2,
+                label_scale: 0.1,
+                cost: 1,
+                buckets: &[1, 4, 8],
+            }],
+        )
+        .unwrap();
+        // errors + panics only (no stalls/wedges): keeps each property
+        // iteration fast while still exercising retry and terminal-error
+        // settlement paths
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            seed: 0xfa17 + seed,
+            error_per_mille: 200,
+            panic_per_mille: 60,
+            ..Default::default()
+        }));
+        let rt = Arc::new(
+            Runtime::with_config(RuntimeConfig {
+                lanes: 2,
+                fault: Some(plan),
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let engine = Engine::start(
+            store,
+            rt,
+            EngineConfig {
+                workers: 2,
+                exec_retries: 1,
+                retry_backoff_ms: 1,
+                breaker_threshold: 3,
+                breaker_cooldown_ms: 50,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        let (reply, rx) = mpsc::channel();
+        let mut rng = Pcg32::seeded(seed);
+        let mut admitted: HashSet<u64> = HashSet::new();
+        for i in 0..40u64 {
+            let req = SampleRequest {
+                id: 0,
+                model: "m".to_string(),
+                labels: vec![(i % 4) as i32; 1 + rng.below(5)],
+                guidance: 0.0,
+                solver: SolverSpec::Baseline { name: "euler".into(), nfe: 2 + rng.below(4) },
+                seed: rng.next_u64(),
+                x0: None,
+                enqueued_at: Instant::now(),
+                deadline: None,
+                priority: bns_serve::coordinator::request::Priority::Normal,
+                progress: None,
+                reply: reply.clone(),
+            };
+            if let Ok(id) = engine.try_submit(req) {
+                admitted.insert(id);
+            }
+        }
+        drop(reply);
+
+        let mut seen: HashSet<u64> = HashSet::new();
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while seen.len() < admitted.len() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            assert!(remaining > Duration::ZERO, "seed {seed}: timed out: {seen:?}");
+            let resp = rx.recv_timeout(remaining).expect("reply channel died early");
+            assert!(admitted.contains(&resp.id), "seed {seed}: unadmitted id {}", resp.id);
+            assert!(seen.insert(resp.id), "seed {seed}: duplicate reply for {}", resp.id);
+        }
+        assert_eq!(
+            engine.metrics.inflight_rows.load(std::sync::atomic::Ordering::SeqCst),
+            0,
+            "seed {seed}: inflight_rows must drain once every request settled"
+        );
+        assert_eq!(
+            engine.metrics.connections.load(std::sync::atomic::Ordering::SeqCst),
+            0,
+            "seed {seed}"
+        );
+        engine.shutdown();
+        // after a full drain + join, no late duplicate can ever surface
+        assert!(rx.try_recv().is_err(), "seed {seed}: reply after shutdown");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
 /// NS solvers built from random affine traces stay valid and Algorithm 1
 /// reproduces the traced update exactly on random linear fields.
 #[test]
