@@ -106,6 +106,22 @@ if BENCH_SERVE_OUT="../BENCH_serve.json" cargo bench --bench serve_load; then
     echo "WARN: fault_recovery ran but no lane respawn was recorded (supervisor inert)"
     lint_fail=1
   fi
+  # tracing-plane gate: the fourth phase compares evals/s with the span
+  # recorder on vs off (DESIGN.md §12). The section must exist, and the
+  # measured throughput overhead must stay <= 3% — the 0-alloc checks
+  # are hard asserts inside the bench itself, so they fail the bench run
+  # rather than this grep.
+  echo "trace overhead: $(grep -o '"overhead_pct":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  if ! grep -q '"trace_overhead":' ../BENCH_serve.json; then
+    echo "WARN: BENCH_serve.json has no trace_overhead section (tracing gate vacuous)"
+    lint_fail=1
+  else
+    overhead=$(grep -o '"overhead_pct":[0-9.eE+-]*' ../BENCH_serve.json | head -n1 | cut -d: -f2)
+    if ! awk -v o="${overhead:-100}" 'BEGIN { exit !(o <= 3.0) }'; then
+      echo "WARN: tracing overhead ${overhead}% exceeds the 3% budget"
+      lint_fail=1
+    fi
+  fi
 else
   echo "serve_load bench failed (perf trajectory not updated)"
   lint_fail=1

@@ -168,6 +168,7 @@ fn main() -> anyhow::Result<()> {
         "NFE", "bns(rs)", "euler", "midpoint", "dpmpp2m", "init->final(val)", "iters/s",
     ]);
     let mut rows = Vec::new();
+    let mut phase_rows = Vec::new();
     let mut nfe_to_target: i64 = -1;
 
     for nfe in [4usize, 8] {
@@ -236,6 +237,21 @@ fn main() -> anyhow::Result<()> {
             ("gt_nfe", Json::Num(report.gt_nfe as f64)),
             ("init", Json::Str(report.init_name.clone())),
         ]));
+        // trainer phase spans (tracing plane, DESIGN.md §12): where a
+        // distillation run's wall clock actually goes
+        println!(
+            "phases nfe={nfe}: teacher {:.3}s, jvp {:.3}s, adam {:.3}s, checkpoint {:.3}s \
+             (wall {secs:.3}s)",
+            report.teacher_gen_s, report.wavefront_jvp_s, report.adam_step_s, report.checkpoint_s
+        );
+        phase_rows.push(Json::obj(vec![
+            ("nfe", Json::Num(nfe as f64)),
+            ("teacher_gen_s", Json::Num(report.teacher_gen_s)),
+            ("wavefront_jvp_s", Json::Num(report.wavefront_jvp_s)),
+            ("adam_step_s", Json::Num(report.adam_step_s)),
+            ("checkpoint_s", Json::Num(report.checkpoint_s)),
+            ("wall_s", Json::Num(secs)),
+        ]));
     }
     table.print();
 
@@ -258,6 +274,7 @@ fn main() -> anyhow::Result<()> {
         ("nfe_to_target_psnr", Json::Num(nfe_to_target as f64)),
         ("points", Json::Arr(rows)),
         ("grad_steps", Json::Arr(grad_rows)),
+        ("phase_breakdown", Json::Arr(phase_rows)),
     ]);
     let path = std::env::var("BENCH_DISTILL_OUT")
         .unwrap_or_else(|_| "BENCH_distill.json".to_string());

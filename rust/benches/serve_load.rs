@@ -32,15 +32,28 @@
 //! bit-identity check of the recovered output against a fault-free
 //! engine. Results land in the `fault_recovery` section, which ci.sh
 //! gates on under STRICT=1.
+//!
+//! A fourth phase measures **tracing-plane overhead** (DESIGN.md §12):
+//! the same concurrent load runs with the span recorder enabled
+//! (default capacity) and disabled (`trace_capacity = 0`), reporting the
+//! on-vs-off evals/s ratio, and a counting global allocator proves the
+//! steady-state `record` (seqlock ring write) and `record_latency`
+//! (interned per-solver histogram) hot paths allocate nothing per event.
+//! Results land in the `trace_overhead` section; ci.sh gates the
+//! throughput overhead at ≤3% under STRICT=1 (the 0-alloc checks are
+//! hard asserts either way).
 
+use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use bns_serve::bench_util::{stub_store, write_results, StubModel, Table};
+use bns_serve::coordinator::metrics::Metrics;
 use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig, SolverSpec};
+use bns_serve::obs::{TraceRecorder, TraceStage};
 use bns_serve::runtime::{
     FaultConfig, FaultKind, FaultPlan, FaultSpec, Runtime, RuntimeConfig,
 };
@@ -52,6 +65,37 @@ const CLIENTS: usize = 8;
 const REQS_PER_CLIENT: usize = 16;
 const ROWS_PER_REQ: usize = 8;
 const PROBES: usize = 6;
+
+/// Counts every heap allocation in the process (all threads), so the
+/// trace_overhead phase can prove the tracing hot paths are alloc-free.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, n: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, n)
+    }
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
 
 fn spec() -> SolverSpec {
     SolverSpec::Auto { nfe: 8 }
@@ -409,6 +453,103 @@ fn run_fault_recovery(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow:
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// trace_overhead phase (span recorder on-vs-off throughput + allocs/event)
+// ---------------------------------------------------------------------------
+
+const TRACE_CLIENTS: usize = 4;
+const TRACE_REQS_PER_CLIENT: usize = 12;
+const TRACE_EVENTS: u64 = 65_536;
+
+/// evals/s of a fixed concurrent load at the given trace capacity
+/// (0 disables the recorder entirely).
+fn trace_throughput(
+    store: &Arc<bns_serve::runtime::ArtifactStore>,
+    trace_capacity: usize,
+) -> anyhow::Result<f64> {
+    let rt = Arc::new(Runtime::with_lanes(2)?);
+    let engine = Engine::start(
+        store.clone(),
+        rt,
+        EngineConfig { workers: 2, trace_capacity, ..Default::default() },
+    )?;
+    engine.sample_blocking(MODEL, vec![0; ROWS_PER_REQ], 0.0, spec(), 1)?;
+    let evals_before = engine.metrics.evals.load(Ordering::SeqCst);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..TRACE_CLIENTS {
+            let engine = &engine;
+            s.spawn(move || {
+                for r in 0..TRACE_REQS_PER_CLIENT {
+                    let labels: Vec<i32> =
+                        (0..ROWS_PER_REQ).map(|i| ((c + i + r) % 8) as i32).collect();
+                    engine
+                        .sample_blocking(MODEL, labels, 0.0, spec(), (c * 100 + r) as u64)
+                        .expect("trace-overhead load request failed");
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let evals = (engine.metrics.evals.load(Ordering::SeqCst) - evals_before) as f64;
+    engine.shutdown();
+    Ok(evals / wall)
+}
+
+fn run_trace_overhead(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow::Result<Json> {
+    // 1. steady-state allocation counts, measured while the process is
+    //    otherwise quiet (all engines from earlier phases are down).
+    //    After warmup, the seqlock ring write must never touch the heap…
+    let rec = TraceRecorder::new(4096);
+    for i in 0..1024u64 {
+        rec.record(i, TraceStage::Admit, 0, 0);
+    }
+    let before = alloc_count();
+    for i in 0..TRACE_EVENTS {
+        rec.record(i, TraceStage::ExecOk, i, i * 2);
+    }
+    let allocs_per_record = (alloc_count() - before) as f64 / TRACE_EVENTS as f64;
+    assert_eq!(
+        allocs_per_record, 0.0,
+        "TraceRecorder::record allocated in steady state"
+    );
+
+    // …and neither must the per-solver latency path once its key is
+    // interned (the one-time String allocation lives in intern_solver)
+    let metrics = Metrics::new();
+    metrics.record_latency(10, 20, "bespoke_ns");
+    let before = alloc_count();
+    for i in 0..TRACE_EVENTS {
+        metrics.record_latency(10 + i % 7, 20 + i % 11, "bespoke_ns");
+    }
+    let allocs_per_latency = (alloc_count() - before) as f64 / TRACE_EVENTS as f64;
+    assert_eq!(
+        allocs_per_latency, 0.0,
+        "Metrics::record_latency allocated on an interned solver key"
+    );
+
+    // 2. throughput ratio: interleave off/on twice and keep the best of
+    //    each, so a one-off scheduler hiccup doesn't read as overhead
+    let mut eps_off = 0.0f64;
+    let mut eps_on = 0.0f64;
+    for _ in 0..2 {
+        eps_off = eps_off.max(trace_throughput(store, 0)?);
+        eps_on = eps_on.max(trace_throughput(store, 4096)?);
+    }
+    let overhead_pct =
+        if eps_off > 0.0 { (100.0 * (1.0 - eps_on / eps_off)).max(0.0) } else { 0.0 };
+
+    Ok(Json::obj(vec![
+        ("trace_capacity", Json::Num(4096.0)),
+        ("events_measured", Json::Num(TRACE_EVENTS as f64)),
+        ("allocs_per_record_event", Json::Num(allocs_per_record)),
+        ("allocs_per_record_latency", Json::Num(allocs_per_latency)),
+        ("evals_per_s_tracing_off", Json::Num(eps_off)),
+        ("evals_per_s_tracing_on", Json::Num(eps_on)),
+        ("overhead_pct", Json::Num(overhead_pct)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let (store, dir) = stub_store(
         "serve-load",
@@ -513,6 +654,23 @@ fn main() -> anyhow::Result<()> {
     );
     println!("bit-identical after recovery: yes (asserted)");
 
+    // trace_overhead phase: span recorder on-vs-off + allocs per event
+    let trace_overhead = run_trace_overhead(&store)?;
+    println!(
+        "\n=== trace_overhead ({TRACE_CLIENTS} clients x {TRACE_REQS_PER_CLIENT} reqs, \
+         capacity 4096 vs off) ==="
+    );
+    println!(
+        "evals/s off {:.1} vs on {:.1} ({:.2}% overhead), allocs/record {:.4}, \
+         allocs/record_latency {:.4}",
+        trace_overhead.get("evals_per_s_tracing_off").as_f64().unwrap_or(0.0),
+        trace_overhead.get("evals_per_s_tracing_on").as_f64().unwrap_or(0.0),
+        trace_overhead.get("overhead_pct").as_f64().unwrap_or(0.0),
+        trace_overhead.get("allocs_per_record_event").as_f64().unwrap_or(0.0),
+        trace_overhead.get("allocs_per_record_latency").as_f64().unwrap_or(0.0),
+    );
+    println!("zero steady-state allocs on the tracing hot paths: yes (asserted)");
+
     let bench = Json::obj(vec![
         ("bench", Json::Str("serve_load".into())),
         (
@@ -533,6 +691,7 @@ fn main() -> anyhow::Result<()> {
         ("bit_identical", Json::Bool(true)),
         ("overload", overload),
         ("fault_recovery", fault_recovery),
+        ("trace_overhead", trace_overhead),
     ]);
     let out_path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

@@ -9,6 +9,8 @@
 //!   appear as `--flag` in README.md;
 //! * every field emitted by `Metrics::snapshot_json` must appear
 //!   (backtick-quoted) in DESIGN.md §4;
+//! * every protocol op dispatched in `coordinator/server.rs` (the
+//!   `Some("op") =>` arms) must appear (backtick-quoted) in PROTOCOL.md;
 //! * every `[[hot]]` manifest entry's bench marker must still exist in
 //!   the named bench source, so the static hot-path rule and the
 //!   counting-allocator measurement cannot silently diverge.
@@ -163,6 +165,43 @@ pub fn metrics_fields(metrics_src: &str) -> Vec<String> {
     out
 }
 
+/// Protocol op names from the server's dispatcher: every
+/// `Some("op") =>` match arm in `coordinator/server.rs`.
+pub fn server_ops(server_src: &str) -> Vec<String> {
+    const PAT: &[u8] = b"Some(\"";
+    let b = server_src.as_bytes();
+    let mut out: Vec<String> = Vec::new();
+    let mut i = 0usize;
+    while i + PAT.len() <= b.len() {
+        if &b[i..i + PAT.len()] != PAT {
+            i += 1;
+            continue;
+        }
+        let s = i + PAT.len();
+        let mut e = s;
+        while e < b.len() && b[e] != b'"' {
+            e += 1;
+        }
+        let op = &server_src[s..e.min(b.len())];
+        let mut k = skip_ws(b, (e + 1).min(b.len()));
+        if k >= b.len() || b[k] != b')' {
+            i = e + 1;
+            continue;
+        }
+        k = skip_ws(b, k + 1);
+        let is_arm = k + 1 < b.len() && b[k] == b'=' && b[k + 1] == b'>';
+        if is_arm
+            && !op.is_empty()
+            && op.bytes().all(|c| c.is_ascii_lowercase() || c == b'_')
+            && !out.iter().any(|o| o == op)
+        {
+            out.push(op.to_string());
+        }
+        i = e + 1;
+    }
+    out
+}
+
 /// The body of the `## <prefix>…` section of a markdown file (up to the
 /// next `## ` heading).
 pub fn md_section(md: &str, prefix: &str) -> String {
@@ -238,6 +277,20 @@ pub fn check_metrics_fields(metrics_src: &str, design_md: &str) -> Vec<Violation
         .collect()
 }
 
+/// Pure check: dispatched protocol ops present in PROTOCOL.md?
+pub fn check_server_ops(server_src: &str, protocol_md: &str) -> Vec<Violation> {
+    server_ops(server_src)
+        .into_iter()
+        .filter(|o| !backtick_quoted(protocol_md, o))
+        .map(|o| Violation {
+            file: "PROTOCOL.md".to_string(),
+            line: 0,
+            rule: RULE_DOCS,
+            msg: format!("protocol op `{o}` missing from PROTOCOL.md"),
+        })
+        .collect()
+}
+
 /// Manifest/bench cross-check: every `[[hot]]` entry's marker must still
 /// appear in the named bench source.
 pub fn check_manifest_benches(root: &Path, manifest: &[HotEntry]) -> Vec<Violation> {
@@ -291,10 +344,12 @@ pub fn check_all(root: &Path, manifest: &[HotEntry]) -> Result<Vec<Violation>> {
     let readme = read(&root.join("README.md"))?;
     let metrics = read(&src.join("coordinator").join("metrics.rs"))?;
     let design = read(&root.join("DESIGN.md"))?;
+    let server = read(&src.join("coordinator").join("server.rs"))?;
 
     let mut v = check_err_codes(&request, &protocol);
     v.extend(check_cli_flags(&main_src, &readme));
     v.extend(check_metrics_fields(&metrics, &design));
+    v.extend(check_server_ops(&server, &protocol));
     v.extend(check_manifest_benches(root, manifest));
     Ok(v)
 }

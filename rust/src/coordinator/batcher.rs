@@ -58,6 +58,9 @@ pub struct Batch {
     /// Most urgent priority among the member requests; orders the batch
     /// in the engine's work queue.
     pub priority: Priority,
+    /// When `poll` closed the batch — the tracing plane measures
+    /// form-to-worker-pop dispatch latency from this (DESIGN.md §12).
+    pub formed_at: Instant,
 }
 
 /// Flush/backpressure policy knobs.
@@ -203,6 +206,7 @@ impl Batcher {
                 requests: Vec::new(),
                 rows: 0,
                 priority: Priority::Low,
+                formed_at: now,
             };
             for req in g.requests {
                 let r = req.labels.len();
@@ -217,6 +221,7 @@ impl Batcher {
                             requests: Vec::new(),
                             rows: 0,
                             priority: Priority::Low,
+                            formed_at: now,
                         },
                     ));
                 }

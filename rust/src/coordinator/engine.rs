@@ -52,6 +52,7 @@ use super::request::{
 use super::router::{RoutedSolver, RouterCache};
 use anyhow::Context;
 
+use crate::obs::{self, TraceRecorder, TraceStage};
 use crate::runtime::{ArtifactStore, LoadedModel, Runtime};
 use crate::solver::field::{CountingField, Field};
 use crate::solver::rk45::{rk45_into, Rk45Opts};
@@ -89,6 +90,10 @@ pub struct EngineConfig {
     /// How long an open breaker rejects a model's batches before
     /// letting one half-open probe through. CLI: `--breaker-cooldown-ms`.
     pub breaker_cooldown_ms: u64,
+    /// Span slots preallocated by the tracing plane's ring recorder
+    /// (DESIGN.md §12); 0 disables tracing entirely. CLI:
+    /// `--trace-capacity`.
+    pub trace_capacity: usize,
 }
 
 impl Default for EngineConfig {
@@ -101,6 +106,7 @@ impl Default for EngineConfig {
             retry_backoff_ms: 10,
             breaker_threshold: 5,
             breaker_cooldown_ms: 1000,
+            trace_capacity: 4096,
         }
     }
 }
@@ -137,6 +143,9 @@ pub struct Engine {
     wq: Arc<WorkQueue>,
     /// Per-model circuit breakers shared with the workers (`health` op).
     breakers: Arc<Breakers>,
+    /// Request-scoped span recorder (tracing plane, DESIGN.md §12);
+    /// payload of the wire protocol's `trace` op and `--trace-out`.
+    pub tracer: Arc<TraceRecorder>,
     /// Weak so a retained engine handle can't pin lane threads alive;
     /// feeds lane generations/respawns into [`Engine::health_json`].
     rt: Weak<Runtime>,
@@ -195,6 +204,11 @@ impl Engine {
             Duration::from_millis(cfg.breaker_cooldown_ms.max(1)),
         ));
         let policy = RetryPolicy { retries: cfg.exec_retries, backoff_ms: cfg.retry_backoff_ms };
+        // tracing plane: one shared ring; the runtime records lane-side
+        // events (compile/exec/timeout/respawn/fault) into the same ring
+        // so a request's timeline is complete end to end
+        let tracer = Arc::new(TraceRecorder::new(cfg.trace_capacity));
+        rt.attach_tracer(tracer.clone());
         // bns-lint: allow(bounded_channel) — bounded upstream by the admission budget: try_submit charges max_inflight_rows before sending, so the queue can never exceed it
         let (tx, rx) = mpsc::channel::<SampleRequest>();
         let wq = Arc::new(WorkQueue {
@@ -208,6 +222,7 @@ impl Engine {
         let wq_d = wq.clone();
         let metrics_d = metrics.clone();
         let store_d = store.clone();
+        let tracer_d = tracer.clone();
         let batcher_cfg = cfg.batcher;
         let dispatch = std::thread::Builder::new()
             .name("bns-dispatch".into())
@@ -264,6 +279,20 @@ impl Engine {
                     }
                     for batch in batcher.poll(Instant::now()) {
                         metrics_d.record_batch(batch.rows);
+                        // per request: admission-to-batch-close latency
+                        for req in &batch.requests {
+                            let wait_us = batch
+                                .formed_at
+                                .saturating_duration_since(req.enqueued_at)
+                                .as_micros() as u64;
+                            metrics_d.record_batch_form_us(wait_us);
+                            tracer_d.record(
+                                req.id,
+                                TraceStage::BatchForm,
+                                batch.rows as u64,
+                                wait_us,
+                            );
+                        }
                         metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
                         wq_d.push(batch);
                     }
@@ -288,6 +317,7 @@ impl Engine {
             let metrics_w = metrics.clone();
             let router_w = router.clone();
             let breakers_w = breakers.clone();
+            let tracer_w = tracer.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("bns-worker-{wi}"))
@@ -315,9 +345,12 @@ impl Engine {
                             };
                             metrics_w.queue_depth.fetch_sub(1, Ordering::Relaxed);
                             run_batch(
-                                &store_w, &rt_w, &metrics_w, &router_w, &breakers_w, policy,
-                                &mut models, batch, &mut ws,
+                                &store_w, &rt_w, &metrics_w, &router_w, &breakers_w, &tracer_w,
+                                policy, &mut models, batch, &mut ws,
                             );
+                            // the batch-leader ambient id must not leak
+                            // onto the next batch's lane events
+                            obs::clear_ambient();
                         }
                     })
                     .with_context(|| format!("spawning engine worker thread {wi}"))?,
@@ -333,6 +366,7 @@ impl Engine {
             workers,
             wq,
             breakers,
+            tracer,
             rt: Arc::downgrade(&rt),
         })
     }
@@ -417,6 +451,8 @@ impl Engine {
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
+        // the trace id *is* the request id: first span of the timeline
+        self.tracer.record(id, TraceStage::Admit, rows as u64, req.priority.rank() as u64);
         // `tx` is only None once shutdown has begun; answer with the same
         // structured error a closed channel produces instead of panicking.
         let tx = match self.tx.as_ref() {
@@ -706,11 +742,19 @@ fn run_batch(
     metrics: &Metrics,
     router: &RouterCache,
     breakers: &Breakers,
+    tracer: &TraceRecorder,
     policy: RetryPolicy,
     models: &mut HashMap<String, Arc<LoadedModel>>,
     batch: Batch,
     ws: &mut SampleWorkspace,
 ) {
+    // form-to-worker-pop latency, once per batch; the per-request
+    // Dispatch span carries the same number
+    let dispatch_us = batch.formed_at.elapsed().as_micros() as u64;
+    metrics.record_dispatch_us(dispatch_us);
+    for req in &batch.requests {
+        tracer.record(req.id, TraceStage::Dispatch, batch.rows as u64, dispatch_us);
+    }
     // breaker first: an open breaker fails the whole batch cheaply,
     // without touching the runtime at all
     if let Admit::Reject { retry_after_ms } = breakers.admit(&batch.key.model) {
@@ -721,28 +765,42 @@ fn run_batch(
         for req in batch.requests {
             metrics.record_reject();
             settle_rows(metrics, req.labels.len());
+            tracer.record(req.id, TraceStage::BreakerReject, 0, retry_after_ms);
             let _ = req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
         }
         return;
     }
     let started = Instant::now();
     let batch_seed = batch.requests.first().map(|r| r.id).unwrap_or_default();
+    // lane-side spans (compile/exec/timeout/fault) attribute to the
+    // batch leader via the thread-ambient id; the worker loop clears it
+    obs::set_ambient(batch_seed);
     for attempt in 0..=policy.retries {
+        let attempt_started = Instant::now();
+        for req in &batch.requests {
+            tracer.record(req.id, TraceStage::ExecStart, attempt as u64 + 1, batch.rows as u64);
+        }
         match solve_batch(store, rt, router, models, &batch, ws) {
             Ok(o) => {
                 breakers.on_success(&batch.key.model);
                 let exec_us = started.elapsed().as_micros() as u64;
+                let attempt_us = attempt_started.elapsed().as_micros() as u64;
                 // aggregate and per-request accounting share one formula:
                 // forwards = nfe × rows × forwards-per-eval of *this* field
                 metrics.record_evals(o.nfe, o.nfe * batch.rows * o.forwards_per_eval);
+                let emit_started = Instant::now();
                 let mut offset = 0;
                 for req in batch.requests {
                     let rows = req.labels.len();
                     let queue_us = started.duration_since(req.enqueued_at).as_micros() as u64;
                     metrics.record_latency(queue_us, exec_us, &o.solver_name);
+                    tracer.record(req.id, TraceStage::ExecOk, attempt as u64 + 1, attempt_us);
                     let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
                     offset += rows;
                     settle_rows(metrics, rows);
+                    let emit_us = emit_started.elapsed().as_micros() as u64;
+                    metrics.record_emit_us(emit_us);
+                    tracer.record(req.id, TraceStage::Emit, rows as u64, emit_us);
                     let _ = req.reply.send(SampleResponse {
                         id: req.id,
                         result: Ok(SampleOutput {
@@ -765,19 +823,31 @@ fn run_batch(
                 // that just failed
                 models.remove(&batch.key.model);
                 metrics.exec_retries.fetch_add(1, Ordering::Relaxed);
+                let attempt_us = attempt_started.elapsed().as_micros() as u64;
                 // decorrelated jitter: workers that failed on the same
                 // lane at the same instant seed from their own batch ids
                 // and so back off by different amounts
                 let mut jitter = Pcg32::seeded(batch_seed ^ (attempt as u64) ^ 0x5eed_ba11);
                 let base = policy.backoff_ms.max(1);
                 let sleep_ms = base + jitter.below(base as usize * 2) as u64;
+                metrics.record_retry_backoff_us(sleep_ms * 1000);
+                for req in &batch.requests {
+                    tracer.record(req.id, TraceStage::ExecRetry, attempt as u64 + 1, attempt_us);
+                    tracer.record(
+                        req.id,
+                        TraceStage::RetryBackoff,
+                        attempt as u64 + 1,
+                        sleep_ms * 1000,
+                    );
+                }
                 std::thread::sleep(Duration::from_millis(sleep_ms));
                 let _ = e; // retried; the final attempt reports its own error
             }
             Err(e) => {
                 // terminal failure: count toward the model's breaker,
                 // then settle every request exactly once
-                if breakers.on_failure(&batch.key.model) {
+                let tripped = breakers.on_failure(&batch.key.model);
+                if tripped {
                     metrics.breaker_open.fetch_add(1, Ordering::Relaxed);
                 }
                 let err = ServeError::new(
@@ -786,6 +856,10 @@ fn run_batch(
                 );
                 for req in batch.requests {
                     settle_rows(metrics, req.labels.len());
+                    if tripped {
+                        tracer.record(req.id, TraceStage::BreakerOpen, attempt as u64 + 1, 0);
+                    }
+                    tracer.record(req.id, TraceStage::Reject, attempt as u64 + 1, 0);
                     let _ =
                         req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
                 }

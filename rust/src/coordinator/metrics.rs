@@ -9,6 +9,7 @@
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
 use crate::util::json::Json;
 use crate::util::stats::LatencyHistogram;
@@ -25,7 +26,6 @@ pub type LaneStatsProvider = Box<dyn Fn() -> Vec<(u64, u64, u64, u64)> + Send + 
 pub type FaultsProvider = Box<dyn Fn() -> u64 + Send + Sync>;
 
 /// Shared service counters, gauges, and latency histograms.
-#[derive(Default)]
 pub struct Metrics {
     /// Requests admitted into the engine (rejects are counted separately).
     pub requests: AtomicU64,
@@ -60,6 +60,12 @@ pub struct Metrics {
     /// Distinct circuit-breaker open transitions (closed -> open or a
     /// failed half-open probe re-opening).
     pub breaker_open: AtomicU64,
+    /// Monotonic snapshot counter, bumped by every `snapshot_json` call
+    /// so operators can order successive `stats` responses and compute
+    /// rates without a wall clock.
+    pub snapshot_seq: AtomicU64,
+    /// Process-local creation instant, surfaced as `uptime_s`.
+    started: Instant,
     lane_provider: Mutex<Option<LaneStatsProvider>>,
     fault_provider: Mutex<Option<FaultsProvider>>,
     inner: Mutex<Inner>,
@@ -70,7 +76,42 @@ struct Inner {
     queue_wait: LatencyHistogram,
     exec: LatencyHistogram,
     e2e: LatencyHistogram,
-    per_solver: BTreeMap<String, u64>,
+    /// Stage-latency breakdown (tracing plane, DESIGN.md §12): admission
+    /// to batch close, batch close to worker pop, retry backoff sleeps,
+    /// and reply emit.
+    batch_form: LatencyHistogram,
+    dispatch: LatencyHistogram,
+    retry_backoff: LatencyHistogram,
+    emit: LatencyHistogram,
+    /// Per-solver exec-latency histograms (key interned on first sight —
+    /// the hot path never allocates, see `record_latency`).
+    per_solver: BTreeMap<String, LatencyHistogram>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            requests: AtomicU64::new(0),
+            samples: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            rejected_overload: AtomicU64::new(0),
+            expired: AtomicU64::new(0),
+            evals: AtomicU64::new(0),
+            forwards: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_rows: AtomicU64::new(0),
+            queue_depth: AtomicU64::new(0),
+            inflight_rows: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            exec_retries: AtomicU64::new(0),
+            breaker_open: AtomicU64::new(0),
+            snapshot_seq: AtomicU64::new(0),
+            started: Instant::now(),
+            lane_provider: Mutex::new(None),
+            fault_provider: Mutex::new(None),
+            inner: Mutex::new(Inner::default()),
+        }
+    }
 }
 
 impl Metrics {
@@ -127,12 +168,41 @@ impl Metrics {
     }
 
     /// Record one request's queue/exec latencies and the solver it used.
+    ///
+    /// Hot path (per request, manifest-listed in `hot_paths.toml`): the
+    /// per-solver key lookup is borrowed — the `String` key is only
+    /// allocated the first time a solver name is seen, in the `#[cold]`
+    /// insert helper below.
     pub fn record_latency(&self, queue_us: u64, exec_us: u64, solver: &str) {
         let mut g = lock_ok(&self.inner);
         g.queue_wait.record_us(queue_us as f64);
         g.exec.record_us(exec_us as f64);
         g.e2e.record_us((queue_us + exec_us) as f64);
-        *g.per_solver.entry(solver.to_string()).or_insert(0) += 1;
+        if let Some(h) = g.per_solver.get_mut(solver) {
+            h.record_us(exec_us as f64);
+        } else {
+            intern_solver(&mut g, solver, exec_us);
+        }
+    }
+
+    /// Record the admission-to-batch-close latency of one request.
+    pub fn record_batch_form_us(&self, us: u64) {
+        lock_ok(&self.inner).batch_form.record_us(us as f64);
+    }
+
+    /// Record the batch-close-to-worker-pop latency of one batch.
+    pub fn record_dispatch_us(&self, us: u64) {
+        lock_ok(&self.inner).dispatch.record_us(us as f64);
+    }
+
+    /// Record one retry-backoff sleep.
+    pub fn record_retry_backoff_us(&self, us: u64) {
+        lock_ok(&self.inner).retry_backoff.record_us(us as f64);
+    }
+
+    /// Record the result-settle-and-reply latency of one request.
+    pub fn record_emit_us(&self, us: u64) {
+        lock_ok(&self.inner).emit.record_us(us as f64);
     }
 
     /// Suggested client backoff for overload rejects: roughly one median
@@ -162,6 +232,7 @@ impl Metrics {
     /// per-solver tally, and per-lane device counter. Field semantics
     /// are documented in README.md §Operator runbook.
     pub fn snapshot_json(&self) -> Json {
+        let seq = self.snapshot_seq.fetch_add(1, Ordering::Relaxed) + 1;
         let lanes: Vec<(u64, u64, u64, u64)> = lock_ok(&self.lane_provider)
             .as_ref()
             .map(|f| f())
@@ -182,6 +253,8 @@ impl Metrics {
             ])
         };
         Json::obj(vec![
+            ("uptime_s", Json::Num(self.started.elapsed().as_secs_f64())),
+            ("snapshot_seq", Json::Num(seq as f64)),
             ("requests", Json::Num(self.requests.load(Ordering::Relaxed) as f64)),
             ("samples", Json::Num(self.samples.load(Ordering::Relaxed) as f64)),
             ("rejected", Json::Num(self.rejected.load(Ordering::Relaxed) as f64)),
@@ -222,17 +295,24 @@ impl Metrics {
             ("queue", q(&g.queue_wait)),
             ("exec", q(&g.exec)),
             ("e2e", q(&g.e2e)),
+            ("batch_form", q(&g.batch_form)),
+            ("dispatch", q(&g.dispatch)),
+            ("retry_backoff", q(&g.retry_backoff)),
+            ("emit", q(&g.emit)),
             (
                 "per_solver",
-                Json::Obj(
-                    g.per_solver
-                        .iter()
-                        .map(|(k, v)| (k.clone(), Json::Num(*v as f64)))
-                        .collect(),
-                ),
+                Json::Obj(g.per_solver.iter().map(|(k, v)| (k.clone(), q(v))).collect()),
             ),
         ])
     }
+}
+
+/// First sighting of a solver name: allocate its interned key and record
+/// the first observation. Out of the manifest-listed hot path — after
+/// this, `record_latency` only ever borrows.
+#[cold]
+fn intern_solver(inner: &mut Inner, solver: &str, exec_us: u64) {
+    inner.per_solver.entry(solver.to_string()).or_default().record_us(exec_us as f64);
 }
 
 #[cfg(test)]
@@ -290,10 +370,48 @@ mod tests {
         m.record_latency(100, 2000, "bns8");
         let s = m.snapshot_json().to_string();
         let parsed = crate::util::json::Json::parse(&s).unwrap();
-        assert_eq!(parsed.get("per_solver").get("bns8").as_f64(), Some(1.0));
+        // per_solver carries full exec quantiles, not just a count
+        let bns8 = parsed.get("per_solver").get("bns8");
+        assert_eq!(bns8.get("count").as_f64(), Some(1.0));
+        assert!(bns8.get("p50_us").as_f64().unwrap_or(0.0) >= 2000.0, "{bns8:?}");
         // without a provider the lane array is present but empty
         assert_eq!(parsed.get("lanes").as_arr().map(|a| a.len()), Some(0));
         assert_eq!(parsed.get("work_queue_depth").as_f64(), Some(0.0));
+    }
+
+    #[test]
+    fn stage_histograms_and_snapshot_seq_surface() {
+        let m = Metrics::new();
+        m.record_batch_form_us(300);
+        m.record_dispatch_us(40);
+        m.record_retry_backoff_us(11_000);
+        m.record_emit_us(90);
+        let s1 = m.snapshot_json();
+        assert_eq!(s1.get("snapshot_seq").as_f64(), Some(1.0));
+        assert!(s1.get("uptime_s").as_f64().unwrap_or(-1.0) >= 0.0);
+        for (field, count) in
+            [("batch_form", 1.0), ("dispatch", 1.0), ("retry_backoff", 1.0), ("emit", 1.0)]
+        {
+            assert_eq!(s1.get(field).get("count").as_f64(), Some(count), "{field}");
+        }
+        assert!(s1.get("retry_backoff").get("mean_us").as_f64().unwrap() > 10_000.0);
+        // the sequence is monotonic across snapshots
+        let s2 = m.snapshot_json();
+        assert_eq!(s2.get("snapshot_seq").as_f64(), Some(2.0));
+    }
+
+    #[test]
+    fn per_solver_interning_accumulates_per_key() {
+        let m = Metrics::new();
+        for i in 0..5 {
+            m.record_latency(10, 1000 + i * 10, "a");
+        }
+        m.record_latency(10, 50, "b");
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("per_solver").get("a").get("count").as_f64(), Some(5.0));
+        assert_eq!(snap.get("per_solver").get("b").get("count").as_f64(), Some(1.0));
+        // e2e histogram still sees every request regardless of solver
+        assert_eq!(snap.get("e2e").get("count").as_f64(), Some(6.0));
     }
 
     #[test]

@@ -261,6 +261,11 @@ fn accept_loop(
     }
 }
 
+/// Cap on each connection's `(tag, id)` correlation history for the
+/// `trace` op — old entries fall off; their timelines stay reachable by
+/// id until the ring overwrites them.
+const RECENT_TAGS: usize = 32;
+
 /// Per-request bookkeeping between admission and the terminal reply.
 struct PendingReq {
     /// Client asked for streaming frames (`"stream":true`).
@@ -283,6 +288,11 @@ struct Conn {
     prog_tx: mpsc::Sender<Progress>,
     prog_rx: mpsc::Receiver<Progress>,
     pending: HashMap<u64, PendingReq>,
+    /// Recently admitted `(tag, id)` pairs, oldest first, capped at
+    /// [`RECENT_TAGS`] — lets the `trace` op resolve a client tag to the
+    /// engine id its timeline is keyed by. Connection-local on purpose:
+    /// tags are a client-side correlation namespace (PROTOCOL.md).
+    recent: Vec<(Json, u64)>,
     /// Peer half-closed its write side; finish pending work then drop.
     eof: bool,
     /// Socket error / output overflow; drop immediately.
@@ -305,6 +315,7 @@ impl Conn {
             prog_tx,
             prog_rx,
             pending: HashMap::new(),
+            recent: Vec::new(),
             eof: false,
             dead: false,
             discarding: false,
@@ -519,6 +530,44 @@ fn handle_request_line(
             }
             c.enqueue(&o);
         }
+        Some("trace") => {
+            // request timelines from the tracing plane (PROTOCOL.md
+            // §trace): by engine id, by last-N active ids, or by this
+            // connection's recent tags. Unknown ids return an empty
+            // timeline (the ring may have overwritten it) — not an error.
+            let tracer = engine.tracer.as_ref();
+            let mut traces: Vec<Json> = Vec::new();
+            if let Some(id) = req.get("id").as_usize() {
+                traces.push(tracer.trace_json(id as u64));
+            } else if let Some(n) = req.get("last").as_usize() {
+                for id in tracer.last_ids(n.min(64)) {
+                    traces.push(tracer.trace_json(id));
+                }
+            } else if let Some(t) = tag.as_ref() {
+                for (rt, id) in &c.recent {
+                    if rt == t {
+                        traces.push(tracer.trace_json(*id));
+                    }
+                }
+            } else {
+                let e = ServeError::new(
+                    ErrCode::BadRequest,
+                    "trace: need 'id', 'last', or a 'tag' sampled on this connection",
+                );
+                let frame = error_frame(&e, None, None);
+                c.enqueue(&frame);
+                return;
+            }
+            let frame = ok_frame(
+                vec![
+                    ("ok", Json::Bool(true)),
+                    ("enabled", Json::Bool(tracer.is_enabled())),
+                    ("traces", Json::Arr(traces)),
+                ],
+                tag,
+            );
+            c.enqueue(&frame);
+        }
         Some("ping") => {
             let frame = ok_frame(
                 vec![("ok", Json::Bool(true)), ("op", Json::Str("pong".into()))],
@@ -647,6 +696,12 @@ fn handle_sample(
     };
     match engine.try_submit(sreq) {
         Ok(id) => {
+            if let Some(t) = tag.as_ref() {
+                if c.recent.len() >= RECENT_TAGS {
+                    c.recent.remove(0);
+                }
+                c.recent.push((t.clone(), id));
+            }
             c.pending.insert(id, PendingReq { stream, tag: tag.clone() });
             if stream {
                 let frame = ok_frame(

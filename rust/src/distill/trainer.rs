@@ -20,6 +20,7 @@
 //! allocation; only the periodic validation pass allocates.
 
 use std::path::PathBuf;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -95,6 +96,16 @@ pub struct TrainReport {
     pub gt_evals: u64,
     /// (iteration, validation PSNR) trajectory.
     pub history: Vec<(usize, f64)>,
+    /// Wall seconds generating (or loading) the teacher set — the
+    /// `phase_breakdown` section of BENCH_distill.json.
+    pub teacher_gen_s: f64,
+    /// Wall seconds in the wavefront gradient fan (`GradFan::compute`).
+    pub wavefront_jvp_s: f64,
+    /// Wall seconds in the theta chain rule + Adam update.
+    pub adam_step_s: f64,
+    /// Wall seconds validating / best-checkpointing (incl. the init
+    /// validation pass).
+    pub checkpoint_s: f64,
 }
 
 impl TrainReport {
@@ -150,7 +161,15 @@ pub fn train_from(
          so cached pairs are never reused across fields"
     );
 
+    // trainer phase spans: coarse wall-clock accumulators surfaced in the
+    // report (and from there in BENCH_distill.json's phase_breakdown) —
+    // Instant reads only, so the hot loop stays allocation-free
+    let mut t_jvp = Duration::ZERO;
+    let mut t_adam = Duration::ZERO;
+    let mut t_ckpt = Duration::ZERO;
+
     let total_pairs = cfg.pairs + cfg.val_pairs;
+    let t_phase = Instant::now();
     let teacher = TeacherSet::load_or_generate(
         cfg.teacher_cache.as_deref(),
         src,
@@ -160,6 +179,7 @@ pub fn train_from(
         cfg.threads,
         &cfg.teacher_scope,
     )?;
+    let teacher_gen = t_phase.elapsed();
     let fpe = src.full().forwards_per_eval() as u64;
 
     // held-out validation split: the trailing val_pairs rows
@@ -170,7 +190,9 @@ pub fn train_from(
 
     let mut theta = pack(init);
     let mut forwards: u64 = 0;
+    let t0 = Instant::now();
     let init_loss = sample_loss(init, &vfield, &vx0, &vx1, dim)?;
+    t_ckpt += t0.elapsed();
     forwards += cfg.val_pairs as u64 * fpe * n as u64;
     let init_val_psnr = psnr_from_log_mse(init_loss);
 
@@ -194,12 +216,16 @@ pub fn train_from(
     for k in 0..cfg.iters {
         sample_indices_into(&mut rng, cfg.pairs, bsz, &mut idx);
         unpack_into(&theta, n, &mut solver_buf);
+        let t0 = Instant::now();
         fan.compute(&solver_buf, src, &teacher, &idx, dim, cfg.threads)?;
+        t_jvp += t0.elapsed();
         forwards += fpe * fan.row_evals;
+        let t0 = Instant::now();
         tgrad.apply(&theta, n, &fan.d_times, &fan.d_a, &fan.d_b, &mut gtheta);
         if gtheta.iter().any(|v| !v.is_finite()) {
             // a pathological minibatch (e.g. clamped loss) must not
             // poison the Adam moments — skip the step, keep training
+            t_adam += t0.elapsed();
             continue;
         }
         // linear lr decay to zero: near the optimum Adam at a fixed lr
@@ -209,8 +235,10 @@ pub fn train_from(
         // whatever point validated best along the way
         adam.lr = cfg.lr * (1.0 - k as f64 / cfg.iters as f64);
         adam.step(&mut theta, &gtheta);
+        t_adam += t0.elapsed();
 
         if (cfg.val_every > 0 && (k + 1) % cfg.val_every == 0) || k + 1 == cfg.iters {
+            let t0 = Instant::now();
             let cand = unpack(&theta, n);
             if cand.validate().is_ok() {
                 let l = sample_loss(&cand, &vfield, &vx0, &vx1, dim)?;
@@ -220,6 +248,7 @@ pub fn train_from(
                     best = (theta.clone(), l);
                 }
             }
+            t_ckpt += t0.elapsed();
         }
     }
 
@@ -234,6 +263,10 @@ pub fn train_from(
         gt_nfe: teacher.gt_nfe,
         gt_evals: teacher.gt_evals,
         history,
+        teacher_gen_s: teacher_gen.as_secs_f64(),
+        wavefront_jvp_s: t_jvp.as_secs_f64(),
+        adam_step_s: t_adam.as_secs_f64(),
+        checkpoint_s: t_ckpt.as_secs_f64(),
     };
     Ok((solver, report))
 }
@@ -380,5 +413,10 @@ mod tests {
         assert_eq!(meta.forwards, report.forwards);
         assert_eq!(meta.gt_nfe, report.gt_nfe);
         assert!((meta.val_psnr - report.final_val_psnr).abs() < 1e-12);
+        // phase spans: every phase ran, none is negative
+        assert!(report.teacher_gen_s > 0.0, "teacher phase timed");
+        assert!(report.wavefront_jvp_s > 0.0, "JVP phase timed");
+        assert!(report.adam_step_s > 0.0, "Adam phase timed");
+        assert!(report.checkpoint_s > 0.0, "checkpoint phase timed");
     }
 }

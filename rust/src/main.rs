@@ -34,6 +34,11 @@ USAGE:
                      default 5)
                     [--breaker-cooldown-ms MS]  (open-breaker reject window
                      before one half-open probe; default 1000)
+                    [--trace-capacity N]  (span slots in the tracing ring;
+                     0 disables tracing entirely; default 4096 —
+                     DESIGN.md §12, `trace` op in PROTOCOL.md)
+                    [--trace-out FILE]  (periodically export the trace
+                     ring as JSON lines via atomic rename; default: off)
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -152,6 +157,9 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                 flags.get("breaker-threshold").map(|s| s.parse()).transpose()?.unwrap_or(5);
             let breaker_cooldown_ms: u64 =
                 flags.get("breaker-cooldown-ms").map(|s| s.parse()).transpose()?.unwrap_or(1000);
+            let trace_capacity: usize =
+                flags.get("trace-capacity").map(|s| s.parse()).transpose()?.unwrap_or(4096);
+            let trace_out = flags.get("trace-out").map(std::path::PathBuf::from);
             anyhow::ensure!(reactors >= 1, "--reactors must be >= 1 (got 0)");
             anyhow::ensure!(max_inflight >= 1, "--max-inflight must be >= 1 (got 0)");
             anyhow::ensure!(
@@ -179,9 +187,27 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                     max_inflight_rows: max_inflight,
                     breaker_threshold,
                     breaker_cooldown_ms,
+                    trace_capacity,
                     ..Default::default()
                 },
             )?);
+            if let Some(path) = trace_out {
+                // detached exporter: snapshot the ring every 2 s and
+                // atomically replace the file, so observers always read a
+                // complete JSON-lines document (util::fsio::write_atomic)
+                let tracer = engine.tracer.clone();
+                std::thread::Builder::new()
+                    .name("bns-trace-export".into())
+                    .spawn(move || loop {
+                        std::thread::sleep(std::time::Duration::from_secs(2));
+                        if let Err(e) =
+                            bns_serve::util::fsio::write_atomic(&path, &tracer.render_jsonl())
+                        {
+                            eprintln!("[bns-serve] trace export failed: {e:#}");
+                        }
+                    })
+                    .context("spawning trace exporter thread")?;
+            }
             let addr = flags.get("addr").cloned().unwrap_or("127.0.0.1:7878".into());
             let cfg = bns_serve::coordinator::ServerConfig {
                 reactors,

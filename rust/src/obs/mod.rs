@@ -1,0 +1,471 @@
+//! Request-scoped tracing plane (DESIGN.md §12).
+//!
+//! [`TraceRecorder`] is a preallocated, sharded ring buffer of fixed-size
+//! span events. The write path ([`TraceRecorder::record`]) is lock-free
+//! and allocation-free: a global sequence number picks a shard
+//! round-robin, a per-shard cursor picks a slot, and the event is
+//! published under a seqlock-style version word (odd = write in
+//! progress, even = committed, 0 = never written). Readers
+//! ([`TraceRecorder::snapshot`]) re-check the version after copying the
+//! payload and drop any slot that changed mid-read, so tracing never
+//! blocks or slows the request path — under overwrite pressure the
+//! oldest events simply disappear.
+//!
+//! One documented imprecision: if a writer is lapped — it stalls between
+//! its two version stores while other writers cycle the *entire* shard
+//! ring back onto its slot — a reader can accept a payload mixed from
+//! two events. The version check catches every shorter interleaving.
+//! With the default capacity (4096 slots) a full-ring lap mid-write is
+//! vanishingly rare, and the blast radius is one garbled diagnostic
+//! event, never corruption of served data.
+//!
+//! Correlation model: the trace id **is** the engine-assigned request id
+//! (minted at admission in `Engine::try_submit`). Inside the runtime the
+//! id travels two ways: explicitly, on the lane `ExecMsg` and the
+//! supervisor's `Suspect` message; and as a thread-ambient id
+//! ([`set_ambient`] / [`ambient`]) for call sites below the engine that
+//! predate the message construction (batch workers set it to the
+//! batch-leader id before touching the runtime).
+
+use std::cell::Cell;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Sentinel trace id meaning "no request context" — events recorded
+/// under it are dropped. `u64::MAX` (not 0) so real engine ids, which
+/// may legitimately start at 0, are all traceable.
+pub const NO_TRACE: u64 = u64::MAX;
+
+thread_local! {
+    static AMBIENT: Cell<u64> = const { Cell::new(NO_TRACE) };
+}
+
+/// Set this thread's ambient trace id (the batch-leader request id while
+/// a worker drives a batch through the runtime).
+pub fn set_ambient(id: u64) {
+    AMBIENT.with(|c| c.set(id));
+}
+
+/// This thread's ambient trace id, or [`NO_TRACE`].
+pub fn ambient() -> u64 {
+    AMBIENT.with(|c| c.get())
+}
+
+/// Reset this thread's ambient trace id to [`NO_TRACE`].
+pub fn clear_ambient() {
+    set_ambient(NO_TRACE);
+}
+
+/// Pipeline stage of a trace event. The wire name (`as_str`) is what the
+/// `trace` op and `--trace-out` emit; PROTOCOL.md documents the meaning
+/// of the generic `a`/`b` payload words per stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum TraceStage {
+    /// Request admitted (`a` = rows, `b` = priority: 0 high / 1 normal / 2 low).
+    Admit = 0,
+    /// Request's batch closed (`a` = batch rows, `b` = queue wait µs).
+    BatchForm = 1,
+    /// Batch popped by a worker (`a` = batch rows, `b` = µs since formed).
+    Dispatch = 2,
+    /// Batch execution attempt started (`a` = attempt, `b` = batch rows).
+    ExecStart = 3,
+    /// Attempt succeeded (`a` = attempt, `b` = exec µs).
+    ExecOk = 4,
+    /// Attempt failed retryably (`a` = attempt, `b` = exec µs).
+    ExecRetry = 5,
+    /// Backoff sleep before re-dispatch (`a` = attempt, `b` = sleep µs).
+    RetryBackoff = 6,
+    /// Rejected by an open circuit breaker (`b` = retry-after ms).
+    BreakerReject = 7,
+    /// This failure tripped the model's breaker open (`a` = attempt).
+    BreakerOpen = 8,
+    /// Artifact compiled/bound on a lane (`a` = lane, `b` = compile µs).
+    LaneCompile = 9,
+    /// Device-lane execution finished (`a` = lane, `b` = exec µs).
+    LaneExec = 10,
+    /// Lane exec timed out; supervisor suspected (`a` = lane, `b` = generation).
+    LaneTimeout = 11,
+    /// Supervisor respawned the lane (`a` = lane, `b` = new generation).
+    LaneRespawn = 12,
+    /// Deterministic fault injected on the lane (`a` = lane, `b` = fault kind).
+    FaultInjected = 13,
+    /// Result rows settled and reply sent (`a` = rows, `b` = µs since
+    /// the successful attempt finished).
+    Emit = 14,
+    /// Terminal structured error reply after exhausting retries.
+    Reject = 15,
+}
+
+impl TraceStage {
+    /// Wire name used in `trace` frames and JSON-lines export.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            TraceStage::Admit => "admit",
+            TraceStage::BatchForm => "batch_form",
+            TraceStage::Dispatch => "dispatch",
+            TraceStage::ExecStart => "exec_start",
+            TraceStage::ExecOk => "exec_ok",
+            TraceStage::ExecRetry => "exec_retry",
+            TraceStage::RetryBackoff => "retry_backoff",
+            TraceStage::BreakerReject => "breaker_reject",
+            TraceStage::BreakerOpen => "breaker_open",
+            TraceStage::LaneCompile => "lane_compile",
+            TraceStage::LaneExec => "lane_exec",
+            TraceStage::LaneTimeout => "lane_timeout",
+            TraceStage::LaneRespawn => "lane_respawn",
+            TraceStage::FaultInjected => "fault_injected",
+            TraceStage::Emit => "emit",
+            TraceStage::Reject => "reject",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<TraceStage> {
+        Some(match v {
+            0 => TraceStage::Admit,
+            1 => TraceStage::BatchForm,
+            2 => TraceStage::Dispatch,
+            3 => TraceStage::ExecStart,
+            4 => TraceStage::ExecOk,
+            5 => TraceStage::ExecRetry,
+            6 => TraceStage::RetryBackoff,
+            7 => TraceStage::BreakerReject,
+            8 => TraceStage::BreakerOpen,
+            9 => TraceStage::LaneCompile,
+            10 => TraceStage::LaneExec,
+            11 => TraceStage::LaneTimeout,
+            12 => TraceStage::LaneRespawn,
+            13 => TraceStage::FaultInjected,
+            14 => TraceStage::Emit,
+            15 => TraceStage::Reject,
+            _ => return None,
+        })
+    }
+}
+
+/// One committed span event, copied out of the ring by a reader.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Global recorder sequence number (total order across all requests).
+    pub seq: u64,
+    /// Request id the event belongs to.
+    pub id: u64,
+    /// Microseconds since the recorder was created.
+    pub t_us: u64,
+    /// Pipeline stage.
+    pub stage: TraceStage,
+    /// Stage-specific payload word (see [`TraceStage`] docs).
+    pub a: u64,
+    /// Stage-specific payload word (see [`TraceStage`] docs).
+    pub b: u64,
+}
+
+impl TraceEvent {
+    /// JSON object for one event; `with_id` adds the request id (used by
+    /// the flat JSON-lines export, omitted inside per-request frames).
+    pub fn to_json(&self, with_id: bool) -> Json {
+        let mut pairs = vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("t_us", Json::Num(self.t_us as f64)),
+            ("stage", Json::Str(self.stage.as_str().to_string())),
+            ("a", Json::Num(self.a as f64)),
+            ("b", Json::Num(self.b as f64)),
+        ];
+        if with_id {
+            pairs.push(("id", Json::Num(self.id as f64)));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// One preallocated ring slot. All payload words are atomics so the
+/// seqlock needs no `unsafe` (the crate denies it): a torn read is a
+/// version mismatch, never UB.
+#[derive(Default)]
+struct Slot {
+    /// 0 = empty; odd = write in progress; even = committed, encoding the
+    /// writer's global sequence `s` as `2*s + 2`.
+    ver: AtomicU64,
+    id: AtomicU64,
+    t_us: AtomicU64,
+    stage: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+struct Shard {
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+/// Sharded, preallocated span ring. See the module docs for the memory
+/// model. Capacity 0 disables recording entirely (`record` becomes a
+/// single branch).
+pub struct TraceRecorder {
+    epoch: Instant,
+    seq: AtomicU64,
+    shards: Vec<Shard>,
+}
+
+impl TraceRecorder {
+    /// Recorder holding at least `capacity` events (rounded up to fill
+    /// the shards evenly); `capacity == 0` disables recording.
+    pub fn new(capacity: usize) -> TraceRecorder {
+        let shards = if capacity == 0 {
+            Vec::new()
+        } else {
+            let nshards = capacity.min(8);
+            let per = (capacity + nshards - 1) / nshards;
+            (0..nshards)
+                .map(|_| Shard {
+                    cursor: AtomicU64::new(0),
+                    slots: (0..per).map(|_| Slot::default()).collect(),
+                })
+                .collect()
+        };
+        TraceRecorder { epoch: Instant::now(), seq: AtomicU64::new(0), shards }
+    }
+
+    /// A recorder that drops everything (capacity 0).
+    pub fn disabled() -> TraceRecorder {
+        TraceRecorder::new(0)
+    }
+
+    /// Whether events are being kept.
+    pub fn is_enabled(&self) -> bool {
+        !self.shards.is_empty()
+    }
+
+    /// Total preallocated slots.
+    pub fn capacity(&self) -> usize {
+        self.shards.iter().map(|s| s.slots.len()).sum()
+    }
+
+    /// Record one span event for request `id`. Lock-free and
+    /// allocation-free; a no-op when disabled or when `id` is
+    /// [`NO_TRACE`]. `a`/`b` are stage-specific payload words.
+    pub fn record(&self, id: u64, stage: TraceStage, a: u64, b: u64) {
+        if self.shards.is_empty() || id == NO_TRACE {
+            return;
+        }
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let s = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let shard = &self.shards[(s % self.shards.len() as u64) as usize];
+        let idx = (shard.cursor.fetch_add(1, Ordering::Relaxed) % shard.slots.len() as u64) as usize;
+        let slot = &shard.slots[idx];
+        // AcqRel swap: the Acquire half keeps the payload stores below
+        // from floating above the odd (write-in-progress) mark.
+        slot.ver.swap(2 * s + 1, Ordering::AcqRel);
+        slot.id.store(id, Ordering::Relaxed);
+        slot.t_us.store(t_us, Ordering::Relaxed);
+        slot.stage.store(stage as u64, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        // Release: payload is visible before the committed (even) mark.
+        slot.ver.store(2 * s + 2, Ordering::Release);
+    }
+
+    fn read_slot(slot: &Slot) -> Option<TraceEvent> {
+        for _ in 0..4 {
+            let v1 = slot.ver.load(Ordering::Acquire);
+            if v1 == 0 {
+                return None; // never written
+            }
+            if v1 % 2 == 1 {
+                std::hint::spin_loop();
+                continue; // mid-write; the writer is at most 6 stores away
+            }
+            let ev = TraceEvent {
+                seq: (v1 - 2) / 2,
+                id: slot.id.load(Ordering::Relaxed),
+                t_us: slot.t_us.load(Ordering::Relaxed),
+                stage: TraceStage::from_u64(slot.stage.load(Ordering::Relaxed))?,
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            };
+            fence(Ordering::Acquire);
+            if slot.ver.load(Ordering::Relaxed) == v1 {
+                return Some(ev);
+            }
+        }
+        None // kept being overwritten; newer events win
+    }
+
+    /// Copy out every committed event, in global sequence order.
+    /// Allocates — readers are cold paths (`trace` op, exporter, tests).
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.capacity());
+        for shard in &self.shards {
+            for slot in &shard.slots {
+                if let Some(ev) = Self::read_slot(slot) {
+                    out.push(ev);
+                }
+            }
+        }
+        out.sort_unstable_by_key(|e| e.seq);
+        out
+    }
+
+    /// The still-buffered timeline of request `id`, in order.
+    pub fn trace_for(&self, id: u64) -> Vec<TraceEvent> {
+        let mut out = self.snapshot();
+        out.retain(|e| e.id == id);
+        out
+    }
+
+    /// Up to `n` distinct request ids, most recently active first.
+    pub fn last_ids(&self, n: usize) -> Vec<u64> {
+        let snap = self.snapshot();
+        let mut out: Vec<u64> = Vec::new();
+        for ev in snap.iter().rev() {
+            if out.len() >= n {
+                break;
+            }
+            if !out.contains(&ev.id) {
+                out.push(ev.id);
+            }
+        }
+        out
+    }
+
+    /// `{"id":N,"events":[...]}` frame body for one request.
+    pub fn trace_json(&self, id: u64) -> Json {
+        let events = self.trace_for(id).iter().map(|e| e.to_json(false)).collect();
+        Json::obj(vec![("id", Json::Num(id as f64)), ("events", Json::Arr(events))])
+    }
+
+    /// Flat JSON-lines rendering of the whole ring (one event per line,
+    /// each carrying its request id) — the `--trace-out` export format.
+    pub fn render_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in self.snapshot() {
+            out.push_str(&ev.to_json(true).to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn records_and_reads_in_order() {
+        let r = TraceRecorder::new(64);
+        assert!(r.is_enabled());
+        r.record(5, TraceStage::Admit, 2, 1);
+        r.record(6, TraceStage::Admit, 1, 1);
+        r.record(5, TraceStage::BatchForm, 2, 40);
+        r.record(5, TraceStage::Emit, 2, 900);
+        let t = r.trace_for(5);
+        let stages: Vec<&str> = t.iter().map(|e| e.stage.as_str()).collect();
+        assert_eq!(stages, ["admit", "batch_form", "emit"]);
+        assert!(t.windows(2).all(|w| w[0].seq < w[1].seq && w[0].t_us <= w[1].t_us));
+        assert_eq!(t[1].b, 40);
+        assert_eq!(r.last_ids(8), [5, 6], "most recently active first");
+    }
+
+    #[test]
+    fn wraparound_keeps_newest() {
+        // 8 slots (8 shards x 1); round-robin means the ring holds
+        // exactly the 8 most recent sequence numbers after overwrite.
+        let r = TraceRecorder::new(8);
+        for i in 0..100u64 {
+            r.record(i, TraceStage::Admit, 0, 0);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 8);
+        let seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (93..=100).collect::<Vec<u64>>());
+        // ids were recorded as seq-1, so overwrite kept the newest ids
+        assert_eq!(snap[0].id, 92);
+        assert_eq!(snap[7].id, 99);
+    }
+
+    #[test]
+    fn disabled_recorder_drops_everything() {
+        let r = TraceRecorder::disabled();
+        assert!(!r.is_enabled());
+        assert_eq!(r.capacity(), 0);
+        r.record(1, TraceStage::Admit, 0, 0);
+        assert!(r.snapshot().is_empty());
+        assert!(r.render_jsonl().is_empty());
+    }
+
+    #[test]
+    fn no_trace_sentinel_is_dropped() {
+        let r = TraceRecorder::new(16);
+        r.record(NO_TRACE, TraceStage::LaneExec, 0, 0);
+        r.record(0, TraceStage::Admit, 1, 1); // id 0 is a real id
+        assert!(r.snapshot().iter().all(|e| e.id == 0));
+        assert_eq!(r.trace_for(0).len(), 1);
+    }
+
+    /// Concurrent-writer property: after the dust settles, every
+    /// readable slot is internally consistent (valid stage, an id one of
+    /// the writers actually used, payload words matching that writer's
+    /// scheme) and global sequence numbers are unique.
+    #[test]
+    fn concurrent_writers_never_produce_inconsistent_events() {
+        let r = Arc::new(TraceRecorder::new(1024));
+        let threads = 4u64;
+        let per = 2000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        // payload scheme: a = thread, b = i, id = 100 + thread
+                        r.record(100 + t, TraceStage::LaneExec, t, i);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 1024, "quiescent full ring reads completely");
+        let mut seqs: Vec<u64> = snap.iter().map(|e| e.seq).collect();
+        seqs.dedup();
+        assert_eq!(seqs.len(), snap.len(), "sequence numbers are unique");
+        for e in &snap {
+            assert_eq!(e.stage, TraceStage::LaneExec);
+            assert!(e.id >= 100 && e.id < 100 + threads, "id {} torn", e.id);
+            assert_eq!(e.a, e.id - 100, "payload a matches its writer");
+            assert!(e.b < per, "payload b in range");
+        }
+    }
+
+    #[test]
+    fn ambient_id_is_per_thread() {
+        assert_eq!(ambient(), NO_TRACE);
+        set_ambient(7);
+        assert_eq!(ambient(), 7);
+        let other = std::thread::spawn(|| ambient()).join().unwrap();
+        assert_eq!(other, NO_TRACE, "ambient does not leak across threads");
+        clear_ambient();
+        assert_eq!(ambient(), NO_TRACE);
+    }
+
+    #[test]
+    fn jsonl_export_parses_and_carries_ids() {
+        let r = TraceRecorder::new(16);
+        r.record(3, TraceStage::Admit, 1, 1);
+        r.record(3, TraceStage::Emit, 1, 250);
+        let lines: Vec<&str> = r.render_jsonl().lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in &lines {
+            let j = Json::parse(line).expect("each line is standalone JSON");
+            assert_eq!(j.get("id").as_usize(), Some(3));
+            assert!(j.get("stage").as_str().is_some());
+        }
+        let frame = r.trace_json(3);
+        assert_eq!(frame.get("id").as_usize(), Some(3));
+        assert_eq!(frame.get("events").as_arr().map(|a| a.len()), Some(2));
+    }
+}

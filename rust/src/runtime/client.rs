@@ -81,14 +81,30 @@ use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
 use super::backend;
 use super::fault::{FaultBackend, FaultPlan};
+use crate::obs::{self, TraceRecorder, TraceStage};
 use crate::util::sync::lock_ok;
+
+/// The runtime's view of the engine's trace recorder. The runtime is
+/// constructed before the engine (which owns the recorder), so lane and
+/// supervisor threads capture this shared cell at spawn time and the
+/// engine fills it once via [`Runtime::attach_tracer`]; `get()` is a
+/// lock-free read after initialization.
+type TracerCell = Arc<OnceLock<Arc<TraceRecorder>>>;
+
+/// Record a span event if a tracer has been attached (allocation-free
+/// either way).
+fn trace_event(cell: &OnceLock<Arc<TraceRecorder>>, id: u64, stage: TraceStage, a: u64, b: u64) {
+    if let Some(rec) = cell.get() {
+        rec.record(id, stage, a, b);
+    }
+}
 
 /// Bounded depth of each lane's request channel. Generous: the channel is
 /// a backpressure valve, not a queueing layer — workers block in
@@ -126,6 +142,9 @@ struct ExecMsg {
     labels: Vec<i32>,
     out: Vec<f32>,
     reply: mpsc::SyncSender<ExecReply>,
+    /// Trace id of the request driving this exec (`obs::NO_TRACE` when
+    /// no request context, e.g. warmup or training evals).
+    trace: u64,
 }
 
 struct ExecReply {
@@ -139,8 +158,10 @@ struct ExecReply {
 enum SupMsg {
     /// `run_into` timed out or found the lane disconnected at this
     /// generation. The supervisor ignores it if the lane has already
-    /// been respawned past `generation`.
-    Suspect { lane: usize, generation: u64 },
+    /// been respawned past `generation`. `trace` is the suspecting
+    /// request's trace id, so the eventual respawn lands in the victim's
+    /// timeline.
+    Suspect { lane: usize, generation: u64, trace: u64 },
     /// Runtime is dropping: exit the supervisor loop.
     Shutdown,
 }
@@ -223,6 +244,10 @@ pub struct Runtime {
     /// can file suspicions without going through the Runtime.
     sup_tx: Mutex<mpsc::SyncSender<SupMsg>>,
     shutdown: Arc<AtomicBool>,
+    /// Shared cell the engine fills with its trace recorder (see
+    /// [`Runtime::attach_tracer`]); lane threads and the supervisor hold
+    /// clones captured at spawn time.
+    tracer: TracerCell,
 }
 
 impl Runtime {
@@ -245,6 +270,7 @@ impl Runtime {
         // capacity 64: suspicions are tiny and coalescible — a full queue
         // means respawns are already pending, so droppers just try_send
         let (sup_tx, sup_rx) = mpsc::sync_channel::<SupMsg>(64);
+        let tracer: TracerCell = Arc::new(OnceLock::new());
         let mut lanes = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = mpsc::sync_channel::<Msg>(LANE_QUEUE_CAP);
@@ -253,9 +279,10 @@ impl Runtime {
             let stats = Arc::new(LaneStats::default());
             let stats_t = stats.clone();
             let fault_t = cfg.fault.clone();
+            let tracer_t = tracer.clone();
             std::thread::Builder::new()
                 .name(format!("bns-lane-{i}"))
-                .spawn(move || lane_thread(rx, ready_tx, stats_t, fault_t, i, 0))
+                .spawn(move || lane_thread(rx, ready_tx, stats_t, fault_t, tracer_t, i, 0))
                 .context("spawning device lane thread")?;
             ready_rx
                 .recv()
@@ -273,9 +300,12 @@ impl Runtime {
         let shutdown_s = shutdown.clone();
         let fault_s = cfg.fault.clone();
         let timeout_s = cfg.lane_exec_timeout;
+        let tracer_s = tracer.clone();
         std::thread::Builder::new()
             .name("bns-lane-supervisor".to_string())
-            .spawn(move || supervisor_loop(sup_rx, lanes_s, fault_s, shutdown_s, timeout_s))
+            .spawn(move || {
+                supervisor_loop(sup_rx, lanes_s, fault_s, tracer_s, shutdown_s, timeout_s)
+            })
             .context("spawning lane supervisor thread")?;
         Ok(Runtime {
             lanes,
@@ -284,7 +314,16 @@ impl Runtime {
             fault: cfg.fault,
             sup_tx: Mutex::new(sup_tx),
             shutdown,
+            tracer,
         })
+    }
+
+    /// Attach the engine's trace recorder to the runtime's lane and
+    /// supervisor threads so lane-level events (compile, exec, timeout,
+    /// respawn, fault injection) land in request timelines. One-shot:
+    /// the first attached recorder wins; later calls are ignored.
+    pub fn attach_tracer(&self, t: Arc<TraceRecorder>) {
+        let _ = self.tracer.set(t);
     }
 
     pub fn num_lanes(&self) -> usize {
@@ -356,11 +395,13 @@ impl Runtime {
         // a duplicate HLO compile + held memory under PJRT). The lane
         // thread never takes this lock, so no deadlock; concurrent loads
         // on one lane serialize, which a compile does anyway.
+        let mut compile_us = None;
         let (id, tx, generation) = {
             let mut state = lock_ok(&l.state);
             let id = match state.cache.get(path).copied() {
                 Some(id) => id,
                 None => {
+                    let t0 = Instant::now();
                     // capacity 1: the lane sends exactly one compile result
                     let (reply, rx) = mpsc::sync_channel(1);
                     state
@@ -371,11 +412,15 @@ impl Runtime {
                         .recv_timeout(self.exec_timeout.saturating_mul(COMPILE_TIMEOUT_FACTOR))
                         .context("device lane gone or compile timed out")??;
                     state.cache.insert(path.to_path_buf(), id);
+                    compile_us = Some(t0.elapsed().as_micros() as u64);
                     id
                 }
             };
             (id, state.tx.clone(), l.generation.load(Ordering::Acquire))
         };
+        if let Some(us) = compile_us {
+            trace_event(&self.tracer, obs::ambient(), TraceStage::LaneCompile, lane as u64, us);
+        }
         Ok(ExeHandle {
             shared: l.clone(),
             sup_tx: Mutex::new(lock_ok(&self.sup_tx).clone()),
@@ -383,6 +428,7 @@ impl Runtime {
             pool: Mutex::new(Vec::new()),
             path: path.to_path_buf(),
             timeout: self.exec_timeout,
+            tracer: self.tracer.clone(),
             lane,
             batch,
             dim,
@@ -422,19 +468,20 @@ fn supervisor_loop(
     rx: mpsc::Receiver<SupMsg>,
     lanes: Vec<Arc<LaneShared>>,
     fault: Option<Arc<FaultPlan>>,
+    tracer: TracerCell,
     shutdown: Arc<AtomicBool>,
     exec_timeout: Duration,
 ) {
     while let Ok(msg) = rx.recv() {
-        let (lane, generation) = match msg {
+        let (lane, generation, trace) = match msg {
             SupMsg::Shutdown => return,
-            SupMsg::Suspect { lane, generation } => (lane, generation),
+            SupMsg::Suspect { lane, generation, trace } => (lane, generation, trace),
         };
         if shutdown.load(Ordering::Relaxed) {
             return;
         }
         if let Some(shared) = lanes.get(lane) {
-            respawn_lane(shared, generation, fault.clone(), exec_timeout);
+            respawn_lane(shared, generation, fault.clone(), &tracer, trace, exec_timeout);
         }
     }
 }
@@ -449,6 +496,8 @@ fn respawn_lane(
     shared: &Arc<LaneShared>,
     suspect_generation: u64,
     fault: Option<Arc<FaultPlan>>,
+    tracer: &TracerCell,
+    trace: u64,
     exec_timeout: Duration,
 ) {
     // Stale suspicion: this incident was already handled. Only the
@@ -464,9 +513,10 @@ fn respawn_lane(
     let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
     let stats = shared.stats.clone();
     let lane = shared.index;
+    let tracer_t = tracer.clone();
     let spawned = std::thread::Builder::new()
         .name(format!("bns-lane-{lane}-g{new_generation}"))
-        .spawn(move || lane_thread(rx, ready_tx, stats, fault, lane, new_generation));
+        .spawn(move || lane_thread(rx, ready_tx, stats, fault, tracer_t, lane, new_generation));
     if spawned.is_err() {
         return;
     }
@@ -493,6 +543,11 @@ fn respawn_lane(
             state.cache.insert(path, id);
         }
     }
+    drop(state);
+    // Record under the victim's trace id only after the swap is fully
+    // committed — the event marks "service restored", not "respawn
+    // attempted".
+    trace_event(tracer, trace, TraceStage::LaneRespawn, lane as u64, new_generation);
 }
 
 /// One pooled buffer set + its private reply channel. Slots cycle
@@ -540,6 +595,8 @@ pub struct ExeHandle {
     /// Artifact path, kept for recompiles after a lane respawn.
     path: PathBuf,
     timeout: Duration,
+    /// Shared trace-recorder cell (see [`Runtime::attach_tracer`]).
+    tracer: TracerCell,
     /// Lane this executable is pinned to.
     pub lane: usize,
     pub batch: usize,
@@ -589,6 +646,7 @@ impl ExeHandle {
                 labels: std::mem::take(&mut slot.labels),
                 out: std::mem::take(&mut slot.out),
                 reply: slot.reply_tx.clone(), // bns-lint: allow(hot_path_alloc) — SyncSender clone is an Arc refcount bump, not a heap allocation; perf_layers' counting allocator pins allocs_per_eval at 0
+                trace: obs::ambient(),
             });
             bound.tx.send(msg)
         };
@@ -614,6 +672,13 @@ impl ExeHandle {
                 // stale output to a future call. The late send fails
                 // against the dropped receiver without blocking.
                 drop(slot);
+                trace_event(
+                    &self.tracer,
+                    obs::ambient(),
+                    TraceStage::LaneTimeout,
+                    self.lane as u64,
+                    generation,
+                );
                 self.suspect(generation);
                 return Err(anyhow!(
                     "device lane {} exec timed out after {:?} (generation {generation})",
@@ -673,7 +738,11 @@ impl ExeHandle {
     /// File a suspicion with the lane supervisor. `try_send`: a full
     /// queue means respawns are already pending, so dropping is safe.
     fn suspect(&self, generation: u64) {
-        let _ = lock_ok(&self.sup_tx).try_send(SupMsg::Suspect { lane: self.lane, generation });
+        let _ = lock_ok(&self.sup_tx).try_send(SupMsg::Suspect {
+            lane: self.lane,
+            generation,
+            trace: obs::ambient(),
+        });
     }
 
     /// Allocating convenience wrapper around `run_into`.
@@ -689,6 +758,7 @@ fn lane_thread(
     ready: mpsc::SyncSender<Result<()>>,
     stats: Arc<LaneStats>,
     fault: Option<Arc<FaultPlan>>,
+    tracer: TracerCell,
     lane: usize,
     generation: u64,
 ) {
@@ -702,6 +772,9 @@ fn lane_thread(
             return;
         }
     };
+    // keep a plan handle outside the backend wrapper: the exec loop
+    // detects injections by watching the plan's global counter
+    let plan_watch = fault.clone();
     // fault injection wraps the backend per (lane, generation) so chaos
     // schedules can target calls precisely and respawned lanes get a
     // fresh fault stream
@@ -720,16 +793,30 @@ fn lane_thread(
                 let _ = reply.send(r);
             }
             Msg::Exec(m) => {
-                let ExecMsg { id, batch, dim, t, w, x, labels, mut out, reply } = m;
+                let ExecMsg { id, batch, dim, t, w, x, labels, mut out, reply, trace } = m;
+                let faults_before = plan_watch.as_ref().map(|p| p.injected()).unwrap_or(0);
                 let t0 = Instant::now();
                 let result = catch_unwind(AssertUnwindSafe(|| {
                     be.exec_into(id, batch, dim, &x, t, w, &labels, &mut out)
                 }))
                 .unwrap_or_else(|_| Err(anyhow!("backend panicked during exec")));
+                let exec_us = t0.elapsed().as_micros() as u64;
                 stats.execs.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .busy_us
-                    .fetch_add(t0.elapsed().as_micros() as u64, Ordering::Relaxed);
+                stats.busy_us.fetch_add(exec_us, Ordering::Relaxed);
+                // trace before replying so lane events sequence ahead of
+                // the engine's post-reply events (exec_ok, emit)
+                if let Some(p) = plan_watch.as_ref() {
+                    if p.injected() > faults_before {
+                        trace_event(
+                            &tracer,
+                            trace,
+                            TraceStage::FaultInjected,
+                            lane as u64,
+                            p.last_kind_code(),
+                        );
+                    }
+                }
+                trace_event(&tracer, trace, TraceStage::LaneExec, lane as u64, exec_us);
                 let _ = reply.send(ExecReply { x, labels, out, result });
             }
         }
@@ -909,6 +996,57 @@ mod tests {
         let after = exe.run(&x, 0.0, 0.0, &[0]).unwrap();
         assert_eq!(after, baseline, "respawned lane must reproduce exactly");
         assert_eq!(rt.respawns_total(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn attached_tracer_sees_lane_events_through_a_respawn() {
+        let (dir, path) = stub_artifact("trace", r#"{"bns_stub_field": {"k": 1.0, "c": 0.0}}"#);
+        let plan = Arc::new(FaultPlan::new(FaultConfig {
+            schedule: vec![FaultSpec { lane: Some(0), call: 1, kind: FaultKind::Wedge }],
+            wedge_ms: 400,
+            ..FaultConfig::default()
+        }));
+        let rt = Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(100),
+            fault: Some(plan),
+        })
+        .unwrap();
+        let tracer = Arc::new(TraceRecorder::new(256));
+        rt.attach_tracer(tracer.clone());
+        // the ambient id stands in for an engine request id
+        obs::set_ambient(42);
+        let exe = rt.load_on(0, &path, 1, 1).unwrap();
+        let mut out = [0f32; 1];
+        exe.run_into(&[1.0], 0.0, 0.0, &[0], &mut out).unwrap(); // call 0: clean
+        let e = exe.run_into(&[1.0], 0.0, 0.0, &[0], &mut out).unwrap_err(); // call 1: wedge
+        assert!(e.to_string().contains("timed out"), "{e}");
+        obs::clear_ambient();
+        // lane_respawn lands when the supervisor finishes; fault_injected
+        // lands when the wedged thread finally wakes (~400 ms) — poll for
+        // the full set instead of assuming an order
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let stages: Vec<&'static str> =
+                tracer.trace_for(42).iter().map(|ev| ev.stage.as_str()).collect();
+            let done = ["lane_compile", "lane_exec", "lane_timeout", "lane_respawn", "fault_injected"]
+                .iter()
+                .all(|s| stages.contains(s));
+            if done {
+                // the wedge's fault kind code rides in the event payload
+                let fi = tracer
+                    .trace_for(42)
+                    .into_iter()
+                    .find(|ev| ev.stage == TraceStage::FaultInjected)
+                    .unwrap();
+                assert_eq!(fi.b, FaultKind::Wedge.code());
+                assert_eq!(fi.a, 0, "lane index rides in a");
+                break;
+            }
+            assert!(Instant::now() < deadline, "timeline incomplete: {stages:?}");
+            std::thread::sleep(Duration::from_millis(20));
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -50,6 +50,19 @@ pub enum FaultKind {
     Wedge,
 }
 
+impl FaultKind {
+    /// Small stable code carried in `fault_injected` trace events
+    /// (`b` payload word); 0 is reserved for "none".
+    pub fn code(self) -> u64 {
+        match self {
+            FaultKind::ExecError => 1,
+            FaultKind::Panic => 2,
+            FaultKind::Stall => 3,
+            FaultKind::Wedge => 4,
+        }
+    }
+}
+
 /// One explicit schedule entry: inject `kind` on the `call`-th exec
 /// (0-based, per lane thread lifetime) of lane `lane` (`None` = any
 /// lane). Fires at most once.
@@ -101,6 +114,10 @@ pub struct FaultPlan {
     /// One-shot latches, parallel to `cfg.schedule`.
     fired: Vec<AtomicBool>,
     injected: AtomicU64,
+    /// [`FaultKind::code`] of the most recent injection (0 = none yet).
+    /// Diagnostic only — under concurrent lanes a reader may see a
+    /// neighbor's kind, which the tracing plane tolerates.
+    last_kind: AtomicU64,
 }
 
 /// splitmix64 finalizer: a cheap, well-mixed hash for turning fault
@@ -116,7 +133,7 @@ impl FaultPlan {
     /// Build a plan from a config.
     pub fn new(cfg: FaultConfig) -> FaultPlan {
         let fired = cfg.schedule.iter().map(|_| AtomicBool::new(false)).collect();
-        FaultPlan { cfg, fired, injected: AtomicU64::new(0) }
+        FaultPlan { cfg, fired, injected: AtomicU64::new(0), last_kind: AtomicU64::new(0) }
     }
 
     /// A pass-through plan that never injects anything.
@@ -127,6 +144,12 @@ impl FaultPlan {
     /// Total faults injected so far (all lanes, all generations).
     pub fn injected(&self) -> u64 {
         self.injected.load(Ordering::Relaxed)
+    }
+
+    /// [`FaultKind::code`] of the most recent injection, 0 if none yet
+    /// (lane threads tag `fault_injected` trace events with this).
+    pub fn last_kind_code(&self) -> u64 {
+        self.last_kind.load(Ordering::Relaxed)
     }
 
     /// The configured stall duration.
@@ -155,6 +178,7 @@ impl FaultPlan {
         } else {
             self.injected.fetch_add(1, Ordering::Relaxed);
         }
+        self.last_kind.store(kind.code(), Ordering::Relaxed);
         Some(kind)
     }
 
@@ -383,6 +407,7 @@ mod tests {
         // call 2: clean again
         be.exec_into(id, 2, 1, &x, 0.0, 1.0, &[0, 0], &mut out).unwrap();
         assert_eq!(plan.injected(), 1);
+        assert_eq!(plan.last_kind_code(), FaultKind::ExecError.code());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -457,17 +457,19 @@ fn tcp_plane_survives_lane_wedge_and_recovers_bit_identically() {
     let server = Server::bind("127.0.0.1:0", ServerConfig::default(), engine.clone(), store)
         .expect("bind");
     let mut c = Client::connect(server.local_addr());
-    let sample = format!(
-        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"solver\":\"euler\",\
-         \"nfe\":2,\"seed\":3}}"
-    );
+    let sample = |tag: &str| {
+        format!(
+            "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"solver\":\"euler\",\
+             \"nfe\":2,\"seed\":3,\"tag\":\"{tag}\"}}"
+        )
+    };
 
-    let r1 = c.roundtrip(&sample);
+    let r1 = c.roundtrip(&sample("w1"));
     assert_eq!(r1.get("ok").as_bool(), Some(true), "{r1:?}");
     let reference = r1.get("samples").as_f32_vec().expect("samples");
 
     // the wedged request terminates with a structured frame either way
-    let r2 = c.roundtrip(&sample);
+    let r2 = c.roundtrip(&sample("w2"));
     if r2.get("ok").as_bool() == Some(true) {
         assert_eq!(r2.get("samples").as_f32_vec().expect("samples"), reference);
     } else {
@@ -491,13 +493,43 @@ fn tcp_plane_survives_lane_wedge_and_recovers_bit_identically() {
     }
 
     // service restored, numerics unchanged, gauges sane
-    let r3 = c.roundtrip(&sample);
+    let r3 = c.roundtrip(&sample("w3"));
     assert_eq!(r3.get("ok").as_bool(), Some(true), "{r3:?}");
     assert_eq!(r3.get("samples").as_f32_vec().expect("samples"), reference);
     let stats = c.roundtrip("{\"op\":\"stats\"}");
     assert_eq!(stats.get("lane_respawns").as_usize(), Some(1), "{stats:?}");
     assert_eq!(stats.get("inflight_rows").as_usize(), Some(0), "{stats:?}");
     assert!(stats.get("faults_injected").as_usize().unwrap_or(0) >= 1, "{stats:?}");
+
+    // the victim's trace timeline attributes the whole incident to it:
+    // the injected wedge, the lane timeout, and the supervisor respawn
+    // all show up under the request that hit them. The wedged lane
+    // thread only wakes (and records the injection) after wedge_ms, so
+    // poll instead of asserting a single snapshot.
+    let needed =
+        ["admit", "dispatch", "exec_start", "fault_injected", "lane_timeout", "lane_respawn"];
+    let deadline = Instant::now() + Duration::from_secs(5);
+    loop {
+        let t = c.roundtrip("{\"op\":\"trace\",\"tag\":\"w2\"}");
+        assert_eq!(t.get("ok").as_bool(), Some(true), "{t:?}");
+        let traces = t.get("traces").as_arr().expect("traces array");
+        assert_eq!(traces.len(), 1, "{t:?}");
+        let stages: Vec<String> = traces[0]
+            .get("events")
+            .as_arr()
+            .expect("events array")
+            .iter()
+            .map(|e| e.get("stage").as_str().expect("stage name").to_string())
+            .collect();
+        if needed.iter().all(|w| stages.iter().any(|s| s == w)) {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "victim timeline never completed, have {stages:?}, want {needed:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
     server.shutdown();
     drop(engine);
     std::fs::remove_dir_all(dir).ok();

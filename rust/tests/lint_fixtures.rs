@@ -9,8 +9,8 @@
 //! markers inside string literals.
 
 use bns_serve::analysis::docs::{
-    check_cli_flags, check_err_codes, check_metrics_fields, cli_flags, err_code_strings,
-    md_section, metrics_fields,
+    check_cli_flags, check_err_codes, check_metrics_fields, check_server_ops, cli_flags,
+    err_code_strings, md_section, metrics_fields, server_ops,
 };
 use bns_serve::analysis::lexer::lex;
 use bns_serve::analysis::rules::{lint_file, parse_manifest, FileReport, HotEntry};
@@ -230,6 +230,19 @@ fn metrics_field_drift_detected_in_section_4_only() {
     let v = check_metrics_fields(met, doc_wrong_sec);
     assert_eq!(v.len(), 1);
     assert!(v[0].msg.contains("inflight_rows"));
+}
+
+#[test]
+fn server_op_drift_detected_and_clean_doc_passes() {
+    let srv = "fn route(c: &mut Conn, op: Option<&str>) {\n    match op {\n        Some(\"sample\") => c.s(),\n        Some(\"trace\") => { c.t() }\n        Some(\"not-an-op!\") => c.x(),\n        _ => {}\n    }\n    let _ = Some(\"bare value, no arrow\");\n}\n";
+    assert_eq!(server_ops(srv), vec!["sample", "trace"]);
+    let clean = "## Ops\nthe `sample` op and the `trace` op";
+    assert!(check_server_ops(srv, clean).is_empty());
+    let stale = "## Ops\nonly `sample` documented";
+    let v = check_server_ops(srv, stale);
+    assert_eq!(v.len(), 1);
+    assert_eq!(v[0].rule, "docs_drift");
+    assert!(v[0].msg.contains("trace"));
 }
 
 #[test]

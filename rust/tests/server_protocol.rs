@@ -363,6 +363,77 @@ fn stats_models_solvers_and_connection_gauge() {
     assert!(stats.get("requests").as_f64().unwrap_or(0.0) >= 1.0);
 }
 
+/// The `trace` op returns the complete ordered event timeline for a
+/// request sampled over the same wire (PROTOCOL.md §trace, DESIGN.md
+/// §12): coordinator stages appear in causal order, the same timeline is
+/// reachable by tag, by id, and via last-N, and a query with no selector
+/// is a structured `bad_request`.
+#[test]
+fn trace_op_returns_ordered_timeline_for_sampled_request() {
+    let plane = Plane::up("trace", EngineConfig::default(), ServerConfig::default());
+    let mut c = plane.client();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"solver\":\"euler\",\
+         \"nfe\":4,\"seed\":7,\"tag\":\"victim\"}}"
+    ));
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{j:?}");
+
+    // by tag: the connection remembers which engine id served "victim"
+    let t = c.roundtrip("{\"op\":\"trace\",\"tag\":\"victim\"}");
+    assert_eq!(t.get("ok").as_bool(), Some(true), "{t:?}");
+    assert_eq!(t.get("enabled").as_bool(), Some(true), "tracing should default on");
+    let traces = t.get("traces").as_arr().expect("traces array");
+    assert_eq!(traces.len(), 1, "{t:?}");
+    let id = traces[0].get("id").as_f64().expect("trace carries the engine id") as u64;
+    let events = traces[0].get("events").as_arr().expect("events array");
+    assert!(!events.is_empty(), "empty timeline for a served request");
+
+    // seq strictly increasing => the timeline is ordered
+    let seqs: Vec<f64> = events.iter().map(|e| e.get("seq").as_f64().unwrap()).collect();
+    assert!(seqs.windows(2).all(|w| w[0] < w[1]), "seq not increasing: {seqs:?}");
+
+    // every coordinator stage of a clean request is present, in causal order
+    let stages: Vec<&str> =
+        events.iter().map(|e| e.get("stage").as_str().expect("stage name")).collect();
+    let pos = |s: &str| {
+        stages
+            .iter()
+            .position(|x| *x == s)
+            .unwrap_or_else(|| panic!("stage {s} missing from timeline {stages:?}"))
+    };
+    let order = [
+        pos("admit"),
+        pos("batch_form"),
+        pos("dispatch"),
+        pos("exec_start"),
+        pos("exec_ok"),
+        pos("emit"),
+    ];
+    assert!(order.windows(2).all(|w| w[0] < w[1]), "stages out of order: {stages:?}");
+
+    // by id: the same timeline, without needing the sampling connection
+    let by_id = c.roundtrip(&format!("{{\"op\":\"trace\",\"id\":{id}}}"));
+    assert_eq!(by_id.get("ok").as_bool(), Some(true), "{by_id:?}");
+    let traces_id = by_id.get("traces").as_arr().unwrap();
+    assert_eq!(traces_id.len(), 1);
+    assert_eq!(traces_id[0].get("events").as_arr().unwrap().len(), events.len());
+
+    // last-N covers the request too
+    let last = c.roundtrip("{\"op\":\"trace\",\"last\":4}");
+    assert_eq!(last.get("ok").as_bool(), Some(true));
+    assert!(
+        last.get("traces")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .any(|tr| tr.get("id").as_f64() == Some(id as f64)),
+        "last-N did not include the sampled request: {last:?}"
+    );
+
+    // no selector at all is a structured bad_request
+    assert_err(&c.roundtrip("{\"op\":\"trace\"}"), "bad_request");
+}
+
 /// Samples served over TCP are bit-identical to the in-process blocking
 /// path (the protocol layer must never perturb numerics).
 #[test]
