@@ -160,6 +160,45 @@ else
   lint_fail=1
 fi
 
+# Kernel roofline: the perf_layers bench times the CPU kernel layer
+# (tiled GEMM, fused resblock, NS combine, pooled MLP evals) and writes
+# BENCH_perf.json at the repo root — per-kernel GFLOP/s / GB/s against
+# the DESIGN.md §13 cost model, plus three machine-checked gates:
+# fused resblock >= 4x its naive scalar oracle at D=H=256 batch=64,
+# 0 allocs per steady-state MLP eval, and bit-identity across pool
+# widths {1,2,4} (the last is also a hard assert inside the bench).
+# Advisory unless STRICT=1 (shares the lint gate).
+step "kernel roofline: cargo bench --bench perf_layers -> BENCH_perf.json"
+if BENCH_PERF_OUT="../BENCH_perf.json" cargo bench --bench perf_layers; then
+  echo "wrote $(cd .. && pwd)/BENCH_perf.json"
+  echo "roofline gates: $(grep -o '"fused_speedup_vs_naive":[0-9.eE+-]*' ../BENCH_perf.json | tr '\n' ' ')"
+  echo "roofline gates: $(grep -o '"mlp_allocs_per_eval":[0-9.eE+-]*' ../BENCH_perf.json | tr '\n' ' ')"
+  echo "roofline gates: $(grep -o '"pool_bit_identical":\(true\|false\)' ../BENCH_perf.json | tr '\n' ' ')"
+  # vacuity guards: the roofline section and every gate field must exist
+  if ! grep -q '"roofline":' ../BENCH_perf.json; then
+    echo "WARN: BENCH_perf.json has no roofline section (kernel gates vacuous)"
+    lint_fail=1
+  else
+    speedup=$(grep -o '"fused_speedup_vs_naive":[0-9.eE+-]*' ../BENCH_perf.json | head -n1 | cut -d: -f2)
+    if ! awk -v s="${speedup:-0}" 'BEGIN { exit !(s >= 4.0) }'; then
+      echo "WARN: fused resblock speedup ${speedup:-missing}x below the 4x gate"
+      lint_fail=1
+    fi
+    allocs=$(grep -o '"mlp_allocs_per_eval":[0-9.eE+-]*' ../BENCH_perf.json | head -n1 | cut -d: -f2)
+    if [ "${allocs:-missing}" != "0" ]; then
+      echo "WARN: ${allocs:-missing} allocs per steady-state MLP eval (expected 0)"
+      lint_fail=1
+    fi
+    if ! grep -q '"pool_bit_identical":true' ../BENCH_perf.json; then
+      echo "WARN: pool bit-identity gate missing or false"
+      lint_fail=1
+    fi
+  fi
+else
+  echo "perf_layers bench failed (kernel roofline not updated)"
+  lint_fail=1
+fi
+
 echo
 if [ "$fail" -ne 0 ]; then
   echo "CI FAILED (tier-1)"

@@ -7,7 +7,9 @@ Stages (each skipped when its outputs already exist):
   3. pairs     — RK45 ground-truth (x0, x(1)) sets per (model, guidance)
   4. solvers   — BNS / BST distillation (bns.py) -> solver JSONs
   5. aot       — HLO text artifacts for every model variant (aot.py)
-  6. manifest  — manifest.json: model/solver index, FD-synth feature
+  6. mlp       — bns_mlp_field weight JSONs for the rust CPU backend
+                 (mlp_field.py; deterministic, no training)
+  7. manifest  — manifest.json: model/solver index, FD-synth feature
                  extractor + reference stats, scheduler cross-check
                  tables for the rust mirror, dataset metadata
 
@@ -25,7 +27,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from . import aot, bns, data, model, ns, pd, schedulers, train_model
+from . import aot, bns, data, mlp_field, model, ns, pd, schedulers, train_model
 
 # ---------------------------------------------------------------------------
 # job tables
@@ -72,6 +74,14 @@ PROFILES = {
 }
 
 FEAT_HIDDEN, FEAT_DIM = 64, 16
+
+# bns_mlp_field serving models for the rust CPU backend:
+# (name, hidden, emb, depth, cfg, seed, buckets). dim/classes follow the
+# image dataset; weights are a deterministic hash stream (mlp_field.py),
+# so this stage is pure emission — no training, bit-stable across runs.
+MLP_FIELD_JOBS = [
+    ("img_mlp_cpu", 256, 64, 2, True, 9001, (8, 64)),
+]
 
 
 def _wtag(w: float) -> str:
@@ -310,6 +320,30 @@ def stage_aot(out, prof, log=print):
     return entries
 
 
+def stage_mlp(out, prof, log=print):
+    """Emit bns_mlp_field artifacts (rust real-compute CPU backend)."""
+    os.makedirs(os.path.join(out, "models"), exist_ok=True)
+    entries = {}
+    for name, hidden, emb, depth, cfg, seed, buckets in MLP_FIELD_JOBS:
+        spec = mlp_field.init_mlp_field(
+            data.IMG_DIM, hidden, emb, data.NUM_CLASSES, depth, seed, cfg=cfg
+        )
+        body = json.dumps({"bns_mlp_field": spec})
+        arts = []
+        for b in buckets:
+            rel = f"models/{name}_b{b}.mlp.json"
+            full = os.path.join(out, rel)
+            if not os.path.exists(full):
+                open(full, "w").write(body)
+                log(f"  [mlp] {rel} ({len(body)/1e6:.1f} MB)")
+            arts.append({"batch": b, "path": rel})
+        entries[name] = dict(
+            artifacts=arts, cfg=cfg,
+            mlp=dict(hidden=hidden, emb=emb, depth=depth, seed=seed),
+        )
+    return entries
+
+
 def feature_extractor_weights(dim: int, seed=7):
     """Frozen random MLP used by FD-synth (DESIGN.md §3)."""
     rng = np.random.default_rng(seed)
@@ -323,7 +357,7 @@ def features(x, w1, b1, w2):
     return np.tanh(x @ w1 + b1) @ w2
 
 
-def stage_manifest(out, prof, aot_entries, log=print):
+def stage_manifest(out, prof, aot_entries, mlp_entries=None, log=print):
     wdir = os.path.join(out, "weights")
     train_meta = json.load(open(os.path.join(wdir, "train_meta.json")))
     pd_meta = json.load(open(os.path.join(wdir, "pd_meta.json")))
@@ -353,6 +387,21 @@ def stage_manifest(out, prof, aot_entries, log=print):
             forwards_per_eval=2,
             artifacts=entry,
             **extra,
+        )
+
+    # bns_mlp_field models: same manifest shape as the AOT entries; the
+    # rust backend selects the artifact kind from the weight file itself.
+    for name, e in (mlp_entries or {}).items():
+        models[name] = dict(
+            scheduler="fm_ot",
+            parametrization="velocity",
+            dim=data.IMG_DIM,
+            num_classes=data.NUM_CLASSES,
+            null_class=data.NUM_CLASSES,
+            data="images",
+            forwards_per_eval=2 if e["cfg"] else 1,
+            artifacts=e["artifacts"],
+            mlp=e["mlp"],
         )
 
     solvers = sorted(
@@ -416,13 +465,14 @@ def main():
     ap.add_argument("--out", default="../artifacts")
     ap.add_argument("--profile", default="full", choices=list(PROFILES))
     ap.add_argument("--stages", nargs="*",
-                    default=["weights", "pd", "pairs", "solvers", "aot", "manifest"])
+                    default=["weights", "pd", "pairs", "solvers", "aot", "mlp", "manifest"])
     args = ap.parse_args()
     prof = PROFILES[args.profile]
     out = os.path.abspath(args.out)
     os.makedirs(out, exist_ok=True)
     t0 = time.time()
     aot_entries = None
+    mlp_entries = None
     for st in args.stages:
         log = lambda *a: print(f"[{time.time()-t0:7.0f}s]", *a, flush=True)
         if st == "weights":
@@ -435,10 +485,14 @@ def main():
             stage_solvers(out, prof, log)
         elif st == "aot":
             aot_entries = stage_aot(out, prof, log)
+        elif st == "mlp":
+            mlp_entries = stage_mlp(out, prof, log)
         elif st == "manifest":
             if aot_entries is None:
                 aot_entries = stage_aot(out, prof, log)
-            stage_manifest(out, prof, aot_entries, log)
+            if mlp_entries is None:
+                mlp_entries = stage_mlp(out, prof, log)
+            stage_manifest(out, prof, aot_entries, mlp_entries, log)
     print(f"[artifacts] done in {time.time()-t0:.0f}s")
 
 

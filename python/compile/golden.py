@@ -1,0 +1,142 @@
+"""Golden parity fixtures for the rust CPU kernel layer.
+
+Writes `rust/tests/golden/{resblock,ns_update,mlp_field}.json`, replayed
+by `rust/tests/kernel_golden.rs` within 1e-6.
+
+Inputs and weights are NOT stored: both sides regenerate them from the
+shared integer hash stream (`mlp_field.det_values`) given the per-case
+seed, so a fixture is a seed, a shape, a 4-value input checksum, and the
+expected output as concatenated big-endian f32 bit patterns (8 hex chars
+per value). Expected outputs come from `forward_mirror` & friends — the
+f32 step-rounded mirror of the rust accumulation order — and are
+cross-checked against the `ref.py` jnp oracles at generation time, so a
+fixture can't encode a semantics bug without jax disagreeing.
+
+Run:  cd python && python -m compile.golden --out ../rust/tests/golden
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from . import mlp_field as mf
+from .kernels import ref
+
+F32 = np.float32
+
+# generation-time guard: mirror (rust op order) vs jnp oracle (XLA order)
+GEN_ATOL = 2e-5
+GEN_RTOL = 2e-4
+
+
+def hex_f32(v: np.ndarray) -> str:
+    """Concatenated big-endian u32 hex of each f32's bit pattern."""
+    bits = np.ascontiguousarray(v, "<f4").reshape(-1).view("<u4")
+    return "".join(format(int(u), "08x") for u in bits)
+
+
+def gen_resblock(log=print) -> dict:
+    cases = []
+    ci = 0
+    for d in (8, 64, 256):
+        for h in (8, 64, 256):
+            for batch in (1, 7, 64):
+                seed = 10_000 + 97 * ci
+                ci += 1
+                s = mf._Stream(seed)
+                x = s.take(batch * d, F32(1.0)).reshape(batch, d)
+                scale = s.take(batch * d, F32(0.1)).reshape(batch, d)
+                shift = s.take(batch * d, F32(0.1)).reshape(batch, d)
+                sc = mf.weight_scales(d, h, 2)
+                w1 = s.take(d * h, sc["w1"]).reshape(d, h)
+                b1 = s.take(h, sc["b1"])
+                w2 = s.take(h * d, sc["w2"]).reshape(h, d)
+                b2 = s.take(d, sc["b2"])
+                modv = np.concatenate([scale, shift], axis=1)
+                out = mf.resblock_mirror(x, modv, w1, b1, w2, b2)
+                want = np.asarray(ref.fused_resblock(x, w1, b1, w2, b2, scale, shift))
+                np.testing.assert_allclose(out, want, rtol=GEN_RTOL, atol=GEN_ATOL)
+                cases.append({
+                    "d": d, "h": h, "batch": batch, "seed": seed,
+                    "x_check": hex_f32(x.reshape(-1)[:4]),
+                    "out": hex_f32(out),
+                })
+    log(f"[golden] resblock: {len(cases)} cases")
+    return {"tolerance": 1e-6, "cases": cases}
+
+
+def gen_ns_update(log=print) -> dict:
+    cases = []
+    for ci, (k, length) in enumerate([(1, 8), (4, 64), (8, 1024), (16, 2048)]):
+        seed = 40_000 + 101 * ci
+        s = mf._Stream(seed)
+        x0 = s.take(length, F32(1.0))
+        hist = s.take(k * length, F32(0.5)).reshape(k, length)
+        b = s.take(k, F32(0.1)).astype(np.float64)
+        if k > 1:
+            b[k // 2] = 0.0  # exercise the zero-coefficient skip
+        a = F32(1.0) + s.take(1, F32(0.1))[0]
+        out = mf.ns_update_mirror(a, x0, b, hist)
+        want = np.asarray(ref.ns_update(x0[None, :], hist[:, None, :], a, b.astype(F32)))[0]
+        np.testing.assert_allclose(out, want, rtol=GEN_RTOL, atol=GEN_ATOL)
+        cases.append({
+            "k": k, "len": length, "seed": seed,
+            "x_check": hex_f32(x0[:4]),
+            "out": hex_f32(out),
+        })
+    log(f"[golden] ns_update: {len(cases)} cases")
+    return {"tolerance": 1e-6, "cases": cases}
+
+
+MLP_CASES = [
+    dict(dim=8, hidden=8, emb=4, num_classes=3, depth=2, cfg=True, batch=1,
+         t=0.25, w=1.5),
+    dict(dim=64, hidden=64, emb=16, num_classes=8, depth=2, cfg=True, batch=7,
+         t=0.62, w=0.75),
+    dict(dim=256, hidden=256, emb=64, num_classes=8, depth=1, cfg=False, batch=64,
+         t=0.875, w=0.0),
+]
+
+
+def gen_mlp_field(log=print) -> dict:
+    cases = []
+    for ci, c in enumerate(MLP_CASES):
+        x_seed = 70_000 + 211 * ci
+        spec_seed = x_seed + 50_000
+        spec = mf.init_mlp_field(c["dim"], c["hidden"], c["emb"], c["num_classes"],
+                                 c["depth"], spec_seed, cfg=c["cfg"])
+        s = mf._Stream(x_seed)
+        x = s.take(c["batch"] * c["dim"], F32(1.0)).reshape(c["batch"], c["dim"])
+        labels = np.arange(c["batch"], dtype=np.int64) % (c["num_classes"] + 1)
+        out = mf.forward_mirror(spec, x, c["t"], c["w"], labels)
+        want = mf.forward_jnp(spec, x, c["t"], c["w"], labels)
+        np.testing.assert_allclose(out, want, rtol=GEN_RTOL, atol=GEN_ATOL)
+        cases.append({
+            **c,
+            "x_seed": x_seed, "spec_seed": spec_seed,
+            "x_check": hex_f32(x.reshape(-1)[:4]),
+            "out": hex_f32(out),
+        })
+    log(f"[golden] mlp_field: {len(cases)} cases")
+    return {"tolerance": 1e-6, "cases": cases}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../rust/tests/golden")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+    for name, gen in [("resblock", gen_resblock), ("ns_update", gen_ns_update),
+                      ("mlp_field", gen_mlp_field)]:
+        path = os.path.join(out, f"{name}.json")
+        json.dump(gen(), open(path, "w"))
+        print(f"[golden] wrote {path} ({os.path.getsize(path)/1e3:.0f} KB)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,242 @@
+"""`bns_mlp_field` emitter: the real-compute CPU serving model.
+
+The rust runtime's CPU backend (`rust/src/kernels/`) executes a
+time-modulated residual MLP whose weights ship as plain numbers inside
+the artifact JSON. This module is the build-time source of those
+artifacts and of the golden parity fixtures (`compile.golden`):
+
+  * `init_mlp_field`  — deterministic weight emission. Weights come from
+    the integer hash stream in `det_values`, NOT from numpy's RNG: the
+    rust golden tests regenerate the same stream bit-for-bit, so parity
+    fixtures need no weight payloads.
+  * `forward_jnp`     — reference semantics, composed from the same
+    `ref.fused_resblock` oracle the Pallas kernels are tested against.
+  * `forward_mirror`  — an f32 step-rounded mirror of the rust kernels'
+    exact accumulation order (k-ascending, one rounding per multiply and
+    per add, no FMA). Matches the rust output to ~1 ulp of `expf`; the
+    golden fixtures store its outputs as f32 bit patterns.
+
+Per block (depth x `ref.fused_resblock` semantics):
+
+    cond  = time_embed(t * 1000, emb) + cls_emb[label]
+    mod   = cond @ mw + mb                  # [B, 2D] -> scale | shift
+    act   = fused_resblock(act, w1, b1, w2, b2, scale, shift)
+
+Guided (cfg=True) fields run a second branch with the null class and
+combine `u = u_c + w * (u_c - u_n)`; accounting-wise that is
+`forwards_per_eval = 2` in the manifest.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .kernels import ref
+
+F32 = np.float32
+
+# Tensor emission order inside one spec — the rust golden tests consume
+# the same stream in the same order (tests/kernel_golden.rs).
+BLOCK_TENSORS = ("w1", "b1", "w2", "b2", "mw", "mb")
+
+
+def det_values(seed: int, n: int) -> np.ndarray:
+    """Deterministic f32 stream shared bit-for-bit with rust.
+
+    h_i = ((seed + i) * 2654435761) mod 2^32
+    v_i = f32((h_i mod 1000) - 500) / 256.0
+
+    Every value is an integer in [-500, 500) divided by a power of two,
+    so it is exact in f32 on both sides; keep `seed` < 2^20 so the u64
+    product in rust cannot wrap.
+    """
+    i = np.arange(n, dtype=np.uint64)
+    h = ((np.uint64(seed) + i) * np.uint64(2654435761)) & np.uint64(0xFFFFFFFF)
+    return ((h % np.uint64(1000)).astype(np.int64) - 500).astype(F32) / F32(256.0)
+
+
+class _Stream:
+    """Sequential consumer over one det_values stream."""
+
+    def __init__(self, seed: int):
+        self.seed = int(seed)
+        self.pos = 0
+
+    def take(self, n: int, scale: np.float32) -> np.ndarray:
+        v = det_values(self.seed + self.pos, n)
+        self.pos += n
+        return (v * F32(scale)).astype(F32)
+
+
+def weight_scales(dim: int, hidden: int, emb: int) -> dict:
+    """Per-tensor f32 scales (exact-f32 arithmetic, mirrored in rust)."""
+    return {
+        "cls_emb": F32(0.2),
+        "w1": F32(0.5) / np.sqrt(F32(dim)),
+        "b1": F32(0.05),
+        "w2": F32(0.25) / np.sqrt(F32(hidden)),
+        "b2": F32(0.01),
+        "mw": F32(0.1) / np.sqrt(F32(emb)),
+        "mb": F32(0.01),
+    }
+
+
+def init_mlp_field(dim, hidden, emb, num_classes, depth, seed, cfg=True) -> dict:
+    """Emit a `bns_mlp_field` spec dict (the artifact JSON's inner object).
+
+    Stream order: cls_emb, then per block w1, b1, w2, b2, mw, mb.
+    """
+    assert emb >= 2 and emb % 2 == 0, "emb must be even and >= 2"
+    assert depth >= 1
+    s = _Stream(seed)
+    sc = weight_scales(dim, hidden, emb)
+    sizes = {
+        "w1": dim * hidden, "b1": hidden, "w2": hidden * dim,
+        "b2": dim, "mw": emb * 2 * dim, "mb": 2 * dim,
+    }
+    cls_emb = s.take((num_classes + 1) * emb, sc["cls_emb"])
+    blocks = []
+    for _ in range(depth):
+        blocks.append({k: s.take(sizes[k], sc[k]).tolist() for k in BLOCK_TENSORS})
+    return {
+        "dim": dim,
+        "hidden": hidden,
+        "emb": emb,
+        "num_classes": num_classes,
+        "null_class": num_classes,
+        "cfg": bool(cfg),
+        "cls_emb": cls_emb.tolist(),
+        "blocks": blocks,
+    }
+
+
+def time_embed_f64(t, emb: int) -> np.ndarray:
+    """f64 sinusoidal embedding truncated to f32 — the rust mirror.
+
+    Identical to `ref.time_embed(t * 1000, emb)` up to f64 libm ulps,
+    which vanish in the f32 cast.
+    """
+    half = emb // 2
+    k = np.arange(half, dtype=np.float64)
+    freqs = np.exp(-np.log(1e4) * k / half)
+    args = np.float64(t) * 1000.0 * freqs
+    return np.concatenate([np.cos(args), np.sin(args)]).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# f32 step-rounded mirror of the rust kernels (golden-fixture oracle)
+# ---------------------------------------------------------------------------
+
+
+def gemm_f32(a, b, bias, res=None) -> np.ndarray:
+    """k-ascending f32 accumulation: the rust GEMM's exact op order.
+
+    acc starts at bias (or res + bias); every multiply and every add
+    rounds to f32 — no FMA, no reassociation.
+    """
+    a = np.ascontiguousarray(a, F32)
+    b = np.ascontiguousarray(b, F32)
+    m, k = a.shape
+    n = b.shape[1]
+    acc = np.broadcast_to(np.asarray(bias, F32), (m, n)).copy()
+    if res is not None:
+        acc = (np.asarray(res, F32) + acc).astype(F32)
+    for kk in range(k):
+        acc = (acc + a[:, kk : kk + 1] * b[kk : kk + 1, :]).astype(F32)
+    return acc
+
+
+def silu_f32(v: np.ndarray) -> np.ndarray:
+    """v * (1 / (1 + exp(-v))), all f32 — the rust op order (reciprocal
+    then multiply, not a division by v-scaled denominator)."""
+    v = np.asarray(v, F32)
+    s = (F32(1.0) / (F32(1.0) + np.exp(-v))).astype(F32)
+    return (v * s).astype(F32)
+
+
+def resblock_mirror(x, modv, w1, b1, w2, b2) -> np.ndarray:
+    """fused_resblock_into mirror: modulate -> GEMM -> SiLU -> GEMM+res."""
+    x = np.asarray(x, F32)
+    d = x.shape[1]
+    scale = np.asarray(modv, F32)[:, :d]
+    shift = np.asarray(modv, F32)[:, d:]
+    mod = ((x * (F32(1.0) + scale)).astype(F32) + shift).astype(F32)
+    h = silu_f32(gemm_f32(mod, np.asarray(w1, F32).reshape(d, -1), b1))
+    return gemm_f32(h, np.asarray(w2, F32).reshape(-1, d), b2, res=x)
+
+
+def ns_update_mirror(a, x0, b, hist) -> np.ndarray:
+    """ns_combine_into mirror: seed a*x0, then j-ascending adds with the
+    zero-coefficient skip (f32 steps)."""
+    x = (F32(a) * np.asarray(x0, F32)).astype(F32)
+    for j, bj in enumerate(b):
+        bj32 = F32(bj)
+        if bj32 == F32(0.0):
+            continue
+        x = (x + bj32 * np.asarray(hist[j], F32)).astype(F32)
+    return x
+
+
+def forward_mirror(spec: dict, x, t, w, labels) -> np.ndarray:
+    """Full bns_mlp_field eval in the rust kernels' exact f32 op order."""
+    d, e = spec["dim"], spec["emb"]
+    cls = np.asarray(spec["cls_emb"], F32).reshape(-1, e)
+    temb = time_embed_f64(t, e)
+    labels = np.asarray(labels, np.int64)
+
+    def branch(null: bool) -> np.ndarray:
+        li = np.full_like(labels, spec["null_class"]) if null else labels
+        cond = (temb[None, :] + cls[li]).astype(F32)
+        act = np.asarray(x, F32)
+        for blk in spec["blocks"]:
+            mw = np.asarray(blk["mw"], F32).reshape(e, 2 * d)
+            modv = gemm_f32(cond, mw, blk["mb"])
+            act = resblock_mirror(act, modv, blk["w1"], blk["b1"], blk["w2"], blk["b2"])
+        return act
+
+    uc = branch(False)
+    if not spec["cfg"]:
+        return uc
+    un = branch(True)
+    return (uc + F32(w) * (uc - un).astype(F32)).astype(F32)
+
+
+# ---------------------------------------------------------------------------
+# jnp reference (ref.py semantics — the emitter's ground truth)
+# ---------------------------------------------------------------------------
+
+
+def forward_jnp(spec: dict, x, t, w, labels) -> np.ndarray:
+    """Reference forward composed from `ref.fused_resblock`. Matmul order
+    differs from the mirror (XLA-chosen), so agreement is approximate —
+    `compile.golden` asserts it at generation time."""
+    import jax.numpy as jnp
+
+    d, e = spec["dim"], spec["emb"]
+    cls = jnp.asarray(np.asarray(spec["cls_emb"], F32).reshape(-1, e))
+    temb = jnp.asarray(time_embed_f64(t, e))
+    labels = np.asarray(labels, np.int64)
+
+    def branch(null: bool):
+        li = np.full_like(labels, spec["null_class"]) if null else labels
+        cond = temb[None, :] + cls[li]
+        act = jnp.asarray(np.asarray(x, F32))
+        for blk in spec["blocks"]:
+            mw = jnp.asarray(np.asarray(blk["mw"], F32).reshape(e, 2 * d))
+            mod = cond @ mw + jnp.asarray(np.asarray(blk["mb"], F32))
+            act = ref.fused_resblock(
+                act,
+                jnp.asarray(np.asarray(blk["w1"], F32).reshape(d, -1)),
+                jnp.asarray(np.asarray(blk["b1"], F32)),
+                jnp.asarray(np.asarray(blk["w2"], F32).reshape(-1, d)),
+                jnp.asarray(np.asarray(blk["b2"], F32)),
+                mod[:, :d],
+                mod[:, d:],
+            )
+        return act
+
+    uc = branch(False)
+    if not spec["cfg"]:
+        return np.asarray(uc)
+    un = branch(True)
+    return np.asarray(uc + w * (uc - un))

@@ -1,0 +1,77 @@
+"""bns_mlp_field emitter + mirror vs the jnp reference semantics.
+
+The rust CPU backend replays `compile.golden`'s fixtures bit-for-bit
+against `forward_mirror`; these tests pin the python side of that
+contract — the deterministic weight stream, the emitter's spec shape,
+and the mirror's agreement with `ref.fused_resblock` composition.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import mlp_field as mf
+from compile.kernels import ref
+
+
+def test_det_values_are_exact_and_stable():
+    v = mf.det_values(1234, 8)
+    # every value is (int in [-500, 500)) / 256 — exact in f32
+    assert v.dtype == np.float32
+    assert np.all(v * 256.0 == np.round(v * 256.0))
+    assert np.all(np.abs(v) <= 500.0 / 256.0)
+    # stream is stable and shift-consistent: det(s)[k:] == det(s+k)
+    np.testing.assert_array_equal(mf.det_values(1234, 8)[3:], mf.det_values(1237, 5))
+
+
+def test_emitter_is_deterministic_and_well_shaped():
+    a = mf.init_mlp_field(8, 12, 4, 3, depth=2, seed=77)
+    b = mf.init_mlp_field(8, 12, 4, 3, depth=2, seed=77)
+    assert json.dumps(a) == json.dumps(b)
+    assert a["null_class"] == 3 and a["cfg"] is True
+    assert len(a["cls_emb"]) == 4 * 4
+    assert len(a["blocks"]) == 2
+    blk = a["blocks"][0]
+    assert len(blk["w1"]) == 8 * 12 and len(blk["mw"]) == 4 * 2 * 8
+    assert len(blk["mb"]) == 2 * 8
+
+
+def test_time_embed_matches_ref_oracle():
+    for t in (0.0, 0.25, 0.62, 1.0):
+        mine = mf.time_embed_f64(t, 16)
+        want = np.asarray(ref.time_embed(np.float32(t) * 1000.0, 16))
+        np.testing.assert_allclose(mine, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("d,h,batch", [(4, 6, 1), (8, 8, 7), (24, 16, 5)])
+def test_resblock_mirror_matches_ref(d, h, batch):
+    s = mf._Stream(555)
+    x = s.take(batch * d, np.float32(1.0)).reshape(batch, d)
+    scale = s.take(batch * d, np.float32(0.1)).reshape(batch, d)
+    shift = s.take(batch * d, np.float32(0.1)).reshape(batch, d)
+    sc = mf.weight_scales(d, h, 2)
+    w1 = s.take(d * h, sc["w1"]).reshape(d, h)
+    b1 = s.take(h, sc["b1"])
+    w2 = s.take(h * d, sc["w2"]).reshape(h, d)
+    b2 = s.take(d, sc["b2"])
+    got = mf.resblock_mirror(x, np.concatenate([scale, shift], axis=1), w1, b1, w2, b2)
+    want = np.asarray(ref.fused_resblock(x, w1, b1, w2, b2, scale, shift))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("cfg", [False, True])
+def test_forward_mirror_matches_jnp_composition(cfg):
+    spec = mf.init_mlp_field(8, 12, 4, 3, depth=2, seed=91, cfg=cfg)
+    s = mf._Stream(17)
+    x = s.take(5 * 8, np.float32(1.0)).reshape(5, 8)
+    labels = np.arange(5) % 4
+    got = mf.forward_mirror(spec, x, 0.37, 1.25, labels)
+    want = mf.forward_jnp(spec, x, 0.37, 1.25, labels)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+    # guidance weight must matter when cfg is on (labels vs null differ)
+    other = mf.forward_mirror(spec, x, 0.37, 0.0, labels)
+    if cfg:
+        assert np.max(np.abs(got - other)) > 0
+    else:
+        np.testing.assert_array_equal(got, other)

@@ -16,14 +16,29 @@
 //! zero-allocation claims are measured, not asserted from reading the
 //! code: the pooled device-lane section reports allocations per
 //! `eval_into` through the full solver → field → lane → backend path.
+//!
+//! The **roofline section** covers the CPU kernel layer (`kernels::`,
+//! DESIGN.md §13): per-kernel flops, bytes, GFLOP/s, GB/s from the
+//! analytic cost model in `kernels::{flops, bytes}`, the fused-vs-naive
+//! resblock speedup, steady-state allocations per `bns_mlp_field` eval
+//! through the pooled lane path, and bit-identity of full NS samples
+//! across intra-lane pool sizes {1, 2, 4}. Machine-readable output goes
+//! to `BENCH_perf.json` (path override: `BENCH_PERF_OUT`) with a flat
+//! `gates` block that ci.sh greps under STRICT=1.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Instant;
 
-use bns_serve::bench_util::{stub_store, write_results, Bench, StubModel, Table};
-use bns_serve::runtime::{LoadedModel, Runtime};
+use bns_serve::bench_util::{
+    mlp_store, stub_store, write_results, Bench, MlpModelSpec, StubModel, Table,
+};
+use bns_serve::kernels::{
+    bytes as kbytes, flops as kflops, fused_resblock_into, gemm_bias, gemm_bias_naive,
+    naive_resblock_into, ns_combine_into, TILE,
+};
+use bns_serve::runtime::{LoadedModel, Runtime, RuntimeConfig};
 use bns_serve::solver::field::Field;
 use bns_serve::solver::{NsSolver, SampleWorkspace, Solver};
 use bns_serve::util::json::Json;
@@ -58,6 +73,15 @@ static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn alloc_count() -> u64 {
     ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Seconds per call over `iters` back-to-back invocations.
+fn time_it(iters: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
 }
 
 fn time_eval(field: &dyn Field, rows: usize, dim: usize, iters: usize) -> anyhow::Result<f64> {
@@ -328,6 +352,260 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n=== L3: generic steppers — allocating sample vs workspace sample_into ===");
     gen.print();
+
+    // ---- Roofline: CPU kernel layer (kernels::, DESIGN.md §13) ----------
+    //
+    // Flops/bytes come from the analytic model in `kernels::{flops,
+    // bytes}`; times are measured here, so GFLOP/s and GB/s place each
+    // kernel against the machine's roofline. Fused and naive outputs are
+    // asserted bit-identical *before* timing — the speedup gate is never
+    // purchased with a numerics change.
+    let mut roofline = Vec::new();
+    let mut roof_table = Table::new(&[
+        "kernel", "shape", "time(us)", "GFLOP/s", "GB/s", "vs-naive",
+    ]);
+    let mut roof_row = |name: &str,
+                        shape: String,
+                        dt: f64,
+                        flops: f64,
+                        bytes: f64,
+                        speedup: Option<f64>| {
+        roof_table.row(vec![
+            name.into(),
+            shape.clone(),
+            format!("{:.1}", dt * 1e6),
+            format!("{:.2}", flops / dt / 1e9),
+            format!("{:.2}", bytes / dt / 1e9),
+            speedup.map(|s| format!("{s:.2}x")).unwrap_or_else(|| "-".into()),
+        ]);
+        let mut obj = vec![
+            ("kernel", Json::Str(name.into())),
+            ("shape", Json::Str(shape)),
+            ("time_us", Json::Num(dt * 1e6)),
+            ("flops", Json::Num(flops)),
+            ("bytes", Json::Num(bytes)),
+            ("gflops", Json::Num(flops / dt / 1e9)),
+            ("gbs", Json::Num(bytes / dt / 1e9)),
+        ];
+        if let Some(s) = speedup {
+            obj.push(("speedup_vs_naive", Json::Num(s)));
+        }
+        roofline.push(Json::obj(obj));
+    };
+
+    // fused resblock vs scalar oracle at the gated shape: D=H=256, rows=64
+    let fused_speedup;
+    {
+        let (rows, d, h) = (64usize, 256usize, 256usize);
+        let mut rng = Pcg32::seeded(17);
+        let sc = |v: Vec<f32>, s: f32| -> Vec<f32> { v.into_iter().map(|u| u * s).collect() };
+        let x = rng.normal_vec(rows * d);
+        let modv = sc(rng.normal_vec(rows * 2 * d), 0.1);
+        let w1 = sc(rng.normal_vec(d * h), 0.03);
+        let b1 = sc(rng.normal_vec(h), 0.05);
+        let w2 = sc(rng.normal_vec(h * d), 0.03);
+        let b2 = sc(rng.normal_vec(d), 0.01);
+        let mut mbuf = vec![0f32; TILE * d];
+        let mut hbuf = vec![0f32; TILE * h];
+        let mut mrow = vec![0f32; d];
+        let mut hrow = vec![0f32; h];
+        let mut out_f = vec![0f32; rows * d];
+        let mut out_n = vec![0f32; rows * d];
+        fused_resblock_into(
+            rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mbuf, &mut hbuf, &mut out_f,
+        );
+        naive_resblock_into(
+            rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mrow, &mut hrow, &mut out_n,
+        );
+        assert_eq!(
+            out_f.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out_n.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "fused resblock drifted from the scalar oracle"
+        );
+        let dt_f = time_it(40, || {
+            fused_resblock_into(
+                rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mbuf, &mut hbuf, &mut out_f,
+            )
+        });
+        let dt_n = time_it(8, || {
+            naive_resblock_into(
+                rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mrow, &mut hrow, &mut out_n,
+            )
+        });
+        fused_speedup = dt_n / dt_f;
+        let shape = "rows=64 d=256 h=256".to_string();
+        let (fl, by) = (kflops::resblock(rows, d, h), kbytes::resblock(rows, d, h));
+        roof_row("resblock-naive", shape.clone(), dt_n, fl, by, None);
+        roof_row("resblock-fused", shape, dt_f, fl, by, Some(fused_speedup));
+
+        // bare GEMM at the same shape (the resblock's dominant term)
+        let mut out_g = vec![0f32; rows * h];
+        let mut out_gn = vec![0f32; rows * h];
+        gemm_bias(rows, d, h, &x, &w1, &b1, &mut out_g);
+        gemm_bias_naive(rows, d, h, &x, &w1, &b1, &mut out_gn);
+        assert_eq!(
+            out_g.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            out_gn.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "tiled gemm drifted from the scalar oracle"
+        );
+        let dt_g = time_it(40, || gemm_bias(rows, d, h, &x, &w1, &b1, &mut out_g));
+        let dt_gn = time_it(8, || gemm_bias_naive(rows, d, h, &x, &w1, &b1, &mut out_gn));
+        let shape = "m=64 k=256 n=256".to_string();
+        let (fl, by) = (kflops::gemm(rows, d, h), kbytes::gemm(rows, d, h));
+        roof_row("gemm-naive", shape.clone(), dt_gn, fl, by, None);
+        roof_row("gemm-tiled", shape, dt_g, fl, by, Some(dt_gn / dt_g));
+    }
+
+    // streamed NS combine (bandwidth-bound): nfe=16 history rows, batch=64
+    {
+        let (k, len) = (16usize, 64 * 256usize);
+        let mut rng = Pcg32::seeded(19);
+        let x0 = rng.normal_vec(len);
+        let hist = rng.normal_vec(k * len);
+        let b: Vec<f64> = (0..k).map(|_| 0.1 * rng.normal()).collect();
+        let mut xout = vec![0f32; len];
+        let dt = time_it(200, || ns_combine_into(1.02, &x0, &b, &hist, len, &mut xout));
+        roof_row(
+            "ns-combine",
+            format!("k=16 len={len}"),
+            dt,
+            kflops::ns_combine(k, len),
+            kbytes::ns_combine(k, len),
+            None,
+        );
+    }
+    println!("\n=== roofline: CPU kernel layer (fused vs naive, GFLOP/s, GB/s) ===");
+    roof_table.print();
+
+    // ---- bns_mlp_field exec: allocations per eval through the pool ------
+    //
+    // The real-compute analogue of the stub alloc section above: a full
+    // `eval_into` through solver buffer -> ModelField -> lane RPC -> MLP
+    // backend -> intra-lane row pool and back must allocate ZERO times at
+    // steady state. This is the `mlp_allocs_per_eval` STRICT gate.
+    let (mlp_allocs_per_eval, mlp_eval_us) = {
+        let (store, dir) = mlp_store(
+            "perf-mlp",
+            &[MlpModelSpec {
+                name: "perf_mlp",
+                dim: 256,
+                hidden: 256,
+                emb: 64,
+                depth: 2,
+                num_classes: 8,
+                cfg: true,
+                seed: 101,
+                buckets: &[64],
+            }],
+        )?;
+        let rt = Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            mlp_pool_threads: 2,
+            ..Default::default()
+        })?;
+        let info = store.model("perf_mlp")?.clone();
+        let model = Arc::new(LoadedModel::load(&rt, &info)?);
+        let field = model.bind((0..64).map(|i| (i % 8) as i32).collect(), 1.5);
+        let mut rng = Pcg32::seeded(23);
+        let x = rng.normal_vec(64 * info.dim);
+        let mut out = vec![0f32; x.len()];
+        // warm the lane slot pool, the row pool's job slots, and scratch
+        for _ in 0..8 {
+            field.eval_into(0.5, &x, &mut out)?;
+        }
+        let iters = 200usize;
+        let a0 = alloc_count();
+        let t0 = Instant::now();
+        for i in 0..iters {
+            field.eval_into(0.1 + 0.8 * (i as f64 / iters as f64), &x, &mut out)?;
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        let allocs = (alloc_count() - a0) as f64 / iters as f64;
+        std::fs::remove_dir_all(&dir).ok();
+        (allocs, dt * 1e6)
+    };
+    println!(
+        "\n=== bns_mlp_field exec (d=256 h=256 depth=2 cfg, batch=64, pool=2) ===\n\
+         eval_into: {mlp_eval_us:.1} us/eval, {mlp_allocs_per_eval:.3} allocs/eval"
+    );
+    if mlp_allocs_per_eval > 0.0 {
+        eprintln!(
+            "[perf] WARNING: mlp eval_into allocated {mlp_allocs_per_eval:.3}/eval — \
+             expected 0 at steady state"
+        );
+    }
+    results.push(Json::obj(vec![
+        ("artifact", Json::Str("mlp-eval-pooled".into())),
+        ("batch", Json::Num(64.0)),
+        ("allocs_per_eval", Json::Num(mlp_allocs_per_eval)),
+        ("eval_us", Json::Num(mlp_eval_us)),
+    ]));
+
+    // ---- intra-lane pool: bit-identity across pool sizes {1, 2, 4} ------
+    //
+    // Full NS samples (dense solver, nfe=8) through complete runtimes
+    // whose only difference is `mlp_pool_threads`. GradFan discipline:
+    // the chunk grid is fixed, so the thread count can never change bits.
+    let pool_bit_identical = {
+        let (store, dir) = mlp_store(
+            "perf-pool",
+            &[MlpModelSpec {
+                name: "pool_mlp",
+                dim: 64,
+                hidden: 96,
+                emb: 16,
+                depth: 2,
+                num_classes: 8,
+                cfg: true,
+                seed: 7,
+                buckets: &[64],
+            }],
+        )?;
+        let info = store.model("pool_mlp")?.clone();
+        let solver = dense_ns(8);
+        let mut rng = Pcg32::seeded(3);
+        let x0 = rng.normal_vec(64 * info.dim);
+        let labels: Vec<i32> = (0..64).map(|i| (i % 8) as i32).collect();
+        let mut base: Option<Vec<u32>> = None;
+        let mut same = true;
+        for threads in [1usize, 2, 4] {
+            let rt = Runtime::with_config(RuntimeConfig {
+                lanes: 1,
+                mlp_pool_threads: threads,
+                ..Default::default()
+            })?;
+            let model = Arc::new(LoadedModel::load(&rt, &info)?);
+            let field = model.bind(labels.clone(), 0.3);
+            let x1 = solver.sample(&field, &x0)?;
+            let bits: Vec<u32> = x1.iter().map(|v| v.to_bits()).collect();
+            match &base {
+                None => base = Some(bits),
+                Some(b) => same &= *b == bits,
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+        same
+    };
+    assert!(pool_bit_identical, "NS samples drifted across mlp pool sizes {{1, 2, 4}}");
+    println!("pool bit-identity across sizes {{1, 2, 4}}: ok");
+
+    // ---- machine-readable roofline + gates (tracked PR-over-PR) ---------
+    let bench = Json::obj(vec![
+        ("roofline", Json::Arr(roofline)),
+        (
+            "gates",
+            Json::obj(vec![
+                ("fused_speedup_vs_naive", Json::Num(fused_speedup)),
+                ("mlp_allocs_per_eval", Json::Num(mlp_allocs_per_eval)),
+                ("pool_bit_identical", Json::Bool(pool_bit_identical)),
+            ]),
+        ),
+        ("results", Json::Arr(results.clone())),
+    ]);
+    let out_path =
+        std::env::var("BENCH_PERF_OUT").unwrap_or_else(|_| "BENCH_perf.json".to_string());
+    std::fs::write(&out_path, bench.to_string())?;
+    println!("wrote {out_path}");
 
     let path = write_results("perf_layers", &Json::Arr(results))?;
     println!("\nwrote {}", path.display());

@@ -396,6 +396,7 @@ fn run_fault_recovery(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow:
         lanes: 1,
         lane_exec_timeout: Duration::from_millis(FAULT_LANE_TIMEOUT_MS),
         fault: Some(plan),
+        ..Default::default()
     })?);
     let engine = Engine::start(
         store.clone(),

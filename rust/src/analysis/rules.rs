@@ -57,8 +57,9 @@ const FIELD_CALLS: [&str; 8] = [
     "sample_into",
 ];
 
-/// Directories the panic-freedom rule applies to (the serving plane).
-const PANIC_FREE_DIRS: [&str; 3] = ["coordinator/", "runtime/", "distill/"];
+/// Directories the panic-freedom rule applies to (the serving plane and
+/// the CPU kernel layer it executes).
+const PANIC_FREE_DIRS: [&str; 4] = ["coordinator/", "runtime/", "distill/", "kernels/"];
 
 /// One finding.
 #[derive(Debug, Clone)]

@@ -272,6 +272,122 @@ pub fn stub_store(tag: &str, models: &[StubModel]) -> Result<(Arc<ArtifactStore>
     Ok((Arc::new(ArtifactStore::load(&dir)?), dir))
 }
 
+/// Description of one seeded `bns_mlp_field` model (the real-compute CPU
+/// backend; see `runtime::backend` and `kernels::mlp`). Weights are
+/// generated deterministically from `seed` with scales that keep
+/// activations O(1) at any depth.
+pub struct MlpModelSpec<'a> {
+    pub name: &'a str,
+    pub dim: usize,
+    pub hidden: usize,
+    /// Time/label embedding width (even, >= 2).
+    pub emb: usize,
+    pub depth: usize,
+    pub num_classes: usize,
+    /// Guided field: 2 forwards per eval (cond + null) and a CFG combine.
+    pub cfg: bool,
+    pub seed: u64,
+    pub buckets: &'a [usize],
+}
+
+/// Write a complete, loadable artifact directory of `bns_mlp_field`
+/// models (manifest + per-bucket weight files, no distilled solvers) —
+/// the real-compute analogue of [`write_stub_artifacts`]. The same seed
+/// always emits bit-identical weights, so tests can rebuild equal stores.
+pub fn write_mlp_artifacts(dir: &Path, models: &[MlpModelSpec]) -> Result<()> {
+    use std::collections::BTreeMap;
+    std::fs::create_dir_all(dir.join("models"))?;
+    let mut model_entries: BTreeMap<String, Json> = BTreeMap::new();
+    for m in models {
+        anyhow::ensure!(m.emb >= 2 && m.emb % 2 == 0, "mlp spec: emb must be even and >= 2");
+        anyhow::ensure!(m.depth >= 1, "mlp spec: depth must be >= 1");
+        let mut rng = Pcg32::seeded(m.seed);
+        let mut arr = |n: usize, s: f32| {
+            Json::arr_f32(&rng.normal_vec(n).iter().map(|v| v * s).collect::<Vec<_>>())
+        };
+        let s1 = 0.5 / (m.dim as f32).sqrt();
+        let s2 = 0.25 / (m.hidden as f32).sqrt();
+        let sm = 0.1 / (m.emb as f32).sqrt();
+        let blocks: Vec<Json> = (0..m.depth)
+            .map(|_| {
+                Json::obj(vec![
+                    ("w1", arr(m.dim * m.hidden, s1)),
+                    ("b1", arr(m.hidden, 0.05)),
+                    ("w2", arr(m.hidden * m.dim, s2)),
+                    ("b2", arr(m.dim, 0.01)),
+                    ("mw", arr(m.emb * 2 * m.dim, sm)),
+                    ("mb", arr(2 * m.dim, 0.01)),
+                ])
+            })
+            .collect();
+        let spec = Json::obj(vec![
+            ("dim", Json::Num(m.dim as f64)),
+            ("hidden", Json::Num(m.hidden as f64)),
+            ("emb", Json::Num(m.emb as f64)),
+            ("num_classes", Json::Num(m.num_classes as f64)),
+            ("null_class", Json::Num(m.num_classes as f64)),
+            ("cfg", Json::Bool(m.cfg)),
+            ("cls_emb", arr((m.num_classes + 1) * m.emb, 0.2)),
+            ("blocks", Json::Arr(blocks)),
+        ]);
+        let body = Json::obj(vec![("bns_mlp_field", spec)]).to_string();
+        let mut buckets = Vec::new();
+        for &b in m.buckets {
+            // one identical weight file per bucket: the store's bucket
+            // chunking expects a path per batch size
+            let rel = format!("models/{}_b{b}.mlp.json", m.name);
+            crate::util::fsio::write_atomic(&dir.join(&rel), &body)?;
+            buckets.push(Json::obj(vec![
+                ("batch", Json::Num(b as f64)),
+                ("path", Json::Str(rel)),
+            ]));
+        }
+        model_entries.insert(
+            m.name.to_string(),
+            Json::obj(vec![
+                ("scheduler", Json::Str("fm_ot".into())),
+                ("parametrization", Json::Str("velocity".into())),
+                ("dim", Json::Num(m.dim as f64)),
+                ("num_classes", Json::Num(m.num_classes as f64)),
+                ("null_class", Json::Num(m.num_classes as f64)),
+                ("data", Json::Str("images".into())),
+                ("forwards_per_eval", Json::Num(if m.cfg { 2.0 } else { 1.0 })),
+                ("artifacts", Json::Arr(buckets)),
+            ]),
+        );
+    }
+    let dim = models.first().map(|m| m.dim).unwrap_or(2);
+    let hidden = 2;
+    let feat_dim = 2;
+    let fd = Json::obj(vec![
+        ("dim", Json::Num(dim as f64)),
+        ("feat_hidden", Json::Num(hidden as f64)),
+        ("feat_dim", Json::Num(feat_dim as f64)),
+        ("w1", Json::arr_f64(&vec![0.1; dim * hidden])),
+        ("b1", Json::arr_f64(&[0.0; 2])),
+        ("w2", Json::arr_f64(&[1.0, 0.0, 0.0, 1.0])),
+        ("ref_mean", Json::arr_f64(&[0.0, 0.0])),
+        ("ref_cov", Json::arr_f64(&[1.0, 0.0, 0.0, 1.0])),
+    ]);
+    let manifest = Json::obj(vec![
+        ("models", Json::Obj(model_entries)),
+        ("solvers", Json::Arr(Vec::new())),
+        ("fd", fd),
+    ]);
+    // atomic: a torn manifest would make the whole artifact dir unloadable
+    crate::util::fsio::write_atomic(&dir.join("manifest.json"), &manifest.to_string())?;
+    Ok(())
+}
+
+/// Write mlp artifacts to a per-process temp dir and load them as an
+/// `ArtifactStore` — the real-compute sibling of [`stub_store`]. The
+/// caller owns cleanup of the returned directory.
+pub fn mlp_store(tag: &str, models: &[MlpModelSpec]) -> Result<(Arc<ArtifactStore>, PathBuf)> {
+    let dir = std::env::temp_dir().join(format!("bns-mlpstore-{}-{tag}", std::process::id()));
+    write_mlp_artifacts(&dir, models)?;
+    Ok((Arc::new(ArtifactStore::load(&dir)?), dir))
+}
+
 // ---------------------------------------------------------------------------
 // reporting
 // ---------------------------------------------------------------------------

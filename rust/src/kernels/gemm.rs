@@ -1,0 +1,283 @@
+//! Blocked f32 GEMM with explicit 8-wide accumulator lanes.
+//!
+//! The micro-kernel computes a 4-row x 8-column output tile with the
+//! accumulators held in `[[f32; 8]; 4]` arrays. The inner loop walks k
+//! ascending and, for each k, loads one contiguous 8-wide slice of the
+//! weight row `b[k, c..c+8]` — eight *independent* scalar accumulation
+//! chains that stable rustc autovectorizes to one SIMD lane each without
+//! reordering any floating-point reduction. No unsafe, no intrinsics.
+//!
+//! # Determinism contract
+//!
+//! Every output element is accumulated in exactly the same order as the
+//! naive scalar triple loop: initialize from `bias[c]` (plus the residual
+//! for [`gemm_bias_residual`]), then add `a[r, k] * b[k, c]` for k
+//! ascending. Blocking only changes *which* elements are in flight
+//! concurrently, never the per-element order, and rustc does not contract
+//! `mul + add` into FMA on the default target — so the tiled kernels are
+//! bit-identical to [`gemm_bias_naive`] / [`gemm_bias_residual_naive`]
+//! for every shape, including ragged tails. Tests pin this with exact
+//! bit equality.
+
+/// Column-lane width of the micro-kernel: 8 f32 = one 256-bit vector.
+pub const LANES: usize = 8;
+
+/// Row height of the micro-kernel (4 x 8 = 32 live accumulators).
+const ROWS: usize = 4;
+
+/// `out[r, c] = bias[c] + sum_k a[r, k] * b[k, c]`
+///
+/// `a` is `[m, k]` row-major, `b` is `[k, n]` row-major, `bias` is `[n]`,
+/// `out` is `[m, n]`. Allocation-free; slices must have exactly those
+/// lengths. Bit-identical to [`gemm_bias_naive`].
+pub fn gemm_bias(m: usize, k: usize, n: usize, a: &[f32], b: &[f32], bias: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(out.len(), m * n);
+    let n8 = n - n % LANES;
+    let m4 = m - m % ROWS;
+    let mut r = 0;
+    while r < m4 {
+        let mut c = 0;
+        while c < n8 {
+            let mut acc = [[0f32; LANES]; ROWS];
+            for row in acc.iter_mut() {
+                row.copy_from_slice(&bias[c..c + LANES]);
+            }
+            for kk in 0..k {
+                let brow = &b[kk * n + c..kk * n + c + LANES];
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[(r + i) * k + kk];
+                    for (lane, &bv) in row.iter_mut().zip(brow) {
+                        *lane += av * bv;
+                    }
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                out[(r + i) * n + c..(r + i) * n + c + LANES].copy_from_slice(row);
+            }
+            c += LANES;
+        }
+        for cc in n8..n {
+            for i in 0..ROWS {
+                let mut s = bias[cc];
+                for kk in 0..k {
+                    s += a[(r + i) * k + kk] * b[kk * n + cc];
+                }
+                out[(r + i) * n + cc] = s;
+            }
+        }
+        r += ROWS;
+    }
+    for rr in m4..m {
+        let mut c = 0;
+        while c < n8 {
+            let mut acc = [0f32; LANES];
+            acc.copy_from_slice(&bias[c..c + LANES]);
+            for kk in 0..k {
+                let av = a[rr * k + kk];
+                let brow = &b[kk * n + c..kk * n + c + LANES];
+                for (lane, &bv) in acc.iter_mut().zip(brow) {
+                    *lane += av * bv;
+                }
+            }
+            out[rr * n + c..rr * n + c + LANES].copy_from_slice(&acc);
+            c += LANES;
+        }
+        for cc in n8..n {
+            let mut s = bias[cc];
+            for kk in 0..k {
+                s += a[rr * k + kk] * b[kk * n + cc];
+            }
+            out[rr * n + cc] = s;
+        }
+    }
+}
+
+/// `out[r, c] = res[r, c] + bias[c] + sum_k a[r, k] * b[k, c]`
+///
+/// The residual-add flavor used for the second resblock GEMM: the
+/// accumulator is seeded with `res[r, c] + bias[c]` so the skip
+/// connection costs no extra pass over the output. Same determinism
+/// contract as [`gemm_bias`]; bit-identical to
+/// [`gemm_bias_residual_naive`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_residual(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    res: &[f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(bias.len(), n);
+    debug_assert_eq!(res.len(), m * n);
+    debug_assert_eq!(out.len(), m * n);
+    let n8 = n - n % LANES;
+    let m4 = m - m % ROWS;
+    let mut r = 0;
+    while r < m4 {
+        let mut c = 0;
+        while c < n8 {
+            let mut acc = [[0f32; LANES]; ROWS];
+            for (i, row) in acc.iter_mut().enumerate() {
+                let rr = &res[(r + i) * n + c..(r + i) * n + c + LANES];
+                for ((lane, &rv), &bv) in row.iter_mut().zip(rr).zip(&bias[c..c + LANES]) {
+                    *lane = rv + bv;
+                }
+            }
+            for kk in 0..k {
+                let brow = &b[kk * n + c..kk * n + c + LANES];
+                for (i, row) in acc.iter_mut().enumerate() {
+                    let av = a[(r + i) * k + kk];
+                    for (lane, &bv) in row.iter_mut().zip(brow) {
+                        *lane += av * bv;
+                    }
+                }
+            }
+            for (i, row) in acc.iter().enumerate() {
+                out[(r + i) * n + c..(r + i) * n + c + LANES].copy_from_slice(row);
+            }
+            c += LANES;
+        }
+        for cc in n8..n {
+            for i in 0..ROWS {
+                let mut s = res[(r + i) * n + cc] + bias[cc];
+                for kk in 0..k {
+                    s += a[(r + i) * k + kk] * b[kk * n + cc];
+                }
+                out[(r + i) * n + cc] = s;
+            }
+        }
+        r += ROWS;
+    }
+    for rr in m4..m {
+        let mut c = 0;
+        while c < n8 {
+            let mut acc = [0f32; LANES];
+            for ((lane, &rv), &bv) in acc
+                .iter_mut()
+                .zip(&res[rr * n + c..rr * n + c + LANES])
+                .zip(&bias[c..c + LANES])
+            {
+                *lane = rv + bv;
+            }
+            for kk in 0..k {
+                let av = a[rr * k + kk];
+                let brow = &b[kk * n + c..kk * n + c + LANES];
+                for (lane, &bv) in acc.iter_mut().zip(brow) {
+                    *lane += av * bv;
+                }
+            }
+            out[rr * n + c..rr * n + c + LANES].copy_from_slice(&acc);
+            c += LANES;
+        }
+        for cc in n8..n {
+            let mut s = res[rr * n + cc] + bias[cc];
+            for kk in 0..k {
+                s += a[rr * k + kk] * b[kk * n + cc];
+            }
+            out[rr * n + cc] = s;
+        }
+    }
+}
+
+/// Naive scalar reference: same per-element accumulation order as
+/// [`gemm_bias`], no blocking, column-strided weight access. This is the
+/// roofline bench's lower-bound oracle — cache-hostile on purpose.
+pub fn gemm_bias_naive(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+) {
+    for r in 0..m {
+        for c in 0..n {
+            let mut s = bias[c];
+            for kk in 0..k {
+                s += a[r * k + kk] * b[kk * n + c];
+            }
+            out[r * n + c] = s;
+        }
+    }
+}
+
+/// Naive scalar reference for [`gemm_bias_residual`].
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_bias_residual_naive(
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    b: &[f32],
+    bias: &[f32],
+    res: &[f32],
+    out: &mut [f32],
+) {
+    for r in 0..m {
+        for c in 0..n {
+            let mut s = res[r * n + c] + bias[c];
+            for kk in 0..k {
+                s += a[r * k + kk] * b[kk * n + c];
+            }
+            out[r * n + c] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn tiled_gemm_bit_identical_to_naive_across_ragged_shapes() {
+        let mut rng = Pcg32::seeded(7);
+        for &(m, k, n) in &[
+            (1, 1, 1),
+            (1, 8, 8),
+            (3, 5, 7),
+            (4, 16, 8),
+            (5, 16, 9),
+            (7, 33, 17),
+            (8, 64, 64),
+            (13, 64, 40),
+        ] {
+            let a = rng.normal_vec(m * k);
+            let b = rng.normal_vec(k * n);
+            let bias = rng.normal_vec(n);
+            let res = rng.normal_vec(m * n);
+            let mut fast = vec![0f32; m * n];
+            let mut slow = vec![0f32; m * n];
+            gemm_bias(m, k, n, &a, &b, &bias, &mut fast);
+            gemm_bias_naive(m, k, n, &a, &b, &bias, &mut slow);
+            assert_eq!(bits(&fast), bits(&slow), "gemm_bias ({m},{k},{n})");
+            gemm_bias_residual(m, k, n, &a, &b, &bias, &res, &mut fast);
+            gemm_bias_residual_naive(m, k, n, &a, &b, &bias, &res, &mut slow);
+            assert_eq!(bits(&fast), bits(&slow), "gemm_bias_residual ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_hand_computed_values() {
+        // 2x2 @ 2x2 + bias, small integers so the expected values are exact.
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [5.0, 6.0, 7.0, 8.0];
+        let bias = [0.5, -0.5];
+        let mut out = [0f32; 4];
+        gemm_bias(2, 2, 2, &a, &b, &bias, &mut out);
+        assert_eq!(out, [19.5, 21.5, 43.5, 49.5]);
+    }
+}

@@ -1,0 +1,397 @@
+//! `bns_mlp_field` — the real-compute CPU velocity field.
+//!
+//! A time-modulated residual MLP matching the python emitter
+//! (`python/compile/mlp_field.py`) and the `ref.py` kernel oracles:
+//!
+//! ```text
+//! cond    = time_embed(t * 1000, emb) + cls_emb[label]        # per row
+//! per block b:
+//!   mod   = cond @ mw_b + mb_b          # [rows, 2d]
+//!   scale, shift = mod[.., :d], mod[.., d:]
+//!   act   = fused_resblock(act, w1_b, b1_b, w2_b, b2_b, scale, shift)
+//! u       = act                          # velocity
+//! cfg:  u = u_c + w * (u_c - u_n)        # u_n uses the null class
+//! ```
+//!
+//! All weights ship in the artifact JSON as plain numbers; the shortest
+//! round-trip `f64` text representation reproduces every `f32` bit
+//! pattern exactly in both languages, so python-emitted weights load
+//! bit-identically here.
+//!
+//! # Determinism contract
+//!
+//! Every output row depends only on its own input row (the time
+//! embedding is a row-independent function of `t` computed in f64), so
+//! results are invariant to row chunking — the intra-lane pool in
+//! [`super::pool`] relies on this. Guided combine order is fixed:
+//! `u_c + w * (u_c - u_n)`, elementwise.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::gemm::gemm_bias;
+use super::resblock::{fused_resblock_into, TILE};
+
+/// One residual block's weights, all row-major flat.
+pub struct MlpBlock {
+    /// `[d, h]` first GEMM.
+    pub w1: Vec<f32>,
+    /// `[h]` first bias.
+    pub b1: Vec<f32>,
+    /// `[h, d]` second GEMM.
+    pub w2: Vec<f32>,
+    /// `[d]` second bias.
+    pub b2: Vec<f32>,
+    /// `[emb, 2d]` modulation GEMM (cond -> scale/shift).
+    pub mw: Vec<f32>,
+    /// `[2d]` modulation bias.
+    pub mb: Vec<f32>,
+}
+
+/// A parsed, validated `bns_mlp_field` artifact.
+pub struct MlpModel {
+    /// State width d.
+    pub dim: usize,
+    /// Hidden width h.
+    pub hidden: usize,
+    /// Embedding width (even, >= 2).
+    pub emb: usize,
+    /// Real classes; labels range over `0..=num_classes` (null included).
+    pub num_classes: usize,
+    /// Row of `cls_emb` used for the unconditional branch.
+    pub null_class: usize,
+    /// Whether evals run guided (two forwards + CFG combine).
+    pub cfg: bool,
+    /// `[(num_classes + 1), emb]` class embedding table, flat.
+    pub cls_emb: Vec<f32>,
+    /// The residual chain, depth = `blocks.len()`.
+    pub blocks: Vec<MlpBlock>,
+}
+
+impl MlpModel {
+    /// Forwards per logical eval for accounting: 2 when guided (cond +
+    /// null branches), else 1. This is *model structure*, not a wall-time
+    /// knob — see the `cost` note on `StubExe`.
+    pub fn forwards_per_eval(&self) -> u64 {
+        if self.cfg {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Parse and validate the inner object of a `bns_mlp_field` artifact.
+    pub fn from_json(spec: &Json) -> Result<MlpModel> {
+        let dim = spec.get("dim").as_usize().context("bns_mlp_field: missing dim")?;
+        let hidden = spec.get("hidden").as_usize().context("bns_mlp_field: missing hidden")?;
+        let emb = spec.get("emb").as_usize().context("bns_mlp_field: missing emb")?;
+        let num_classes = spec
+            .get("num_classes")
+            .as_usize()
+            .context("bns_mlp_field: missing num_classes")?;
+        let null_class = spec
+            .get("null_class")
+            .as_usize()
+            .context("bns_mlp_field: missing null_class")?;
+        let cfg = spec.get("cfg").as_bool().context("bns_mlp_field: missing cfg")?;
+        ensure!(dim >= 1 && hidden >= 1, "bns_mlp_field: dim/hidden must be >= 1");
+        ensure!(emb >= 2 && emb % 2 == 0, "bns_mlp_field: emb must be even and >= 2");
+        ensure!(null_class <= num_classes, "bns_mlp_field: null_class out of range");
+        let cls_emb = spec
+            .get("cls_emb")
+            .as_f32_vec()
+            .context("bns_mlp_field: missing cls_emb")?;
+        ensure!(
+            cls_emb.len() == (num_classes + 1) * emb,
+            "bns_mlp_field: cls_emb must be [(num_classes + 1) * emb]"
+        );
+        let raw_blocks = spec.get("blocks").as_arr().context("bns_mlp_field: missing blocks")?;
+        ensure!(!raw_blocks.is_empty(), "bns_mlp_field: needs at least one block");
+        let mut blocks = Vec::with_capacity(raw_blocks.len());
+        for (i, rb) in raw_blocks.iter().enumerate() {
+            let field = |name: &str, want: usize| -> Result<Vec<f32>> {
+                let v = rb
+                    .get(name)
+                    .as_f32_vec()
+                    .ok_or_else(|| anyhow!("bns_mlp_field: block {i} missing {name}"))?;
+                ensure!(v.len() == want, "bns_mlp_field: block {i} {name} wants {want} values");
+                Ok(v)
+            };
+            blocks.push(MlpBlock {
+                w1: field("w1", dim * hidden)?,
+                b1: field("b1", hidden)?,
+                w2: field("w2", hidden * dim)?,
+                b2: field("b2", dim)?,
+                mw: field("mw", emb * 2 * dim)?,
+                mb: field("mb", 2 * dim)?,
+            });
+        }
+        Ok(MlpModel { dim, hidden, emb, num_classes, null_class, cfg, cls_emb, blocks })
+    }
+}
+
+/// Per-thread scratch for [`forward_rows`]. Buffers only grow and are
+/// fully written before being read, so reuse across calls is
+/// allocation-free at steady state (counting-allocator-verified by
+/// `perf_layers`).
+#[derive(Default)]
+pub struct MlpScratch {
+    temb: Vec<f32>,
+    cond: Vec<f32>,
+    modv: Vec<f32>,
+    act_a: Vec<f32>,
+    act_b: Vec<f32>,
+    un: Vec<f32>,
+    mbuf: Vec<f32>,
+    hbuf: Vec<f32>,
+}
+
+impl MlpScratch {
+    /// Fresh, empty scratch; sized on first use.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, m: &MlpModel, rows: usize) {
+        self.temb.resize(m.emb, 0.0);
+        self.cond.resize(rows * m.emb, 0.0);
+        self.modv.resize(rows * 2 * m.dim, 0.0);
+        self.act_a.resize(rows * m.dim, 0.0);
+        self.act_b.resize(rows * m.dim, 0.0);
+        self.un.resize(rows * m.dim, 0.0);
+        self.mbuf.resize(TILE * m.dim, 0.0);
+        self.hbuf.resize(TILE * m.hidden, 0.0);
+    }
+}
+
+/// Sinusoidal time embedding, computed in f64 and truncated to f32 —
+/// bit-reproducible against the python emitter's float64 mirror. Layout
+/// is `[cos(t * 1000 * freq_k) for k] ++ [sin(...)]` with
+/// `freq_k = exp(-ln(1e4) * k / half)`, matching `ref.py::time_embed`.
+pub fn time_embed_into(t: f32, emb: &mut [f32]) {
+    let half = emb.len() / 2;
+    if half == 0 {
+        return;
+    }
+    let t64 = t as f64 * 1000.0;
+    let ln_max = (1e4f64).ln();
+    for k in 0..half {
+        let freq = (-ln_max * k as f64 / half as f64).exp();
+        let arg = t64 * freq;
+        emb[k] = arg.cos() as f32;
+        emb[half + k] = arg.sin() as f32;
+    }
+}
+
+/// One guided (or unguided) MLP-field eval over `rows` rows.
+///
+/// `x` is `[rows, dim]`, `labels` is `[rows]` with values in
+/// `0..=num_classes` (validated by the caller), `out` is `[rows, dim]`.
+/// Row-chunk invariant and allocation-free at steady state; this is the
+/// unit of work the intra-lane pool dispatches.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_rows(
+    m: &MlpModel,
+    s: &mut MlpScratch,
+    rows: usize,
+    x: &[f32],
+    t: f32,
+    w: f32,
+    labels: &[i32],
+    out: &mut [f32],
+) {
+    s.ensure(m, rows);
+    let MlpScratch { temb, cond, modv, act_a, act_b, un, mbuf, hbuf } = s;
+    time_embed_into(t, temb);
+    branch(m, temb, cond, modv, act_a, act_b, mbuf, hbuf, rows, x, labels, false, out);
+    if !m.cfg {
+        return;
+    }
+    branch(m, temb, cond, modv, act_a, act_b, mbuf, hbuf, rows, x, labels, true, un);
+    // guided combine, fixed order: u = u_c + w * (u_c - u_n)
+    for (o, &nv) in out.iter_mut().zip(un.iter()) {
+        let uc = *o;
+        *o = uc + w * (uc - nv);
+    }
+}
+
+/// One conditioning branch: build per-row cond vectors, then run the
+/// residual chain, ping-ponging between the two activation buffers so the
+/// final block writes straight into `out`.
+#[allow(clippy::too_many_arguments)]
+fn branch(
+    m: &MlpModel,
+    temb: &[f32],
+    cond: &mut [f32],
+    modv: &mut [f32],
+    act_a: &mut [f32],
+    act_b: &mut [f32],
+    mbuf: &mut [f32],
+    hbuf: &mut [f32],
+    rows: usize,
+    x: &[f32],
+    labels: &[i32],
+    null: bool,
+    out: &mut [f32],
+) {
+    let d = m.dim;
+    let e = m.emb;
+    for r in 0..rows {
+        let li = if null { m.null_class } else { labels[r] as usize };
+        let ce = &m.cls_emb[li * e..(li + 1) * e];
+        let cr = &mut cond[r * e..(r + 1) * e];
+        for ((c, &tv), &cv) in cr.iter_mut().zip(temb).zip(ce) {
+            *c = tv + cv;
+        }
+    }
+    act_a[..rows * d].copy_from_slice(&x[..rows * d]);
+    let nb = m.blocks.len();
+    let mut flip = false;
+    for (bi, blk) in m.blocks.iter().enumerate() {
+        gemm_bias(rows, e, 2 * d, &cond[..rows * e], &blk.mw, &blk.mb, &mut modv[..rows * 2 * d]);
+        let (src, dst): (&[f32], &mut [f32]) = if bi + 1 == nb {
+            if flip {
+                (&act_b[..rows * d], &mut out[..rows * d])
+            } else {
+                (&act_a[..rows * d], &mut out[..rows * d])
+            }
+        } else if flip {
+            (&act_b[..rows * d], &mut act_a[..rows * d])
+        } else {
+            (&act_a[..rows * d], &mut act_b[..rows * d])
+        };
+        fused_resblock_into(
+            rows, d, m.hidden, src, &modv[..rows * 2 * d], &blk.w1, &blk.b1, &blk.w2, &blk.b2,
+            mbuf, hbuf, dst,
+        );
+        flip = !flip;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn tiny_model(cfg: bool) -> MlpModel {
+        let (d, h, e, c) = (6, 10, 4, 3);
+        let mut rng = Pcg32::seeded(5);
+        let blk = |rng: &mut Pcg32| MlpBlock {
+            w1: rng.normal_vec(d * h).iter().map(|v| v * 0.2).collect(),
+            b1: rng.normal_vec(h).iter().map(|v| v * 0.05).collect(),
+            w2: rng.normal_vec(h * d).iter().map(|v| v * 0.1).collect(),
+            b2: rng.normal_vec(d).iter().map(|v| v * 0.01).collect(),
+            mw: rng.normal_vec(e * 2 * d).iter().map(|v| v * 0.1).collect(),
+            mb: rng.normal_vec(2 * d).iter().map(|v| v * 0.01).collect(),
+        };
+        MlpModel {
+            dim: d,
+            hidden: h,
+            emb: e,
+            num_classes: c,
+            null_class: c,
+            cfg,
+            cls_emb: rng.normal_vec((c + 1) * e).iter().map(|v| v * 0.2).collect(),
+            blocks: vec![blk(&mut rng), blk(&mut rng)],
+        }
+    }
+
+    #[test]
+    fn forward_is_row_chunk_invariant() {
+        let m = tiny_model(true);
+        let mut rng = Pcg32::seeded(9);
+        let rows = 13;
+        let x = rng.normal_vec(rows * m.dim);
+        let labels: Vec<i32> = (0..rows).map(|i| (i % (m.num_classes + 1)) as i32).collect();
+        let mut s = MlpScratch::new();
+        let mut whole = vec![0f32; rows * m.dim];
+        forward_rows(&m, &mut s, rows, &x, 0.37, 0.5, &labels, &mut whole);
+        // run the same batch in ragged chunks through a fresh scratch
+        let mut chunked = vec![0f32; rows * m.dim];
+        let mut s2 = MlpScratch::new();
+        let mut r0 = 0;
+        for take in [1usize, 4, 8] {
+            let n = take.min(rows - r0);
+            forward_rows(
+                &m,
+                &mut s2,
+                n,
+                &x[r0 * m.dim..(r0 + n) * m.dim],
+                0.37,
+                0.5,
+                &labels[r0..r0 + n],
+                &mut chunked[r0 * m.dim..(r0 + n) * m.dim],
+            );
+            r0 += n;
+        }
+        let n = rows - r0;
+        forward_rows(
+            &m,
+            &mut s2,
+            n,
+            &x[r0 * m.dim..],
+            0.37,
+            0.5,
+            &labels[r0..],
+            &mut chunked[r0 * m.dim..],
+        );
+        let wb: Vec<u32> = whole.iter().map(|v| v.to_bits()).collect();
+        let cb: Vec<u32> = chunked.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(wb, cb);
+    }
+
+    #[test]
+    fn guidance_weight_zero_reduces_to_conditional_branch() {
+        let mut m = tiny_model(true);
+        let mut rng = Pcg32::seeded(21);
+        let rows = 5;
+        let x = rng.normal_vec(rows * m.dim);
+        let labels = vec![1i32; rows];
+        let mut s = MlpScratch::new();
+        let mut guided = vec![0f32; rows * m.dim];
+        forward_rows(&m, &mut s, rows, &x, 0.2, 0.0, &labels, &mut guided);
+        m.cfg = false;
+        let mut cond_only = vec![0f32; rows * m.dim];
+        forward_rows(&m, &mut s, rows, &x, 0.2, 0.0, &labels, &mut cond_only);
+        // w = 0: u = u_c + 0 * (u_c - u_n) == u_c exactly
+        let gb: Vec<u32> = guided.iter().map(|v| v.to_bits()).collect();
+        let cb: Vec<u32> = cond_only.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, cb);
+    }
+
+    #[test]
+    fn time_embed_starts_at_unit_cos_zero_sin() {
+        let mut e = vec![0f32; 8];
+        time_embed_into(0.0, &mut e);
+        assert_eq!(&e[..4], &[1.0, 1.0, 1.0, 1.0]);
+        assert_eq!(&e[4..], &[0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_shapes() {
+        let m = tiny_model(false);
+        // hand-build a spec with a truncated w1
+        let spec = Json::obj(vec![
+            ("dim", Json::Num(m.dim as f64)),
+            ("hidden", Json::Num(m.hidden as f64)),
+            ("emb", Json::Num(m.emb as f64)),
+            ("num_classes", Json::Num(m.num_classes as f64)),
+            ("null_class", Json::Num(m.null_class as f64)),
+            ("cfg", Json::Bool(false)),
+            ("cls_emb", Json::arr_f32(&m.cls_emb)),
+            (
+                "blocks",
+                Json::Arr(vec![Json::obj(vec![
+                    ("w1", Json::arr_f32(&m.blocks[0].w1[..3])),
+                    ("b1", Json::arr_f32(&m.blocks[0].b1)),
+                    ("w2", Json::arr_f32(&m.blocks[0].w2)),
+                    ("b2", Json::arr_f32(&m.blocks[0].b2)),
+                    ("mw", Json::arr_f32(&m.blocks[0].mw)),
+                    ("mb", Json::arr_f32(&m.blocks[0].mb)),
+                ])]),
+            ),
+        ]);
+        let err = MlpModel::from_json(&spec).unwrap_err();
+        assert!(err.to_string().contains("w1"), "{err}");
+    }
+}

@@ -1,0 +1,85 @@
+//! CPU compute kernels for the real-compute backend (DESIGN.md §13).
+//!
+//! Pure-std, `#![deny(unsafe_code)]`-compatible kernels behind the
+//! `bns_mlp_field` artifact kind: a blocked/tiled f32 GEMM written to
+//! autovectorize on stable rust ([`gemm`]), a fused time-modulated
+//! resblock that keeps each activation tile resident across
+//! modulate -> GEMM -> SiLU -> GEMM -> add ([`resblock`]), the streamed
+//! eq.-11 NS-update combine used by `NsSolver::sample_into`
+//! ([`ns_combine`]), the residual-MLP velocity field assembled from
+//! those pieces ([`mlp`]), and the deterministic intra-lane row pool
+//! that fans wide batches across threads ([`pool`]).
+//!
+//! Everything here follows three repo-wide disciplines:
+//!
+//! * **Bit-determinism.** Per-element accumulation order is fixed and
+//!   documented per kernel; blocking, tiling, and thread count never
+//!   change results. Tests pin fused kernels bit-identical to naive
+//!   scalar oracles.
+//! * **Panic-freedom.** This directory is under the same `bns-lint`
+//!   `panic_free` rule as the serving plane.
+//! * **Zero steady-state allocation.** Hot entry points are registered
+//!   in `analysis/hot_paths.toml` and measured by the `perf_layers`
+//!   roofline section.
+//!
+//! The [`flops`]/[`bytes`] helpers encode the roofline cost model the
+//! bench reports against (mirroring the VMEM analysis in the python
+//! kernel docstrings): resblocks are compute-bound (arithmetic intensity
+//! rises with the batch), the NS combine is bandwidth-bound (~2 flops
+//! per 4 streamed bytes).
+
+pub mod gemm;
+pub mod mlp;
+pub mod ns_combine;
+pub mod pool;
+pub mod resblock;
+
+pub use gemm::{gemm_bias, gemm_bias_naive, gemm_bias_residual, gemm_bias_residual_naive, LANES};
+pub use mlp::{forward_rows, time_embed_into, MlpModel, MlpScratch};
+pub use ns_combine::ns_combine_into;
+pub use pool::{RowPool, CHUNK_ROWS};
+pub use resblock::{fused_resblock_into, naive_resblock_into, silu, TILE};
+
+/// Roofline cost model: flop counts per kernel invocation.
+pub mod flops {
+    /// GEMM with bias: one multiply + one add per (m, k, n) triple.
+    pub fn gemm(m: usize, k: usize, n: usize) -> f64 {
+        2.0 * m as f64 * k as f64 * n as f64
+    }
+
+    /// Fused resblock over `rows` rows: two GEMMs (2·d·h each way),
+    /// modulate (3 ops/elem), SiLU (counted as 4 ops/elem), residual add.
+    pub fn resblock(rows: usize, d: usize, h: usize) -> f64 {
+        let (r, d, h) = (rows as f64, d as f64, h as f64);
+        r * (4.0 * d * h + 3.0 * d + 4.0 * h + d)
+    }
+
+    /// NS combine: one multiply-add per nonzero coefficient element,
+    /// plus the `a * x0` seed pass.
+    pub fn ns_combine(k_nonzero: usize, len: usize) -> f64 {
+        (2.0 * k_nonzero as f64 + 1.0) * len as f64
+    }
+}
+
+/// Roofline cost model: bytes moved per kernel invocation (f32 = 4
+/// bytes; weights counted once per call — they stream from LLC when the
+/// working set exceeds L2).
+pub mod bytes {
+    /// GEMM with bias: read a + b + bias, write out.
+    pub fn gemm(m: usize, k: usize, n: usize) -> f64 {
+        4.0 * (m as f64 * k as f64 + k as f64 * n as f64 + n as f64 + m as f64 * n as f64)
+    }
+
+    /// Fused resblock: weights (w1, b1, w2, b2) once, x read once, modv
+    /// read once, out written once. The hidden strip stays cache-resident
+    /// and is *not* counted — that is the point of fusing.
+    pub fn resblock(rows: usize, d: usize, h: usize) -> f64 {
+        let (r, d, h) = (rows as f64, d as f64, h as f64);
+        4.0 * (2.0 * d * h + d + h + r * (d + 2.0 * d + d))
+    }
+
+    /// NS combine: read x0 and k history rows, write x once.
+    pub fn ns_combine(k: usize, len: usize) -> f64 {
+        4.0 * ((k as f64 + 2.0) * len as f64)
+    }
+}

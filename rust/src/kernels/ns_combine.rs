@@ -1,0 +1,111 @@
+//! Fused eq.-11 non-stationary update combine (`ref.py::ns_update`):
+//!
+//! ```text
+//! x_{i+1} = a_i * x0 + sum_j b_{i,j} * u_j
+//! ```
+//!
+//! Instead of k separate AXPY passes over the full state vector (which
+//! stream `x` through cache k+1 times), the combine walks the state in
+//! [`BLOCK`]-element blocks and applies *all* history terms to a block
+//! while it is L1-resident — one pass over `x`, one streaming pass over
+//! the history arena.
+//!
+//! # Determinism contract
+//!
+//! Per-element order is unchanged from the multi-pass form (and from
+//! `NsSolver::sample`): seed with `a * x0[e]`, then add `b_j * u_j[e]`
+//! for j ascending, skipping exact-zero coefficients. Zero coefficients
+//! must be skipped, not multiplied through: `0.0 * -0.0` and `0.0 * inf`
+//! would otherwise perturb signs/NaNs relative to the sparse oracle.
+//! Blocking changes which elements are in flight, never the per-element
+//! order, so `tests/sample_into_equiv.rs` still pins `sample_into`
+//! bit-identical to the allocating `sample`.
+
+/// Elements combined per block: 2048 f32 = 8 KiB for the output block,
+/// comfortably L1-resident alongside one streaming history row.
+pub const BLOCK: usize = 2048;
+
+/// Streamed combine: `x[e] = a * x0[e] + sum_j b[j] * hist[j * len + e]`.
+///
+/// `hist` holds the first `b.len()` history rows contiguously (`u_j` at
+/// `hist[j * len..(j + 1) * len]`); rows past `b.len()` are ignored, so
+/// callers may pass the whole arena. Allocation-free.
+pub fn ns_combine_into(a: f32, x0: &[f32], b: &[f64], hist: &[f32], len: usize, x: &mut [f32]) {
+    debug_assert_eq!(x0.len(), len);
+    debug_assert_eq!(x.len(), len);
+    debug_assert!(hist.len() >= b.len() * len);
+    let mut e0 = 0;
+    while e0 < len {
+        let e1 = (e0 + BLOCK).min(len);
+        let xb = &mut x[e0..e1];
+        for (o, &v) in xb.iter_mut().zip(&x0[e0..e1]) {
+            *o = a * v;
+        }
+        for (j, &bjd) in b.iter().enumerate() {
+            let bj = bjd as f32;
+            if bj == 0.0 {
+                continue;
+            }
+            let uj = &hist[j * len + e0..j * len + e1];
+            for (o, &uv) in xb.iter_mut().zip(uj) {
+                *o += bj * uv;
+            }
+        }
+        e0 = e1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// The k-pass AXPY form the solver used before fusion.
+    fn multi_pass(a: f32, x0: &[f32], b: &[f64], hist: &[f32], len: usize, x: &mut [f32]) {
+        for (o, &v) in x.iter_mut().zip(x0) {
+            *o = a * v;
+        }
+        for (j, &bjd) in b.iter().enumerate() {
+            let bj = bjd as f32;
+            if bj == 0.0 {
+                continue;
+            }
+            for (o, &uv) in x.iter_mut().zip(&hist[j * len..(j + 1) * len]) {
+                *o += bj * uv;
+            }
+        }
+    }
+
+    #[test]
+    fn fused_combine_bit_identical_to_multi_pass() {
+        let mut rng = Pcg32::seeded(3);
+        for &(k, len) in &[(1, 5), (4, 64), (7, 2048), (16, 5000)] {
+            let x0 = rng.normal_vec(len);
+            let hist = rng.normal_vec(k * len);
+            let mut b: Vec<f64> = (0..k).map(|_| rng.normal() * 0.3).collect();
+            if k > 2 {
+                b[1] = 0.0; // exercise the sparse-skip path
+            }
+            let a = rng.normal() as f32;
+            let mut fused = vec![0f32; len];
+            let mut passes = vec![0f32; len];
+            ns_combine_into(a, &x0, &b, &hist, len, &mut fused);
+            multi_pass(a, &x0, &b, &hist, len, &mut passes);
+            let fb: Vec<u32> = fused.iter().map(|v| v.to_bits()).collect();
+            let pb: Vec<u32> = passes.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, pb, "ns_combine (k={k}, len={len})");
+        }
+    }
+
+    #[test]
+    fn zero_coefficients_are_skipped_not_multiplied() {
+        // u contains inf/nan rows whose coefficients are exactly zero;
+        // skipping keeps the result finite, multiplying would NaN it.
+        let x0 = [1.0f32, -2.0];
+        let hist = [f32::INFINITY, f32::NAN, 3.0, 4.0];
+        let b = [0.0f64, 2.0];
+        let mut x = [0f32; 2];
+        ns_combine_into(0.5, &x0, &b, &hist, 2, &mut x);
+        assert_eq!(x, [6.5, 7.0]);
+    }
+}

@@ -1,0 +1,238 @@
+//! Intra-lane row pool: splits one wide `bns_mlp_field` batch across a
+//! persistent set of worker threads owned by a single device lane.
+//!
+//! # Determinism rules (GradFan discipline)
+//!
+//! * Work units are fixed [`CHUNK_ROWS`]-row chunks, assigned round-robin
+//!   by chunk index — the decomposition depends only on the batch shape,
+//!   never on thread timing.
+//! * Each chunk's rows are computed independently ([`forward_rows`] is
+//!   row-chunk invariant), and every chunk writes a disjoint row range of
+//!   the output, so the copy-back order is irrelevant: results are
+//!   bit-identical for any thread count, including the inline
+//!   (pool-less) path.
+//! * No shared mutable state: jobs travel by value over bounded
+//!   channels, the same idiom as the lane RPC slots in `runtime/client`.
+//!
+//! # Liveness and fault containment
+//!
+//! Reply capacity exceeds the dispatch window, so worker reply sends
+//! never block and workers always drain; the lane's sends can only block
+//! briefly on a busy worker's bounded queue. If a worker dies (a panic
+//! in a wrapped fault-injection backend, say), the lane's send or recv
+//! fails with a structured error — the engine's retry/respawn machinery
+//! takes it from there, and stale replies from the aborted call are
+//! recycled by sequence number on the next call.
+//!
+//! # Allocation discipline
+//!
+//! Job buffers are pooled and only grow; workers own persistent
+//! [`MlpScratch`]. After warmup a `run_rows` call performs no heap
+//! allocation (counting-allocator-verified by `perf_layers`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use super::mlp::{forward_rows, MlpModel, MlpScratch};
+
+/// Rows per work unit — one fused-resblock tile, so chunking never
+/// splits a tile.
+pub const CHUNK_ROWS: usize = 8;
+
+/// Bounded depth of each worker's job queue.
+const WORKER_QUEUE: usize = 2;
+
+/// One chunk of rows traveling lane -> worker -> lane by value.
+#[derive(Default)]
+struct Job {
+    model: Option<Arc<MlpModel>>,
+    seq: u64,
+    t: f32,
+    w: f32,
+    dim: usize,
+    start: usize,
+    rows: usize,
+    x: Vec<f32>,
+    labels: Vec<i32>,
+    out: Vec<f32>,
+}
+
+/// A persistent per-lane worker pool for MLP-field batches.
+pub struct RowPool {
+    workers: Vec<mpsc::SyncSender<Job>>,
+    reply_rx: mpsc::Receiver<Job>,
+    slots: Vec<Job>,
+    max_inflight: usize,
+    seq: u64,
+}
+
+impl RowPool {
+    /// Spawn `threads` workers (clamped to >= 1), each owning its own
+    /// scratch. Workers park on their queue and exit when the pool drops.
+    pub fn new(threads: usize) -> Result<RowPool> {
+        let threads = threads.max(1);
+        let max_inflight = threads * WORKER_QUEUE;
+        // Replies can never block: capacity covers every in-flight job
+        // plus one in-hand job per worker.
+        let (reply_tx, reply_rx) = mpsc::sync_channel(max_inflight + threads);
+        let mut workers = Vec::with_capacity(threads);
+        for i in 0..threads {
+            let (tx, rx) = mpsc::sync_channel::<Job>(WORKER_QUEUE);
+            let rtx = reply_tx.clone();
+            std::thread::Builder::new()
+                .name(format!("bns-mlp-{i}"))
+                .spawn(move || worker_loop(rx, rtx))
+                .map_err(|e| anyhow!("spawning mlp pool worker {i}: {e}"))?;
+            workers.push(tx);
+        }
+        Ok(RowPool { workers, reply_rx, slots: Vec::new(), max_inflight, seq: 0 })
+    }
+
+    /// Number of worker threads.
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Fan a `[rows, dim]` batch across the pool in fixed row chunks and
+    /// gather results into `out` (disjoint row ranges). Bit-identical to
+    /// running [`forward_rows`] over the whole batch inline.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_rows(
+        &mut self,
+        model: &Arc<MlpModel>,
+        rows: usize,
+        dim: usize,
+        x: &[f32],
+        t: f32,
+        w: f32,
+        labels: &[i32],
+        out: &mut [f32],
+    ) -> Result<()> {
+        self.seq = self.seq.wrapping_add(1);
+        // Recycle any stale replies left by a previous failed call.
+        while let Ok(mut j) = self.reply_rx.try_recv() {
+            j.model = None;
+            self.slots.push(j);
+        }
+        let nchunks = rows.div_ceil(CHUNK_ROWS);
+        let mut sent = 0usize;
+        let mut done = 0usize;
+        while done < nchunks {
+            if sent < nchunks && sent - done < self.max_inflight {
+                let start = sent * CHUNK_ROWS;
+                let take = CHUNK_ROWS.min(rows - start);
+                let mut job = self.slots.pop().unwrap_or_default();
+                job.model = Some(Arc::clone(model));
+                job.seq = self.seq;
+                job.t = t;
+                job.w = w;
+                job.dim = dim;
+                job.start = start;
+                job.rows = take;
+                job.x.clear();
+                job.x.extend_from_slice(&x[start * dim..(start + take) * dim]);
+                job.labels.clear();
+                job.labels.extend_from_slice(&labels[start..start + take]);
+                job.out.resize(take * dim, 0.0);
+                let wi = sent % self.workers.len();
+                if self.workers[wi].send(job).is_err() {
+                    return Err(anyhow!("mlp pool worker {wi} is gone (lane needs respawn)"));
+                }
+                sent += 1;
+            } else {
+                let mut job = self
+                    .reply_rx
+                    .recv()
+                    .map_err(|_| anyhow!("mlp pool reply channel closed (lane needs respawn)"))?;
+                let fresh = job.seq == self.seq;
+                if fresh {
+                    let o0 = job.start * dim;
+                    out[o0..o0 + job.rows * dim].copy_from_slice(&job.out[..job.rows * dim]);
+                    done += 1;
+                }
+                job.model = None;
+                self.slots.push(job);
+            }
+        }
+        Ok(())
+    }
+}
+
+fn worker_loop(rx: mpsc::Receiver<Job>, reply: mpsc::SyncSender<Job>) {
+    let mut scratch = MlpScratch::new();
+    while let Ok(mut job) = rx.recv() {
+        if let Some(model) = job.model.take() {
+            forward_rows(
+                &model, &mut scratch, job.rows, &job.x, job.t, job.w, &job.labels, &mut job.out,
+            );
+            job.model = Some(model);
+        }
+        if reply.send(job).is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::json::Json;
+
+    fn model() -> Arc<MlpModel> {
+        // Build via JSON to also exercise the artifact parser.
+        let (d, h, e, c) = (8usize, 12usize, 4usize, 2usize);
+        let mut rng = Pcg32::seeded(17);
+        let mut t = |n: usize, s: f32| {
+            Json::arr_f32(&rng.normal_vec(n).iter().map(|v| v * s).collect::<Vec<_>>())
+        };
+        let blocks: Vec<Json> = (0..2)
+            .map(|_| {
+                Json::obj(vec![
+                    ("w1", t(d * h, 0.2)),
+                    ("b1", t(h, 0.05)),
+                    ("w2", t(h * d, 0.1)),
+                    ("b2", t(d, 0.01)),
+                    ("mw", t(e * 2 * d, 0.1)),
+                    ("mb", t(2 * d, 0.01)),
+                ])
+            })
+            .collect();
+        let spec = Json::obj(vec![
+            ("dim", Json::Num(d as f64)),
+            ("hidden", Json::Num(h as f64)),
+            ("emb", Json::Num(e as f64)),
+            ("num_classes", Json::Num(c as f64)),
+            ("null_class", Json::Num(c as f64)),
+            ("cfg", Json::Bool(true)),
+            ("cls_emb", t((c + 1) * e, 0.2)),
+            ("blocks", Json::Arr(blocks)),
+        ]);
+        Arc::new(MlpModel::from_json(&spec).unwrap())
+    }
+
+    #[test]
+    fn pool_output_bit_identical_to_inline_for_any_thread_count() {
+        let m = model();
+        let mut rng = Pcg32::seeded(23);
+        let rows = 53; // ragged: not a multiple of CHUNK_ROWS
+        let x = rng.normal_vec(rows * m.dim);
+        let labels: Vec<i32> = (0..rows).map(|i| (i % (m.num_classes + 1)) as i32).collect();
+        let mut inline = vec![0f32; rows * m.dim];
+        let mut s = MlpScratch::new();
+        forward_rows(&m, &mut s, rows, &x, 0.62, 1.5, &labels, &mut inline);
+        let ib: Vec<u32> = inline.iter().map(|v| v.to_bits()).collect();
+        for threads in [1usize, 2, 4] {
+            let mut pool = RowPool::new(threads).unwrap();
+            let mut pooled = vec![0f32; rows * m.dim];
+            // run twice to exercise slot reuse
+            for _ in 0..2 {
+                pool.run_rows(&m, rows, m.dim, &x, 0.62, 1.5, &labels, &mut pooled).unwrap();
+            }
+            let pb: Vec<u32> = pooled.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(ib, pb, "pool threads={threads}");
+        }
+    }
+}

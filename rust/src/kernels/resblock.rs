@@ -1,0 +1,188 @@
+//! Fused time-modulated residual block (`ref.py::fused_resblock`):
+//!
+//! ```text
+//! y = x + silu((x * (1 + scale) + shift) @ W1 + b1) @ W2 + b2
+//! ```
+//!
+//! The fused kernel walks the batch in [`TILE`]-row tiles and keeps each
+//! tile's activations resident across all four stages — modulate, first
+//! GEMM, SiLU, second GEMM + residual add — so `x` is read once and no
+//! `[rows, hidden]` intermediate ever exists outside a `TILE * hidden`
+//! scratch strip (the rust analogue of the python kernel's VMEM-resident
+//! accumulation; see the `fused_resblock.py` docstring).
+//!
+//! # Determinism contract
+//!
+//! Per-element accumulation order is fixed and identical to
+//! [`naive_resblock_into`]: modulate is elementwise; both GEMMs seed from
+//! the bias (plus the residual for the second) and add k-ascending; SiLU
+//! is `v * (1 / (1 + exp(-v)))` exactly as in `ref.py`. Because each
+//! output row depends only on its own input row, the result is also
+//! independent of tile boundaries and of how rows are chunked across
+//! threads — the property the intra-lane pool's bit-identity rests on.
+
+use super::gemm::{gemm_bias, gemm_bias_residual};
+
+/// Rows per fused tile. Also the row-chunk unit of the intra-lane pool,
+/// so a chunk is always a whole number of tiles.
+pub const TILE: usize = 8;
+
+/// SiLU with the exact operation order of `ref.py` (`reciprocal` of
+/// `1 + exp(-v)`, then multiply — not a division).
+#[inline]
+pub fn silu(v: f32) -> f32 {
+    let s = 1.0 / (1.0 + (-v).exp());
+    v * s
+}
+
+/// Fused resblock over `rows` rows of width `d` with hidden width `h`.
+///
+/// * `x`: `[rows, d]` input activations (read once).
+/// * `modv`: `[rows, 2d]` per-row modulation; `scale = modv[r, ..d]`,
+///   `shift = modv[r, d..]`.
+/// * `w1`: `[d, h]`, `b1`: `[h]`, `w2`: `[h, d]`, `b2`: `[d]`, row-major.
+/// * `mbuf`: scratch, at least `TILE * d`; `hbuf`: scratch, at least
+///   `TILE * h`. Only the first tile-sized strips are touched.
+/// * `out`: `[rows, d]`; must not alias `x`.
+///
+/// Allocation-free. Bit-identical to [`naive_resblock_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn fused_resblock_into(
+    rows: usize,
+    d: usize,
+    h: usize,
+    x: &[f32],
+    modv: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    mbuf: &mut [f32],
+    hbuf: &mut [f32],
+    out: &mut [f32],
+) {
+    debug_assert_eq!(x.len(), rows * d);
+    debug_assert_eq!(modv.len(), rows * 2 * d);
+    debug_assert!(mbuf.len() >= TILE.min(rows.max(1)) * d);
+    debug_assert!(hbuf.len() >= TILE.min(rows.max(1)) * h);
+    debug_assert_eq!(out.len(), rows * d);
+    let mut r0 = 0;
+    while r0 < rows {
+        let bt = TILE.min(rows - r0);
+        // 1) modulate the tile: m = x * (1 + scale) + shift
+        for i in 0..bt {
+            let xr = &x[(r0 + i) * d..(r0 + i) * d + d];
+            let mr = &modv[(r0 + i) * 2 * d..(r0 + i) * 2 * d + 2 * d];
+            let (sc, sh) = mr.split_at(d);
+            let mrow = &mut mbuf[i * d..(i + 1) * d];
+            for (((m, &xv), &scv), &shv) in mrow.iter_mut().zip(xr).zip(sc).zip(sh) {
+                *m = xv * (1.0 + scv) + shv;
+            }
+        }
+        // 2) first GEMM into the hidden strip: hbuf = m @ W1 + b1
+        gemm_bias(bt, d, h, &mbuf[..bt * d], w1, b1, &mut hbuf[..bt * h]);
+        // 3) SiLU in place while the strip is cache-hot
+        for v in hbuf[..bt * h].iter_mut() {
+            *v = silu(*v);
+        }
+        // 4) second GEMM with fused residual: out = x + hbuf @ W2 + b2
+        gemm_bias_residual(
+            bt,
+            h,
+            d,
+            &hbuf[..bt * h],
+            w2,
+            b2,
+            &x[r0 * d..(r0 + bt) * d],
+            &mut out[r0 * d..(r0 + bt) * d],
+        );
+        r0 += bt;
+    }
+}
+
+/// Naive scalar oracle: one row at a time, column-strided weight access,
+/// full `[h]` intermediate per row — the cache-hostile lower bound the
+/// roofline bench measures the fused kernel against. Accumulation order
+/// per output element is identical to [`fused_resblock_into`], so the
+/// two are bit-identical (pinned by tests).
+///
+/// `mrow` is scratch of at least `d`, `hrow` of at least `h`.
+#[allow(clippy::too_many_arguments)]
+pub fn naive_resblock_into(
+    rows: usize,
+    d: usize,
+    h: usize,
+    x: &[f32],
+    modv: &[f32],
+    w1: &[f32],
+    b1: &[f32],
+    w2: &[f32],
+    b2: &[f32],
+    mrow: &mut [f32],
+    hrow: &mut [f32],
+    out: &mut [f32],
+) {
+    for r in 0..rows {
+        for dd in 0..d {
+            mrow[dd] = x[r * d + dd] * (1.0 + modv[r * 2 * d + dd]) + modv[r * 2 * d + d + dd];
+        }
+        for hc in 0..h {
+            let mut s = b1[hc];
+            for dd in 0..d {
+                s += mrow[dd] * w1[dd * h + hc];
+            }
+            hrow[hc] = silu(s);
+        }
+        for dd in 0..d {
+            let mut s = x[r * d + dd] + b2[dd];
+            for hc in 0..h {
+                s += hrow[hc] * w2[hc * d + dd];
+            }
+            out[r * d + dd] = s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fused_resblock_bit_identical_to_naive_oracle() {
+        let mut rng = Pcg32::seeded(11);
+        for &(rows, d, h) in &[(1, 8, 8), (7, 8, 16), (9, 24, 40), (16, 32, 32), (21, 17, 13)] {
+            let x = rng.normal_vec(rows * d);
+            let modv: Vec<f32> = rng.normal_vec(rows * 2 * d).iter().map(|v| v * 0.1).collect();
+            let scale1 = 0.5 / (d as f32).sqrt();
+            let scale2 = 0.25 / (h as f32).sqrt();
+            let w1: Vec<f32> = rng.normal_vec(d * h).iter().map(|v| v * scale1).collect();
+            let b1: Vec<f32> = rng.normal_vec(h).iter().map(|v| v * 0.05).collect();
+            let w2: Vec<f32> = rng.normal_vec(h * d).iter().map(|v| v * scale2).collect();
+            let b2: Vec<f32> = rng.normal_vec(d).iter().map(|v| v * 0.01).collect();
+            let mut fast = vec![0f32; rows * d];
+            let mut slow = vec![0f32; rows * d];
+            let mut mbuf = vec![0f32; TILE * d];
+            let mut hbuf = vec![0f32; TILE * h];
+            let mut mrow = vec![0f32; d];
+            let mut hrow = vec![0f32; h];
+            fused_resblock_into(
+                rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mbuf, &mut hbuf, &mut fast,
+            );
+            naive_resblock_into(
+                rows, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mrow, &mut hrow, &mut slow,
+            );
+            let fb: Vec<u32> = fast.iter().map(|v| v.to_bits()).collect();
+            let sb: Vec<u32> = slow.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(fb, sb, "resblock ({rows},{d},{h})");
+        }
+    }
+
+    #[test]
+    fn silu_matches_reference_values() {
+        assert_eq!(silu(0.0), 0.0);
+        // silu(x) -> x for large x, -> 0 for very negative x
+        assert!((silu(20.0) - 20.0).abs() < 1e-4);
+        assert!(silu(-20.0).abs() < 1e-6);
+    }
+}

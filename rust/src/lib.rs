@@ -27,6 +27,7 @@ pub mod analysis;
 pub mod bench_util;
 pub mod coordinator;
 pub mod distill;
+pub mod kernels;
 pub mod obs;
 pub mod runtime;
 pub mod solver;

@@ -39,6 +39,10 @@ USAGE:
                      DESIGN.md §12, `trace` op in PROTOCOL.md)
                     [--trace-out FILE]  (periodically export the trace
                      ring as JSON lines via atomic rename; default: off)
+                    [--mlp-pool-threads N]  (intra-lane row-pool threads
+                     for bns_mlp_field models; 0 = auto (min(cores, 8)),
+                     1 = inline. Pure throughput knob: outputs are
+                     bit-identical for any value — DESIGN.md §13)
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -160,6 +164,8 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let trace_capacity: usize =
                 flags.get("trace-capacity").map(|s| s.parse()).transpose()?.unwrap_or(4096);
             let trace_out = flags.get("trace-out").map(std::path::PathBuf::from);
+            let mlp_pool_threads: usize =
+                flags.get("mlp-pool-threads").map(|s| s.parse()).transpose()?.unwrap_or(0);
             anyhow::ensure!(reactors >= 1, "--reactors must be >= 1 (got 0)");
             anyhow::ensure!(max_inflight >= 1, "--max-inflight must be >= 1 (got 0)");
             anyhow::ensure!(
@@ -169,6 +175,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let rt = Arc::new(Runtime::with_config(RuntimeConfig {
                 lanes,
                 lane_exec_timeout: std::time::Duration::from_millis(lane_exec_timeout_ms),
+                mlp_pool_threads,
                 ..Default::default()
             })?);
             eprintln!(

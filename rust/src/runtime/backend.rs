@@ -9,22 +9,40 @@
 //! backends sit behind the same `Backend` trait and the same device
 //! thread, so the engine/runtime layers never know which one runs.
 //!
-//! The default (no-feature) build uses `StubBackend`: it refuses real
-//! HLO-text artifacts with an actionable error, but loads *stub field*
-//! artifacts — a JSON file `{"bns_stub_field": {"k": .., "c": ..}}`
-//! describing the affine velocity field
-//!     u[r, d] = k * x[r, d] + c + label_scale * labels[r] + t_scale * t
-//! evaluated in f32. An optional `cost` key repeats the compute pass
-//! (identical output, proportionally more wall time) so load benches can
-//! emulate heavier models. That keeps the full serving stack (engine, batcher,
-//! router, accounting) executable and testable — `cargo test` drives
-//! real batches end-to-end through the device thread — without any
-//! compiled model. `bench_util::write_stub_artifacts` emits a complete
-//! artifact directory in this format.
+//! The default (no-feature) build uses `StubBackend`, which loads two
+//! JSON artifact kinds (and refuses real HLO text with an actionable
+//! error):
+//!
+//! * `{"bns_stub_field": {"k": .., "c": ..}}` — the affine velocity field
+//!       u[r, d] = k * x[r, d] + c + label_scale * labels[r] + t_scale * t
+//!   evaluated in f32. An optional `cost` key repeats the compute pass
+//!   (identical output, proportionally more wall time) so load benches
+//!   can emulate heavier models. **`cost` is a wall-time knob only**: it
+//!   never changes outputs and never feeds `forwards` accounting —
+//!   `forwards_per_eval` comes exclusively from the manifest (model
+//!   structure: 2 for guided fields, 1 otherwise), a distinction pinned
+//!   by `tests/engine_accounting.rs`.
+//! * `{"bns_mlp_field": {...}}` — a real-compute time-modulated residual
+//!   MLP executed by the CPU kernels in `crate::kernels` (tiled GEMM,
+//!   fused resblock; DESIGN.md §13). Weights ship in the JSON. Wide
+//!   batches are fanned across a persistent intra-lane `RowPool` whose
+//!   thread count is a pure throughput knob — results are bit-identical
+//!   for any setting.
+//!
+//! That keeps the full serving stack (engine, batcher, router,
+//! accounting) executable and testable — `cargo test` drives real
+//! batches end-to-end through the device thread — without any compiled
+//! model. `bench_util::write_stub_artifacts` /
+//! `bench_util::write_mlp_artifacts` emit complete artifact directories
+//! in these formats.
 
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{anyhow, Context, Result};
+
+use crate::kernels::mlp::{forward_rows, MlpModel, MlpScratch};
+use crate::kernels::pool::{RowPool, CHUNK_ROWS};
 
 /// A compiled-executable store owned by a device lane thread. Implementors
 /// are **not** required to be `Send`/`Sync`: one lane thread owns each
@@ -73,11 +91,18 @@ pub trait Backend {
 }
 
 /// Construct the CPU backend selected at compile time.
-pub fn new_cpu() -> Result<Box<dyn Backend>> {
+///
+/// `mlp_pool_threads` sizes the per-lane `bns_mlp_field` row pool
+/// (0 = auto: `min(available_parallelism, 8)`, 1 = inline, no pool). The
+/// PJRT backend brings its own threading and ignores it.
+pub fn new_cpu(mlp_pool_threads: usize) -> Result<Box<dyn Backend>> {
     #[cfg(feature = "pjrt")]
-    return Ok(Box::new(pjrt::PjrtBackend::new()?));
+    {
+        let _ = mlp_pool_threads;
+        return Ok(Box::new(pjrt::PjrtBackend::new()?));
+    }
     #[cfg(not(feature = "pjrt"))]
-    Ok(Box::new(StubBackend::new()))
+    Ok(Box::new(StubBackend::with_pool_threads(mlp_pool_threads)))
 }
 
 // ---------------------------------------------------------------------------
@@ -86,7 +111,9 @@ pub fn new_cpu() -> Result<Box<dyn Backend>> {
 
 /// Parameters of one stub affine field artifact. `cost` repeats the
 /// (idempotent) compute pass so benches can emulate heavier models:
-/// output is identical for any cost, wall time scales with it.
+/// output is identical for any cost, wall time scales with it. It is
+/// **not** a forwards-accounting input — only the manifest's
+/// `forwards_per_eval` feeds `forwards` totals (DESIGN.md §9).
 #[derive(Debug, Clone, Copy)]
 struct StubExe {
     k: f32,
@@ -96,14 +123,46 @@ struct StubExe {
     cost: u32,
 }
 
-/// Offline-build device backend: loads `bns_stub_field` JSON artifacts.
+/// One loaded real-compute MLP field: parsed weights (shared with the
+/// pool workers) plus the lane-local scratch used for inline execs.
+struct MlpExe {
+    model: Arc<MlpModel>,
+    scratch: MlpScratch,
+}
+
+/// One loaded executable of either artifact kind.
+enum Exe {
+    Affine(StubExe),
+    Mlp(MlpExe),
+}
+
+/// Offline-build device backend: loads `bns_stub_field` (affine) and
+/// `bns_mlp_field` (real CPU compute) JSON artifacts.
 pub struct StubBackend {
-    exes: Vec<StubExe>,
+    exes: Vec<Exe>,
+    /// Configured pool width (0 = auto); resolved on first MLP load.
+    pool_threads: usize,
+    /// Spawned lazily on the first `bns_mlp_field` load, and only when
+    /// the resolved width exceeds 1 — stub-only lanes never pay for it.
+    pool: Option<RowPool>,
 }
 
 impl StubBackend {
     pub fn new() -> Self {
-        StubBackend { exes: Vec::new() }
+        Self::with_pool_threads(0)
+    }
+
+    /// Backend with an explicit intra-lane MLP pool width. 0 = auto
+    /// (`min(available_parallelism, 8)`), 1 = always inline.
+    pub fn with_pool_threads(pool_threads: usize) -> Self {
+        StubBackend { exes: Vec::new(), pool_threads, pool: None }
+    }
+
+    fn resolved_pool_threads(&self) -> usize {
+        if self.pool_threads > 0 {
+            return self.pool_threads;
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
     }
 }
 
@@ -122,31 +181,49 @@ impl Backend for StubBackend {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading artifact {}", path.display()))?;
         let trimmed = text.trim_start();
-        let spec = if trimmed.starts_with('{') {
-            crate::util::json::Json::parse(trimmed)
-                .ok()
-                .map(|j| j.get("bns_stub_field").clone())
-                .filter(|s| s != &crate::util::json::Json::Null)
+        let json = if trimmed.starts_with('{') {
+            crate::util::json::Json::parse(trimmed).ok()
         } else {
             None
         };
-        let Some(spec) = spec else {
-            return Err(anyhow!(
-                "artifact {} is not a bns_stub_field JSON file; executing real HLO \
-                 artifacts requires the PJRT backend (build with `--features pjrt` \
-                 and a vendored `xla` crate)",
-                path.display()
-            ));
-        };
-        let g = |k: &str, default: f64| spec.get(k).as_f64().unwrap_or(default) as f32;
-        self.exes.push(StubExe {
-            k: g("k", -1.0),
-            c: g("c", 0.0),
-            label_scale: g("label_scale", 0.0),
-            t_scale: g("t_scale", 0.0),
-            cost: spec.get("cost").as_f64().unwrap_or(1.0).max(1.0) as u32,
-        });
-        Ok(self.exes.len() as u64)
+        if let Some(j) = &json {
+            let spec = j.get("bns_stub_field");
+            if spec != &crate::util::json::Json::Null {
+                let g = |k: &str, default: f64| spec.get(k).as_f64().unwrap_or(default) as f32;
+                self.exes.push(Exe::Affine(StubExe {
+                    k: g("k", -1.0),
+                    c: g("c", 0.0),
+                    label_scale: g("label_scale", 0.0),
+                    t_scale: g("t_scale", 0.0),
+                    cost: spec.get("cost").as_f64().unwrap_or(1.0).max(1.0) as u32,
+                }));
+                return Ok(self.exes.len() as u64);
+            }
+            let spec = j.get("bns_mlp_field");
+            if spec != &crate::util::json::Json::Null {
+                let model = MlpModel::from_json(spec)
+                    .with_context(|| format!("parsing mlp artifact {}", path.display()))?;
+                if self.pool.is_none() {
+                    let threads = self.resolved_pool_threads();
+                    if threads > 1 {
+                        // Spawn here, on the (cold) load path, so exec_into
+                        // stays allocation-free at steady state.
+                        self.pool = Some(RowPool::new(threads)?);
+                    }
+                }
+                self.exes.push(Exe::Mlp(MlpExe {
+                    model: Arc::new(model),
+                    scratch: MlpScratch::new(),
+                }));
+                return Ok(self.exes.len() as u64);
+            }
+        }
+        Err(anyhow!(
+            "artifact {} is not a bns_stub_field / bns_mlp_field JSON file; executing \
+             real HLO artifacts requires the PJRT backend (build with `--features pjrt` \
+             and a vendored `xla` crate)",
+            path.display()
+        ))
     }
 
     fn exec_into(
@@ -156,33 +233,55 @@ impl Backend for StubBackend {
         dim: usize,
         x: &[f32],
         t: f32,
-        _w: f32,
+        w: f32,
         labels: &[i32],
         out: &mut [f32],
     ) -> Result<()> {
-        let e = *self
-            .exes
-            .get(id as usize - 1)
+        let StubBackend { exes, pool, .. } = self;
+        let exe = exes
+            .get_mut((id as usize).wrapping_sub(1))
             .with_context(|| format!("unknown stub executable id {id}"))?; // bns-lint: allow(hot_path_alloc) — format! sits in with_context's lazy closure; it runs only on the unknown-id error path, never on a successful exec
         anyhow::ensure!(x.len() == batch * dim, "stub exec: x has wrong shape");
         anyhow::ensure!(labels.len() == batch, "stub exec: labels have wrong shape");
         anyhow::ensure!(out.len() == batch * dim, "stub exec: out has wrong shape");
-        for pass in 0..e.cost {
-            for r in 0..batch {
-                let bias = e.c + e.label_scale * labels[r] as f32 + e.t_scale * t;
-                let row = &x[r * dim..(r + 1) * dim];
-                let orow = &mut out[r * dim..(r + 1) * dim];
-                for (o, &xv) in orow.iter_mut().zip(row.iter()) {
-                    *o = e.k * xv + bias;
+        match exe {
+            Exe::Affine(e) => {
+                let e = *e;
+                for pass in 0..e.cost {
+                    for r in 0..batch {
+                        let bias = e.c + e.label_scale * labels[r] as f32 + e.t_scale * t;
+                        let row = &x[r * dim..(r + 1) * dim];
+                        let orow = &mut out[r * dim..(r + 1) * dim];
+                        for (o, &xv) in orow.iter_mut().zip(row.iter()) {
+                            *o = e.k * xv + bias;
+                        }
+                    }
+                    if pass + 1 < e.cost {
+                        // redundant passes write the same values; black_box keeps
+                        // the optimizer from collapsing the cost knob
+                        std::hint::black_box(&mut *out);
+                    }
                 }
+                Ok(())
             }
-            if pass + 1 < e.cost {
-                // redundant passes write the same values; black_box keeps
-                // the optimizer from collapsing the cost knob
-                std::hint::black_box(&mut *out);
+            Exe::Mlp(me) => {
+                anyhow::ensure!(dim == me.model.dim, "mlp exec: dim mismatch with artifact");
+                let max = me.model.num_classes as i32;
+                for &l in labels {
+                    anyhow::ensure!((0..=max).contains(&l), "mlp exec: label out of range");
+                }
+                // Pool fan-out pays off only on wide batches; narrow ones
+                // run inline. Either path is bit-identical (forward_rows
+                // is row-chunk invariant).
+                if let Some(p) = pool {
+                    if batch >= 2 * CHUNK_ROWS {
+                        return p.run_rows(&me.model, batch, dim, x, t, w, labels, out);
+                    }
+                }
+                forward_rows(&me.model, &mut me.scratch, batch, x, t, w, labels, out);
+                Ok(())
             }
         }
-        Ok(())
     }
 }
 
@@ -313,6 +412,68 @@ mod tests {
         let a = b.exec(id1, 2, 2, &x, 0.7, 0.0, &[1, 2]).unwrap();
         let c = b.exec(id8, 2, 2, &x, 0.7, 0.0, &[1, 2]).unwrap();
         assert_eq!(a, c, "cost must scale wall time only, never the values");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mlp_artifact_execs_and_pool_matches_inline_bitwise() {
+        use crate::util::json::Json;
+        use crate::util::rng::Pcg32;
+        let (d, h, e, c) = (8usize, 12usize, 4usize, 3usize);
+        let mut rng = Pcg32::seeded(31);
+        let mut arr = |n: usize, s: f32| {
+            Json::arr_f32(&rng.normal_vec(n).iter().map(|v| v * s).collect::<Vec<_>>())
+        };
+        let blocks: Vec<Json> = (0..2)
+            .map(|_| {
+                Json::obj(vec![
+                    ("w1", arr(d * h, 0.2)),
+                    ("b1", arr(h, 0.05)),
+                    ("w2", arr(h * d, 0.1)),
+                    ("b2", arr(d, 0.01)),
+                    ("mw", arr(e * 2 * d, 0.1)),
+                    ("mb", arr(2 * d, 0.01)),
+                ])
+            })
+            .collect();
+        let spec = Json::obj(vec![
+            ("dim", Json::Num(d as f64)),
+            ("hidden", Json::Num(h as f64)),
+            ("emb", Json::Num(e as f64)),
+            ("num_classes", Json::Num(c as f64)),
+            ("null_class", Json::Num(c as f64)),
+            ("cfg", Json::Bool(true)),
+            ("cls_emb", arr((c + 1) * e, 0.2)),
+            ("blocks", Json::Arr(blocks)),
+        ]);
+        let art = Json::obj(vec![("bns_mlp_field", spec)]).to_string();
+        let dir = std::env::temp_dir().join(format!("bns-mlp-be-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m_b32.mlp.json");
+        std::fs::write(&path, &art).unwrap();
+
+        let batch = 32usize; // wide enough to take the pool path
+        let mut rng2 = Pcg32::seeded(33);
+        let x = rng2.normal_vec(batch * d);
+        let labels: Vec<i32> = (0..batch).map(|i| (i % (c + 1)) as i32).collect();
+
+        let mut inline = StubBackend::with_pool_threads(1);
+        let id = inline.load(&path).unwrap();
+        let base = inline.exec(id, batch, d, &x, 0.4, 1.5, &labels).unwrap();
+        assert!(base.iter().all(|v| v.is_finite()));
+
+        for threads in [2usize, 4] {
+            let mut pooled = StubBackend::with_pool_threads(threads);
+            let id = pooled.load(&path).unwrap();
+            let got = pooled.exec(id, batch, d, &x, 0.4, 1.5, &labels).unwrap();
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let bb: Vec<u32> = base.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, bb, "pool threads={threads}");
+        }
+
+        // out-of-range label is a structured error, not a panic
+        let err = inline.exec(id, 1, d, &x[..d], 0.4, 1.5, &[99]).unwrap_err();
+        assert!(err.to_string().contains("label"), "{err}");
         std::fs::remove_dir_all(&dir).ok();
     }
 

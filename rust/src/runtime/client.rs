@@ -220,6 +220,11 @@ pub struct RuntimeConfig {
     /// Deterministic fault-injection plan wrapped around every lane's
     /// backend (chaos testing; `None` in production).
     pub fault: Option<Arc<FaultPlan>>,
+    /// Worker threads in each lane's intra-lane `bns_mlp_field` row pool
+    /// (0 = auto: `min(available_parallelism, 8)`, 1 = inline). Purely a
+    /// throughput knob: samples are bit-identical for any value
+    /// (DESIGN.md §13); pinned by `tests/mlp_pool.rs`.
+    pub mlp_pool_threads: usize,
 }
 
 impl Default for RuntimeConfig {
@@ -228,6 +233,7 @@ impl Default for RuntimeConfig {
             lanes: 1,
             lane_exec_timeout: DEFAULT_EXEC_TIMEOUT,
             fault: None,
+            mlp_pool_threads: 0,
         }
     }
 }
@@ -280,9 +286,10 @@ impl Runtime {
             let stats_t = stats.clone();
             let fault_t = cfg.fault.clone();
             let tracer_t = tracer.clone();
+            let pool_t = cfg.mlp_pool_threads;
             std::thread::Builder::new()
                 .name(format!("bns-lane-{i}"))
-                .spawn(move || lane_thread(rx, ready_tx, stats_t, fault_t, tracer_t, i, 0))
+                .spawn(move || lane_thread(rx, ready_tx, stats_t, fault_t, tracer_t, i, 0, pool_t))
                 .context("spawning device lane thread")?;
             ready_rx
                 .recv()
@@ -301,10 +308,11 @@ impl Runtime {
         let fault_s = cfg.fault.clone();
         let timeout_s = cfg.lane_exec_timeout;
         let tracer_s = tracer.clone();
+        let pool_s = cfg.mlp_pool_threads;
         std::thread::Builder::new()
             .name("bns-lane-supervisor".to_string())
             .spawn(move || {
-                supervisor_loop(sup_rx, lanes_s, fault_s, tracer_s, shutdown_s, timeout_s)
+                supervisor_loop(sup_rx, lanes_s, fault_s, tracer_s, shutdown_s, timeout_s, pool_s)
             })
             .context("spawning lane supervisor thread")?;
         Ok(Runtime {
@@ -471,6 +479,7 @@ fn supervisor_loop(
     tracer: TracerCell,
     shutdown: Arc<AtomicBool>,
     exec_timeout: Duration,
+    mlp_pool_threads: usize,
 ) {
     while let Ok(msg) = rx.recv() {
         let (lane, generation, trace) = match msg {
@@ -481,7 +490,15 @@ fn supervisor_loop(
             return;
         }
         if let Some(shared) = lanes.get(lane) {
-            respawn_lane(shared, generation, fault.clone(), &tracer, trace, exec_timeout);
+            respawn_lane(
+                shared,
+                generation,
+                fault.clone(),
+                &tracer,
+                trace,
+                exec_timeout,
+                mlp_pool_threads,
+            );
         }
     }
 }
@@ -492,6 +509,7 @@ fn supervisor_loop(
 /// the request path). If the suspicion is stale or the new backend fails
 /// to initialize, the lane is left as-is — callers keep getting
 /// structured errors and a later suspicion retries the respawn.
+#[allow(clippy::too_many_arguments)]
 fn respawn_lane(
     shared: &Arc<LaneShared>,
     suspect_generation: u64,
@@ -499,6 +517,7 @@ fn respawn_lane(
     tracer: &TracerCell,
     trace: u64,
     exec_timeout: Duration,
+    mlp_pool_threads: usize,
 ) {
     // Stale suspicion: this incident was already handled. Only the
     // (single) supervisor thread ever bumps generations, so the check
@@ -516,7 +535,11 @@ fn respawn_lane(
     let tracer_t = tracer.clone();
     let spawned = std::thread::Builder::new()
         .name(format!("bns-lane-{lane}-g{new_generation}"))
-        .spawn(move || lane_thread(rx, ready_tx, stats, fault, tracer_t, lane, new_generation));
+        .spawn(move || {
+            lane_thread(
+                rx, ready_tx, stats, fault, tracer_t, lane, new_generation, mlp_pool_threads,
+            )
+        });
     if spawned.is_err() {
         return;
     }
@@ -753,6 +776,7 @@ impl ExeHandle {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn lane_thread(
     rx: mpsc::Receiver<Msg>,
     ready: mpsc::SyncSender<Result<()>>,
@@ -761,8 +785,9 @@ fn lane_thread(
     tracer: TracerCell,
     lane: usize,
     generation: u64,
+    mlp_pool_threads: usize,
 ) {
-    let be = match backend::new_cpu() {
+    let be = match backend::new_cpu(mlp_pool_threads) {
         Ok(b) => {
             let _ = ready.send(Ok(()));
             b
@@ -972,6 +997,7 @@ mod tests {
             lanes: 1,
             lane_exec_timeout: Duration::from_millis(100),
             fault: Some(plan),
+            ..Default::default()
         })
         .unwrap();
         let exe = rt.load_on(0, &path, 1, 2).unwrap();
@@ -1011,6 +1037,7 @@ mod tests {
             lanes: 1,
             lane_exec_timeout: Duration::from_millis(100),
             fault: Some(plan),
+            ..Default::default()
         })
         .unwrap();
         let tracer = Arc::new(TraceRecorder::new(256));

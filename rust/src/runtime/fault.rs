@@ -393,7 +393,7 @@ mod tests {
             schedule: vec![FaultSpec { lane: Some(0), call: 1, kind: FaultKind::ExecError }],
             ..FaultConfig::default()
         }));
-        let mut be = FaultBackend::new(backend::new_cpu().unwrap(), plan.clone(), 0, 0);
+        let mut be = FaultBackend::new(backend::new_cpu(1).unwrap(), plan.clone(), 0, 0);
         assert_eq!(be.platform(), "stub-cpu");
         let id = be.load(&art).unwrap();
         let x = [2.0f32, 4.0];

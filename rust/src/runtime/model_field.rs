@@ -16,6 +16,15 @@
 //! Batch handling: the smallest bucket >= rows is chosen; rows are
 //! zero-padded to the bucket (labels padded with the null class so the
 //! padding rows still compute *something* valid).
+//!
+//! This layer is backend-kind agnostic: whether a bucket executable is
+//! a `bns_stub_field` affine form or a real-compute `bns_mlp_field`
+//! residual MLP (kernels layer, DESIGN.md §13) is decided entirely by
+//! the artifact the lane loaded. Padding interacts cheaply with the
+//! MLP path by design — padded rows are real rows to the kernels, but
+//! per-row cost is flat and the intra-lane row pool absorbs the bucket
+//! width, so choosing generous buckets costs bandwidth, not latency
+//! cliffs.
 
 use std::sync::{Arc, Mutex};
 

@@ -110,10 +110,14 @@ impl NsSolver {
 
     /// Allocation-free Algorithm 1: identical math to `sample`, but the
     /// velocity history lives in the workspace's flat `[nfe, len]` arena
-    /// and the `a_i·x0 + Σ_j b_ij·u_j` combine writes the state register
-    /// in place — zero heap allocation per step in steady state. The
-    /// per-element operation order matches `sample` exactly, so outputs
-    /// are bit-identical (enforced by tests/sample_into_equiv.rs).
+    /// and the `a_i·x0 + Σ_j b_ij·u_j` combine is the *fused* streamed
+    /// pass from `kernels::ns_combine_into` — all history terms applied
+    /// to an L1-resident block of the state register while it is hot,
+    /// one pass over x instead of one AXPY pass per nonzero coefficient,
+    /// zero heap allocation per step in steady state. The per-element
+    /// operation order matches `sample` exactly (seed `a·x0`, add terms
+    /// j-ascending, skip exact zeros), so outputs are bit-identical
+    /// (enforced by tests/sample_into_equiv.rs).
     pub fn sample_into<'w>(
         &self,
         field: &dyn Field,
@@ -123,31 +127,21 @@ impl NsSolver {
         let len = x0.len();
         let n = self.nfe();
         ws.ensure_hist(n, len);
-        {
-            let x = &mut ws.x;
-            let hist = &mut ws.hist;
-            x.copy_from_slice(x0);
-            for i in 0..n {
-                // u_i = u(t_i, x_i) written straight into its arena row
-                let (prev, cur) = hist.split_at_mut(i * len);
-                field.eval_into(self.times[i], x, &mut cur[..len])?;
-                // x_{i+1} = a_i x_0 + sum_j b_ij u_j — x_i is dead once
-                // u_i is recorded, so the combine overwrites x in place.
-                let a = self.a[i] as f32;
-                for (o, &x0v) in x.iter_mut().zip(x0.iter()) {
-                    *o = a * x0v;
-                }
-                for (j, row_b) in self.b[i].iter().enumerate() {
-                    let bj = *row_b as f32;
-                    if bj == 0.0 {
-                        continue;
-                    }
-                    let uj = if j < i { &prev[j * len..(j + 1) * len] } else { &cur[..len] };
-                    for (o, &uv) in x.iter_mut().zip(uj.iter()) {
-                        *o += bj * uv;
-                    }
-                }
-            }
+        ws.x.copy_from_slice(x0);
+        for i in 0..n {
+            // u_i = u(t_i, x_i) written straight into its arena row
+            field.eval_into(self.times[i], &ws.x, &mut ws.hist[i * len..(i + 1) * len])?;
+            // x_{i+1} = a_i x_0 + sum_j b_ij u_j — x_i is dead once u_i
+            // is recorded, so the fused combine overwrites x in place,
+            // streaming rows 0..=i of the arena.
+            crate::kernels::ns_combine_into(
+                self.a[i] as f32,
+                x0,
+                &self.b[i],
+                &ws.hist[..(i + 1) * len],
+                len,
+                &mut ws.x,
+            );
         }
         Ok(&ws.x)
     }

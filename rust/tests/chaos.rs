@@ -17,7 +17,7 @@ use std::net::TcpStream;
 use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
-use bns_serve::bench_util::{stub_store, StubModel};
+use bns_serve::bench_util::{mlp_store, stub_store, MlpModelSpec, StubModel};
 use bns_serve::coordinator::request::Priority;
 use bns_serve::coordinator::{
     Engine, EngineConfig, SampleRequest, Server, ServerConfig, SolverSpec,
@@ -171,6 +171,7 @@ fn wedged_lane_respawns_and_engine_service_recovers_bit_identically() {
             lanes: 1,
             lane_exec_timeout: Duration::from_millis(100),
             fault: Some(plan),
+            ..Default::default()
         })
         .expect("runtime"),
     );
@@ -312,6 +313,7 @@ fn chaos_soak_settles_every_request_exactly_once() {
             lanes: 1,
             lane_exec_timeout: Duration::from_millis(50),
             fault: Some(plan),
+            ..Default::default()
         })
         .expect("runtime"),
     );
@@ -437,6 +439,7 @@ fn tcp_plane_survives_lane_wedge_and_recovers_bit_identically() {
             lanes: 1,
             lane_exec_timeout: Duration::from_millis(100),
             fault: Some(plan),
+            ..Default::default()
         })
         .expect("runtime"),
     );
@@ -532,5 +535,135 @@ fn tcp_plane_survives_lane_wedge_and_recovers_bit_identically() {
     }
     server.shutdown();
     drop(engine);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Real-compute (bns_mlp_field) fault recovery
+// ---------------------------------------------------------------------------
+
+const MLP_MODEL: &str = "chaos_mlp";
+const MLP_ROWS: usize = 40;
+
+/// MLP store with a single wide bucket: every exec runs 64 padded rows,
+/// which is past the `2 * CHUNK_ROWS` threshold, so (with
+/// `mlp_pool_threads: 2`) each exec is fanned across a live row pool —
+/// the wedge below lands mid-MLP-batch with pool workers attached.
+fn chaos_mlp_store(tag: &str) -> (Arc<ArtifactStore>, std::path::PathBuf) {
+    mlp_store(
+        &format!("chaos-mlp-{tag}"),
+        &[MlpModelSpec {
+            name: MLP_MODEL,
+            dim: 16,
+            hidden: 16,
+            emb: 8,
+            depth: 2,
+            num_classes: 4,
+            cfg: true,
+            seed: 77,
+            buckets: &[64],
+        }],
+    )
+    .expect("mlp store")
+}
+
+fn mlp_labels() -> Vec<i32> {
+    (0..MLP_ROWS).map(|r| (r % 5) as i32).collect()
+}
+
+/// Fault-free reference for the MLP wedge test, computed on a dedicated
+/// clean engine with the same pool width.
+fn mlp_baseline(tag: &str, seed: u64) -> Vec<f32> {
+    let (store, dir) = chaos_mlp_store(&format!("base-{tag}"));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            mlp_pool_threads: 2,
+            ..Default::default()
+        })
+        .expect("runtime"),
+    );
+    let engine = Engine::start(store, rt, EngineConfig::default()).expect("engine");
+    let out = engine
+        .sample_blocking(MLP_MODEL, mlp_labels(), 1.5, solver(), seed)
+        .expect("baseline sample");
+    engine.shutdown();
+    std::fs::remove_dir_all(dir).ok();
+    out.samples
+}
+
+#[test]
+fn lane_respawn_mid_mlp_batch_recovers_bit_identically() {
+    let (store, dir) = chaos_mlp_store("wedge");
+    // request 1 (euler nfe=2, one bucket, CFG handled inside one exec)
+    // consumes exec calls 0 and 1; call 2 — request 2's first pooled
+    // MLP batch — wedges past the lane timeout, so the supervisor
+    // kills a lane whose row pool is mid-flight.
+    let plan = Arc::new(FaultPlan::new(FaultConfig {
+        schedule: vec![FaultSpec { lane: Some(0), call: 2, kind: FaultKind::Wedge }],
+        wedge_ms: 400,
+        ..Default::default()
+    }));
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes: 1,
+            lane_exec_timeout: Duration::from_millis(100),
+            fault: Some(plan),
+            mlp_pool_threads: 2,
+            ..Default::default()
+        })
+        .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store,
+        rt.clone(),
+        EngineConfig {
+            workers: 1,
+            exec_retries: 1,
+            retry_backoff_ms: 1,
+            breaker_threshold: 0, // isolate respawn behavior from the breaker
+            ..Default::default()
+        },
+    )
+    .expect("engine");
+
+    let before = engine
+        .sample_blocking(MLP_MODEL, mlp_labels(), 1.5, solver(), 21)
+        .expect("pre-fault request");
+    assert_eq!(before.samples, mlp_baseline("wedge", 21), "clean MLP run must match baseline");
+
+    // request 2 hits the wedge mid-batch: prompt termination either way
+    let t0 = Instant::now();
+    match engine.sample_blocking(MLP_MODEL, mlp_labels(), 1.5, solver(), 21) {
+        Ok(out) => assert_eq!(out.samples, before.samples, "recovered retry must match"),
+        Err(e) => {
+            let msg = e.to_string();
+            assert!(msg.contains("internal"), "terminal error must be structured: {msg}");
+        }
+    }
+    assert!(t0.elapsed() < Duration::from_secs(10), "wedge must not hang the caller");
+
+    // the supervisor respawns the lane (rebuilding its backend and a
+    // fresh row pool) under generation 1
+    let deadline = Instant::now() + Duration::from_secs(5);
+    while rt.respawns_total() == 0 {
+        assert!(Instant::now() < deadline, "lane was never respawned");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let h = rt.lane_health()[0];
+    assert_eq!((h.generation, h.respawns), (1, 1));
+
+    // the respawned lane re-parses the artifact, re-spawns its pool,
+    // and reproduces the pooled MLP batch bit for bit
+    let after = engine
+        .sample_blocking(MLP_MODEL, mlp_labels(), 1.5, solver(), 21)
+        .expect("post-respawn request");
+    assert_eq!(after.samples, before.samples, "respawned lane must reproduce exactly");
+    assert_eq!(
+        engine.metrics.inflight_rows.load(std::sync::atomic::Ordering::SeqCst),
+        0,
+        "all rows settled"
+    );
+    engine.shutdown();
     std::fs::remove_dir_all(dir).ok();
 }

@@ -134,6 +134,63 @@ fn auto_routes_strongest_dividing_baseline() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+/// The stub `cost` knob is wall-time-only: it repeats the (idempotent)
+/// compute pass so benches can emulate heavier models, and must feed
+/// NEITHER the forwards accounting NOR the numerics. Two models
+/// identical except for `cost` produce identical forwards totals and
+/// bit-identical samples. (Regression: an earlier bench draft read
+/// `cost` as a forwards multiplier, drifting per-request accounting
+/// away from the manifest's `forwards_per_eval` — see
+/// `runtime/backend.rs` module docs and DESIGN.md §9.)
+#[test]
+fn stub_cost_knob_is_wall_time_only() {
+    let (store, dir) = bns_serve::bench_util::stub_store(
+        "acct-cost",
+        &[
+            StubModel {
+                name: "cheap",
+                dim: DIM,
+                num_classes: 4,
+                forwards_per_eval: 2,
+                k: -0.7,
+                c: 0.2,
+                label_scale: 0.05,
+                cost: 1,
+                buckets: &[4],
+            },
+            StubModel {
+                name: "heavy",
+                dim: DIM,
+                num_classes: 4,
+                forwards_per_eval: 2,
+                k: -0.7,
+                c: 0.2,
+                label_scale: 0.05,
+                cost: 8,
+                buckets: &[4],
+            },
+        ],
+    )
+    .unwrap();
+    let engine = start_engine(store);
+    let spec = SolverSpec::Baseline { name: "rk4".into(), nfe: 8 };
+
+    let cheap = engine.sample_blocking("cheap", vec![0, 1, 2], 0.0, spec.clone(), 11).unwrap();
+    let heavy = engine.sample_blocking("heavy", vec![0, 1, 2], 0.0, spec, 11).unwrap();
+    assert_eq!(
+        cheap.forwards, heavy.forwards,
+        "cost must not leak into forwards accounting (only forwards_per_eval does)"
+    );
+    assert_eq!(cheap.nfe, heavy.nfe);
+    assert_eq!(
+        cheap.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        heavy.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "the repeated compute pass must be idempotent on outputs"
+    );
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 /// Same seed → same samples through the whole engine stack (workspace
 /// reuse across batches must not perturb results), and a request equals
 /// itself when re-submitted while other traffic runs.

@@ -1,0 +1,249 @@
+//! Golden parity replay: the CPU kernel layer vs the python emitter.
+//!
+//! `python -m compile.golden` writes `tests/golden/*.json`: per case a
+//! seed, a shape, a 4-value input checksum, and the expected output as
+//! big-endian f32 bit patterns. Inputs and weights are regenerated here
+//! from the same integer hash stream (`compile/mlp_field.py::det_values`
+//! — every value is an exact-f32 dyadic rational, so the two languages
+//! agree bit-for-bit), and the rust kernels must reproduce the expected
+//! outputs within the fixture tolerance (1e-6). The python side of each
+//! fixture is cross-checked against the `ref.py` jnp oracles at
+//! generation time, so agreement here chains rust -> mirror -> jax.
+
+use std::path::{Path, PathBuf};
+
+use bns_serve::kernels::mlp::{MlpBlock, MlpModel};
+use bns_serve::kernels::{forward_rows, fused_resblock_into, ns_combine_into, MlpScratch, TILE};
+use bns_serve::runtime::backend::{Backend, StubBackend};
+use bns_serve::util::json::Json;
+
+/// Rust half of the shared deterministic stream:
+/// v_i = f32(((seed + i) * 2654435761 mod 2^32) mod 1000 - 500) / 256.
+fn det1(i: u64) -> f32 {
+    let h = i.wrapping_mul(2_654_435_761) & 0xFFFF_FFFF;
+    ((h % 1000) as f32 - 500.0) / 256.0
+}
+
+/// Sequential consumer mirroring `mlp_field._Stream`.
+struct Stream {
+    seed: u64,
+    pos: u64,
+}
+
+impl Stream {
+    fn new(seed: u64) -> Stream {
+        Stream { seed, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize, scale: f32) -> Vec<f32> {
+        let v = (0..n as u64).map(|i| det1(self.seed + self.pos + i) * scale).collect();
+        self.pos += n as u64;
+        v
+    }
+}
+
+fn golden_path(name: &str) -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden").join(name)
+}
+
+fn load_golden(name: &str) -> Json {
+    let path = golden_path(name);
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+        panic!(
+            "reading {}: {e} — regenerate with `cd python && python -m compile.golden`",
+            path.display()
+        )
+    });
+    Json::parse(&text).unwrap_or_else(|e| panic!("parsing {}: {e}", path.display()))
+}
+
+/// Decode a concatenated big-endian u32-hex f32 string.
+fn parse_bits(s: &str) -> Vec<f32> {
+    assert_eq!(s.len() % 8, 0, "hex payload length must be a multiple of 8");
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let hx = std::str::from_utf8(c).unwrap();
+            f32::from_bits(u32::from_str_radix(hx, 16).unwrap())
+        })
+        .collect()
+}
+
+fn hex4(v: &[f32]) -> String {
+    v.iter().take(4).map(|f| format!("{:08x}", f.to_bits())).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f64, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    let mut worst = 0f64;
+    let mut at = 0usize;
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let d = (g as f64 - w as f64).abs();
+        if d > worst {
+            worst = d;
+            at = i;
+        }
+    }
+    assert!(
+        worst <= tol,
+        "{what}: max |diff| {worst:.3e} > {tol:.0e} at element {at} \
+         (got {}, want {})",
+        got[at],
+        want[at]
+    );
+}
+
+fn usz(case: &Json, key: &str) -> usize {
+    case.get(key).as_usize().unwrap_or_else(|| panic!("golden case missing {key}"))
+}
+
+#[test]
+fn resblock_golden_replay() {
+    let g = load_golden("resblock.json");
+    let tol = g.get("tolerance").as_f64().unwrap();
+    let cases = g.get("cases").as_arr().unwrap();
+    assert_eq!(cases.len(), 27, "D,H in {{8,64,256}} x batch in {{1,7,64}}");
+    for case in cases {
+        let (d, h, batch) = (usz(case, "d"), usz(case, "h"), usz(case, "batch"));
+        let what = format!("resblock d={d} h={h} batch={batch}");
+        let mut s = Stream::new(usz(case, "seed") as u64);
+        let x = s.take(batch * d, 1.0);
+        let scale = s.take(batch * d, 0.1);
+        let shift = s.take(batch * d, 0.1);
+        let w1 = s.take(d * h, 0.5 / (d as f32).sqrt());
+        let b1 = s.take(h, 0.05);
+        let w2 = s.take(h * d, 0.25 / (h as f32).sqrt());
+        let b2 = s.take(d, 0.01);
+        assert_eq!(hex4(&x), case.get("x_check").as_str().unwrap(), "{what}: stream drift");
+        // modv rows are [scale_r | shift_r]
+        let mut modv = vec![0f32; batch * 2 * d];
+        for r in 0..batch {
+            modv[r * 2 * d..r * 2 * d + d].copy_from_slice(&scale[r * d..(r + 1) * d]);
+            modv[r * 2 * d + d..(r + 1) * 2 * d].copy_from_slice(&shift[r * d..(r + 1) * d]);
+        }
+        let mut mbuf = vec![0f32; TILE * d];
+        let mut hbuf = vec![0f32; TILE * h];
+        let mut out = vec![0f32; batch * d];
+        fused_resblock_into(
+            batch, d, h, &x, &modv, &w1, &b1, &w2, &b2, &mut mbuf, &mut hbuf, &mut out,
+        );
+        let want = parse_bits(case.get("out").as_str().unwrap());
+        assert_close(&out, &want, tol, &what);
+    }
+}
+
+#[test]
+fn ns_update_golden_replay() {
+    let g = load_golden("ns_update.json");
+    let tol = g.get("tolerance").as_f64().unwrap();
+    let cases = g.get("cases").as_arr().unwrap();
+    assert!(!cases.is_empty());
+    for case in cases {
+        let (k, len) = (usz(case, "k"), usz(case, "len"));
+        let what = format!("ns_update k={k} len={len}");
+        let mut s = Stream::new(usz(case, "seed") as u64);
+        let x0 = s.take(len, 1.0);
+        let hist = s.take(k * len, 0.5);
+        let mut b: Vec<f64> = s.take(k, 0.1).iter().map(|&v| v as f64).collect();
+        if k > 1 {
+            b[k / 2] = 0.0; // the generator zeroes the middle coefficient
+        }
+        let a = 1.0f32 + s.take(1, 0.1)[0];
+        assert_eq!(hex4(&x0), case.get("x_check").as_str().unwrap(), "{what}: stream drift");
+        let mut x = vec![0f32; len];
+        ns_combine_into(a, &x0, &b, &hist, len, &mut x);
+        let want = parse_bits(case.get("out").as_str().unwrap());
+        assert_close(&x, &want, tol, &what);
+    }
+}
+
+/// Regenerate a spec exactly like `mlp_field.init_mlp_field` does:
+/// stream order cls_emb, then per block w1, b1, w2, b2, mw, mb.
+fn build_model(d: usize, h: usize, e: usize, c: usize, depth: usize, cfg: bool, seed: u64) -> MlpModel {
+    let mut s = Stream::new(seed);
+    let cls_emb = s.take((c + 1) * e, 0.2);
+    let blocks = (0..depth)
+        .map(|_| MlpBlock {
+            w1: s.take(d * h, 0.5 / (d as f32).sqrt()),
+            b1: s.take(h, 0.05),
+            w2: s.take(h * d, 0.25 / (h as f32).sqrt()),
+            b2: s.take(d, 0.01),
+            mw: s.take(e * 2 * d, 0.1 / (e as f32).sqrt()),
+            mb: s.take(2 * d, 0.01),
+        })
+        .collect();
+    MlpModel { dim: d, hidden: h, emb: e, num_classes: c, null_class: c, cfg, cls_emb, blocks }
+}
+
+fn model_artifact_json(m: &MlpModel) -> String {
+    let blocks: Vec<Json> = m
+        .blocks
+        .iter()
+        .map(|b| {
+            Json::obj(vec![
+                ("w1", Json::arr_f32(&b.w1)),
+                ("b1", Json::arr_f32(&b.b1)),
+                ("w2", Json::arr_f32(&b.w2)),
+                ("b2", Json::arr_f32(&b.b2)),
+                ("mw", Json::arr_f32(&b.mw)),
+                ("mb", Json::arr_f32(&b.mb)),
+            ])
+        })
+        .collect();
+    let spec = Json::obj(vec![
+        ("dim", Json::Num(m.dim as f64)),
+        ("hidden", Json::Num(m.hidden as f64)),
+        ("emb", Json::Num(m.emb as f64)),
+        ("num_classes", Json::Num(m.num_classes as f64)),
+        ("null_class", Json::Num(m.null_class as f64)),
+        ("cfg", Json::Bool(m.cfg)),
+        ("cls_emb", Json::arr_f32(&m.cls_emb)),
+        ("blocks", Json::Arr(blocks)),
+    ]);
+    Json::obj(vec![("bns_mlp_field", spec)]).to_string()
+}
+
+#[test]
+fn mlp_field_golden_replay_direct_and_backend() {
+    let g = load_golden("mlp_field.json");
+    let tol = g.get("tolerance").as_f64().unwrap();
+    let cases = g.get("cases").as_arr().unwrap();
+    assert!(cases.len() >= 3);
+    let dir = std::env::temp_dir().join(format!("bns-golden-mlp-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    for (ci, case) in cases.iter().enumerate() {
+        let (d, h) = (usz(case, "dim"), usz(case, "hidden"));
+        let (e, c) = (usz(case, "emb"), usz(case, "num_classes"));
+        let (depth, batch) = (usz(case, "depth"), usz(case, "batch"));
+        let cfg = case.get("cfg").as_bool().unwrap();
+        let t = case.get("t").as_f64().unwrap() as f32;
+        let w = case.get("w").as_f64().unwrap() as f32;
+        let what = format!("mlp_field d={d} h={h} batch={batch} cfg={cfg}");
+        let model = build_model(d, h, e, c, depth, cfg, usz(case, "spec_seed") as u64);
+        let mut s = Stream::new(usz(case, "x_seed") as u64);
+        let x = s.take(batch * d, 1.0);
+        let labels: Vec<i32> = (0..batch).map(|i| (i % (c + 1)) as i32).collect();
+        assert_eq!(hex4(&x), case.get("x_check").as_str().unwrap(), "{what}: stream drift");
+
+        // direct kernel-layer forward
+        let mut scratch = MlpScratch::new();
+        let mut out = vec![0f32; batch * d];
+        forward_rows(&model, &mut scratch, batch, &x, t, w, &labels, &mut out);
+        let want = parse_bits(case.get("out").as_str().unwrap());
+        assert_close(&out, &want, tol, &what);
+
+        // end-to-end: the same weights through the artifact JSON and the
+        // StubBackend exec path (pooled for the wide case) must be
+        // bit-identical to the direct call — JSON round-trip preserves
+        // every f32 bit, and the pool never changes results.
+        let path = dir.join(format!("golden_{ci}_b{batch}.mlp.json"));
+        std::fs::write(&path, model_artifact_json(&model)).unwrap();
+        let mut be = StubBackend::with_pool_threads(2);
+        let id = be.load(&path).unwrap();
+        let got = be.exec(id, batch, d, &x, t, w, &labels).unwrap();
+        let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+        let ob: Vec<u32> = out.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(gb, ob, "{what}: backend path drifted from direct kernels");
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

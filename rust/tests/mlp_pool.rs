@@ -1,0 +1,198 @@
+//! Engine-level bit-identity across intra-lane MLP pool widths.
+//!
+//! The `bns_mlp_field` row pool (DESIGN.md §13) is a pure throughput
+//! knob: the lane splits a wide exec into fixed [`CHUNK_ROWS`]-row
+//! chunks whose per-row math is completely independent, so samples must
+//! be bit-identical for *any* `mlp_pool_threads` — including auto (0)
+//! and inline (1) — under any (workers, lanes) engine configuration.
+//! This is the MLP analogue of `tests/lane_stress.rs`, driving the full
+//! engine path (batch grouping, bucket padding, pooled buffers) rather
+//! than the backend in isolation.
+//!
+//! The plan mixes small requests (bucket 4 — below the `2 * CHUNK_ROWS`
+//! pool threshold, so they exercise the inline path) with wide ones
+//! (bucket 64 — always fanned across the pool when it exists), both CFG
+//! and unconditional models, so inline and pooled execs interleave on
+//! the same lane within one run.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use bns_serve::bench_util::{mlp_store, MlpModelSpec};
+use bns_serve::coordinator::request::Priority;
+use bns_serve::coordinator::{Engine, EngineConfig, SampleOutput, SampleRequest, SolverSpec};
+use bns_serve::kernels::CHUNK_ROWS;
+use bns_serve::runtime::{ArtifactStore, Runtime, RuntimeConfig};
+
+const DIM: usize = 24;
+const CLASSES: usize = 6;
+
+fn store(tag: &str) -> (Arc<ArtifactStore>, std::path::PathBuf) {
+    mlp_store(
+        &format!("mlp-pool-{tag}"),
+        &[
+            MlpModelSpec {
+                name: "mlp_cfg",
+                dim: DIM,
+                hidden: 32,
+                emb: 8,
+                depth: 2,
+                num_classes: CLASSES,
+                cfg: true,
+                seed: 41,
+                buckets: &[4, 64],
+            },
+            MlpModelSpec {
+                name: "mlp_uncond",
+                dim: DIM,
+                hidden: 24,
+                emb: 8,
+                depth: 1,
+                num_classes: CLASSES,
+                cfg: false,
+                seed: 42,
+                buckets: &[64],
+            },
+        ],
+    )
+    .expect("mlp store")
+}
+
+/// Deterministic mixed workload. Wide rows land in the 64-bucket (the
+/// backend execs 64 >= 2 * CHUNK_ROWS rows, taking the pooled path);
+/// the 3-row requests land in the 4-bucket and stay inline.
+// bucket/threshold drift guard: 64-row buckets must pool, 4-row must not
+const _: () = assert!(64 >= 2 * CHUNK_ROWS && 4 < 2 * CHUNK_ROWS);
+
+fn request_plan() -> Vec<(&'static str, usize, u64, f32, SolverSpec)> {
+    let mut plan = Vec::new();
+    for i in 0..12u64 {
+        let (model, rows, guidance) = match i % 3 {
+            0 => ("mlp_cfg", 40, 1.5),
+            1 => ("mlp_cfg", 3, 0.75),
+            _ => ("mlp_uncond", 48, 0.0),
+        };
+        let spec = if i % 2 == 0 {
+            SolverSpec::Baseline { name: "euler".into(), nfe: 3 }
+        } else {
+            SolverSpec::Baseline { name: "rk4".into(), nfe: 4 }
+        };
+        plan.push((model, rows, 2000 + i, guidance, spec));
+    }
+    plan
+}
+
+/// Submit the whole plan at once and collect outputs in plan order.
+fn run_plan(engine: &Engine) -> Vec<SampleOutput> {
+    let mut rxs = Vec::new();
+    for (model, rows, seed, guidance, spec) in request_plan() {
+        let (tx, rx) = mpsc::channel();
+        engine.submit(SampleRequest {
+            id: 0,
+            model: model.to_string(),
+            labels: (0..rows).map(|r| (r % (CLASSES + 1)) as i32).collect(),
+            guidance,
+            solver: spec,
+            seed,
+            x0: None,
+            enqueued_at: Instant::now(),
+            deadline: None,
+            priority: Priority::Normal,
+            progress: None,
+            reply: tx,
+        });
+        rxs.push(rx);
+    }
+    rxs.iter()
+        .map(|rx| rx.recv().expect("engine dropped reply").result.expect("sample failed"))
+        .collect()
+}
+
+fn run_config(
+    store: &Arc<ArtifactStore>,
+    pool_threads: usize,
+    lanes: usize,
+    workers: usize,
+) -> Vec<SampleOutput> {
+    let rt = Arc::new(
+        Runtime::with_config(RuntimeConfig {
+            lanes,
+            mlp_pool_threads: pool_threads,
+            ..Default::default()
+        })
+        .expect("runtime"),
+    );
+    let engine = Engine::start(
+        store.clone(),
+        rt,
+        EngineConfig { workers, ..Default::default() },
+    )
+    .expect("engine");
+    let outs = run_plan(&engine);
+    engine.shutdown();
+    outs
+}
+
+#[test]
+fn samples_bit_identical_across_pool_widths_and_engine_shapes() {
+    let (store, dir) = store("bitident");
+
+    // reference: inline compute (no pool), strictly serial engine
+    let reference = run_config(&store, 1, 1, 1);
+    assert_eq!(reference.len(), request_plan().len());
+    for (i, out) in reference.iter().enumerate() {
+        let rows = request_plan()[i].1;
+        assert_eq!(out.samples.len(), rows * DIM, "req {i}: wrong output shape");
+        assert!(out.samples.iter().all(|v| v.is_finite()), "req {i}: non-finite sample");
+    }
+
+    // pool widths {1, 2, 4} and auto (0), across engine shapes
+    for (pool, lanes, workers) in
+        [(1usize, 2usize, 4usize), (2, 1, 1), (2, 2, 2), (4, 1, 4), (0, 1, 2)]
+    {
+        let outs = run_config(&store, pool, lanes, workers);
+        assert_eq!(outs.len(), reference.len());
+        for (i, (got, want)) in outs.iter().zip(reference.iter()).enumerate() {
+            assert_eq!(
+                got.nfe, want.nfe,
+                "req {i}: nfe drifted (pool={pool}, {lanes} lanes, {workers} workers)"
+            );
+            assert_eq!(
+                got.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                want.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "req {i}: samples drifted (pool={pool}, {lanes} lanes, {workers} workers)"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn guidance_weight_reaches_the_mlp_field() {
+    // The CFG combine happens inside the backend (two forwards + eq.-7
+    // mix), so different guidance weights must produce different
+    // samples for a cfg model — pinning that `w` survives the trip
+    // through batch grouping down to the kernel layer.
+    let (store, dir) = store("guidance");
+    let rt = Arc::new(Runtime::with_lanes(1).expect("runtime"));
+    let engine =
+        Engine::start(store.clone(), rt, EngineConfig { workers: 1, ..Default::default() })
+            .expect("engine");
+    let solver = SolverSpec::Baseline { name: "euler".into(), nfe: 3 };
+    let labels: Vec<i32> = (0..3).map(|r| (r % (CLASSES + 1)) as i32).collect();
+    let a = engine
+        .sample_blocking("mlp_cfg", labels.clone(), 0.0, solver.clone(), 11)
+        .expect("w=0 sample");
+    let b = engine
+        .sample_blocking("mlp_cfg", labels, 2.0, solver, 11)
+        .expect("w=2 sample");
+    assert_ne!(
+        a.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.samples.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "guidance weight must change a cfg model's output"
+    );
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
