@@ -122,6 +122,27 @@ if BENCH_SERVE_OUT="../BENCH_serve.json" cargo bench --bench serve_load; then
       lint_fail=1
     fi
   fi
+  # fleet-churn gate: the fifth phase drives a multi-model shard fleet
+  # through hot unload/load cycles (DESIGN.md §14). The section must
+  # exist, every churned sample must stay bit-identical to a quiescent
+  # engine, and no admitted request may be lost across reloads.
+  echo "fleet churn: $(grep -o '"reload_cycles":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  echo "fleet churn: $(grep -o '"ttfs_after_load_mean_ms":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  echo "fleet churn: $(grep -o '"lost_requests":[0-9.eE+-]*' ../BENCH_serve.json | tr '\n' ' ')"
+  if ! grep -q '"fleet_churn":' ../BENCH_serve.json; then
+    echo "WARN: BENCH_serve.json has no fleet_churn section (fleet gate vacuous)"
+    lint_fail=1
+  else
+    if ! grep -q '"fleet_bit_identical":true' ../BENCH_serve.json; then
+      echo "WARN: fleet churn bit-identity gate missing or false"
+      lint_fail=1
+    fi
+    if ! grep -o '"lost_requests":[0-9.eE+-]*' ../BENCH_serve.json \
+        | cut -d: -f2 | grep -q '^0$'; then
+      echo "WARN: fleet churn lost requests (expected 0)"
+      lint_fail=1
+    fi
+  fi
 else
   echo "serve_load bench failed (perf trajectory not updated)"
   lint_fail=1

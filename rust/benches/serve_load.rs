@@ -42,6 +42,15 @@
 //! Results land in the `trace_overhead` section; ci.sh gates the
 //! throughput overhead at ≤3% under STRICT=1 (the 0-alloc checks are
 //! hard asserts either way).
+//!
+//! A fifth phase measures the **fleet plane** (DESIGN.md §14): three
+//! models served across two consistent-hash shards while two of them
+//! churn through hot `unload`/`load` cycles. It reports evals/s under
+//! churn, the reject mix, and time-to-first-sample after each reload
+//! (the lazy per-lane recompile cost), and asserts zero lost requests
+//! with every successful sample bit-identical to a quiescent engine.
+//! Results land in the `fleet_churn` section; ci.sh gates
+//! `fleet_bit_identical` and `lost_requests` under STRICT=1.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::io::{BufRead, BufReader, Write};
@@ -52,7 +61,9 @@ use std::time::{Duration, Instant};
 
 use bns_serve::bench_util::{stub_store, write_results, StubModel, Table};
 use bns_serve::coordinator::metrics::Metrics;
-use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig, SolverSpec};
+use bns_serve::coordinator::{
+    Engine, EngineConfig, Fleet, FleetConfig, Server, ServerConfig, SolverSpec,
+};
 use bns_serve::obs::{TraceRecorder, TraceStage};
 use bns_serve::runtime::{
     FaultConfig, FaultKind, FaultPlan, FaultSpec, Runtime, RuntimeConfig,
@@ -551,6 +562,238 @@ fn run_trace_overhead(store: &Arc<bns_serve::runtime::ArtifactStore>) -> anyhow:
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// fleet_churn phase (multi-model shard fleet under hot load/unload cycles)
+// ---------------------------------------------------------------------------
+
+const FLEET_MODELS: [&str; 3] = ["fleet_a", "fleet_b", "fleet_c"];
+const FLEET_SHARDS: usize = 2;
+const FLEET_CLIENTS_PER_MODEL: usize = 2;
+const FLEET_REQS_PER_CLIENT: usize = 20;
+
+fn fleet_sample_line(model: &str, seed: u64, tag: &str) -> String {
+    format!(
+        "{{\"op\":\"sample\",\"model\":\"{model}\",\"labels\":[0,1,2],\
+         \"solver\":\"euler\",\"nfe\":6,\"seed\":{seed},\"tag\":\"{tag}\"}}"
+    )
+}
+
+fn run_fleet_churn() -> anyhow::Result<Json> {
+    let stubs: Vec<StubModel> = FLEET_MODELS
+        .iter()
+        .enumerate()
+        .map(|(i, name)| StubModel {
+            name,
+            dim: 16,
+            num_classes: 4,
+            forwards_per_eval: 1,
+            k: -0.4 - 0.1 * i as f64,
+            c: 0.05 + 0.1 * i as f64,
+            label_scale: 0.02,
+            cost: 1,
+            buckets: &[4, 8],
+        })
+        .collect();
+    let (store, dir) = stub_store("serve-load-fleet", &stubs)?;
+
+    // quiescent reference: per-(model, seed) sample bits from a fresh
+    // single engine with no churn anywhere near it
+    let mut want: std::collections::BTreeMap<(String, u64), Vec<u32>> = Default::default();
+    {
+        let rt = Arc::new(Runtime::cpu()?);
+        let engine = Engine::start(store.clone(), rt, EngineConfig::default())?;
+        for m in FLEET_MODELS {
+            for seed in 1..=4u64 {
+                let out = engine.sample_blocking(
+                    m,
+                    vec![0, 1, 2],
+                    0.0,
+                    SolverSpec::Baseline { name: "euler".into(), nfe: 6 },
+                    seed,
+                )?;
+                want.insert(
+                    (m.to_string(), seed),
+                    out.samples.iter().map(|v| v.to_bits()).collect(),
+                );
+            }
+        }
+        engine.shutdown();
+    }
+
+    let rt = Arc::new(Runtime::with_lanes(2)?);
+    let fleet = Fleet::start(
+        store.clone(),
+        rt,
+        FleetConfig {
+            shards: FLEET_SHARDS,
+            engine: EngineConfig { workers: 2, ..Default::default() },
+        },
+    )?;
+    let server = Server::bind_fleet(
+        "127.0.0.1:0",
+        ServerConfig { reactors: 2, ..Default::default() },
+        fleet.clone(),
+    )?;
+    let addr = server.local_addr();
+
+    let evals_before: u64 = (0..fleet.num_shards())
+        .filter_map(|s| fleet.engine(s))
+        .map(|e| e.metrics.evals.load(Ordering::SeqCst))
+        .sum();
+    let stop = std::sync::atomic::AtomicBool::new(false);
+    let accepted = AtomicU64::new(0);
+    let rejected_unknown = AtomicU64::new(0);
+    let lost = AtomicU64::new(0);
+    let mismatched = AtomicU64::new(0);
+    let unexpected: Mutex<Vec<String>> = Mutex::new(Vec::new());
+    let ttfs_ms: Mutex<Vec<f64>> = Mutex::new(Vec::new());
+    let reload_cycles = AtomicU64::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for (mi, model) in FLEET_MODELS.iter().enumerate() {
+            for ci in 0..FLEET_CLIENTS_PER_MODEL {
+                let want = &want;
+                let (accepted, rejected_unknown) = (&accepted, &rejected_unknown);
+                let (lost, mismatched, unexpected) = (&lost, &mismatched, &unexpected);
+                s.spawn(move || {
+                    let Ok(mut cl) = TcpClient::connect(addr) else {
+                        lost.fetch_add(FLEET_REQS_PER_CLIENT as u64, Ordering::Relaxed);
+                        return;
+                    };
+                    for r in 0..FLEET_REQS_PER_CLIENT as u64 {
+                        let seed = 1 + (r % 4);
+                        let tag = format!("m{mi}c{ci}r{r}");
+                        let Ok(j) = cl.roundtrip(&fleet_sample_line(model, seed, &tag))
+                        else {
+                            // a dropped reply is exactly what "lost" means
+                            lost.fetch_add(FLEET_REQS_PER_CLIENT as u64 - r, Ordering::Relaxed);
+                            return;
+                        };
+                        if j.get("tag").as_str() != Some(tag.as_str()) {
+                            unexpected.lock().unwrap().push(format!("cross-wired: {j:?}"));
+                            continue;
+                        }
+                        if j.get("ok").as_bool() == Some(true) {
+                            let bits: Vec<u32> = j
+                                .get("samples")
+                                .as_f32_vec()
+                                .unwrap_or_default()
+                                .iter()
+                                .map(|v| v.to_bits())
+                                .collect();
+                            if bits != want[&(model.to_string(), seed)] {
+                                mismatched.fetch_add(1, Ordering::Relaxed);
+                            }
+                            accepted.fetch_add(1, Ordering::Relaxed);
+                        } else if j.get("err").as_str() == Some("unknown_model") {
+                            rejected_unknown.fetch_add(1, Ordering::Relaxed);
+                        } else {
+                            unexpected.lock().unwrap().push(format!("{j:?}"));
+                        }
+                    }
+                });
+            }
+        }
+        // churn driver: cycle two of the three models through hot
+        // unload -> load, timing first sample after each reload
+        let stop = &stop;
+        let (ttfs_ms, reload_cycles, unexpected) = (&ttfs_ms, &reload_cycles, &unexpected);
+        s.spawn(move || {
+            let Ok(mut cl) = TcpClient::connect(addr) else { return };
+            while !stop.load(Ordering::Relaxed) {
+                for m in ["fleet_b", "fleet_c"] {
+                    let Ok(ul) = cl.roundtrip(&format!("{{\"op\":\"unload\",\"model\":\"{m}\"}}"))
+                    else {
+                        return;
+                    };
+                    if ul.get("ok").as_bool() != Some(true) {
+                        unexpected.lock().unwrap().push(format!("unload: {ul:?}"));
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    let Ok(ld) = cl.roundtrip(&format!("{{\"op\":\"load\",\"model\":\"{m}\"}}"))
+                    else {
+                        return;
+                    };
+                    if ld.get("ok").as_bool() != Some(true) {
+                        unexpected.lock().unwrap().push(format!("load: {ld:?}"));
+                        return;
+                    }
+                    // time-to-first-sample: lazy per-lane recompile cost
+                    let t = Instant::now();
+                    match cl.roundtrip(&fleet_sample_line(m, 1, "ttfs")) {
+                        Ok(j) if j.get("ok").as_bool() == Some(true) => {
+                            ttfs_ms.lock().unwrap().push(t.elapsed().as_secs_f64() * 1000.0);
+                        }
+                        Ok(j) => unexpected.lock().unwrap().push(format!("ttfs: {j:?}")),
+                        Err(_) => return,
+                    }
+                }
+                reload_cycles.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        // samplers exit on their own; then release the churn driver. The
+        // scope guarantees every spawned thread joined before we leave.
+        while accepted.load(Ordering::Relaxed)
+            + rejected_unknown.load(Ordering::Relaxed)
+            + lost.load(Ordering::Relaxed)
+            + unexpected.lock().unwrap().len() as u64
+            < (FLEET_MODELS.len() * FLEET_CLIENTS_PER_MODEL * FLEET_REQS_PER_CLIENT) as u64
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+    let evals_after: u64 = (0..fleet.num_shards())
+        .filter_map(|s| fleet.engine(s))
+        .map(|e| e.metrics.evals.load(Ordering::SeqCst))
+        .sum();
+    server.shutdown();
+    drop(fleet);
+    std::fs::remove_dir_all(&dir).ok();
+
+    let total = (FLEET_MODELS.len() * FLEET_CLIENTS_PER_MODEL * FLEET_REQS_PER_CLIENT) as u64;
+    let accepted = accepted.into_inner();
+    let rejected_unknown = rejected_unknown.into_inner();
+    let lost = lost.into_inner();
+    let mismatched = mismatched.into_inner();
+    let unexpected = unexpected.into_inner().unwrap();
+    let ttfs = ttfs_ms.into_inner().unwrap();
+    assert!(unexpected.is_empty(), "fleet_churn unexpected replies: {unexpected:?}");
+    assert_eq!(lost, 0, "fleet_churn lost {lost} requests");
+    assert_eq!(mismatched, 0, "fleet_churn: churned samples drifted from quiescent engine");
+    assert!(accepted >= 1, "fleet_churn accepted nothing");
+    assert!(
+        reload_cycles.load(Ordering::Relaxed) >= 1,
+        "fleet_churn never completed a reload cycle"
+    );
+    let (ttfs_mean, ttfs_max) = if ttfs.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (
+            ttfs.iter().sum::<f64>() / ttfs.len() as f64,
+            ttfs.iter().cloned().fold(0.0, f64::max),
+        )
+    };
+    Ok(Json::obj(vec![
+        ("models", Json::Num(FLEET_MODELS.len() as f64)),
+        ("shards", Json::Num(FLEET_SHARDS as f64)),
+        ("clients", Json::Num((FLEET_MODELS.len() * FLEET_CLIENTS_PER_MODEL) as f64)),
+        ("offered", Json::Num(total as f64)),
+        ("accepted", Json::Num(accepted as f64)),
+        ("rejected_unknown_model", Json::Num(rejected_unknown as f64)),
+        ("lost_requests", Json::Num(lost as f64)),
+        ("reload_cycles", Json::Num(reload_cycles.into_inner() as f64)),
+        ("wall_s", Json::Num(wall_s)),
+        ("evals_per_s", Json::Num((evals_after - evals_before) as f64 / wall_s.max(1e-9))),
+        ("ttfs_after_load_mean_ms", Json::Num(ttfs_mean)),
+        ("ttfs_after_load_max_ms", Json::Num(ttfs_max)),
+        ("fleet_bit_identical", Json::Bool(mismatched == 0)),
+    ]))
+}
+
 fn main() -> anyhow::Result<()> {
     let (store, dir) = stub_store(
         "serve-load",
@@ -672,6 +915,26 @@ fn main() -> anyhow::Result<()> {
     );
     println!("zero steady-state allocs on the tracing hot paths: yes (asserted)");
 
+    // fleet_churn phase: multi-model shard fleet under hot reload cycles
+    let fleet_churn = run_fleet_churn()?;
+    println!(
+        "\n=== fleet_churn ({} models x {FLEET_CLIENTS_PER_MODEL} clients over \
+         {FLEET_SHARDS} shards, hot unload/load cycles) ===",
+        FLEET_MODELS.len()
+    );
+    println!(
+        "accepted {} / unknown-model rejects {} / lost {}, {:.0} reload cycles, \
+         {:.1} evals/s, ttfs after load mean {:.1}ms max {:.1}ms",
+        fleet_churn.get("accepted").as_f64().unwrap_or(0.0),
+        fleet_churn.get("rejected_unknown_model").as_f64().unwrap_or(0.0),
+        fleet_churn.get("lost_requests").as_f64().unwrap_or(0.0),
+        fleet_churn.get("reload_cycles").as_f64().unwrap_or(0.0),
+        fleet_churn.get("evals_per_s").as_f64().unwrap_or(0.0),
+        fleet_churn.get("ttfs_after_load_mean_ms").as_f64().unwrap_or(0.0),
+        fleet_churn.get("ttfs_after_load_max_ms").as_f64().unwrap_or(0.0),
+    );
+    println!("zero lost + bit-identical under churn: yes (asserted)");
+
     let bench = Json::obj(vec![
         ("bench", Json::Str("serve_load".into())),
         (
@@ -693,6 +956,7 @@ fn main() -> anyhow::Result<()> {
         ("overload", overload),
         ("fault_recovery", fault_recovery),
         ("trace_overhead", trace_overhead),
+        ("fleet_churn", fleet_churn),
     ]);
     let out_path =
         std::env::var("BENCH_SERVE_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());

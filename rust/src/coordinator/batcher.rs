@@ -19,8 +19,19 @@
 //! Priorities do not affect grouping (a group may mix them — the batch
 //! runs at the most urgent priority it contains); they order dispatch in
 //! the engine's work queue.
+//!
+//! Tenancy: requests carry an optional tenant. When the grouped stage is
+//! at its `max_queued_rows` bound, requests from tenants with a parking
+//! quota wait in per-tenant FIFO queues instead of being rejected, and a
+//! deficit-weighted round-robin ([`Batcher::promote`], DESIGN.md §14)
+//! moves parked work into groups as capacity frees — so under contention
+//! tenants receive grouped-stage rows in proportion to their configured
+//! weights. A tenant over its parking quota gets a structured
+//! [`RejectKind::Quota`] reject; the anonymous tenant (no `tenant`
+//! field, quota 0 by default) keeps the pre-tenancy behavior of an
+//! immediate capacity reject.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use super::request::{Priority, SampleRequest};
@@ -63,14 +74,60 @@ pub struct Batch {
     pub formed_at: Instant,
 }
 
+/// Per-tenant weighted-fair scheduling knobs for one tenant.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSpec {
+    /// Relative share of grouped-stage rows under contention (≥ 1; 0 is
+    /// treated as 1).
+    pub weight: u32,
+    /// Upper bound on this tenant's parked backlog, in rows. 0 disables
+    /// parking: over-capacity pushes reject immediately.
+    pub quota_rows: usize,
+}
+
+/// Fleet-wide tenancy policy: named tenant specs plus the defaults
+/// applied to tenants (including the anonymous one) not listed.
+#[derive(Debug, Clone)]
+pub struct TenantPolicy {
+    /// Weight for tenants without an explicit [`TenantSpec`].
+    pub default_weight: u32,
+    /// Parking quota (rows) for tenants without an explicit spec. The
+    /// default of 0 preserves pre-tenancy semantics: no parking, rejects
+    /// at the queue bound.
+    pub default_quota_rows: usize,
+    /// Explicit per-tenant overrides, keyed by tenant name.
+    pub tenants: BTreeMap<String, TenantSpec>,
+}
+
+impl Default for TenantPolicy {
+    fn default() -> Self {
+        TenantPolicy { default_weight: 1, default_quota_rows: 0, tenants: BTreeMap::new() }
+    }
+}
+
+impl TenantPolicy {
+    fn spec_for(&self, tenant: &str) -> TenantSpec {
+        match self.tenants.get(tenant) {
+            Some(s) => TenantSpec { weight: s.weight.max(1), quota_rows: s.quota_rows },
+            None => TenantSpec {
+                weight: self.default_weight.max(1),
+                quota_rows: self.default_quota_rows,
+            },
+        }
+    }
+}
+
 /// Flush/backpressure policy knobs.
+#[derive(Clone)]
 pub struct BatcherConfig {
     /// Dispatch a group once its pending rows reach this.
     pub max_rows: usize,
     /// Dispatch a group once its oldest request has waited this long.
     pub max_wait: Duration,
-    /// Upper bound on queued rows across all groups (admission control).
+    /// Upper bound on grouped rows across all groups (admission control).
     pub max_queued_rows: usize,
+    /// Weighted-fair tenancy policy (see [`TenantPolicy`]).
+    pub tenants: TenantPolicy,
 }
 
 impl Default for BatcherConfig {
@@ -79,6 +136,7 @@ impl Default for BatcherConfig {
             max_rows: 64,
             max_wait: Duration::from_millis(5),
             max_queued_rows: 4096,
+            tenants: TenantPolicy::default(),
         }
     }
 }
@@ -90,62 +148,230 @@ struct Group {
     oldest: Option<Instant>,
 }
 
+/// Where [`Batcher::push`] put an admitted request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushOutcome {
+    /// Joined a batch group directly; eligible for the next flush.
+    Grouped,
+    /// Parked in its tenant's queue; promoted to a group under
+    /// deficit-weighted round-robin as grouped capacity frees.
+    Parked,
+}
+
+/// Why [`Batcher::push`] rejected a request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectKind {
+    /// The grouped stage is at `max_queued_rows` and the tenant has no
+    /// parking quota (maps to the wire `overloaded` error).
+    Capacity,
+    /// The tenant's parked backlog would exceed its `quota_rows` (maps
+    /// to the wire `quota_exceeded` error).
+    Quota,
+}
+
+/// A rejected push: the request handed back plus the reject reason.
+#[derive(Debug)]
+pub struct PushReject {
+    /// The request, returned so the caller can reply to it.
+    pub req: SampleRequest,
+    /// Why it was rejected.
+    pub kind: RejectKind,
+}
+
+/// Deficit round-robin: rows of grouped-stage credit added per unit of
+/// tenant weight each time a tenant reaches the rotation front without
+/// enough deficit to promote its head request.
+const DRR_QUANTUM: usize = 8;
+
+struct ParkedTenant {
+    name: String,
+    q: VecDeque<SampleRequest>,
+    rows: usize,
+    deficit: usize,
+    weight: u32,
+    quota: usize,
+}
+
 /// Single-threaded core (the engine's dispatch thread owns it): push
 /// requests, shed expired ones, poll for due batches.
 pub struct Batcher {
     /// Policy knobs (public so the dispatch loop can read them).
     pub cfg: BatcherConfig,
     groups: BTreeMap<GroupKey, Group>,
-    queued_rows: usize,
-    /// Queued requests carrying a deadline. When 0 (the common case —
-    /// deadlines are opt-in), `shed_expired` and `next_wake` skip their
-    /// per-request scans entirely.
+    /// Rows currently inside `groups` (bounded by `max_queued_rows`).
+    grouped_rows: usize,
+    /// Rows currently parked across all tenant queues.
+    parked_rows: usize,
+    /// Tenant parking slots; a tenant keeps its slot (and its DRR
+    /// bookkeeping) for the batcher's lifetime. Indexed by `order`.
+    parked: Vec<ParkedTenant>,
+    /// DRR rotation over `parked` indices with non-empty queues.
+    order: VecDeque<usize>,
+    /// Queued requests carrying a deadline — grouped *and* parked. When
+    /// 0 (the common case — deadlines are opt-in), `shed_expired` and
+    /// `next_wake` skip their per-request scans entirely.
     deadlined: usize,
 }
 
 impl Batcher {
     /// A batcher with the given policy and no queued work.
     pub fn new(cfg: BatcherConfig) -> Self {
-        Batcher { cfg, groups: BTreeMap::new(), queued_rows: 0, deadlined: 0 }
-    }
-
-    /// Rows currently queued across all groups.
-    pub fn queued_rows(&self) -> usize {
-        self.queued_rows
-    }
-
-    /// Enqueue; returns the request back (rejecting it) when over the
-    /// queued-row bound.
-    pub fn push(&mut self, req: SampleRequest) -> Result<(), SampleRequest> {
-        let rows = req.labels.len();
-        if self.queued_rows + rows > self.cfg.max_queued_rows {
-            return Err(req);
+        Batcher {
+            cfg,
+            groups: BTreeMap::new(),
+            grouped_rows: 0,
+            parked_rows: 0,
+            parked: Vec::new(),
+            order: VecDeque::new(),
+            deadlined: 0,
         }
+    }
+
+    /// Rows currently queued: grouped plus parked.
+    pub fn queued_rows(&self) -> usize {
+        self.grouped_rows + self.parked_rows
+    }
+
+    /// Rows currently parked across all tenant queues.
+    pub fn parked_rows(&self) -> usize {
+        self.parked_rows
+    }
+
+    /// Per-tenant parked backlog, for metrics: (tenant, parked rows).
+    pub fn parked_by_tenant(&self) -> impl Iterator<Item = (&str, usize)> {
+        self.parked.iter().filter(|t| t.rows > 0).map(|t| (t.name.as_str(), t.rows))
+    }
+
+    fn tenant_slot(&mut self, name: &str) -> usize {
+        if let Some(i) = self.parked.iter().position(|t| t.name == name) {
+            return i;
+        }
+        let spec = self.cfg.tenants.spec_for(name);
+        self.parked.push(ParkedTenant {
+            name: name.to_string(),
+            q: VecDeque::new(),
+            rows: 0,
+            deficit: 0,
+            weight: spec.weight,
+            quota: spec.quota_rows,
+        });
+        self.parked.len() - 1
+    }
+
+    fn group_insert(
+        groups: &mut BTreeMap<GroupKey, Group>,
+        grouped_rows: &mut usize,
+        req: SampleRequest,
+    ) {
+        let rows = req.labels.len();
         let key = GroupKey::of(&req);
-        let g = self.groups.entry(key).or_default();
-        g.oldest.get_or_insert(req.enqueued_at);
+        let g = groups.entry(key).or_default();
+        g.oldest = Some(g.oldest.map_or(req.enqueued_at, |o| o.min(req.enqueued_at)));
         g.rows += rows;
-        self.queued_rows += rows;
+        *grouped_rows += rows;
+        g.requests.push(req);
+    }
+
+    /// Enqueue. Grouped directly when the tenant has no parked backlog
+    /// and the grouped stage has room; parked behind the tenant's queue
+    /// (FIFO per tenant) otherwise, up to the tenant's quota; rejected
+    /// with a [`RejectKind`] past that.
+    pub fn push(&mut self, req: SampleRequest) -> Result<PushOutcome, PushReject> {
+        let rows = req.labels.len();
+        let slot = self.tenant_slot(req.tenant.as_deref().unwrap_or(""));
+        let direct = self.parked[slot].q.is_empty()
+            && self.grouped_rows + rows <= self.cfg.max_queued_rows;
+        if direct {
+            if req.deadline.is_some() {
+                self.deadlined += 1;
+            }
+            Self::group_insert(&mut self.groups, &mut self.grouped_rows, req);
+            return Ok(PushOutcome::Grouped);
+        }
+        let t = &mut self.parked[slot];
+        if t.rows + rows > t.quota {
+            let kind = if t.quota == 0 { RejectKind::Capacity } else { RejectKind::Quota };
+            return Err(PushReject { req, kind });
+        }
         if req.deadline.is_some() {
             self.deadlined += 1;
         }
-        g.requests.push(req);
-        Ok(())
+        t.rows += rows;
+        self.parked_rows += rows;
+        if t.q.is_empty() {
+            self.order.push_back(slot);
+        }
+        t.q.push_back(req);
+        Ok(PushOutcome::Parked)
+    }
+
+    /// Deficit round-robin pick: index of the tenant whose head request
+    /// may be promoted now. Rotates the order, charging each fronted
+    /// tenant `weight * DRR_QUANTUM` rows of deficit, until one can
+    /// afford its head. `None` when nothing is parked.
+    pub fn next_tenant(&mut self) -> Option<usize> {
+        loop {
+            let i = *self.order.front()?;
+            let head_rows = match self.parked[i].q.front() {
+                Some(r) => r.labels.len(),
+                None => {
+                    self.order.pop_front();
+                    continue;
+                }
+            };
+            if self.parked[i].deficit >= head_rows {
+                return Some(i);
+            }
+            self.parked[i].deficit += self.parked[i].weight as usize * DRR_QUANTUM;
+            self.order.rotate_left(1);
+        }
+    }
+
+    /// Move parked requests into groups while the grouped stage has
+    /// room, in deficit-weighted round-robin order across tenants. The
+    /// dispatch loop runs this at the top of every `poll`.
+    fn promote(&mut self) {
+        while self.parked_rows > 0 {
+            let Some(i) = self.next_tenant() else { break };
+            let head_rows = match self.parked[i].q.front() {
+                Some(r) => r.labels.len(),
+                None => continue,
+            };
+            // An oversized head still promotes into an empty grouped
+            // stage (mirroring the oversized-request dispatch rule) so
+            // it can never wedge its tenant's queue.
+            if self.grouped_rows > 0 && self.grouped_rows + head_rows > self.cfg.max_queued_rows {
+                break;
+            }
+            let Some(req) = self.parked[i].q.pop_front() else { continue };
+            let t = &mut self.parked[i];
+            t.rows -= head_rows;
+            t.deficit -= head_rows;
+            self.parked_rows -= head_rows;
+            if t.q.is_empty() {
+                t.deficit = 0; // no hoarding credit across idle periods
+                if let Some(pos) = self.order.iter().position(|&j| j == i) {
+                    self.order.remove(pos);
+                }
+            }
+            Self::group_insert(&mut self.groups, &mut self.grouped_rows, req);
+        }
     }
 
     /// Remove and return every queued request whose deadline is at or
-    /// before `now`, so expired work is shed *before* dispatch instead of
-    /// wasting a worker. The caller replies `deadline_exceeded` to each.
-    /// Groups left empty are dropped; surviving groups keep FIFO order
-    /// and recompute their flush clock from the oldest survivor.
+    /// before `now` — parked requests included, so work stuck behind a
+    /// full grouped stage still sheds on time. The caller replies
+    /// `deadline_exceeded` to each. Groups left empty are dropped;
+    /// surviving groups keep FIFO order and recompute their flush clock
+    /// from the oldest survivor.
     pub fn shed_expired(&mut self, now: Instant) -> Vec<SampleRequest> {
         if self.deadlined == 0 {
             return Vec::new(); // nothing queued carries a deadline
         }
+        let expired = |r: &SampleRequest| r.deadline.map_or(false, |d| d <= now);
         let mut shed = Vec::new();
         let mut emptied: Vec<GroupKey> = Vec::new();
         for (key, g) in self.groups.iter_mut() {
-            let expired = |r: &SampleRequest| r.deadline.map_or(false, |d| d <= now);
             if !g.requests.iter().any(expired) {
                 continue; // common case: nothing to shed, no rebuild
             }
@@ -154,7 +380,7 @@ impl Batcher {
                 if expired(&req) {
                     let rows = req.labels.len();
                     g.rows -= rows;
-                    self.queued_rows -= rows;
+                    self.grouped_rows -= rows;
                     self.deadlined -= 1;
                     shed.push(req);
                 } else {
@@ -170,14 +396,43 @@ impl Batcher {
         for key in emptied {
             self.groups.remove(&key);
         }
+        for i in 0..self.parked.len() {
+            if !self.parked[i].q.iter().any(expired) {
+                continue;
+            }
+            let mut kept: VecDeque<SampleRequest> =
+                VecDeque::with_capacity(self.parked[i].q.len());
+            while let Some(req) = self.parked[i].q.pop_front() {
+                if expired(&req) {
+                    let rows = req.labels.len();
+                    self.parked[i].rows -= rows;
+                    self.parked_rows -= rows;
+                    self.deadlined -= 1;
+                    shed.push(req);
+                } else {
+                    kept.push_back(req);
+                }
+            }
+            self.parked[i].q = kept;
+            if self.parked[i].q.is_empty() {
+                self.parked[i].deficit = 0;
+                if let Some(pos) = self.order.iter().position(|&j| j == i) {
+                    self.order.remove(pos);
+                }
+            }
+        }
         shed
     }
 
-    /// Collect every group due for dispatch at `now`. Groups larger than
-    /// `max_rows` are split so no batch exceeds the cap (a single request
-    /// larger than the cap still dispatches alone — the runtime chunks it
-    /// over buckets).
+    /// Collect every group due for dispatch at `now`. Promotes parked
+    /// work first, so freed grouped capacity refills before the due
+    /// check. Groups larger than `max_rows` are split so no batch
+    /// exceeds the cap (a single request larger than the cap still
+    /// dispatches alone — the runtime chunks it over buckets).
     pub fn poll(&mut self, now: Instant) -> Vec<Batch> {
+        if self.parked_rows > 0 {
+            self.promote();
+        }
         // First pass borrows the map read-only and clones a key only for
         // groups actually due — the common idle tick (nothing due) walks
         // the map without a single heap allocation. (The seed cloned
@@ -198,7 +453,7 @@ impl Batcher {
             // mutates the map between the passes); tolerate its absence
             // rather than panicking the dispatch thread
             let Some(g) = self.groups.remove(&key) else { continue };
-            self.queued_rows -= g.rows;
+            self.grouped_rows -= g.rows;
             // split into <= max_rows chunks preserving FIFO order; the
             // chunk priority is the most urgent (min-ranked) it contains
             let mut cur = Batch {
@@ -233,6 +488,11 @@ impl Batcher {
                 due.push(cur);
             }
         }
+        // dispatch freed grouped capacity: refill from parked queues now
+        // so promoted work rides the very next flush
+        if !due.is_empty() && self.parked_rows > 0 {
+            self.promote();
+        }
         due
     }
 
@@ -247,8 +507,9 @@ impl Batcher {
 
     /// Earliest instant at which the dispatch loop must act: the sooner
     /// of the next flush deadline and the earliest queued request
-    /// deadline (so expiry responses go out on time, not at the next
-    /// flush).
+    /// deadline — across grouped *and* parked requests, so a request
+    /// stuck behind a full grouped stage still sheds at its deadline
+    /// instead of waiting for the next flush.
     pub fn next_wake(&self) -> Option<Instant> {
         let flush = self.next_deadline();
         if self.deadlined == 0 {
@@ -258,6 +519,11 @@ impl Batcher {
             .groups
             .values()
             .flat_map(|g| g.requests.iter().filter_map(|r| r.deadline))
+            .chain(
+                self.parked
+                    .iter()
+                    .flat_map(|t| t.q.iter().filter_map(|r| r.deadline)),
+            )
             .min();
         match (flush, expiry) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -285,13 +551,28 @@ mod tests {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: Priority::Normal,
+            tenant: None,
             progress: None,
             reply: tx,
         }
     }
 
+    fn treq(tenant: &str, model: &str, n: usize) -> SampleRequest {
+        let mut r = req(model, n, spec(8), 0.0);
+        r.tenant = Some(tenant.to_string());
+        r
+    }
+
     fn spec(nfe: usize) -> SolverSpec {
         SolverSpec::Baseline { name: "euler".into(), nfe }
+    }
+
+    fn policy(specs: &[(&str, u32, usize)]) -> TenantPolicy {
+        let mut p = TenantPolicy::default();
+        for &(name, weight, quota_rows) in specs {
+            p.tenants.insert(name.to_string(), TenantSpec { weight, quota_rows });
+        }
+        p
     }
 
     #[test]
@@ -350,7 +631,8 @@ mod tests {
     fn backpressure_rejects() {
         let mut b = Batcher::new(BatcherConfig { max_queued_rows: 4, ..Default::default() });
         b.push(req("m", 3, spec(8), 0.0)).unwrap();
-        assert!(b.push(req("m", 3, spec(8), 0.0)).is_err());
+        let err = b.push(req("m", 3, spec(8), 0.0)).unwrap_err();
+        assert_eq!(err.kind, RejectKind::Capacity);
         assert_eq!(b.queued_rows(), 3);
     }
 
@@ -436,5 +718,144 @@ mod tests {
         assert_eq!(due.len(), 1);
         assert_eq!(due[0].priority, Priority::High);
         assert_eq!(due[0].requests.len(), 2, "priorities do not split the batch");
+    }
+
+    #[test]
+    fn tenant_parks_past_capacity_and_promotes_after_drain() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 4,
+            max_queued_rows: 4,
+            tenants: policy(&[("acme", 1, 16)]),
+            ..Default::default()
+        });
+        assert_eq!(b.push(treq("acme", "m", 4)).unwrap(), PushOutcome::Grouped);
+        assert_eq!(b.push(treq("acme", "m", 2)).unwrap(), PushOutcome::Parked);
+        assert_eq!(b.queued_rows(), 6);
+        assert_eq!(b.parked_rows(), 2);
+        // first poll dispatches the full group, then promotion refills
+        let due = b.poll(Instant::now() + Duration::from_secs(1));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].rows, 4);
+        assert_eq!(b.parked_rows(), 0, "freed capacity promotes the parked request");
+        let due = b.poll(Instant::now() + Duration::from_secs(2));
+        assert_eq!(due.len(), 1);
+        assert_eq!(due[0].rows, 2);
+        assert_eq!(b.queued_rows(), 0);
+    }
+
+    #[test]
+    fn tenant_quota_rejects_with_quota_kind() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_queued_rows: 2,
+            tenants: policy(&[("acme", 1, 3)]),
+            ..Default::default()
+        });
+        b.push(treq("acme", "m", 2)).unwrap(); // fills the grouped stage
+        assert_eq!(b.push(treq("acme", "m", 2)).unwrap(), PushOutcome::Parked);
+        let err = b.push(treq("acme", "m", 2)).unwrap_err();
+        assert_eq!(err.kind, RejectKind::Quota, "parked 2 + 2 exceeds quota 3");
+        // anonymous traffic at the same bound still gets a capacity reject
+        let err = b.push(req("m", 1, spec(8), 0.0)).unwrap_err();
+        assert_eq!(err.kind, RejectKind::Capacity);
+    }
+
+    #[test]
+    fn tenant_fifo_is_preserved_through_parking() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_queued_rows: 1,
+            tenants: policy(&[("acme", 1, 16)]),
+            ..Default::default()
+        });
+        let mut first = treq("acme", "m", 1);
+        first.id = 1;
+        let mut second = treq("acme", "m", 1);
+        second.id = 2;
+        b.push(first).unwrap(); // grouped
+        b.push(second).unwrap(); // parked behind the grouped one
+        // even though the grouped stage now has room mid-drain, a third
+        // push from the same tenant must park behind the second
+        let due = b.poll(Instant::now() + Duration::from_secs(1));
+        let ids: Vec<u64> = due.iter().flat_map(|d| d.requests.iter().map(|r| r.id)).collect();
+        assert_eq!(ids, vec![1]);
+        let mut third = treq("acme", "m", 1);
+        third.id = 3;
+        b.push(third).unwrap();
+        let mut seen = Vec::new();
+        for tick in 2..6 {
+            let due = b.poll(Instant::now() + Duration::from_secs(tick));
+            seen.extend(due.iter().flat_map(|d| d.requests.iter().map(|r| r.id)));
+        }
+        assert_eq!(seen, vec![2, 3], "per-tenant FIFO survives parking");
+    }
+
+    #[test]
+    fn weighted_promotion_tracks_weights() {
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 6,
+            max_wait: Duration::from_millis(1),
+            max_queued_rows: 6,
+            tenants: policy(&[("a", 1, 1024), ("b", 2, 1024), ("c", 3, 1024)]),
+        });
+        // fill the grouped stage so everything after parks
+        b.push(req("m0", 6, spec(8), 0.0)).unwrap();
+        for _ in 0..120 {
+            for t in ["a", "b", "c"] {
+                // distinct models so promotion order is visible per batch
+                b.push(treq(t, t, 1)).unwrap();
+            }
+        }
+        // drain; count promoted rows per tenant over the first ~180 rows
+        let mut counts: BTreeMap<String, usize> = BTreeMap::new();
+        let mut total = 0usize;
+        let mut tick = 1u64;
+        while total < 180 {
+            let due = b.poll(Instant::now() + Duration::from_secs(tick));
+            tick += 1;
+            for batch in &due {
+                if batch.key.model == "m0" {
+                    continue; // the filler
+                }
+                for r in &batch.requests {
+                    if total < 180 {
+                        *counts.entry(batch.key.model.clone()).or_default() += r.labels.len();
+                        total += r.labels.len();
+                    }
+                }
+            }
+        }
+        let (a, bb, c) = (counts["a"] as f64, counts["b"] as f64, counts["c"] as f64);
+        let sum = a + bb + c;
+        assert!((a / sum - 1.0 / 6.0).abs() < 0.10, "a share {} off", a / sum);
+        assert!((bb / sum - 2.0 / 6.0).abs() < 0.10, "b share {} off", bb / sum);
+        assert!((c / sum - 3.0 / 6.0).abs() < 0.10, "c share {} off", c / sum);
+    }
+
+    #[test]
+    fn parked_deadline_drives_next_wake_and_sheds() {
+        // Regression for the wake-computation gap: a request parked
+        // behind a full grouped stage must still shed at its deadline,
+        // and next_wake must report that deadline (not just the flush).
+        let mut b = Batcher::new(BatcherConfig {
+            max_rows: 64,
+            max_wait: Duration::from_secs(10),
+            max_queued_rows: 2,
+            tenants: policy(&[("acme", 1, 16)]),
+        });
+        let now = Instant::now();
+        b.push(treq("acme", "m", 2)).unwrap(); // fills the grouped stage
+        let mut parked = treq("acme", "m", 2);
+        parked.id = 7;
+        parked.deadline = Some(now + Duration::from_millis(40));
+        assert_eq!(b.push(parked).unwrap(), PushOutcome::Parked);
+        let wake = b.next_wake().unwrap();
+        assert!(
+            wake <= now + Duration::from_millis(40),
+            "wake must track the parked request's deadline"
+        );
+        let shed = b.shed_expired(now + Duration::from_millis(41));
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].id, 7, "the parked request sheds at its deadline");
+        assert_eq!(b.parked_rows(), 0);
+        assert_eq!(b.queued_rows(), 2);
     }
 }

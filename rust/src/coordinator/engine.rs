@@ -42,9 +42,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use super::batcher::{Batch, Batcher, BatcherConfig};
+use super::batcher::{Batch, Batcher, BatcherConfig, PushOutcome, PushReject, RejectKind};
 use super::breaker::{Admit, Breakers};
 use super::metrics::Metrics;
+use super::registry::Registry;
 use super::request::{
     ErrCode, Priority, Progress, SampleOutput, SampleRequest, SampleResponse, ServeError,
     SolverSpec,
@@ -62,6 +63,7 @@ use crate::util::rng::Pcg32;
 use crate::util::sync::{lock_ok, wait_ok};
 
 /// Engine sizing and policy knobs.
+#[derive(Clone)]
 pub struct EngineConfig {
     /// Batching flush/backpressure policy (see [`BatcherConfig`]).
     pub batcher: BatcherConfig,
@@ -136,7 +138,11 @@ pub struct Engine {
     tx: Option<mpsc::Sender<SampleRequest>>,
     /// Shared service counters/histograms; also the `stats` op payload.
     pub metrics: Arc<Metrics>,
-    next_id: AtomicU64,
+    /// Model registry this engine admits against (shared across every
+    /// shard of a fleet; see `coordinator::shard`).
+    registry: Arc<Registry>,
+    /// Shared across shards so request/trace ids are fleet-unique.
+    next_id: Arc<AtomicU64>,
     max_inflight_rows: u64,
     dispatch: Option<std::thread::JoinHandle<()>>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -163,11 +169,28 @@ fn settle_rows(metrics: &Metrics, rows: usize) {
     metrics.inflight_rows.fetch_sub(rows as u64, Ordering::Relaxed);
 }
 
+/// Fleet-shared plumbing: one registry, trace ring, and id counter
+/// spanning every engine shard (`coordinator::shard::Fleet`), so models
+/// load/unload fleet-wide and request/trace ids stay fleet-unique.
+pub(crate) struct EngineShared {
+    /// Model registry every shard admits against.
+    pub registry: Arc<Registry>,
+    /// One trace ring for the whole fleet.
+    pub tracer: Arc<TraceRecorder>,
+    /// Fleet-wide request/trace id counter.
+    pub ids: Arc<AtomicU64>,
+}
+
 impl Engine {
     /// Spawn the dispatch thread and `cfg.workers` worker threads over
     /// the given artifact store and device runtime. The engine is ready
     /// for [`Engine::try_submit`] as soon as this returns; compilation
     /// of model executables happens lazily on first use per worker.
+    ///
+    /// The store seeds a private [`Registry`] — the engine's resident
+    /// model set can change at runtime via hot `load`/`unload`
+    /// (PROTOCOL.md). Multi-shard deployments share one registry across
+    /// engines via `coordinator::shard::Fleet` instead.
     ///
     /// Errors if the OS refuses to spawn a thread; on that path the
     /// request channel is dropped, so any already-spawned threads drain
@@ -177,6 +200,23 @@ impl Engine {
         rt: Arc<Runtime>,
         cfg: EngineConfig,
     ) -> Result<Engine> {
+        let shared = EngineShared {
+            registry: Arc::new(Registry::new(store, &rt)),
+            tracer: Arc::new(TraceRecorder::new(cfg.trace_capacity)),
+            ids: Arc::new(AtomicU64::new(1)),
+        };
+        Engine::start_shared(shared, rt, cfg)
+    }
+
+    /// [`Engine::start`] with the fleet-shared pieces injected: the
+    /// shard router starts N engines over one registry/tracer/id
+    /// counter; the single-engine path wraps fresh ones.
+    pub(crate) fn start_shared(
+        shared: EngineShared,
+        rt: Arc<Runtime>,
+        cfg: EngineConfig,
+    ) -> Result<Engine> {
+        let EngineShared { registry, tracer, ids } = shared;
         let metrics = Arc::new(Metrics::new());
         {
             // lane utilization + fault domains on the /metrics surface; a
@@ -206,8 +246,9 @@ impl Engine {
         let policy = RetryPolicy { retries: cfg.exec_retries, backoff_ms: cfg.retry_backoff_ms };
         // tracing plane: one shared ring; the runtime records lane-side
         // events (compile/exec/timeout/respawn/fault) into the same ring
-        // so a request's timeline is complete end to end
-        let tracer = Arc::new(TraceRecorder::new(cfg.trace_capacity));
+        // so a request's timeline is complete end to end. attach_tracer
+        // is one-shot (first shard wins) — every shard of a fleet passes
+        // the same ring, so later attaches are no-ops by design.
         rt.attach_tracer(tracer.clone());
         // bns-lint: allow(bounded_channel) — bounded upstream by the admission budget: try_submit charges max_inflight_rows before sending, so the queue can never exceed it
         let (tx, rx) = mpsc::channel::<SampleRequest>();
@@ -217,11 +258,13 @@ impl Engine {
             shutdown: AtomicBool::new(false),
         });
         let router = Arc::new(RouterCache::new());
+        // hot load/unload must drop this shard's stale routes
+        registry.attach_router(&router);
 
         // dispatch thread
         let wq_d = wq.clone();
         let metrics_d = metrics.clone();
-        let store_d = store.clone();
+        let registry_d = registry.clone();
         let tracer_d = tracer.clone();
         let batcher_cfg = cfg.batcher;
         let dispatch = std::thread::Builder::new()
@@ -238,35 +281,52 @@ impl Engine {
                     match rx.recv_timeout(timeout) {
                         Ok(req) => {
                             metrics_d.record_request(req.labels.len());
-                            if !store_d.models.contains_key(&req.model) {
-                                metrics_d.record_reject();
-                                settle_rows(&metrics_d, req.labels.len());
-                                let _ = req.reply.send(SampleResponse {
-                                    id: req.id,
-                                    result: Err(ServeError::new(
-                                        ErrCode::UnknownModel,
-                                        format!("unknown model '{}'", req.model),
-                                    )),
-                                });
-                                continue;
-                            }
-                            if let Err(rejected) = batcher.push(req) {
-                                metrics_d.record_overload();
-                                settle_rows(&metrics_d, rejected.labels.len());
-                                let _ = rejected.reply.send(SampleResponse {
-                                    id: rejected.id,
-                                    result: Err(ServeError::overloaded(
-                                        "queue full (backpressure)",
-                                        metrics_d.suggest_retry_ms(),
-                                    )),
-                                });
+                            let (id, rows) = (req.id, req.labels.len());
+                            match batcher.push(req) {
+                                Ok(PushOutcome::Grouped) => {}
+                                Ok(PushOutcome::Parked) => {
+                                    tracer_d.record(id, TraceStage::TenantPark, rows as u64, 0);
+                                }
+                                Err(PushReject { req, kind }) => {
+                                    // try_submit's registry retain is
+                                    // released on every reject path
+                                    registry_d.release(&req.model);
+                                    settle_rows(&metrics_d, rows);
+                                    let err = match kind {
+                                        RejectKind::Capacity => {
+                                            metrics_d.record_overload();
+                                            ServeError::overloaded(
+                                                "queue full (backpressure)",
+                                                metrics_d.suggest_retry_ms(),
+                                            )
+                                        }
+                                        RejectKind::Quota => {
+                                            metrics_d.record_quota_reject(
+                                                req.tenant.as_deref().unwrap_or("default"),
+                                            );
+                                            ServeError::quota_exceeded(
+                                                format!(
+                                                    "tenant '{}' parked-row quota exhausted",
+                                                    req.tenant.as_deref().unwrap_or("default"),
+                                                ),
+                                                metrics_d.suggest_retry_ms(),
+                                            )
+                                        }
+                                    };
+                                    let _ = req.reply.send(SampleResponse {
+                                        id: req.id,
+                                        result: Err(err),
+                                    });
+                                }
                             }
                         }
                         Err(mpsc::RecvTimeoutError::Timeout) => {}
                         Err(mpsc::RecvTimeoutError::Disconnected) => break,
                     }
-                    // shed expired work before it can reach a worker
+                    // shed expired work (grouped or parked) before it can
+                    // reach a worker
                     for req in batcher.shed_expired(Instant::now()) {
+                        registry_d.release(&req.model);
                         metrics_d.record_expired();
                         settle_rows(&metrics_d, req.labels.len());
                         let _ = req.reply.send(SampleResponse {
@@ -297,11 +357,18 @@ impl Engine {
                         wq_d.push(batch);
                     }
                 }
-                // drain on shutdown
-                for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
-                    metrics_d.record_batch(batch.rows);
-                    metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
-                    wq_d.push(batch);
+                // drain on shutdown: loop, because each far-future poll
+                // flushes the grouped stage and then promotes parked
+                // tenants into the freed capacity — one pass is not
+                // enough once tenants overhang the grouped bound.
+                // Terminates: promote() always makes progress into an
+                // empty grouped stage.
+                while batcher.queued_rows() > 0 {
+                    for batch in batcher.poll(Instant::now() + Duration::from_secs(3600)) {
+                        metrics_d.record_batch(batch.rows);
+                        metrics_d.queue_depth.fetch_add(1, Ordering::Relaxed);
+                        wq_d.push(batch);
+                    }
                 }
                 wq_d.shutdown.store(true, Ordering::SeqCst);
                 wq_d.cv.notify_all();
@@ -312,7 +379,7 @@ impl Engine {
         let mut workers = Vec::new();
         for wi in 0..cfg.workers.max(1) {
             let wq_w = wq.clone();
-            let store_w = store.clone();
+            let registry_w = registry.clone();
             let rt_w = rt.clone();
             let metrics_w = metrics.clone();
             let router_w = router.clone();
@@ -324,12 +391,14 @@ impl Engine {
                     .spawn(move || {
                         // one workspace per worker, reused across batches:
                         // the sampling hot path allocates nothing per step.
-                        // LoadedModels are cached per worker: executables
-                        // compile once and pin to a device lane, so a
-                        // batch binds labels/guidance instead of
-                        // re-resolving buckets every time.
+                        // LoadedModels are cached per worker, keyed by the
+                        // registry version they were compiled from:
+                        // executables compile once and pin to a device
+                        // lane, and a hot reload (version bump) makes the
+                        // stale entry miss so the fresh artifact bytes
+                        // recompile lazily on first use.
                         let mut ws = SampleWorkspace::new();
-                        let mut models: HashMap<String, Arc<LoadedModel>> = HashMap::new();
+                        let mut models: HashMap<String, (u64, Arc<LoadedModel>)> = HashMap::new();
                         loop {
                             let batch = {
                                 let mut q = lock_ok(&wq_w.q);
@@ -345,8 +414,8 @@ impl Engine {
                             };
                             metrics_w.queue_depth.fetch_sub(1, Ordering::Relaxed);
                             run_batch(
-                                &store_w, &rt_w, &metrics_w, &router_w, &breakers_w, &tracer_w,
-                                policy, &mut models, batch, &mut ws,
+                                &registry_w, &rt_w, &metrics_w, &router_w, &breakers_w,
+                                &tracer_w, policy, &mut models, batch, &mut ws,
                             );
                             // the batch-leader ambient id must not leak
                             // onto the next batch's lane events
@@ -360,7 +429,8 @@ impl Engine {
         Ok(Engine {
             tx: Some(tx),
             metrics,
-            next_id: AtomicU64::new(1),
+            registry,
+            next_id: ids,
             max_inflight_rows: cfg.max_inflight_rows.max(1) as u64,
             dispatch: Some(dispatch),
             workers,
@@ -369,6 +439,13 @@ impl Engine {
             tracer,
             rt: Arc::downgrade(&rt),
         })
+    }
+
+    /// The model registry this engine admits against (shared fleet-wide
+    /// when the engine is a shard) — the `load`/`unload`/`list_models`
+    /// protocol surface.
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
     }
 
     /// Fault-domain health for the `health` op (PROTOCOL.md): per-lane
@@ -406,9 +483,15 @@ impl Engine {
     /// Rejections:
     /// * [`ErrCode::BadRequest`] — empty `labels`;
     /// * [`ErrCode::DeadlineExceeded`] — the deadline already passed;
+    /// * [`ErrCode::UnknownModel`] — the model is not resident in the
+    ///   registry (never was, or is draining after an `unload`);
     /// * [`ErrCode::Overloaded`] — the in-flight row budget is full
     ///   (carries a `retry_after_ms` hint);
     /// * [`ErrCode::Internal`] — the engine is shutting down.
+    ///
+    /// An admitted request holds one registry reference for its model
+    /// until it settles, so an `unload` issued mid-flight drains behind
+    /// it instead of evicting the artifacts out from under the batch.
     ///
     /// On success the engine-assigned id (also echoed as `id` in the
     /// eventual [`SampleResponse`]) is returned.
@@ -449,6 +532,23 @@ impl Engine {
                 ),
             ));
         }
+        // registry admission: resident models take a per-request
+        // reference (released when the request settles) so hot unload
+        // drains in-flight work before evicting
+        if !self.registry.retain(&req.model) {
+            settle_rows(&self.metrics, rows);
+            self.metrics.record_reject();
+            return Err((
+                req,
+                ServeError::new(
+                    ErrCode::UnknownModel,
+                    format!("unknown model '{}'", req.model),
+                ),
+            ));
+        }
+        if let Some(t) = req.tenant.as_deref() {
+            self.metrics.record_tenant_request(t, rows);
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
         // the trace id *is* the request id: first span of the timeline
@@ -458,11 +558,13 @@ impl Engine {
         let tx = match self.tx.as_ref() {
             Some(tx) => tx,
             None => {
+                self.registry.release(&req.model);
                 settle_rows(&self.metrics, rows);
                 return Err((req, ServeError::new(ErrCode::Internal, "engine shutting down")));
             }
         };
         if let Err(mpsc::SendError(req)) = tx.send(req) {
+            self.registry.release(&req.model);
             settle_rows(&self.metrics, rows);
             return Err((req, ServeError::new(ErrCode::Internal, "engine shutting down")));
         }
@@ -499,6 +601,7 @@ impl Engine {
     ///     enqueued_at: Instant::now(),
     ///     deadline: None,
     ///     priority: Priority::Normal,
+    ///     tenant: None,
     ///     progress: None,
     ///     reply,
     /// });
@@ -561,6 +664,7 @@ impl Engine {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: Priority::Normal,
+            tenant: None,
             progress: None,
             reply,
         });
@@ -659,20 +763,29 @@ struct BatchOutcome<'w> {
 }
 
 fn solve_batch<'w>(
-    store: &ArtifactStore,
+    registry: &Registry,
     rt: &Runtime,
     router: &RouterCache,
-    models: &mut HashMap<String, Arc<LoadedModel>>,
+    models: &mut HashMap<String, (u64, Arc<LoadedModel>)>,
     batch: &Batch,
     ws: &'w mut SampleWorkspace,
 ) -> Result<BatchOutcome<'w>> {
-    // per-worker model cache: compile + pin once, bind per batch
+    // resolve the store view this batch runs against: the current view
+    // while the model is resident, the pre-unload snapshot while it
+    // drains (the batch's requests hold registry references, so the
+    // view cannot be evicted mid-batch)
+    let store = registry.store_for(&batch.key.model).ok_or_else(|| {
+        anyhow::anyhow!("model '{}' evicted from the registry", batch.key.model)
+    })?;
+    let version = registry.model_version(&batch.key.model).unwrap_or(0);
+    // per-worker model cache: compile + pin once, bind per batch; keyed
+    // by registry version so a hot reload misses and recompiles
     let loaded = match models.get(&batch.key.model) {
-        Some(m) => m.clone(),
-        None => {
+        Some((v, m)) if *v == version => m.clone(),
+        _ => {
             let info = store.model(&batch.key.model)?;
             let m = Arc::new(LoadedModel::load(rt, info)?);
-            models.insert(batch.key.model.clone(), m.clone());
+            models.insert(batch.key.model.clone(), (version, m.clone()));
             m
         }
     };
@@ -698,7 +811,7 @@ fn solve_batch<'w>(
     let forwards_per_eval = field.forwards_per_eval();
     let counting = CountingField::new(&field);
     let spec = &batch.requests[0].solver;
-    let routed = router.resolve(store, &batch.key, sched, spec)?;
+    let routed = router.resolve(&store, &batch.key, sched, spec)?;
     // streaming subscribers (if any) ride a notify wrapper; the common
     // non-streaming batch uses the counting field directly
     let subs: Vec<(u64, mpsc::Sender<Progress>)> = batch
@@ -734,17 +847,19 @@ fn solve_batch<'w>(
 /// Exactly-once settlement: every request in the batch is answered from
 /// precisely one of the three terminal arms — breaker reject, success,
 /// or final failure. Retries happen strictly *before* any reply is
-/// sent, so a retry can never double-settle (DESIGN.md §11).
+/// sent, so a retry can never double-settle (DESIGN.md §11). Each
+/// settled request also releases the registry reference it took at
+/// admission, letting a draining model finish its eviction.
 #[allow(clippy::too_many_arguments)]
 fn run_batch(
-    store: &ArtifactStore,
+    registry: &Registry,
     rt: &Runtime,
     metrics: &Metrics,
     router: &RouterCache,
     breakers: &Breakers,
     tracer: &TraceRecorder,
     policy: RetryPolicy,
-    models: &mut HashMap<String, Arc<LoadedModel>>,
+    models: &mut HashMap<String, (u64, Arc<LoadedModel>)>,
     batch: Batch,
     ws: &mut SampleWorkspace,
 ) {
@@ -764,6 +879,7 @@ fn run_batch(
         );
         for req in batch.requests {
             metrics.record_reject();
+            registry.release(&req.model);
             settle_rows(metrics, req.labels.len());
             tracer.record(req.id, TraceStage::BreakerReject, 0, retry_after_ms);
             let _ = req.reply.send(SampleResponse { id: req.id, result: Err(err.clone()) });
@@ -780,7 +896,7 @@ fn run_batch(
         for req in &batch.requests {
             tracer.record(req.id, TraceStage::ExecStart, attempt as u64 + 1, batch.rows as u64);
         }
-        match solve_batch(store, rt, router, models, &batch, ws) {
+        match solve_batch(registry, rt, router, models, &batch, ws) {
             Ok(o) => {
                 breakers.on_success(&batch.key.model);
                 let exec_us = started.elapsed().as_micros() as u64;
@@ -797,6 +913,7 @@ fn run_batch(
                     tracer.record(req.id, TraceStage::ExecOk, attempt as u64 + 1, attempt_us);
                     let samples = o.out[offset * o.dim..(offset + rows) * o.dim].to_vec();
                     offset += rows;
+                    registry.release(&req.model);
                     settle_rows(metrics, rows);
                     let emit_us = emit_started.elapsed().as_micros() as u64;
                     metrics.record_emit_us(emit_us);
@@ -855,6 +972,7 @@ fn run_batch(
                     format!("batch failed after {} attempt(s): {e:#}", attempt + 1),
                 );
                 for req in batch.requests {
+                    registry.release(&req.model);
                     settle_rows(metrics, req.labels.len());
                     if tripped {
                         tracer.record(req.id, TraceStage::BreakerOpen, attempt as u64 + 1, 0);

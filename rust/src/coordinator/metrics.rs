@@ -37,6 +37,10 @@ pub struct Metrics {
     /// Requests rejected specifically for capacity (in-flight row budget
     /// or queued-row bound) — the wire protocol's `overloaded` code.
     pub rejected_overload: AtomicU64,
+    /// Requests rejected because their tenant's parked backlog exceeded
+    /// its weighted-fair quota — the wire protocol's `quota_exceeded`
+    /// code. Also counted in `rejected`.
+    pub rejected_quota: AtomicU64,
     /// Requests shed because their deadline passed before execution —
     /// the wire protocol's `deadline_exceeded` code.
     pub expired: AtomicU64,
@@ -86,6 +90,21 @@ struct Inner {
     /// Per-solver exec-latency histograms (key interned on first sight —
     /// the hot path never allocates, see `record_latency`).
     per_solver: BTreeMap<String, LatencyHistogram>,
+    /// Per-tenant accounting (weighted-fair tenancy, DESIGN.md §14);
+    /// only requests carrying a `tenant` field are tracked here.
+    tenants: BTreeMap<String, TenantCounters>,
+}
+
+/// Per-tenant counters surfaced under `stats.tenants` and aggregated
+/// fleet-wide by the shard router.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TenantCounters {
+    /// Requests admitted for this tenant.
+    pub requests: u64,
+    /// Sample rows across those requests.
+    pub samples: u64,
+    /// Requests rejected over the tenant's parked-backlog quota.
+    pub rejected_quota: u64,
 }
 
 impl Default for Metrics {
@@ -95,6 +114,7 @@ impl Default for Metrics {
             samples: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             rejected_overload: AtomicU64::new(0),
+            rejected_quota: AtomicU64::new(0),
             expired: AtomicU64::new(0),
             evals: AtomicU64::new(0),
             forwards: AtomicU64::new(0),
@@ -135,6 +155,30 @@ impl Metrics {
     pub fn record_overload(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
         self.rejected_overload.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one quota reject (also counts as a plain reject) against
+    /// `tenant`'s ledger.
+    pub fn record_quota_reject(&self, tenant: &str) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+        self.rejected_quota.fetch_add(1, Ordering::Relaxed);
+        lock_ok(&self.inner).tenants.entry(tenant.to_string()).or_default().rejected_quota +=
+            1;
+    }
+
+    /// Count one admitted request of `rows` rows against `tenant`'s
+    /// ledger (in addition to the global `record_request`).
+    pub fn record_tenant_request(&self, tenant: &str, rows: usize) {
+        let mut g = lock_ok(&self.inner);
+        let t = g.tenants.entry(tenant.to_string()).or_default();
+        t.requests += 1;
+        t.samples += rows as u64;
+    }
+
+    /// Per-tenant counters, cloned out for fleet-wide aggregation by the
+    /// shard router.
+    pub fn tenants_snapshot(&self) -> Vec<(String, TenantCounters)> {
+        lock_ok(&self.inner).tenants.iter().map(|(k, v)| (k.clone(), *v)).collect()
     }
 
     /// Count one deadline-expired shed.
@@ -262,6 +306,10 @@ impl Metrics {
                 "rejected_overload",
                 Json::Num(self.rejected_overload.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "rejected_quota",
+                Json::Num(self.rejected_quota.load(Ordering::Relaxed) as f64),
+            ),
             ("expired", Json::Num(self.expired.load(Ordering::Relaxed) as f64)),
             ("evals", Json::Num(self.evals.load(Ordering::Relaxed) as f64)),
             ("forwards", Json::Num(self.forwards.load(Ordering::Relaxed) as f64)),
@@ -302,6 +350,27 @@ impl Metrics {
             (
                 "per_solver",
                 Json::Obj(g.per_solver.iter().map(|(k, v)| (k.clone(), q(v))).collect()),
+            ),
+            (
+                "tenants",
+                Json::Obj(
+                    g.tenants
+                        .iter()
+                        .map(|(k, t)| {
+                            (
+                                k.clone(),
+                                Json::obj(vec![
+                                    ("requests", Json::Num(t.requests as f64)),
+                                    ("samples", Json::Num(t.samples as f64)),
+                                    (
+                                        "rejected_quota",
+                                        Json::Num(t.rejected_quota as f64),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
             ),
         ])
     }
@@ -428,6 +497,29 @@ mod tests {
         assert_eq!(lanes[0].get("respawns").as_f64(), Some(1.0));
         assert_eq!(snap.get("lane_respawns").as_f64(), Some(1.0));
         assert_eq!(snap.get("work_queue_depth").as_f64(), Some(3.0));
+    }
+
+    #[test]
+    fn tenant_ledger_accumulates_and_surfaces() {
+        let m = Metrics::new();
+        m.record_tenant_request("acme", 4);
+        m.record_tenant_request("acme", 2);
+        m.record_tenant_request("umbrella", 1);
+        m.record_quota_reject("umbrella");
+        assert_eq!(m.rejected_quota.load(Ordering::Relaxed), 1);
+        assert_eq!(m.rejected.load(Ordering::Relaxed), 1, "quota rejects count as rejects");
+        let snap = m.snapshot_json();
+        assert_eq!(snap.get("rejected_quota").as_f64(), Some(1.0));
+        let acme = snap.get("tenants").get("acme");
+        assert_eq!(acme.get("requests").as_f64(), Some(2.0));
+        assert_eq!(acme.get("samples").as_f64(), Some(6.0));
+        assert_eq!(acme.get("rejected_quota").as_f64(), Some(0.0));
+        let umb = snap.get("tenants").get("umbrella");
+        assert_eq!(umb.get("rejected_quota").as_f64(), Some(1.0));
+        let typed = m.tenants_snapshot();
+        assert_eq!(typed.len(), 2);
+        assert_eq!(typed[0].0, "acme");
+        assert_eq!(typed[0].1.samples, 6);
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! * `router`  — SolverSpec -> concrete solver resolution (BNS-first)
 //! * `engine`  — admission control, dispatch + worker threads driving
 //!   batched sampling
+//! * `registry` — versioned model registry: hot `load`/`unload` with
+//!   refcounted drain (the fleet plane, DESIGN.md §14)
+//! * `shard`   — consistent-hash shard router fanning one front door
+//!   across N in-process engine shards
 //! * `metrics` — counters, gauges, and latency histograms (the `stats` op)
 //! * `server`  — event-driven TCP JSON-lines front-end (PROTOCOL.md)
 //!
@@ -22,13 +26,17 @@ pub mod batcher;
 pub mod breaker;
 pub mod engine;
 pub mod metrics;
+pub mod registry;
 pub mod request;
 pub mod router;
 pub mod server;
+pub mod shard;
 
 pub use engine::{Engine, EngineConfig};
+pub use registry::Registry;
 pub use request::{
     ErrCode, Priority, Progress, SampleOutput, SampleRequest, SampleResponse, ServeError,
     SolverSpec,
 };
 pub use server::{Server, ServerConfig};
+pub use shard::{Fleet, FleetConfig};

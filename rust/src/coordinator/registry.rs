@@ -1,0 +1,456 @@
+//! Model registry: versioned hot load/unload over the artifact store.
+//!
+//! The engine used to treat its `ArtifactStore` as immutable for the
+//! process lifetime. The registry makes the *resident set* dynamic while
+//! keeping every store **view** immutable: `load`/`unload` build a new
+//! `Arc<ArtifactStore>` (a deep clone of the manifest metadata — model
+//! weights live on disk and in lane caches, not in the store) and swap
+//! it atomically under a `RwLock`. Workers resolve per batch, so they
+//! always see a coherent view; nothing is ever mutated in place.
+//!
+//! Lifecycle (DESIGN.md §14):
+//! * `load(name)` re-reads `manifest.json` from the store root, admits
+//!   `name` into the resident set, bumps its version, and evicts the
+//!   model's compiled executables from every device lane
+//!   ([`Runtime::evict_path`] — the same cache-invalidation path a lane
+//!   respawn drains), so workers lazily recompile the fresh bytes on
+//!   first use.
+//! * `unload(name)` removes `name` from the current view immediately
+//!   (new submits get `unknown_model`), but in-flight work keeps a
+//!   refcount ([`Registry::retain`]/[`Registry::release`], charged per
+//!   admitted request): while refs are held the model *drains* — its old
+//!   store view stays resolvable via [`Registry::store_for`] — and only
+//!   when the last ref releases are its lane executables evicted.
+//! * Each `load`/`unload` invalidates the affected routes in every
+//!   attached [`RouterCache`] and bumps a global epoch, so nothing
+//!   downstream serves against a stale artifact version.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+
+use anyhow::{bail, Result};
+
+use super::router::RouterCache;
+use crate::runtime::artifact::ModelInfo;
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::json::Json;
+use crate::util::sync::{lock_ok, read_ok, write_ok};
+
+/// Registry bookkeeping for one resident (or draining) model.
+struct Entry {
+    /// Monotonic per-model version, bumped by every successful `load`.
+    version: u64,
+    /// Admitted-but-unsettled requests holding this model.
+    refs: u64,
+    /// True after `unload` while `refs > 0`: invisible to new submits,
+    /// still resolvable for in-flight work.
+    draining: bool,
+    /// The store view that still contains a draining model (`None` while
+    /// the model is resident in `current`).
+    snapshot: Option<Arc<ArtifactStore>>,
+}
+
+struct Inner {
+    /// The current immutable store view: exactly the resident,
+    /// non-draining models.
+    current: Arc<ArtifactStore>,
+    /// Per-model lifecycle state, covering resident *and* draining
+    /// models.
+    entries: BTreeMap<String, Entry>,
+}
+
+/// Versioned model registry shared by every engine shard of a fleet.
+pub struct Registry {
+    /// Artifact-store root; `load` re-reads `manifest.json` from here.
+    root: PathBuf,
+    /// Weak so a retained registry handle can't pin lane threads alive.
+    rt: Weak<Runtime>,
+    inner: RwLock<Inner>,
+    /// Bumped on every successful `load`/`unload`; cheap staleness probe
+    /// for callers that cache derived state.
+    epoch: AtomicU64,
+    /// Router caches to invalidate on load/unload (one per engine shard).
+    routers: Mutex<Vec<Weak<RouterCache>>>,
+}
+
+impl Registry {
+    /// A registry whose initial resident set is `store`'s model list
+    /// (every model starts at version 1 with no holders).
+    pub fn new(store: Arc<ArtifactStore>, rt: &Arc<Runtime>) -> Registry {
+        let entries = store
+            .models
+            .keys()
+            .map(|k| {
+                (
+                    k.clone(),
+                    Entry { version: 1, refs: 0, draining: false, snapshot: None },
+                )
+            })
+            .collect();
+        Registry {
+            root: store.root.clone(),
+            rt: Arc::downgrade(rt),
+            inner: RwLock::new(Inner { current: store, entries }),
+            epoch: AtomicU64::new(1),
+            routers: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// The current immutable store view (resident, non-draining models).
+    pub fn current(&self) -> Arc<ArtifactStore> {
+        read_ok(&self.inner).current.clone()
+    }
+
+    /// Whether `model` is resident and accepting new work.
+    pub fn has_model(&self, model: &str) -> bool {
+        read_ok(&self.inner).current.models.contains_key(model)
+    }
+
+    /// Current version of `model` (draining models keep reporting the
+    /// version their in-flight work was admitted under).
+    pub fn model_version(&self, model: &str) -> Option<u64> {
+        read_ok(&self.inner).entries.get(model).map(|e| e.version)
+    }
+
+    /// Registry change counter: bumped by every successful
+    /// `load`/`unload`.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// The store view `model` resolves against right now: the current
+    /// view while resident, the pre-unload snapshot while draining,
+    /// `None` once fully evicted.
+    pub fn store_for(&self, model: &str) -> Option<Arc<ArtifactStore>> {
+        let inner = read_ok(&self.inner);
+        if inner.current.models.contains_key(model) {
+            return Some(inner.current.clone());
+        }
+        inner.entries.get(model).and_then(|e| e.snapshot.clone())
+    }
+
+    /// Charge one in-flight reference against `model`. Returns false —
+    /// and charges nothing — when the model is not resident (unknown or
+    /// draining), so the caller rejects with `unknown_model`.
+    pub fn retain(&self, model: &str) -> bool {
+        let mut inner = write_ok(&self.inner);
+        match inner.entries.get_mut(model) {
+            Some(e) if !e.draining => {
+                e.refs += 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Release one in-flight reference against `model`. When the last
+    /// reference of a draining model releases, its lane executables are
+    /// evicted and the registry forgets it.
+    pub fn release(&self, model: &str) {
+        let evict: Option<ModelInfo> = {
+            let mut inner = write_ok(&self.inner);
+            match inner.entries.get_mut(model) {
+                Some(e) => {
+                    e.refs = e.refs.saturating_sub(1);
+                    if e.refs == 0 && e.draining {
+                        let info = e
+                            .snapshot
+                            .as_ref()
+                            .and_then(|s| s.models.get(model).cloned());
+                        inner.entries.remove(model);
+                        info
+                    } else {
+                        None
+                    }
+                }
+                None => None,
+            }
+        };
+        if let Some(info) = evict {
+            self.evict_lanes(&info);
+            self.invalidate_routers(model);
+        }
+    }
+
+    /// In-flight references currently held against `model`.
+    pub fn refs(&self, model: &str) -> u64 {
+        read_ok(&self.inner).entries.get(model).map(|e| e.refs).unwrap_or(0)
+    }
+
+    /// Attach a shard's router cache for invalidation on load/unload.
+    /// Held weakly: a dropped shard drops out of the list on the next
+    /// invalidation sweep.
+    pub fn attach_router(&self, router: &Arc<RouterCache>) {
+        lock_ok(&self.routers).push(Arc::downgrade(router));
+    }
+
+    /// Hot-load (or reload) `model` from the store root's manifest.
+    /// Returns the model's new version. The model's compiled lane
+    /// executables are evicted so the next batch recompiles the bytes
+    /// this load read — lazily, per worker and per lane.
+    pub fn load(&self, model: &str) -> Result<u64> {
+        let disk = ArtifactStore::load(&self.root)?;
+        if !disk.models.contains_key(model) {
+            bail!("model '{model}' not present in {}/manifest.json", self.root.display());
+        }
+        let ArtifactStore { root, models: disk_models, solvers, fd, scheduler_check } = disk;
+        let (version, old_info, new_info) = {
+            let mut inner = write_ok(&self.inner);
+            let old_info = inner.current.models.get(model).cloned();
+            // next view = resident set ∪ {model}, metadata refreshed from
+            // disk where present (a resident model missing from the
+            // rewritten manifest keeps serving its old metadata)
+            let mut models = BTreeMap::new();
+            for (k, v) in disk_models {
+                if k == model || inner.current.models.contains_key(&k) {
+                    models.insert(k, v);
+                }
+            }
+            for (k, v) in inner.current.models.iter() {
+                if !models.contains_key(k) {
+                    models.insert(k.clone(), v.clone());
+                }
+            }
+            let new_info = models.get(model).cloned();
+            inner.current =
+                Arc::new(ArtifactStore { root, models, solvers, fd, scheduler_check });
+            let version = match inner.entries.get_mut(model) {
+                Some(e) => {
+                    // reload, or revival of a draining model: the new
+                    // version is current again; in-flight holders of the
+                    // old version drain against the refreshed view
+                    e.draining = false;
+                    e.snapshot = None;
+                    e.version += 1;
+                    e.version
+                }
+                None => {
+                    inner.entries.insert(
+                        model.to_string(),
+                        Entry { version: 1, refs: 0, draining: false, snapshot: None },
+                    );
+                    1
+                }
+            };
+            (version, old_info, new_info)
+        };
+        if let Some(info) = old_info {
+            self.evict_lanes(&info);
+        }
+        if let Some(info) = new_info {
+            self.evict_lanes(&info);
+        }
+        self.invalidate_routers(model);
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        Ok(version)
+    }
+
+    /// Hot-unload `model`: removed from the current view immediately
+    /// (new submits reject with `unknown_model`). Returns `true` when
+    /// in-flight work holds references — the model drains and is evicted
+    /// by the last [`Registry::release`] — and `false` when it was idle
+    /// and evicted synchronously.
+    pub fn unload(&self, model: &str) -> Result<bool> {
+        let (draining, evict) = {
+            let mut inner = write_ok(&self.inner);
+            let Some(info) = inner.current.models.get(model).cloned() else {
+                bail!("unknown model '{model}'");
+            };
+            let old = inner.current.clone();
+            let mut next = (*old).clone();
+            next.models.remove(model);
+            inner.current = Arc::new(next);
+            match inner.entries.get_mut(model) {
+                Some(e) if e.refs > 0 => {
+                    e.draining = true;
+                    e.snapshot = Some(old);
+                    (true, None)
+                }
+                _ => {
+                    inner.entries.remove(model);
+                    (false, Some(info))
+                }
+            }
+        };
+        if let Some(info) = evict {
+            self.evict_lanes(&info);
+        }
+        self.invalidate_routers(model);
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        Ok(draining)
+    }
+
+    /// `list_models` op payload: every resident and draining model with
+    /// its version, lifecycle state, in-flight refs, shape metadata, and
+    /// the distilled-solver artifacts (with `SolverMeta` provenance)
+    /// available for it.
+    pub fn list_json(&self) -> Json {
+        let inner = read_ok(&self.inner);
+        let solvers_for = |store: &ArtifactStore, model: &str| {
+            Json::Arr(
+                store
+                    .solvers
+                    .values()
+                    .filter(|s| s.meta.model == model)
+                    .map(|s| {
+                        Json::obj(vec![
+                            ("name", Json::Str(s.name.clone())),
+                            ("kind", Json::Str(s.meta.kind.clone())),
+                            ("guidance", Json::Num(s.meta.guidance)),
+                            ("nfe", Json::Num(s.solver.nfe() as f64)),
+                            ("val_psnr", Json::Num(s.meta.val_psnr)),
+                        ])
+                    })
+                    .collect(),
+            )
+        };
+        let mut out = Vec::new();
+        for (name, e) in inner.entries.iter() {
+            let (state, store) = if e.draining {
+                ("draining", e.snapshot.as_deref())
+            } else {
+                ("ready", Some(inner.current.as_ref()))
+            };
+            let Some(store) = store else { continue };
+            let Some(info) = store.models.get(name) else { continue };
+            out.push(Json::obj(vec![
+                ("model", Json::Str(name.clone())),
+                ("version", Json::Num(e.version as f64)),
+                ("state", Json::Str(state.to_string())),
+                ("inflight", Json::Num(e.refs as f64)),
+                ("dim", Json::Num(info.dim as f64)),
+                ("num_classes", Json::Num(info.num_classes as f64)),
+                ("buckets", Json::Num(info.buckets.len() as f64)),
+                ("solvers", solvers_for(store, name)),
+            ]));
+        }
+        Json::Arr(out)
+    }
+
+    /// Drop `info`'s compiled executables from every device lane (lazy
+    /// per-lane recompile on next use).
+    fn evict_lanes(&self, info: &ModelInfo) {
+        if let Some(rt) = self.rt.upgrade() {
+            for b in &info.buckets {
+                rt.evict_path(&b.path);
+            }
+        }
+    }
+
+    /// Invalidate `model`'s routes in every live attached router cache.
+    fn invalidate_routers(&self, model: &str) {
+        let mut routers = lock_ok(&self.routers);
+        routers.retain(|w| {
+            if let Some(r) = w.upgrade() {
+                r.invalidate_model(model);
+                true
+            } else {
+                false
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bench_util::{stub_store, write_stub_artifacts, StubModel};
+
+    fn stub(name: &'static str) -> StubModel<'static> {
+        StubModel {
+            name,
+            dim: 4,
+            num_classes: 2,
+            forwards_per_eval: 1,
+            k: -0.5,
+            c: 0.1,
+            label_scale: 0.0,
+            cost: 1,
+            buckets: &[4],
+        }
+    }
+
+    #[test]
+    fn load_unload_lifecycle_and_versions() {
+        let (store, dir) = stub_store("registry-lifecycle", &[stub("m1")]).unwrap();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let reg = Registry::new(store, &rt);
+        assert!(reg.has_model("m1"));
+        assert_eq!(reg.model_version("m1"), Some(1));
+        assert_eq!(reg.model_version("m2"), None);
+
+        // write a second model into the same store dir, then hot-load it
+        write_stub_artifacts(&dir, &[stub("m1"), stub("m2")]).unwrap();
+        assert_eq!(reg.load("m2").unwrap(), 1);
+        assert!(reg.has_model("m2"));
+        assert!(reg.current().models.contains_key("m1"), "m1 survives the load");
+
+        // reload bumps the version
+        assert_eq!(reg.load("m2").unwrap(), 2);
+        let e0 = reg.epoch();
+
+        // idle unload evicts synchronously
+        assert!(!reg.unload("m2").unwrap(), "no holders: not draining");
+        assert!(!reg.has_model("m2"));
+        assert!(reg.store_for("m2").is_none());
+        assert!(reg.epoch() > e0);
+        assert!(reg.unload("m2").is_err(), "double unload is unknown");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn refcounted_unload_drains_before_eviction() {
+        let (store, dir) = stub_store("registry-drain", &[stub("m1")]).unwrap();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let reg = Registry::new(store, &rt);
+        assert!(reg.retain("m1"));
+        assert!(reg.retain("m1"));
+        assert_eq!(reg.refs("m1"), 2);
+
+        assert!(reg.unload("m1").unwrap(), "holders present: draining");
+        assert!(!reg.has_model("m1"), "invisible to new submits");
+        assert!(!reg.retain("m1"), "draining models accept no new work");
+        let snap = reg.store_for("m1").expect("in-flight work still resolves");
+        assert!(snap.models.contains_key("m1"));
+
+        reg.release("m1");
+        assert!(reg.store_for("m1").is_some(), "one ref still held");
+        reg.release("m1");
+        assert!(reg.store_for("m1").is_none(), "last release evicts");
+        assert_eq!(reg.model_version("m1"), None);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_evicts_lane_cache_and_router_routes() {
+        let (store, dir) = stub_store("registry-evict", &[stub("m1")]).unwrap();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        // warm a lane cache entry for m1's only bucket
+        let info = store.models.get("m1").unwrap().clone();
+        let b = &info.buckets[0];
+        rt.load_on(0, &b.path, b.batch, info.dim).unwrap();
+        assert_eq!(rt.evict_path(&b.path), 1, "warm entry present");
+        rt.load_on(0, &b.path, b.batch, info.dim).unwrap(); // re-warm
+
+        let reg = Registry::new(store, &rt);
+        let router = Arc::new(RouterCache::new());
+        reg.attach_router(&router);
+        let spec = crate::coordinator::request::SolverSpec::GroundTruth;
+        let key = crate::coordinator::batcher::GroupKey {
+            model: "m1".to_string(),
+            solver_key: spec.group_key(),
+            guidance_bits: 0,
+        };
+        router
+            .resolve(&reg.current(), &key, crate::solver::scheduler::Scheduler::FmOt, &spec)
+            .unwrap();
+        assert_eq!(router.len(), 1);
+
+        reg.load("m1").unwrap();
+        assert_eq!(router.len(), 0, "load invalidates the model's routes");
+        assert_eq!(rt.evict_path(&b.path), 0, "load already evicted the lane cache");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -124,6 +124,10 @@ pub enum ErrCode {
     /// failures; the service refuses new work for it until a half-open
     /// probe succeeds. Retry after `retry_after_ms`.
     Unavailable,
+    /// The request's tenant exceeded its weighted-fair queue quota while
+    /// other tenants still have headroom. Retry after `retry_after_ms`
+    /// (or shed load on the tenant's side).
+    QuotaExceeded,
 }
 
 impl ErrCode {
@@ -139,6 +143,7 @@ impl ErrCode {
             ErrCode::DeadlineExceeded => "deadline_exceeded",
             ErrCode::Internal => "internal",
             ErrCode::Unavailable => "unavailable",
+            ErrCode::QuotaExceeded => "quota_exceeded",
         }
     }
 }
@@ -178,6 +183,15 @@ impl ServeError {
     pub fn unavailable(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
         ServeError {
             code: ErrCode::Unavailable,
+            msg: msg.into(),
+            retry_after_ms: Some(retry_after_ms),
+        }
+    }
+
+    /// A weighted-fair tenancy reject carrying a backoff hint.
+    pub fn quota_exceeded(msg: impl Into<String>, retry_after_ms: u64) -> ServeError {
+        ServeError {
+            code: ErrCode::QuotaExceeded,
             msg: msg.into(),
             retry_after_ms: Some(retry_after_ms),
         }
@@ -235,6 +249,10 @@ pub struct SampleRequest {
     pub deadline: Option<Instant>,
     /// Dispatch priority (see [`Priority`]).
     pub priority: Priority,
+    /// Tenant the request is billed to under weighted-fair scheduling.
+    /// `None` means the anonymous default tenant (weight 1, shared
+    /// queue-bound quota). See DESIGN.md §14.
+    pub tenant: Option<String>,
     /// When set, the executing worker streams [`Progress`] events here
     /// (one per velocity-field evaluation of the batch).
     pub progress: Option<mpsc::Sender<Progress>>,

@@ -133,8 +133,9 @@ pub fn describe_auto(store: &ArtifactStore, model: &str, guidance: f64, nfe: usi
 
 /// Memoized routing: one resolution (and one dense-`b` clone) per
 /// distinct `(model, guidance, solver key)`, shared across workers.
-/// The artifact store is immutable for the engine's lifetime, so cached
-/// entries never go stale.
+/// Artifact-store views are immutable, so cached entries only go stale
+/// when the registry swaps the view — `load`/`unload` call
+/// [`RouterCache::invalidate_model`] to drop the affected routes.
 ///
 /// Keyed directly by the batcher's `GroupKey`, so the per-batch lookup
 /// borrows the batch's key instead of assembling an owned
@@ -181,6 +182,13 @@ impl RouterCache {
             map.entry(key.clone()).or_insert_with(|| routed.clone());
         }
         Ok(routed)
+    }
+
+    /// Drop every cached route for `model`. Called by the registry on
+    /// hot `load`/`unload` so routes never outlive the artifact version
+    /// they were resolved against.
+    pub fn invalidate_model(&self, model: &str) {
+        lock_ok(&self.map).retain(|k, _| k.model != model);
     }
 
     /// Number of memoized routes.

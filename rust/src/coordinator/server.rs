@@ -36,6 +36,7 @@ use super::engine::Engine;
 use super::request::{
     ErrCode, Priority, Progress, SampleRequest, SampleResponse, ServeError, SolverSpec,
 };
+use super::shard::Fleet;
 use crate::runtime::ArtifactStore;
 use crate::util::json::Json;
 
@@ -112,15 +113,24 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) and
-    /// spawn the accept + reactor threads. Returns immediately; use
-    /// [`Server::local_addr`] for the bound address.
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral test port) over
+    /// a single engine, wrapped as a one-shard [`Fleet`]. The `store`
+    /// parameter is accepted for API continuity but the serving surface
+    /// reads the engine's registry, so hot `load`/`unload` are visible.
     pub fn bind(
         addr: &str,
         cfg: ServerConfig,
         engine: Arc<Engine>,
         store: Arc<ArtifactStore>,
     ) -> Result<Server> {
+        let _ = store; // superseded by the engine's registry view
+        Server::bind_fleet(addr, cfg, Fleet::from_engine(engine))
+    }
+
+    /// Bind `addr` and spawn the accept + reactor threads over a fleet
+    /// of engine shards. Returns immediately; use [`Server::local_addr`]
+    /// for the bound address.
+    pub fn bind_fleet(addr: &str, cfg: ServerConfig, fleet: Arc<Fleet>) -> Result<Server> {
         let listener = TcpListener::bind(addr)?;
         listener.set_nonblocking(true)?;
         let local = listener.local_addr()?;
@@ -135,14 +145,13 @@ impl Server {
             // here instead of queueing sockets without bound.
             let (tx, rx) = mpsc::sync_channel::<TcpStream>(256);
             conn_txs.push(tx);
-            let engine = engine.clone();
-            let store = store.clone();
+            let fleet = fleet.clone();
             let stop_r = stop.clone();
             spawn_server_thread(
                 &mut threads,
                 &stop,
                 format!("bns-reactor-{ri}"),
-                move || reactor_loop(rx, engine, store, stop_r, cfg),
+                move || reactor_loop(rx, fleet, stop_r, cfg),
             )?;
         }
         {
@@ -217,7 +226,15 @@ pub fn serve_with(
     engine: Arc<Engine>,
     store: Arc<ArtifactStore>,
 ) -> Result<()> {
-    let server = Server::bind(addr, cfg, engine, store)?;
+    let _ = store; // superseded by the engine's registry view
+    serve_fleet(addr, cfg, Fleet::from_engine(engine))
+}
+
+/// Serve `addr` over a multi-shard fleet until the process is killed
+/// (the `bns-serve serve --shards N` entrypoint): binds a [`Server`]
+/// and parks the calling thread.
+pub fn serve_fleet(addr: &str, cfg: ServerConfig, fleet: Arc<Fleet>) -> Result<()> {
+    let server = Server::bind_fleet(addr, cfg, fleet)?;
     eprintln!(
         "[bns-serve] listening on {} ({} reactor(s))",
         server.local_addr(),
@@ -334,11 +351,13 @@ impl Conn {
 
 fn reactor_loop(
     rx: mpsc::Receiver<TcpStream>,
-    engine: Arc<Engine>,
-    store: Arc<ArtifactStore>,
+    fleet: Arc<Fleet>,
     stop: Arc<AtomicBool>,
     cfg: ServerConfig,
 ) {
+    // the connections gauge lives on shard 0 (the front shard); a fleet
+    // always has at least one shard
+    let Some(engine) = fleet.engine(0).cloned() else { return };
     let mut conns: Vec<Conn> = Vec::new();
     let mut scratch = [0u8; 8192];
     while !stop.load(Ordering::Relaxed) {
@@ -349,7 +368,7 @@ fn reactor_loop(
             active = true;
         }
         for c in conns.iter_mut() {
-            active |= pump_read(c, &mut scratch, &engine, &store, &cfg);
+            active |= pump_read(c, &mut scratch, &fleet, &cfg);
             // progress BEFORE replies: events a worker sent ahead of the
             // terminal reply are flushed while the request is still
             // pending, so a streamed request always frames
@@ -388,8 +407,7 @@ fn reactor_loop(
 fn pump_read(
     c: &mut Conn,
     scratch: &mut [u8],
-    engine: &Engine,
-    store: &ArtifactStore,
+    fleet: &Fleet,
     cfg: &ServerConfig,
 ) -> bool {
     /// Max bytes ingested per connection per reactor tick.
@@ -408,14 +426,14 @@ fn pump_read(
                 // (`printf '%s' '{"op":"stats"}' | nc -N` style clients)
                 if !c.rbuf.is_empty() && !c.discarding {
                     let line = std::mem::take(&mut c.rbuf);
-                    handle_request_line(c, &line, engine, store, cfg);
+                    handle_request_line(c, &line, fleet, cfg);
                 }
                 break;
             }
             Ok(n) => {
                 any = true;
                 budget -= n;
-                ingest_chunk(c, &scratch[..n], engine, store, cfg);
+                ingest_chunk(c, &scratch[..n], fleet, cfg);
             }
             Err(e) if e.kind() == ErrorKind::WouldBlock => break,
             Err(e) if e.kind() == ErrorKind::Interrupted => continue,
@@ -432,13 +450,7 @@ fn pump_read(
 /// place, the trailing fragment accumulates in `rbuf` (bounded by
 /// `max_line_bytes` — overflow rejects the line and discards the rest
 /// of it, §PROTOCOL `line_too_long`).
-fn ingest_chunk(
-    c: &mut Conn,
-    mut bytes: &[u8],
-    engine: &Engine,
-    store: &ArtifactStore,
-    cfg: &ServerConfig,
-) {
+fn ingest_chunk(c: &mut Conn, mut bytes: &[u8], fleet: &Fleet, cfg: &ServerConfig) {
     while let Some(pos) = bytes.iter().position(|&b| b == b'\n') {
         let head = &bytes[..pos];
         if c.discarding {
@@ -449,7 +461,7 @@ fn ingest_chunk(
         } else {
             c.rbuf.extend_from_slice(head);
             let line = std::mem::take(&mut c.rbuf);
-            handle_request_line(c, &line, engine, store, cfg);
+            handle_request_line(c, &line, fleet, cfg);
             c.rbuf = line; // reuse the allocation
             c.rbuf.clear();
         }
@@ -477,13 +489,7 @@ fn reject_oversize(c: &mut Conn, cfg: &ServerConfig) {
     c.enqueue(&frame);
 }
 
-fn handle_request_line(
-    c: &mut Conn,
-    line: &[u8],
-    engine: &Engine,
-    store: &ArtifactStore,
-    cfg: &ServerConfig,
-) {
+fn handle_request_line(c: &mut Conn, line: &[u8], fleet: &Fleet, cfg: &ServerConfig) {
     let Ok(text) = std::str::from_utf8(line) else {
         let e = ServeError::new(ErrCode::ParseError, "request line is not valid UTF-8");
         let frame = error_frame(&e, None, None);
@@ -507,9 +513,12 @@ fn handle_request_line(
         t => Some(t.clone()),
     };
     match req.get("op").as_str() {
-        Some("sample") => handle_sample(c, &req, tag, engine, store, cfg),
+        Some("sample") => handle_sample(c, &req, tag, fleet, cfg),
         Some("stats") => {
-            let mut o = engine.metrics.snapshot_json();
+            // shard-0 counters at the top level (identical to the
+            // pre-fleet payload on a 1-shard deployment), plus the
+            // per-shard gauge array and the fleet-wide tenant ledger
+            let mut o = fleet.stats_json();
             if let Json::Obj(map) = &mut o {
                 map.insert("ok".into(), Json::Bool(true));
                 if let Some(t) = tag {
@@ -520,8 +529,9 @@ fn handle_request_line(
         }
         Some("health") => {
             // fault-domain view: lane generations/respawns + breaker
-            // states (PROTOCOL.md §health); `stats` stays the counters op
-            let mut o = engine.health_json();
+            // states + per-shard drain/queue gauges (PROTOCOL.md
+            // §health); `stats` stays the counters op
+            let mut o = fleet.health_json();
             if let Json::Obj(map) = &mut o {
                 map.insert("ok".into(), Json::Bool(true));
                 if let Some(t) = tag {
@@ -530,12 +540,80 @@ fn handle_request_line(
             }
             c.enqueue(&o);
         }
+        Some("load") => {
+            // hot (re)load a model from the artifact root's manifest;
+            // lane executables recompile lazily (PROTOCOL.md §load)
+            let Some(model) = req.get("model").as_str() else {
+                let e = ServeError::new(ErrCode::BadRequest, "missing 'model'");
+                let frame = error_frame(&e, None, tag.as_ref());
+                c.enqueue(&frame);
+                return;
+            };
+            let frame = match fleet.registry().load(model) {
+                Ok(version) => ok_frame(
+                    vec![
+                        ("ok", Json::Bool(true)),
+                        ("model", Json::Str(model.to_string())),
+                        ("version", Json::Num(version as f64)),
+                    ],
+                    tag,
+                ),
+                Err(e) => {
+                    let msg = format!("{e:#}");
+                    let code = if msg.contains("not present") {
+                        ErrCode::UnknownModel
+                    } else {
+                        ErrCode::Internal
+                    };
+                    error_frame(&ServeError::new(code, msg), None, tag.as_ref())
+                }
+            };
+            c.enqueue(&frame);
+        }
+        Some("unload") => {
+            // remove a model from the resident set; in-flight work
+            // drains behind a refcount before artifacts evict
+            let Some(model) = req.get("model").as_str() else {
+                let e = ServeError::new(ErrCode::BadRequest, "missing 'model'");
+                let frame = error_frame(&e, None, tag.as_ref());
+                c.enqueue(&frame);
+                return;
+            };
+            let frame = match fleet.registry().unload(model) {
+                Ok(draining) => ok_frame(
+                    vec![
+                        ("ok", Json::Bool(true)),
+                        ("model", Json::Str(model.to_string())),
+                        ("draining", Json::Bool(draining)),
+                    ],
+                    tag,
+                ),
+                Err(e) => error_frame(
+                    &ServeError::new(ErrCode::UnknownModel, format!("{e:#}")),
+                    None,
+                    tag.as_ref(),
+                ),
+            };
+            c.enqueue(&frame);
+        }
+        Some("list_models") => {
+            // rich registry view: version, lifecycle state, in-flight
+            // refs, and solver provenance per model (PROTOCOL.md)
+            let frame = ok_frame(
+                vec![
+                    ("ok", Json::Bool(true)),
+                    ("models", fleet.registry().list_json()),
+                ],
+                tag,
+            );
+            c.enqueue(&frame);
+        }
         Some("trace") => {
             // request timelines from the tracing plane (PROTOCOL.md
             // §trace): by engine id, by last-N active ids, or by this
             // connection's recent tags. Unknown ids return an empty
             // timeline (the ring may have overwritten it) — not an error.
-            let tracer = engine.tracer.as_ref();
+            let tracer = fleet.tracer().as_ref();
             let mut traces: Vec<Json> = Vec::new();
             if let Some(id) = req.get("id").as_usize() {
                 traces.push(tracer.trace_json(id as u64));
@@ -576,6 +654,8 @@ fn handle_request_line(
             c.enqueue(&frame);
         }
         Some("models") => {
+            // current registry view, so hot load/unload are visible here
+            let store = fleet.registry().current();
             let frame = ok_frame(
                 vec![
                     ("ok", Json::Bool(true)),
@@ -589,6 +669,7 @@ fn handle_request_line(
             c.enqueue(&frame);
         }
         Some("solvers") => {
+            let store = fleet.registry().current();
             let frame = ok_frame(
                 vec![
                     ("ok", Json::Bool(true)),
@@ -624,14 +705,7 @@ fn handle_request_line(
     }
 }
 
-fn handle_sample(
-    c: &mut Conn,
-    req: &Json,
-    tag: Option<Json>,
-    engine: &Engine,
-    store: &ArtifactStore,
-    cfg: &ServerConfig,
-) {
+fn handle_sample(c: &mut Conn, req: &Json, tag: Option<Json>, fleet: &Fleet, cfg: &ServerConfig) {
     let bad = |c: &mut Conn, code: ErrCode, msg: String| {
         let frame = error_frame(&ServeError::new(code, msg), None, tag.as_ref());
         c.enqueue(&frame);
@@ -640,8 +714,12 @@ fn handle_sample(
         Some(m) => m.to_string(),
         None => return bad(c, ErrCode::BadRequest, "missing 'model'".into()),
     };
-    if !store.models.contains_key(&model) {
-        engine.metrics.record_reject();
+    if !fleet.registry().has_model(&model) {
+        // pre-reject before parsing the rest: cheaper, and the reject is
+        // attributed to the model's home shard
+        if let Some(e) = fleet.shard_for(&model).and_then(|s| fleet.engine(s)) {
+            e.metrics.record_reject();
+        }
         return bad(c, ErrCode::UnknownModel, format!("unknown model '{model}'"));
     }
     let labels: Vec<i32> = match req.get("labels").as_f64_vec() {
@@ -674,6 +752,11 @@ fn handle_sample(
             }
         },
     };
+    let tenant = match req.get("tenant") {
+        Json::Null => None,
+        Json::Str(s) => Some(s.clone()),
+        _ => return bad(c, ErrCode::BadRequest, "'tenant' must be a string".into()),
+    };
     let stream = req.get("stream").as_bool().unwrap_or(false);
     let guidance = req.get("guidance").as_f64().unwrap_or(0.0) as f32;
     let nfe = req.get("nfe").as_usize().unwrap_or(8);
@@ -691,10 +774,11 @@ fn handle_sample(
         enqueued_at: Instant::now(),
         deadline: deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
         priority,
+        tenant,
         progress: stream.then(|| c.prog_tx.clone()),
         reply: c.reply_tx.clone(),
     };
-    match engine.try_submit(sreq) {
+    match fleet.try_submit(sreq) {
         Ok(id) => {
             if let Some(t) = tag.as_ref() {
                 if c.recent.len() >= RECENT_TAGS {

@@ -1,0 +1,370 @@
+//! Shard router: one front door fanning requests across N in-process
+//! engine shards.
+//!
+//! Each shard is a full [`Engine`] (own dispatch thread, worker pool,
+//! batcher, admission budget) — what they share is the fleet plumbing:
+//! one model [`Registry`], one trace ring, and one request-id counter
+//! ([`EngineShared`]), so models load/unload fleet-wide and ids stay
+//! unique across shards. Requests route by **consistent hashing** on the
+//! model id (FNV-1a over the name, 64 virtual nodes per shard): a given
+//! model always lands on the same shard — so its compiled executables,
+//! router cache entries, and batch groups concentrate there — and
+//! draining one shard moves only ~K/N models (asserted by
+//! `coordinator_props`).
+//!
+//! Draining a shard ([`Fleet::drain`]) removes it from routing without
+//! touching its in-flight work: admitted batches settle normally, new
+//! arrivals re-route to the surviving shards. That is the rolling-reload
+//! primitive — drain, hot `load` the new artifacts, undrain.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::engine::{Engine, EngineConfig, EngineShared};
+use super::metrics::TenantCounters;
+use super::registry::Registry;
+use super::request::{SampleRequest, ServeError};
+use crate::obs::{TraceRecorder, TraceStage};
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::util::json::Json;
+
+/// Virtual nodes per shard on the hash ring: enough that draining one
+/// shard spreads its models roughly evenly over the survivors.
+const VNODES: u32 = 64;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64-bit — tiny, allocation-free, and stable across runs (the
+/// ring layout must not depend on process-randomized hashing).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Fleet sizing knobs.
+#[derive(Clone)]
+pub struct FleetConfig {
+    /// Engine shards behind the front door (min 1).
+    pub shards: usize,
+    /// Per-shard engine configuration (each shard gets its own batcher,
+    /// workers, and admission budget from this).
+    pub engine: EngineConfig,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig { shards: 1, engine: EngineConfig::default() }
+    }
+}
+
+/// N engine shards behind one consistent-hash front door, sharing a
+/// model registry, trace ring, and id space.
+pub struct Fleet {
+    shards: Vec<Arc<Engine>>,
+    /// Per-shard drain flags (indexed like `shards`); drained shards are
+    /// skipped by routing but keep settling their in-flight work.
+    draining: Vec<AtomicBool>,
+    /// Consistent-hash ring: `(vnode hash, shard index)` sorted by hash.
+    ring: Vec<(u64, u32)>,
+    registry: Arc<Registry>,
+    tracer: Arc<TraceRecorder>,
+}
+
+fn build_ring(shards: usize) -> Vec<(u64, u32)> {
+    let mut ring = Vec::with_capacity(shards * VNODES as usize);
+    for s in 0..shards as u32 {
+        for v in 0..VNODES {
+            let mut buf = [0u8; 8];
+            buf[..4].copy_from_slice(&s.to_le_bytes());
+            buf[4..].copy_from_slice(&v.to_le_bytes());
+            ring.push((fnv1a(&buf), s));
+        }
+    }
+    ring.sort_unstable();
+    ring
+}
+
+impl Fleet {
+    /// Start `cfg.shards` engines over one shared registry (seeded from
+    /// `store`), trace ring, and id counter.
+    pub fn start(
+        store: Arc<ArtifactStore>,
+        rt: Arc<Runtime>,
+        cfg: FleetConfig,
+    ) -> Result<Arc<Fleet>> {
+        let n = cfg.shards.max(1);
+        let registry = Arc::new(Registry::new(store, &rt));
+        let tracer = Arc::new(TraceRecorder::new(cfg.engine.trace_capacity));
+        let ids = Arc::new(std::sync::atomic::AtomicU64::new(1));
+        let mut shards = Vec::with_capacity(n);
+        for _ in 0..n {
+            let shared = EngineShared {
+                registry: registry.clone(),
+                tracer: tracer.clone(),
+                ids: ids.clone(),
+            };
+            shards.push(Arc::new(Engine::start_shared(shared, rt.clone(), cfg.engine.clone())?));
+        }
+        let draining = (0..n).map(|_| AtomicBool::new(false)).collect();
+        Ok(Arc::new(Fleet { shards, draining, ring: build_ring(n), registry, tracer }))
+    }
+
+    /// Wrap an already-running single engine as a one-shard fleet — the
+    /// compatibility path for `Server::bind` and in-process embedders.
+    pub fn from_engine(engine: Arc<Engine>) -> Arc<Fleet> {
+        let registry = engine.registry().clone();
+        let tracer = engine.tracer.clone();
+        Arc::new(Fleet {
+            shards: vec![engine],
+            draining: vec![AtomicBool::new(false)],
+            ring: build_ring(1),
+            registry,
+            tracer,
+        })
+    }
+
+    /// Consistent-hash routing: the shard owning `model`, skipping
+    /// drained shards clockwise. `None` only when every shard is
+    /// draining. Allocation-free — this runs once per request on the
+    /// front-door hot path (see `analysis/hot_paths.toml`).
+    pub fn shard_for(&self, model: &str) -> Option<usize> {
+        let n = self.ring.len();
+        if n == 0 {
+            return None;
+        }
+        let h = fnv1a(model.as_bytes());
+        let start = match self.ring.binary_search_by(|probe| probe.0.cmp(&h)) {
+            Ok(i) => i,
+            Err(i) => i % n,
+        };
+        let mut i = start;
+        loop {
+            let s = self.ring[i].1 as usize;
+            if !self.draining[s].load(Ordering::Relaxed) {
+                return Some(s);
+            }
+            i = (i + 1) % n;
+            if i == start {
+                return None;
+            }
+        }
+    }
+
+    /// Route and submit: picks the model's shard, delegates to its
+    /// engine's admission control, and records a `shard_route` trace
+    /// span on success. Rejects with `unavailable` when every shard is
+    /// draining.
+    pub fn try_submit(&self, req: SampleRequest) -> Result<u64, (SampleRequest, ServeError)> {
+        let Some(s) = self.shard_for(&req.model) else {
+            return Err((
+                req,
+                ServeError::unavailable("every shard is draining", 1000),
+            ));
+        };
+        let id = self.shards[s].try_submit(req)?;
+        self.tracer.record(id, TraceStage::ShardRoute, s as u64, 0);
+        Ok(id)
+    }
+
+    /// Mark shard `i` drained (`on = true`) or routable again. Routing
+    /// skips drained shards; their in-flight work settles normally.
+    /// Out-of-range indices are ignored.
+    pub fn drain(&self, i: usize, on: bool) {
+        if let Some(d) = self.draining.get(i) {
+            d.store(on, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether shard `i` is currently drained from routing.
+    pub fn is_draining(&self, i: usize) -> bool {
+        self.draining.get(i).map(|d| d.load(Ordering::Relaxed)).unwrap_or(false)
+    }
+
+    /// Number of engine shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard `i`'s engine (panics never: callers index via
+    /// `num_shards`; out-of-range returns `None`).
+    pub fn engine(&self, i: usize) -> Option<&Arc<Engine>> {
+        self.shards.get(i)
+    }
+
+    /// The fleet-shared model registry (`load`/`unload`/`list_models`).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// The fleet-shared trace ring (`trace` op, `--trace-out`).
+    pub fn tracer(&self) -> &Arc<TraceRecorder> {
+        &self.tracer
+    }
+
+    /// Per-shard gauges for the `stats`/`health` ops: typed reads of
+    /// each shard's metrics atomics, no locks beyond the tenant ledger.
+    pub fn shards_json(&self) -> Json {
+        Json::Arr(
+            self.shards
+                .iter()
+                .enumerate()
+                .map(|(i, e)| {
+                    let m = &e.metrics;
+                    Json::obj(vec![
+                        ("shard", Json::Num(i as f64)),
+                        ("draining", Json::Bool(self.is_draining(i))),
+                        ("requests", Json::Num(m.requests.load(Ordering::Relaxed) as f64)),
+                        ("samples", Json::Num(m.samples.load(Ordering::Relaxed) as f64)),
+                        ("rejected", Json::Num(m.rejected.load(Ordering::Relaxed) as f64)),
+                        (
+                            "rejected_quota",
+                            Json::Num(m.rejected_quota.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "inflight_rows",
+                            Json::Num(m.inflight_rows.load(Ordering::Relaxed) as f64),
+                        ),
+                        (
+                            "work_queue_depth",
+                            Json::Num(m.queue_depth.load(Ordering::Relaxed) as f64),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    /// The `stats` op payload: shard-0's counter snapshot at the top
+    /// level (bit-compatible with the pre-fleet payload on one shard),
+    /// the per-shard gauge array under `shards`, and the fleet-wide
+    /// tenant ledger replacing shard-0's local `tenants`.
+    pub fn stats_json(&self) -> Json {
+        let mut o = match self.shards.first() {
+            Some(e) => e.metrics.snapshot_json(),
+            None => Json::obj(Vec::new()),
+        };
+        if let Json::Obj(map) = &mut o {
+            map.insert("shards".into(), self.shards_json());
+            map.insert("tenants".into(), self.tenants_json());
+        }
+        o
+    }
+
+    /// The `health` op payload: shard-0's fault-domain view (lanes +
+    /// breakers — the runtime is shared, so its lanes are fleet-wide)
+    /// plus the per-shard gauge array under `shards`.
+    pub fn health_json(&self) -> Json {
+        let mut o = match self.shards.first() {
+            Some(e) => e.health_json(),
+            None => Json::obj(Vec::new()),
+        };
+        if let Json::Obj(map) = &mut o {
+            map.insert("shards".into(), self.shards_json());
+        }
+        o
+    }
+
+    /// Fleet-wide per-tenant counters: each shard's tenant ledger summed
+    /// by tenant name (the `tenants` key of the `stats` op).
+    pub fn tenants_json(&self) -> Json {
+        let mut agg: BTreeMap<String, TenantCounters> = BTreeMap::new();
+        for e in &self.shards {
+            for (name, c) in e.metrics.tenants_snapshot() {
+                let t = agg.entry(name).or_default();
+                t.requests += c.requests;
+                t.samples += c.samples;
+                t.rejected_quota += c.rejected_quota;
+            }
+        }
+        Json::Obj(
+            agg.into_iter()
+                .map(|(name, c)| {
+                    (
+                        name,
+                        Json::obj(vec![
+                            ("requests", Json::Num(c.requests as f64)),
+                            ("samples", Json::Num(c.samples as f64)),
+                            ("rejected_quota", Json::Num(c.rejected_quota as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_is_deterministic_and_covers_all_shards() {
+        let a = build_ring(4);
+        let b = build_ring(4);
+        assert_eq!(a, b, "ring layout must be stable across builds");
+        assert_eq!(a.len(), 4 * VNODES as usize);
+        for s in 0..4u32 {
+            assert!(a.iter().any(|&(_, x)| x == s), "shard {s} owns no vnodes");
+        }
+    }
+
+    #[test]
+    fn shard_for_is_stable_and_drain_reroutes() {
+        let (store, dir) = crate::bench_util::stub_store(
+            "shardfor",
+            &[crate::bench_util::StubModel {
+                name: "m",
+                dim: 4,
+                num_classes: 2,
+                forwards_per_eval: 1,
+                k: -0.5,
+                c: 0.1,
+                label_scale: 0.0,
+                cost: 1,
+                buckets: &[4],
+            }],
+        )
+        .unwrap();
+        let rt = Arc::new(Runtime::cpu().unwrap());
+        let fleet = Fleet::start(
+            store,
+            rt,
+            FleetConfig { shards: 3, engine: EngineConfig { workers: 1, ..Default::default() } },
+        )
+        .unwrap();
+
+        // stable: the same model always routes to the same shard
+        let names: Vec<String> = (0..64).map(|i| format!("model-{i}")).collect();
+        let homes: Vec<usize> =
+            names.iter().map(|n| fleet.shard_for(n).unwrap()).collect();
+        for (n, &h) in names.iter().zip(&homes) {
+            assert_eq!(fleet.shard_for(n), Some(h));
+        }
+        // drained shards are skipped; untouched models keep their home
+        let victim = homes[0];
+        fleet.drain(victim, true);
+        for (n, &h) in names.iter().zip(&homes) {
+            let now = fleet.shard_for(n).unwrap();
+            assert_ne!(now, victim, "drained shard must not be routed to");
+            if h != victim {
+                assert_eq!(now, h, "models off the drained shard must not move");
+            }
+        }
+        // all shards draining -> no route
+        for i in 0..fleet.num_shards() {
+            fleet.drain(i, true);
+        }
+        assert_eq!(fleet.shard_for("m"), None);
+        fleet.drain(victim, false);
+        assert_eq!(fleet.shard_for(&names[0]), Some(victim), "undrain restores the home");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -7,7 +7,8 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
-use bns_serve::coordinator::{server, Engine, EngineConfig, SolverSpec};
+use bns_serve::coordinator::batcher::{TenantPolicy, TenantSpec};
+use bns_serve::coordinator::{server, Engine, EngineConfig, Fleet, FleetConfig, SolverSpec};
 use bns_serve::runtime::{ArtifactStore, Runtime, RuntimeConfig};
 use bns_serve::util::stats::psnr;
 
@@ -43,6 +44,15 @@ USAGE:
                      for bns_mlp_field models; 0 = auto (min(cores, 8)),
                      1 = inline. Pure throughput knob: outputs are
                      bit-identical for any value — DESIGN.md §13)
+                    [--shards N]  (in-process engine shards behind one
+                     front door; model ids route by consistent hashing;
+                     default 1 — DESIGN.md §14)
+                    [--tenants SPEC]  (weighted-fair tenancy policy:
+                     comma-separated name:weight[:quota_rows] entries;
+                     the reserved name 'default' sets the policy for
+                     tenants without an explicit entry; quota_rows bounds
+                     a tenant's parked backlog, 0 = reject at the queue
+                     bound; e.g. --tenants \"default:1:64,batch:4:256\")
   bns-serve sample  --model NAME [--solver auto|euler|midpoint|dpmpp2m|<artifact>]
                     [--nfe N] [--guidance W] [--labels 0,1,2] [--seed S]
                     [--out samples.json] [--artifacts DIR]
@@ -96,6 +106,43 @@ fn main() {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// Parse a `--tenants` spec: comma-separated `name:weight[:quota_rows]`
+/// entries. The reserved name `default` sets the policy applied to tenants
+/// without an explicit entry (and to untenanted requests).
+fn parse_tenant_policy(spec: &str) -> Result<TenantPolicy> {
+    let mut policy = TenantPolicy::default();
+    for entry in spec.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        anyhow::ensure!(!name.is_empty(), "--tenants entry '{entry}' has an empty name");
+        let weight: u32 = parts
+            .next()
+            .with_context(|| format!("--tenants entry '{entry}' missing a weight"))?
+            .trim()
+            .parse()
+            .with_context(|| format!("--tenants entry '{entry}': bad weight"))?;
+        let quota_rows: usize = match parts.next() {
+            Some(q) => q
+                .trim()
+                .parse()
+                .with_context(|| format!("--tenants entry '{entry}': bad quota_rows"))?,
+            None => 0,
+        };
+        anyhow::ensure!(
+            parts.next().is_none(),
+            "--tenants entry '{entry}' has trailing fields (want name:weight[:quota_rows])"
+        );
+        anyhow::ensure!(weight >= 1, "--tenants entry '{entry}': weight must be >= 1");
+        if name == "default" {
+            policy.default_weight = weight;
+            policy.default_quota_rows = quota_rows;
+        } else {
+            policy.tenants.insert(name.to_string(), TenantSpec { weight, quota_rows });
+        }
+    }
+    Ok(policy)
 }
 
 fn load_store(flags: &HashMap<String, String>) -> Result<Arc<ArtifactStore>> {
@@ -166,6 +213,12 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
             let trace_out = flags.get("trace-out").map(std::path::PathBuf::from);
             let mlp_pool_threads: usize =
                 flags.get("mlp-pool-threads").map(|s| s.parse()).transpose()?.unwrap_or(0);
+            let shards: usize = flags.get("shards").map(|s| s.parse()).transpose()?.unwrap_or(1);
+            let tenants = match flags.get("tenants") {
+                Some(spec) => parse_tenant_policy(spec)?,
+                None => TenantPolicy::default(),
+            };
+            anyhow::ensure!(shards >= 1, "--shards must be >= 1 (got 0)");
             anyhow::ensure!(reactors >= 1, "--reactors must be >= 1 (got 0)");
             anyhow::ensure!(max_inflight >= 1, "--max-inflight must be >= 1 (got 0)");
             anyhow::ensure!(
@@ -179,30 +232,31 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                 ..Default::default()
             })?);
             eprintln!(
-                "[bns-serve] {} device lane(s) on '{}', {workers} worker(s), \
-                 {reactors} reactor(s), max-inflight {max_inflight} rows, \
-                 default deadline {}",
+                "[bns-serve] {} device lane(s) on '{}', {shards} shard(s) x \
+                 {workers} worker(s), {reactors} reactor(s), max-inflight \
+                 {max_inflight} rows/shard, default deadline {}",
                 rt.num_lanes(),
                 rt.platform(),
                 deadline_ms.map(|ms| format!("{ms}ms")).unwrap_or("none".into()),
             );
-            let engine = Arc::new(Engine::start(
-                store.clone(),
-                rt,
-                EngineConfig {
-                    workers,
-                    max_inflight_rows: max_inflight,
-                    breaker_threshold,
-                    breaker_cooldown_ms,
-                    trace_capacity,
+            let engine_cfg = EngineConfig {
+                workers,
+                max_inflight_rows: max_inflight,
+                breaker_threshold,
+                breaker_cooldown_ms,
+                trace_capacity,
+                batcher: bns_serve::coordinator::batcher::BatcherConfig {
+                    tenants,
                     ..Default::default()
                 },
-            )?);
+                ..Default::default()
+            };
+            let fleet = Fleet::start(store.clone(), rt, FleetConfig { shards, engine: engine_cfg })?;
             if let Some(path) = trace_out {
                 // detached exporter: snapshot the ring every 2 s and
                 // atomically replace the file, so observers always read a
                 // complete JSON-lines document (util::fsio::write_atomic)
-                let tracer = engine.tracer.clone();
+                let tracer = fleet.tracer().clone();
                 std::thread::Builder::new()
                     .name("bns-trace-export".into())
                     .spawn(move || loop {
@@ -221,7 +275,7 @@ fn run(cmd: &str, flags: &HashMap<String, String>) -> Result<()> {
                 default_deadline_ms: deadline_ms,
                 ..Default::default()
             };
-            server::serve_with(&addr, cfg, engine, store)?;
+            server::serve_fleet(&addr, cfg, fleet)?;
             Ok(())
         }
         "sample" => {

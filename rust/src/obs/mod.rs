@@ -97,6 +97,12 @@ pub enum TraceStage {
     Emit = 14,
     /// Terminal structured error reply after exhausting retries.
     Reject = 15,
+    /// Front door routed the request to an engine shard on the
+    /// consistent-hash ring (`a` = shard index).
+    ShardRoute = 16,
+    /// Request parked in its tenant's weighted-fair queue behind a full
+    /// grouped stage (`a` = rows).
+    TenantPark = 17,
 }
 
 impl TraceStage {
@@ -119,6 +125,8 @@ impl TraceStage {
             TraceStage::FaultInjected => "fault_injected",
             TraceStage::Emit => "emit",
             TraceStage::Reject => "reject",
+            TraceStage::ShardRoute => "shard_route",
+            TraceStage::TenantPark => "tenant_park",
         }
     }
 
@@ -140,6 +148,8 @@ impl TraceStage {
             13 => TraceStage::FaultInjected,
             14 => TraceStage::Emit,
             15 => TraceStage::Reject,
+            16 => TraceStage::ShardRoute,
+            17 => TraceStage::TenantPark,
             _ => return None,
         })
     }

@@ -48,6 +48,7 @@ pub struct SolverArtifact {
 }
 
 /// FD-synth feature extractor + reference statistics.
+#[derive(Clone)]
 pub struct FdSynth {
     pub dim: usize,
     pub hidden: usize,
@@ -110,7 +111,10 @@ impl FdSynth {
     }
 }
 
-/// The loaded artifact store.
+/// The loaded artifact store. `Clone` is a deep copy — the registry
+/// (coordinator/registry.rs) clones the current store to build the next
+/// immutable view on hot load/unload.
+#[derive(Clone)]
 pub struct ArtifactStore {
     pub root: PathBuf,
     pub models: BTreeMap<String, ModelInfo>,

@@ -391,6 +391,24 @@ impl Runtime {
         rx.recv().unwrap_or_else(|_| "unknown".into())
     }
 
+    /// Drop `path` from every lane's compiled-executable cache,
+    /// returning how many lane entries were evicted. The next
+    /// `load_on`/rebind of the path recompiles from the bytes on disk —
+    /// the model registry calls this on hot `load`/`unload` so a
+    /// re-registered artifact never serves a stale executable (the same
+    /// cache-invalidation path a lane respawn drains). Handles already
+    /// bound keep their executable id until they rebind, so in-flight
+    /// work is unaffected.
+    pub fn evict_path(&self, path: &Path) -> usize {
+        let mut evicted = 0;
+        for l in &self.lanes {
+            if lock_ok(&l.state).cache.remove(path).is_some() {
+                evicted += 1;
+            }
+        }
+        evicted
+    }
+
     /// Load + compile an artifact on `lane` (cached per lane by path).
     pub fn load_on(&self, lane: usize, path: &Path, batch: usize, dim: usize) -> Result<ExeHandle> {
         let l = self

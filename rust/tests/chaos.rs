@@ -345,6 +345,7 @@ fn chaos_soak_settles_every_request_exactly_once() {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: Priority::Normal,
+            tenant: None,
             progress: None,
             reply: reply.clone(),
         };

@@ -27,6 +27,7 @@ fn mk_req(rng: &mut Pcg32, models: &[&str], id: u64) -> SampleRequest {
         enqueued_at: Instant::now(),
         deadline: None,
         priority: bns_serve::coordinator::request::Priority::Normal,
+        tenant: None,
         progress: None,
         reply: tx,
     }
@@ -44,6 +45,7 @@ fn batcher_invariants_random_workloads() {
             max_rows,
             max_wait: Duration::from_millis(0), // everything due immediately
             max_queued_rows: 10_000,
+            ..Default::default()
         });
         let models = ["m1", "m2"];
         let n = 30 + rng.below(50);
@@ -87,6 +89,7 @@ fn batcher_backpressure_returns_request() {
         max_rows: 1000,
         max_wait: Duration::from_secs(3600),
         max_queued_rows: 10,
+        ..Default::default()
     });
     let mut accepted = 0;
     let mut rejected = 0;
@@ -94,10 +97,11 @@ fn batcher_backpressure_returns_request() {
         let req = mk_req(&mut rng, &["m"], id);
         let rows = req.labels.len();
         match b.push(req) {
-            Ok(()) => accepted += rows,
+            Ok(_) => accepted += rows,
             Err(r) => {
                 rejected += 1;
-                assert_eq!(r.id, id); // intact
+                assert_eq!(r.req.id, id); // intact
+                assert_eq!(r.kind, bns_serve::coordinator::batcher::RejectKind::Capacity);
             }
         }
         assert!(b.queued_rows() <= 10);
@@ -115,6 +119,7 @@ fn batcher_deadline_tracking() {
         max_rows: 1000,
         max_wait: Duration::from_millis(10),
         max_queued_rows: 1000,
+        ..Default::default()
     });
     assert!(b.next_deadline().is_none());
     b.push(mk_req(&mut rng, &["m"], 0)).unwrap();
@@ -242,6 +247,7 @@ fn fault_schedules_settle_every_admitted_request_exactly_once() {
                 enqueued_at: Instant::now(),
                 deadline: None,
                 priority: bns_serve::coordinator::request::Priority::Normal,
+                tenant: None,
                 progress: None,
                 reply: reply.clone(),
             };
@@ -274,6 +280,217 @@ fn fault_schedules_settle_every_admitted_request_exactly_once() {
         // after a full drain + join, no late duplicate can ever surface
         assert!(rx.try_recv().is_err(), "seed {seed}: reply after shutdown");
         std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+/// Consistent-hash stability: draining one shard of N moves only the
+/// keys homed on it (~K/N of the keyspace); every other key keeps its
+/// home, and undraining restores the original assignment exactly.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn consistent_hash_moves_only_drained_shards_keys() {
+    use std::sync::Arc;
+    use bns_serve::bench_util::{stub_store, StubModel};
+    use bns_serve::coordinator::{EngineConfig, Fleet, FleetConfig};
+    use bns_serve::runtime::Runtime;
+
+    let (store, dir) = stub_store(
+        "props-ring",
+        &[StubModel {
+            name: "m",
+            dim: 3,
+            num_classes: 4,
+            forwards_per_eval: 1,
+            k: -0.5,
+            c: 0.2,
+            label_scale: 0.1,
+            cost: 1,
+            buckets: &[4],
+        }],
+    )
+    .unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let fleet = Fleet::start(
+        store,
+        rt,
+        FleetConfig {
+            shards: 4,
+            engine: EngineConfig { workers: 1, ..Default::default() },
+        },
+    )
+    .unwrap();
+
+    let keys: Vec<String> = (0..200).map(|i| format!("model-{i}")).collect();
+    let homes: Vec<usize> =
+        keys.iter().map(|k| fleet.shard_for(k).expect("no shard draining")).collect();
+    let victim = homes[0];
+    let on_victim = homes.iter().filter(|&&h| h == victim).count();
+    // ~K/N of 200 keys live on the victim (N=4 => ~50); the 64-vnode
+    // ring keeps the spread near-uniform, so bound it loosely
+    assert!(
+        (10..=120).contains(&on_victim),
+        "lopsided ring: {on_victim}/200 keys on shard {victim}"
+    );
+
+    fleet.drain(victim, true);
+    let mut moved = 0usize;
+    for (k, &before) in keys.iter().zip(&homes) {
+        let after = fleet.shard_for(k).expect("three shards still live");
+        assert_ne!(after, victim, "drained shard still receiving {k}");
+        if before == victim {
+            moved += 1;
+        } else {
+            assert_eq!(after, before, "key {k} moved off a live shard");
+        }
+    }
+    assert_eq!(moved, on_victim, "exactly the drained shard's keys move");
+
+    fleet.drain(victim, false);
+    let restored: Vec<usize> = keys.iter().map(|k| fleet.shard_for(k).unwrap()).collect();
+    assert_eq!(restored, homes, "undrain must restore the original homes");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Exactly-once settlement across shards: every request the fleet
+/// front door admits gets precisely one reply, ids never collide across
+/// shards, and every shard's in-flight gauge drains to zero.
+#[cfg(not(feature = "pjrt"))]
+#[test]
+fn fleet_settles_every_admitted_request_exactly_once() {
+    use std::collections::HashSet;
+    use std::sync::Arc;
+    use bns_serve::bench_util::{stub_store, StubModel};
+    use bns_serve::coordinator::{EngineConfig, Fleet, FleetConfig};
+    use bns_serve::runtime::Runtime;
+
+    let mk = |name: &'static str| StubModel {
+        name,
+        dim: 3,
+        num_classes: 4,
+        forwards_per_eval: 1,
+        k: -0.5,
+        c: 0.2,
+        label_scale: 0.1,
+        cost: 1,
+        buckets: &[1, 4, 8],
+    };
+    let (store, dir) = stub_store("props-fleet", &[mk("fa"), mk("fb"), mk("fc")]).unwrap();
+    let rt = Arc::new(Runtime::cpu().unwrap());
+    let fleet = Fleet::start(
+        store,
+        rt,
+        FleetConfig {
+            shards: 2,
+            engine: EngineConfig { workers: 1, ..Default::default() },
+        },
+    )
+    .unwrap();
+
+    let (reply, rx) = mpsc::channel();
+    let mut rng = Pcg32::seeded(0x5eed);
+    let mut admitted: HashSet<u64> = HashSet::new();
+    let models = ["fa", "fb", "fc"];
+    for i in 0..60u64 {
+        let req = SampleRequest {
+            id: 0,
+            model: models[(i % 3) as usize].to_string(),
+            labels: vec![(i % 4) as i32; 1 + rng.below(5)],
+            guidance: 0.0,
+            solver: SolverSpec::Baseline { name: "euler".into(), nfe: 2 + rng.below(4) },
+            seed: rng.next_u64(),
+            x0: None,
+            enqueued_at: Instant::now(),
+            deadline: None,
+            priority: bns_serve::coordinator::request::Priority::Normal,
+            tenant: None,
+            progress: None,
+            reply: reply.clone(),
+        };
+        match fleet.try_submit(req) {
+            Ok(id) => assert!(admitted.insert(id), "id {id} reused across shards"),
+            Err((_req, e)) => panic!("unexpected reject: {e:?}"),
+        }
+    }
+    drop(reply);
+
+    let mut seen: HashSet<u64> = HashSet::new();
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while seen.len() < admitted.len() {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        assert!(remaining > Duration::ZERO, "timed out with {}/{}", seen.len(), admitted.len());
+        let resp = rx.recv_timeout(remaining).expect("reply channel died early");
+        assert!(resp.result.is_ok(), "clean fleet run must not error: {:?}", resp.result.err());
+        assert!(admitted.contains(&resp.id), "unadmitted id {}", resp.id);
+        assert!(seen.insert(resp.id), "duplicate reply for {}", resp.id);
+    }
+    for s in 0..fleet.num_shards() {
+        let engine = fleet.engine(s).unwrap();
+        assert_eq!(
+            engine.metrics.inflight_rows.load(std::sync::atomic::Ordering::SeqCst),
+            0,
+            "shard {s} in-flight gauge must drain"
+        );
+    }
+    assert!(rx.try_recv().is_err(), "late duplicate after full drain");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// Weighted-fair convergence: over a seeded 500-request mix with random
+/// row counts, parked tenants receive grouped-stage rows in proportion
+/// to their configured weights.
+#[test]
+fn weighted_fair_shares_converge_over_seeded_mix() {
+    use bns_serve::coordinator::batcher::{TenantPolicy, TenantSpec};
+
+    let mut policy = TenantPolicy::default();
+    for (name, weight) in [("a", 1u32), ("b", 2), ("c", 4)] {
+        policy.tenants.insert(name.to_string(), TenantSpec { weight, quota_rows: 4096 });
+    }
+    let mut b = Batcher::new(BatcherConfig {
+        max_rows: 8,
+        max_wait: Duration::from_millis(1),
+        max_queued_rows: 8,
+        tenants: policy,
+    });
+    // hold the grouped stage so all 500 tenant requests park
+    let mut filler = mk_req(&mut Pcg32::seeded(0), &["filler"], 0);
+    filler.labels = vec![0; 8];
+    b.push(filler).unwrap();
+    let mut rng = Pcg32::seeded(0xfa1);
+    for id in 1..=500u64 {
+        let tenant = ["a", "b", "c"][(id % 3) as usize];
+        let mut r = mk_req(&mut rng, &[tenant], id); // model = tenant name
+        r.labels = vec![0; 1 + rng.below(4)];
+        r.tenant = Some(tenant.to_string());
+        b.push(r).unwrap();
+    }
+    // drain; attribute the first 300 promoted rows by tenant (batch keys
+    // carry the model, which is the tenant name here)
+    let mut counts: std::collections::BTreeMap<String, usize> = Default::default();
+    let mut total = 0usize;
+    let mut tick = 1u64;
+    while total < 300 {
+        assert!(tick < 10_000, "drain did not converge: {counts:?}");
+        let due = b.poll(Instant::now() + Duration::from_secs(tick));
+        tick += 1;
+        for batch in &due {
+            if batch.key.model == "filler" {
+                continue;
+            }
+            if total < 300 {
+                *counts.entry(batch.key.model.clone()).or_default() += batch.rows;
+                total += batch.rows;
+            }
+        }
+    }
+    let sum: usize = counts.values().sum();
+    for (name, weight) in [("a", 1.0f64), ("b", 2.0), ("c", 4.0)] {
+        let share = counts.get(name).copied().unwrap_or(0) as f64 / sum as f64;
+        let want = weight / 7.0;
+        assert!(
+            (share - want).abs() < 0.12,
+            "tenant {name}: share {share:.3}, want {want:.3} ({counts:?})"
+        );
     }
 }
 

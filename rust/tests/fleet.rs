@@ -1,0 +1,450 @@
+//! Fleet-plane conformance suite (PROTOCOL.md, DESIGN.md §14): hot
+//! `load`/`unload`/`list_models` round trips over real TCP, the
+//! `quota_exceeded` error shape, per-shard/per-tenant observability, and
+//! a multi-model churn test asserting zero lost or duplicated replies
+//! with per-model bit-identity against a quiescent engine.
+
+#![cfg(not(feature = "pjrt"))]
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bns_serve::bench_util::{stub_store, write_stub_artifacts, StubModel};
+use bns_serve::coordinator::batcher::{BatcherConfig, TenantPolicy, TenantSpec};
+use bns_serve::coordinator::{
+    Engine, EngineConfig, Fleet, FleetConfig, Server, ServerConfig, SolverSpec,
+};
+use bns_serve::runtime::{ArtifactStore, Runtime};
+use bns_serve::util::json::Json;
+
+fn stub(name: &'static str, k: f64, c: f64) -> StubModel<'static> {
+    StubModel {
+        name,
+        dim: 6,
+        num_classes: 4,
+        forwards_per_eval: 1,
+        k,
+        c,
+        label_scale: 0.02,
+        cost: 1,
+        buckets: &[2, 8],
+    }
+}
+
+/// A fleet serving plane on an ephemeral port; dropped in reverse order.
+struct FleetPlane {
+    server: Option<Server>,
+    fleet: Option<Arc<Fleet>>,
+    dir: std::path::PathBuf,
+}
+
+impl FleetPlane {
+    fn up(tag: &str, models: &[StubModel], shards: usize, engine: EngineConfig) -> FleetPlane {
+        let (store, dir) = stub_store(&format!("fleet-{tag}"), models).expect("stub store");
+        let rt = Arc::new(Runtime::cpu().expect("runtime"));
+        let fleet =
+            Fleet::start(store, rt, FleetConfig { shards, engine }).expect("fleet start");
+        let server = Server::bind_fleet("127.0.0.1:0", ServerConfig::default(), fleet.clone())
+            .expect("bind server");
+        FleetPlane { server: Some(server), fleet: Some(fleet), dir }
+    }
+
+    fn client(&self) -> Client {
+        Client::connect(self.server.as_ref().unwrap().local_addr())
+    }
+}
+
+impl Drop for FleetPlane {
+    fn drop(&mut self) {
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+        self.fleet.take(); // engine drops join their threads
+        std::fs::remove_dir_all(&self.dir).ok();
+    }
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(addr: std::net::SocketAddr) -> Client {
+        let w = TcpStream::connect(addr).expect("connect");
+        w.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let r = BufReader::new(w.try_clone().unwrap());
+        Client { w, r }
+    }
+
+    fn send(&mut self, line: &str) {
+        self.w.write_all(line.as_bytes()).unwrap();
+        self.w.write_all(b"\n").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        let n = self.r.read_line(&mut line).expect("read response");
+        assert!(n > 0, "server closed the connection unexpectedly");
+        Json::parse(&line).unwrap_or_else(|e| panic!("bad response json: {e} in {line:?}"))
+    }
+
+    fn roundtrip(&mut self, line: &str) -> Json {
+        self.send(line);
+        self.recv()
+    }
+}
+
+fn assert_err(j: &Json, code: &str) {
+    assert_eq!(j.get("ok").as_bool(), Some(false), "expected error, got {j:?}");
+    assert_eq!(j.get("err").as_str(), Some(code), "wrong code in {j:?}");
+}
+
+fn model_entry<'a>(list: &'a Json, name: &str) -> Option<&'a Json> {
+    list.get("models")
+        .as_arr()
+        .expect("models array")
+        .iter()
+        .find(|m| m.get("model").as_str() == Some(name))
+}
+
+/// `load`/`unload`/`list_models` over real TCP: a model present on disk
+/// but not resident becomes servable after `load`, reload bumps the
+/// version, idle `unload` evicts immediately, and every failure mode is
+/// a structured error.
+#[test]
+fn load_unload_list_models_roundtrip() {
+    let plane = FleetPlane::up(
+        "registry",
+        &[stub("fa", -0.5, 0.1)],
+        1,
+        EngineConfig { workers: 1, ..Default::default() },
+    );
+    // put a second model on disk without telling the running registry
+    write_stub_artifacts(&plane.dir, &[stub("fa", -0.5, 0.1), stub("fb", -0.7, 0.3)])
+        .expect("rewrite manifest");
+    let mut c = plane.client();
+
+    let list = c.roundtrip("{\"op\":\"list_models\",\"tag\":\"l0\"}");
+    assert_eq!(list.get("ok").as_bool(), Some(true), "{list:?}");
+    assert_eq!(list.get("tag").as_str(), Some("l0"));
+    let fa = model_entry(&list, "fa").expect("fa registered at startup");
+    assert_eq!(fa.get("state").as_str(), Some("ready"));
+    assert_eq!(fa.get("version").as_f64(), Some(1.0));
+    assert_eq!(fa.get("inflight").as_f64(), Some(0.0));
+    assert!(model_entry(&list, "fb").is_none(), "fb must not be resident yet");
+
+    // not resident => unknown_model on the sample path
+    assert_err(
+        &c.roundtrip("{\"op\":\"sample\",\"model\":\"fb\",\"labels\":[0,1]}"),
+        "unknown_model",
+    );
+
+    // hot load makes it servable
+    let loaded = c.roundtrip("{\"op\":\"load\",\"model\":\"fb\",\"tag\":\"ld\"}");
+    assert_eq!(loaded.get("ok").as_bool(), Some(true), "{loaded:?}");
+    assert_eq!(loaded.get("model").as_str(), Some("fb"));
+    assert_eq!(loaded.get("version").as_f64(), Some(1.0));
+    assert_eq!(loaded.get("tag").as_str(), Some("ld"));
+    let ok = c.roundtrip(
+        "{\"op\":\"sample\",\"model\":\"fb\",\"labels\":[0,1],\"solver\":\"euler\",\"nfe\":4}",
+    );
+    assert_eq!(ok.get("ok").as_bool(), Some(true), "{ok:?}");
+
+    // reload bumps the version; the model keeps serving
+    let reloaded = c.roundtrip("{\"op\":\"load\",\"model\":\"fb\"}");
+    assert_eq!(reloaded.get("version").as_f64(), Some(2.0), "{reloaded:?}");
+    let ok = c.roundtrip(
+        "{\"op\":\"sample\",\"model\":\"fb\",\"labels\":[2,3],\"solver\":\"euler\",\"nfe\":4}",
+    );
+    assert_eq!(ok.get("ok").as_bool(), Some(true), "recompile after reload: {ok:?}");
+
+    // idle unload evicts immediately (nothing in flight to drain)
+    let unloaded = c.roundtrip("{\"op\":\"unload\",\"model\":\"fb\",\"tag\":\"ul\"}");
+    assert_eq!(unloaded.get("ok").as_bool(), Some(true), "{unloaded:?}");
+    assert_eq!(unloaded.get("draining").as_bool(), Some(false));
+    assert_eq!(unloaded.get("tag").as_str(), Some("ul"));
+    assert_err(
+        &c.roundtrip("{\"op\":\"sample\",\"model\":\"fb\",\"labels\":[0]}"),
+        "unknown_model",
+    );
+    let list = c.roundtrip("{\"op\":\"list_models\"}");
+    assert!(model_entry(&list, "fb").is_none(), "unloaded model still listed: {list:?}");
+    assert!(model_entry(&list, "fa").is_some(), "unload must not touch other models");
+
+    // structured failures: double unload, ghost load, missing field
+    assert_err(&c.roundtrip("{\"op\":\"unload\",\"model\":\"fb\"}"), "unknown_model");
+    assert_err(&c.roundtrip("{\"op\":\"load\",\"model\":\"ghost\"}"), "unknown_model");
+    assert_err(&c.roundtrip("{\"op\":\"load\"}"), "bad_request");
+    assert_err(&c.roundtrip("{\"op\":\"unload\"}"), "bad_request");
+}
+
+/// A tenant pushed past its parking quota gets the documented
+/// `{"ok":false,"err":"quota_exceeded","retry_after_ms":...}` line, and
+/// the reject lands on the per-tenant stats ledger.
+#[test]
+fn quota_exceeded_shape_and_tenant_ledger() {
+    let mut tenants = TenantPolicy::default();
+    tenants.tenants.insert("acme".to_string(), TenantSpec { weight: 1, quota_rows: 2 });
+    let plane = FleetPlane::up(
+        "quota",
+        &[stub("fa", -0.5, 0.1)],
+        1,
+        EngineConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_millis(300),
+                max_queued_rows: 2,
+                tenants,
+            },
+            ..Default::default()
+        },
+    );
+    let mut c = plane.client();
+    // filler occupies the whole grouped stage for max_wait
+    c.send("{\"op\":\"sample\",\"model\":\"fa\",\"labels\":[0,1],\"nfe\":4,\"tag\":\"fill\"}");
+    std::thread::sleep(Duration::from_millis(50));
+    // parks (within acme's 2-row quota)
+    c.send(
+        "{\"op\":\"sample\",\"model\":\"fa\",\"labels\":[0,1],\"tenant\":\"acme\",\
+         \"nfe\":4,\"tag\":\"park\"}",
+    );
+    std::thread::sleep(Duration::from_millis(50));
+    // exceeds the quota -> structured reject
+    c.send(
+        "{\"op\":\"sample\",\"model\":\"fa\",\"labels\":[0,1],\"tenant\":\"acme\",\
+         \"nfe\":4,\"tag\":\"over\"}",
+    );
+    let mut by_tag = std::collections::BTreeMap::new();
+    for _ in 0..3 {
+        let j = c.recv();
+        let tag = j.get("tag").as_str().expect("tag echoed").to_string();
+        assert!(by_tag.insert(tag, j).is_none(), "duplicate reply");
+    }
+    let over = &by_tag["over"];
+    assert_err(over, "quota_exceeded");
+    assert!(
+        over.get("error").as_str().map_or(false, |m| m.contains("acme")),
+        "message should name the tenant: {over:?}"
+    );
+    assert!(
+        over.get("retry_after_ms").as_f64().unwrap_or(0.0) >= 1.0,
+        "quota reject must carry a backoff hint: {over:?}"
+    );
+    assert_eq!(by_tag["fill"].get("ok").as_bool(), Some(true));
+    assert_eq!(by_tag["park"].get("ok").as_bool(), Some(true));
+
+    let stats = c.roundtrip("{\"op\":\"stats\"}");
+    let acme = stats.get("tenants").get("acme");
+    assert!(
+        acme.get("requests").as_f64().unwrap_or(0.0) >= 2.0,
+        "tenant request counter missing: {stats:?}"
+    );
+    assert!(
+        acme.get("rejected_quota").as_f64().unwrap_or(0.0) >= 1.0,
+        "tenant quota-reject counter missing: {stats:?}"
+    );
+}
+
+/// Per-shard and per-tenant gauges on `stats`/`health`, and the
+/// `shard_route` stage on the trace timeline.
+#[test]
+fn fleet_observability_surfaces() {
+    let plane = FleetPlane::up(
+        "obs",
+        &[stub("fa", -0.5, 0.1), stub("fb", -0.7, 0.3)],
+        2,
+        EngineConfig { workers: 1, ..Default::default() },
+    );
+    let mut c = plane.client();
+    let ok = c.roundtrip(
+        "{\"op\":\"sample\",\"model\":\"fa\",\"labels\":[0,1],\"tenant\":\"t1\",\
+         \"solver\":\"euler\",\"nfe\":4,\"tag\":\"v\"}",
+    );
+    assert_eq!(ok.get("ok").as_bool(), Some(true), "{ok:?}");
+
+    let stats = c.roundtrip("{\"op\":\"stats\"}");
+    let shards = stats.get("shards").as_arr().expect("per-shard gauge array");
+    assert_eq!(shards.len(), 2, "{stats:?}");
+    for (i, s) in shards.iter().enumerate() {
+        assert_eq!(s.get("shard").as_usize(), Some(i));
+        assert_eq!(s.get("draining").as_bool(), Some(false));
+    }
+    let total: f64 =
+        shards.iter().map(|s| s.get("requests").as_f64().unwrap_or(0.0)).sum();
+    assert!(total >= 1.0, "the sample must land on some shard: {stats:?}");
+    assert!(
+        stats.get("tenants").get("t1").get("samples").as_f64().unwrap_or(0.0) >= 2.0,
+        "tenant row counter missing: {stats:?}"
+    );
+
+    let health = c.roundtrip("{\"op\":\"health\"}");
+    assert_eq!(health.get("ok").as_bool(), Some(true));
+    assert_eq!(health.get("shards").as_arr().map(|a| a.len()), Some(2), "{health:?}");
+
+    let t = c.roundtrip("{\"op\":\"trace\",\"tag\":\"v\"}");
+    let traces = t.get("traces").as_arr().expect("traces");
+    assert_eq!(traces.len(), 1, "{t:?}");
+    let stages: Vec<&str> = traces[0]
+        .get("events")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("stage").as_str())
+        .collect();
+    assert!(stages.contains(&"shard_route"), "no shard_route stage in {stages:?}");
+}
+
+/// Multi-model churn: three models served across two shards while two of
+/// them are repeatedly unloaded and reloaded. Every request gets exactly
+/// one reply (none lost, none duplicated), rejects during the unload
+/// window are structured `unknown_model` lines, and every successful
+/// sample is bit-identical to a quiescent single-engine run.
+#[test]
+fn multi_model_churn_zero_lost_and_bit_identical() {
+    let models = [stub("fa", -0.5, 0.1), stub("fb", -0.7, 0.3), stub("fc", -0.3, 0.6)];
+    let plane = FleetPlane::up(
+        "churn",
+        &models,
+        2,
+        EngineConfig { workers: 2, ..Default::default() },
+    );
+
+    // quiescent reference: a fresh engine over the same artifacts
+    let ref_store =
+        Arc::new(ArtifactStore::load(&plane.dir).expect("reload store for reference"));
+    let ref_rt = Arc::new(Runtime::cpu().unwrap());
+    let ref_engine = Engine::start(
+        ref_store,
+        ref_rt,
+        EngineConfig { workers: 1, ..Default::default() },
+    )
+    .unwrap();
+    let mut want: std::collections::BTreeMap<(String, u64), Vec<u32>> = Default::default();
+    for m in ["fa", "fb", "fc"] {
+        for seed in 1..=4u64 {
+            let out = ref_engine
+                .sample_blocking(
+                    m,
+                    vec![0, 1],
+                    0.0,
+                    SolverSpec::Baseline { name: "euler".into(), nfe: 6 },
+                    seed,
+                )
+                .unwrap();
+            want.insert(
+                (m.to_string(), seed),
+                out.samples.iter().map(|v| v.to_bits()).collect(),
+            );
+        }
+    }
+    ref_engine.shutdown();
+
+    let addr = plane.server.as_ref().unwrap().local_addr();
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut workers = Vec::new();
+    for (wi, model) in ["fa", "fb", "fc"].iter().enumerate() {
+        let want = want.clone();
+        let model = model.to_string();
+        workers.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let mut okc = 0usize;
+            let mut rejects = 0usize;
+            for i in 0..40u64 {
+                let seed = 1 + (i % 4);
+                let tag = format!("w{wi}-{i}");
+                let j = c.roundtrip(&format!(
+                    "{{\"op\":\"sample\",\"model\":\"{model}\",\"labels\":[0,1],\
+                     \"solver\":\"euler\",\"nfe\":6,\"seed\":{seed},\"tag\":\"{tag}\"}}"
+                ));
+                assert_eq!(
+                    j.get("tag").as_str(),
+                    Some(tag.as_str()),
+                    "reply cross-wired: {j:?}"
+                );
+                if j.get("ok").as_bool() == Some(true) {
+                    let got: Vec<u32> = j
+                        .get("samples")
+                        .as_f32_vec()
+                        .expect("samples")
+                        .iter()
+                        .map(|v| v.to_bits())
+                        .collect();
+                    assert_eq!(
+                        &got,
+                        &want[&(model.clone(), seed)],
+                        "{model} seed {seed}: churned sample not bit-identical"
+                    );
+                    okc += 1;
+                } else {
+                    // the only legitimate churn-window failure
+                    assert_eq!(j.get("err").as_str(), Some("unknown_model"), "{j:?}");
+                    rejects += 1;
+                }
+            }
+            (okc, rejects)
+        }));
+    }
+
+    // churn driver: cycle fb and fc through unload -> reload while fa
+    // stays resident throughout
+    let churn = {
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let mut cycles = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                for m in ["fb", "fc"] {
+                    let ul = c.roundtrip(&format!("{{\"op\":\"unload\",\"model\":\"{m}\"}}"));
+                    assert_eq!(ul.get("ok").as_bool(), Some(true), "{ul:?}");
+                    std::thread::sleep(Duration::from_millis(5));
+                    let ld = c.roundtrip(&format!("{{\"op\":\"load\",\"model\":\"{m}\"}}"));
+                    assert_eq!(ld.get("ok").as_bool(), Some(true), "{ld:?}");
+                }
+                cycles += 1;
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            cycles
+        })
+    };
+
+    let mut total_ok = 0usize;
+    let mut total_rejects = 0usize;
+    for w in workers {
+        let (okc, rejects) = w.join().expect("sampler thread panicked");
+        assert!(okc >= 1, "a model never sampled successfully under churn");
+        total_ok += okc;
+        total_rejects += rejects;
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let cycles = churn.join().expect("churn thread panicked");
+    assert!(cycles >= 1, "churn driver never completed a cycle");
+    // zero lost or duplicated: every one of the 120 requests came back
+    // exactly once (roundtrip + unique tags enforce it per request)
+    assert_eq!(total_ok + total_rejects, 120);
+
+    // steady state after churn: everything resident and servable again,
+    // with versions recording the reload history
+    let mut c = plane.client();
+    let list = c.roundtrip("{\"op\":\"list_models\"}");
+    for m in ["fa", "fb", "fc"] {
+        let e = model_entry(&list, m).unwrap_or_else(|| panic!("{m} missing: {list:?}"));
+        assert_eq!(e.get("state").as_str(), Some("ready"), "{list:?}");
+    }
+    assert_eq!(model_entry(&list, "fa").unwrap().get("version").as_f64(), Some(1.0));
+    assert!(
+        model_entry(&list, "fb").unwrap().get("version").as_f64().unwrap_or(0.0)
+            >= 1.0 + cycles as f64,
+        "fb version must record the reloads: {list:?}"
+    );
+    for m in ["fa", "fb", "fc"] {
+        let ok = c.roundtrip(&format!(
+            "{{\"op\":\"sample\",\"model\":\"{m}\",\"labels\":[0,1],\"solver\":\"euler\",\
+             \"nfe\":6,\"seed\":1}}"
+        ));
+        assert_eq!(ok.get("ok").as_bool(), Some(true), "{m} dead after churn: {ok:?}");
+    }
+}

@@ -103,6 +103,7 @@ fn run_plan(engine: &Engine) -> Vec<SampleOutput> {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: bns_serve::coordinator::request::Priority::Normal,
+            tenant: None,
             progress: None,
             reply: tx,
         });

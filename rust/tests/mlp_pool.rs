@@ -100,6 +100,7 @@ fn run_plan(engine: &Engine) -> Vec<SampleOutput> {
             enqueued_at: Instant::now(),
             deadline: None,
             priority: Priority::Normal,
+            tenant: None,
             progress: None,
             reply: tx,
         });

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use bns_serve::bench_util::{stub_store, StubModel};
 use bns_serve::coordinator::{Engine, EngineConfig, Server, ServerConfig};
-use bns_serve::coordinator::batcher::BatcherConfig;
+use bns_serve::coordinator::batcher::{BatcherConfig, TenantPolicy, TenantSpec};
 use bns_serve::runtime::Runtime;
 use bns_serve::util::json::Json;
 
@@ -258,6 +258,52 @@ fn deadline_sheds_queued_work_before_dispatch() {
         waited < Duration::from_secs(4),
         "expiry reply took {waited:?} — shed ran at flush time, not at the deadline"
     );
+    assert!(plane.metrics().get("expired").as_f64().unwrap_or(0.0) >= 1.0);
+}
+
+/// Regression: a request parked behind a full grouped stage used to be
+/// invisible to `shed_expired`/`next_wake`, so its deadline only fired at
+/// the next flush. With the grouped stage held for 3 s, the parked
+/// request's 60 ms deadline must come back long before that.
+#[test]
+fn parked_request_sheds_at_its_deadline() {
+    let mut tenants = TenantPolicy::default();
+    tenants.tenants.insert("acme".to_string(), TenantSpec { weight: 1, quota_rows: 16 });
+    let plane = Plane::up(
+        "parked-deadline",
+        EngineConfig {
+            batcher: BatcherConfig {
+                max_rows: 64,
+                max_wait: Duration::from_secs(3),
+                max_queued_rows: 2,
+                tenants,
+            },
+            ..Default::default()
+        },
+        ServerConfig::default(),
+    );
+    let mut c = plane.client();
+    c.send(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"nfe\":4,\"tag\":\"filler\"}}"
+    ));
+    // let the filler occupy the whole grouped stage (max_queued_rows: 2)
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = std::time::Instant::now();
+    let j = c.roundtrip(&format!(
+        "{{\"op\":\"sample\",\"model\":\"{MODEL}\",\"labels\":[0,1],\"tenant\":\"acme\",\
+         \"nfe\":4,\"deadline_ms\":60,\"tag\":\"parked\"}}"
+    ));
+    let waited = t0.elapsed();
+    assert_err(&j, "deadline_exceeded");
+    assert_eq!(j.get("tag").as_str(), Some("parked"));
+    assert!(
+        waited < Duration::from_secs(2),
+        "parked expiry took {waited:?} — shed ran at flush time, not at the deadline"
+    );
+    // the filler still completes at its flush
+    let done = c.recv();
+    assert_eq!(done.get("ok").as_bool(), Some(true), "{done:?}");
+    assert_eq!(done.get("tag").as_str(), Some("filler"));
     assert!(plane.metrics().get("expired").as_f64().unwrap_or(0.0) >= 1.0);
 }
 
